@@ -1,0 +1,16 @@
+//! Regenerates every table and figure in the paper's evaluation (§V) and
+//! writes `report.md` — the one-command reproduction entry point.
+//!
+//! Run: `cargo run --release --example reproduce_paper [-- out.md]`
+
+use aires::coordinator::report::full_report;
+use aires::memsim::CostModel;
+
+fn main() {
+    let out = std::env::args().nth(1).unwrap_or_else(|| "report.md".to_string());
+    let cm = CostModel::default();
+    let text = full_report(&cm);
+    std::fs::write(&out, &text).expect("write report");
+    print!("{text}");
+    eprintln!("\nwrote {out}");
+}

@@ -1,0 +1,187 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* artifacts.
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+
+Interchange format is HLO text, NOT ``lowered.compile()``/``.serialize()``:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the rust
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Each artifact is lowered with ``return_tuple=True`` (rust side untuples),
+smoke-checked against the pure-jnp oracle before emission, and described in
+``manifest.json`` so the rust ``runtime::artifacts`` registry can validate
+shapes/dtypes at load time without re-parsing HLO.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import ref
+
+# ---------------------------------------------------------------------------
+# Static shape configuration for the emitted artifacts. The rust tile
+# executor pads/reshapes runtime data to these shapes (see rust/src/runtime).
+# ---------------------------------------------------------------------------
+
+# Aggregation tile op: R row blocks x NB padded tiles of bm x bk, K = kb*bk.
+SPMM_VARIANTS = [
+    # (name-suffix, R, NB, bm, bk, K, F)
+    ("r8_nb16_b32_k1024_f64", 8, 16, 32, 32, 1024, 64),
+    ("r4_nb8_b64_k1024_f64", 4, 8, 64, 64, 1024, 64),
+    ("r8_nb16_b32_k1024_f128", 8, 16, 32, 32, 1024, 128),
+]
+
+# Fused combine tile: P rows x F in -> H out.
+COMBINE_VARIANTS = [
+    ("p256_f64_h64", 256, 64, 64, True),
+    ("p256_f128_h64", 256, 128, 64, True),
+    ("p256_f64_h16_nr", 256, 64, 16, False),
+]
+
+# e2e training subgraph: N nodes, F0 input features, H hidden, C classes.
+TRAIN_N, TRAIN_F0, TRAIN_H, TRAIN_C = 1024, 32, 64, 16
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(x):
+    kind = {"float32": "f32", "int32": "s32"}[str(x.dtype)]
+    return {"shape": list(x.shape), "dtype": kind}
+
+
+def _emit(out_dir, manifest, name, fn, example_args, meta=None):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    outs = jax.eval_shape(fn, *example_args)
+    if not isinstance(outs, (tuple, list)):
+        outs = (outs,)
+    entry = {
+        "name": name,
+        "file": fname,
+        "inputs": [_spec(a) for a in example_args],
+        "outputs": [_spec(o) for o in outs],
+    }
+    if meta:
+        entry["meta"] = meta
+    manifest.append(entry)
+    print(f"  wrote {fname} ({len(text)} chars)")
+
+
+def _smoke_check():
+    """Refuse to emit artifacts if kernels disagree with the oracle."""
+    rng = np.random.default_rng(0)
+    r_, nb, bm, bk, k, f = 2, 4, 8, 8, 64, 16
+    nblk = jnp.array([3, 1], jnp.int32)
+    colidx = jnp.array(rng.integers(0, k // bk, (r_, nb)), jnp.int32)
+    blocks = jnp.array(rng.normal(size=(r_, nb, bm, bk)), jnp.float32)
+    h = jnp.array(rng.normal(size=(k, f)), jnp.float32)
+    got = model.bsr_spmm(nblk, colidx, blocks, h, bm=bm, bk=bk)
+    want = ref.bsr_spmm_ref(nblk, colidx, blocks, h, bm=bm, bk=bk)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    x = jnp.array(rng.normal(size=(16, 8)), jnp.float32)
+    w = jnp.array(rng.normal(size=(8, 4)), jnp.float32)
+    b = jnp.array(rng.normal(size=(4,)), jnp.float32)
+    np.testing.assert_allclose(
+        model.gcn_combine(x, w, b, bm=8),
+        ref.gcn_combine_ref(x, w, b),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+    print("  smoke check vs ref: OK")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    print("aot: smoke-checking kernels against oracle")
+    _smoke_check()
+
+    manifest = []
+    print("aot: lowering artifacts")
+
+    for suffix, r_, nb, bm, bk, k, f in SPMM_VARIANTS:
+        spec = lambda shape, dt=jnp.float32: jnp.zeros(shape, dt)
+        _emit(
+            args.out_dir,
+            manifest,
+            f"bsr_spmm_{suffix}",
+            lambda nblk, colidx, blocks, h, bm=bm, bk=bk: model.bsr_spmm(
+                nblk, colidx, blocks, h, bm=bm, bk=bk
+            ),
+            (
+                spec((r_,), jnp.int32),
+                spec((r_, nb), jnp.int32),
+                spec((r_, nb, bm, bk)),
+                spec((k, f)),
+            ),
+            meta={"r": r_, "nb": nb, "bm": bm, "bk": bk, "k": k, "f": f},
+        )
+
+    for suffix, p, f, h, relu in COMBINE_VARIANTS:
+        _emit(
+            args.out_dir,
+            manifest,
+            f"gcn_combine_{suffix}",
+            lambda x, w, b, relu=relu: model.gcn_combine(x, w, b, bm=64, relu=relu),
+            (
+                jnp.zeros((p, f), jnp.float32),
+                jnp.zeros((f, h), jnp.float32),
+                jnp.zeros((h,), jnp.float32),
+            ),
+            meta={"p": p, "f": f, "h": h, "relu": relu},
+        )
+
+    n, f0, hd, c = TRAIN_N, TRAIN_F0, TRAIN_H, TRAIN_C
+    train_args = (
+        jnp.zeros((n, n), jnp.float32),
+        jnp.zeros((n, f0), jnp.float32),
+        jnp.zeros((f0, hd), jnp.float32),
+        jnp.zeros((hd,), jnp.float32),
+        jnp.zeros((hd, c), jnp.float32),
+        jnp.zeros((c,), jnp.float32),
+    )
+    _emit(
+        args.out_dir,
+        manifest,
+        f"gcn2_fwd_n{n}_f{f0}_h{hd}_c{c}",
+        model.gcn2_fwd,
+        train_args,
+        meta={"n": n, "f0": f0, "h": hd, "c": c},
+    )
+    _emit(
+        args.out_dir,
+        manifest,
+        f"gcn2_train_step_n{n}_f{f0}_h{hd}_c{c}",
+        model.gcn2_train_step,
+        train_args + (jnp.zeros((n,), jnp.int32), jnp.zeros((), jnp.float32)),
+        meta={"n": n, "f0": f0, "h": hd, "c": c},
+    )
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"aot: wrote manifest.json with {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Layer-1 Pallas kernel: block-sparse (BSR-like) SpMM.
+
+This is the TPU-style adaptation of AIRES's CUDA SpGEMM kernel (paper §III-A
+tiling + §IV CUDA kernels). The paper's CUDA kernel walks CSR(A) rows against
+CSC(B) columns with scalar matching per thread; that idiom has no MXU analogue.
+AIRES's core algorithmic insight — *row block-wise (RoBW) alignment: the
+accelerator only ever receives complete, fixed-shape row blocks* — maps onto
+the MXU as block-sparse SpMM:
+
+  * each RoBW segment is re-expressed as ``bm x bk`` dense non-zero tiles
+    (extracted by the rust-side ``sparse::block`` module),
+  * the per-row-block tile list is padded to a static ``NB`` with a count
+    vector (``nblk``) providing the mask — this is the static-shape analogue
+    of CSR's variable row extents,
+  * the feature panel ``H`` stays resident (VMEM on a real TPU, one buffer
+    here) and tiles are gathered from it by block-column index — the
+    BlockSpec grid expresses the HBM<->VMEM schedule the paper expressed
+    with CUDA threadblocks.
+
+Run under ``interpret=True`` everywhere: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowers to plain HLO that the rust
+runtime loads. Real-TPU VMEM/MXU characteristics are estimated analytically
+in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bsr_spmm_kernel(nblk_ref, colidx_ref, blocks_ref, h_ref, o_ref, *, nb, bk):
+    """One grid step: one row block (bm rows) x full feature width.
+
+    nblk_ref:   s32[1]            number of valid tiles in this row block
+    colidx_ref: s32[1, nb]        block-column index per tile (pad entries = 0)
+    blocks_ref: f32[1, nb, bm, bk] dense non-zero tiles of the row block
+    h_ref:      f32[K, F]          dense feature panel (K = kb * bk)
+    o_ref:      f32[bm, F]         output rows for this row block
+    """
+    bm = blocks_ref.shape[2]
+    f = h_ref.shape[1]
+    n_valid = nblk_ref[0]
+
+    def body(j, acc):
+        cidx = colidx_ref[0, j]
+        a_tile = blocks_ref[0, j]  # [bm, bk]
+        # Gather the feature tile for this block column. On a real TPU this
+        # is the HBM->VMEM DMA the BlockSpec schedule would issue; in
+        # interpret mode it lowers to a dynamic-slice.
+        h_tile = pl.load(h_ref, (pl.ds(cidx * bk, bk), slice(None)))  # [bk, F]
+        contrib = jnp.dot(a_tile, h_tile, preferred_element_type=jnp.float32)
+        # Padded tiles (j >= n_valid) are masked out rather than branched
+        # over: the MXU pipeline prefers uniform work + select.
+        return acc + jnp.where(j < n_valid, contrib, jnp.zeros_like(contrib))
+
+    acc = jax.lax.fori_loop(0, nb, body, jnp.zeros((bm, f), jnp.float32))
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk"))
+def bsr_spmm(nblk, colidx, blocks, h, *, bm, bk):
+    """Block-sparse SpMM: out[r*bm:(r+1)*bm, :] = sum_j blocks[r,j] @ H[colidx[r,j]].
+
+    Shapes: nblk s32[R], colidx s32[R, NB], blocks f32[R, NB, bm, bk],
+    h f32[K, F] -> f32[R*bm, F]. Static-shape entry point AOT-lowered by
+    ``aot.py`` for the rust tile executor.
+    """
+    r, nb = colidx.shape
+    k, f = h.shape
+    assert blocks.shape == (r, nb, bm, bk), (blocks.shape, (r, nb, bm, bk))
+    assert k % bk == 0
+
+    kernel = functools.partial(_bsr_spmm_kernel, nb=nb, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=(r,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, nb), lambda i: (i, 0)),
+            pl.BlockSpec((1, nb, bm, bk), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((k, f), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r * bm, f), jnp.float32),
+        interpret=True,
+    )(nblk, colidx, blocks, h)

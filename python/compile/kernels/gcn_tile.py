@@ -1,0 +1,50 @@
+"""Layer-1 Pallas kernel: fused GCN combination tile (X @ W + b, ReLU).
+
+Paper Eq. (3): H^{k+1} = sigma(X^{k} W^{k}). The combination matmul is dense
+and MXU-shaped; we fuse bias + ReLU into the same tile so the activation
+never round-trips through HBM. Grid tiles the row dimension (the RoBW block
+rows produced by aggregation); W stays resident across the grid, which is
+the TPU analogue of the paper keeping the weight panel in shared memory.
+
+interpret=True for CPU-PJRT execution (see bsr_spmm.py docstring).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _combine_kernel(x_ref, w_ref, b_ref, o_ref, *, relu):
+    x = x_ref[...]
+    w = w_ref[...]
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32) + b_ref[...][None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "relu"))
+def gcn_combine(x, w, b, *, bm, relu=True):
+    """Fused combine: relu(x @ w + b), row-tiled by ``bm``.
+
+    Shapes: x f32[P, F], w f32[F, H], b f32[H] -> f32[P, H]; P % bm == 0.
+    """
+    p, f = x.shape
+    f2, h = w.shape
+    assert f == f2 and p % bm == 0, (x.shape, w.shape, bm)
+
+    kernel = functools.partial(_combine_kernel, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=(p // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, f), lambda i: (i, 0)),
+            pl.BlockSpec((f, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, h), jnp.float32),
+        interpret=True,
+    )(x, w, b)

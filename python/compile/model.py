@@ -1,0 +1,83 @@
+"""Layer-2: the GCN compute graph in JAX, calling the Layer-1 Pallas kernels.
+
+Build-time only — ``aot.py`` lowers the jitted entry points here to HLO text;
+the rust coordinator loads and executes those artifacts via PJRT. Python is
+never on the request path.
+
+Entry points (static shapes chosen by aot.py):
+  * ``bsr_spmm``       — re-exported L1 kernel, the aggregation tile op the
+                         rust tile executor drives per RoBW segment.
+  * ``gcn_combine``    — re-exported L1 fused combine tile.
+  * ``gcn2_fwd``       — dense 2-layer GCN forward over a small subgraph
+                         (used by the e2e example for validation).
+  * ``gcn2_train_step``— full fwd + softmax-xent + backward + SGD in one
+                         donated-buffer step: the loss-curve driver.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.bsr_spmm import bsr_spmm
+from compile.kernels.gcn_tile import gcn_combine
+
+__all__ = ["bsr_spmm", "gcn_combine", "gcn2_fwd", "gcn2_loss", "gcn2_train_step"]
+
+
+# Pallas interpret-mode has no reverse-mode AD rule, so the combine tile gets
+# a hand-written VJP: forward runs the Pallas kernel (the artifact's hot
+# path), backward is plain-jnp matmul transposes — the standard Pallas
+# custom_vjp pattern.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _combine(x, w, b, bm, relu):
+    return gcn_combine(x, w, b, bm=bm, relu=relu)
+
+
+def _combine_fwd(x, w, b, bm, relu):
+    out = gcn_combine(x, w, b, bm=bm, relu=relu)
+    return out, (x, w, out)
+
+
+def _combine_bwd(bm, relu, resids, g):
+    x, w, out = resids
+    if relu:
+        g = g * (out > 0.0).astype(g.dtype)
+    return (g @ w.T, x.T @ g, g.sum(axis=0))
+
+
+_combine.defvjp(_combine_fwd, _combine_bwd)
+
+
+def gcn2_fwd(a_hat, x, w1, b1, w2, b2, *, bm=64):
+    """2-layer GCN forward (paper Eq. 4 twice): logits = Â·relu(Â·X·W1)·W2.
+
+    Aggregation (Â @ ·) is dense here — this entry point serves small
+    subgraphs where Â fits; the out-of-core path aggregates via the
+    ``bsr_spmm`` tiles instead. Combination runs through the fused L1 tile.
+    """
+    agg1 = a_hat @ x
+    h1 = _combine(agg1, w1, b1, bm, True)
+    agg2 = a_hat @ h1
+    return _combine(agg2, w2, b2, bm, False)
+
+
+def gcn2_loss(params, a_hat, x, y, *, bm=64):
+    """Mean softmax cross-entropy of the 2-layer GCN on integer labels."""
+    w1, b1, w2, b2 = params
+    logits = gcn2_fwd(a_hat, x, w1, b1, w2, b2, bm=bm)
+    logits = logits - jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+    logz = jnp.log(jnp.exp(logits).sum(axis=-1))
+    ll = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return (logz - ll).mean()
+
+
+def gcn2_train_step(a_hat, x, w1, b1, w2, b2, y, lr):
+    """One SGD step; returns (loss, w1', b1', w2', b2').
+
+    Lowered once with donated weight buffers; the rust e2e driver loops this
+    artifact to produce the loss curve in EXPERIMENTS.md.
+    """
+    loss, grads = jax.value_and_grad(gcn2_loss)((w1, b1, w2, b2), a_hat, x, y)
+    g1, gb1, g2, gb2 = grads
+    return loss, w1 - lr * g1, b1 - lr * gb1, w2 - lr * g2, b2 - lr * gb2

@@ -1,0 +1,90 @@
+"""AOT path: every artifact lowers to HLO text that the 0.5.1 parser accepts.
+
+We can't run the rust loader from pytest, but we can assert the invariants it
+relies on: text (not proto) interchange, ENTRY signature matching the
+manifest, and tuple-rooted outputs.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+class TestHloText:
+    def test_lowering_produces_text(self):
+        lowered = jax.jit(lambda x: (x + 1.0,)).lower(
+            jax.ShapeDtypeStruct((2, 2), jnp.float32)
+        )
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule"), text[:50]
+        assert "ENTRY" in text
+
+    def test_combine_lowering_has_tuple_root(self):
+        lowered = jax.jit(
+            lambda x, w, b: model.gcn_combine(x, w, b, bm=8)
+        ).lower(
+            jax.ShapeDtypeStruct((8, 4), jnp.float32),
+            jax.ShapeDtypeStruct((4, 4), jnp.float32),
+            jax.ShapeDtypeStruct((4,), jnp.float32),
+        )
+        text = aot.to_hlo_text(lowered)
+        # return_tuple=True => root of ENTRY computation is a tuple shape
+        entry = text.split("ENTRY")[1]
+        assert "(f32[8,4]" in entry, entry[:200]
+
+
+class TestManifest:
+    def test_manifest_exists_and_files_present(self):
+        for entry in _manifest():
+            path = os.path.join(ART, entry["file"])
+            assert os.path.exists(path), entry["file"]
+            head = open(path).read(200)
+            assert head.startswith("HloModule"), entry["file"]
+
+    def test_manifest_covers_all_entry_points(self):
+        names = {e["name"] for e in _manifest()}
+        assert any(n.startswith("bsr_spmm_") for n in names)
+        assert any(n.startswith("gcn_combine_") for n in names)
+        assert any(n.startswith("gcn2_fwd_") for n in names)
+        assert any(n.startswith("gcn2_train_step_") for n in names)
+
+    def test_manifest_shapes_are_concrete(self):
+        for entry in _manifest():
+            for spec in entry["inputs"] + entry["outputs"]:
+                assert all(isinstance(d, int) and d > 0 for d in spec["shape"]) or spec["shape"] == []
+                assert spec["dtype"] in ("f32", "s32")
+
+    def test_train_step_io_arity(self):
+        (entry,) = [e for e in _manifest() if e["name"].startswith("gcn2_train_step")]
+        assert len(entry["inputs"]) == 8  # a_hat,x,w1,b1,w2,b2,y,lr
+        assert len(entry["outputs"]) == 5  # loss + 4 params
+
+    def test_spmm_meta_consistent_with_shapes(self):
+        for entry in _manifest():
+            if not entry["name"].startswith("bsr_spmm_"):
+                continue
+            m = entry["meta"]
+            nblk, colidx, blocks, h = entry["inputs"]
+            assert nblk["shape"] == [m["r"]]
+            assert colidx["shape"] == [m["r"], m["nb"]]
+            assert blocks["shape"] == [m["r"], m["nb"], m["bm"], m["bk"]]
+            assert h["shape"] == [m["k"], m["f"]]
+            (out,) = entry["outputs"]
+            assert out["shape"] == [m["r"] * m["bm"], m["f"]]

@@ -1,0 +1,187 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/values; every property asserts allclose against
+``ref.py``. This is the CORE correctness signal for the compute layer — the
+rust runtime executes exactly the HLO these kernels lower to.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.bsr_spmm import bsr_spmm
+from compile.kernels.gcn_tile import gcn_combine
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mk_bsr(rng, r, nb, bm, bk, kb, f, *, full=False):
+    nblk = (
+        np.full((r,), nb, np.int32)
+        if full
+        else rng.integers(0, nb + 1, (r,)).astype(np.int32)
+    )
+    colidx = rng.integers(0, kb, (r, nb)).astype(np.int32)
+    blocks = rng.normal(size=(r, nb, bm, bk)).astype(np.float32)
+    h = rng.normal(size=(kb * bk, f)).astype(np.float32)
+    return (
+        jnp.asarray(nblk),
+        jnp.asarray(colidx),
+        jnp.asarray(blocks),
+        jnp.asarray(h),
+    )
+
+
+class TestBsrSpmm:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        r=st.integers(1, 4),
+        nb=st.integers(1, 6),
+        bexp=st.integers(1, 4),
+        kb=st.integers(1, 5),
+        f=st.sampled_from([1, 3, 8, 17]),
+        seed=st.integers(0, 2**32 - 1),
+    )
+    def test_matches_ref(self, r, nb, bexp, kb, f, seed):
+        bm = bk = 2**bexp
+        rng = np.random.default_rng(seed)
+        nblk, colidx, blocks, h = _mk_bsr(rng, r, nb, bm, bk, kb, f)
+        got = bsr_spmm(nblk, colidx, blocks, h, bm=bm, bk=bk)
+        want = ref.bsr_spmm_ref(nblk, colidx, blocks, h, bm=bm, bk=bk)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_rectangular_blocks(self):
+        rng = np.random.default_rng(7)
+        r, nb, bm, bk, kb, f = 3, 5, 4, 16, 3, 9
+        nblk, colidx, blocks, h = _mk_bsr(rng, r, nb, bm, bk, kb, f)
+        got = bsr_spmm(nblk, colidx, blocks, h, bm=bm, bk=bk)
+        want = ref.bsr_spmm_ref(nblk, colidx, blocks, h, bm=bm, bk=bk)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_zero_valid_blocks_gives_zero_rows(self):
+        rng = np.random.default_rng(1)
+        nblk, colidx, blocks, h = _mk_bsr(rng, 2, 3, 8, 8, 2, 4)
+        nblk = jnp.zeros_like(nblk)
+        got = bsr_spmm(nblk, colidx, blocks, h, bm=8, bk=8)
+        np.testing.assert_array_equal(got, np.zeros_like(got))
+
+    def test_padding_is_ignored(self):
+        """Garbage in padded tile slots must not leak into the output."""
+        rng = np.random.default_rng(2)
+        r, nb, bm, bk, kb, f = 2, 4, 8, 8, 2, 4
+        nblk, colidx, blocks, h = _mk_bsr(rng, r, nb, bm, bk, kb, f)
+        nblk = jnp.array([2, 1], jnp.int32)
+        base = bsr_spmm(nblk, colidx, blocks, h, bm=bm, bk=bk)
+        poisoned = np.asarray(blocks).copy()
+        poisoned[0, 2:] = 1e9
+        poisoned[1, 1:] = -1e9
+        got = bsr_spmm(nblk, colidx, jnp.asarray(poisoned), h, bm=bm, bk=bk)
+        np.testing.assert_allclose(got, base, rtol=1e-6)
+
+    def test_duplicate_colidx_accumulates(self):
+        """Two tiles pointing at the same block column must sum."""
+        bm = bk = 4
+        h = jnp.asarray(np.random.default_rng(3).normal(size=(8, 5)), jnp.float32)
+        tile = jnp.eye(4, dtype=jnp.float32)
+        blocks = jnp.stack([tile, tile])[None]  # [1, 2, 4, 4]
+        nblk = jnp.array([2], jnp.int32)
+        colidx = jnp.array([[1, 1]], jnp.int32)
+        got = bsr_spmm(nblk, colidx, blocks, h, bm=bm, bk=bk)
+        np.testing.assert_allclose(got, 2 * h[4:8], rtol=1e-6)
+
+    def test_identity_blocks_select_h_rows(self):
+        bm = bk = 8
+        kb = 4
+        h = jnp.asarray(np.random.default_rng(4).normal(size=(kb * bk, 6)), jnp.float32)
+        blocks = jnp.eye(8, dtype=jnp.float32)[None, None]
+        nblk = jnp.array([1], jnp.int32)
+        for c in range(kb):
+            colidx = jnp.array([[c]], jnp.int32)
+            got = bsr_spmm(nblk, colidx, blocks, h, bm=bm, bk=bk)
+            np.testing.assert_allclose(got, h[c * bk : (c + 1) * bk], rtol=1e-6)
+
+    @pytest.mark.parametrize("suffix,r,nb,bm,bk,k,f", [
+        ("r8_nb16_b32_k1024_f64", 8, 16, 32, 32, 1024, 64),
+        ("r4_nb8_b64_k1024_f64", 4, 8, 64, 64, 1024, 64),
+    ])
+    def test_artifact_shapes(self, suffix, r, nb, bm, bk, k, f):
+        """The exact shape variants aot.py emits must be valid + correct."""
+        rng = np.random.default_rng(5)
+        nblk, colidx, blocks, h = _mk_bsr(rng, r, nb, bm, bk, k // bk, f)
+        got = bsr_spmm(nblk, colidx, blocks, h, bm=bm, bk=bk)
+        want = ref.bsr_spmm_ref(nblk, colidx, blocks, h, bm=bm, bk=bk)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+class TestGcnCombine:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        tiles=st.integers(1, 4),
+        bm=st.sampled_from([4, 8, 16]),
+        f=st.integers(1, 40),
+        h=st.integers(1, 24),
+        relu=st.booleans(),
+        seed=st.integers(0, 2**32 - 1),
+    )
+    def test_matches_ref(self, tiles, bm, f, h, relu, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(tiles * bm, f)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(f, h)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(h,)), jnp.float32)
+        got = gcn_combine(x, w, b, bm=bm, relu=relu)
+        want = ref.gcn_combine_ref(x, w, b, relu=relu)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_relu_clamps_negatives(self):
+        x = jnp.full((8, 4), -1.0, jnp.float32)
+        w = jnp.eye(4, dtype=jnp.float32)
+        b = jnp.zeros((4,), jnp.float32)
+        out = gcn_combine(x, w, b, bm=8, relu=True)
+        np.testing.assert_array_equal(out, np.zeros((8, 4), np.float32))
+
+    def test_no_relu_passes_negatives(self):
+        x = jnp.full((8, 4), -1.0, jnp.float32)
+        w = jnp.eye(4, dtype=jnp.float32)
+        b = jnp.zeros((4,), jnp.float32)
+        out = gcn_combine(x, w, b, bm=8, relu=False)
+        np.testing.assert_array_equal(out, np.full((8, 4), -1.0, np.float32))
+
+    def test_bias_broadcast(self):
+        x = jnp.zeros((4, 3), jnp.float32)
+        w = jnp.zeros((3, 5), jnp.float32)
+        b = jnp.arange(5, dtype=jnp.float32)
+        out = gcn_combine(x, w, b, bm=4, relu=False)
+        np.testing.assert_allclose(out, np.tile(np.arange(5, dtype=np.float32), (4, 1)))
+
+
+class TestCombineVjp:
+    """The hand-written VJP (model._combine) must match jnp autodiff."""
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        bm=st.sampled_from([4, 8]),
+        f=st.integers(1, 12),
+        h=st.integers(1, 8),
+        relu=st.booleans(),
+        seed=st.integers(0, 2**32 - 1),
+    )
+    def test_grads_match_ref(self, bm, f, h, relu, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(2 * bm, f)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(f, h)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(h,)), jnp.float32)
+
+        def loss_kernel(x, w, b):
+            return (model._combine(x, w, b, bm, relu) ** 2).sum()
+
+        def loss_ref(x, w, b):
+            return (ref.gcn_combine_ref(x, w, b, relu=relu) ** 2).sum()
+
+        g_k = jax.grad(loss_kernel, argnums=(0, 1, 2))(x, w, b)
+        g_r = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+        for a, bb in zip(g_k, g_r):
+            np.testing.assert_allclose(a, bb, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,33 @@
+//! Bench: regenerates paper Fig. 3 (merging overhead of non-aligned
+//! segmentation) and times the real partitioners it is built on.
+//!
+//! Run: `cargo bench --bench fig3_merging`
+
+use aires::benchlib::bench;
+use aires::coordinator::{fig3_merging, report::fig3_md};
+use aires::memsim::CostModel;
+use aires::partition::naive::naive_partition;
+use aires::partition::robw::robw_partition;
+use aires::util::rng::Pcg;
+
+fn main() {
+    let cm = CostModel::default();
+    println!("== Fig. 3: merging overhead (naive segmentation) ==\n");
+    print!("{}", fig3_md(&fig3_merging(&cm)));
+    println!("\npaper: kV2a ~50% of compute latency, ~6x the overhead of kP1a;");
+    println!("RoBW alignment removes the merge round-trip entirely.\n");
+
+    // Micro: the partitioners themselves on a scaled kmer graph.
+    let mut rng = Pcg::seed(33);
+    let g = aires::graphgen::kmer::generate(&mut rng, 200_000, 3.4);
+    let bytes = g.size_bytes();
+    println!("partitioner micro-bench on {} CSR:", aires::util::human_bytes(bytes));
+    let r = bench("robw_partition(200k nodes)", 2, 10, || {
+        std::hint::black_box(robw_partition(&g, 1 << 20));
+    });
+    aires::benchlib::report_throughput(&r, bytes);
+    let r = bench("naive_partition(200k nodes)", 2, 10, || {
+        std::hint::black_box(naive_partition(&g, 1 << 20));
+    });
+    aires::benchlib::report_throughput(&r, bytes);
+}

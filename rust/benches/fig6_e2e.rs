@@ -1,0 +1,27 @@
+//! Bench: regenerates paper Fig. 6 (end-to-end per-epoch latency and AIRES
+//! speedups across all Table II datasets x all four schedulers).
+//!
+//! Run: `cargo bench --bench fig6_e2e`
+
+use aires::benchlib::bench;
+use aires::coordinator::{fig6_speedup, mean_speedup, report::fig6_md};
+use aires::memsim::CostModel;
+
+fn main() {
+    let cm = CostModel::default();
+    println!("== Fig. 6: end-to-end per-epoch latency ==\n");
+    let rows = fig6_speedup(&cm);
+    print!("{}", fig6_md(&rows));
+    println!(
+        "paper: 1.8x / 1.7x / 1.5x average over MaxMemory / UCG / ETC; \"up to 1.8x\" peak.\n"
+    );
+    // Shape assertions, loud in bench output.
+    assert!(mean_speedup(&rows, "MaxMemory") > mean_speedup(&rows, "UCG"));
+    assert!(mean_speedup(&rows, "UCG") > mean_speedup(&rows, "ETC"));
+    println!("ordering MaxMemory > UCG > ETC > AIRES: OK\n");
+
+    // Simulator cost: a full 7x4 sweep per iteration.
+    bench("fig6 full sweep (7 datasets x 4 schedulers)", 1, 10, || {
+        std::hint::black_box(fig6_speedup(&cm));
+    });
+}

@@ -1,0 +1,33 @@
+//! Bench: regenerates paper Fig. 7 (GPU-CPU I/O breakdown by memcpy kind:
+//! data moved and latency per scheduler per dataset).
+//!
+//! Run: `cargo bench --bench fig7_io_breakdown`
+
+use aires::coordinator::{fig7_io_breakdown, report::fig7_md};
+use aires::memsim::CostModel;
+use aires::util::human_bytes;
+
+fn main() {
+    let cm = CostModel::default();
+    println!("== Fig. 7: GPU-CPU I/O breakdown ==\n");
+    let rows = fig7_io_breakdown(&cm);
+    print!("{}", fig7_md(&rows));
+
+    // The paper's headline for this figure: kA2a traffic reduction vs
+    // MaxMemory (30.4 GB -> 4.83 GB, -84.2%).
+    let total = |ds: &str, sched: &str| {
+        rows.iter()
+            .find(|r| r.dataset == ds && r.scheduler == sched)
+            .map(|r| r.htod_bytes + r.dtoh_bytes + r.um_bytes)
+            .unwrap_or(0)
+    };
+    let mm = total("kA2a", "MaxMemory");
+    let aires_b = total("kA2a", "AIRES");
+    println!(
+        "\nkA2a: MaxMemory {} vs AIRES {} => {:.1}% reduction (paper: 30.4 GB -> 4.83 GB, 84.2%)",
+        human_bytes(mm),
+        human_bytes(aires_b),
+        100.0 * (1.0 - aires_b as f64 / mm as f64)
+    );
+    assert!(aires_b * 3 < mm, "AIRES must move far less GPU-CPU data");
+}

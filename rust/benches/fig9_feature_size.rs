@@ -1,0 +1,32 @@
+//! Bench: regenerates paper Fig. 9 (per-epoch latency vs GCN feature size,
+//! 16..256) for a representative kmer dataset and for socLJ1.
+//!
+//! Run: `cargo bench --bench fig9_feature_size`
+
+use aires::coordinator::{fig9_feature_size, report::fig9_md};
+use aires::memsim::CostModel;
+
+fn main() {
+    let cm = CostModel::default();
+    println!("== Fig. 9: feature-size ablation ==\n");
+    for ds in ["kP1a", "socLJ1"] {
+        let rows = fig9_feature_size(&cm, ds);
+        print!("{}", fig9_md(&rows));
+        // AIRES fastest at every feature size (the paper's claim).
+        for r in &rows {
+            let aires_t = r
+                .results
+                .iter()
+                .find(|x| x.scheduler == "AIRES")
+                .and_then(|x| x.makespan_s)
+                .unwrap();
+            for x in &r.results {
+                if let Some(t) = x.makespan_s {
+                    assert!(t >= aires_t, "{} f={}: {} beat AIRES", ds, r.feat_dim, x.scheduler);
+                }
+            }
+        }
+        println!();
+    }
+    println!("paper: consistent AIRES speedup across feature sizes 16-256.");
+}

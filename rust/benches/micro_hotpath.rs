@@ -1,0 +1,123 @@
+//! Micro-benchmarks of the hot paths (§Perf in EXPERIMENTS.md):
+//! RoBW partitioning, BSR extraction + batch packing, SpGEMM oracle,
+//! the simulator event loop, and the PJRT artifact call path.
+//!
+//! Run: `cargo bench --bench micro_hotpath`
+
+use aires::benchlib::{bench, report_throughput};
+use aires::memsim::{CostModel, Op, Sim};
+use aires::partition::robw::robw_partition;
+use aires::sparse::block::{pack_artifact_batches, Bsr};
+use aires::sparse::spgemm::spgemm_gustavson;
+use aires::sparse::spmm::{spmm, Dense};
+use aires::util::rng::Pcg;
+
+fn main() {
+    let cm = CostModel::default();
+    let mut rng = Pcg::seed(77);
+
+    // --- L3: RoBW partitioner (the Phase-I CPU pass) --------------------
+    let g = aires::graphgen::kmer::generate(&mut rng, 500_000, 3.4);
+    let bytes = g.size_bytes();
+    println!("RoBW partitioner on {} ({} nnz):", aires::util::human_bytes(bytes), g.nnz());
+    let r = bench("robw_partition(500k)", 2, 10, || {
+        std::hint::black_box(robw_partition(&g, 1 << 20));
+    });
+    report_throughput(&r, bytes);
+
+    // --- L3: SpGEMM oracle ----------------------------------------------
+    let a = {
+        let mut rng2 = Pcg::seed(78);
+        aires::graphgen::rmat::generate(&mut rng2, 12, 8, Default::default())
+    };
+    let flops = 2 * a.nnz() as u64 * (a.nnz() as u64 / a.nrows as u64);
+    let r = bench("spgemm_gustavson(rmat-12, A*A)", 1, 5, || {
+        std::hint::black_box(spgemm_gustavson(&a, &a));
+    });
+    println!("BENCH spgemm: ~{:.2} Mflop/s equivalent", flops as f64 / r.mean_s / 1e6);
+
+    // --- L3: SpMM (aggregation oracle) ----------------------------------
+    let h = Dense::from_vec(a.ncols, 64, (0..a.ncols * 64).map(|_| 0.5f32).collect());
+    let r = bench("spmm(rmat-12 x 64)", 1, 5, || {
+        std::hint::black_box(spmm(&a, &h));
+    });
+    report_throughput(&r, (a.nnz() * 64 * 4) as u64);
+
+    // --- Bridge: BSR extraction + artifact batch packing ----------------
+    let seg = g.slice_rows(0, 20_000);
+    let r = bench("Bsr::from_csr(20k-row segment, 32x32)", 2, 10, || {
+        std::hint::black_box(Bsr::from_csr(&seg, 32, 32));
+    });
+    report_throughput(&r, seg.size_bytes());
+    let bsr = Bsr::from_csr(&seg, 32, 32);
+    bench("pack_artifact_batches(r8, nb16)", 2, 10, || {
+        std::hint::black_box(pack_artifact_batches(&bsr, 8, 16));
+    });
+    bench("pack_csr_batches fused (r8, nb16)", 2, 10, || {
+        std::hint::black_box(aires::sparse::block::pack_csr_batches(&seg, 32, 32, 8, 16));
+    });
+
+    // --- Reordering: the tile-fill lever (§Perf) -------------------------
+    let small = g.slice_rows(0, 50_000);
+    let small_sq = {
+        // re-square the slice for RCM (keep only cols < 50k)
+        let mut coo = aires::sparse::Coo::new(50_000, 50_000);
+        for i in 0..small.nrows {
+            for (c, v) in small.row(i) {
+                if (c as usize) < 50_000 {
+                    coo.push(i as u32, c, v);
+                }
+            }
+        }
+        coo.to_csr()
+    };
+    let fill_before = Bsr::from_csr(&small_sq, 32, 32).tile_fill_ratio(small_sq.nnz());
+    let perm = aires::sparse::reorder::rcm(&small_sq);
+    let reordered = aires::sparse::reorder::permute_symmetric(&small_sq, &perm);
+    let fill_after = Bsr::from_csr(&reordered, 32, 32).tile_fill_ratio(reordered.nnz());
+    println!(
+        "BENCH rcm tile fill (50k kmer, 32x32): {:.4} -> {:.4} ({:.1}x)",
+        fill_before,
+        fill_after,
+        fill_after / fill_before
+    );
+    bench("rcm(50k kmer)", 1, 5, || {
+        std::hint::black_box(aires::sparse::reorder::rcm(&small_sq));
+    });
+
+    // --- memsim: event throughput ----------------------------------------
+    let r = bench("sim 100k transfer ops", 1, 5, || {
+        let mut sim = Sim::new();
+        let mut t = 0.0;
+        for i in 0..100_000u64 {
+            t = sim.transfer(&cm, if i % 2 == 0 { Op::HtoD } else { Op::DtoH }, 1 << 20, t, "x");
+        }
+        std::hint::black_box(sim.makespan());
+    });
+    println!("BENCH sim: {:.2} M events/s", 0.1 / r.mean_s);
+
+    // --- Runtime: PJRT artifact call path --------------------------------
+    match aires::runtime::Executor::from_env() {
+        Ok(mut exec) => {
+            let spmm_exec =
+                aires::runtime::tile_exec::BsrSpmmExec::for_feature_width(&exec, 64).unwrap();
+            let mut rng3 = Pcg::seed(79);
+            let a_small = aires::graphgen::kmer::generate(&mut rng3, 1000, 3.0);
+            let h = Dense::from_vec(1000, 64, (0..1000 * 64).map(|_| 0.25f32).collect());
+            // Warm the compile cache before timing.
+            let _ = spmm_exec.spmm(&mut exec, &a_small, &h).unwrap();
+            bench("PJRT bsr_spmm (1k-node graph)", 1, 10, || {
+                std::hint::black_box(spmm_exec.spmm(&mut exec, &a_small, &h).unwrap());
+            });
+            let comb =
+                aires::runtime::tile_exec::CombineExec::for_widths(&exec, 64, 64, true).unwrap();
+            let x = Dense::from_vec(1024, 64, (0..1024 * 64).map(|_| 0.1f32).collect());
+            let w = Dense::from_vec(64, 64, (0..64 * 64).map(|_| 0.1f32).collect());
+            let _ = comb.combine(&mut exec, &x, &w, &vec![0.0; 64]).unwrap();
+            bench("PJRT gcn_combine (1024x64x64)", 1, 10, || {
+                std::hint::black_box(comb.combine(&mut exec, &x, &w, &vec![0.0; 64]).unwrap());
+            });
+        }
+        Err(e) => println!("skipping PJRT benches: {e}"),
+    }
+}

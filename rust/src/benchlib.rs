@@ -1,0 +1,67 @@
+//! Minimal benchmarking harness (criterion is unavailable in the offline
+//! crate cache). Used by every `rust/benches/*` target: warmup, N timed
+//! iterations, mean / stddev / min reporting, and a `BENCH` prefixed line
+//! per result so `cargo bench | grep BENCH` yields a machine-readable log.
+
+use crate::util::Stopwatch;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let sw = Stopwatch::start();
+        f();
+        samples.push(sw.secs());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+        / samples.len() as f64;
+    let result = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        stddev_s: var.sqrt(),
+        min_s: samples.iter().copied().fold(f64::INFINITY, f64::min),
+    };
+    println!(
+        "BENCH {name}: mean {} ± {} (min {}, n={iters})",
+        crate::util::human_secs(result.mean_s),
+        crate::util::human_secs(result.stddev_s),
+        crate::util::human_secs(result.min_s),
+    );
+    result
+}
+
+/// Throughput helper: report bytes/s over the measured mean.
+pub fn report_throughput(r: &BenchResult, bytes: u64) {
+    let gbps = bytes as f64 / r.mean_s / 1e9;
+    println!("BENCH {}: throughput {:.2} GB/s", r.name, gbps);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.mean_s >= 0.0);
+        assert!(r.min_s <= r.mean_s + 1e-12);
+        assert_eq!(r.iters, 5);
+    }
+}

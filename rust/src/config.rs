@@ -1,0 +1,234 @@
+//! Config system: JSON overrides for the cost model and experiment
+//! parameters (serde/toml unavailable offline — uses `util::json`).
+//!
+//! One file configures a whole evaluation run:
+//!
+//! ```json
+//! {
+//!   "cost_model": { "nvme_read_gbps": 12.0, "gds_read_gbps": 10.5 },
+//!   "feat_dim": 128,
+//!   "layers": 2,
+//!   "datasets": ["kP1a", "kV1r"]
+//! }
+//! ```
+//!
+//! Every CLI subcommand accepts `--config <file>`; unknown cost-model keys
+//! are rejected (typos should fail loudly, not silently keep defaults).
+
+use crate::memsim::CostModel;
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, bail, Result};
+
+/// A full experiment configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cost_model: CostModel,
+    pub feat_dim: u64,
+    pub layers: u32,
+    /// Catalog dataset names to evaluate (empty = all).
+    pub datasets: Vec<String>,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cost_model: CostModel::default(),
+            feat_dim: crate::coordinator::FEAT_DIM,
+            layers: crate::coordinator::LAYERS,
+            datasets: Vec::new(),
+        }
+    }
+}
+
+/// Apply one cost-model override by field name.
+fn set_cm_field(cm: &mut CostModel, key: &str, v: f64) -> Result<()> {
+    match key {
+        "pcie_h2d_gbps" => cm.pcie_h2d_gbps = v,
+        "pcie_d2h_gbps" => cm.pcie_d2h_gbps = v,
+        "nvme_read_gbps" => cm.nvme_read_gbps = v,
+        "nvme_write_gbps" => cm.nvme_write_gbps = v,
+        "gds_read_gbps" => cm.gds_read_gbps = v,
+        "gds_write_gbps" => cm.gds_write_gbps = v,
+        "um_gbps" => cm.um_gbps = v,
+        "host_memcpy_gbps" => cm.host_memcpy_gbps = v,
+        "cpu_partition_gbps" => cm.cpu_partition_gbps = v,
+        "gpu_spgemm_gflops" => cm.gpu_spgemm_gflops = v,
+        "gpu_sparse_bw_gbps" => cm.gpu_sparse_bw_gbps = v,
+        "gpu_dense_gflops" => cm.gpu_dense_gflops = v,
+        "cpu_spgemm_gflops" => cm.cpu_spgemm_gflops = v,
+        "op_latency_s" => cm.op_latency_s = v,
+        "um_fault_latency_s" => cm.um_fault_latency_s = v,
+        "gpu_malloc_s" => cm.gpu_malloc_s = v,
+        "kernel_launch_s" => cm.kernel_launch_s = v,
+        other => bail!("unknown cost_model field {other:?}"),
+    }
+    Ok(())
+}
+
+impl Config {
+    /// Parse a config document (strict: unknown keys are errors).
+    pub fn from_json_str(text: &str) -> Result<Config> {
+        let root = parse(text).map_err(|e| anyhow!("config parse: {e}"))?;
+        let obj = root.as_obj().ok_or_else(|| anyhow!("config root must be an object"))?;
+        let mut cfg = Config::default();
+        for (key, val) in obj {
+            match key.as_str() {
+                "cost_model" => {
+                    let cm_obj =
+                        val.as_obj().ok_or_else(|| anyhow!("cost_model must be an object"))?;
+                    for (k, v) in cm_obj {
+                        let n = v
+                            .as_f64()
+                            .ok_or_else(|| anyhow!("cost_model.{k} must be a number"))?;
+                        if n <= 0.0 {
+                            bail!("cost_model.{k} must be positive");
+                        }
+                        set_cm_field(&mut cfg.cost_model, k, n)?;
+                    }
+                }
+                "feat_dim" => {
+                    cfg.feat_dim =
+                        val.as_f64().ok_or_else(|| anyhow!("feat_dim must be a number"))? as u64;
+                    if cfg.feat_dim == 0 {
+                        bail!("feat_dim must be positive");
+                    }
+                }
+                "layers" => {
+                    cfg.layers =
+                        val.as_f64().ok_or_else(|| anyhow!("layers must be a number"))? as u32;
+                    if cfg.layers == 0 {
+                        bail!("layers must be positive");
+                    }
+                }
+                "datasets" => {
+                    let arr =
+                        val.as_arr().ok_or_else(|| anyhow!("datasets must be an array"))?;
+                    for d in arr {
+                        let name =
+                            d.as_str().ok_or_else(|| anyhow!("dataset names are strings"))?;
+                        if crate::graphgen::catalog::by_name(name).is_none() {
+                            bail!("unknown dataset {name:?} (see `aires catalog`)");
+                        }
+                        cfg.datasets.push(name.to_string());
+                    }
+                }
+                other => bail!("unknown config key {other:?}"),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &str) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading config {path}: {e}"))?;
+        Self::from_json_str(&text)
+    }
+
+    /// The catalog entries this config selects.
+    pub fn selected_datasets(&self) -> Vec<&'static crate::graphgen::DatasetStats> {
+        if self.datasets.is_empty() {
+            crate::graphgen::CATALOG.iter().collect()
+        } else {
+            self.datasets
+                .iter()
+                .filter_map(|n| crate::graphgen::catalog::by_name(n))
+                .collect()
+        }
+    }
+
+    /// Serialize back to JSON (for `aires config-dump`).
+    pub fn to_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let cm = &self.cost_model;
+        let mut cm_map = BTreeMap::new();
+        for (k, v) in [
+            ("pcie_h2d_gbps", cm.pcie_h2d_gbps),
+            ("pcie_d2h_gbps", cm.pcie_d2h_gbps),
+            ("nvme_read_gbps", cm.nvme_read_gbps),
+            ("nvme_write_gbps", cm.nvme_write_gbps),
+            ("gds_read_gbps", cm.gds_read_gbps),
+            ("gds_write_gbps", cm.gds_write_gbps),
+            ("um_gbps", cm.um_gbps),
+            ("host_memcpy_gbps", cm.host_memcpy_gbps),
+            ("cpu_partition_gbps", cm.cpu_partition_gbps),
+            ("gpu_spgemm_gflops", cm.gpu_spgemm_gflops),
+            ("gpu_sparse_bw_gbps", cm.gpu_sparse_bw_gbps),
+            ("gpu_dense_gflops", cm.gpu_dense_gflops),
+            ("cpu_spgemm_gflops", cm.cpu_spgemm_gflops),
+            ("op_latency_s", cm.op_latency_s),
+            ("um_fault_latency_s", cm.um_fault_latency_s),
+            ("gpu_malloc_s", cm.gpu_malloc_s),
+            ("kernel_launch_s", cm.kernel_launch_s),
+        ] {
+            cm_map.insert(k.to_string(), Json::Num(v));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("cost_model".to_string(), Json::Obj(cm_map));
+        root.insert("feat_dim".to_string(), Json::Num(self.feat_dim as f64));
+        root.insert("layers".to_string(), Json::Num(self.layers as f64));
+        root.insert(
+            "datasets".to_string(),
+            Json::Arr(self.datasets.iter().map(|d| Json::Str(d.clone())).collect()),
+        );
+        Json::Obj(root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_roundtrip() {
+        let cfg = Config::default();
+        let text = cfg.to_json().to_string();
+        let back = Config::from_json_str(&text).unwrap();
+        assert_eq!(back.feat_dim, cfg.feat_dim);
+        assert_eq!(back.cost_model.nvme_read_gbps, cfg.cost_model.nvme_read_gbps);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let cfg = Config::from_json_str(
+            r#"{"cost_model":{"gds_read_gbps":10.5},"feat_dim":128,"datasets":["kP1a"]}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.cost_model.gds_read_gbps, 10.5);
+        assert_eq!(cfg.feat_dim, 128);
+        assert_eq!(cfg.selected_datasets().len(), 1);
+        // Untouched fields keep defaults.
+        assert_eq!(cfg.cost_model.pcie_h2d_gbps, CostModel::default().pcie_h2d_gbps);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        assert!(Config::from_json_str(r#"{"cost_model":{"gsd_read_gbps":1}}"#).is_err());
+        assert!(Config::from_json_str(r#"{"typo_key":1}"#).is_err());
+        assert!(Config::from_json_str(r#"{"cost_model":{"um_gbps":-1}}"#).is_err());
+        assert!(Config::from_json_str(r#"{"datasets":["nope"]}"#).is_err());
+        assert!(Config::from_json_str(r#"{"feat_dim":0}"#).is_err());
+    }
+
+    #[test]
+    fn empty_selection_means_all() {
+        let cfg = Config::from_json_str("{}").unwrap();
+        assert_eq!(cfg.selected_datasets().len(), 7);
+    }
+
+    #[test]
+    fn faster_storage_config_shrinks_latency() {
+        // A config with 2x NVMe/GDS must not slow AIRES down.
+        let base = Config::default();
+        let fast = Config::from_json_str(
+            r#"{"cost_model":{"nvme_read_gbps":13.2,"gds_read_gbps":11.6,"gds_write_gbps":10.0}}"#,
+        )
+        .unwrap();
+        let d = crate::graphgen::catalog::by_name("kP1a").unwrap();
+        let w = crate::sched::Workload::from_catalog(d, 256, 1);
+        use crate::sched::Scheduler;
+        let t_base = crate::sched::Aires.run_epoch(&w, &base.cost_model).makespan_s.unwrap();
+        let t_fast = crate::sched::Aires.run_epoch(&w, &fast.cost_model).makespan_s.unwrap();
+        assert!(t_fast <= t_base);
+    }
+}

@@ -1,0 +1,448 @@
+//! Experiment harnesses: one function per paper table/figure.
+//!
+//! Each returns plain row structs so the CLI, benches and EXPERIMENTS.md
+//! all render from the same source. Paper artifact -> function:
+//!   Fig. 3  -> [`fig3_merging`]      Fig. 6 -> [`fig6_speedup`]
+//!   Fig. 7  -> [`fig7_io_breakdown`] Fig. 8 -> [`fig8_bandwidth`]
+//!   Fig. 9  -> [`fig9_feature_size`] Tab. III -> [`table3_memcap`]
+
+use crate::graphgen::{DatasetStats, CATALOG};
+use crate::memsim::CostModel;
+use crate::partition::{naive, robw};
+use crate::sched::{all_schedulers, EpochResult, Scheduler, Workload, STATIC_MIN_FRAC};
+use crate::sparse::Csr;
+
+/// Paper model config (§V-A): 256-wide features, 99% sparse, 1 GCN layer
+/// per epoch cycle pair.
+pub const FEAT_DIM: u64 = 256;
+pub const LAYERS: u32 = 1;
+
+/// Fixed CPU cost per partial-row boundary in the naive pipeline: CSR
+/// fragment merge + re-staging + allocator/driver sync (calibrated to
+/// reproduce Fig. 3's overhead magnitudes).
+pub const MERGE_FIXED_S: f64 = 0.022;
+
+// ---------------------------------------------------------------------- Fig 3
+
+/// One Fig. 3 bar: merging overhead of the naive (non-aligned) pipeline
+/// as a percentage of the SpGEMM computation latency.
+#[derive(Debug, Clone)]
+pub struct Fig3Row {
+    pub dataset: String,
+    /// Segment byte budget left for CSR A after the static reservation.
+    pub seg_budget: u64,
+    pub n_segments: u64,
+    pub merge_secs: f64,
+    pub compute_secs: f64,
+    pub overhead_pct: f64,
+    /// RoBW alignment removes the overhead entirely (the paper's fix).
+    pub robw_overhead_pct: f64,
+}
+
+/// Fig. 3: merging overhead for kV2a / kU1a / kP1a at their Table II
+/// memory constraints. The naive pipeline cuts A at byte granularity; each
+/// boundary's partial row round-trips and the segment is re-staged.
+pub fn fig3_merging(cm: &CostModel) -> Vec<Fig3Row> {
+    ["kV2a", "kU1a", "kP1a"]
+        .iter()
+        .map(|name| {
+            let d = crate::graphgen::catalog::by_name(name).unwrap();
+            let w = Workload::from_catalog(d, FEAT_DIM, LAYERS);
+            fig3_row(&w, cm)
+        })
+        .collect()
+}
+
+/// Fig. 3 at an arbitrary memory constraint (used by the ablation bench).
+pub fn fig3_row(w: &Workload, cm: &CostModel) -> Fig3Row {
+    let a = w.a_bytes();
+    // What the static allocator leaves for streaming A.
+    let reserved = (w.req_bytes() as f64 * STATIC_MIN_FRAC) as u64;
+    let seg_budget = w.gpu_mem_bytes.saturating_sub(reserved).max(64 << 20);
+    let n_segments = a.div_ceil(seg_budget).max(1);
+    // Per boundary: fixed merge cost + partial tail DtoH + 2x host memcpy
+    // + tail resend (the Fig. 3 "merging the partial segments and data
+    // transfer between GPU and host memory").
+    let tail = (w.avg_row_bytes() / 2.0) as u64;
+    let per_boundary = MERGE_FIXED_S
+        + cm.transfer_secs(crate::memsim::Op::DtoH, tail)
+        + cm.transfer_secs(crate::memsim::Op::HostMemcpy, 2 * tail)
+        + cm.transfer_secs(crate::memsim::Op::HtoD, tail);
+    let merge_secs = per_boundary * n_segments as f64;
+    let compute_secs =
+        cm.gpu_secs(w.spgemm_flops(), a + w.b_bytes() + w.c_bytes()) * w.cycles() as f64;
+    Fig3Row {
+        dataset: w.name.clone(),
+        seg_budget,
+        n_segments,
+        merge_secs: merge_secs * w.cycles() as f64,
+        compute_secs,
+        overhead_pct: 100.0 * merge_secs * w.cycles() as f64 / compute_secs,
+        robw_overhead_pct: 0.0,
+    }
+}
+
+/// Property cross-check behind Fig. 3 on *materialized* matrices: the real
+/// naive partitioner produces partial cuts, the real RoBW partitioner
+/// produces none. Returns (naive partial cuts, robw partial nnz mismatch).
+pub fn fig3_cross_check(a: &Csr, budget: u64) -> (u64, u64) {
+    let naive_cuts = naive::merge_overhead(&naive::naive_partition(a, budget)).partial_cuts;
+    let robw_mismatch = robw::robw_partition(a, budget)
+        .iter()
+        .map(|s| (s.nnz != a.rowptr[s.row_hi] - a.rowptr[s.row_lo]) as u64)
+        .sum();
+    (naive_cuts, robw_mismatch)
+}
+
+// ---------------------------------------------------------------------- Fig 6
+
+/// One dataset's end-to-end epoch results across all four schedulers.
+#[derive(Debug, Clone)]
+pub struct Fig6Row {
+    pub dataset: String,
+    pub results: Vec<EpochResult>,
+}
+
+impl Fig6Row {
+    pub fn makespan(&self, sched: &str) -> Option<f64> {
+        self.results.iter().find(|r| r.scheduler == sched).and_then(|r| r.makespan_s)
+    }
+
+    /// Speedup of AIRES over `sched` (paper Fig. 6's y-axis).
+    pub fn speedup_over(&self, sched: &str) -> Option<f64> {
+        Some(self.makespan(sched)? / self.makespan("AIRES")?)
+    }
+}
+
+/// Fig. 6: per-epoch latency for every catalog dataset x scheduler.
+pub fn fig6_speedup(cm: &CostModel) -> Vec<Fig6Row> {
+    CATALOG.iter().map(|d| fig6_row(d, cm)).collect()
+}
+
+pub fn fig6_row(d: &DatasetStats, cm: &CostModel) -> Fig6Row {
+    let w = Workload::from_catalog(d, FEAT_DIM, LAYERS);
+    Fig6Row {
+        dataset: d.name.to_string(),
+        results: all_schedulers().iter().map(|s| s.run_epoch(&w, cm)).collect(),
+    }
+}
+
+// ---------------------------------------------------------------------- Fig 7
+
+/// Fig. 7: GPU-CPU I/O breakdown (bytes + latency per memcpy kind).
+#[derive(Debug, Clone)]
+pub struct Fig7Row {
+    pub dataset: String,
+    pub scheduler: &'static str,
+    pub htod_bytes: u64,
+    pub dtoh_bytes: u64,
+    pub um_bytes: u64,
+    pub htod_secs: f64,
+    pub dtoh_secs: f64,
+    pub um_secs: f64,
+}
+
+pub fn fig7_io_breakdown(cm: &CostModel) -> Vec<Fig7Row> {
+    let mut rows = Vec::new();
+    for d in CATALOG.iter() {
+        let w = Workload::from_catalog(d, FEAT_DIM, LAYERS);
+        for s in all_schedulers() {
+            let r = s.run_epoch(&w, cm);
+            if r.oom.is_some() {
+                continue;
+            }
+            rows.push(Fig7Row {
+                dataset: d.name.to_string(),
+                scheduler: r.scheduler,
+                htod_bytes: r.io.get("HtoD").bytes,
+                dtoh_bytes: r.io.get("DtoH").bytes,
+                um_bytes: r.io.get("UM").bytes,
+                htod_secs: r.io.get("HtoD").secs,
+                dtoh_secs: r.io.get("DtoH").secs,
+                um_secs: r.io.get("UM").secs,
+            });
+        }
+    }
+    rows
+}
+
+// ---------------------------------------------------------------------- Fig 8
+
+/// Fig. 8: achieved storage-path bandwidth. GPU-SSD rides GDS (AIRES's
+/// dual-way path); CPU-SSD rides the classic NVMe->host path.
+#[derive(Debug, Clone)]
+pub struct Fig8Row {
+    pub dataset: String,
+    pub scheduler: &'static str,
+    pub gpu_ssd_bytes: u64,
+    pub gpu_ssd_gbps: f64,
+    pub cpu_ssd_bytes: u64,
+    pub cpu_ssd_gbps: f64,
+}
+
+pub fn fig8_bandwidth(cm: &CostModel) -> Vec<Fig8Row> {
+    let mut rows = Vec::new();
+    for d in CATALOG.iter() {
+        let w = Workload::from_catalog(d, FEAT_DIM, LAYERS);
+        for s in all_schedulers() {
+            let r = s.run_epoch(&w, cm);
+            if r.oom.is_some() {
+                continue;
+            }
+            rows.push(Fig8Row {
+                dataset: d.name.to_string(),
+                scheduler: r.scheduler,
+                gpu_ssd_bytes: r.io.gpu_ssd_bytes(),
+                gpu_ssd_gbps: r.io.bandwidth_gbps(&["GdsRead", "GdsWrite"]),
+                cpu_ssd_bytes: r.io.cpu_ssd_bytes(),
+                cpu_ssd_gbps: r.io.bandwidth_gbps(&["NvmeToHost", "HostToNvme"]),
+            });
+        }
+    }
+    rows
+}
+
+// ---------------------------------------------------------------------- Fig 9
+
+/// Fig. 9: per-epoch latency vs GCN feature size (16..256).
+#[derive(Debug, Clone)]
+pub struct Fig9Row {
+    pub dataset: String,
+    pub feat_dim: u64,
+    pub results: Vec<EpochResult>,
+}
+
+pub const FIG9_FEATURES: [u64; 5] = [16, 32, 64, 128, 256];
+
+pub fn fig9_feature_size(cm: &CostModel, dataset: &str) -> Vec<Fig9Row> {
+    let d = crate::graphgen::catalog::by_name(dataset).expect("dataset");
+    let w256 = Workload::from_catalog(d, FEAT_DIM, LAYERS);
+    let model256 = (w256.a_bytes() + w256.b_bytes() + w256.c_bytes()) as f64;
+    FIG9_FEATURES
+        .iter()
+        .map(|&f| {
+            let mut w = Workload::from_catalog(d, f, LAYERS);
+            // The catalog req is calibrated at f=256; scale it with the
+            // modelled working set so feasibility stays consistent with
+            // Fig. 6 at 256 and shrinks for smaller features.
+            let model_f = (w.a_bytes() + w.b_bytes() + w.c_bytes()) as f64;
+            w.memory_req_bytes =
+                Some((w256.req_bytes() as f64 * model_f / model256) as u64);
+            Fig9Row {
+                dataset: dataset.to_string(),
+                feat_dim: f,
+                results: all_schedulers().iter().map(|s| s.run_epoch(&w, cm)).collect(),
+            }
+        })
+        .collect()
+}
+
+// -------------------------------------------------------------------- Table 3
+
+/// Table III: impact of tightening the GPU memory constraint.
+#[derive(Debug, Clone)]
+pub struct Table3Row {
+    pub dataset: String,
+    pub constraint_gb: f64,
+    /// (scheduler, per-epoch seconds or None=OOM), paper column order.
+    pub cells: Vec<(&'static str, Option<f64>)>,
+}
+
+/// The paper's exact (dataset, constraint) grid.
+pub const TABLE3_GRID: [(&str, &[f64]); 3] = [
+    ("kV1r", &[24.0, 21.0, 19.0]),
+    ("kP1a", &[16.0, 14.0, 12.0]),
+    ("socLJ1", &[11.0, 10.0, 8.0]),
+];
+
+pub fn table3_memcap(cm: &CostModel) -> Vec<Table3Row> {
+    let mut rows = Vec::new();
+    for (name, caps) in TABLE3_GRID {
+        let d = crate::graphgen::catalog::by_name(name).unwrap();
+        for &cap_gb in caps {
+            let mut w = Workload::from_catalog(d, FEAT_DIM, LAYERS);
+            w.gpu_mem_bytes = (cap_gb * 1e9) as u64;
+            let cells = all_schedulers()
+                .iter()
+                .map(|s| {
+                    let r = s.run_epoch(&w, cm);
+                    (r.scheduler, r.makespan_s)
+                })
+                .collect();
+            rows.push(Table3Row { dataset: name.to_string(), constraint_gb: cap_gb, cells });
+        }
+    }
+    rows
+}
+
+// ------------------------------------------------------------------- helpers
+
+/// Geometric-mean speedup of AIRES over `sched` across completed datasets
+/// (the paper's "average total speedup" figure).
+pub fn mean_speedup(rows: &[Fig6Row], sched: &str) -> f64 {
+    let sp: Vec<f64> = rows.iter().filter_map(|r| r.speedup_over(sched)).collect();
+    if sp.is_empty() {
+        return f64::NAN;
+    }
+    (sp.iter().map(|s| s.ln()).sum::<f64>() / sp.len() as f64).exp()
+}
+
+/// Ablation: AIRES with individual features disabled (DESIGN.md calls
+/// these out; used by the ablation bench).
+pub fn ablation_row(d: &DatasetStats, cm: &CostModel) -> Vec<(String, Option<f64>)> {
+    let w = Workload::from_catalog(d, FEAT_DIM, LAYERS);
+    let mut out = Vec::new();
+    let full = crate::sched::Aires.run_epoch(&w, cm);
+    out.push(("AIRES (full)".to_string(), full.makespan_s));
+    // No dual-way: B rides NVMe->host->PCIe like the baselines. Model via
+    // a cost model whose GDS path is as slow as the two-hop path.
+    let mut cm_nodual = cm.clone();
+    cm_nodual.gds_read_gbps =
+        1.0 / (1.0 / cm.nvme_read_gbps + 1.0 / cm.pcie_h2d_gbps);
+    let nodual = crate::sched::Aires.run_epoch(&w, &cm_nodual);
+    out.push(("AIRES w/o dual-way".to_string(), nodual.makespan_s));
+    // No dynamic allocation: pay a malloc per segment at 10x cost (static
+    // reallocation churn).
+    let mut cm_static = cm.clone();
+    cm_static.gpu_malloc_s *= 10.0;
+    let nostatic = crate::sched::Aires.run_epoch(&w, &cm_static);
+    out.push(("AIRES w/ static alloc churn".to_string(), nostatic.makespan_s));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_shape_small_memory_higher_overhead() {
+        // Paper's two Fig. 3 observations: non-negligible overheads, and
+        // kV2a (smallest memory headroom) ~6x kP1a.
+        let cm = CostModel::default();
+        let rows = fig3_merging(&cm);
+        assert_eq!(rows.len(), 3);
+        let kv2a = &rows[0];
+        let kp1a = &rows[2];
+        assert!(kv2a.overhead_pct > 20.0, "kV2a overhead {:.1}%", kv2a.overhead_pct);
+        assert!(
+            kv2a.overhead_pct > 3.0 * kp1a.overhead_pct,
+            "kV2a {:.1}% should dwarf kP1a {:.1}%",
+            kv2a.overhead_pct,
+            kp1a.overhead_pct
+        );
+        for r in &rows {
+            assert_eq!(r.robw_overhead_pct, 0.0, "RoBW must remove merging entirely");
+        }
+    }
+
+    #[test]
+    fn fig6_aires_wins_everywhere() {
+        let cm = CostModel::default();
+        let rows = fig6_speedup(&cm);
+        for r in &rows {
+            for sched in ["MaxMemory", "UCG", "ETC"] {
+                let sp = r.speedup_over(sched).unwrap();
+                assert!(sp > 1.0, "{}: AIRES must beat {} (got {:.2}x)", r.dataset, sched, sp);
+            }
+        }
+        // Paper: averages 1.8x / 1.7x / 1.5x; ours must land in the band.
+        let mm = mean_speedup(&rows, "MaxMemory");
+        let ucg = mean_speedup(&rows, "UCG");
+        let etc = mean_speedup(&rows, "ETC");
+        assert!((1.5..2.6).contains(&mm), "MaxMemory mean {mm:.2}");
+        assert!((1.4..2.2).contains(&ucg), "UCG mean {ucg:.2}");
+        assert!((1.2..1.9).contains(&etc), "ETC mean {etc:.2}");
+        assert!(mm > ucg && ucg > etc, "ordering must match the paper");
+    }
+
+    #[test]
+    fn fig7_aires_moves_least_gpu_cpu_data() {
+        let cm = CostModel::default();
+        let rows = fig7_io_breakdown(&cm);
+        for d in CATALOG.iter() {
+            let total = |sched: &str| {
+                rows.iter()
+                    .find(|r| r.dataset == d.name && r.scheduler == sched)
+                    .map(|r| r.htod_bytes + r.dtoh_bytes + r.um_bytes)
+            };
+            let aires = total("AIRES").unwrap();
+            for sched in ["MaxMemory", "UCG", "ETC"] {
+                if let Some(b) = total(sched) {
+                    assert!(
+                        aires < b / 2,
+                        "{}: AIRES {} should be well below {} {}",
+                        d.name,
+                        aires,
+                        sched,
+                        b
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fig8_only_aires_uses_gds() {
+        let cm = CostModel::default();
+        for r in fig8_bandwidth(&cm) {
+            if r.scheduler == "AIRES" {
+                assert!(r.gpu_ssd_bytes > 0, "{}: AIRES must use GDS", r.dataset);
+                assert!(r.gpu_ssd_gbps > 0.0);
+            } else {
+                assert_eq!(r.gpu_ssd_bytes, 0, "{} {}", r.dataset, r.scheduler);
+            }
+        }
+    }
+
+    #[test]
+    fn fig9_latency_grows_with_feature_size() {
+        let cm = CostModel::default();
+        let rows = fig9_feature_size(&cm, "kP1a");
+        assert_eq!(rows.len(), FIG9_FEATURES.len());
+        let mut last = 0.0;
+        for r in &rows {
+            let aires =
+                r.results.iter().find(|x| x.scheduler == "AIRES").unwrap().makespan_s.unwrap();
+            assert!(aires > last, "latency must grow with feature size");
+            last = aires;
+            // AIRES stays fastest at every feature size (paper's claim).
+            for x in &r.results {
+                if let Some(m) = x.makespan_s {
+                    assert!(m >= aires, "{} beat AIRES at f={}", x.scheduler, r.feat_dim);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn table3_matches_paper_oom_pattern() {
+        let cm = CostModel::default();
+        let rows = table3_memcap(&cm);
+        assert_eq!(rows.len(), 9);
+        for row in &rows {
+            let get = |s: &str| row.cells.iter().find(|(n, _)| *n == s).unwrap().1;
+            // Paper: level 0 all complete; level 1 only ETC+AIRES; level 2
+            // AIRES alone.
+            let level = match row.constraint_gb {
+                c if c == 24.0 || c == 16.0 || c == 11.0 => 0,
+                c if c == 21.0 || c == 14.0 || c == 10.0 => 1,
+                _ => 2,
+            };
+            assert!(get("AIRES").is_some(), "{row:?}");
+            assert_eq!(get("ETC").is_some(), level <= 1, "{row:?}");
+            assert_eq!(get("MaxMemory").is_some(), level == 0, "{row:?}");
+            assert_eq!(get("UCG").is_some(), level == 0, "{row:?}");
+        }
+    }
+
+    #[test]
+    fn ablations_hurt() {
+        let cm = CostModel::default();
+        let d = crate::graphgen::catalog::by_name("kP1a").unwrap();
+        let rows = ablation_row(d, &cm);
+        let full = rows[0].1.unwrap();
+        for (name, t) in &rows[1..] {
+            assert!(t.unwrap() >= full, "{name} should not be faster than full AIRES");
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Coordinator: experiment orchestration + reporting.
+//!
+//! [`experiments`] regenerates every table and figure in the paper's
+//! evaluation (§V) from the scheduler simulations and the real-compute
+//! substrate; [`report`] renders them as markdown/CSV. The CLI (`aires`)
+//! and the bench targets are thin wrappers over these functions, so every
+//! number in EXPERIMENTS.md has exactly one source.
+
+pub mod experiments;
+pub mod report;
+
+pub use experiments::*;

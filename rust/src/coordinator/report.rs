@@ -1,0 +1,231 @@
+//! Markdown / CSV renderers for the experiment harnesses.
+
+use super::experiments::*;
+use crate::util::{human_bytes, human_secs};
+use std::fmt::Write as _;
+
+fn opt_secs(v: Option<f64>) -> String {
+    match v {
+        Some(t) => format!("{t:.2} s"),
+        None => "-".to_string(), // the paper's OOM marker
+    }
+}
+
+/// Fig. 3 as a markdown table.
+pub fn fig3_md(rows: &[Fig3Row]) -> String {
+    let mut out = String::from(
+        "| Dataset | Segments | Merge time | Compute time | Overhead (naive) | Overhead (RoBW) |\n|---|---|---|---|---|---|\n",
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "| {} | {} | {} | {} | {:.1}% | {:.1}% |",
+            r.dataset,
+            r.n_segments,
+            human_secs(r.merge_secs),
+            human_secs(r.compute_secs),
+            r.overhead_pct,
+            r.robw_overhead_pct
+        );
+    }
+    out
+}
+
+/// Fig. 6 as a markdown table (latency + AIRES speedups).
+pub fn fig6_md(rows: &[Fig6Row]) -> String {
+    let mut out = String::from(
+        "| Dataset | MaxMemory | UCG | ETC | AIRES | vs MaxMem | vs UCG | vs ETC |\n|---|---|---|---|---|---|---|---|\n",
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "| {} | {} | {} | {} | {} | {} | {} | {} |",
+            r.dataset,
+            opt_secs(r.makespan("MaxMemory")),
+            opt_secs(r.makespan("UCG")),
+            opt_secs(r.makespan("ETC")),
+            opt_secs(r.makespan("AIRES")),
+            r.speedup_over("MaxMemory").map_or("-".into(), |s| format!("{s:.2}x")),
+            r.speedup_over("UCG").map_or("-".into(), |s| format!("{s:.2}x")),
+            r.speedup_over("ETC").map_or("-".into(), |s| format!("{s:.2}x")),
+        );
+    }
+    let _ = writeln!(
+        out,
+        "\nGeo-mean speedups: {:.2}x (MaxMemory), {:.2}x (UCG), {:.2}x (ETC); paper: 1.8x / 1.7x / 1.5x.",
+        mean_speedup(rows, "MaxMemory"),
+        mean_speedup(rows, "UCG"),
+        mean_speedup(rows, "ETC")
+    );
+    out
+}
+
+/// Fig. 7 as a markdown table.
+pub fn fig7_md(rows: &[Fig7Row]) -> String {
+    let mut out = String::from(
+        "| Dataset | Scheduler | HtoD | DtoH | UM | total bytes | total latency |\n|---|---|---|---|---|---|---|\n",
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "| {} | {} | {} | {} | {} | {} | {} |",
+            r.dataset,
+            r.scheduler,
+            human_bytes(r.htod_bytes),
+            human_bytes(r.dtoh_bytes),
+            human_bytes(r.um_bytes),
+            human_bytes(r.htod_bytes + r.dtoh_bytes + r.um_bytes),
+            human_secs(r.htod_secs + r.dtoh_secs + r.um_secs),
+        );
+    }
+    out
+}
+
+/// Fig. 8 as a markdown table.
+pub fn fig8_md(rows: &[Fig8Row]) -> String {
+    let mut out = String::from(
+        "| Dataset | Scheduler | GPU-SSD bytes | GPU-SSD bw | CPU-SSD bytes | CPU-SSD bw |\n|---|---|---|---|---|---|\n",
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "| {} | {} | {} | {:.1} GB/s | {} | {:.1} GB/s |",
+            r.dataset,
+            r.scheduler,
+            human_bytes(r.gpu_ssd_bytes),
+            r.gpu_ssd_gbps,
+            human_bytes(r.cpu_ssd_bytes),
+            r.cpu_ssd_gbps,
+        );
+    }
+    out
+}
+
+/// Fig. 9 as a markdown table.
+pub fn fig9_md(rows: &[Fig9Row]) -> String {
+    let mut out = String::from(
+        "| Dataset | Feature | MaxMemory | UCG | ETC | AIRES |\n|---|---|---|---|---|---|\n",
+    );
+    for r in rows {
+        let get = |s: &str| {
+            r.results
+                .iter()
+                .find(|x| x.scheduler == s)
+                .and_then(|x| x.makespan_s)
+        };
+        let _ = writeln!(
+            out,
+            "| {} | {} | {} | {} | {} | {} |",
+            r.dataset,
+            r.feat_dim,
+            opt_secs(get("MaxMemory")),
+            opt_secs(get("UCG")),
+            opt_secs(get("ETC")),
+            opt_secs(get("AIRES")),
+        );
+    }
+    out
+}
+
+/// Table III as a markdown table (the paper's exact layout).
+pub fn table3_md(rows: &[Table3Row]) -> String {
+    let mut out = String::from(
+        "| Dataset | Mem. constraint (GB) | MaxMemory | UCG | ETC | AIRES |\n|---|---|---|---|---|---|\n",
+    );
+    for r in rows {
+        let get = |s: &str| r.cells.iter().find(|(n, _)| *n == s).unwrap().1;
+        let _ = writeln!(
+            out,
+            "| {} | {} | {} | {} | {} | {} |",
+            r.dataset,
+            r.constraint_gb,
+            opt_secs(get("MaxMemory")),
+            opt_secs(get("UCG")),
+            opt_secs(get("ETC")),
+            opt_secs(get("AIRES")),
+        );
+    }
+    out
+}
+
+/// Table II (the dataset catalog) as markdown.
+pub fn table2_md() -> String {
+    let mut out = String::from(
+        "| Dataset | Vertices (M) | Edges (M) | Mem. Req. (GB) | Constraint (GB) |\n|---|---|---|---|---|\n",
+    );
+    for d in crate::graphgen::CATALOG.iter() {
+        let _ = writeln!(
+            out,
+            "| {} | {} | {} | {} | {} |",
+            d.name, d.vertices_m, d.edges_m, d.memory_req_gb, d.memory_constraint_gb
+        );
+    }
+    out
+}
+
+/// Table I (the feature matrix) as markdown.
+pub fn table1_md() -> String {
+    let mut out = String::from(
+        "| | MaxMemory | UCG | ETC | AIRES |\n|---|---|---|---|---|\n",
+    );
+    let scheds = crate::sched::all_schedulers();
+    let mark = |b: bool| if b { "yes" } else { "no" };
+    let rows: [(&str, fn(&crate::sched::Features) -> bool); 5] = [
+        ("Alignment", |f| f.alignment),
+        ("DMA", |f| f.dma),
+        ("UM reads", |f| f.um_reads),
+        ("Dual-way", |f| f.dual_way),
+        ("Co-Design", |f| f.co_design),
+    ];
+    for (name, get) in rows {
+        let cells: Vec<String> =
+            scheds.iter().map(|s| mark(get(&s.features())).to_string()).collect();
+        let _ = writeln!(out, "| {} | {} |", name, cells.join(" | "));
+    }
+    out
+}
+
+/// The full evaluation report (all tables + figures), used by
+/// `aires report` and the reproduce_paper example.
+pub fn full_report(cm: &crate::memsim::CostModel) -> String {
+    let fig6 = fig6_speedup(cm);
+    let mut out = String::new();
+    let _ = writeln!(out, "# AIRES evaluation report (simulated testbed)\n");
+    let _ = writeln!(out, "## Table I — feature matrix\n\n{}", table1_md());
+    let _ = writeln!(out, "## Table II — datasets\n\n{}", table2_md());
+    let _ = writeln!(out, "## Fig. 3 — merging overhead\n\n{}", fig3_md(&fig3_merging(cm)));
+    let _ = writeln!(out, "## Fig. 6 — end-to-end per-epoch latency\n\n{}", fig6_md(&fig6));
+    let _ = writeln!(out, "## Fig. 7 — GPU-CPU I/O breakdown\n\n{}", fig7_md(&fig7_io_breakdown(cm)));
+    let _ = writeln!(out, "## Fig. 8 — storage-path bandwidth\n\n{}", fig8_md(&fig8_bandwidth(cm)));
+    let _ = writeln!(
+        out,
+        "## Fig. 9 — feature-size ablation (kP1a)\n\n{}",
+        fig9_md(&fig9_feature_size(cm, "kP1a"))
+    );
+    let _ = writeln!(out, "## Table III — memory-constraint ablation\n\n{}", table3_md(&table3_memcap(cm)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::CostModel;
+
+    #[test]
+    fn tables_render() {
+        let cm = CostModel::default();
+        assert!(table1_md().contains("Dual-way"));
+        assert!(table2_md().contains("kV1r"));
+        let t3 = table3_md(&table3_memcap(&cm));
+        assert!(t3.contains("| - |"), "OOM cells must render as '-':\n{t3}");
+    }
+
+    #[test]
+    fn full_report_contains_every_artifact() {
+        let cm = CostModel::default();
+        let rep = full_report(&cm);
+        for h in ["Table I", "Table II", "Fig. 3", "Fig. 6", "Fig. 7", "Fig. 8", "Fig. 9", "Table III"] {
+            assert!(rep.contains(h), "missing {h}");
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! GCN model layer: the workload the paper's system exists to serve
+//! (Eqs. 1-4). Two execution paths:
+//!
+//! * [`model`] — a pure-rust reference GCN (sparse aggregation + dense
+//!   combine) used as the correctness oracle and for CPU-side shares;
+//! * [`oocgcn`] — the out-of-core path: RoBW-partitioned aggregation
+//!   executed tile-by-tile through the PJRT `bsr_spmm` artifact, combined
+//!   through the fused `gcn_combine` artifact — the real compute that the
+//!   scheduler simulations model at paper scale;
+//! * [`train`] — the e2e training driver looping the `gcn2_train_step`
+//!   artifact (loss curve in EXPERIMENTS.md).
+
+pub mod model;
+pub mod oocgcn;
+pub mod train;
+
+pub use model::Gcn2Ref;
+pub use oocgcn::OocGcnLayer;
+pub use train::Trainer;

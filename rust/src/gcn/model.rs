@@ -1,0 +1,152 @@
+//! Pure-rust reference GCN (the CPU oracle for the accelerator path).
+
+use crate::sparse::spmm::{spmm, Dense};
+use crate::sparse::Csr;
+use crate::util::rng::Pcg;
+
+/// Dense matmul helper: x [m,k] · w [k,n] + b [n].
+pub fn dense_affine(x: &Dense, w: &Dense, b: &[f32], relu: bool) -> Dense {
+    assert_eq!(x.ncols, w.nrows);
+    assert_eq!(w.ncols, b.len());
+    let mut out = Dense::zeros(x.nrows, w.ncols);
+    for i in 0..x.nrows {
+        for l in 0..x.ncols {
+            let xv = x.at(i, l);
+            if xv == 0.0 {
+                continue;
+            }
+            for j in 0..w.ncols {
+                *out.at_mut(i, j) += xv * w.at(l, j);
+            }
+        }
+        for j in 0..w.ncols {
+            let v = out.at(i, j) + b[j];
+            *out.at_mut(i, j) = if relu { v.max(0.0) } else { v };
+        }
+    }
+    out
+}
+
+/// Two-layer reference GCN: logits = Â·relu(Â·X·W1 + b1)·W2 + b2.
+pub struct Gcn2Ref {
+    pub w1: Dense,
+    pub b1: Vec<f32>,
+    pub w2: Dense,
+    pub b2: Vec<f32>,
+}
+
+impl Gcn2Ref {
+    /// Small random init (scale 0.3, matching the python tests).
+    pub fn init(rng: &mut Pcg, f0: usize, hidden: usize, classes: usize) -> Gcn2Ref {
+        let mk = |rng: &mut Pcg, r: usize, c: usize| {
+            Dense::from_vec(r, c, (0..r * c).map(|_| (rng.normal() * 0.3) as f32).collect())
+        };
+        Gcn2Ref {
+            w1: mk(rng, f0, hidden),
+            b1: vec![0.0; hidden],
+            w2: mk(rng, hidden, classes),
+            b2: vec![0.0; classes],
+        }
+    }
+
+    /// Forward pass with a normalized adjacency Â in CSR.
+    pub fn forward(&self, a_hat: &Csr, x: &Dense) -> Dense {
+        let agg1 = spmm(a_hat, x);
+        let h1 = dense_affine(&agg1, &self.w1, &self.b1, true);
+        let agg2 = spmm(a_hat, &h1);
+        dense_affine(&agg2, &self.w2, &self.b2, false)
+    }
+
+    /// Mean softmax cross-entropy over integer labels.
+    pub fn loss(&self, a_hat: &Csr, x: &Dense, y: &[i32]) -> f64 {
+        let logits = self.forward(a_hat, x);
+        softmax_xent(&logits, y)
+    }
+}
+
+/// Mean softmax cross-entropy (stable).
+pub fn softmax_xent(logits: &Dense, y: &[i32]) -> f64 {
+    assert_eq!(logits.nrows, y.len());
+    let mut total = 0f64;
+    for i in 0..logits.nrows {
+        let row = logits.row(i);
+        let maxv = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let logz: f64 = (row.iter().map(|&v| ((v - maxv) as f64).exp()).sum::<f64>()).ln()
+            + maxv as f64;
+        total += logz - row[y[i] as usize] as f64;
+    }
+    total / logits.nrows as f64
+}
+
+/// Classification accuracy of logits vs labels.
+pub fn accuracy(logits: &Dense, y: &[i32]) -> f64 {
+    let mut hit = 0usize;
+    for i in 0..logits.nrows {
+        let row = logits.row(i);
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j)
+            .unwrap();
+        if pred == y[i] as usize {
+            hit += 1;
+        }
+    }
+    hit as f64 / logits.nrows as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::norm::normalize_adjacency;
+    use crate::sparse::Coo;
+
+    fn ring(n: usize) -> Csr {
+        let mut coo = Coo::new(n, n);
+        for i in 0..n {
+            let j = (i + 1) % n;
+            coo.push(i as u32, j as u32, 1.0);
+            coo.push(j as u32, i as u32, 1.0);
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let mut rng = Pcg::seed(1);
+        let a = normalize_adjacency(&ring(32));
+        let x = Dense::from_vec(32, 8, (0..32 * 8).map(|_| rng.normal() as f32).collect());
+        let model = Gcn2Ref::init(&mut rng, 8, 16, 4);
+        let out = model.forward(&a, &x);
+        assert_eq!((out.nrows, out.ncols), (32, 4));
+    }
+
+    #[test]
+    fn xent_of_uniform_logits_is_log_c() {
+        let logits = Dense::zeros(10, 4);
+        let y: Vec<i32> = (0..10).map(|i| (i % 4) as i32).collect();
+        let l = softmax_xent(&logits, &y);
+        assert!((l - (4f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_perfect_and_zero() {
+        let mut logits = Dense::zeros(4, 2);
+        for i in 0..4 {
+            *logits.at_mut(i, i % 2) = 5.0;
+        }
+        let y: Vec<i32> = (0..4).map(|i| (i % 2) as i32).collect();
+        assert_eq!(accuracy(&logits, &y), 1.0);
+        let wrong: Vec<i32> = (0..4).map(|i| ((i + 1) % 2) as i32).collect();
+        assert_eq!(accuracy(&logits, &wrong), 0.0);
+    }
+
+    #[test]
+    fn dense_affine_relu_matches_manual() {
+        let x = Dense::from_vec(1, 2, vec![1.0, -2.0]);
+        let w = Dense::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let out = dense_affine(&x, &w, &[0.0, 0.5], true);
+        assert_eq!(out.data, vec![1.0, 0.0]); // -2 + 0.5 clamped
+    }
+}

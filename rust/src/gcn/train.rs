@@ -1,0 +1,161 @@
+//! Training driver: loops the AOT-compiled `gcn2_train_step` artifact.
+//!
+//! The full forward + softmax-xent + backward + SGD step was lowered once
+//! at build time (L2); this driver owns the parameter state and the loop —
+//! no Python anywhere near the path.
+
+use crate::runtime::executor::Buf;
+use crate::runtime::Executor;
+use crate::sparse::norm::normalize_adjacency;
+use crate::sparse::Csr;
+use crate::util::rng::Pcg;
+use anyhow::{anyhow, Result};
+
+/// Training state bound to one `gcn2_train_step_*` artifact.
+pub struct Trainer {
+    artifact: String,
+    pub n: usize,
+    pub f0: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    a_dense: Vec<f32>,
+    x: Vec<f32>,
+    labels: Vec<i32>,
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+    b2: Vec<f32>,
+    pub losses: Vec<f32>,
+}
+
+impl Trainer {
+    /// Bind to the manifest's train-step artifact; the graph is truncated/
+    /// padded to the artifact's static node count `n`.
+    pub fn new(exec: &Executor, adjacency: &Csr, features_seed: u64) -> Result<Trainer> {
+        let spec = exec
+            .manifest()
+            .find_prefix("gcn2_train_step_")
+            .ok_or_else(|| anyhow!("train-step artifact missing"))?
+            .clone();
+        let n = spec.meta["n"] as usize;
+        let f0 = spec.meta["f0"] as usize;
+        let hidden = spec.meta["h"] as usize;
+        let classes = spec.meta["c"] as usize;
+
+        // Truncate / pad the adjacency to n nodes, then normalize.
+        let sub = if adjacency.nrows >= n {
+            let mut s = adjacency.slice_rows(0, n);
+            // Drop columns >= n to stay square.
+            let mut coo = crate::sparse::Coo::new(n, n);
+            for i in 0..n {
+                for (c, v) in s.row(i) {
+                    if (c as usize) < n {
+                        coo.push(i as u32, c, v);
+                    }
+                }
+            }
+            s = coo.to_csr();
+            s
+        } else {
+            let mut coo = crate::sparse::Coo::new(n, n);
+            for i in 0..adjacency.nrows {
+                for (c, v) in adjacency.row(i) {
+                    coo.push(i as u32, c, v);
+                }
+            }
+            coo.to_csr()
+        };
+        let a_hat = normalize_adjacency(&sub);
+        let a_dense = a_hat.to_dense();
+
+        let mut rng = Pcg::seed(features_seed);
+        let x: Vec<f32> = (0..n * f0).map(|_| rng.normal() as f32).collect();
+        // Learnable labels: random projection of features, quantile split.
+        let proj: Vec<f32> = (0..f0).map(|_| rng.normal() as f32).collect();
+        let mut scores: Vec<f32> = (0..n)
+            .map(|i| (0..f0).map(|j| x[i * f0 + j] * proj[j]).sum())
+            .collect();
+        let mut sorted = scores.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let labels: Vec<i32> = scores
+            .iter_mut()
+            .map(|s| {
+                let rank = sorted.partition_point(|&v| v < *s);
+                ((rank * classes / n).min(classes - 1)) as i32
+            })
+            .collect();
+
+        let w1 = (0..f0 * hidden).map(|_| (rng.normal() * 0.3) as f32).collect();
+        let w2 = (0..hidden * classes).map(|_| (rng.normal() * 0.3) as f32).collect();
+        Ok(Trainer {
+            artifact: spec.name,
+            n,
+            f0,
+            hidden,
+            classes,
+            a_dense,
+            x,
+            labels,
+            w1,
+            b1: vec![0.0; hidden],
+            w2,
+            b2: vec![0.0; classes],
+            losses: Vec::new(),
+        })
+    }
+
+    /// One SGD step; returns the loss before the update.
+    pub fn step(&mut self, exec: &mut Executor, lr: f32) -> Result<f32> {
+        let outs = exec.run(
+            &self.artifact,
+            &[
+                Buf::F32(self.a_dense.clone()),
+                Buf::F32(self.x.clone()),
+                Buf::F32(self.w1.clone()),
+                Buf::F32(self.b1.clone()),
+                Buf::F32(self.w2.clone()),
+                Buf::F32(self.b2.clone()),
+                Buf::S32(self.labels.clone()),
+                Buf::F32(vec![lr]),
+            ],
+        )?;
+        let loss = outs[0].as_f32()?[0];
+        self.w1 = outs[1].as_f32()?.to_vec();
+        self.b1 = outs[2].as_f32()?.to_vec();
+        self.w2 = outs[3].as_f32()?.to_vec();
+        self.b2 = outs[4].as_f32()?.to_vec();
+        self.losses.push(loss);
+        Ok(loss)
+    }
+
+    /// Run `steps` SGD steps, returning (first, best, last) losses.
+    pub fn train(&mut self, exec: &mut Executor, steps: usize, lr: f32) -> Result<(f32, f32, f32)> {
+        for _ in 0..steps {
+            self.step(exec, lr)?;
+        }
+        let first = *self.losses.first().unwrap();
+        let best = self.losses.iter().copied().fold(f32::INFINITY, f32::min);
+        let last = *self.losses.last().unwrap();
+        Ok((first, best, last))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::find_artifact_dir;
+
+    #[test]
+    fn trainer_reduces_loss_on_kmer_graph() {
+        let Some(dir) = find_artifact_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut exec = Executor::new(&dir).unwrap();
+        let mut rng = Pcg::seed(3);
+        let g = crate::graphgen::kmer::generate(&mut rng, 1024, 3.2);
+        let mut tr = Trainer::new(&exec, &g, 42).unwrap();
+        let (first, _best, last) = tr.train(&mut exec, 25, 2.0).unwrap();
+        assert!(last < first, "loss must decrease: {first} -> {last}");
+    }
+}

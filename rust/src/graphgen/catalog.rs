@@ -1,0 +1,206 @@
+//! The paper's dataset catalog (Table II), carried verbatim.
+//!
+//! These statistics drive the paper-scale *simulation* experiments: the
+//! scheduler/memsim only needs vertex/edge counts, operand byte sizes and
+//! the memory constraint, not the actual matrices (which are 3-27 GB and
+//! unavailable offline). `scaled(n)` materializes a structurally similar
+//! small instance for the real-compute path.
+
+use super::{kmer, rmat, road};
+use crate::sparse::Csr;
+use crate::util::rng::Pcg;
+
+/// Which SuiteSparse family a dataset belongs to (decides the generator).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    /// GenBank de Bruijn-like assembly graphs (kmer_*).
+    Kmer,
+    /// Street networks (road_usa).
+    Road,
+    /// Social networks (soc-LiveJournal1).
+    Social,
+}
+
+/// One Table II row.
+#[derive(Debug, Clone, Copy)]
+pub struct DatasetStats {
+    pub name: &'static str,
+    pub family: Family,
+    /// Vertices, in millions (paper Table II col 2).
+    pub vertices_m: f64,
+    /// Edges, in millions (col 3).
+    pub edges_m: f64,
+    /// Combined A+B+C GPU memory requirement, GB (col 4).
+    pub memory_req_gb: f64,
+    /// Evaluated GPU memory constraint, GB (col 5).
+    pub memory_constraint_gb: f64,
+}
+
+impl DatasetStats {
+    pub fn vertices(&self) -> u64 {
+        (self.vertices_m * 1e6) as u64
+    }
+    pub fn edges(&self) -> u64 {
+        (self.edges_m * 1e6) as u64
+    }
+    /// Stored non-zeros of the symmetric adjacency (2 per edge).
+    pub fn nnz(&self) -> u64 {
+        2 * self.edges()
+    }
+    /// Average stored non-zeros per row.
+    pub fn avg_row_nnz(&self) -> f64 {
+        self.nnz() as f64 / self.vertices() as f64
+    }
+    /// CSR A byte size (vals + colidx @4B each, rowptr @8B).
+    pub fn csr_a_bytes(&self) -> u64 {
+        self.nnz() * 8 + (self.vertices() + 1) * 8
+    }
+    /// CSC B byte size for `feat_dim` features at `sparsity_pct` sparsity
+    /// (paper model config: 256 features, 99% sparse).
+    pub fn csc_b_bytes(&self, feat_dim: usize, sparsity_pct: f64) -> u64 {
+        let nnz_b =
+            (self.vertices() as f64 * feat_dim as f64 * (1.0 - sparsity_pct / 100.0)) as u64;
+        nnz_b * 8 + (feat_dim as u64 + 1) * 8
+    }
+    /// Memory constraint in bytes.
+    pub fn constraint_bytes(&self) -> u64 {
+        (self.memory_constraint_gb * 1e9) as u64
+    }
+
+    /// Materialize a scaled-down instance (~`n` vertices) with matching
+    /// degree structure for the real-compute path.
+    pub fn scaled(&self, rng: &mut Pcg, n: usize) -> Csr {
+        match self.family {
+            Family::Kmer => kmer::generate(rng, n, self.avg_row_nnz()),
+            Family::Road => road::generate(rng, n),
+            Family::Social => {
+                let scale = (n as f64).log2().round().max(4.0) as u32;
+                let ef = (self.avg_row_nnz() / 2.0).round().max(2.0) as usize;
+                rmat::generate(rng, scale, ef, rmat::RmatParams::default())
+            }
+        }
+    }
+}
+
+/// Table II, in the paper's row order.
+pub const CATALOG: [DatasetStats; 7] = [
+    DatasetStats {
+        name: "rUSA",
+        family: Family::Road,
+        vertices_m: 23.94,
+        edges_m: 57.70,
+        memory_req_gb: 3.31,
+        memory_constraint_gb: 3.0,
+    },
+    DatasetStats {
+        name: "kV2a",
+        family: Family::Kmer,
+        vertices_m: 55.04,
+        edges_m: 117.21,
+        memory_req_gb: 6.87,
+        memory_constraint_gb: 6.0,
+    },
+    DatasetStats {
+        name: "kU1a",
+        family: Family::Kmer,
+        vertices_m: 67.71,
+        edges_m: 138.77,
+        memory_req_gb: 8.2,
+        memory_constraint_gb: 8.0,
+    },
+    DatasetStats {
+        name: "socLJ1",
+        family: Family::Social,
+        vertices_m: 4.84,
+        edges_m: 68.99,
+        memory_req_gb: 12.14,
+        memory_constraint_gb: 11.0,
+    },
+    DatasetStats {
+        name: "kP1a",
+        family: Family::Kmer,
+        vertices_m: 139.35,
+        edges_m: 297.82,
+        memory_req_gb: 17.45,
+        memory_constraint_gb: 16.0,
+    },
+    DatasetStats {
+        name: "kA2a",
+        family: Family::Kmer,
+        vertices_m: 170.72,
+        edges_m: 360.58,
+        memory_req_gb: 21.18,
+        memory_constraint_gb: 18.0,
+    },
+    DatasetStats {
+        name: "kV1r",
+        family: Family::Kmer,
+        vertices_m: 214.00,
+        edges_m: 465.41,
+        memory_req_gb: 27.18,
+        memory_constraint_gb: 23.0,
+    },
+];
+
+/// Look up a catalog entry by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<&'static DatasetStats> {
+    CATALOG.iter().find(|d| d.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_matches_table2() {
+        assert_eq!(CATALOG.len(), 7);
+        let kv1r = by_name("kV1r").unwrap();
+        assert_eq!(kv1r.vertices(), 214_000_000);
+        assert_eq!(kv1r.edges(), 465_410_000);
+        assert!((kv1r.memory_req_gb - 27.18).abs() < 1e-9);
+        assert!((kv1r.memory_constraint_gb - 23.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn constraint_below_requirement_for_all() {
+        // The whole point of Table II: every dataset is out-of-core.
+        for d in &CATALOG {
+            assert!(
+                d.memory_constraint_gb < d.memory_req_gb,
+                "{} should be memory constrained",
+                d.name
+            );
+        }
+    }
+
+    #[test]
+    fn kmer_average_degrees_are_small() {
+        for d in CATALOG.iter().filter(|d| d.family == Family::Kmer) {
+            let avg = d.avg_row_nnz();
+            assert!((2.0..6.0).contains(&avg), "{}: {avg}", d.name);
+        }
+    }
+
+    #[test]
+    fn scaled_instances_generate() {
+        let mut rng = Pcg::seed(80);
+        for d in &CATALOG {
+            let g = d.scaled(&mut rng, 800);
+            g.validate().unwrap();
+            assert!(g.nrows >= 256, "{} scaled too small", d.name);
+            assert!(g.nnz() > 0);
+        }
+    }
+
+    #[test]
+    fn byte_model_ordering_follows_table() {
+        // Datasets are listed in increasing memory requirement; our CSR A
+        // byte model should be monotone in the same order for same-family
+        // entries (kmer).
+        let kmers: Vec<&DatasetStats> =
+            CATALOG.iter().filter(|d| d.family == Family::Kmer).collect();
+        for w in kmers.windows(2) {
+            assert!(w[1].csr_a_bytes() > w[0].csr_a_bytes());
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! kmer/GenBank-family generator (paper's kP1a/kU1a/kV2a/kA2a/kV1r).
+//!
+//! SuiteSparse's kmer_* graphs are de Bruijn-style assembly graphs from
+//! GenBank: enormous vertex counts, *near-regular tiny degrees* (average
+//! ~2.1-4.3, max degree bounded by the alphabet) and long chain-like
+//! structure. We emulate that: vertices form noisy chains (successor k-mer
+//! edges) plus a small fraction of branch edges (repeats), giving the same
+//! banded-but-not-exactly-banded CSR structure that makes RoBW partitioning
+//! interesting.
+
+use super::edges_to_adjacency;
+use crate::sparse::Csr;
+use crate::util::rng::Pcg;
+
+/// Generate a kmer-like graph with `n` vertices and ~`avg_degree * n / 2`
+/// undirected edges.
+pub fn generate(rng: &mut Pcg, n: usize, avg_degree: f64) -> Csr {
+    assert!(n >= 2);
+    let target_edges = ((n as f64) * avg_degree / 2.0) as usize;
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(target_edges);
+
+    // Backbone chains: shuffled vertex order broken into chains, mimicking
+    // contigs. Chain edges connect successive k-mers.
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+    let chain_len = 64.max(n / 1024);
+    for chunk in order.chunks(chain_len) {
+        for w in chunk.windows(2) {
+            edges.push((w[0], w[1]));
+        }
+    }
+
+    // Branch/repeat edges: short-range skips (repeats land near each other
+    // in assembly order), filling the remaining edge budget.
+    while edges.len() < target_edges {
+        let u = rng.below(n as u64) as i64;
+        // Geometric-ish short hop, occasionally long (repeat across contigs).
+        let hop = if rng.chance(0.9) { 1 + rng.below(16) as i64 } else { rng.below(n as u64) as i64 };
+        let v = (u + hop).rem_euclid(n as i64);
+        if u != v {
+            edges.push((u as u32, v as u32));
+        }
+    }
+    edges_to_adjacency(n, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degree_structure_is_near_regular() {
+        let mut rng = Pcg::seed(50);
+        let n = 4000;
+        let a = generate(&mut rng, n, 3.4);
+        a.validate().unwrap();
+        let avg = a.nnz() as f64 / n as f64;
+        assert!((2.0..5.0).contains(&avg), "avg degree {avg}");
+        let max_deg = (0..n).map(|i| a.row_nnz(i)).max().unwrap();
+        // kmer graphs have bounded max degree; our generator stays modest.
+        assert!(max_deg < 64, "max degree {max_deg}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(&mut Pcg::seed(1), 500, 3.0);
+        let b = generate(&mut Pcg::seed(1), 500, 3.0);
+        assert_eq!(a, b);
+    }
+}

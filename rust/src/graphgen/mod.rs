@@ -1,0 +1,89 @@
+//! Synthetic graph generators + the paper's dataset catalog.
+//!
+//! The paper evaluates on SuiteSparse graphs up to 214 M vertices / 27 GB
+//! (Table II) which we cannot download offline; per the substitution rule
+//! (DESIGN.md) we carry:
+//!  * generators whose degree structure matches each dataset family —
+//!    kmer/GenBank de Bruijn-like graphs (near-regular, avg degree ~2-4),
+//!    road networks (planar grid, degree <= 4), social graphs (power-law
+//!    via RMAT) — used to exercise the *real* compute path at small scale;
+//!  * a catalog carrying the exact Table II statistics, which drive the
+//!    paper-scale *scheduling simulation* (bytes moved, memory pressure)
+//!    without materializing the matrices.
+
+pub mod catalog;
+pub mod kmer;
+pub mod rmat;
+pub mod road;
+
+pub use catalog::{DatasetStats, CATALOG};
+
+use crate::sparse::{Coo, Csr};
+use crate::util::rng::Pcg;
+
+/// Make an undirected edge list symmetric + loop-free and convert to CSR
+/// with unit weights.
+pub fn edges_to_adjacency(n: usize, edges: &[(u32, u32)]) -> Csr {
+    let mut coo = Coo::new(n, n);
+    for &(u, v) in edges {
+        if u == v {
+            continue;
+        }
+        coo.push(u, v, 1.0);
+        coo.push(v, u, 1.0);
+    }
+    // to_csr sums duplicates; clamp back to unit weights.
+    let mut csr = coo.to_csr();
+    for v in csr.vals.iter_mut() {
+        *v = 1.0;
+    }
+    csr
+}
+
+/// Uniformly random sparse feature matrix in CSR (the paper's B operand:
+/// "feature matrix dimension of 256 with 99% uniform sparsity ratio").
+pub fn random_sparse_features(
+    rng: &mut Pcg,
+    nrows: usize,
+    ncols: usize,
+    sparsity_pct: f64,
+) -> Csr {
+    let density = 1.0 - sparsity_pct / 100.0;
+    let mut coo = Coo::new(nrows, ncols);
+    let expected = (nrows as f64 * ncols as f64 * density) as usize;
+    // Sample ~expected entries; duplicates collapse on conversion.
+    for _ in 0..expected {
+        let r = rng.below(nrows as u64) as u32;
+        let c = rng.below(ncols as u64) as u32;
+        coo.push(r, c, rng.normal() as f32);
+    }
+    coo.to_csr()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adjacency_is_symmetric_loop_free() {
+        let edges = vec![(0, 1), (1, 2), (2, 2), (0, 1)]; // dup + self loop
+        let a = edges_to_adjacency(4, &edges);
+        a.validate().unwrap();
+        let d = a.to_dense();
+        for i in 0..4 {
+            assert_eq!(d[i * 4 + i], 0.0, "self loop at {i}");
+            for j in 0..4 {
+                assert_eq!(d[i * 4 + j], d[j * 4 + i]);
+            }
+        }
+        assert_eq!(a.nnz(), 4); // (0,1),(1,0),(1,2),(2,1)
+    }
+
+    #[test]
+    fn sparse_features_hit_target_sparsity() {
+        let mut rng = Pcg::seed(40);
+        let f = random_sparse_features(&mut rng, 200, 64, 99.0);
+        let s = f.sparsity_pct();
+        assert!(s > 98.0 && s < 99.9, "sparsity {s}");
+    }
+}

@@ -1,0 +1,76 @@
+//! RMAT / Kronecker generator (paper's soc-LiveJournal1 stand-in): power-law
+//! degree distribution, community structure, high-degree hubs — the
+//! adversarial case for row-block balance.
+
+use super::edges_to_adjacency;
+use crate::sparse::Csr;
+use crate::util::rng::Pcg;
+
+/// RMAT parameters (Graph500 defaults a=0.57, b=0.19, c=0.19, d=0.05).
+#[derive(Debug, Clone, Copy)]
+pub struct RmatParams {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+}
+
+impl Default for RmatParams {
+    fn default() -> Self {
+        RmatParams { a: 0.57, b: 0.19, c: 0.19 }
+    }
+}
+
+/// Generate an RMAT graph with 2^scale vertices and `edge_factor * 2^scale`
+/// undirected edges.
+pub fn generate(rng: &mut Pcg, scale: u32, edge_factor: usize, p: RmatParams) -> Csr {
+    let n = 1usize << scale;
+    let nedges = edge_factor * n;
+    let mut edges = Vec::with_capacity(nedges);
+    for _ in 0..nedges {
+        let (mut u, mut v) = (0usize, 0usize);
+        for _ in 0..scale {
+            let r = rng.f64();
+            let (du, dv) = if r < p.a {
+                (0, 0)
+            } else if r < p.a + p.b {
+                (0, 1)
+            } else if r < p.a + p.b + p.c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            u = (u << 1) | du;
+            v = (v << 1) | dv;
+        }
+        if u != v {
+            edges.push((u as u32, v as u32));
+        }
+    }
+    edges_to_adjacency(n, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_law_has_hubs() {
+        let mut rng = Pcg::seed(70);
+        let a = generate(&mut rng, 10, 8, RmatParams::default());
+        a.validate().unwrap();
+        let n = a.nrows;
+        let mut degs: Vec<usize> = (0..n).map(|i| a.row_nnz(i)).collect();
+        degs.sort_unstable_by(|x, y| y.cmp(x));
+        let avg = a.nnz() as f64 / n as f64;
+        // Hubs: top vertex degree far above average.
+        assert!(degs[0] as f64 > 8.0 * avg, "top {} vs avg {avg}", degs[0]);
+    }
+
+    #[test]
+    fn size_matches_scale() {
+        let mut rng = Pcg::seed(71);
+        let a = generate(&mut rng, 8, 4, RmatParams::default());
+        assert_eq!(a.nrows, 256);
+        assert!(a.nnz() > 256);
+    }
+}

@@ -1,0 +1,62 @@
+//! Road-network generator (paper's road_usa): planar grid with perturbed
+//! connectivity — degree <= 4-ish, huge diameter, extremely low bandwidth
+//! CSR structure.
+
+use super::edges_to_adjacency;
+use crate::sparse::Csr;
+use crate::util::rng::Pcg;
+
+/// Grid road network over ~n vertices (rounded to a w x h grid), with a
+/// fraction of missing streets and occasional diagonal shortcuts.
+pub fn generate(rng: &mut Pcg, n: usize) -> Csr {
+    let w = (n as f64).sqrt().ceil() as usize;
+    let h = n.div_ceil(w);
+    let n = w * h;
+    let idx = |x: usize, y: usize| (y * w + x) as u32;
+    let mut edges = Vec::with_capacity(2 * n);
+    for y in 0..h {
+        for x in 0..w {
+            // Right + down neighbours, each present with prob 0.92 (dead
+            // ends / rivers), mimicking real road sparsity.
+            if x + 1 < w && rng.chance(0.92) {
+                edges.push((idx(x, y), idx(x + 1, y)));
+            }
+            if y + 1 < h && rng.chance(0.92) {
+                edges.push((idx(x, y), idx(x, y + 1)));
+            }
+            // Rare diagonal (highway ramp).
+            if x + 1 < w && y + 1 < h && rng.chance(0.02) {
+                edges.push((idx(x, y), idx(x + 1, y + 1)));
+            }
+        }
+    }
+    edges_to_adjacency(n, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_degrees_bounded() {
+        let mut rng = Pcg::seed(60);
+        let a = generate(&mut rng, 2500);
+        a.validate().unwrap();
+        let max_deg = (0..a.nrows).map(|i| a.row_nnz(i)).max().unwrap();
+        assert!(max_deg <= 8, "max degree {max_deg}");
+        let avg = a.nnz() as f64 / a.nrows as f64;
+        assert!((2.0..4.2).contains(&avg), "avg {avg}");
+    }
+
+    #[test]
+    fn csr_is_banded() {
+        // Grid ordering keeps neighbours within ~w of the diagonal.
+        let mut rng = Pcg::seed(61);
+        let a = generate(&mut rng, 900); // 30x30
+        for i in 0..a.nrows {
+            for (c, _) in a.row(i) {
+                assert!((c as i64 - i as i64).unsigned_abs() <= 31);
+            }
+        }
+    }
+}

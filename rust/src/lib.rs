@@ -1,0 +1,31 @@
+//! AIRES — Accelerating Out-of-Core GCNs via Algorithm-System Co-Design.
+//!
+//! Reproduction of Jayakody, Zhao & Wang (ASAP 2025). The library implements
+//! the paper's algorithm contribution (RoBW row block-wise alignment +
+//! tiling, §III-A), its system contribution (three-phase dynamic scheduling
+//! with dual-way GDS/DMA transfers and the Eq. 5-7 dynamic output-memory
+//! model, §III-B), all three baselines (MaxMemory, UCG, ETC), and every
+//! substrate they sit on: sparse formats, graph generators, a calibrated
+//! tiered-memory simulator, a GCN training driver, and a PJRT runtime that
+//! executes the AOT-compiled JAX/Pallas artifacts. See DESIGN.md for the
+//! module inventory and experiment index.
+//!
+//! Layering (Python never on the request path):
+//! * L1 Pallas kernels + L2 JAX model are compiled once (`make artifacts`)
+//!   into `artifacts/*.hlo.txt`;
+//! * L3 (this crate) loads them via [`runtime`] and drives everything.
+
+pub mod benchlib;
+pub mod config;
+pub mod coordinator;
+pub mod gcn;
+pub mod graphgen;
+pub mod memsim;
+pub mod partition;
+pub mod runtime;
+pub mod sched;
+pub mod sparse;
+pub mod testing;
+pub mod util;
+
+pub use sparse::{Csc, Csr};

@@ -1,0 +1,181 @@
+//! `aires` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands (in-tree arg parsing; clap unavailable offline):
+//!   catalog            print the Table II dataset catalog
+//!   features           print the Table I feature matrix
+//!   fig3|fig6|fig7|fig8|fig9|table3
+//!                      regenerate one paper artifact as markdown
+//!   report [--out F]   regenerate the full evaluation report
+//!   train [--steps N] [--lr X] [--nodes N]
+//!                      e2e GCN training through the PJRT artifacts
+//!   spgemm [--nodes N] [--budget BYTES]
+//!                      one out-of-core aggregation through the artifacts,
+//!                      verified against the CPU oracle
+//!   prep DATASET       one-time RoBW preprocessing cost estimate
+
+use aires::config::Config;
+use aires::coordinator::report;
+use aires::coordinator::*;
+use aires::util::rng::Pcg;
+
+fn arg_value(args: &[String], key: &str) -> Option<String> {
+    args.iter().position(|a| a == key).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    // Every subcommand honours --config <file> (cost-model + workload
+    // overrides; see rust/src/config.rs for the schema).
+    let cfg = match arg_value(&args, "--config") {
+        Some(path) => Config::from_file(&path).expect("config"),
+        None => Config::default(),
+    };
+    let cm = cfg.cost_model.clone();
+
+    match cmd {
+        "catalog" => print!("{}", report::table2_md()),
+        "features" => print!("{}", report::table1_md()),
+        "fig3" => print!("{}", report::fig3_md(&fig3_merging(&cm))),
+        "fig6" => print!("{}", report::fig6_md(&fig6_speedup(&cm))),
+        "fig7" => print!("{}", report::fig7_md(&fig7_io_breakdown(&cm))),
+        "fig8" => print!("{}", report::fig8_md(&fig8_bandwidth(&cm))),
+        "fig9" => {
+            let ds = arg_value(&args, "--dataset").unwrap_or_else(|| "kP1a".into());
+            print!("{}", report::fig9_md(&fig9_feature_size(&cm, &ds)));
+        }
+        "table3" => print!("{}", report::table3_md(&table3_memcap(&cm))),
+        "config-dump" => println!("{}", cfg.to_json()),
+        "trace" => {
+            // Export one scheduler's simulated epoch as a Chrome trace.
+            let ds = arg_value(&args, "--dataset").unwrap_or_else(|| "kP1a".into());
+            let sched = arg_value(&args, "--scheduler").unwrap_or_else(|| "AIRES".into());
+            let out = arg_value(&args, "--out").unwrap_or_else(|| "trace.json".into());
+            let d = aires::graphgen::catalog::by_name(&ds).expect("unknown dataset");
+            let w = aires::sched::Workload::from_catalog(d, cfg.feat_dim, cfg.layers);
+            let r = aires::sched::all_schedulers()
+                .iter()
+                .find(|s| s.name().eq_ignore_ascii_case(&sched))
+                .expect("unknown scheduler")
+                .run_epoch(&w, &cm);
+            match r.makespan_s {
+                Some(t) => {
+                    std::fs::write(&out, aires::memsim::trace::chrome_trace_log(&r.log))
+                        .expect("write trace");
+                    println!("{ds}/{sched}: {t:.2}s epoch, {} ops -> {out} (open in chrome://tracing)", r.log.len());
+                }
+                None => println!("{ds}/{sched}: OOM — {}", r.oom.unwrap()),
+            }
+        }
+        "sweep" => {
+            // Latency sweep over memory constraints for one dataset.
+            let ds = arg_value(&args, "--dataset").unwrap_or_else(|| "kP1a".into());
+            let points: usize =
+                arg_value(&args, "--points").and_then(|v| v.parse().ok()).unwrap_or(8);
+            let d = aires::graphgen::catalog::by_name(&ds).expect("unknown dataset");
+            println!("{:>9} {:>11} {:>9} {:>9} {:>9}", "cap (GB)", "MaxMemory", "UCG", "ETC", "AIRES");
+            for i in 0..points {
+                let cap = d.memory_constraint_gb * (1.0 - i as f64 / points as f64 * 0.7);
+                let mut w = aires::sched::Workload::from_catalog(d, cfg.feat_dim, cfg.layers);
+                w.gpu_mem_bytes = (cap * 1e9) as u64;
+                let cells: Vec<String> = aires::sched::all_schedulers()
+                    .iter()
+                    .map(|s| {
+                        s.run_epoch(&w, &cm)
+                            .makespan_s
+                            .map_or("OOM".into(), |t| format!("{t:.2}s"))
+                    })
+                    .collect();
+                println!("{:>9.1} {:>11} {:>9} {:>9} {:>9}", cap, cells[0], cells[1], cells[2], cells[3]);
+            }
+        }
+        "report" => {
+            let text = report::full_report(&cm);
+            match arg_value(&args, "--out") {
+                Some(path) => {
+                    std::fs::write(&path, &text).expect("write report");
+                    println!("wrote {path}");
+                }
+                None => print!("{text}"),
+            }
+        }
+        "prep" => {
+            let name = args.get(1).cloned().unwrap_or_else(|| "kP1a".into());
+            let d = aires::graphgen::catalog::by_name(&name).expect("unknown dataset");
+            let w = aires::sched::Workload::from_catalog(d, cfg.feat_dim, cfg.layers);
+            let t = aires::sched::Aires::prep_time(&w, &cm);
+            println!(
+                "{name}: one-time RoBW preprocessing (NVMe load + CPU partition): {}",
+                aires::util::human_secs(t)
+            );
+        }
+        "train" => {
+            let steps: usize =
+                arg_value(&args, "--steps").and_then(|v| v.parse().ok()).unwrap_or(100);
+            let lr: f32 = arg_value(&args, "--lr").and_then(|v| v.parse().ok()).unwrap_or(2.0);
+            let nodes: usize =
+                arg_value(&args, "--nodes").and_then(|v| v.parse().ok()).unwrap_or(1024);
+            let mut exec = aires::runtime::Executor::from_env().expect("executor");
+            let mut rng = Pcg::seed(42);
+            let g = aires::graphgen::kmer::generate(&mut rng, nodes, 3.2);
+            let mut tr = aires::gcn::Trainer::new(&exec, &g, 42).expect("trainer");
+            println!("training 2-layer GCN (n={}, f0={}, h={}, c={}) for {steps} steps", tr.n, tr.f0, tr.hidden, tr.classes);
+            for step in 0..steps {
+                let loss = tr.step(&mut exec, lr).expect("step");
+                if step % 10 == 0 || step + 1 == steps {
+                    println!("step {step:4}  loss {loss:.4}");
+                }
+            }
+        }
+        "spgemm" => {
+            let nodes: usize =
+                arg_value(&args, "--nodes").and_then(|v| v.parse().ok()).unwrap_or(600);
+            let budget: u64 =
+                arg_value(&args, "--budget").and_then(|v| v.parse().ok()).unwrap_or(8192);
+            let mut exec = aires::runtime::Executor::from_env().expect("executor");
+            let mut rng = Pcg::seed(7);
+            let a = aires::graphgen::kmer::generate(&mut rng, nodes, 3.0);
+            let a_hat = aires::sparse::norm::normalize_adjacency(&a);
+            let x = aires::sparse::spmm::Dense::from_vec(
+                nodes,
+                64,
+                (0..nodes * 64).map(|_| rng.normal() as f32).collect(),
+            );
+            let layer = aires::gcn::OocGcnLayer {
+                w: aires::sparse::spmm::Dense::from_vec(
+                    64,
+                    64,
+                    (0..64 * 64).map(|_| (rng.normal() * 0.2) as f32).collect(),
+                ),
+                b: vec![0.0; 64],
+                relu: true,
+                seg_budget: budget,
+            };
+            let mut mem = aires::memsim::GpuMem::new(256 << 20);
+            let (out, rep) = layer.forward(&mut exec, &a_hat, &x, &mut mem).expect("forward");
+            println!(
+                "out-of-core aggregation: {} segments, ~{} artifact calls, peak {}, H2D {}",
+                rep.segments,
+                rep.artifact_calls_estimate,
+                aires::util::human_bytes(rep.peak_gpu_bytes),
+                aires::util::human_bytes(rep.h2d_bytes)
+            );
+            // Verify against the CPU oracle.
+            let want = aires::gcn::model::dense_affine(
+                &aires::sparse::spmm::spmm(&a_hat, &x),
+                &layer.w,
+                &layer.b,
+                true,
+            );
+            let diff = out.max_abs_diff(&want);
+            println!("max |accelerator - oracle| = {diff:.2e} -> {}", if diff < 1e-3 { "OK" } else { "MISMATCH" });
+        }
+        _ => {
+            println!(
+                "aires — out-of-core GCN co-design (AIRES reproduction)\n\n\
+                 usage: aires <catalog|features|fig3|fig6|fig7|fig8|fig9|table3|report|prep|train|spgemm|trace|sweep|config-dump> [--config F] [args]\n\
+                 see README.md for details"
+            );
+        }
+    }
+}

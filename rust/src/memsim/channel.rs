@@ -1,0 +1,203 @@
+//! Machine resources and the calibrated cost model.
+
+/// Hardware resources the simulator serializes on. One op may hold up to
+/// two resources (e.g. a GDS transfer occupies the NVMe controller *and*
+/// the GPU DMA engine for its duration).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Res {
+    /// NVMe controller (shared by host reads and GDS reads/writes).
+    Nvme,
+    /// PCIe host-to-device DMA engine.
+    PcieH2d,
+    /// PCIe device-to-host DMA engine.
+    PcieD2h,
+    /// Host CPU (preprocessing: RoBW partitioning, merging partial rows).
+    HostCpu,
+    /// GPU compute (SpGEMM kernels).
+    Gpu,
+    /// GPU DMA engine used by the GDS direct path.
+    GpuDma,
+}
+
+pub const ALL_RES: [Res; 6] =
+    [Res::Nvme, Res::PcieH2d, Res::PcieD2h, Res::HostCpu, Res::Gpu, Res::GpuDma];
+
+/// Transfer / compute op kinds, tagged for the Figure 7/8 breakdowns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    /// NVMe -> host memory (classic read into page cache / pinned buffer).
+    NvmeToHost,
+    /// Host -> NVMe write-back.
+    HostToNvme,
+    /// NVMe -> GPU direct via GPU Direct Storage (dual-way path, AIRES).
+    GdsRead,
+    /// GPU -> NVMe direct via GDS.
+    GdsWrite,
+    /// cudaMemcpy HtoD over PCIe.
+    HtoD,
+    /// cudaMemcpy DtoH over PCIe.
+    DtoH,
+    /// CUDA unified-memory fault-driven migration (UCG's read path).
+    UmFault,
+    /// Host-side memcpy (staging/merging partial segments).
+    HostMemcpy,
+    /// CPU preprocessing pass (RoBW partitioning scan).
+    CpuPartition,
+    /// CPU share of the computation (UCG's CPU-GPU split).
+    CpuCompute,
+    /// GPU SpGEMM kernel.
+    GpuKernel,
+    /// Device-side allocation (cudaMalloc) — serialized on the GPU.
+    GpuMalloc,
+}
+
+/// Calibrated bandwidth/latency model of the paper's testbed class
+/// (RTX 4090, PCIe 4.0 x16, M.2 NVMe; §V-A). All bandwidths in GB/s
+/// (1e9 bytes), latencies in seconds. One struct == one calibration source
+/// for every figure (DESIGN.md §Simulator cost model).
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub pcie_h2d_gbps: f64,
+    pub pcie_d2h_gbps: f64,
+    pub nvme_read_gbps: f64,
+    pub nvme_write_gbps: f64,
+    /// Effective GDS NVMe->GPU throughput (bounded by NVMe, minus protocol).
+    pub gds_read_gbps: f64,
+    pub gds_write_gbps: f64,
+    /// Effective fault-driven UM migration throughput.
+    pub um_gbps: f64,
+    pub host_memcpy_gbps: f64,
+    /// CPU streaming throughput of the RoBW partitioning pass (calibrated
+    /// against the real `partition::robw` implementation — see §Perf).
+    pub cpu_partition_gbps: f64,
+    /// Effective GPU throughput on sparse-format SpGEMM (far below dense
+    /// peak; Nsight-class number for CSR kernels on Ada).
+    pub gpu_spgemm_gflops: f64,
+    /// Effective memory bandwidth of the sparse kernel's irregular access
+    /// pattern (gathers + hash probes): SpGEMM is bandwidth-bound, so the
+    /// kernel-time model is max(flop term, bytes/this).
+    pub gpu_sparse_bw_gbps: f64,
+    /// Effective GPU throughput on dense tiles (the combination matmul).
+    pub gpu_dense_gflops: f64,
+    /// Effective CPU throughput on the same kernels (UCG's CPU share).
+    pub cpu_spgemm_gflops: f64,
+    /// Fixed per-op submission latency (driver + DMA setup).
+    pub op_latency_s: f64,
+    /// Extra per-op latency of a UM fault burst.
+    pub um_fault_latency_s: f64,
+    /// cudaMalloc cost (the reason static allocators avoid reallocating,
+    /// and the price AIRES pays -- once -- for dynamic allocation).
+    pub gpu_malloc_s: f64,
+    /// Kernel launch overhead.
+    pub kernel_launch_s: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            pcie_h2d_gbps: 22.0,
+            pcie_d2h_gbps: 20.0,
+            nvme_read_gbps: 6.6,
+            nvme_write_gbps: 5.2,
+            gds_read_gbps: 5.8,
+            gds_write_gbps: 5.0,
+            um_gbps: 7.5,
+            host_memcpy_gbps: 18.0,
+            cpu_partition_gbps: 8.0,
+            gpu_spgemm_gflops: 480.0,
+            gpu_sparse_bw_gbps: 16.0,
+            gpu_dense_gflops: 35_000.0,
+            cpu_spgemm_gflops: 28.0,
+            op_latency_s: 18e-6,
+            um_fault_latency_s: 35e-6,
+            gpu_malloc_s: 110e-6,
+            kernel_launch_s: 8e-6,
+        }
+    }
+}
+
+impl CostModel {
+    /// Duration of moving `bytes` over the op's channel.
+    pub fn transfer_secs(&self, op: Op, bytes: u64) -> f64 {
+        let gbps = match op {
+            Op::NvmeToHost => self.nvme_read_gbps,
+            Op::HostToNvme => self.nvme_write_gbps,
+            Op::GdsRead => self.gds_read_gbps,
+            Op::GdsWrite => self.gds_write_gbps,
+            Op::HtoD => self.pcie_h2d_gbps,
+            Op::DtoH => self.pcie_d2h_gbps,
+            Op::UmFault => self.um_gbps,
+            Op::HostMemcpy => self.host_memcpy_gbps,
+            Op::CpuPartition => self.cpu_partition_gbps,
+            _ => panic!("not a transfer op: {op:?}"),
+        };
+        let lat = match op {
+            Op::UmFault => self.um_fault_latency_s,
+            _ => self.op_latency_s,
+        };
+        lat + bytes as f64 / (gbps * 1e9)
+    }
+
+    /// Duration of a GPU kernel doing `flops` floating ops over `bytes` of
+    /// irregularly accessed operand data (roofline: max of the two terms).
+    pub fn gpu_secs(&self, flops: u64, bytes: u64) -> f64 {
+        let flop_t = flops as f64 / (self.gpu_spgemm_gflops * 1e9);
+        let mem_t = bytes as f64 / (self.gpu_sparse_bw_gbps * 1e9);
+        self.kernel_launch_s + flop_t.max(mem_t)
+    }
+
+    /// Duration of a dense GPU matmul tile (combination phase).
+    pub fn gpu_dense_secs(&self, flops: u64) -> f64 {
+        self.kernel_launch_s + flops as f64 / (self.gpu_dense_gflops * 1e9)
+    }
+
+    /// Duration of the CPU computing `flops`.
+    pub fn cpu_secs(&self, flops: u64) -> f64 {
+        flops as f64 / (self.cpu_spgemm_gflops * 1e9)
+    }
+
+    /// Resources an op holds while executing.
+    pub fn resources(op: Op) -> (Res, Option<Res>) {
+        match op {
+            Op::NvmeToHost | Op::HostToNvme => (Res::Nvme, None),
+            Op::GdsRead | Op::GdsWrite => (Res::Nvme, Some(Res::GpuDma)),
+            Op::HtoD => (Res::PcieH2d, None),
+            Op::DtoH => (Res::PcieD2h, None),
+            // UM migrations ride PCIe H2D and stall the GPU's fault engine.
+            Op::UmFault => (Res::PcieH2d, Some(Res::GpuDma)),
+            Op::HostMemcpy | Op::CpuPartition | Op::CpuCompute => (Res::HostCpu, None),
+            Op::GpuKernel | Op::GpuMalloc => (Res::Gpu, None),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_times_scale_with_bytes() {
+        let cm = CostModel::default();
+        let t1 = cm.transfer_secs(Op::HtoD, 1 << 30);
+        let t2 = cm.transfer_secs(Op::HtoD, 2 << 30);
+        assert!(t2 > 1.9 * t1 && t2 < 2.1 * t1);
+    }
+
+    #[test]
+    fn gds_is_slower_than_pcie_but_skips_host() {
+        let cm = CostModel::default();
+        // Direct GDS read vs the two-hop NVMe->host->GPU path for 1 GiB.
+        let direct = cm.transfer_secs(Op::GdsRead, 1 << 30);
+        let two_hop = cm.transfer_secs(Op::NvmeToHost, 1 << 30)
+            + cm.transfer_secs(Op::HtoD, 1 << 30);
+        // GDS wins when the path is serialized (it is for cold data).
+        assert!(direct < two_hop);
+    }
+
+    #[test]
+    fn latency_floor_applies() {
+        let cm = CostModel::default();
+        assert!(cm.transfer_secs(Op::HtoD, 0) >= cm.op_latency_s);
+        assert!(cm.gpu_secs(0, 0) >= cm.kernel_launch_s);
+    }
+}

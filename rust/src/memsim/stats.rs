@@ -1,0 +1,120 @@
+//! I/O statistics derived from the simulator op log — the data behind the
+//! paper's Figure 7 (GPU-CPU breakdown by memcpy kind) and Figure 8
+//! (GPU/CPU-SSD achieved bandwidth).
+
+use super::channel::Op;
+use super::sim::Sim;
+use std::collections::BTreeMap;
+
+/// Aggregated per-op-kind I/O: bytes moved, busy seconds, op count.
+#[derive(Debug, Clone, Default)]
+pub struct IoStats {
+    pub per_op: BTreeMap<&'static str, OpAgg>,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OpAgg {
+    pub bytes: u64,
+    pub secs: f64,
+    pub count: u64,
+}
+
+fn op_name(op: Op) -> &'static str {
+    match op {
+        Op::NvmeToHost => "NvmeToHost",
+        Op::HostToNvme => "HostToNvme",
+        Op::GdsRead => "GdsRead",
+        Op::GdsWrite => "GdsWrite",
+        Op::HtoD => "HtoD",
+        Op::DtoH => "DtoH",
+        Op::UmFault => "UM",
+        Op::HostMemcpy => "HostMemcpy",
+        Op::CpuPartition => "CpuPartition",
+        Op::CpuCompute => "CpuCompute",
+        Op::GpuKernel => "GpuKernel",
+        Op::GpuMalloc => "GpuMalloc",
+    }
+}
+
+impl IoStats {
+    /// Summarize a finished simulation.
+    pub fn from_sim(sim: &Sim) -> IoStats {
+        let mut per_op: BTreeMap<&'static str, OpAgg> = BTreeMap::new();
+        for rec in &sim.log {
+            let agg = per_op.entry(op_name(rec.op)).or_default();
+            agg.bytes += rec.bytes;
+            agg.secs += rec.end - rec.start;
+            agg.count += 1;
+        }
+        IoStats { per_op }
+    }
+
+    pub fn get(&self, name: &str) -> OpAgg {
+        self.per_op.get(name).copied().unwrap_or_default()
+    }
+
+    /// Total GPU<->CPU traffic (Fig. 7 left panel: HtoD + DtoH + UM).
+    pub fn gpu_cpu_bytes(&self) -> u64 {
+        self.get("HtoD").bytes + self.get("DtoH").bytes + self.get("UM").bytes
+    }
+
+    /// Total GPU<->CPU transfer latency (Fig. 7 right panel).
+    pub fn gpu_cpu_secs(&self) -> f64 {
+        self.get("HtoD").secs + self.get("DtoH").secs + self.get("UM").secs
+    }
+
+    /// GPU<->SSD bytes via the GDS direct path (Fig. 8 "GPU-SSD").
+    pub fn gpu_ssd_bytes(&self) -> u64 {
+        self.get("GdsRead").bytes + self.get("GdsWrite").bytes
+    }
+
+    /// CPU<->SSD bytes via classic NVMe reads/writes (Fig. 8 "CPU-SSD").
+    pub fn cpu_ssd_bytes(&self) -> u64 {
+        self.get("NvmeToHost").bytes + self.get("HostToNvme").bytes
+    }
+
+    /// Achieved bandwidth of a path in GB/s (bytes / busy time).
+    pub fn bandwidth_gbps(&self, names: &[&str]) -> f64 {
+        let (mut bytes, mut secs) = (0u64, 0f64);
+        for n in names {
+            let a = self.get(n);
+            bytes += a.bytes;
+            secs += a.secs;
+        }
+        if secs == 0.0 {
+            0.0
+        } else {
+            bytes as f64 / secs / 1e9
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::channel::CostModel;
+
+    #[test]
+    fn aggregates_by_kind() {
+        let cm = CostModel::default();
+        let mut sim = Sim::new();
+        sim.transfer(&cm, Op::HtoD, 1000, 0.0, "a");
+        sim.transfer(&cm, Op::HtoD, 500, 0.0, "b");
+        sim.transfer(&cm, Op::DtoH, 200, 0.0, "c");
+        let st = IoStats::from_sim(&sim);
+        assert_eq!(st.get("HtoD").bytes, 1500);
+        assert_eq!(st.get("HtoD").count, 2);
+        assert_eq!(st.gpu_cpu_bytes(), 1700);
+        assert_eq!(st.get("UM").count, 0);
+    }
+
+    #[test]
+    fn bandwidth_is_bytes_over_busy() {
+        let cm = CostModel::default();
+        let mut sim = Sim::new();
+        sim.transfer(&cm, Op::GdsRead, 5_800_000_000, 0.0, "b");
+        let st = IoStats::from_sim(&sim);
+        let bw = st.bandwidth_gbps(&["GdsRead"]);
+        assert!((bw - cm.gds_read_gbps).abs() / cm.gds_read_gbps < 0.01, "bw {bw}");
+    }
+}

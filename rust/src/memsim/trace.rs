@@ -1,0 +1,95 @@
+//! Chrome-trace export of a simulated schedule: every op in the `Sim` log
+//! becomes a duration event on its resource's track, so a run opens in
+//! `chrome://tracing` / Perfetto for visual inspection of the overlap
+//! structure (Phase II pipelining, dual-way concurrency, merge stalls).
+
+use super::channel::{CostModel, Res};
+use super::sim::{OpRecord, Sim};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+fn res_name(r: Res) -> &'static str {
+    match r {
+        Res::Nvme => "NVMe",
+        Res::PcieH2d => "PCIe H2D",
+        Res::PcieD2h => "PCIe D2H",
+        Res::HostCpu => "Host CPU",
+        Res::Gpu => "GPU",
+        Res::GpuDma => "GPU DMA",
+    }
+}
+
+/// Render the op log as a Chrome Trace Event JSON document.
+/// Times are exported in microseconds (the trace format's unit).
+pub fn chrome_trace(sim: &Sim) -> String {
+    chrome_trace_log(&sim.log)
+}
+
+/// Trace from a raw op log (e.g. `EpochResult::log`).
+pub fn chrome_trace_log(log: &[OpRecord]) -> String {
+    let mut events = Vec::new();
+    for rec in log {
+        let (r1, r2) = CostModel::resources(rec.op);
+        for (idx, res) in [Some(r1), r2].into_iter().flatten().enumerate() {
+            let mut obj = BTreeMap::new();
+            obj.insert("name".into(), Json::Str(rec.tag.to_string()));
+            obj.insert("cat".into(), Json::Str(format!("{:?}", rec.op)));
+            obj.insert("ph".into(), Json::Str("X".into()));
+            obj.insert("ts".into(), Json::Num(rec.start * 1e6));
+            obj.insert("dur".into(), Json::Num((rec.end - rec.start) * 1e6));
+            obj.insert("pid".into(), Json::Num(1.0));
+            obj.insert("tid".into(), Json::Str(res_name(res).into()));
+            let mut args = BTreeMap::new();
+            args.insert("bytes".into(), Json::Num(rec.bytes as f64));
+            if idx > 0 {
+                args.insert("shared_resource".into(), Json::Bool(true));
+            }
+            obj.insert("args".into(), Json::Obj(args));
+            events.push(Json::Obj(obj));
+        }
+    }
+    let mut root = BTreeMap::new();
+    root.insert("traceEvents".into(), Json::Arr(events));
+    root.insert("displayTimeUnit".into(), Json::Str("ms".into()));
+    Json::Obj(root).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::Op;
+    use crate::util::json::parse;
+
+    #[test]
+    fn trace_is_valid_json_with_all_ops() {
+        let cm = CostModel::default();
+        let mut sim = Sim::new();
+        sim.transfer(&cm, Op::GdsRead, 1 << 20, 0.0, "B load");
+        sim.transfer(&cm, Op::HtoD, 1 << 20, 0.0, "seg");
+        sim.gpu_kernel(&cm, 1000, 1 << 20, 0.0, "spgemm");
+        let trace = chrome_trace(&sim);
+        let parsed = parse(&trace).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // GdsRead holds two resources -> two events; others one each.
+        assert_eq!(events.len(), 4);
+        for e in events {
+            assert!(e.get("ts").is_some() && e.get("dur").is_some());
+        }
+    }
+
+    #[test]
+    fn aires_schedule_exports() {
+        use crate::sched::{Scheduler, Workload};
+        let cm = CostModel::default();
+        let d = crate::graphgen::catalog::by_name("kU1a").unwrap();
+        let w = Workload::from_catalog(d, 256, 1);
+        // Re-run the scheduler with a captured sim by reusing run_epoch's
+        // public output: just verify trace generation over a fresh sim.
+        let _ = crate::sched::Aires.run_epoch(&w, &cm);
+        let mut sim = Sim::new();
+        sim.transfer(&cm, Op::GdsRead, w.b_bytes(), 0.0, "B load (GDS)");
+        let trace = chrome_trace(&sim);
+        assert!(trace.contains("B load (GDS)"));
+        assert!(trace.contains("NVMe"));
+    }
+}

@@ -1,0 +1,17 @@
+//! Partitioning: the paper's algorithm-level contribution.
+//!
+//! * [`robw`] — Algorithm 1, row block-wise (RoBW) alignment: segments
+//!   always contain complete rows, sized to a GPU byte budget.
+//! * [`naive`] — the baseline byte-granular segmentation (maximize memory
+//!   use, cut rows mid-stream) whose merging overhead motivates the paper
+//!   (Fig. 3).
+//! * [`tiling`] — the tiling planner that maps an aligned segment onto the
+//!   fixed-shape `bsr_spmm` accelerator artifacts.
+
+pub mod naive;
+pub mod robw;
+pub mod tiling;
+
+pub use naive::{naive_partition, NaiveSegment};
+pub use robw::{robw_partition, RobwSegment};
+pub use tiling::{plan_tiles, TilePlan};

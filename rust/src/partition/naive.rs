@@ -1,0 +1,202 @@
+//! Naive byte-granular segmentation — the baseline RoBW replaces.
+//!
+//! "A naive way to maximize the available GPU memory space is to send out
+//! as many rows or columns as possible. [...] segments often contain
+//! partial rows, which cannot be processed at the current computation
+//! cycle [and] must be repetitively transferred back to host memory to
+//! merge with the remaining data" (paper §III-A, Fig. 3).
+//!
+//! This module reproduces that behaviour precisely so the merging overhead
+//! can be measured: segments are cut at exact byte boundaries, and every
+//! cut that lands mid-row produces a *partial tail* that the GPU returns
+//! (DtoH) for the host to merge (memcpy) into the next segment (HtoD again).
+
+use crate::sparse::{Csr, IDX_BYTES, VAL_BYTES};
+
+/// One naive segment: nnz range `[nnz_lo, nnz_hi)`, cutting rows freely.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NaiveSegment {
+    pub nnz_lo: usize,
+    pub nnz_hi: usize,
+    /// First row touched and whether the segment starts mid-row.
+    pub row_lo: usize,
+    pub starts_partial: bool,
+    /// Last row touched and whether the segment ends mid-row.
+    pub row_hi: usize,
+    pub ends_partial: bool,
+    /// Bytes of the partial tail (the data that must round-trip to host).
+    pub partial_tail_bytes: u64,
+}
+
+/// Cut CSR A into segments of at most `m_a` bytes of nnz payload
+/// (values + colidx), ignoring row boundaries — maximum memory packing.
+pub fn naive_partition(a: &Csr, m_a: u64) -> Vec<NaiveSegment> {
+    let entry_bytes = VAL_BYTES + IDX_BYTES;
+    let per_seg = (m_a / entry_bytes).max(1) as usize;
+    let nnz = a.nnz();
+    let mut segs = Vec::new();
+    let mut lo = 0usize;
+    while lo < nnz || (nnz == 0 && lo == 0) {
+        let hi = (lo + per_seg).min(nnz);
+        let row_lo = row_of(a, lo);
+        let row_hi = if hi == 0 { 0 } else { row_of(a, hi - 1) };
+        let starts_partial = a.rowptr[row_lo] != lo;
+        let ends_partial = hi < nnz && a.rowptr[row_hi + 1] != hi;
+        let partial_tail = if ends_partial { hi - a.rowptr[row_hi] } else { 0 };
+        segs.push(NaiveSegment {
+            nnz_lo: lo,
+            nnz_hi: hi,
+            row_lo,
+            starts_partial,
+            row_hi,
+            ends_partial,
+            partial_tail_bytes: partial_tail as u64 * entry_bytes,
+        });
+        if nnz == 0 {
+            break;
+        }
+        lo = hi;
+    }
+    segs
+}
+
+/// Row containing nnz index `p` (binary search over rowptr).
+fn row_of(a: &Csr, p: usize) -> usize {
+    // partition_point: first row whose rowptr[r+1] > p.
+    let mut lo = 0usize;
+    let mut hi = a.nrows;
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if a.rowptr[mid + 1] <= p {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Merging-overhead summary for a naive partitioning (Fig. 3's quantity):
+/// total bytes that make the extra DtoH -> host-merge -> HtoD round trip.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MergeOverhead {
+    /// Number of segment boundaries that landed mid-row.
+    pub partial_cuts: u64,
+    /// Bytes returned to host (DtoH) as unprocessable partial rows.
+    pub dtoh_bytes: u64,
+    /// Bytes merged on the host (memcpy of partial + head of next row part).
+    pub host_merge_bytes: u64,
+    /// Bytes re-sent to the GPU (the merged rows travel again).
+    pub resend_bytes: u64,
+}
+
+/// Quantify the merge overhead of a naive partitioning.
+pub fn merge_overhead(segs: &[NaiveSegment]) -> MergeOverhead {
+    let mut ov = MergeOverhead::default();
+    for s in segs {
+        if s.ends_partial {
+            ov.partial_cuts += 1;
+            ov.dtoh_bytes += s.partial_tail_bytes;
+            // Host merges the tail with the head arriving in the next
+            // segment: both halves are touched by the memcpy.
+            ov.host_merge_bytes += 2 * s.partial_tail_bytes;
+            ov.resend_bytes += s.partial_tail_bytes;
+        }
+    }
+    ov
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::robw::robw_partition;
+    use crate::sparse::Coo;
+    use crate::util::rng::Pcg;
+
+    fn random_csr(rng: &mut Pcg, nrows: usize, ncols: usize, density: f64) -> Csr {
+        let mut coo = Coo::new(nrows, ncols);
+        for r in 0..nrows {
+            for c in 0..ncols {
+                if rng.chance(density) {
+                    coo.push(r as u32, c as u32, rng.normal() as f32);
+                }
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn segments_tile_the_nnz_range() {
+        let mut rng = Pcg::seed(110);
+        let a = random_csr(&mut rng, 120, 80, 0.1);
+        let segs = naive_partition(&a, 512);
+        assert_eq!(segs[0].nnz_lo, 0);
+        assert_eq!(segs.last().unwrap().nnz_hi, a.nnz());
+        for w in segs.windows(2) {
+            assert_eq!(w[0].nnz_hi, w[1].nnz_lo);
+        }
+    }
+
+    #[test]
+    fn detects_partial_rows() {
+        // 2 rows x 6 nnz each; budget of 4 entries cuts mid-row.
+        let mut coo = Coo::new(2, 10);
+        for c in 0..6 {
+            coo.push(0, c, 1.0);
+            coo.push(1, c, 1.0);
+        }
+        let a = coo.to_csr();
+        let segs = naive_partition(&a, 4 * 8); // 4 entries per segment
+        assert!(segs.iter().any(|s| s.ends_partial));
+        let ov = merge_overhead(&segs);
+        assert!(ov.partial_cuts >= 1);
+        assert!(ov.dtoh_bytes > 0);
+    }
+
+    #[test]
+    fn row_aligned_budget_produces_no_partials() {
+        // Rows of exactly 4 nnz, budget exactly 2 rows -> clean cuts.
+        let mut coo = Coo::new(8, 16);
+        for r in 0..8 {
+            for c in 0..4 {
+                coo.push(r, c * 2, 1.0);
+            }
+        }
+        let a = coo.to_csr();
+        let segs = naive_partition(&a, 8 * 8);
+        let ov = merge_overhead(&segs);
+        assert_eq!(ov.partial_cuts, 0);
+        assert_eq!(ov.dtoh_bytes, 0);
+    }
+
+    #[test]
+    fn robw_never_has_merge_overhead_naive_usually_does() {
+        // The paper's core claim, as a property: on irregular matrices the
+        // naive cut produces partials; RoBW by construction cannot.
+        let mut rng = Pcg::seed(111);
+        let mut naive_partials = 0u64;
+        for _ in 0..10 {
+            let density = 0.07 + rng.f64() * 0.1;
+            let a = random_csr(&mut rng, 64, 64, density);
+            let budget = 300 + rng.below(500);
+            naive_partials += merge_overhead(&naive_partition(&a, budget)).partial_cuts;
+            // RoBW: every segment is whole rows; reassembly is exact.
+            let segs = robw_partition(&a, budget);
+            for s in &segs {
+                assert_eq!(s.nnz, a.rowptr[s.row_hi] - a.rowptr[s.row_lo]);
+            }
+        }
+        assert!(naive_partials > 0, "naive should cut rows on irregular data");
+    }
+
+    #[test]
+    fn smaller_memory_more_overhead() {
+        // Fig. 3's second observation: overhead grows as memory shrinks.
+        let mut rng = Pcg::seed(112);
+        let a = random_csr(&mut rng, 400, 128, 0.08);
+        let big = merge_overhead(&naive_partition(&a, 16 << 10));
+        let small = merge_overhead(&naive_partition(&a, 1 << 10));
+        assert!(small.partial_cuts >= big.partial_cuts);
+        assert!(small.dtoh_bytes >= big.dtoh_bytes);
+    }
+}

@@ -1,0 +1,170 @@
+//! Row block-wise (RoBW) partitioning — paper Algorithm 1.
+//!
+//! Given CSR A and a GPU byte budget `m_a`, produce segments of *complete*
+//! rows whose memory footprint (`calcMem`) stays within budget. Complete
+//! rows are the whole point: the GPU never receives a fragment it has to
+//! ship back for host-side merging (the Fig. 3 overhead).
+//!
+//! This is the hot CPU-side preprocessing pass (runs once per matrix in
+//! Phase I), so the planning walk is allocation-free over `rowptr` and the
+//! copy loop is a straight memcpy per array — see §Perf in EXPERIMENTS.md.
+
+use crate::sparse::{Csr, IDX_BYTES, PTR_BYTES, VAL_BYTES};
+
+/// One RoBW segment: complete rows `[row_lo, row_hi)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RobwSegment {
+    pub row_lo: usize,
+    pub row_hi: usize,
+    /// Non-zeros in the segment.
+    pub nnz: usize,
+    /// `calcMem` footprint in bytes (rowptr + colidx + vals).
+    pub bytes: u64,
+}
+
+/// `calcMem(k, q)` from Algorithm 1: bytes to hold `k` rows with `q`
+/// non-zeros in CSR form on the GPU.
+#[inline]
+pub fn calc_mem(k: usize, q: usize) -> u64 {
+    (k as u64 + 1) * PTR_BYTES + q as u64 * (VAL_BYTES + IDX_BYTES)
+}
+
+/// Algorithm 1: plan RoBW segments for `a` under per-segment budget `m_a`
+/// bytes. A single row larger than the budget becomes its own segment
+/// (the GPU-side kernel streams it; the alternative is an unservable
+/// input) — flagged via `RobwSegment::bytes > m_a`.
+pub fn robw_partition(a: &Csr, m_a: u64) -> Vec<RobwSegment> {
+    let n = a.nrows;
+    let mut segs = Vec::new();
+    let mut start = 0usize;
+    while start < n {
+        let mut end = start;
+        let mut z = 0usize; // non-zeros in block
+        // Grow while the block *including the next row* fits (Alg. 1 l.5-8).
+        loop {
+            if end >= n {
+                break;
+            }
+            let next_q = z + a.row_nnz(end);
+            let next_k = end - start + 1;
+            if calc_mem(next_k, next_q) <= m_a || end == start {
+                // Always take at least one row (oversized-row escape).
+                z = next_q;
+                end += 1;
+                if calc_mem(next_k, next_q) > m_a {
+                    break; // oversized single row: close the segment
+                }
+            } else {
+                break;
+            }
+        }
+        segs.push(RobwSegment {
+            row_lo: start,
+            row_hi: end,
+            nnz: z,
+            bytes: calc_mem(end - start, z),
+        });
+        start = end;
+    }
+    segs
+}
+
+/// Materialize a planned segment (Alg. 1 lines 9-18: the copy loop).
+pub fn materialize(a: &Csr, seg: &RobwSegment) -> Csr {
+    a.slice_rows(seg.row_lo, seg.row_hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+    use crate::util::rng::Pcg;
+
+    fn random_csr(rng: &mut Pcg, nrows: usize, ncols: usize, density: f64) -> Csr {
+        let mut coo = Coo::new(nrows, ncols);
+        for r in 0..nrows {
+            for c in 0..ncols {
+                if rng.chance(density) {
+                    coo.push(r as u32, c as u32, rng.normal() as f32);
+                }
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn segments_cover_all_rows_disjointly() {
+        let mut rng = Pcg::seed(100);
+        let a = random_csr(&mut rng, 200, 64, 0.1);
+        let segs = robw_partition(&a, 1024);
+        assert_eq!(segs[0].row_lo, 0);
+        assert_eq!(segs.last().unwrap().row_hi, 200);
+        for w in segs.windows(2) {
+            assert_eq!(w[0].row_hi, w[1].row_lo, "contiguous, no overlap");
+        }
+    }
+
+    #[test]
+    fn segments_respect_budget_except_oversized_rows() {
+        let mut rng = Pcg::seed(101);
+        let a = random_csr(&mut rng, 300, 128, 0.08);
+        let budget = 800u64;
+        for seg in robw_partition(&a, budget) {
+            if seg.row_hi - seg.row_lo > 1 {
+                assert!(seg.bytes <= budget, "multi-row segment over budget: {seg:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_single_row_becomes_own_segment() {
+        // One row with 100 nnz, budget fits ~10.
+        let mut coo = Coo::new(3, 200);
+        for c in 0..100 {
+            coo.push(1, c, 1.0);
+        }
+        coo.push(0, 0, 1.0);
+        coo.push(2, 0, 1.0);
+        let a = coo.to_csr();
+        let segs = robw_partition(&a, 120);
+        assert!(segs.iter().any(|s| s.row_lo == 1 && s.row_hi == 2));
+    }
+
+    #[test]
+    fn materialized_segments_reassemble_exactly() {
+        let mut rng = Pcg::seed(102);
+        let a = random_csr(&mut rng, 150, 50, 0.12);
+        let segs = robw_partition(&a, 600);
+        let parts: Vec<Csr> = segs.iter().map(|s| materialize(&a, s)).collect();
+        assert_eq!(Csr::vstack(&parts).unwrap(), a);
+    }
+
+    #[test]
+    fn larger_budget_fewer_segments() {
+        let mut rng = Pcg::seed(103);
+        let a = random_csr(&mut rng, 400, 64, 0.1);
+        let small = robw_partition(&a, 512).len();
+        let large = robw_partition(&a, 4096).len();
+        assert!(large < small, "{large} !< {small}");
+    }
+
+    #[test]
+    fn nnz_accounting_is_exact() {
+        let mut rng = Pcg::seed(104);
+        let a = random_csr(&mut rng, 100, 40, 0.15);
+        let segs = robw_partition(&a, 700);
+        let total: usize = segs.iter().map(|s| s.nnz).sum();
+        assert_eq!(total, a.nnz());
+        for s in &segs {
+            assert_eq!(s.nnz, a.rowptr[s.row_hi] - a.rowptr[s.row_lo]);
+        }
+    }
+
+    #[test]
+    fn empty_matrix_single_pass() {
+        let a = Csr::empty(10, 10);
+        let segs = robw_partition(&a, 1 << 20);
+        assert_eq!(segs.len(), 1);
+        assert_eq!((segs[0].row_lo, segs[0].row_hi), (0, 10));
+    }
+}

@@ -1,0 +1,149 @@
+//! Tiling planner: maps a RoBW-aligned segment onto the fixed-shape
+//! `bsr_spmm` accelerator artifacts (paper §III-A "specialized tiling for
+//! block-wise partitioned data", adapted to MXU tiles — DESIGN.md
+//! §Hardware-Adaptation).
+//!
+//! Given the segment's shape/occupancy and the available artifact variants,
+//! pick the variant minimizing estimated execution cost: padded-tile waste
+//! trades against per-call overhead. Also produces the VMEM-footprint and
+//! MXU-utilization estimates recorded in EXPERIMENTS.md §Perf (interpret
+//! mode gives no real TPU timings, so structure is what we optimize).
+
+/// One available artifact shape (mirrors `aot.py` SPMM_VARIANTS).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpmmVariant {
+    pub name: &'static str,
+    /// Row-block slots per call.
+    pub r: usize,
+    /// Padded tile slots per row block.
+    pub nb: usize,
+    pub bm: usize,
+    pub bk: usize,
+    /// Feature-panel rows (K) the artifact was lowered with.
+    pub k: usize,
+    /// Feature width.
+    pub f: usize,
+}
+
+/// The tiling decision for a segment.
+#[derive(Debug, Clone)]
+pub struct TilePlan {
+    pub variant: SpmmVariant,
+    /// Number of artifact invocations needed.
+    pub calls: usize,
+    /// Fraction of streamed tile payload that is real data (1.0 = no waste).
+    pub payload_efficiency: f64,
+    /// Estimated VMEM-resident bytes per call on a real TPU
+    /// (tile payloads + feature panel + output block).
+    pub vmem_bytes: u64,
+    /// Estimated MXU utilization: useful MACs / issued MACs.
+    pub mxu_utilization: f64,
+}
+
+/// Estimate tiles-per-row-block for a segment with `rows` rows, `nnz`
+/// non-zeros and `ncols` columns under (bm, bk) blocking, assuming the
+/// near-banded structure of RoBW-aligned graph segments: non-zeros cluster,
+/// so tiles-per-block ~ nnz_per_block_rows / fill, with fill the expected
+/// occupancy of a touched tile.
+fn est_tiles_per_block(rows: usize, nnz: usize, ncols: usize, bm: usize, bk: usize) -> f64 {
+    if rows == 0 || nnz == 0 {
+        return 0.0;
+    }
+    let nnz_per_block = nnz as f64 * bm as f64 / rows as f64;
+    // Expected distinct tiles touched by n nnz spread over ncols/bk tiles
+    // (balls in bins).
+    let bins = (ncols as f64 / bk as f64).max(1.0);
+    let touched = bins * (1.0 - (1.0 - 1.0 / bins).powf(nnz_per_block));
+    touched.max(1.0)
+}
+
+/// Choose the best artifact variant for a segment.
+///
+/// `rows`/`nnz`/`ncols` describe the RoBW segment; `f` is the feature width
+/// needed. Returns `None` if no variant matches the feature width.
+pub fn plan_tiles(
+    variants: &[SpmmVariant],
+    rows: usize,
+    nnz: usize,
+    ncols: usize,
+    f: usize,
+) -> Option<TilePlan> {
+    let mut best: Option<(f64, TilePlan)> = None;
+    for &v in variants.iter().filter(|v| v.f == f && v.k >= ncols.min(v.k)) {
+        let tiles_per_block = est_tiles_per_block(rows, nnz, ncols, v.bm, v.bk);
+        let nblocks = rows.div_ceil(v.bm);
+        // Each row block needs ceil(tiles/nb) slots; calls batch r slots.
+        let slots = nblocks as f64 * (tiles_per_block / v.nb as f64).ceil();
+        let calls = (slots / v.r as f64).ceil().max(1.0) as usize;
+        // Efficiency: real nnz vs streamed dense payload.
+        let streamed = calls as f64 * (v.r * v.nb * v.bm * v.bk) as f64;
+        let payload_efficiency = (nnz as f64 / streamed).min(1.0);
+        // MXU: useful MACs = nnz * f; issued = streamed * f.
+        let mxu = payload_efficiency;
+        // VMEM model: one call's blocks + feature panel + outputs resident.
+        let vmem = (v.r * v.nb * v.bm * v.bk + v.k * v.f + v.r * v.bm * v.f) as u64 * 4;
+        // Cost model: per-call overhead + streamed payload work.
+        let cost = calls as f64 * 1.0 + streamed / (v.bm * v.bk) as f64 * 0.01;
+        let plan = TilePlan {
+            variant: v,
+            calls,
+            payload_efficiency,
+            vmem_bytes: vmem,
+            mxu_utilization: mxu,
+        };
+        if best.as_ref().map_or(true, |(c, _)| cost < *c) {
+            best = Some((cost, plan));
+        }
+    }
+    best.map(|(_, p)| p)
+}
+
+/// The artifact variants built by `aot.py` (kept in sync by the
+/// `runtime::artifacts` loader, which validates against manifest.json).
+pub const DEFAULT_VARIANTS: [SpmmVariant; 3] = [
+    SpmmVariant { name: "bsr_spmm_r8_nb16_b32_k1024_f64", r: 8, nb: 16, bm: 32, bk: 32, k: 1024, f: 64 },
+    SpmmVariant { name: "bsr_spmm_r4_nb8_b64_k1024_f64", r: 4, nb: 8, bm: 64, bk: 64, k: 1024, f: 64 },
+    SpmmVariant { name: "bsr_spmm_r8_nb16_b32_k1024_f128", r: 8, nb: 16, bm: 32, bk: 32, k: 1024, f: 128 },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picks_matching_feature_width() {
+        let plan = plan_tiles(&DEFAULT_VARIANTS, 256, 2048, 1024, 128).unwrap();
+        assert_eq!(plan.variant.f, 128);
+    }
+
+    #[test]
+    fn no_variant_for_unknown_f() {
+        assert!(plan_tiles(&DEFAULT_VARIANTS, 256, 2048, 1024, 7).is_none());
+    }
+
+    #[test]
+    fn denser_segments_prefer_bigger_tiles() {
+        // Very dense: fewer, larger tiles win (fill is high either way,
+        // fewer calls). Very sparse: small tiles waste less padding.
+        let dense = plan_tiles(&DEFAULT_VARIANTS, 512, 200_000, 1024, 64).unwrap();
+        let sparse = plan_tiles(&DEFAULT_VARIANTS, 512, 1_500, 1024, 64).unwrap();
+        assert!(dense.payload_efficiency > sparse.payload_efficiency);
+    }
+
+    #[test]
+    fn vmem_fits_16mb_budget() {
+        // DESIGN.md §Perf: per-call VMEM must stay under a TPU-core-class
+        // budget for every shipped variant.
+        for v in DEFAULT_VARIANTS {
+            let plan = plan_tiles(&[v], 256, 4096, v.k, v.f).unwrap();
+            assert!(plan.vmem_bytes < 16 << 20, "{}: {} B", v.name, plan.vmem_bytes);
+        }
+    }
+
+    #[test]
+    fn call_count_scales_with_rows() {
+        let small = plan_tiles(&DEFAULT_VARIANTS, 128, 1024, 1024, 64).unwrap();
+        let large = plan_tiles(&DEFAULT_VARIANTS, 4096, 32768, 1024, 64).unwrap();
+        assert!(large.calls > small.calls);
+    }
+}

@@ -1,0 +1,196 @@
+//! Artifact manifest: the typed contract between `python/compile/aot.py`
+//! and the rust executor. Parsed with the in-tree JSON reader; shapes and
+//! dtypes are validated at load time and again per execution.
+
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Element type of a tensor (the two the artifacts use).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    S32,
+}
+
+impl DType {
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "s32" => Ok(DType::S32),
+            other => bail!("unknown dtype {other:?}"),
+        }
+    }
+}
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("spec missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::from_str(
+            j.get("dtype").and_then(Json::as_str).ok_or_else(|| anyhow!("missing dtype"))?,
+        )?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// HLO text file, relative to the manifest directory.
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Free-form numeric metadata (tile shapes etc).
+    pub meta: BTreeMap<String, f64>,
+}
+
+/// The parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let root = parse(&text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        let arr = root.as_arr().ok_or_else(|| anyhow!("manifest root must be an array"))?;
+        let mut artifacts = Vec::new();
+        for item in arr {
+            let name = item
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let file = item
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("{name}: missing file"))?
+                .to_string();
+            if !dir.join(&file).exists() {
+                bail!("{name}: artifact file {file} missing (run `make artifacts`)");
+            }
+            let inputs = item
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}: missing inputs"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = item
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}: missing outputs"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let mut meta = BTreeMap::new();
+            if let Some(m) = item.get("meta").and_then(Json::as_obj) {
+                for (k, v) in m {
+                    if let Some(n) = v.as_f64() {
+                        meta.insert(k.clone(), n);
+                    } else if let Some(b) = v.as_bool() {
+                        meta.insert(k.clone(), if b { 1.0 } else { 0.0 });
+                    }
+                }
+            }
+            artifacts.push(ArtifactSpec { name, file, inputs, outputs, meta });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Find the first artifact whose name starts with `prefix`.
+    pub fn find_prefix(&self, prefix: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name.starts_with(prefix))
+    }
+
+    /// All `bsr_spmm_*` variants.
+    pub fn spmm_variants(&self) -> Vec<&ArtifactSpec> {
+        self.artifacts.iter().filter(|a| a.name.starts_with("bsr_spmm_")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn loads_valid_manifest() {
+        let dir = std::env::temp_dir().join("aires_manifest_ok");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("x.hlo.txt"), "HloModule x").unwrap();
+        write_manifest(
+            &dir,
+            r#"[{"name":"x","file":"x.hlo.txt",
+                 "inputs":[{"shape":[2,3],"dtype":"f32"}],
+                 "outputs":[{"shape":[2],"dtype":"s32"}],
+                 "meta":{"bm":32,"relu":true}}]"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("x").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![2, 3]);
+        assert_eq!(a.outputs[0].dtype, DType::S32);
+        assert_eq!(a.meta["bm"], 32.0);
+        assert_eq!(a.meta["relu"], 1.0);
+    }
+
+    #[test]
+    fn rejects_missing_file() {
+        let dir = std::env::temp_dir().join("aires_manifest_missing");
+        write_manifest(
+            &dir,
+            r#"[{"name":"gone","file":"gone.hlo.txt","inputs":[],"outputs":[]}]"#,
+        );
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // When artifacts exist (make artifacts), the real manifest must
+        // parse and contain the four entry-point families.
+        let Some(dir) = crate::runtime::find_artifact_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        for prefix in ["bsr_spmm_", "gcn_combine_", "gcn2_fwd_", "gcn2_train_step_"] {
+            assert!(m.find_prefix(prefix).is_some(), "missing {prefix}*");
+        }
+        for a in &m.artifacts {
+            assert!(!a.inputs.is_empty());
+            assert!(!a.outputs.is_empty());
+        }
+    }
+}

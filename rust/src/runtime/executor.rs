@@ -1,0 +1,199 @@
+//! PJRT executor: compile HLO-text artifacts once, execute many times.
+//!
+//! Mirrors /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`. The
+//! artifacts were lowered with `return_tuple=True`, so every result is a
+//! tuple literal which we decompose into per-output literals.
+
+use super::artifacts::{ArtifactSpec, DType, Manifest};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+
+/// A typed input buffer for an execution.
+#[derive(Debug, Clone)]
+pub enum Buf {
+    F32(Vec<f32>),
+    S32(Vec<i32>),
+}
+
+impl Buf {
+    pub fn len(&self) -> usize {
+        match self {
+            Buf::F32(v) => v.len(),
+            Buf::S32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Buf::F32(_) => DType::F32,
+            Buf::S32(_) => DType::S32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Buf::F32(v) => Ok(v),
+            _ => bail!("expected f32 buffer"),
+        }
+    }
+}
+
+/// Compiled-executable cache over a PJRT CPU client.
+pub struct Executor {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Executor {
+    /// Create a CPU-PJRT executor over the manifest in `dir`.
+    pub fn new(dir: &std::path::Path) -> Result<Executor> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Executor { client, manifest, compiled: HashMap::new() })
+    }
+
+    /// Locate artifacts automatically (see [`super::find_artifact_dir`]).
+    pub fn from_env() -> Result<Executor> {
+        let dir = super::find_artifact_dir()
+            .ok_or_else(|| anyhow!("artifacts not found; run `make artifacts`"))?;
+        Self::new(&dir)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (and cache) an artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let spec =
+            self.manifest.get(name).ok_or_else(|| anyhow!("unknown artifact {name}"))?.clone();
+        let path = self.manifest.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", spec.file))?;
+        self.compiled.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    fn literal(spec: &super::artifacts::TensorSpec, buf: &Buf) -> Result<xla::Literal> {
+        if buf.dtype() != spec.dtype {
+            bail!("dtype mismatch: artifact wants {:?}", spec.dtype);
+        }
+        if buf.len() != spec.elements() && !(spec.shape.is_empty() && buf.len() == 1) {
+            bail!("size mismatch: got {} elements, want {:?}", buf.len(), spec.shape);
+        }
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = match buf {
+            Buf::F32(v) => xla::Literal::vec1(v),
+            Buf::S32(v) => xla::Literal::vec1(v),
+        };
+        if spec.shape.is_empty() {
+            // Scalar: reshape to rank 0.
+            lit.reshape(&[]).map_err(|e| anyhow!("reshape scalar: {e:?}"))
+        } else {
+            lit.reshape(&dims).map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
+        }
+    }
+
+    /// Execute `name` with the given inputs; returns one [`Buf`] per output.
+    pub fn run(&mut self, name: &str, inputs: &[Buf]) -> Result<Vec<Buf>> {
+        self.load(name)?;
+        let spec = self.manifest.get(name).unwrap().clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!("{name}: got {} inputs, want {}", inputs.len(), spec.inputs.len());
+        }
+        let literals: Vec<xla::Literal> = spec
+            .inputs
+            .iter()
+            .zip(inputs.iter())
+            .enumerate()
+            .map(|(i, (s, b))| Self::literal(s, b).with_context(|| format!("{name} input {i}")))
+            .collect::<Result<Vec<_>>>()?;
+        let exe = self.compiled.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        // return_tuple=True => decompose.
+        let parts = result.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!("{name}: got {} outputs, want {}", parts.len(), spec.outputs.len());
+        }
+        parts
+            .into_iter()
+            .zip(spec.outputs.iter())
+            .map(|(lit, os)| {
+                let buf = match os.dtype {
+                    DType::F32 => Buf::F32(
+                        lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?,
+                    ),
+                    DType::S32 => Buf::S32(
+                        lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec s32: {e:?}"))?,
+                    ),
+                };
+                Ok(buf)
+            })
+            .collect()
+    }
+
+    /// Artifact spec lookup passthrough.
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.manifest.get(name)
+    }
+
+    /// Pre-build the literal for input `idx` of `name` (reuse across many
+    /// executions — §Perf: re-uploading an unchanged operand per call costs
+    /// a full copy of its buffer).
+    pub fn prep_literal(&self, name: &str, idx: usize, buf: &Buf) -> Result<xla::Literal> {
+        let spec = self.manifest.get(name).ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        let ispec =
+            spec.inputs.get(idx).ok_or_else(|| anyhow!("{name}: no input {idx}"))?;
+        Self::literal(ispec, buf)
+    }
+
+    /// Execute with pre-built literals (shapes validated at prep time).
+    pub fn run_literals(&mut self, name: &str, inputs: &[&xla::Literal]) -> Result<Vec<Buf>> {
+        self.load(name)?;
+        let spec = self.manifest.get(name).unwrap().clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!("{name}: got {} inputs, want {}", inputs.len(), spec.inputs.len());
+        }
+        let exe = self.compiled.get(name).unwrap();
+        let result = exe
+            .execute::<&xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        parts
+            .into_iter()
+            .zip(spec.outputs.iter())
+            .map(|(lit, os)| {
+                Ok(match os.dtype {
+                    DType::F32 => Buf::F32(
+                        lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?,
+                    ),
+                    DType::S32 => Buf::S32(
+                        lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec s32: {e:?}"))?,
+                    ),
+                })
+            })
+            .collect()
+    }
+}

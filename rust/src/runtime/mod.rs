@@ -1,0 +1,38 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts and executes
+//! them from the rust request path. Python never runs here.
+//!
+//! Pipeline: `make artifacts` (build time, once) lowers the L2 model to HLO
+//! *text* + a `manifest.json`; at startup [`Executor`] parses the manifest
+//! ([`artifacts`]), compiles each module on the PJRT CPU client, and serves
+//! typed executions. [`tile_exec`] adapts dynamic sparse data to the fixed
+//! artifact shapes (padding + batching) — the rust half of the tiling
+//! contract with `python/compile/kernels/bsr_spmm.py`.
+
+pub mod artifacts;
+pub mod executor;
+pub mod tile_exec;
+
+pub use artifacts::{Manifest, TensorSpec};
+pub use executor::Executor;
+pub use tile_exec::BsrSpmmExec;
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Locate the artifact directory: `$AIRES_ARTIFACTS`, else ./artifacts,
+/// else ../artifacts (when running from a subdirectory).
+pub fn find_artifact_dir() -> Option<std::path::PathBuf> {
+    if let Ok(p) = std::env::var("AIRES_ARTIFACTS") {
+        let p = std::path::PathBuf::from(p);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    for cand in [DEFAULT_ARTIFACT_DIR, "../artifacts", "../../artifacts"] {
+        let p = std::path::PathBuf::from(cand);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    None
+}

@@ -1,0 +1,161 @@
+//! Tile executor: runs sparse aggregation through the fixed-shape
+//! `bsr_spmm` artifact (dynamic matrix -> padded BSR batches -> accumulate).
+//!
+//! This is the rust half of the RoBW->MXU tiling contract (DESIGN.md
+//! §Hardware-Adaptation): [`crate::sparse::block`] regrids a RoBW segment
+//! into `bm x bk` tiles and pads them to the artifact's static `(r, nb)`
+//! grid; this module feeds batches through PJRT and scatters the results
+//! back into the output rows, accumulating across overflow slots.
+
+use super::artifacts::ArtifactSpec;
+use super::executor::{Buf, Executor};
+use crate::sparse::block::pack_csr_batches;
+use crate::sparse::spmm::Dense;
+use crate::sparse::Csr;
+use anyhow::{anyhow, bail, Result};
+
+/// Static shape of one `bsr_spmm` artifact (from manifest meta).
+#[derive(Debug, Clone, Copy)]
+pub struct SpmmShape {
+    pub r: usize,
+    pub nb: usize,
+    pub bm: usize,
+    pub bk: usize,
+    pub k: usize,
+    pub f: usize,
+}
+
+impl SpmmShape {
+    pub fn from_spec(spec: &ArtifactSpec) -> Result<SpmmShape> {
+        let get = |key: &str| {
+            spec.meta
+                .get(key)
+                .map(|&v| v as usize)
+                .ok_or_else(|| anyhow!("{}: missing meta {key}", spec.name))
+        };
+        Ok(SpmmShape { r: get("r")?, nb: get("nb")?, bm: get("bm")?, bk: get("bk")?, k: get("k")?, f: get("f")? })
+    }
+}
+
+/// Executes CSR x dense SpMM through a `bsr_spmm` artifact.
+pub struct BsrSpmmExec {
+    pub artifact: String,
+    pub shape: SpmmShape,
+}
+
+impl BsrSpmmExec {
+    /// Pick an artifact variant matching feature width `f` from the
+    /// executor's manifest.
+    pub fn for_feature_width(exec: &Executor, f: usize) -> Result<BsrSpmmExec> {
+        for spec in exec.manifest().spmm_variants() {
+            let shape = SpmmShape::from_spec(spec)?;
+            if shape.f == f {
+                return Ok(BsrSpmmExec { artifact: spec.name.clone(), shape });
+            }
+        }
+        bail!("no bsr_spmm artifact for feature width {f}")
+    }
+
+    /// Compute `a · h` through the accelerator artifact.
+    ///
+    /// Constraints (checked): `h.ncols == f`, `a.ncols <= k`,
+    /// `h.nrows == a.ncols`. Rows of `a` are processed `r*bm` at a time;
+    /// the padded feature panel is reused across batches.
+    pub fn spmm(&self, exec: &mut Executor, a: &Csr, h: &Dense) -> Result<Dense> {
+        let s = self.shape;
+        if h.ncols != s.f {
+            bail!("feature width {} != artifact f {}", h.ncols, s.f);
+        }
+        if a.ncols != h.nrows {
+            bail!("inner dim mismatch: {} vs {}", a.ncols, h.nrows);
+        }
+        if a.ncols > s.k {
+            bail!("a.ncols {} exceeds artifact K {} (panel the input)", a.ncols, s.k);
+        }
+
+        // Pad the feature panel once and build its literal once — it is
+        // identical across every batch of this pass (§Perf).
+        let mut h_pad = vec![0f32; s.k * s.f];
+        for r in 0..h.nrows {
+            h_pad[r * s.f..(r + 1) * s.f].copy_from_slice(h.row(r));
+        }
+        exec.load(&self.artifact)?;
+        let h_lit = exec.prep_literal(&self.artifact, 3, &Buf::F32(h_pad))?;
+
+        // Fused extraction+packing (§Perf: one write per padded payload).
+        let batches = pack_csr_batches(a, s.bm, s.bk, s.r, s.nb);
+        let mut out = Dense::zeros(a.nrows, s.f);
+        for batch in &batches {
+            let nblk = exec.prep_literal(&self.artifact, 0, &Buf::S32(batch.nblk.clone()))?;
+            let colidx = exec.prep_literal(&self.artifact, 1, &Buf::S32(batch.colidx.clone()))?;
+            let blocks = exec.prep_literal(&self.artifact, 2, &Buf::F32(batch.blocks.clone()))?;
+            let outputs =
+                exec.run_literals(&self.artifact, &[&nblk, &colidx, &blocks, &h_lit])?;
+            let y = outputs[0].as_f32()?; // [r*bm, f]
+            for (slot, &brow) in batch.slot_block_row.iter().enumerate() {
+                let row0 = brow * s.bm;
+                for lr in 0..s.bm {
+                    let dst_row = row0 + lr;
+                    if dst_row >= a.nrows {
+                        break;
+                    }
+                    let src = &y[(slot * s.bm + lr) * s.f..(slot * s.bm + lr + 1) * s.f];
+                    let dst = &mut out.data[dst_row * s.f..(dst_row + 1) * s.f];
+                    for (d, &v) in dst.iter_mut().zip(src.iter()) {
+                        *d += v; // accumulate overflow slots of the same row block
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Executes the fused combine tile (`gcn_combine_*`): relu(x·w + b).
+pub struct CombineExec {
+    pub artifact: String,
+    /// (p, f, h) static shape.
+    pub p: usize,
+    pub f: usize,
+    pub h: usize,
+}
+
+impl CombineExec {
+    /// Pick a combine artifact with matching in/out widths.
+    pub fn for_widths(exec: &Executor, f: usize, h: usize, relu: bool) -> Result<CombineExec> {
+        for spec in exec.manifest().artifacts.iter().filter(|a| a.name.starts_with("gcn_combine_")) {
+            let mf = spec.meta.get("f").copied().unwrap_or(0.0) as usize;
+            let mh = spec.meta.get("h").copied().unwrap_or(0.0) as usize;
+            let mrelu = spec.meta.get("relu").copied().unwrap_or(1.0) != 0.0;
+            if mf == f && mh == h && mrelu == relu {
+                let p = spec.meta.get("p").copied().unwrap_or(0.0) as usize;
+                return Ok(CombineExec { artifact: spec.name.clone(), p, f, h });
+            }
+        }
+        bail!("no gcn_combine artifact for f={f} h={h} relu={relu}")
+    }
+
+    /// Compute relu(x·w + b), row-batching x through the static p rows.
+    pub fn combine(&self, exec: &mut Executor, x: &Dense, w: &Dense, b: &[f32]) -> Result<Dense> {
+        if x.ncols != self.f || w.nrows != self.f || w.ncols != self.h || b.len() != self.h {
+            bail!("combine shape mismatch");
+        }
+        let mut out = Dense::zeros(x.nrows, self.h);
+        let w_buf = Buf::F32(w.data.clone());
+        let b_buf = Buf::F32(b.to_vec());
+        let mut row = 0;
+        while row < x.nrows {
+            let take = (x.nrows - row).min(self.p);
+            let mut xp = vec![0f32; self.p * self.f];
+            xp[..take * self.f]
+                .copy_from_slice(&x.data[row * self.f..(row + take) * self.f]);
+            let outputs =
+                exec.run(&self.artifact, &[Buf::F32(xp), w_buf.clone(), b_buf.clone()])?;
+            let y = outputs[0].as_f32()?;
+            out.data[row * self.h..(row + take) * self.h]
+                .copy_from_slice(&y[..take * self.h]);
+            row += take;
+        }
+        Ok(out)
+    }
+}

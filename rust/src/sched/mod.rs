@@ -1,0 +1,289 @@
+//! Schedulers: AIRES's three-phase dynamic scheduling (Algorithm 2) and the
+//! three baselines the paper compares against (Table I).
+//!
+//! Each scheduler turns a [`Workload`] (one dataset + model config + GPU
+//! memory constraint) into a DAG of simulator ops modelling one *training
+//! epoch* — forward aggregation SpGEMM + combination per layer, plus the
+//! backward pass that re-streams the adjacency — and returns the makespan,
+//! the per-channel I/O breakdown and the peak GPU residency. The paper's
+//! Figures 6-9 and Table III are sweeps over these runs.
+
+pub mod aires;
+pub mod etc_sched;
+pub mod maxmem;
+pub mod ucg;
+
+pub use aires::Aires;
+pub use etc_sched::Etc;
+pub use maxmem::MaxMemory;
+pub use ucg::Ucg;
+
+use crate::graphgen::DatasetStats;
+use crate::memsim::sim::OpRecord;
+use crate::memsim::{CostModel, IoStats, Sim};
+
+/// Table I feature matrix (asserted by tests; printed by the CLI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Features {
+    pub alignment: bool,
+    pub dma: bool,
+    pub um_reads: bool,
+    pub dual_way: bool,
+    pub co_design: bool,
+}
+
+/// One SpGEMM training workload (paper §V-A model configuration).
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    /// Graph vertices (rows/cols of CSR A).
+    pub vertices: u64,
+    /// Stored non-zeros of CSR A (2x edges for symmetric graphs).
+    pub a_nnz: u64,
+    /// Feature width (paper default 256).
+    pub feat_dim: u64,
+    /// Feature sparsity percent (paper default 99%).
+    pub b_sparsity_pct: f64,
+    /// GPU memory constraint in bytes (Table II col 5).
+    pub gpu_mem_bytes: u64,
+    /// GCN layers; an epoch streams A `2*layers` times (fwd + bwd).
+    pub layers: u32,
+    /// Optional calibrated total requirement (Table II col 4). When set,
+    /// the output size is derived as `req - A - B` to match the paper's
+    /// accounting; otherwise the probabilistic estimator is used.
+    pub memory_req_bytes: Option<u64>,
+}
+
+impl Workload {
+    /// Build from a Table II catalog entry with the paper's model config.
+    pub fn from_catalog(d: &DatasetStats, feat_dim: u64, layers: u32) -> Workload {
+        Workload {
+            name: d.name.to_string(),
+            vertices: d.vertices(),
+            a_nnz: d.nnz(),
+            feat_dim,
+            b_sparsity_pct: 99.0,
+            gpu_mem_bytes: d.constraint_bytes(),
+            layers,
+            memory_req_bytes: Some((d.memory_req_gb * 1e9) as u64),
+        }
+    }
+
+    /// CSR A bytes (vals+colidx @4B, rowptr @8B).
+    pub fn a_bytes(&self) -> u64 {
+        self.a_nnz * 8 + (self.vertices + 1) * 8
+    }
+
+    /// CSC B non-zeros (V x feat at the configured sparsity).
+    pub fn b_nnz(&self) -> u64 {
+        (self.vertices as f64 * self.feat_dim as f64 * (1.0 - self.b_sparsity_pct / 100.0))
+            as u64
+    }
+
+    /// CSC B bytes.
+    pub fn b_bytes(&self) -> u64 {
+        self.b_nnz() * 8 + (self.feat_dim + 1) * 8
+    }
+
+    /// Expected output density of C = A·B per the probabilistic model:
+    /// P[hit] = 1 − (1 − d_B)^avg_row_nnz.
+    pub fn c_density(&self) -> f64 {
+        let d_b = 1.0 - self.b_sparsity_pct / 100.0;
+        let avg_row = self.a_nnz as f64 / self.vertices as f64;
+        1.0 - (1.0 - d_b).powf(avg_row)
+    }
+
+    /// Expected CSR C bytes (probabilistic estimator). Note the split:
+    /// *traffic* follows this estimate of the real output, while
+    /// *feasibility* (`req_bytes`) follows the catalog's calibrated total —
+    /// precisely because the baselines' conservative static reservations,
+    /// not the real output, are what OOM (the paper's §III-B point).
+    pub fn c_bytes(&self) -> u64 {
+        let nnz_c = (self.vertices as f64 * self.feat_dim as f64 * self.c_density()) as u64;
+        nnz_c * 8 + (self.vertices + 1) * 8
+    }
+
+    /// Total working-set requirement (paper Table II "Memory Req.").
+    pub fn req_bytes(&self) -> u64 {
+        self.memory_req_bytes.unwrap_or_else(|| self.a_bytes() + self.b_bytes() + self.c_bytes())
+    }
+
+    /// SpGEMM flops for one aggregation pass: every stored a_ik meets the
+    /// non-zeros of B row k (avg feat·d_B), 2 flops per match.
+    pub fn spgemm_flops(&self) -> u64 {
+        let d_b = 1.0 - self.b_sparsity_pct / 100.0;
+        (2.0 * self.a_nnz as f64 * self.feat_dim as f64 * d_b) as u64
+    }
+
+    /// Combination flops for one layer: X·W with X = Â·H sparse (its
+    /// density follows `c_density`), W dense — gather-GEMM work scales
+    /// with nnz(X), not V·f.
+    pub fn combine_flops(&self) -> u64 {
+        let nnz_x = self.c_bytes() / 8;
+        2 * nnz_x * self.feat_dim
+    }
+
+    /// Average bytes of one CSR A row (vals+colidx).
+    pub fn avg_row_bytes(&self) -> f64 {
+        self.a_nnz as f64 / self.vertices as f64 * 8.0
+    }
+
+    /// A-stream passes per epoch (fwd + bwd per layer).
+    pub fn cycles(&self) -> u64 {
+        2 * self.layers as u64
+    }
+}
+
+/// Outcome of one simulated epoch.
+#[derive(Debug, Clone)]
+pub struct EpochResult {
+    pub scheduler: &'static str,
+    pub workload: String,
+    /// End-to-end per-epoch latency (the paper's headline metric), or
+    /// `None` if the scheduler hit OOM ('-' rows in Table III).
+    pub makespan_s: Option<f64>,
+    /// Why the run OOMed, when it did.
+    pub oom: Option<String>,
+    pub io: IoStats,
+    /// Peak GPU bytes the schedule required.
+    pub gpu_peak_bytes: u64,
+    /// Full op log (drives `memsim::trace::chrome_trace` and debugging).
+    pub log: Vec<OpRecord>,
+}
+
+impl EpochResult {
+    pub fn oom(scheduler: &'static str, workload: &Workload, why: String) -> Self {
+        EpochResult {
+            scheduler,
+            workload: workload.name.clone(),
+            makespan_s: None,
+            oom: Some(why),
+            io: IoStats::default(),
+            gpu_peak_bytes: 0,
+            log: Vec::new(),
+        }
+    }
+
+    pub fn ok(scheduler: &'static str, workload: &Workload, sim: &Sim, peak: u64) -> Self {
+        EpochResult {
+            scheduler,
+            workload: workload.name.clone(),
+            makespan_s: Some(sim.makespan()),
+            oom: None,
+            io: IoStats::from_sim(sim),
+            gpu_peak_bytes: peak,
+            log: sim.log.clone(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Calibration constants (single source; see DESIGN.md §Simulator cost model).
+// The OOM fractions reproduce the Table III feasibility boundaries: the
+// paper's static allocators reserve most of the full working set (req),
+// while ETC's batching lowers the resident minimum and AIRES needs only
+// B + one RoBW block + the modelled output working set.
+// ---------------------------------------------------------------------------
+
+/// Minimum GPU residency of the static allocators (MaxMemory, UCG) as a
+/// fraction of the total working set.
+pub const STATIC_MIN_FRAC: f64 = 0.84;
+/// Minimum GPU residency of ETC's batched allocator.
+pub const ETC_MIN_FRAC: f64 = 0.72;
+/// Pageable (non-pinned) memcpy bandwidth penalty (MaxMemory lacks DMA).
+pub const PAGEABLE_BW_FRAC: f64 = 0.8;
+/// Max simulator ops per stream (real segment counts can reach 1e5 on
+/// paper-scale graphs; ops are coalesced to keep the log compact while
+/// preserving totals).
+pub const MAX_STREAM_OPS: usize = 64;
+
+/// Split `total` bytes into at most `max_ops` near-equal chunks.
+pub(crate) fn chunks(total: u64, n: usize) -> Vec<u64> {
+    if total == 0 {
+        return Vec::new();
+    }
+    let n = n.max(1) as u64;
+    let base = total / n;
+    let mut rem = total % n;
+    (0..n)
+        .map(|_| {
+            let extra = if rem > 0 { rem -= 1; 1 } else { 0 };
+            base + extra
+        })
+        .filter(|&b| b > 0)
+        .collect()
+}
+
+/// A scheduling policy under evaluation.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+    /// Table I row for this policy.
+    fn features(&self) -> Features;
+    /// Simulate one training epoch.
+    fn run_epoch(&self, w: &Workload, cm: &CostModel) -> EpochResult;
+}
+
+/// All four policies in the paper's comparison order.
+pub fn all_schedulers() -> Vec<Box<dyn Scheduler>> {
+    vec![Box::new(MaxMemory), Box::new(Ucg), Box::new(Etc), Box::new(Aires)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graphgen::catalog::by_name;
+
+    #[test]
+    fn workload_from_catalog_carries_table2() {
+        let d = by_name("kV1r").unwrap();
+        let w = Workload::from_catalog(d, 256, 1);
+        assert_eq!(w.vertices, 214_000_000);
+        assert_eq!(w.a_nnz, 2 * 465_410_000);
+        assert_eq!(w.gpu_mem_bytes, 23_000_000_000);
+        // Calibrated C: req − A − B must be positive for every dataset.
+        for d in crate::graphgen::CATALOG.iter() {
+            let w = Workload::from_catalog(d, 256, 1);
+            assert!(w.c_bytes() > 0, "{}", d.name);
+            assert!(w.req_bytes() > w.gpu_mem_bytes, "{} must be out-of-core", d.name);
+        }
+    }
+
+    #[test]
+    fn c_density_increases_with_degree() {
+        let mut w = Workload::from_catalog(by_name("rUSA").unwrap(), 256, 1);
+        w.memory_req_bytes = None;
+        let sparse_c = w.c_density();
+        let mut w2 = Workload::from_catalog(by_name("socLJ1").unwrap(), 256, 1);
+        w2.memory_req_bytes = None;
+        assert!(w2.c_density() > sparse_c, "denser graph -> denser output");
+    }
+
+    #[test]
+    fn flops_scale_with_feat_dim() {
+        let d = by_name("kP1a").unwrap();
+        let w64 = {
+            let mut w = Workload::from_catalog(d, 64, 1);
+            w.memory_req_bytes = None;
+            w
+        };
+        let w256 = {
+            let mut w = Workload::from_catalog(d, 256, 1);
+            w.memory_req_bytes = None;
+            w
+        };
+        assert!(w256.spgemm_flops() > 3 * w64.spgemm_flops());
+    }
+
+    #[test]
+    fn table1_feature_matrix() {
+        // Exactly the paper's Table I.
+        let m = MaxMemory.features();
+        assert!(!m.alignment && !m.dual_way && !m.co_design);
+        let u = Ucg.features();
+        assert!(!u.alignment && !u.dma && u.um_reads && !u.dual_way && !u.co_design);
+        let e = Etc.features();
+        assert!(!e.alignment && e.dma && !e.um_reads && !e.dual_way && !e.co_design);
+        let a = Aires.features();
+        assert!(a.alignment && a.dma && !a.um_reads && a.dual_way && a.co_design);
+    }
+}

@@ -1,0 +1,171 @@
+//! UCG baseline (Lin, Deng & Prasanna, CF'24 — paper ref [22]): "a unified
+//! CPU-GPU protocol [...] dynamically balancing the workload between CPU
+//! and GPU", with GPU feature caching, unified shared memory and
+//! communication/computation overlap.
+//!
+//! Behavioural model (Table I row: UM reads, no DMA, no alignment, no
+//! dual-way): operands are accessed through CUDA unified memory — fault-
+//! driven migration at UM bandwidth with per-burst latency and an
+//! oversubscription amplification when the working set exceeds the
+//! constraint; a slice of the SpGEMM runs on the CPU concurrently; feature
+//! reads hit a GPU-resident cache when it fits.
+
+use super::{chunks, EpochResult, Features, Scheduler, Workload, STATIC_MIN_FRAC};
+use crate::memsim::{CostModel, GpuMem, Op, Sim};
+
+/// Marker type implementing the UCG policy.
+pub struct Ucg;
+
+/// Fraction of SpGEMM work offloaded to the CPU (UCG's dynamic balancing
+/// settles near the CPU/GPU throughput ratio for sparse kernels).
+const CPU_SHARE: f64 = 0.12;
+/// GPU memory share UCG dedicates to the feature cache.
+const CACHE_SHARE: f64 = 0.25;
+/// Extra UM traffic per unit of oversubscription (fault thrashing).
+const THRASH_GAIN: f64 = 0.35;
+/// UM pipeline depth (chunks in flight).
+const UM_CHUNKS: usize = 48;
+
+impl Scheduler for Ucg {
+    fn name(&self) -> &'static str {
+        "UCG"
+    }
+
+    fn features(&self) -> Features {
+        Features { alignment: false, dma: false, um_reads: true, dual_way: false, co_design: false }
+    }
+
+    fn run_epoch(&self, w: &Workload, cm: &CostModel) -> EpochResult {
+        // UM does not remove the resident minimum: UCG's allocator still
+        // pins most of the working set (same static fraction as MaxMemory;
+        // the paper's Table III shows identical OOM boundaries).
+        let min_resident = (w.req_bytes() as f64 * STATIC_MIN_FRAC) as u64;
+        if w.gpu_mem_bytes < min_resident {
+            return EpochResult::oom(
+                self.name(),
+                w,
+                format!("UM residency {} exceeds constraint {}", min_resident, w.gpu_mem_bytes),
+            );
+        }
+        let mut mem = GpuMem::new(w.gpu_mem_bytes);
+        mem.alloc(min_resident, "UM working set").expect("checked above");
+
+        let mut sim = Sim::new();
+        let a = w.a_bytes();
+        let b = w.b_bytes();
+        let c = w.c_bytes();
+
+        // Steady-state epoch: A stays in unified host memory; the feature
+        // panel is re-faulted from storage each epoch.
+        let mut loaded = 0.0f64;
+        for ch in chunks(b, 4) {
+            loaded = sim.transfer(cm, Op::NvmeToHost, ch, loaded, "B from NVMe");
+        }
+
+        // Feature cache: hits skip UM migration.
+        let cache_bytes = ((w.gpu_mem_bytes as f64) * CACHE_SHARE) as u64;
+        let cache_frac = (cache_bytes as f64 / b as f64).min(1.0);
+
+        // Oversubscription amplification.
+        let oversub = (w.req_bytes() as f64 / w.gpu_mem_bytes as f64 - 1.0).max(0.0);
+        let amp = 1.0 + THRASH_GAIN * oversub.min(1.0);
+
+        let flops = w.spgemm_flops();
+        let gpu_flops = ((flops as f64) * (1.0 - CPU_SHARE)) as u64;
+        let cpu_flops = ((flops as f64) * CPU_SHARE) as u64;
+
+        let mut t = loaded;
+        for cycle in 0..w.cycles() {
+            // UM traffic this cycle: A + uncached B (features on even
+            // cycles, gradients on odd) + the share of C that thrashes.
+            let b_cycle = if cycle % 2 == 0 {
+                ((b as f64) * (1.0 - cache_frac)) as u64
+            } else {
+                c
+            };
+            let um_bytes = ((a + b_cycle + c / 2) as f64 * amp) as u64;
+            let um = chunks(um_bytes, UM_CHUNKS);
+            let flops_chunk = gpu_flops / um.len().max(1) as u64;
+            let bytes_chunk = (a + b + c) / um.len().max(1) as u64;
+            // CPU share runs concurrently with the whole cycle.
+            sim.cpu_compute(cm, cpu_flops, t, "CPU share");
+            let mut kernel_done = t;
+            for ch in um {
+                // Overlapped: fault burst for chunk i+1 proceeds while the
+                // kernel for chunk i runs (different resources).
+                let fault = sim.transfer(cm, Op::UmFault, ch, t, "UM migrate");
+                kernel_done =
+                    sim.gpu_kernel(cm, flops_chunk, bytes_chunk, kernel_done.max(fault), "SpGEMM");
+            }
+            t = sim.gpu_dense(cm, w.combine_flops(), kernel_done, "combine");
+        }
+        let _ = t;
+
+        EpochResult::ok(self.name(), w, &sim, mem.peak)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graphgen::catalog::by_name;
+
+    fn wl(name: &str) -> Workload {
+        Workload::from_catalog(by_name(name).unwrap(), 256, 1)
+    }
+
+    #[test]
+    fn runs_at_table2_constraints() {
+        let cm = CostModel::default();
+        for d in crate::graphgen::CATALOG.iter() {
+            let w = Workload::from_catalog(d, 256, 1);
+            assert!(Ucg.run_epoch(&w, &cm).oom.is_none(), "{}", d.name);
+        }
+    }
+
+    #[test]
+    fn ooms_like_maxmemory_in_table3() {
+        let cm = CostModel::default();
+        for (name, cap_gb) in [("kV1r", 21.0), ("kP1a", 14.0), ("socLJ1", 10.0)] {
+            let mut w = wl(name);
+            w.gpu_mem_bytes = (cap_gb * 1e9) as u64;
+            assert!(Ucg.run_epoch(&w, &cm).oom.is_some(), "{name}@{cap_gb}GB");
+        }
+    }
+
+    #[test]
+    fn traffic_is_um_not_memcpy() {
+        let cm = CostModel::default();
+        let r = Ucg.run_epoch(&wl("kP1a"), &cm);
+        assert!(r.io.get("UM").bytes > 0);
+        assert_eq!(r.io.get("HtoD").bytes, 0, "UCG reads via UM, not cudaMemcpy");
+        assert_eq!(r.io.gpu_ssd_bytes(), 0, "no GDS");
+    }
+
+    #[test]
+    fn cpu_share_overlaps() {
+        let cm = CostModel::default();
+        let r = Ucg.run_epoch(&wl("kU1a"), &cm);
+        assert!(r.io.get("CpuCompute").secs > 0.0);
+    }
+
+    #[test]
+    fn um_amplification_under_pressure() {
+        // Tighter memory -> more UM traffic for the same workload.
+        let cm = CostModel::default();
+        let d = by_name("kU1a").unwrap();
+        let w_loose = {
+            let mut w = Workload::from_catalog(d, 256, 1);
+            w.gpu_mem_bytes = (7.9 * 1e9) as u64;
+            w
+        };
+        let w_tight = {
+            let mut w = Workload::from_catalog(d, 256, 1);
+            w.gpu_mem_bytes = (7.0 * 1e9) as u64;
+            w
+        };
+        let loose = Ucg.run_epoch(&w_loose, &cm);
+        let tight = Ucg.run_epoch(&w_tight, &cm);
+        assert!(tight.io.get("UM").bytes > loose.io.get("UM").bytes);
+    }
+}

@@ -1,0 +1,416 @@
+//! Block-sparse (BSR-like) extraction: the bridge between RoBW-aligned CSR
+//! segments and the fixed-shape `bsr_spmm` accelerator artifact.
+//!
+//! A RoBW segment (complete rows only — paper §III-A) is regridded into
+//! `bm x bk` tiles; only tiles containing non-zeros are materialized. The
+//! artifact has a static tile budget `NB` per row block, so row blocks with
+//! more non-zero tiles are split across multiple artifact invocations and
+//! accumulated — the Rust-side analogue of looping a CUDA kernel over tiles.
+
+use super::{Csr, IDX_BYTES, VAL_BYTES};
+
+/// One row block: the dense non-zero tiles covering rows
+/// `[block_row*bm, (block_row+1)*bm)`.
+#[derive(Debug, Clone)]
+pub struct BsrRowBlock {
+    pub block_row: usize,
+    /// Block-column index of each stored tile (sorted ascending).
+    pub colidx: Vec<u32>,
+    /// Flat row-major `bm*bk` payloads, tile `t` at `t*bm*bk..` (one
+    /// allocation per row block — §Perf: per-tile Vecs cost 10x here).
+    pub tiles: Vec<f32>,
+}
+
+impl BsrRowBlock {
+    /// Dense payload of tile `t`.
+    #[inline]
+    pub fn tile(&self, t: usize, bm: usize, bk: usize) -> &[f32] {
+        &self.tiles[t * bm * bk..(t + 1) * bm * bk]
+    }
+}
+
+/// Block-sparse matrix with uniform `bm x bk` tiles.
+#[derive(Debug, Clone)]
+pub struct Bsr {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub bm: usize,
+    pub bk: usize,
+    /// ceil(nrows / bm) row blocks, in order.
+    pub row_blocks: Vec<BsrRowBlock>,
+}
+
+impl Bsr {
+    /// Extract tiles from CSR. Rows/cols beyond the matrix edge are
+    /// zero-padded inside the boundary tiles (the artifact shapes are
+    /// uniform).
+    pub fn from_csr(a: &Csr, bm: usize, bk: usize) -> Bsr {
+        assert!(bm > 0 && bk > 0);
+        let nrb = a.nrows.div_ceil(bm);
+        let mut row_blocks = Vec::with_capacity(nrb);
+        for rb in 0..nrb {
+            let rlo = rb * bm;
+            let rhi = (rlo + bm).min(a.nrows);
+            // Pass 1: which block columns are touched?
+            let mut touched: Vec<u32> = Vec::new();
+            for r in rlo..rhi {
+                for (c, _) in a.row(r) {
+                    let bc = c / bk as u32;
+                    if !touched.contains(&bc) {
+                        touched.push(bc);
+                    }
+                }
+            }
+            touched.sort_unstable();
+            // Pass 2: scatter values into one flat, zeroed payload buffer.
+            let mut tiles = vec![0f32; touched.len() * bm * bk];
+            for r in rlo..rhi {
+                for (c, v) in a.row(r) {
+                    let bc = c / bk as u32;
+                    let t = touched.binary_search(&bc).unwrap();
+                    let lr = r - rlo;
+                    let lc = c as usize - bc as usize * bk;
+                    tiles[t * bm * bk + lr * bk + lc] = v;
+                }
+            }
+            row_blocks.push(BsrRowBlock { block_row: rb, colidx: touched, tiles });
+        }
+        Bsr { nrows: a.nrows, ncols: a.ncols, bm, bk, row_blocks }
+    }
+
+    /// Total stored (non-zero) tiles.
+    pub fn ntiles(&self) -> usize {
+        self.row_blocks.iter().map(|rb| rb.colidx.len()).sum()
+    }
+
+    /// Number of block columns (ceil(ncols / bk)).
+    pub fn nblock_cols(&self) -> usize {
+        self.ncols.div_ceil(self.bk)
+    }
+
+    /// In-memory footprint: dense tile payloads + block column ids.
+    pub fn size_bytes(&self) -> u64 {
+        self.ntiles() as u64 * (self.bm * self.bk) as u64 * VAL_BYTES
+            + self.ntiles() as u64 * IDX_BYTES
+    }
+
+    /// Fill ratio of stored tiles (nnz / stored tile capacity) — the
+    /// quantity that decides whether a block shape wastes MXU work.
+    pub fn tile_fill_ratio(&self, nnz: usize) -> f64 {
+        let cap = self.ntiles() * self.bm * self.bk;
+        if cap == 0 {
+            return 0.0;
+        }
+        nnz as f64 / cap as f64
+    }
+
+    /// Reconstruct the dense matrix (tests only).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.nrows * self.ncols];
+        for rb in &self.row_blocks {
+            for (t, &bc) in rb.colidx.iter().enumerate() {
+                for lr in 0..self.bm {
+                    let r = rb.block_row * self.bm + lr;
+                    if r >= self.nrows {
+                        break;
+                    }
+                    for lc in 0..self.bk {
+                        let c = bc as usize * self.bk + lc;
+                        if c >= self.ncols {
+                            break;
+                        }
+                        let v = rb.tile(t, self.bm, self.bk)[lr * self.bk + lc];
+                        if v != 0.0 {
+                            out[r * self.ncols + c] = v;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// A padded batch ready for one `bsr_spmm` artifact call: exactly `r`
+/// row-block slots and `nb` tile slots each, zero-padded, with the valid
+/// count carried per slot. Produced by [`pack_artifact_batches`].
+#[derive(Debug, Clone)]
+pub struct SpmmBatch {
+    /// Artifact grid rows; each entry is the global block_row this slot
+    /// accumulates into (slots may repeat a block_row when it overflows NB).
+    pub slot_block_row: Vec<usize>,
+    /// s32[r] valid tile counts.
+    pub nblk: Vec<i32>,
+    /// s32[r * nb] block-column indices (padded with 0).
+    pub colidx: Vec<i32>,
+    /// f32[r * nb * bm * bk] tile payloads (padded with 0).
+    pub blocks: Vec<f32>,
+}
+
+/// Pack a BSR matrix into fixed-shape batches for the `bsr_spmm_{r,nb,bm,bk}`
+/// artifact. Row blocks with more than `nb` tiles are split across slots;
+/// the executor accumulates slot outputs by `slot_block_row`.
+pub fn pack_artifact_batches(bsr: &Bsr, r: usize, nb: usize) -> Vec<SpmmBatch> {
+    let bm = bsr.bm;
+    let bk = bsr.bk;
+    // Expand row blocks into (block_row, tile-range) chunks of <= nb tiles.
+    let mut chunks: Vec<(usize, usize, usize)> = Vec::new(); // (rb index, lo, hi)
+    for (i, rb) in bsr.row_blocks.iter().enumerate() {
+        if rb.colidx.is_empty() {
+            continue; // all-zero row block: output rows are zero, skip
+        }
+        let mut lo = 0;
+        while lo < rb.colidx.len() {
+            let hi = (lo + nb).min(rb.colidx.len());
+            chunks.push((i, lo, hi));
+            lo = hi;
+        }
+    }
+    let mut batches = Vec::new();
+    for group in chunks.chunks(r) {
+        let mut batch = SpmmBatch {
+            slot_block_row: Vec::with_capacity(r),
+            nblk: vec![0i32; r],
+            colidx: vec![0i32; r * nb],
+            blocks: vec![0f32; r * nb * bm * bk],
+        };
+        for (slot, &(rbi, lo, hi)) in group.iter().enumerate() {
+            let rb = &bsr.row_blocks[rbi];
+            batch.slot_block_row.push(rb.block_row);
+            batch.nblk[slot] = (hi - lo) as i32;
+            // Contiguous source tiles: one memcpy per slot, not per tile.
+            for (j, t) in (lo..hi).enumerate() {
+                batch.colidx[slot * nb + j] = rb.colidx[t] as i32;
+            }
+            let dst = slot * nb * bm * bk;
+            let src = &rb.tiles[lo * bm * bk..hi * bm * bk];
+            batch.blocks[dst..dst + src.len()].copy_from_slice(src);
+        }
+        // Unused slots keep nblk = 0 and map to no block_row.
+        batches.push(batch);
+    }
+    batches
+}
+
+/// Fused extraction + packing: build `SpmmBatch`es straight from CSR
+/// without materializing an intermediate [`Bsr`] (§Perf: the two-step path
+/// writes every padded tile payload twice; on hypersparse segments the
+/// padding is ~1000x the nnz volume, so halving the writes halves the
+/// bridge cost). Semantically identical to
+/// `pack_artifact_batches(&Bsr::from_csr(a, bm, bk), r, nb)`.
+pub fn pack_csr_batches(a: &Csr, bm: usize, bk: usize, r: usize, nb: usize) -> Vec<SpmmBatch> {
+    assert!(bm > 0 && bk > 0);
+    let nrb = a.nrows.div_ceil(bm);
+    // Pass 1: per row block, the sorted touched block-column list.
+    let mut touched_all: Vec<Vec<u32>> = Vec::with_capacity(nrb);
+    for rbi in 0..nrb {
+        let rlo = rbi * bm;
+        let rhi = (rlo + bm).min(a.nrows);
+        let mut touched: Vec<u32> = Vec::new();
+        for row in rlo..rhi {
+            for (c, _) in a.row(row) {
+                touched.push(c / bk as u32);
+            }
+        }
+        touched.sort_unstable();
+        touched.dedup();
+        touched_all.push(touched);
+    }
+    // Assign (row block, tile chunk) -> global slot, allocate batches.
+    // chunk_of[rbi] = (first global slot, #chunks).
+    let mut chunk_start = Vec::with_capacity(nrb);
+    let mut nslots = 0usize;
+    for touched in &touched_all {
+        chunk_start.push(nslots);
+        nslots += touched.len().div_ceil(nb);
+    }
+    let nbatches = nslots.div_ceil(r).max(1);
+    let mut batches: Vec<SpmmBatch> = (0..nbatches)
+        .map(|_| SpmmBatch {
+            slot_block_row: Vec::with_capacity(r),
+            nblk: vec![0i32; r],
+            colidx: vec![0i32; r * nb],
+            blocks: vec![0f32; r * nb * bm * bk],
+        })
+        .collect();
+    // Fill metadata (slot -> block row, counts, colidx).
+    for (rbi, touched) in touched_all.iter().enumerate() {
+        let nchunks = touched.len().div_ceil(nb);
+        for ch in 0..nchunks {
+            let slot = chunk_start[rbi] + ch;
+            let (bi, si) = (slot / r, slot % r);
+            let lo = ch * nb;
+            let hi = (lo + nb).min(touched.len());
+            debug_assert_eq!(batches[bi].slot_block_row.len(), si);
+            batches[bi].slot_block_row.push(rbi);
+            batches[bi].nblk[si] = (hi - lo) as i32;
+            for (j, t) in (lo..hi).enumerate() {
+                batches[bi].colidx[si * nb + j] = touched[t] as i32;
+            }
+        }
+    }
+    // Pass 2: scatter values directly into the (already zeroed) batch
+    // payload buffers — each nnz is written exactly once.
+    for (rbi, touched) in touched_all.iter().enumerate() {
+        let rlo = rbi * bm;
+        let rhi = (rlo + bm).min(a.nrows);
+        for row in rlo..rhi {
+            let lr = row - rlo;
+            for (c, v) in a.row(row) {
+                let bc = c / bk as u32;
+                let t = touched.binary_search(&bc).unwrap();
+                let slot = chunk_start[rbi] + t / nb;
+                let j = t % nb;
+                let (bi, si) = (slot / r, slot % r);
+                let lc = c as usize - bc as usize * bk;
+                batches[bi].blocks[(si * nb + j) * bm * bk + lr * bk + lc] = v;
+            }
+        }
+    }
+    batches
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+    use crate::util::rng::Pcg;
+
+    fn random_csr(rng: &mut Pcg, nrows: usize, ncols: usize, density: f64) -> Csr {
+        let mut coo = Coo::new(nrows, ncols);
+        for r in 0..nrows {
+            for c in 0..ncols {
+                if rng.chance(density) {
+                    coo.push(r as u32, c as u32, rng.normal() as f32);
+                }
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn bsr_roundtrip_dense() {
+        let mut rng = Pcg::seed(31);
+        for &(m, n, bm, bk) in &[(16usize, 16usize, 4usize, 4usize), (17, 13, 4, 8), (5, 5, 8, 8)] {
+            let a = random_csr(&mut rng, m, n, 0.2);
+            let bsr = Bsr::from_csr(&a, bm, bk);
+            assert_eq!(bsr.to_dense(), a.to_dense(), "shape ({m},{n}) tiles ({bm},{bk})");
+        }
+    }
+
+    #[test]
+    fn empty_matrix_has_no_tiles() {
+        let a = Csr::empty(8, 8);
+        let bsr = Bsr::from_csr(&a, 4, 4);
+        assert_eq!(bsr.ntiles(), 0);
+        assert_eq!(bsr.row_blocks.len(), 2);
+    }
+
+    #[test]
+    fn tile_count_reflects_structure() {
+        // Single diagonal: one tile per row block.
+        let mut coo = Coo::new(16, 16);
+        for i in 0..16 {
+            coo.push(i, i, 1.0);
+        }
+        let bsr = Bsr::from_csr(&coo.to_csr(), 4, 4);
+        assert_eq!(bsr.ntiles(), 4);
+        for rb in &bsr.row_blocks {
+            assert_eq!(rb.colidx, vec![rb.block_row as u32]);
+        }
+    }
+
+    #[test]
+    fn pack_splits_overflowing_row_blocks() {
+        // Dense row => many tiles in one row block.
+        let mut coo = Coo::new(4, 64);
+        for c in 0..64 {
+            coo.push(0, c, 1.0);
+        }
+        let bsr = Bsr::from_csr(&coo.to_csr(), 4, 4); // 16 tiles in block 0
+        let batches = pack_artifact_batches(&bsr, 2, 4); // nb=4 -> 4 chunks, r=2 -> 2 batches
+        assert_eq!(batches.len(), 2);
+        let total_valid: i32 = batches.iter().flat_map(|b| b.nblk.iter()).sum();
+        assert_eq!(total_valid, 16);
+        for b in &batches {
+            for &br in &b.slot_block_row {
+                assert_eq!(br, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn pack_then_cpu_execute_matches_spmm() {
+        // Emulate the artifact semantics on CPU and compare against spmm.
+        use crate::sparse::spmm::{spmm, Dense};
+        let mut rng = Pcg::seed(33);
+        let a = random_csr(&mut rng, 24, 32, 0.15);
+        let h = Dense::from_vec(
+            32,
+            5,
+            (0..32 * 5).map(|_| rng.normal() as f32).collect(),
+        );
+        let bm = 8;
+        let bk = 8;
+        let bsr = Bsr::from_csr(&a, bm, bk);
+        let batches = pack_artifact_batches(&bsr, 2, 2);
+        let mut out = Dense::zeros(24, 5);
+        for b in &batches {
+            for (slot, &brow) in b.slot_block_row.iter().enumerate() {
+                for j in 0..b.nblk[slot] as usize {
+                    let bc = b.colidx[slot * 2 + j] as usize;
+                    let tile = &b.blocks[(slot * 2 + j) * bm * bk..(slot * 2 + j + 1) * bm * bk];
+                    for lr in 0..bm {
+                        let r = brow * bm + lr;
+                        if r >= 24 {
+                            break;
+                        }
+                        for lc in 0..bk {
+                            let k = bc * bk + lc;
+                            if k >= 32 {
+                                break;
+                            }
+                            let av = tile[lr * bk + lc];
+                            if av == 0.0 {
+                                continue;
+                            }
+                            for f in 0..5 {
+                                *out.at_mut(r, f) += av * h.at(k, f);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let want = spmm(&a, &h);
+        assert!(out.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn fused_pack_equals_two_step() {
+        let mut rng = Pcg::seed(35);
+        for &(m, n, bm, bk, r, nb) in
+            &[(64usize, 128usize, 8usize, 8usize, 4usize, 3usize), (33, 70, 16, 8, 2, 5), (10, 10, 4, 4, 8, 16)]
+        {
+            let a = random_csr(&mut rng, m, n, 0.1);
+            let two_step = pack_artifact_batches(&Bsr::from_csr(&a, bm, bk), r, nb);
+            let fused = pack_csr_batches(&a, bm, bk, r, nb);
+            assert_eq!(two_step.len(), fused.len());
+            for (x, y) in two_step.iter().zip(fused.iter()) {
+                assert_eq!(x.slot_block_row, y.slot_block_row);
+                assert_eq!(x.nblk, y.nblk);
+                assert_eq!(x.colidx, y.colidx);
+                assert_eq!(x.blocks, y.blocks);
+            }
+        }
+    }
+
+    #[test]
+    fn fill_ratio_bounds() {
+        let mut rng = Pcg::seed(34);
+        let a = random_csr(&mut rng, 32, 32, 0.1);
+        let bsr = Bsr::from_csr(&a, 8, 8);
+        let fill = bsr.tile_fill_ratio(a.nnz());
+        assert!(fill > 0.0 && fill <= 1.0);
+    }
+}

@@ -1,0 +1,84 @@
+//! Coordinate (COO) format: the construction/interchange format the graph
+//! generators emit before conversion to CSR/CSC.
+
+use super::Csr;
+
+/// COO triplet list. Duplicates are summed on conversion (graph generators
+/// may emit the same edge twice).
+#[derive(Debug, Clone, Default)]
+pub struct Coo {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub entries: Vec<(u32, u32, f32)>,
+}
+
+impl Coo {
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        Coo { nrows, ncols, entries: Vec::new() }
+    }
+
+    #[inline]
+    pub fn push(&mut self, r: u32, c: u32, v: f32) {
+        debug_assert!((r as usize) < self.nrows && (c as usize) < self.ncols);
+        self.entries.push((r, c, v));
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Convert to CSR, sorting and summing duplicate coordinates.
+    pub fn to_csr(&self) -> Csr {
+        let mut entries = self.entries.clone();
+        entries.sort_unstable_by_key(|&(r, c, _)| ((r as u64) << 32) | c as u64);
+        let mut rowptr = vec![0usize; self.nrows + 1];
+        let mut colidx: Vec<u32> = Vec::with_capacity(entries.len());
+        let mut vals: Vec<f32> = Vec::with_capacity(entries.len());
+        let mut last: Option<(u32, u32)> = None;
+        for (r, c, v) in entries {
+            if last == Some((r, c)) {
+                *vals.last_mut().unwrap() += v;
+            } else {
+                colidx.push(c);
+                vals.push(v);
+                rowptr[r as usize + 1] += 1;
+                last = Some((r, c));
+            }
+        }
+        for i in 0..self.nrows {
+            rowptr[i + 1] += rowptr[i];
+        }
+        Csr { nrows: self.nrows, ncols: self.ncols, rowptr, colidx, vals }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn to_csr_sorts_and_dedups() {
+        let mut coo = Coo::new(3, 3);
+        coo.push(2, 1, 1.0);
+        coo.push(0, 0, 2.0);
+        coo.push(2, 1, 3.0); // duplicate -> summed
+        coo.push(0, 2, 4.0);
+        let csr = coo.to_csr();
+        csr.validate().unwrap();
+        assert_eq!(csr.nnz(), 3);
+        let row0: Vec<(u32, f32)> = csr.row(0).collect();
+        assert_eq!(row0, vec![(0, 2.0), (2, 4.0)]);
+        let row2: Vec<(u32, f32)> = csr.row(2).collect();
+        assert_eq!(row2, vec![(1, 4.0)]);
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let mut coo = Coo::new(4, 4);
+        coo.push(3, 0, 1.0);
+        let csr = coo.to_csr();
+        csr.validate().unwrap();
+        assert_eq!(csr.row_nnz(0), 0);
+        assert_eq!(csr.row_nnz(3), 1);
+    }
+}

@@ -1,0 +1,148 @@
+//! Compressed sparse column (CSC) matrix (paper Fig. 2, matrix B's format).
+
+use super::{Csr, IDX_BYTES, PTR_BYTES, VAL_BYTES};
+
+/// CSC matrix: `colptr[j]..colptr[j+1]` indexes the non-zeros of column `j`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csc {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// len ncols + 1, monotone, last entry == nnz.
+    pub colptr: Vec<usize>,
+    /// len nnz; row index per non-zero, sorted within each column.
+    pub rowidx: Vec<u32>,
+    /// len nnz.
+    pub vals: Vec<f32>,
+}
+
+impl Csc {
+    pub fn empty(nrows: usize, ncols: usize) -> Self {
+        Csc { nrows, ncols, colptr: vec![0; ncols + 1], rowidx: Vec::new(), vals: Vec::new() }
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.rowidx.len()
+    }
+
+    /// (row, value) iterator over column `j`.
+    pub fn col(&self, j: usize) -> impl Iterator<Item = (u32, f32)> + '_ {
+        let lo = self.colptr[j];
+        let hi = self.colptr[j + 1];
+        self.rowidx[lo..hi].iter().copied().zip(self.vals[lo..hi].iter().copied())
+    }
+
+    /// Sparsity percentage (paper's s_B).
+    pub fn sparsity_pct(&self) -> f64 {
+        let total = self.nrows as f64 * self.ncols as f64;
+        if total == 0.0 {
+            return 100.0;
+        }
+        100.0 * (1.0 - self.nnz() as f64 / total)
+    }
+
+    /// Paper Eq. (6): M_B = value bytes + column-offset bytes + row-id bytes.
+    pub fn size_bytes(&self) -> u64 {
+        self.nnz() as u64 * (VAL_BYTES + IDX_BYTES) + (self.ncols as u64 + 1) * PTR_BYTES
+    }
+
+    /// Convert to CSR (counting sort by row).
+    pub fn to_csr(&self) -> Csr {
+        let mut rowptr = vec![0usize; self.nrows + 1];
+        for &r in &self.rowidx {
+            rowptr[r as usize + 1] += 1;
+        }
+        for i in 0..self.nrows {
+            rowptr[i + 1] += rowptr[i];
+        }
+        let mut colidx = vec![0u32; self.nnz()];
+        let mut vals = vec![0f32; self.nnz()];
+        let mut next = rowptr.clone();
+        for j in 0..self.ncols {
+            for (r, v) in self.col(j) {
+                let dst = next[r as usize];
+                colidx[dst] = j as u32;
+                vals[dst] = v;
+                next[r as usize] += 1;
+            }
+        }
+        Csr { nrows: self.nrows, ncols: self.ncols, rowptr, colidx, vals }
+    }
+
+    /// Dense row-major materialization (tests only).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.nrows * self.ncols];
+        for j in 0..self.ncols {
+            for (r, v) in self.col(j) {
+                out[r as usize * self.ncols + j] = v;
+            }
+        }
+        out
+    }
+
+    /// Structural invariant check (mirror of `Csr::validate`).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.colptr.len() != self.ncols + 1 || self.colptr[0] != 0 {
+            return Err("bad colptr".into());
+        }
+        if *self.colptr.last().unwrap() != self.rowidx.len()
+            || self.rowidx.len() != self.vals.len()
+        {
+            return Err("nnz mismatch".into());
+        }
+        for w in self.colptr.windows(2) {
+            if w[1] < w[0] {
+                return Err("colptr not monotone".into());
+            }
+        }
+        for j in 0..self.ncols {
+            let col = &self.rowidx[self.colptr[j]..self.colptr[j + 1]];
+            for w in col.windows(2) {
+                if w[1] <= w[0] {
+                    return Err(format!("col {j} rows not strictly sorted"));
+                }
+            }
+            if let Some(&r) = col.last() {
+                if r as usize >= self.nrows {
+                    return Err(format!("col {j} row {r} out of bounds"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_matches_csr_dense() {
+        // 2x3: [[1,0,2],[0,3,0]]
+        let csr = Csr::new(2, 3, vec![0, 2, 3], vec![0, 2, 1], vec![1.0, 2.0, 3.0]).unwrap();
+        let csc = csr.to_csc();
+        csc.validate().unwrap();
+        assert_eq!(csr.to_dense(), csc.to_dense());
+        assert_eq!(csc.nnz(), 3);
+    }
+
+    #[test]
+    fn eq6_size_bytes() {
+        let csc = Csc {
+            nrows: 4,
+            ncols: 3,
+            colptr: vec![0, 1, 1, 2],
+            rowidx: vec![0, 3],
+            vals: vec![1.0, 2.0],
+        };
+        assert_eq!(csc.size_bytes(), 2 * 8 + 4 * 8);
+    }
+
+    #[test]
+    fn col_iterator() {
+        let csr = Csr::new(2, 2, vec![0, 2, 3], vec![0, 1, 1], vec![1.0, 2.0, 3.0]).unwrap();
+        let csc = csr.to_csc();
+        let col1: Vec<(u32, f32)> = csc.col(1).collect();
+        assert_eq!(col1, vec![(0, 2.0), (1, 3.0)]);
+    }
+}

@@ -1,0 +1,245 @@
+//! Compressed sparse row (CSR) matrix (paper Fig. 2, matrix A's format).
+
+use super::{Csc, IDX_BYTES, PTR_BYTES, VAL_BYTES};
+
+/// CSR matrix: `rowptr[i]..rowptr[i+1]` indexes the non-zeros of row `i`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// len nrows + 1, monotonically non-decreasing, last entry == nnz.
+    pub rowptr: Vec<usize>,
+    /// len nnz; column index per non-zero, sorted within each row.
+    pub colidx: Vec<u32>,
+    /// len nnz; value per non-zero.
+    pub vals: Vec<f32>,
+}
+
+impl Csr {
+    /// Empty matrix with the given shape.
+    pub fn empty(nrows: usize, ncols: usize) -> Self {
+        Csr { nrows, ncols, rowptr: vec![0; nrows + 1], colidx: Vec::new(), vals: Vec::new() }
+    }
+
+    /// Build from parts, validating the CSR invariants.
+    pub fn new(
+        nrows: usize,
+        ncols: usize,
+        rowptr: Vec<usize>,
+        colidx: Vec<u32>,
+        vals: Vec<f32>,
+    ) -> Result<Self, String> {
+        let m = Csr { nrows, ncols, rowptr, colidx, vals };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Check structural invariants; used by tests and the property suite.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.rowptr.len() != self.nrows + 1 {
+            return Err(format!("rowptr len {} != nrows+1 {}", self.rowptr.len(), self.nrows + 1));
+        }
+        if self.rowptr[0] != 0 {
+            return Err("rowptr[0] != 0".into());
+        }
+        if *self.rowptr.last().unwrap() != self.colidx.len() {
+            return Err("rowptr[-1] != nnz".into());
+        }
+        if self.colidx.len() != self.vals.len() {
+            return Err("colidx/vals length mismatch".into());
+        }
+        for w in self.rowptr.windows(2) {
+            if w[1] < w[0] {
+                return Err("rowptr not monotone".into());
+            }
+        }
+        for r in 0..self.nrows {
+            let row = &self.colidx[self.rowptr[r]..self.rowptr[r + 1]];
+            for w in row.windows(2) {
+                if w[1] <= w[0] {
+                    return Err(format!("row {r} columns not strictly sorted"));
+                }
+            }
+            if let Some(&c) = row.last() {
+                if c as usize >= self.ncols {
+                    return Err(format!("row {r} column {c} out of bounds"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.colidx.len()
+    }
+
+    /// Non-zeros in row `r`.
+    #[inline]
+    pub fn row_nnz(&self, r: usize) -> usize {
+        self.rowptr[r + 1] - self.rowptr[r]
+    }
+
+    /// (column, value) iterator over row `r`.
+    pub fn row(&self, r: usize) -> impl Iterator<Item = (u32, f32)> + '_ {
+        let lo = self.rowptr[r];
+        let hi = self.rowptr[r + 1];
+        self.colidx[lo..hi].iter().copied().zip(self.vals[lo..hi].iter().copied())
+    }
+
+    /// Sparsity as a percentage of zero elements (paper's s_A notation).
+    pub fn sparsity_pct(&self) -> f64 {
+        let total = self.nrows as f64 * self.ncols as f64;
+        if total == 0.0 {
+            return 100.0;
+        }
+        100.0 * (1.0 - self.nnz() as f64 / total)
+    }
+
+    /// In-memory footprint in bytes (values + column ids + row pointers) —
+    /// the quantity the paper's Table II "Memory Req." accounts per operand.
+    pub fn size_bytes(&self) -> u64 {
+        self.nnz() as u64 * (VAL_BYTES + IDX_BYTES) + (self.nrows as u64 + 1) * PTR_BYTES
+    }
+
+    /// Transpose into CSC (same buffers reinterpreted: CSC of A == CSR of Aᵀ).
+    pub fn to_csc(&self) -> Csc {
+        // Counting sort by column.
+        let mut colptr = vec![0usize; self.ncols + 1];
+        for &c in &self.colidx {
+            colptr[c as usize + 1] += 1;
+        }
+        for i in 0..self.ncols {
+            colptr[i + 1] += colptr[i];
+        }
+        let mut rowidx = vec![0u32; self.nnz()];
+        let mut vals = vec![0f32; self.nnz()];
+        let mut next = colptr.clone();
+        for r in 0..self.nrows {
+            for (c, v) in self.row(r) {
+                let dst = next[c as usize];
+                rowidx[dst] = r as u32;
+                vals[dst] = v;
+                next[c as usize] += 1;
+            }
+        }
+        Csc { nrows: self.nrows, ncols: self.ncols, colptr, rowidx, vals }
+    }
+
+    /// Dense row-major materialization (tests / small subgraphs only).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.nrows * self.ncols];
+        for r in 0..self.nrows {
+            for (c, v) in self.row(r) {
+                out[r * self.ncols + c as usize] = v;
+            }
+        }
+        out
+    }
+
+    /// Slice rows `[lo, hi)` into a new CSR (used by partitioners).
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Csr {
+        assert!(lo <= hi && hi <= self.nrows);
+        let base = self.rowptr[lo];
+        let end = self.rowptr[hi];
+        Csr {
+            nrows: hi - lo,
+            ncols: self.ncols,
+            rowptr: self.rowptr[lo..=hi].iter().map(|p| p - base).collect(),
+            colidx: self.colidx[base..end].to_vec(),
+            vals: self.vals[base..end].to_vec(),
+        }
+    }
+
+    /// Vertically concatenate row slices (inverse of `slice_rows`; the
+    /// "merge" operation the naive partitioner is forced to perform).
+    pub fn vstack(parts: &[Csr]) -> Result<Csr, String> {
+        if parts.is_empty() {
+            return Err("vstack of nothing".into());
+        }
+        let ncols = parts[0].ncols;
+        let mut rowptr = vec![0usize];
+        let mut colidx = Vec::new();
+        let mut vals = Vec::new();
+        let mut nrows = 0;
+        for p in parts {
+            if p.ncols != ncols {
+                return Err("vstack ncols mismatch".into());
+            }
+            let base = *rowptr.last().unwrap();
+            rowptr.extend(p.rowptr[1..].iter().map(|q| q + base));
+            colidx.extend_from_slice(&p.colidx);
+            vals.extend_from_slice(&p.vals);
+            nrows += p.nrows;
+        }
+        Csr::new(nrows, ncols, rowptr, colidx, vals)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+    use crate::util::rng::Pcg;
+
+    pub fn random_csr(rng: &mut Pcg, nrows: usize, ncols: usize, density: f64) -> Csr {
+        let mut coo = Coo::new(nrows, ncols);
+        for r in 0..nrows {
+            for c in 0..ncols {
+                if rng.chance(density) {
+                    coo.push(r as u32, c as u32, rng.normal() as f32);
+                }
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn validate_catches_bad_rowptr() {
+        let m = Csr { nrows: 2, ncols: 2, rowptr: vec![0, 2, 1], colidx: vec![0], vals: vec![1.0] };
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_unsorted_columns() {
+        let m = Csr {
+            nrows: 1,
+            ncols: 4,
+            rowptr: vec![0, 2],
+            colidx: vec![2, 1],
+            vals: vec![1.0, 2.0],
+        };
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn csc_roundtrip_preserves_entries() {
+        let mut rng = Pcg::seed(1);
+        let a = random_csr(&mut rng, 17, 13, 0.2);
+        let csc = a.to_csc();
+        let back = csc.to_csr();
+        assert_eq!(a, back);
+    }
+
+    #[test]
+    fn slice_then_vstack_is_identity() {
+        let mut rng = Pcg::seed(2);
+        let a = random_csr(&mut rng, 20, 9, 0.3);
+        let parts: Vec<Csr> =
+            vec![a.slice_rows(0, 7), a.slice_rows(7, 7), a.slice_rows(7, 15), a.slice_rows(15, 20)];
+        let merged = Csr::vstack(&parts).unwrap();
+        assert_eq!(a, merged);
+    }
+
+    #[test]
+    fn sparsity_pct() {
+        let m = Csr::new(2, 2, vec![0, 1, 1], vec![0], vec![1.0]).unwrap();
+        assert!((m.sparsity_pct() - 75.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn size_bytes_accounting() {
+        let m = Csr::new(2, 2, vec![0, 1, 1], vec![0], vec![1.0]).unwrap();
+        assert_eq!(m.size_bytes(), 1 * (4 + 4) + 3 * 8);
+    }
+}

@@ -1,0 +1,32 @@
+//! Sparse matrix substrate: formats, conversions, reference kernels.
+//!
+//! This is the foundation the paper's system sits on: CSR/CSC/COO containers
+//! (paper §II-B, Fig. 2), the Â = D^-1/2 (A+I) D^-1/2 normalization
+//! (Eqs. 1-2), a Gustavson SpGEMM that serves as the CPU correctness oracle
+//! for everything the accelerator path computes, and block-sparse (BSR)
+//! extraction feeding the RoBW-aligned tile pipeline.
+//!
+//! Index width: `u32` column/row ids (all paper datasets fit; 214 M < 2^32)
+//! with `usize` offset arrays, mirroring common sparse libraries.
+
+pub mod block;
+pub mod coo;
+pub mod csc;
+pub mod csr;
+pub mod norm;
+pub mod reorder;
+pub mod spgemm;
+pub mod spmm;
+
+pub use block::{Bsr, BsrRowBlock};
+pub use coo::Coo;
+pub use csc::Csc;
+pub use csr::Csr;
+
+/// Bytes per non-zero value (f32 payload).
+pub const VAL_BYTES: u64 = 4;
+/// Bytes per index entry (u32).
+pub const IDX_BYTES: u64 = 4;
+/// Bytes per offset-array entry. The paper's C++ implementation uses int
+/// row pointers; we account 8 bytes (usize) to be conservative.
+pub const PTR_BYTES: u64 = 8;

@@ -1,0 +1,102 @@
+//! GCN adjacency normalization (paper Eqs. 1-2):
+//! Â = D̂^{-1/2} (A + I) D̂^{-1/2}, with D̂ the degree matrix of A + I.
+
+use super::{Coo, Csr};
+
+/// Build the normalized augmented adjacency Â from a (square) adjacency A.
+/// Self-loops are added (A + I); existing self-loop values are summed with 1.
+pub fn normalize_adjacency(a: &Csr) -> Csr {
+    assert_eq!(a.nrows, a.ncols, "adjacency must be square");
+    let n = a.nrows;
+
+    // A + I in COO (cheap; conversion re-sorts + dedups).
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        coo.push(i as u32, i as u32, 1.0);
+        for (c, v) in a.row(i) {
+            coo.push(i as u32, c, v);
+        }
+    }
+    let a_hat = coo.to_csr();
+
+    // Degrees of A + I (row sums) -> D^-1/2.
+    let mut dinv_sqrt = vec![0f64; n];
+    for i in 0..n {
+        let deg: f64 = a_hat.row(i).map(|(_, v)| v as f64).sum();
+        dinv_sqrt[i] = if deg > 0.0 { 1.0 / deg.sqrt() } else { 0.0 };
+    }
+
+    // Scale each entry: Â[i,j] = dinv[i] * (A+I)[i,j] * dinv[j].
+    let mut out = a_hat;
+    for i in 0..n {
+        let (lo, hi) = (out.rowptr[i], out.rowptr[i + 1]);
+        for p in lo..hi {
+            let j = out.colidx[p] as usize;
+            out.vals[p] = (dinv_sqrt[i] * out.vals[p] as f64 * dinv_sqrt[j]) as f32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    fn ring(n: usize) -> Csr {
+        let mut coo = Coo::new(n, n);
+        for i in 0..n {
+            let j = (i + 1) % n;
+            coo.push(i as u32, j as u32, 1.0);
+            coo.push(j as u32, i as u32, 1.0);
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn symmetric_input_gives_symmetric_output() {
+        let a = ring(8);
+        let ah = normalize_adjacency(&a);
+        let d = ah.to_dense();
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!((d[i * 8 + j] - d[j * 8 + i]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn regular_graph_rows_sum_to_one() {
+        // k-regular + self loop: every row of Â sums to exactly 1.
+        let a = ring(10);
+        let ah = normalize_adjacency(&a);
+        for i in 0..10 {
+            let s: f32 = ah.row(i).map(|(_, v)| v).sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {i} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn isolated_node_keeps_unit_self_loop() {
+        let a = Csr::empty(3, 3);
+        let ah = normalize_adjacency(&a);
+        // A+I = I, degrees 1, Â = I.
+        let d = ah.to_dense();
+        for i in 0..3 {
+            for j in 0..3 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((d[i * 3 + j] - want).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn adds_self_loops() {
+        let a = ring(6);
+        let ah = normalize_adjacency(&a);
+        for i in 0..6 {
+            assert!(ah.row(i).any(|(c, _)| c as usize == i), "row {i} missing self loop");
+        }
+        assert_eq!(ah.nnz(), a.nnz() + 6);
+    }
+}

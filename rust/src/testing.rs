@@ -1,0 +1,88 @@
+//! In-tree property-based testing (proptest is unavailable in the offline
+//! crate cache). Deterministic seed-sweep model: a property is a function
+//! of a [`Pcg`] generator; `check` runs it across N derived seeds and
+//! reports the failing seed, so failures reproduce exactly.
+
+use crate::util::rng::Pcg;
+
+/// Number of cases per property (override with `AIRES_PROP_CASES`).
+pub fn default_cases() -> u64 {
+    std::env::var("AIRES_PROP_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(64)
+}
+
+/// Run `prop` across `cases` generator streams derived from `seed`.
+/// Panics with the failing stream id on the first failure.
+pub fn check<F: FnMut(&mut Pcg) -> Result<(), String>>(name: &str, seed: u64, mut prop: F) {
+    let cases = default_cases();
+    for case in 0..cases {
+        let mut rng = Pcg::new(seed, case);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name} failed at seed={seed} stream={case}: {msg}");
+        }
+    }
+}
+
+/// Property helpers for building random instances.
+pub mod gen {
+    use crate::sparse::{Coo, Csr};
+    use crate::util::rng::Pcg;
+
+    /// Random CSR with shape in [1, max_dim] and density in (0, max_density].
+    pub fn csr(rng: &mut Pcg, max_dim: usize, max_density: f64) -> Csr {
+        let nrows = rng.range(1, max_dim + 1);
+        let ncols = rng.range(1, max_dim + 1);
+        let density = rng.f64() * max_density;
+        let mut coo = Coo::new(nrows, ncols);
+        for r in 0..nrows {
+            for c in 0..ncols {
+                if rng.chance(density) {
+                    coo.push(r as u32, c as u32, (rng.normal() as f32).max(-10.0).min(10.0));
+                }
+            }
+        }
+        coo.to_csr()
+    }
+
+    /// Random square symmetric adjacency (unit weights, no self loops).
+    pub fn adjacency(rng: &mut Pcg, max_dim: usize, max_density: f64) -> Csr {
+        let n = rng.range(2, max_dim + 1);
+        let density = rng.f64() * max_density;
+        let mut edges = Vec::new();
+        for i in 0..n as u32 {
+            for j in (i + 1)..n as u32 {
+                if rng.chance(density) {
+                    edges.push((i, j));
+                }
+            }
+        }
+        crate::graphgen::edges_to_adjacency(n, &edges)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("trivial", 1, |rng| {
+            let v = rng.below(10);
+            if v < 10 { Ok(()) } else { Err(format!("{v}")) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failing")]
+    fn check_reports_failures() {
+        check("failing", 1, |rng| {
+            if rng.below(8) == 7 { Err("hit".into()) } else { Ok(()) }
+        });
+    }
+
+    #[test]
+    fn generated_csr_is_valid() {
+        check("gen-csr-valid", 2, |rng| {
+            gen::csr(rng, 24, 0.4).validate()
+        });
+    }
+}

@@ -1,0 +1,217 @@
+//! Cross-module integration: generators -> normalization -> partitioning ->
+//! SpGEMM -> schedulers -> experiment harnesses, and the full experiment
+//! suite consistency (same numbers from CLI-facing and bench-facing paths).
+
+use aires::coordinator::{
+    fig3_cross_check, fig3_merging, fig6_row, fig6_speedup, fig8_bandwidth, mean_speedup,
+    table3_memcap, FEAT_DIM, LAYERS,
+};
+use aires::memsim::CostModel;
+use aires::sched::{all_schedulers, Aires, Scheduler, Workload};
+use aires::sparse::norm::normalize_adjacency;
+use aires::sparse::spgemm::spgemm_gustavson;
+use aires::sparse::spmm::{spmm, Dense};
+use aires::util::rng::Pcg;
+
+#[test]
+fn full_gcn_aggregation_pipeline_on_every_family() {
+    // generator -> Â -> RoBW -> per-segment SpMM == whole SpMM.
+    let mut rng = Pcg::seed(1);
+    for d in aires::graphgen::CATALOG.iter() {
+        let g = d.scaled(&mut rng, 400);
+        let a_hat = normalize_adjacency(&g);
+        let x = Dense::from_vec(
+            a_hat.ncols,
+            8,
+            (0..a_hat.ncols * 8).map(|_| rng.normal() as f32).collect(),
+        );
+        let whole = spmm(&a_hat, &x);
+        let segs = aires::partition::robw::robw_partition(&a_hat, 4096);
+        let mut stitched = Dense::zeros(a_hat.nrows, 8);
+        for s in &segs {
+            let part = spmm(&aires::partition::robw::materialize(&a_hat, s), &x);
+            stitched.data[s.row_lo * 8..s.row_hi * 8].copy_from_slice(&part.data);
+        }
+        assert!(whole.max_abs_diff(&stitched) < 1e-4, "{}", d.name);
+    }
+}
+
+#[test]
+fn spgemm_on_sparse_features_matches_paper_setup() {
+    // The paper's actual operand pair: CSR adjacency x CSC sparse features.
+    let mut rng = Pcg::seed(2);
+    let g = aires::graphgen::kmer::generate(&mut rng, 300, 3.0);
+    let a_hat = normalize_adjacency(&g);
+    let feats = aires::graphgen::random_sparse_features(&mut rng, 300, 64, 95.0);
+    let prod = aires::sparse::spgemm::spgemm_csr_csc(&a_hat, &feats.to_csc());
+    let want = spgemm_gustavson(&a_hat, &feats);
+    assert_eq!(prod.c.to_dense(), want.to_dense());
+    // The Eq. 5 model must cover the real output within its design margin.
+    let model = aires::memsim::OutputModel::from_matrices(&a_hat, &feats.to_csc());
+    let real = prod.c.size_bytes();
+    assert!(model.m_c() as f64 > 0.2 * real as f64, "model absurdly low");
+}
+
+#[test]
+fn fig3_cross_check_on_real_matrices() {
+    // The analytic Fig. 3 harness's premise — naive cuts rows, RoBW does
+    // not — verified with the real partitioners on scaled kmer graphs.
+    let mut rng = Pcg::seed(3);
+    for name in ["kV2a", "kU1a", "kP1a"] {
+        let d = aires::graphgen::catalog::by_name(name).unwrap();
+        let g = d.scaled(&mut rng, 600);
+        let (naive_cuts, robw_mismatch) = fig3_cross_check(&g, 512);
+        assert!(naive_cuts > 0, "{name}: naive must cut rows");
+        assert_eq!(robw_mismatch, 0, "{name}: RoBW must never cut rows");
+    }
+}
+
+#[test]
+fn experiment_suite_is_deterministic() {
+    let cm = CostModel::default();
+    let a = fig6_speedup(&cm);
+    let b = fig6_speedup(&cm);
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.makespan("AIRES"), y.makespan("AIRES"));
+        assert_eq!(x.makespan("ETC"), y.makespan("ETC"));
+    }
+}
+
+#[test]
+fn headline_claims_hold() {
+    // The abstract's headline: "up to 1.8x lower latency" vs baselines,
+    // and consistent speedup across all datasets.
+    let cm = CostModel::default();
+    let rows = fig6_speedup(&cm);
+    let max_speedup = rows
+        .iter()
+        .filter_map(|r| r.speedup_over("MaxMemory"))
+        .fold(0.0f64, f64::max);
+    assert!(max_speedup >= 1.8, "peak speedup {max_speedup:.2} must reach 1.8x");
+    assert!(mean_speedup(&rows, "ETC") >= 1.4, "mean vs ETC too low");
+}
+
+#[test]
+fn table3_cells_match_fig6_at_full_constraint() {
+    // Table III's first row per dataset uses the Table II constraint, so
+    // it must agree with Fig. 6's numbers (single source of truth).
+    let cm = CostModel::default();
+    let t3 = table3_memcap(&cm);
+    for (name, cap) in [("kV1r", 24.0), ("kP1a", 16.0), ("socLJ1", 11.0)] {
+        let row = t3
+            .iter()
+            .find(|r| r.dataset == name && r.constraint_gb == cap)
+            .unwrap();
+        let d = aires::graphgen::catalog::by_name(name).unwrap();
+        let mut w = Workload::from_catalog(d, FEAT_DIM, LAYERS);
+        w.gpu_mem_bytes = (cap * 1e9) as u64;
+        let direct = Aires.run_epoch(&w, &cm).makespan_s.unwrap();
+        let cell = row.cells.iter().find(|(n, _)| *n == "AIRES").unwrap().1.unwrap();
+        assert!((direct - cell).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn fig8_bandwidths_within_physical_limits() {
+    let cm = CostModel::default();
+    for r in fig8_bandwidth(&cm) {
+        assert!(r.gpu_ssd_gbps <= cm.gds_read_gbps + 1e-9, "{:?}", r);
+        assert!(r.cpu_ssd_gbps <= cm.nvme_read_gbps + 1e-9, "{:?}", r);
+    }
+}
+
+#[test]
+fn merge_overhead_shrinks_with_memory_fig3_obs2() {
+    // Fig. 3 observation 2: less memory -> higher merging overhead.
+    let cm = CostModel::default();
+    let d = aires::graphgen::catalog::by_name("kP1a").unwrap();
+    let mut tight = Workload::from_catalog(d, FEAT_DIM, LAYERS);
+    tight.gpu_mem_bytes = (15.0e9) as u64;
+    let mut loose = Workload::from_catalog(d, FEAT_DIM, LAYERS);
+    loose.gpu_mem_bytes = (16.5e9) as u64;
+    let r_tight = aires::coordinator::fig3_row(&tight, &cm);
+    let r_loose = aires::coordinator::fig3_row(&loose, &cm);
+    assert!(r_tight.overhead_pct > r_loose.overhead_pct);
+}
+
+#[test]
+fn every_scheduler_reports_features_consistent_with_behaviour() {
+    let cm = CostModel::default();
+    let d = aires::graphgen::catalog::by_name("kU1a").unwrap();
+    let w = Workload::from_catalog(d, FEAT_DIM, LAYERS);
+    for s in all_schedulers() {
+        let f = s.features();
+        let r = s.run_epoch(&w, &cm);
+        let gds = r.io.gpu_ssd_bytes();
+        let um = r.io.get("UM").bytes;
+        assert_eq!(gds > 0, f.dual_way, "{}: GDS usage vs dual_way flag", s.name());
+        assert_eq!(um > 0, f.um_reads, "{}: UM usage vs um_reads flag", s.name());
+    }
+}
+
+#[test]
+fn fig6_speedup_scales_with_dataset_size() {
+    // Paper observation: "As the dataset size grows, the speedup of AIRES
+    // over MaxMemory ... increases" (within the kmer family).
+    let cm = CostModel::default();
+    let small = fig6_row(aires::graphgen::catalog::by_name("kV2a").unwrap(), &cm);
+    let large = fig6_row(aires::graphgen::catalog::by_name("kV1r").unwrap(), &cm);
+    let s1 = small.speedup_over("MaxMemory").unwrap();
+    let s2 = large.speedup_over("MaxMemory").unwrap();
+    assert!(s2 > s1 * 0.9, "speedup should not collapse with scale: {s1:.2} -> {s2:.2}");
+}
+
+#[test]
+fn failure_injection_degraded_gds() {
+    // Failure scenario: GDS path degrades to 10% (firmware/driver issue).
+    // AIRES must still complete every workload — slower, but never OOM,
+    // and never slower than simply routing everything like MaxMemory.
+    let mut cm = CostModel::default();
+    cm.gds_read_gbps *= 0.1;
+    cm.gds_write_gbps *= 0.1;
+    for d in aires::graphgen::CATALOG.iter() {
+        let w = Workload::from_catalog(d, FEAT_DIM, LAYERS);
+        let healthy = Aires.run_epoch(&w, &CostModel::default());
+        let degraded = Aires.run_epoch(&w, &cm);
+        assert!(degraded.oom.is_none(), "{}: degraded GDS must not OOM", d.name);
+        assert!(
+            degraded.makespan_s.unwrap() >= healthy.makespan_s.unwrap(),
+            "{}: degradation cannot speed things up",
+            d.name
+        );
+    }
+}
+
+#[test]
+fn config_overrides_flow_into_experiments() {
+    // A config that doubles storage speed must strictly improve AIRES.
+    let cfg = aires::config::Config::from_json_str(
+        r#"{"cost_model":{"nvme_read_gbps":13.2,"gds_read_gbps":11.6,"gds_write_gbps":10.0}}"#,
+    )
+    .unwrap();
+    let base = fig6_row(aires::graphgen::catalog::by_name("kU1a").unwrap(), &CostModel::default());
+    let fast = fig6_row(aires::graphgen::catalog::by_name("kU1a").unwrap(), &cfg.cost_model);
+    assert!(fast.makespan("AIRES").unwrap() < base.makespan("AIRES").unwrap());
+}
+
+#[test]
+fn chrome_trace_of_epoch_is_valid_json() {
+    let cm = CostModel::default();
+    let d = aires::graphgen::catalog::by_name("kV2a").unwrap();
+    let w = Workload::from_catalog(d, FEAT_DIM, LAYERS);
+    let r = Aires.run_epoch(&w, &cm);
+    let trace = aires::memsim::trace::chrome_trace_log(&r.log);
+    let parsed = aires::util::json::parse(&trace).unwrap();
+    let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(events.len() >= r.log.len(), "every op appears at least once");
+}
+
+#[test]
+fn fig3_merging_magnitudes() {
+    // kV2a ~tens of percent; kP1a several-fold lower (paper: 50% and ~6x).
+    let cm = CostModel::default();
+    let rows = fig3_merging(&cm);
+    let by = |n: &str| rows.iter().find(|r| r.dataset == n).unwrap().overhead_pct;
+    assert!(by("kV2a") >= 25.0 && by("kV2a") <= 80.0, "kV2a {:.1}%", by("kV2a"));
+    assert!(by("kV2a") / by("kP1a") >= 3.0, "ratio {:.1}", by("kV2a") / by("kP1a"));
+}

@@ -1,0 +1,329 @@
+//! Property-based tests over the coordinator-side invariants: sparse
+//! format round-trips, SpGEMM algebra, RoBW/naive partitioning laws,
+//! the Eq. 5-7 allocation model, and scheduler-level monotonicity.
+
+use aires::memsim::{CostModel, OutputModel};
+use aires::partition::naive::{merge_overhead, naive_partition};
+use aires::partition::robw::{calc_mem, materialize, robw_partition};
+use aires::sched::{all_schedulers, Scheduler, Workload};
+use aires::sparse::spgemm::{spgemm_csr_csc, spgemm_gustavson};
+use aires::sparse::{Bsr, Csr};
+use aires::testing::{check, gen};
+
+// ----------------------------------------------------------- sparse formats
+
+#[test]
+fn prop_csr_csc_roundtrip() {
+    check("csr<->csc roundtrip", 10, |rng| {
+        let a = gen::csr(rng, 30, 0.35);
+        let back = a.to_csc().to_csr();
+        if back == a { Ok(()) } else { Err("roundtrip mismatch".into()) }
+    });
+}
+
+#[test]
+fn prop_bsr_dense_equals_csr_dense() {
+    check("bsr == csr dense", 11, |rng| {
+        let a = gen::csr(rng, 30, 0.3);
+        let bm = 1 << rng.range(0, 4);
+        let bk = 1 << rng.range(0, 4);
+        let bsr = Bsr::from_csr(&a, bm, bk);
+        if bsr.to_dense() == a.to_dense() {
+            Ok(())
+        } else {
+            Err(format!("bm={bm} bk={bk}"))
+        }
+    });
+}
+
+#[test]
+fn prop_spgemm_formulations_agree() {
+    check("gustavson == csr*csc", 12, |rng| {
+        let m = rng.range(1, 14);
+        let k = rng.range(1, 14);
+        let n = rng.range(1, 14);
+        let a = gen::csr(rng, 14, 0.4).slice_rows(0, 0); // placeholder, rebuilt below
+        let _ = a;
+        // build explicit shapes
+        let mk = |rng: &mut aires::util::rng::Pcg, r: usize, c: usize| {
+            let mut coo = aires::sparse::Coo::new(r, c);
+            for i in 0..r {
+                for j in 0..c {
+                    if rng.chance(0.3) {
+                        coo.push(i as u32, j as u32, rng.range(1, 9) as f32 * 0.25);
+                    }
+                }
+            }
+            coo.to_csr()
+        };
+        let a = mk(rng, m, k);
+        let b = mk(rng, k, n);
+        let g = spgemm_gustavson(&a, &b);
+        let x = spgemm_csr_csc(&a, &b.to_csc());
+        if g.to_dense() == x.c.to_dense() { Ok(()) } else { Err("mismatch".into()) }
+    });
+}
+
+#[test]
+fn prop_spgemm_distributes_over_row_splits() {
+    // C = A·B computed whole must equal vstack of per-segment products —
+    // the algebraic fact RoBW streaming relies on.
+    check("row-split distributivity", 13, |rng| {
+        let a = gen::csr(rng, 24, 0.3);
+        let b = {
+            let mut coo = aires::sparse::Coo::new(a.ncols, rng.range(1, 16));
+            for i in 0..a.ncols {
+                for j in 0..coo.ncols {
+                    if rng.chance(0.3) {
+                        coo.push(i as u32, j as u32, rng.normal() as f32);
+                    }
+                }
+            }
+            coo.to_csr()
+        };
+        let whole = spgemm_gustavson(&a, &b);
+        let budget = 64 + rng.below(512);
+        let parts: Vec<Csr> = robw_partition(&a, budget)
+            .iter()
+            .map(|s| spgemm_gustavson(&materialize(&a, s), &b))
+            .collect();
+        let stacked = Csr::vstack(&parts).map_err(|e| e)?;
+        let (d1, d2) = (whole.to_dense(), stacked.to_dense());
+        let close = d1
+            .iter()
+            .zip(d2.iter())
+            .all(|(x, y)| (x - y).abs() <= 1e-4 * (1.0 + x.abs()));
+        if close { Ok(()) } else { Err("segment product mismatch".into()) }
+    });
+}
+
+// ------------------------------------------------------------- partitioning
+
+#[test]
+fn prop_robw_partition_laws() {
+    check("robw laws", 14, |rng| {
+        let a = gen::csr(rng, 60, 0.25);
+        let budget = 48 + rng.below(2048);
+        let segs = robw_partition(&a, budget);
+        // Coverage + contiguity.
+        if segs[0].row_lo != 0 || segs.last().unwrap().row_hi != a.nrows {
+            return Err("does not cover".into());
+        }
+        for w in segs.windows(2) {
+            if w[0].row_hi != w[1].row_lo {
+                return Err("not contiguous".into());
+            }
+        }
+        for s in &segs {
+            // Budget respected unless a single oversized row.
+            if s.row_hi - s.row_lo > 1 && s.bytes > budget {
+                return Err(format!("over budget: {s:?}"));
+            }
+            // calcMem consistency.
+            if s.bytes != calc_mem(s.row_hi - s.row_lo, s.nnz) {
+                return Err("calc_mem mismatch".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_naive_covers_and_robw_never_cuts() {
+    check("naive vs robw cuts", 15, |rng| {
+        let a = gen::csr(rng, 50, 0.3);
+        let budget = 40 + rng.below(1024);
+        let naive = naive_partition(&a, budget);
+        if naive[0].nnz_lo != 0 || naive.last().unwrap().nnz_hi != a.nnz() {
+            return Err("naive does not cover".into());
+        }
+        let ov = merge_overhead(&naive);
+        // Merge bytes are consistent: dtoh == resend, host merge == 2x.
+        if ov.dtoh_bytes != ov.resend_bytes || ov.host_merge_bytes != 2 * ov.dtoh_bytes {
+            return Err("merge accounting inconsistent".into());
+        }
+        // RoBW reassembles exactly (no cuts by construction).
+        let parts: Vec<Csr> =
+            robw_partition(&a, budget).iter().map(|s| materialize(&a, s)).collect();
+        if Csr::vstack(&parts).unwrap() != a {
+            return Err("robw reassembly mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------ memory model
+
+#[test]
+fn prop_eq7_monotone_in_memory() {
+    check("eq7 monotone", 16, |rng| {
+        let a = gen::csr(rng, 40, 0.3);
+        let b = gen::csr(rng, 40, 0.3);
+        let model = OutputModel::from_matrices(&a, &b.to_csc());
+        let m1 = (1u64 << 20) + rng.below(1 << 24);
+        let m2 = m1 * 2;
+        match (model.block_budget(m1), model.block_budget(m2)) {
+            (Some(p1), Some(p2)) if p2 < p1 => Err(format!("p shrank: {p1} -> {p2}")),
+            (Some(_), None) => Err("lost feasibility with more memory".into()),
+            _ => Ok(()),
+        }
+    });
+}
+
+// --------------------------------------------------------------- schedulers
+
+#[test]
+fn prop_schedulers_monotone_in_memory() {
+    // More GPU memory never makes any policy slower (weak monotonicity,
+    // small tolerance for pipeline-granularity noise).
+    let cm = CostModel::default();
+    check("sched monotone", 17, |rng| {
+        let d = &aires::graphgen::CATALOG[rng.range(0, 7)];
+        let mut w1 = Workload::from_catalog(d, 256, 1);
+        let cap = w1.gpu_mem_bytes;
+        w1.gpu_mem_bytes = cap + rng.below(cap / 2);
+        let mut w2 = w1.clone();
+        w2.gpu_mem_bytes = w1.gpu_mem_bytes + rng.below(cap / 2) + 1;
+        for s in all_schedulers() {
+            let r1 = s.run_epoch(&w1, &cm);
+            let r2 = s.run_epoch(&w2, &cm);
+            if let (Some(t1), Some(t2)) = (r1.makespan_s, r2.makespan_s) {
+                if t2 > t1 * 1.02 {
+                    return Err(format!("{}: {t1} -> {t2} with more memory", s.name()));
+                }
+            }
+            if r1.oom.is_none() && r2.oom.is_some() {
+                return Err(format!("{}: OOM appeared with more memory", s.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_aires_always_survives_where_etc_does() {
+    let cm = CostModel::default();
+    check("aires dominates etc feasibility", 18, |rng| {
+        let d = &aires::graphgen::CATALOG[rng.range(0, 7)];
+        let mut w = Workload::from_catalog(d, 256, 1);
+        // Sweep caps from 30%..110% of the Table II constraint.
+        let frac = 0.3 + rng.f64() * 0.8;
+        w.gpu_mem_bytes = ((w.gpu_mem_bytes as f64) * frac) as u64;
+        let etc = aires::sched::Etc.run_epoch(&w, &cm);
+        let aires_r = aires::sched::Aires.run_epoch(&w, &cm);
+        if etc.oom.is_none() && aires_r.oom.is_some() {
+            return Err(format!("ETC ran but AIRES OOMed at {} bytes", w.gpu_mem_bytes));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_io_volumes_ordering() {
+    // AIRES moves the least GPU-CPU data; MaxMemory the most (Fig. 7).
+    let cm = CostModel::default();
+    check("io ordering", 19, |rng| {
+        let d = &aires::graphgen::CATALOG[rng.range(0, 7)];
+        let w = Workload::from_catalog(d, 256, 1);
+        let get = |s: &dyn Scheduler| {
+            let r = s.run_epoch(&w, &cm);
+            r.io.gpu_cpu_bytes()
+        };
+        let aires_b = get(&aires::sched::Aires);
+        let etc_b = get(&aires::sched::Etc);
+        let mm_b = get(&aires::sched::MaxMemory);
+        if aires_b > etc_b {
+            return Err(format!("AIRES {aires_b} > ETC {etc_b}"));
+        }
+        if etc_b > mm_b {
+            return Err(format!("ETC {etc_b} > MaxMemory {mm_b}"));
+        }
+        Ok(())
+    });
+}
+
+
+// ------------------------------------------------------------ misc fuzzing
+
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    use aires::util::json::{parse, Json};
+    fn gen_json(rng: &mut aires::util::rng::Pcg, depth: usize) -> Json {
+        match if depth == 0 { rng.range(0, 4) } else { rng.range(0, 6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.normal() * 100.0 * 8.0).round() / 8.0),
+            3 => Json::Str(
+                (0..rng.range(0, 12))
+                    .map(|_| char::from(b'a' + rng.below(26) as u8))
+                    .collect::<String>()
+                    + if rng.chance(0.3) { "\"\n" } else { "" },
+            ),
+            4 => Json::Arr((0..rng.range(0, 4)).map(|_| gen_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.range(0, 4))
+                    .map(|i| (format!("k{i}"), gen_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check("json roundtrip", 20, |rng| {
+        let v = gen_json(rng, 3);
+        let text = v.to_string();
+        match parse(&text) {
+            Ok(back) if back == v => Ok(()),
+            Ok(back) => Err(format!("{v} -> {text} -> {back}")),
+            Err(e) => Err(format!("{text}: {e}")),
+        }
+    });
+}
+
+#[test]
+fn prop_more_layers_cost_more() {
+    // Epoch latency must grow (roughly linearly) with GCN depth for every
+    // scheduler — the cycles() contract.
+    let cm = CostModel::default();
+    check("layers scaling", 21, |rng| {
+        let d = &aires::graphgen::CATALOG[rng.range(0, 7)];
+        let w1 = Workload::from_catalog(d, 256, 1);
+        let w2 = Workload::from_catalog(d, 256, 2);
+        for s in all_schedulers() {
+            let (r1, r2) = (s.run_epoch(&w1, &cm), s.run_epoch(&w2, &cm));
+            if let (Some(t1), Some(t2)) = (r1.makespan_s, r2.makespan_s) {
+                if t2 < t1 {
+                    return Err(format!("{}: 2 layers faster than 1", s.name()));
+                }
+                if t2 > 3.0 * t1 {
+                    return Err(format!("{}: superlinear depth blowup {t1} -> {t2}", s.name()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparsify_assemble_roundtrip() {
+    use aires::sparse::spmm::{assemble_csr_c, Dense};
+    check("sparsify/assemble", 22, |rng| {
+        let a = gen::csr(rng, 40, 0.3);
+        let f = rng.range(1, 8);
+        let h = Dense::from_vec(
+            a.ncols,
+            f,
+            (0..a.ncols * f).map(|_| rng.normal() as f32).collect(),
+        );
+        let whole = aires::sparse::spmm::spmm(&a, &h);
+        let budget = 64 + rng.below(512);
+        let parts: Vec<(usize, Dense)> = robw_partition(&a, budget)
+            .iter()
+            .map(|s| (s.row_lo, aires::sparse::spmm::spmm(&materialize(&a, s), &h)))
+            .collect();
+        let assembled = assemble_csr_c(&parts, f, 0.0);
+        if assembled.to_dense() == whole.to_csr(0.0).to_dense() {
+            Ok(())
+        } else {
+            Err("assembled CSR C mismatch".into())
+        }
+    });
+}

@@ -1,0 +1,149 @@
+//! End-to-end artifact round-trip: rust loads the HLO text emitted by
+//! `python/compile/aot.py`, compiles it on the PJRT CPU client, executes,
+//! and checks numerics against the in-crate CPU oracles. This is the
+//! proof that L1 (Pallas) / L2 (JAX) / L3 (rust) compose.
+
+use aires::runtime::tile_exec::{BsrSpmmExec, CombineExec};
+use aires::runtime::{find_artifact_dir, Executor};
+use aires::sparse::spmm::{spmm, Dense};
+use aires::sparse::Coo;
+use aires::util::rng::Pcg;
+
+fn executor() -> Option<Executor> {
+    let dir = find_artifact_dir()?;
+    Some(Executor::new(&dir).expect("executor"))
+}
+
+fn random_csr(rng: &mut Pcg, nrows: usize, ncols: usize, density: f64) -> aires::Csr {
+    let mut coo = Coo::new(nrows, ncols);
+    for r in 0..nrows {
+        for c in 0..ncols {
+            if rng.chance(density) {
+                coo.push(r as u32, c as u32, rng.normal() as f32);
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+fn random_dense(rng: &mut Pcg, nrows: usize, ncols: usize) -> Dense {
+    Dense::from_vec(nrows, ncols, (0..nrows * ncols).map(|_| rng.normal() as f32).collect())
+}
+
+#[test]
+fn bsr_spmm_artifact_matches_cpu_oracle() {
+    let Some(mut exec) = executor() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let spmm_exec = BsrSpmmExec::for_feature_width(&exec, 64).expect("variant");
+    let mut rng = Pcg::seed(1234);
+    for &(m, k, d) in &[(100usize, 512usize, 0.02f64), (37, 1000, 0.05), (256, 1024, 0.01)] {
+        let a = random_csr(&mut rng, m, k, d);
+        let h = random_dense(&mut rng, k, 64);
+        let got = spmm_exec.spmm(&mut exec, &a, &h).expect("artifact spmm");
+        let want = spmm(&a, &h);
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 1e-3, "m={m} k={k} d={d}: max diff {diff}");
+    }
+}
+
+#[test]
+fn combine_artifact_matches_cpu_oracle() {
+    let Some(mut exec) = executor() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let comb = CombineExec::for_widths(&exec, 64, 64, true).expect("variant");
+    let mut rng = Pcg::seed(99);
+    let x = random_dense(&mut rng, 300, 64); // non-multiple of p=256
+    let w = random_dense(&mut rng, 64, 64);
+    let b: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+    let got = comb.combine(&mut exec, &x, &w, &b).expect("combine");
+    // CPU oracle.
+    let mut want = Dense::zeros(300, 64);
+    for i in 0..300 {
+        for j in 0..64 {
+            let mut acc = b[j];
+            for l in 0..64 {
+                acc += x.at(i, l) * w.at(l, j);
+            }
+            *want.at_mut(i, j) = acc.max(0.0);
+        }
+    }
+    let diff = got.max_abs_diff(&want);
+    assert!(diff < 1e-3, "max diff {diff}");
+}
+
+#[test]
+fn train_step_artifact_reduces_loss() {
+    let Some(mut exec) = executor() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    use aires::runtime::executor::Buf;
+    let name = exec
+        .manifest()
+        .find_prefix("gcn2_train_step_")
+        .expect("train artifact")
+        .name
+        .clone();
+    let spec = exec.spec(&name).unwrap().clone();
+    let n = spec.meta["n"] as usize;
+    let f0 = spec.meta["f0"] as usize;
+    let hd = spec.meta["h"] as usize;
+    let c = spec.meta["c"] as usize;
+
+    // Small ring-like graph, normalized adjacency, learnable labels.
+    let mut rng = Pcg::seed(7);
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        let j = (i + 1) % n;
+        coo.push(i as u32, j as u32, 1.0);
+        coo.push(j as u32, i as u32, 1.0);
+    }
+    let a_hat = aires::sparse::norm::normalize_adjacency(&coo.to_csr());
+    let a_dense = a_hat.to_dense();
+    let x: Vec<f32> = (0..n * f0).map(|_| rng.normal() as f32).collect();
+    let mut w1: Vec<f32> = (0..f0 * hd).map(|_| (rng.normal() * 0.3) as f32).collect();
+    let mut b1 = vec![0f32; hd];
+    let mut w2: Vec<f32> = (0..hd * c).map(|_| (rng.normal() * 0.3) as f32).collect();
+    let mut b2 = vec![0f32; c];
+    // Labels from a random projection of x (learnable signal).
+    let proj: Vec<f32> = (0..f0).map(|_| rng.normal() as f32).collect();
+    let labels: Vec<i32> = (0..n)
+        .map(|i| {
+            let s: f32 = (0..f0).map(|j| x[i * f0 + j] * proj[j]).sum();
+            if s > 0.0 { 1 } else { 0 }
+        })
+        .collect();
+
+    let mut losses = Vec::new();
+    for _ in 0..12 {
+        let outs = exec
+            .run(
+                &name,
+                &[
+                    Buf::F32(a_dense.clone()),
+                    Buf::F32(x.clone()),
+                    Buf::F32(w1.clone()),
+                    Buf::F32(b1.clone()),
+                    Buf::F32(w2.clone()),
+                    Buf::F32(b2.clone()),
+                    Buf::S32(labels.clone()),
+                    Buf::F32(vec![1.0f32]),
+                ],
+            )
+            .expect("train step");
+        let loss = outs[0].as_f32().unwrap()[0];
+        losses.push(loss);
+        w1 = outs[1].as_f32().unwrap().to_vec();
+        b1 = outs[2].as_f32().unwrap().to_vec();
+        w2 = outs[3].as_f32().unwrap().to_vec();
+        b2 = outs[4].as_f32().unwrap().to_vec();
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss must decrease: {losses:?}"
+    );
+}

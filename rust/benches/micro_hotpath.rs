@@ -4,12 +4,13 @@
 //!
 //! Run: `cargo bench --bench micro_hotpath`
 
-use aires::benchlib::{bench, report_throughput};
+use aires::benchlib::{bench, report_speedup, report_throughput};
 use aires::memsim::{CostModel, Op, Sim};
 use aires::partition::robw::robw_partition;
-use aires::sparse::block::{pack_artifact_batches, Bsr};
-use aires::sparse::spgemm::spgemm_gustavson;
-use aires::sparse::spmm::{spmm, Dense};
+use aires::runtime::pool::Pool;
+use aires::sparse::block::{pack_artifact_batches, pack_csr_batches_par, Bsr};
+use aires::sparse::spgemm::{spgemm_gustavson, spgemm_gustavson_par};
+use aires::sparse::spmm::{spmm, spmm_par, Dense};
 use aires::util::rng::Pcg;
 
 fn main() {
@@ -31,17 +32,41 @@ fn main() {
         aires::graphgen::rmat::generate(&mut rng2, 12, 8, Default::default())
     };
     let flops = 2 * a.nnz() as u64 * (a.nnz() as u64 / a.nrows as u64);
-    let r = bench("spgemm_gustavson(rmat-12, A*A)", 1, 5, || {
+    let spgemm_serial = bench("spgemm_gustavson(rmat-12, A*A)", 1, 5, || {
         std::hint::black_box(spgemm_gustavson(&a, &a));
     });
-    println!("BENCH spgemm: ~{:.2} Mflop/s equivalent", flops as f64 / r.mean_s / 1e6);
+    println!(
+        "BENCH spgemm: ~{:.2} Mflop/s equivalent",
+        flops as f64 / spgemm_serial.mean_s / 1e6
+    );
 
     // --- L3: SpMM (aggregation oracle) ----------------------------------
     let h = Dense::from_vec(a.ncols, 64, (0..a.ncols * 64).map(|_| 0.5f32).collect());
-    let r = bench("spmm(rmat-12 x 64)", 1, 5, || {
+    let spmm_serial = bench("spmm(rmat-12 x 64)", 1, 5, || {
         std::hint::black_box(spmm(&a, &h));
     });
-    report_throughput(&r, (a.nnz() * 64 * 4) as u64);
+    report_throughput(&spmm_serial, (a.nnz() * 64 * 4) as u64);
+
+    // --- runtime::pool: parallel row-range kernels vs the serial oracles.
+    // The RMAT workload is the acceptance target: >= 2x at 4 threads.
+    // Outputs are byte-identical (asserted once here; exhaustively in
+    // rust/tests/differential.rs), so the speedup is not bought with drift.
+    assert_eq!(
+        spgemm_gustavson_par(&a, &a, &Pool::new(4)),
+        spgemm_gustavson(&a, &a),
+        "parallel spgemm must match the serial oracle"
+    );
+    for t in [1usize, 2, 4, 8] {
+        let pool = Pool::new(t);
+        let rp = bench(&format!("spgemm_gustavson_par(rmat-12, {t}t)"), 1, 5, || {
+            std::hint::black_box(spgemm_gustavson_par(&a, &a, &pool));
+        });
+        report_speedup(&spgemm_serial, &rp);
+        let rp = bench(&format!("spmm_par(rmat-12 x 64, {t}t)"), 1, 5, || {
+            std::hint::black_box(spmm_par(&a, &h, &pool));
+        });
+        report_speedup(&spmm_serial, &rp);
+    }
 
     // --- Bridge: BSR extraction + artifact batch packing ----------------
     let seg = g.slice_rows(0, 20_000);
@@ -53,9 +78,19 @@ fn main() {
     bench("pack_artifact_batches(r8, nb16)", 2, 10, || {
         std::hint::black_box(pack_artifact_batches(&bsr, 8, 16));
     });
-    bench("pack_csr_batches fused (r8, nb16)", 2, 10, || {
+    let pack_serial = bench("pack_csr_batches fused (r8, nb16)", 2, 10, || {
         std::hint::black_box(aires::sparse::block::pack_csr_batches(&seg, 32, 32, 8, 16));
     });
+    let env_pool = aires::benchlib::pool_from_env();
+    let rp = bench(
+        &format!("pack_csr_batches_par (r8, nb16, {}t)", env_pool.threads()),
+        2,
+        10,
+        || {
+            std::hint::black_box(pack_csr_batches_par(&seg, 32, 32, 8, 16, &env_pool));
+        },
+    );
+    report_speedup(&pack_serial, &rp);
 
     // --- Reordering: the tile-fill lever (§Perf) -------------------------
     let small = g.slice_rows(0, 50_000);

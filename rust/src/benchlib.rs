@@ -51,6 +51,26 @@ pub fn report_throughput(r: &BenchResult, bytes: u64) {
     println!("BENCH {}: throughput {:.2} GB/s", r.name, gbps);
 }
 
+/// Speedup helper: report `base` mean over `new` mean (serial vs parallel).
+pub fn report_speedup(base: &BenchResult, new: &BenchResult) {
+    println!(
+        "BENCH {}: {:.2}x speedup over {} (mean {} vs {})",
+        new.name,
+        base.mean_s / new.mean_s,
+        base.name,
+        crate::util::human_secs(new.mean_s),
+        crate::util::human_secs(base.mean_s),
+    );
+}
+
+/// Pool for benches, sized by `AIRES_THREADS` (0 = one per hardware
+/// thread; unset = auto). Lets every bench run serial vs parallel without
+/// recompiling: `AIRES_THREADS=1 cargo bench ...`.
+pub fn pool_from_env() -> crate::runtime::pool::Pool {
+    let threads = std::env::var("AIRES_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(0);
+    crate::runtime::pool::Pool::new(threads)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -63,5 +83,12 @@ mod tests {
         assert!(r.mean_s >= 0.0);
         assert!(r.min_s <= r.mean_s + 1e-12);
         assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn env_pool_is_usable() {
+        let pool = pool_from_env();
+        assert!(pool.threads() >= 1);
+        assert_eq!(pool.map_tasks(4, |i| i), vec![0, 1, 2, 3]);
     }
 }

@@ -27,6 +27,10 @@ pub struct Config {
     pub layers: u32,
     /// Catalog dataset names to evaluate (empty = all).
     pub datasets: Vec<String>,
+    /// Worker threads for the `runtime::pool` parallel kernels
+    /// (1 = serial, 0 = one per hardware thread). The CLI's `--threads`
+    /// flag overrides this.
+    pub threads: usize,
 }
 
 impl Default for Config {
@@ -36,6 +40,7 @@ impl Default for Config {
             feat_dim: crate::coordinator::FEAT_DIM,
             layers: crate::coordinator::LAYERS,
             datasets: Vec::new(),
+            threads: 1,
         }
     }
 }
@@ -60,6 +65,8 @@ fn set_cm_field(cm: &mut CostModel, key: &str, v: f64) -> Result<()> {
         "um_fault_latency_s" => cm.um_fault_latency_s = v,
         "gpu_malloc_s" => cm.gpu_malloc_s = v,
         "kernel_launch_s" => cm.kernel_launch_s = v,
+        "cpu_threads" => cm.cpu_threads = v,
+        "cpu_parallel_eff" => cm.cpu_parallel_eff = v,
         other => bail!("unknown cost_model field {other:?}"),
     }
     Ok(())
@@ -99,6 +106,14 @@ impl Config {
                     if cfg.layers == 0 {
                         bail!("layers must be positive");
                     }
+                }
+                "threads" => {
+                    let n =
+                        val.as_f64().ok_or_else(|| anyhow!("threads must be a number"))?;
+                    if n < 0.0 || n.fract() != 0.0 {
+                        bail!("threads must be a non-negative integer (0 = auto)");
+                    }
+                    cfg.threads = n as usize;
                 }
                 "datasets" => {
                     let arr =
@@ -160,6 +175,8 @@ impl Config {
             ("um_fault_latency_s", cm.um_fault_latency_s),
             ("gpu_malloc_s", cm.gpu_malloc_s),
             ("kernel_launch_s", cm.kernel_launch_s),
+            ("cpu_threads", cm.cpu_threads),
+            ("cpu_parallel_eff", cm.cpu_parallel_eff),
         ] {
             cm_map.insert(k.to_string(), Json::Num(v));
         }
@@ -167,6 +184,7 @@ impl Config {
         root.insert("cost_model".to_string(), Json::Obj(cm_map));
         root.insert("feat_dim".to_string(), Json::Num(self.feat_dim as f64));
         root.insert("layers".to_string(), Json::Num(self.layers as f64));
+        root.insert("threads".to_string(), Json::Num(self.threads as f64));
         root.insert(
             "datasets".to_string(),
             Json::Arr(self.datasets.iter().map(|d| Json::Str(d.clone())).collect()),
@@ -208,6 +226,30 @@ mod tests {
         assert!(Config::from_json_str(r#"{"cost_model":{"um_gbps":-1}}"#).is_err());
         assert!(Config::from_json_str(r#"{"datasets":["nope"]}"#).is_err());
         assert!(Config::from_json_str(r#"{"feat_dim":0}"#).is_err());
+    }
+
+    #[test]
+    fn threads_key_roundtrips_and_validates() {
+        let cfg = Config::from_json_str(r#"{"threads":4}"#).unwrap();
+        assert_eq!(cfg.threads, 4);
+        let auto = Config::from_json_str(r#"{"threads":0}"#).unwrap();
+        assert_eq!(auto.threads, 0);
+        assert!(Config::from_json_str(r#"{"threads":-1}"#).is_err());
+        assert!(Config::from_json_str(r#"{"threads":2.5}"#).is_err());
+        let back = Config::from_json_str(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(back.threads, 4);
+    }
+
+    #[test]
+    fn cpu_thread_hook_overrides_apply() {
+        let cfg = Config::from_json_str(
+            r#"{"cost_model":{"cpu_threads":4,"cpu_parallel_eff":0.9}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.cost_model.cpu_threads, 4.0);
+        assert!(cfg.cost_model.host_parallelism() > 3.5);
+        // Default config keeps the hook neutral (calibration unchanged).
+        assert_eq!(Config::default().cost_model.host_parallelism(), 1.0);
     }
 
     #[test]

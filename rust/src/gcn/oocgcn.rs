@@ -10,6 +10,7 @@
 
 use crate::memsim::GpuMem;
 use crate::partition::robw::{materialize, robw_partition};
+use crate::runtime::pool::Pool;
 use crate::runtime::tile_exec::{BsrSpmmExec, CombineExec};
 use crate::runtime::Executor;
 use crate::sparse::spmm::Dense;
@@ -35,17 +36,30 @@ pub struct OocGcnLayer {
 }
 
 impl OocGcnLayer {
-    /// Forward: relu((Â·x)·w + b), streaming Â in RoBW segments.
-    ///
-    /// `mem` models the device: the feature panel and each segment are
-    /// "allocated" and freed as the schedule would, so exceeding the
-    /// constraint fails exactly like the simulated OOM.
+    /// Forward with serial host-side packing (see [`Self::forward_pooled`]).
     pub fn forward(
         &self,
         exec: &mut Executor,
         a_hat: &Csr,
         x: &Dense,
         mem: &mut GpuMem,
+    ) -> Result<(Dense, LayerReport)> {
+        self.forward_pooled(exec, a_hat, x, mem, &Pool::serial())
+    }
+
+    /// Forward: relu((Â·x)·w + b), streaming Â in RoBW segments.
+    ///
+    /// `mem` models the device: the feature panel and each segment are
+    /// "allocated" and freed as the schedule would, so exceeding the
+    /// constraint fails exactly like the simulated OOM. Per-segment tile
+    /// extraction/packing runs on `pool` (the CLI's `--threads`).
+    pub fn forward_pooled(
+        &self,
+        exec: &mut Executor,
+        a_hat: &Csr,
+        x: &Dense,
+        mem: &mut GpuMem,
+        pool: &Pool,
     ) -> Result<(Dense, LayerReport)> {
         let spmm_exec = BsrSpmmExec::for_feature_width(exec, x.ncols)?;
         let comb = CombineExec::for_widths(exec, x.ncols, self.w.ncols, self.relu)?;
@@ -65,7 +79,7 @@ impl OocGcnLayer {
                 .map_err(|e| anyhow!("segment does not fit: {e}"))?;
             report.h2d_bytes += seg.bytes;
             let sub = materialize(a_hat, seg);
-            let part = spmm_exec.spmm(exec, &sub, x)?;
+            let part = spmm_exec.spmm_with_pool(exec, &sub, x, pool)?;
             agg.data[seg.row_lo * x.ncols..seg.row_hi * x.ncols]
                 .copy_from_slice(&part.data);
             report.artifact_calls_estimate +=

@@ -16,6 +16,7 @@
 use aires::config::Config;
 use aires::coordinator::report;
 use aires::coordinator::*;
+use aires::runtime::pool::Pool;
 use aires::util::rng::Pcg;
 
 fn arg_value(args: &[String], key: &str) -> Option<String> {
@@ -31,7 +32,22 @@ fn main() {
         Some(path) => Config::from_file(&path).expect("config"),
         None => Config::default(),
     };
-    let cm = cfg.cost_model.clone();
+    // Every subcommand honours --threads N (0 = one per hardware thread):
+    // it sizes the runtime::pool the real kernels run on, and mirrors the
+    // resolved worker count into the simulator's host-compute hook so the
+    // modelled experiments and the executed kernels agree.
+    let threads_flag = arg_value(&args, "--threads").map(|v| v.parse::<usize>().expect("--threads"));
+    let pool = Pool::new(threads_flag.unwrap_or(cfg.threads));
+    let mut cm = cfg.cost_model.clone();
+    // --threads always wins; otherwise the config's `threads` key flows
+    // into the hook too, unless the config pinned cost_model.cpu_threads
+    // away from the serial default (a pin to exactly 1.0 is
+    // indistinguishable from "unset" and gets mirrored — pin any other
+    // value, e.g. 1.01, to decouple the simulated host from the pool).
+    if threads_flag.is_some() || cm.cpu_threads == 1.0 {
+        cm.cpu_threads = pool.threads() as f64;
+    }
+    let cm = cm;
 
     match cmd {
         "catalog" => print!("{}", report::table2_md()),
@@ -152,7 +168,8 @@ fn main() {
                 seg_budget: budget,
             };
             let mut mem = aires::memsim::GpuMem::new(256 << 20);
-            let (out, rep) = layer.forward(&mut exec, &a_hat, &x, &mut mem).expect("forward");
+            let (out, rep) =
+                layer.forward_pooled(&mut exec, &a_hat, &x, &mut mem, &pool).expect("forward");
             println!(
                 "out-of-core aggregation: {} segments, ~{} artifact calls, peak {}, H2D {}",
                 rep.segments,
@@ -170,10 +187,75 @@ fn main() {
             let diff = out.max_abs_diff(&want);
             println!("max |accelerator - oracle| = {diff:.2e} -> {}", if diff < 1e-3 { "OK" } else { "MISMATCH" });
         }
+        "parcheck" => {
+            // Serial-vs-parallel differential check + timing of the hot
+            // kernels on generated graphs: the runtime surface for
+            // `--threads` that needs no compiled artifacts.
+            use aires::sparse::spgemm::{spgemm_gustavson, spgemm_gustavson_par};
+            use aires::sparse::spmm::{spmm, spmm_par, Dense};
+            use aires::util::{human_secs, Stopwatch};
+
+            let scale: u32 =
+                arg_value(&args, "--scale").and_then(|v| v.parse().ok()).unwrap_or(11);
+            let feat: usize =
+                arg_value(&args, "--feat").and_then(|v| v.parse().ok()).unwrap_or(64);
+            let mut rng = Pcg::seed(77);
+            let a = aires::graphgen::rmat::generate(&mut rng, scale, 8, Default::default());
+            let h = Dense::from_vec(
+                a.ncols,
+                feat,
+                (0..a.ncols * feat).map(|_| rng.normal() as f32).collect(),
+            );
+            println!(
+                "parcheck: rmat-{scale} ({} nodes, {} nnz), feat {feat}, pool {} threads",
+                a.nrows,
+                a.nnz(),
+                pool.threads()
+            );
+
+            let sw = Stopwatch::start();
+            let c_ser = spgemm_gustavson(&a, &a);
+            let t_spgemm = sw.secs();
+            let sw = Stopwatch::start();
+            let m_ser = spmm(&a, &h);
+            let t_spmm = sw.secs();
+            println!("{:>28} {:>10} {:>10} {:>9}", "kernel", "serial", "parallel", "speedup");
+
+            let mut counts = vec![1usize, 2, 4, 8];
+            if !counts.contains(&pool.threads()) {
+                counts.push(pool.threads());
+            }
+            for t in counts {
+                let p = Pool::new(t);
+                let sw = Stopwatch::start();
+                let c_par = spgemm_gustavson_par(&a, &a, &p);
+                let tp = sw.secs();
+                assert_eq!(c_par, c_ser, "spgemm parallel output diverged at {t} threads");
+                println!(
+                    "{:>28} {:>10} {:>10} {:>8.2}x",
+                    format!("spgemm_gustavson_par({t}t)"),
+                    human_secs(t_spgemm),
+                    human_secs(tp),
+                    t_spgemm / tp
+                );
+                let sw = Stopwatch::start();
+                let m_par = spmm_par(&a, &h, &p);
+                let tp = sw.secs();
+                assert_eq!(m_par, m_ser, "spmm parallel output diverged at {t} threads");
+                println!(
+                    "{:>28} {:>10} {:>10} {:>8.2}x",
+                    format!("spmm_par({t}t)"),
+                    human_secs(t_spmm),
+                    human_secs(tp),
+                    t_spmm / tp
+                );
+            }
+            println!("OK: parallel outputs byte-identical to the serial oracles");
+        }
         _ => {
             println!(
                 "aires — out-of-core GCN co-design (AIRES reproduction)\n\n\
-                 usage: aires <catalog|features|fig3|fig6|fig7|fig8|fig9|table3|report|prep|train|spgemm|trace|sweep|config-dump> [--config F] [args]\n\
+                 usage: aires <catalog|features|fig3|fig6|fig7|fig8|fig9|table3|report|prep|train|spgemm|parcheck|trace|sweep|config-dump> [--config F] [--threads N] [args]\n\
                  see README.md for details"
             );
         }

@@ -90,6 +90,14 @@ pub struct CostModel {
     pub gpu_malloc_s: f64,
     /// Kernel launch overhead.
     pub kernel_launch_s: f64,
+    /// Host compute threads driving the parallel row-range kernels
+    /// (`runtime::pool`); scales CPU compute and the RoBW partition scan
+    /// via [`CostModel::host_parallelism`]. Default 1.0 = serial (the
+    /// calibration baseline; every figure is unchanged at the default).
+    pub cpu_threads: f64,
+    /// Parallel efficiency per extra host thread (memory-bandwidth and
+    /// merge overheads keep row-range kernels below linear scaling).
+    pub cpu_parallel_eff: f64,
 }
 
 impl Default for CostModel {
@@ -112,11 +120,21 @@ impl Default for CostModel {
             um_fault_latency_s: 35e-6,
             gpu_malloc_s: 110e-6,
             kernel_launch_s: 8e-6,
+            cpu_threads: 1.0,
+            cpu_parallel_eff: 0.85,
         }
     }
 }
 
 impl CostModel {
+    /// Effective host-compute speedup at `cpu_threads` workers: 1 at one
+    /// thread; each extra thread contributes `cpu_parallel_eff`. This is
+    /// the hook the schedulers' CPU compute costs (`cpu_secs`, the RoBW
+    /// partition scan) share with the real `runtime::pool` kernels.
+    pub fn host_parallelism(&self) -> f64 {
+        1.0 + (self.cpu_threads - 1.0).max(0.0) * self.cpu_parallel_eff
+    }
+
     /// Duration of moving `bytes` over the op's channel.
     pub fn transfer_secs(&self, op: Op, bytes: u64) -> f64 {
         let gbps = match op {
@@ -128,7 +146,9 @@ impl CostModel {
             Op::DtoH => self.pcie_d2h_gbps,
             Op::UmFault => self.um_gbps,
             Op::HostMemcpy => self.host_memcpy_gbps,
-            Op::CpuPartition => self.cpu_partition_gbps,
+            // The RoBW scan is row-parallel (runtime::pool), so its
+            // throughput scales with the host thread hook.
+            Op::CpuPartition => self.cpu_partition_gbps * self.host_parallelism(),
             _ => panic!("not a transfer op: {op:?}"),
         };
         let lat = match op {
@@ -151,9 +171,10 @@ impl CostModel {
         self.kernel_launch_s + flops as f64 / (self.gpu_dense_gflops * 1e9)
     }
 
-    /// Duration of the CPU computing `flops`.
+    /// Duration of the CPU computing `flops` (scaled by the host-thread
+    /// hook — UCG's CPU share and any host-side kernel go through here).
     pub fn cpu_secs(&self, flops: u64) -> f64 {
-        flops as f64 / (self.cpu_spgemm_gflops * 1e9)
+        flops as f64 / (self.cpu_spgemm_gflops * 1e9 * self.host_parallelism())
     }
 
     /// Resources an op holds while executing.
@@ -192,6 +213,26 @@ mod tests {
             + cm.transfer_secs(Op::HtoD, 1 << 30);
         // GDS wins when the path is serialized (it is for cold data).
         assert!(direct < two_hop);
+    }
+
+    #[test]
+    fn host_parallelism_hook_is_neutral_at_default() {
+        let cm = CostModel::default();
+        assert_eq!(cm.host_parallelism(), 1.0);
+        let mut par = CostModel::default();
+        par.cpu_threads = 4.0;
+        assert!(par.host_parallelism() > 3.0 && par.host_parallelism() < 4.0);
+        assert!(par.cpu_secs(1 << 30) < cm.cpu_secs(1 << 30));
+        assert!(
+            par.transfer_secs(Op::CpuPartition, 1 << 30)
+                < cm.transfer_secs(Op::CpuPartition, 1 << 30)
+        );
+        // Non-CPU channels are untouched by the hook.
+        assert_eq!(par.transfer_secs(Op::HtoD, 1 << 30), cm.transfer_secs(Op::HtoD, 1 << 30));
+        // Degenerate sub-1.0 settings never speed anything up.
+        let mut half = CostModel::default();
+        half.cpu_threads = 0.5;
+        assert_eq!(half.host_parallelism(), 1.0);
     }
 
     #[test]

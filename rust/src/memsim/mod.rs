@@ -35,14 +35,27 @@ pub struct GpuMem {
 
 /// Error returned when an allocation exceeds the memory constraint —
 /// the condition reported as '-' (OOM) in the paper's Table III.
-#[derive(Debug, Clone, thiserror::Error)]
-#[error("GPU OOM: wanted {wanted} B, used {used} B of {capacity} B ({context})")]
+/// (Display/Error are hand-implemented: thiserror's derive is not in the
+/// offline crate set.)
+#[derive(Debug, Clone)]
 pub struct OomError {
     pub wanted: u64,
     pub used: u64,
     pub capacity: u64,
     pub context: String,
 }
+
+impl std::fmt::Display for OomError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "GPU OOM: wanted {} B, used {} B of {} B ({})",
+            self.wanted, self.used, self.capacity, self.context
+        )
+    }
+}
+
+impl std::error::Error for OomError {}
 
 impl GpuMem {
     pub fn new(capacity: u64) -> Self {

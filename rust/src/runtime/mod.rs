@@ -10,10 +10,12 @@
 
 pub mod artifacts;
 pub mod executor;
+pub mod pool;
 pub mod tile_exec;
 
 pub use artifacts::{Manifest, TensorSpec};
 pub use executor::Executor;
+pub use pool::Pool;
 pub use tile_exec::BsrSpmmExec;
 
 /// Default artifact directory relative to the repo root.

@@ -1,0 +1,345 @@
+//! Std-only chunked thread pool: the concurrency substrate for the
+//! parallel row-range kernels (`spgemm_gustavson_par`, `spmm_par`, the
+//! parallel tile packer/executor) and for every later scaling feature
+//! (batched multi-tenant workloads, async prefetch).
+//!
+//! Design (the offline crate cache has no rayon, so this is built on
+//! `std::thread::scope` alone):
+//!
+//! * **Chunked self-scheduling.** A parallel region splits its work into
+//!   tasks; workers pull task indices from a shared atomic cursor, so a
+//!   worker that finishes early immediately steals the next pending chunk —
+//!   the load-balancing effect of work stealing without per-deque
+//!   machinery. Skewed inputs (RMAT hub rows) are handled by submitting
+//!   more chunks than workers.
+//! * **Scoped workers.** Threads live for one parallel region
+//!   (`std::thread::scope`), which lets tasks borrow the operands directly
+//!   — no `'static` bounds, no `unsafe` lifetime laundering. Spawn cost
+//!   (~tens of µs) is amortized over kernel-scale regions; the hot kernels
+//!   are multi-millisecond.
+//! * **Determinism.** Results are keyed by task index and merged in task
+//!   order, and in-place variants pre-split the output into fixed,
+//!   contiguous row ranges each claimed by exactly one worker. Output
+//!   never depends on execution order — the parallel
+//!   kernels are byte-identical to their serial oracles at every thread
+//!   count (enforced by `rust/tests/differential.rs`).
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Handle carrying the worker-count policy for parallel regions.
+#[derive(Debug, Clone)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    /// Pool with `threads` workers; `0` means one worker per available
+    /// hardware thread.
+    pub fn new(threads: usize) -> Pool {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        Pool { threads }
+    }
+
+    /// Single-worker pool: parallel entry points degrade to the serial path.
+    pub fn serial() -> Pool {
+        Pool { threads: 1 }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0..ntasks)` across the pool and return the results in task
+    /// order (execution order is dynamic, output order is not).
+    pub fn map_tasks<T, F>(&self, ntasks: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        self.map_tasks_init(ntasks, || (), |_, i| f(i))
+    }
+
+    /// [`Self::map_tasks`] with worker-local state: each worker builds one
+    /// `init()` value and reuses it across every task it claims. This is
+    /// how kernels with O(problem)-sized scratch (the Gustavson
+    /// accumulator/stamp arrays) oversubmit chunks for balance without
+    /// paying a scratch allocation per chunk.
+    pub fn map_tasks_init<T, S, I, F>(&self, ntasks: usize, init: I, f: F) -> Vec<T>
+    where
+        T: Send,
+        I: Fn() -> S + Sync,
+        F: Fn(&mut S, usize) -> T + Sync,
+    {
+        if ntasks == 0 {
+            return Vec::new();
+        }
+        if self.threads <= 1 || ntasks == 1 {
+            let mut state = init();
+            return (0..ntasks).map(|i| f(&mut state, i)).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<T>>> = (0..ntasks).map(|_| Mutex::new(None)).collect();
+        let nworkers = self.threads.min(ntasks);
+        std::thread::scope(|s| {
+            for _ in 0..nworkers {
+                s.spawn(|| {
+                    let mut state = init();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= ntasks {
+                            break;
+                        }
+                        let out = f(&mut state, i);
+                        *slots[i].lock().unwrap() = Some(out);
+                    }
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("worker completed every claimed task"))
+            .collect()
+    }
+
+    /// Row-parallel in-place execution: treat `data` as rows of `width`
+    /// elements, split it into `4 * threads` fixed contiguous chunks, and
+    /// let workers claim chunks off the shared cursor (oversubscription
+    /// absorbs per-row skew, e.g. RMAT hub rows). The row partition
+    /// depends only on (nrows, threads) and each output row is written by
+    /// exactly one claimant — determinism by construction. For kernels
+    /// whose per-chunk cost is a full input scan (not proportional to the
+    /// chunk), use [`Self::for_each_row_chunk_static`] instead: there,
+    /// extra chunks multiply total work.
+    pub fn for_each_row_chunk<F>(&self, data: &mut [f32], width: usize, f: F)
+    where
+        F: Fn(Range<usize>, &mut [f32]) + Sync,
+    {
+        self.row_chunks_impl(data, width, self.threads.saturating_mul(4).max(1), f)
+    }
+
+    /// [`Self::for_each_row_chunk`] with exactly one chunk per worker —
+    /// minimal chunk count for scan-all kernels (e.g. the deterministic
+    /// transpose SpMM, where every chunk reads all of A).
+    pub fn for_each_row_chunk_static<F>(&self, data: &mut [f32], width: usize, f: F)
+    where
+        F: Fn(Range<usize>, &mut [f32]) + Sync,
+    {
+        self.row_chunks_impl(data, width, self.threads, f)
+    }
+
+    fn row_chunks_impl<F>(&self, data: &mut [f32], width: usize, nchunks: usize, f: F)
+    where
+        F: Fn(Range<usize>, &mut [f32]) + Sync,
+    {
+        if width == 0 || data.is_empty() {
+            f(0..0, data);
+            return;
+        }
+        let nrows = data.len() / width;
+        debug_assert_eq!(nrows * width, data.len(), "data must be whole rows");
+        let ranges = chunk_ranges(nrows, nchunks);
+        if self.threads <= 1 || ranges.len() <= 1 {
+            f(0..nrows, data);
+            return;
+        }
+        // Pre-split into disjoint chunks; workers claim them in index
+        // order off the shared cursor. The Mutex<Option<..>> per chunk is
+        // only the ownership hand-off (each is locked exactly once).
+        let mut tasks: Vec<Mutex<Option<(Range<usize>, &mut [f32])>>> =
+            Vec::with_capacity(ranges.len());
+        let mut rest: &mut [f32] = data;
+        for r in ranges {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut((r.end - r.start) * width);
+            rest = tail;
+            tasks.push(Mutex::new(Some((r, head))));
+        }
+        let next = AtomicUsize::new(0);
+        let nworkers = self.threads.min(tasks.len());
+        std::thread::scope(|s| {
+            for _ in 0..nworkers {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= tasks.len() {
+                        break;
+                    }
+                    let (range, chunk) =
+                        tasks[i].lock().unwrap().take().expect("each chunk claimed once");
+                    f(range, chunk);
+                });
+            }
+        });
+    }
+}
+
+/// Deterministic near-equal partition of `0..n` into at most `k` contiguous
+/// ranges (earlier ranges get the remainder). Depends only on `(n, k)`.
+pub fn chunk_ranges(n: usize, k: usize) -> Vec<Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let k = k.max(1).min(n);
+    let base = n / k;
+    let rem = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut lo = 0usize;
+    for i in 0..k {
+        let len = base + usize::from(i < rem);
+        out.push(lo..lo + len);
+        lo += len;
+    }
+    debug_assert_eq!(lo, n);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_ranges_cover_contiguously() {
+        for n in [0usize, 1, 2, 7, 64, 1000] {
+            for k in [1usize, 2, 3, 8, 2000] {
+                let rs = chunk_ranges(n, k);
+                if n == 0 {
+                    assert!(rs.is_empty());
+                    continue;
+                }
+                assert!(rs.len() <= k.max(1) && rs.len() <= n);
+                assert_eq!(rs[0].start, 0);
+                assert_eq!(rs.last().unwrap().end, n);
+                for w in rs.windows(2) {
+                    assert_eq!(w[0].end, w[1].start);
+                }
+                let max = rs.iter().map(|r| r.len()).max().unwrap();
+                let min = rs.iter().map(|r| r.len()).min().unwrap();
+                assert!(max - min <= 1, "near-equal split: {min}..{max}");
+            }
+        }
+    }
+
+    #[test]
+    fn map_tasks_preserves_task_order() {
+        for threads in [1usize, 2, 4, 8] {
+            let pool = Pool::new(threads);
+            let out = pool.map_tasks(37, |i| i * i);
+            assert_eq!(out, (0..37).map(|i| i * i).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn map_tasks_edge_counts() {
+        let pool = Pool::new(4);
+        assert!(pool.map_tasks(0, |i| i).is_empty());
+        assert_eq!(pool.map_tasks(1, |i| i + 10), vec![10]);
+        // More workers than tasks.
+        assert_eq!(Pool::new(16).map_tasks(3, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn for_each_row_chunk_matches_serial() {
+        let width = 5;
+        let nrows = 23;
+        let fill = |pool: &Pool| {
+            let mut data = vec![0f32; nrows * width];
+            pool.for_each_row_chunk(&mut data, width, |range, chunk| {
+                for (local, row) in range.clone().enumerate() {
+                    for c in 0..width {
+                        chunk[local * width + c] = (row * width + c) as f32;
+                    }
+                }
+            });
+            data
+        };
+        let want = fill(&Pool::serial());
+        assert_eq!(want, (0..nrows * width).map(|i| i as f32).collect::<Vec<_>>());
+        for threads in [2usize, 4, 8, 64] {
+            assert_eq!(fill(&Pool::new(threads)), want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn for_each_row_chunk_degenerate_inputs() {
+        let pool = Pool::new(4);
+        let mut empty: Vec<f32> = Vec::new();
+        pool.for_each_row_chunk(&mut empty, 3, |range, chunk| {
+            assert!(range.is_empty() && chunk.is_empty());
+        });
+        let mut one = vec![1f32, 2.0];
+        pool.for_each_row_chunk(&mut one, 2, |range, chunk| {
+            assert_eq!(range, 0..1);
+            chunk[0] += 1.0;
+        });
+        assert_eq!(one, vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn map_tasks_init_reuses_worker_state_correctly() {
+        // Worker-local scratch must not leak between tasks in a way that
+        // changes results: fill scratch with task-dependent garbage, and
+        // require each task's output to depend only on its own index.
+        for threads in [1usize, 2, 4, 8] {
+            let pool = Pool::new(threads);
+            let out = pool.map_tasks_init(
+                50,
+                || vec![0u64; 16],
+                |scratch, i| {
+                    for (j, s) in scratch.iter_mut().enumerate() {
+                        *s = (i * 31 + j) as u64; // overwrite, never read stale
+                    }
+                    scratch.iter().sum::<u64>()
+                },
+            );
+            let want: Vec<u64> =
+                (0..50).map(|i| (0..16).map(|j| (i * 31 + j) as u64).sum()).collect();
+            assert_eq!(out, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn static_row_chunks_match_oversubscribed() {
+        let width = 3;
+        let nrows = 17;
+        let run = |oversub: bool, threads: usize| {
+            let mut data = vec![0f32; nrows * width];
+            let pool = Pool::new(threads);
+            let fill = |range: Range<usize>, chunk: &mut [f32]| {
+                for (local, row) in range.clone().enumerate() {
+                    for c in 0..width {
+                        chunk[local * width + c] = (row * 10 + c) as f32;
+                    }
+                }
+            };
+            if oversub {
+                pool.for_each_row_chunk(&mut data, width, fill);
+            } else {
+                pool.for_each_row_chunk_static(&mut data, width, fill);
+            }
+            data
+        };
+        let want = run(true, 1);
+        for threads in [1usize, 2, 4, 8] {
+            assert_eq!(run(true, threads), want);
+            assert_eq!(run(false, threads), want);
+        }
+    }
+
+    #[test]
+    fn auto_thread_count_is_positive() {
+        assert!(Pool::new(0).threads() >= 1);
+        assert_eq!(Pool::serial().threads(), 1);
+    }
+
+    #[test]
+    fn map_tasks_is_deterministic_across_runs() {
+        let pool = Pool::new(8);
+        let a = pool.map_tasks(100, |i| (i as u64).wrapping_mul(0x9e3779b97f4a7c15));
+        let b = pool.map_tasks(100, |i| (i as u64).wrapping_mul(0x9e3779b97f4a7c15));
+        assert_eq!(a, b);
+    }
+}

@@ -9,7 +9,8 @@
 
 use super::artifacts::ArtifactSpec;
 use super::executor::{Buf, Executor};
-use crate::sparse::block::pack_csr_batches;
+use super::pool::Pool;
+use crate::sparse::block::{pack_csr_batches_par, SpmmBatch};
 use crate::sparse::spmm::Dense;
 use crate::sparse::Csr;
 use anyhow::{anyhow, bail, Result};
@@ -56,12 +57,27 @@ impl BsrSpmmExec {
         bail!("no bsr_spmm artifact for feature width {f}")
     }
 
+    /// Compute `a · h` through the accelerator artifact (serial packing).
+    pub fn spmm(&self, exec: &mut Executor, a: &Csr, h: &Dense) -> Result<Dense> {
+        self.spmm_with_pool(exec, a, h, &Pool::serial())
+    }
+
     /// Compute `a · h` through the accelerator artifact.
     ///
     /// Constraints (checked): `h.ncols == f`, `a.ncols <= k`,
     /// `h.nrows == a.ncols`. Rows of `a` are processed `r*bm` at a time;
-    /// the padded feature panel is reused across batches.
-    pub fn spmm(&self, exec: &mut Executor, a: &Csr, h: &Dense) -> Result<Dense> {
+    /// the padded feature panel is reused across batches. The CPU-side
+    /// tile extraction/packing (the bridge cost, §Perf) runs on `pool`;
+    /// the PJRT dispatch itself stays serial — one client, one stream —
+    /// and the per-slot output accumulation is index-ordered, so results
+    /// are identical at every thread count.
+    pub fn spmm_with_pool(
+        &self,
+        exec: &mut Executor,
+        a: &Csr,
+        h: &Dense,
+        pool: &Pool,
+    ) -> Result<Dense> {
         let s = self.shape;
         if h.ncols != s.f {
             bail!("feature width {} != artifact f {}", h.ncols, s.f);
@@ -82,8 +98,9 @@ impl BsrSpmmExec {
         exec.load(&self.artifact)?;
         let h_lit = exec.prep_literal(&self.artifact, 3, &Buf::F32(h_pad))?;
 
-        // Fused extraction+packing (§Perf: one write per padded payload).
-        let batches = pack_csr_batches(a, s.bm, s.bk, s.r, s.nb);
+        // Fused extraction+packing (§Perf: one write per padded payload),
+        // parallel across row blocks / batches on the pool.
+        let batches = pack_csr_batches_par(a, s.bm, s.bk, s.r, s.nb, pool);
         let mut out = Dense::zeros(a.nrows, s.f);
         for batch in &batches {
             let nblk = exec.prep_literal(&self.artifact, 0, &Buf::S32(batch.nblk.clone()))?;
@@ -109,6 +126,99 @@ impl BsrSpmmExec {
         }
         Ok(out)
     }
+}
+
+/// CPU tile executor: runs the same padded-batch program `bsr_spmm`
+/// consumes, entirely on host threads. This is the parallel per-tile
+/// execution path that works without compiled artifacts (and the
+/// differential-testing oracle target for the packing/accumulation
+/// semantics — see `rust/tests/differential.rs`).
+#[derive(Debug, Clone, Copy)]
+pub struct CpuTileSpmm {
+    pub bm: usize,
+    pub bk: usize,
+    /// Row-block slots per batch (the artifact grid's `r`).
+    pub r: usize,
+    /// Tile slots per row-block slot (the artifact grid's `nb`).
+    pub nb: usize,
+}
+
+impl CpuTileSpmm {
+    /// `a · h` via pack → tile-execute, both phases on the pool.
+    pub fn spmm(&self, a: &Csr, h: &Dense, pool: &Pool) -> Dense {
+        assert_eq!(a.ncols, h.nrows, "inner dimension mismatch");
+        let batches = pack_csr_batches_par(a, self.bm, self.bk, self.r, self.nb, pool);
+        execute_batches_cpu(&batches, h, a.nrows, self.bm, self.bk, self.nb, pool)
+    }
+}
+
+/// Execute packed [`SpmmBatch`]es on the CPU, output-row-parallel.
+///
+/// Each pool worker owns a contiguous output row range and accumulates, in
+/// fixed (batch, slot, tile, column) order, every tile whose row block
+/// intersects its range — so a given output row always sees the same
+/// addition sequence regardless of thread count (deterministic), and that
+/// sequence is ascending-k, matching `spmm`'s per-row order. Zero-valued
+/// tile entries are skipped as padding positions a CSR traversal never
+/// visits. Caveat: an *explicitly stored* 0.0 in the CSR (possible via
+/// duplicate-cancelling COO input) is indistinguishable from padding after
+/// packing and is skipped too — with finite features the ±0.0-sign
+/// difference is invisible to `==`, but a non-finite feature row (Inf/NaN)
+/// multiplied by a stored zero would diverge from `spmm` (NaN vs skip).
+pub fn execute_batches_cpu(
+    batches: &[SpmmBatch],
+    h: &Dense,
+    nrows: usize,
+    bm: usize,
+    bk: usize,
+    nb: usize,
+    pool: &Pool,
+) -> Dense {
+    let f = h.ncols;
+    let mut out = Dense::zeros(nrows, f);
+    // Static split: every chunk scans the full batch/slot metadata to find
+    // its intersecting row blocks, so oversubscribed chunks would multiply
+    // that scan (pool.rs guidance for scan-all kernels).
+    pool.for_each_row_chunk_static(&mut out.data, f, |range, chunk| {
+        for batch in batches {
+            for (slot, &brow) in batch.slot_block_row.iter().enumerate() {
+                let row0 = brow * bm;
+                if row0 >= range.end || row0 + bm <= range.start {
+                    continue;
+                }
+                for j in 0..batch.nblk[slot] as usize {
+                    let bc = batch.colidx[slot * nb + j] as usize;
+                    let tile = &batch.blocks[(slot * nb + j) * bm * bk..(slot * nb + j + 1) * bm * bk];
+                    for lr in 0..bm {
+                        let row = row0 + lr;
+                        if row >= range.end {
+                            break;
+                        }
+                        if row < range.start {
+                            continue;
+                        }
+                        let local = row - range.start;
+                        let orow = &mut chunk[local * f..(local + 1) * f];
+                        for lc in 0..bk {
+                            let k = bc * bk + lc;
+                            if k >= h.nrows {
+                                break;
+                            }
+                            let av = tile[lr * bk + lc];
+                            if av == 0.0 {
+                                continue;
+                            }
+                            let hrow = h.row(k);
+                            for (o, &hv) in orow.iter_mut().zip(hrow.iter()) {
+                                *o += av * hv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    });
+    out
 }
 
 /// Executes the fused combine tile (`gcn_combine_*`): relu(x·w + b).
@@ -157,5 +267,47 @@ impl CombineExec {
             row += take;
         }
         Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::spmm::spmm;
+    use crate::sparse::Coo;
+    use crate::util::rng::Pcg;
+
+    fn random_csr(rng: &mut Pcg, nrows: usize, ncols: usize, density: f64) -> Csr {
+        let mut coo = Coo::new(nrows, ncols);
+        for r in 0..nrows {
+            for c in 0..ncols {
+                if rng.chance(density) {
+                    coo.push(r as u32, c as u32, rng.normal() as f32);
+                }
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn cpu_tile_exec_matches_spmm_at_every_thread_count() {
+        let mut rng = Pcg::seed(41);
+        let a = random_csr(&mut rng, 37, 50, 0.15);
+        let h = Dense::from_vec(50, 6, (0..300).map(|_| rng.normal() as f32).collect());
+        let want = spmm(&a, &h);
+        let exec = CpuTileSpmm { bm: 4, bk: 8, r: 3, nb: 2 };
+        for threads in [1usize, 2, 4, 8] {
+            let got = exec.spmm(&a, &h, &Pool::new(threads));
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn cpu_tile_exec_handles_empty_matrix() {
+        let a = Csr::empty(9, 12);
+        let h = Dense::zeros(12, 4);
+        let exec = CpuTileSpmm { bm: 4, bk: 4, r: 2, nb: 2 };
+        let out = exec.spmm(&a, &h, &Pool::new(4));
+        assert_eq!(out, Dense::zeros(9, 4));
     }
 }

@@ -7,6 +7,12 @@
 //! backward pass that re-streams the adjacency — and returns the makespan,
 //! the per-channel I/O breakdown and the peak GPU residency. The paper's
 //! Figures 6-9 and Table III are sweeps over these runs.
+//!
+//! Host-side compute costs (UCG's CPU share via `CostModel::cpu_secs`, the
+//! RoBW partition scan via `Op::CpuPartition`) share the
+//! `cpu_threads`/`cpu_parallel_eff` hook with the real `runtime::pool`
+//! kernels, so `--threads` moves the simulated experiments and the executed
+//! kernels together (defaults keep the calibration serial and unchanged).
 
 pub mod aires;
 pub mod etc_sched;

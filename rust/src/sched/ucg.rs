@@ -87,7 +87,10 @@ impl Scheduler for Ucg {
             let um = chunks(um_bytes, UM_CHUNKS);
             let flops_chunk = gpu_flops / um.len().max(1) as u64;
             let bytes_chunk = (a + b + c) / um.len().max(1) as u64;
-            // CPU share runs concurrently with the whole cycle.
+            // CPU share runs concurrently with the whole cycle. Its cost
+            // goes through cm.cpu_secs, so it scales with the cpu_threads
+            // hook (runtime::pool's row-range kernels are what the CPU
+            // share executes).
             sim.cpu_compute(cm, cpu_flops, t, "CPU share");
             let mut kernel_done = t;
             for ch in um {

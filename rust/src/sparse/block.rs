@@ -270,6 +270,110 @@ pub fn pack_csr_batches(a: &Csr, bm: usize, bk: usize, r: usize, nb: usize) -> V
     batches
 }
 
+/// Parallel fused packer: semantics identical to [`pack_csr_batches`]
+/// (differentially enforced by `rust/tests/differential.rs`), with the two
+/// heavy phases on the pool:
+///  * pass 1 (per-row-block touched-tile scan + sort) runs as row-block
+///    chunks via `map_tasks` — each row block's list is independent;
+///  * batch allocation + metadata fill runs one task per batch — a batch
+///    owns its buffers, so tasks write disjoint memory.
+/// The value scatter stays serial: it writes into many batches at once and
+/// is one store per nnz, far below the padded-payload zeroing the parallel
+/// phases absorb. Output is deterministic for every thread count (no task
+/// writes another task's slots; merges are index-ordered).
+pub fn pack_csr_batches_par(
+    a: &Csr,
+    bm: usize,
+    bk: usize,
+    r: usize,
+    nb: usize,
+    pool: &crate::runtime::pool::Pool,
+) -> Vec<SpmmBatch> {
+    assert!(bm > 0 && bk > 0);
+    let nrb = a.nrows.div_ceil(bm);
+
+    // Pass 1 (parallel): per row block, the sorted touched block-column list.
+    let rb_ranges = crate::runtime::pool::chunk_ranges(nrb, pool.threads().saturating_mul(4).max(1));
+    let touched_chunks: Vec<Vec<Vec<u32>>> = pool.map_tasks(rb_ranges.len(), |ci| {
+        let range = rb_ranges[ci].clone();
+        let mut out = Vec::with_capacity(range.len());
+        for rbi in range {
+            let rlo = rbi * bm;
+            let rhi = (rlo + bm).min(a.nrows);
+            let mut touched: Vec<u32> = Vec::new();
+            for row in rlo..rhi {
+                for (c, _) in a.row(row) {
+                    touched.push(c / bk as u32);
+                }
+            }
+            touched.sort_unstable();
+            touched.dedup();
+            out.push(touched);
+        }
+        out
+    });
+    let touched_all: Vec<Vec<u32>> = touched_chunks.into_iter().flatten().collect();
+    debug_assert_eq!(touched_all.len(), nrb);
+
+    // Slot assignment (serial prefix sum, cheap).
+    let mut chunk_start = Vec::with_capacity(nrb);
+    let mut slot_rb: Vec<(usize, usize)> = Vec::new(); // slot -> (row block, chunk)
+    let mut nslots = 0usize;
+    for (rbi, touched) in touched_all.iter().enumerate() {
+        chunk_start.push(nslots);
+        let nchunks = touched.len().div_ceil(nb);
+        for ch in 0..nchunks {
+            slot_rb.push((rbi, ch));
+        }
+        nslots += nchunks;
+    }
+
+    // Batch allocation + metadata (parallel, one task per batch).
+    let nbatches = nslots.div_ceil(r).max(1);
+    let mut batches: Vec<SpmmBatch> = pool.map_tasks(nbatches, |bi| {
+        let mut batch = SpmmBatch {
+            slot_block_row: Vec::with_capacity(r),
+            nblk: vec![0i32; r],
+            colidx: vec![0i32; r * nb],
+            blocks: vec![0f32; r * nb * bm * bk],
+        };
+        let lo_slot = bi * r;
+        let hi_slot = (lo_slot + r).min(nslots);
+        for slot in lo_slot..hi_slot {
+            let (rbi, ch) = slot_rb[slot];
+            let touched = &touched_all[rbi];
+            let si = slot - lo_slot;
+            let lo = ch * nb;
+            let hi = (lo + nb).min(touched.len());
+            batch.slot_block_row.push(rbi);
+            batch.nblk[si] = (hi - lo) as i32;
+            for (j, t) in (lo..hi).enumerate() {
+                batch.colidx[si * nb + j] = touched[t] as i32;
+            }
+        }
+        batch
+    });
+
+    // Pass 2 (serial): scatter each nnz into its unique destination.
+    for (rbi, touched) in touched_all.iter().enumerate() {
+        let rlo = rbi * bm;
+        let rhi = (rlo + bm).min(a.nrows);
+        for row in rlo..rhi {
+            let lr = row - rlo;
+            for (c, v) in a.row(row) {
+                let bc = c / bk as u32;
+                let t = touched.binary_search(&bc).unwrap();
+                let slot = chunk_start[rbi] + t / nb;
+                let j = t % nb;
+                let (bi, si) = (slot / r, slot % r);
+                let lc = c as usize - bc as usize * bk;
+                batches[bi].blocks[(si * nb + j) * bm * bk + lr * bk + lc] = v;
+            }
+        }
+    }
+    batches
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -401,6 +505,28 @@ mod tests {
                 assert_eq!(x.nblk, y.nblk);
                 assert_eq!(x.colidx, y.colidx);
                 assert_eq!(x.blocks, y.blocks);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_pack_equals_serial_fused() {
+        use crate::runtime::pool::Pool;
+        let mut rng = Pcg::seed(36);
+        for &(m, n, bm, bk, r, nb) in
+            &[(64usize, 128usize, 8usize, 8usize, 4usize, 3usize), (33, 70, 16, 8, 2, 5), (3, 90, 4, 4, 2, 2)]
+        {
+            let a = random_csr(&mut rng, m, n, 0.12);
+            let want = pack_csr_batches(&a, bm, bk, r, nb);
+            for threads in [1usize, 2, 4, 8] {
+                let got = pack_csr_batches_par(&a, bm, bk, r, nb, &Pool::new(threads));
+                assert_eq!(want.len(), got.len(), "threads={threads}");
+                for (x, y) in want.iter().zip(got.iter()) {
+                    assert_eq!(x.slot_block_row, y.slot_block_row, "threads={threads}");
+                    assert_eq!(x.nblk, y.nblk, "threads={threads}");
+                    assert_eq!(x.colidx, y.colidx, "threads={threads}");
+                    assert_eq!(x.blocks, y.blocks, "threads={threads}");
+                }
             }
         }
     }

@@ -81,4 +81,35 @@ mod tests {
         assert_eq!(csr.row_nnz(0), 0);
         assert_eq!(csr.row_nnz(3), 1);
     }
+
+    #[test]
+    fn prop_coo_csr_csc_roundtrips_validate() {
+        // Every hop of Coo -> Csr -> Csc -> Csr -> Coo preserves the matrix
+        // and keeps the structural invariants, across random and
+        // pathological shapes (empty rows, hub row, 1xN, Nx1).
+        use crate::testing::{check, gen};
+        check("coo<->csr<->csc roundtrip", 30, |rng| {
+            let a = if rng.chance(0.5) {
+                gen::csr(rng, 24, 0.35)
+            } else {
+                gen::pathological(rng, 24)
+            };
+            a.validate()?;
+            let via_coo = a.to_coo().to_csr();
+            if via_coo != a {
+                return Err("csr -> coo -> csr not identity".into());
+            }
+            let csc = a.to_csc();
+            csc.validate()?;
+            let back = csc.to_csr();
+            back.validate()?;
+            if back != a {
+                return Err("csr -> csc -> csr not identity".into());
+            }
+            if back.to_coo().to_csr() != a {
+                return Err("full loop not identity".into());
+            }
+            Ok(())
+        });
+    }
 }

@@ -1,6 +1,6 @@
 //! Compressed sparse row (CSR) matrix (paper Fig. 2, matrix A's format).
 
-use super::{Csc, IDX_BYTES, PTR_BYTES, VAL_BYTES};
+use super::{Coo, Csc, IDX_BYTES, PTR_BYTES, VAL_BYTES};
 
 /// CSR matrix: `rowptr[i]..rowptr[i+1]` indexes the non-zeros of row `i`.
 #[derive(Debug, Clone, PartialEq)]
@@ -124,6 +124,18 @@ impl Csr {
             }
         }
         Csc { nrows: self.nrows, ncols: self.ncols, colptr, rowidx, vals }
+    }
+
+    /// Back to COO triplets (row-major order — `to_csr` is the exact
+    /// inverse, making Coo↔Csr a lossless round trip).
+    pub fn to_coo(&self) -> Coo {
+        let mut coo = Coo::new(self.nrows, self.ncols);
+        for r in 0..self.nrows {
+            for (c, v) in self.row(r) {
+                coo.push(r as u32, c, v);
+            }
+        }
+        coo
     }
 
     /// Dense row-major materialization (tests / small subgraphs only).

@@ -1,12 +1,20 @@
 //! Reference SpGEMM: the CPU correctness oracle for the accelerator path.
 //!
-//! Two algorithms:
+//! Three algorithms:
 //!  * `spgemm_gustavson` — row-wise Gustavson with a dense accumulator;
 //!    the oracle every other SpGEMM implementation in the repo is checked
 //!    against.
+//!  * `spgemm_gustavson_par` — the row-range parallel variant on
+//!    [`crate::runtime::pool::Pool`]: fixed contiguous row chunks computed
+//!    independently (each with its own accumulator) and merged in row
+//!    order. Per-row arithmetic order is identical to the serial path, so
+//!    the output is byte-identical to `spgemm_gustavson` at every thread
+//!    count (the `rust/tests/differential.rs` contract).
 //!  * `spgemm_csr_csc` — the paper's formulation (CSR A rows matched
 //!    against CSC B columns, §III-B "matching process"); also returns the
 //!    match count used to validate the Eq. 5 output-memory model.
+
+use crate::runtime::pool::{chunk_ranges, Pool};
 
 use super::{Csc, Csr};
 
@@ -50,6 +58,100 @@ pub fn spgemm_gustavson(a: &Csr, b: &Csr) -> Csr {
         rowptr.push(colidx.len());
     }
     Csr { nrows: a.nrows, ncols: n, rowptr, colidx, vals }
+}
+
+/// Worker-local Gustavson scratch (O(ncols(B)) — allocated once per pool
+/// worker via `map_tasks_init`, reused across every chunk that worker
+/// claims). Safe to reuse: `stamp` entries hold previously processed row
+/// ids, and row ranges are disjoint, so a stale entry can never equal the
+/// current row; `acc` is restored to exact 0.0 after every row.
+struct GustScratch {
+    acc: Vec<f32>,
+    stamp: Vec<u32>,
+    touched: Vec<u32>,
+}
+
+impl GustScratch {
+    fn new(ncols_b: usize) -> GustScratch {
+        GustScratch { acc: vec![0f32; ncols_b], stamp: vec![u32::MAX; ncols_b], touched: Vec::new() }
+    }
+}
+
+/// Gustavson over the row range `[lo, hi)` of A. The inner loops mirror
+/// `spgemm_gustavson` exactly (same traversal, same accumulation order,
+/// same explicit-zero drop), which is what makes the parallel path
+/// bit-compatible with the serial oracle.
+fn gustavson_rows(
+    a: &Csr,
+    b: &Csr,
+    lo: usize,
+    hi: usize,
+    s: &mut GustScratch,
+) -> (Vec<usize>, Vec<u32>, Vec<f32>) {
+    // Row pointers relative to this range (rowptr[0] == 0).
+    let mut rowptr = Vec::with_capacity(hi - lo + 1);
+    rowptr.push(0usize);
+    let mut colidx: Vec<u32> = Vec::new();
+    let mut vals: Vec<f32> = Vec::new();
+
+    for i in lo..hi {
+        s.touched.clear();
+        for (k, av) in a.row(i) {
+            for (j, bv) in b.row(k as usize) {
+                if s.stamp[j as usize] != i as u32 {
+                    s.stamp[j as usize] = i as u32;
+                    s.touched.push(j);
+                }
+                s.acc[j as usize] += av * bv;
+            }
+        }
+        s.touched.sort_unstable();
+        for &j in &s.touched {
+            let v = s.acc[j as usize];
+            if v != 0.0 {
+                colidx.push(j);
+                vals.push(v);
+            }
+            s.acc[j as usize] = 0.0;
+        }
+        rowptr.push(colidx.len());
+    }
+    (rowptr, colidx, vals)
+}
+
+/// Row-range parallel Gustavson SpGEMM: C = A·B on the thread pool.
+///
+/// Rows are split into `4 * threads` contiguous chunks (extra chunks let
+/// the pool's self-scheduling absorb hub-row skew); each chunk runs
+/// [`gustavson_rows`]; the ordered merge concatenates chunk outputs by row.
+/// Deterministic: byte-identical to [`spgemm_gustavson`] for every thread
+/// count, because each output row is produced by exactly one task with the
+/// serial per-row arithmetic order.
+pub fn spgemm_gustavson_par(a: &Csr, b: &Csr, pool: &Pool) -> Csr {
+    assert_eq!(a.ncols, b.nrows, "inner dimension mismatch");
+    let ranges = chunk_ranges(a.nrows, pool.threads().saturating_mul(4).max(1));
+    let parts = pool.map_tasks_init(
+        ranges.len(),
+        || GustScratch::new(b.ncols),
+        |scratch, i| {
+            let r = &ranges[i];
+            gustavson_rows(a, b, r.start, r.end, scratch)
+        },
+    );
+
+    // Ordered merge (pure concatenation: chunks hold complete rows).
+    let nnz: usize = parts.iter().map(|(_, c, _)| c.len()).sum();
+    let mut rowptr = Vec::with_capacity(a.nrows + 1);
+    rowptr.push(0usize);
+    let mut colidx: Vec<u32> = Vec::with_capacity(nnz);
+    let mut vals: Vec<f32> = Vec::with_capacity(nnz);
+    for (rp, ci, vs) in parts {
+        let base = *rowptr.last().unwrap();
+        rowptr.extend(rp[1..].iter().map(|p| p + base));
+        colidx.extend_from_slice(&ci);
+        vals.extend_from_slice(&vs);
+    }
+    Csr { nrows: a.nrows, ncols: b.ncols, rowptr, colidx, vals }
 }
 
 /// Result of the CSR×CSC formulation: the product plus the number of
@@ -216,6 +318,39 @@ mod tests {
         let b = random_csr(&mut rng, 12, 12, 0.3);
         let c = spgemm_gustavson(&a, &b);
         assert!(symbolic_nnz_upper_bound(&a, &b) >= c.nnz() as u64);
+    }
+
+    #[test]
+    fn parallel_matches_serial_oracle_exactly() {
+        use crate::runtime::pool::Pool;
+        let mut rng = Pcg::seed(9);
+        for _ in 0..6 {
+            let m = rng.range(1, 40);
+            let k = rng.range(1, 40);
+            let n = rng.range(1, 40);
+            let a = random_csr(&mut rng, m, k, 0.25);
+            let b = random_csr(&mut rng, k, n, 0.25);
+            let want = spgemm_gustavson(&a, &b);
+            for threads in [1usize, 2, 4, 8] {
+                let got = spgemm_gustavson_par(&a, &b, &Pool::new(threads));
+                got.validate().unwrap();
+                assert_eq!(got, want, "threads={threads} m={m} k={k} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_handles_empty_and_tiny() {
+        use crate::runtime::pool::Pool;
+        let pool = Pool::new(8);
+        let a = Csr::empty(3, 4);
+        let b = Csr::empty(4, 2);
+        assert_eq!(spgemm_gustavson_par(&a, &b, &pool), spgemm_gustavson(&a, &b));
+        // Fewer rows than workers.
+        let mut rng = Pcg::seed(10);
+        let a = random_csr(&mut rng, 2, 6, 0.5);
+        let b = random_csr(&mut rng, 6, 3, 0.5);
+        assert_eq!(spgemm_gustavson_par(&a, &b, &pool), spgemm_gustavson(&a, &b));
     }
 
     #[test]

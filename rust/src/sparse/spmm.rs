@@ -1,5 +1,12 @@
 //! SpMM: CSR × dense — the aggregation step (Eq. 1) when the feature panel
 //! is materialized densely, and the CPU oracle for the `bsr_spmm` artifact.
+//!
+//! `spmm_par` / `spmm_transpose_par` are the row-range parallel variants on
+//! [`crate::runtime::pool::Pool`]: fixed contiguous output-row partitions,
+//! one writer per row, serial per-row arithmetic order — byte-identical to
+//! the serial oracles at every thread count.
+
+use crate::runtime::pool::Pool;
 
 use super::Csr;
 
@@ -84,6 +91,27 @@ pub fn spmm(a: &Csr, h: &Dense) -> Dense {
     out
 }
 
+/// Row-parallel `out = A · H`: output rows are split into one contiguous
+/// chunk per pool worker; each worker runs the serial inner loop over its
+/// rows. Byte-identical to [`spmm`] (same per-row accumulation order).
+pub fn spmm_par(a: &Csr, h: &Dense, pool: &Pool) -> Dense {
+    assert_eq!(a.ncols, h.nrows, "inner dimension mismatch");
+    let f = h.ncols;
+    let mut out = Dense::zeros(a.nrows, f);
+    pool.for_each_row_chunk(&mut out.data, f, |range, chunk| {
+        for (local, i) in range.clone().enumerate() {
+            let orow = &mut chunk[local * f..(local + 1) * f];
+            for (k, av) in a.row(i) {
+                let hrow = h.row(k as usize);
+                for (o, &hv) in orow.iter_mut().zip(hrow.iter()) {
+                    *o += av * hv;
+                }
+            }
+        }
+    });
+    out
+}
+
 /// out = Aᵀ · H without materializing Aᵀ (scatter form) — backward pass of
 /// aggregation for the training path.
 pub fn spmm_transpose(a: &Csr, h: &Dense) -> Dense {
@@ -99,6 +127,41 @@ pub fn spmm_transpose(a: &Csr, h: &Dense) -> Dense {
             }
         }
     }
+    out
+}
+
+/// Row-parallel `out = Aᵀ · H`. The serial form scatters (row i of A adds
+/// into output row k for every stored (i, k)), which parallelizes only via
+/// atomics — and atomics-ordered accumulation is non-deterministic. Instead
+/// each worker owns a contiguous *output* row range and scans all of A,
+/// keeping only the contributions that land in its range. Each output
+/// element receives the same additions in the same (i, then colidx) order
+/// as [`spmm_transpose`], so the result is byte-identical at every thread
+/// count; the cost is one read pass over nnz(A) per worker — the
+/// determinism-over-scatter tradeoff, acceptable because A is read-shared
+/// and the pass is bandwidth-cheap next to the FLOP work it feeds. Uses
+/// the static (one chunk per worker) split: every chunk scans all of A,
+/// so oversubscribed chunks would multiply total work.
+pub fn spmm_transpose_par(a: &Csr, h: &Dense, pool: &Pool) -> Dense {
+    assert_eq!(a.nrows, h.nrows, "inner dimension mismatch");
+    let f = h.ncols;
+    let mut out = Dense::zeros(a.ncols, f);
+    pool.for_each_row_chunk_static(&mut out.data, f, |range, chunk| {
+        for i in 0..a.nrows {
+            let hrow = h.row(i);
+            for (k, av) in a.row(i) {
+                let k = k as usize;
+                if k < range.start || k >= range.end {
+                    continue;
+                }
+                let local = k - range.start;
+                let orow = &mut chunk[local * f..(local + 1) * f];
+                for (o, &hv) in orow.iter_mut().zip(hrow.iter()) {
+                    *o += av * hv;
+                }
+            }
+        }
+    });
     out
 }
 
@@ -193,6 +256,42 @@ mod tests {
             let got = spmm(&a, &h);
             let want = dense_spmm(&a, &h);
             assert!(got.max_abs_diff(&want) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn spmm_par_matches_serial_exactly() {
+        let mut rng = Pcg::seed(23);
+        for _ in 0..6 {
+            let m = rng.range(1, 30);
+            let k = rng.range(1, 30);
+            let f = rng.range(1, 10);
+            let a = random_csr(&mut rng, m, k, 0.3);
+            let h = random_dense(&mut rng, k, f);
+            let want = spmm(&a, &h);
+            for threads in [1usize, 2, 4, 8] {
+                assert_eq!(spmm_par(&a, &h, &Pool::new(threads)), want, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn spmm_transpose_par_matches_serial_exactly() {
+        let mut rng = Pcg::seed(24);
+        for _ in 0..6 {
+            let m = rng.range(1, 30);
+            let k = rng.range(1, 30);
+            let f = rng.range(1, 10);
+            let a = random_csr(&mut rng, m, k, 0.3);
+            let h = random_dense(&mut rng, m, f);
+            let want = spmm_transpose(&a, &h);
+            for threads in [1usize, 2, 4, 8] {
+                assert_eq!(
+                    spmm_transpose_par(&a, &h, &Pool::new(threads)),
+                    want,
+                    "threads={threads}"
+                );
+            }
         }
     }
 

@@ -1,0 +1,260 @@
+//! Differential-testing oracle suite for the parallel execution engine.
+//!
+//! Contract: every parallel row-range kernel produces output **exactly
+//! equal** (same structure, same f32 bits up to `==`) to its serial oracle
+//! at every thread count in {1, 2, 4, 8} — determinism comes from fixed
+//! row-range partitioning plus ordered merges, never atomics-ordered
+//! accumulation, so equality is structural, not statistical.
+//!
+//! Operands come from three sources: random CSR/CSC via `testing::gen`
+//! (density-floored so properties cannot pass vacuously), pathological
+//! shapes (empty rows, hub row, 1×N, N×1), and the graphgen families the
+//! paper's datasets map to (rmat, road, kmer adjacencies).
+//!
+//! Case count per property: `AIRES_PROP_CASES` (default 64).
+
+use aires::runtime::pool::Pool;
+use aires::runtime::tile_exec::CpuTileSpmm;
+use aires::sparse::block::{pack_csr_batches, pack_csr_batches_par, SpmmBatch};
+use aires::sparse::spgemm::{spgemm_gustavson, spgemm_gustavson_par};
+use aires::sparse::spmm::{spmm, spmm_par, spmm_transpose, spmm_transpose_par};
+use aires::sparse::Csr;
+use aires::testing::{check, gen};
+use aires::util::rng::Pcg;
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+fn batches_eq(a: &[SpmmBatch], b: &[SpmmBatch]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b.iter()).all(|(x, y)| {
+            x.slot_block_row == y.slot_block_row
+                && x.nblk == y.nblk
+                && x.colidx == y.colidx
+                && x.blocks == y.blocks
+        })
+}
+
+/// The paper-family graphs at test scale (square adjacencies).
+fn graph_cases() -> Vec<(&'static str, Csr)> {
+    let mut rng = Pcg::seed(7);
+    vec![
+        ("rmat-9", aires::graphgen::rmat::generate(&mut rng, 9, 8, Default::default())),
+        ("road-500", aires::graphgen::road::generate(&mut rng, 500)),
+        ("kmer-600", aires::graphgen::kmer::generate(&mut rng, 600, 3.2)),
+    ]
+}
+
+// ------------------------------------------------------------------ SpGEMM
+
+#[test]
+fn diff_spgemm_par_random_operands() {
+    check("spgemm_gustavson_par == oracle (random)", 101, |rng| {
+        let a = gen::csr(rng, 40, 0.35);
+        let n = rng.range(1, 41);
+        let b = gen::csr_with_shape(rng, a.ncols, n, 0.35);
+        let want = spgemm_gustavson(&a, &b);
+        for &t in &THREADS {
+            let got = spgemm_gustavson_par(&a, &b, &Pool::new(t));
+            got.validate()?;
+            if got != want {
+                return Err(format!("threads={t}: parallel SpGEMM diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn diff_spgemm_par_pathological_operands() {
+    check("spgemm_gustavson_par == oracle (pathological)", 102, |rng| {
+        let a = gen::pathological(rng, 24);
+        let n = rng.range(1, 25);
+        let b = gen::csr_with_shape(rng, a.ncols, n, 0.3);
+        let want = spgemm_gustavson(&a, &b);
+        for &t in &THREADS {
+            if spgemm_gustavson_par(&a, &b, &Pool::new(t)) != want {
+                return Err(format!(
+                    "threads={t}: diverged on pathological {}x{} (nnz {})",
+                    a.nrows,
+                    a.ncols,
+                    a.nnz()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn diff_spgemm_par_graph_families() {
+    for (name, g) in graph_cases() {
+        let want = spgemm_gustavson(&g, &g);
+        for &t in &THREADS {
+            let got = spgemm_gustavson_par(&g, &g, &Pool::new(t));
+            assert_eq!(got, want, "{name}: A*A diverged at {t} threads");
+        }
+    }
+}
+
+// -------------------------------------------------------------------- SpMM
+
+#[test]
+fn diff_spmm_par_random_operands() {
+    check("spmm_par == oracle (random)", 103, |rng| {
+        let a = gen::csr(rng, 40, 0.3);
+        let f = rng.range(1, 12);
+        let h = gen::dense(rng, a.ncols, f);
+        let want = spmm(&a, &h);
+        for &t in &THREADS {
+            if spmm_par(&a, &h, &Pool::new(t)) != want {
+                return Err(format!("threads={t}: parallel SpMM diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn diff_spmm_par_pathological_operands() {
+    check("spmm_par == oracle (pathological)", 104, |rng| {
+        let a = gen::pathological(rng, 24);
+        let f = rng.range(1, 12);
+        let h = gen::dense(rng, a.ncols, f);
+        let want = spmm(&a, &h);
+        for &t in &THREADS {
+            if spmm_par(&a, &h, &Pool::new(t)) != want {
+                return Err(format!("threads={t}: diverged on {}x{}", a.nrows, a.ncols));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn diff_spmm_transpose_par_random_operands() {
+    check("spmm_transpose_par == oracle", 105, |rng| {
+        let a = gen::csr(rng, 40, 0.3);
+        let f = rng.range(1, 12);
+        let h = gen::dense(rng, a.nrows, f);
+        let want = spmm_transpose(&a, &h);
+        for &t in &THREADS {
+            if spmm_transpose_par(&a, &h, &Pool::new(t)) != want {
+                return Err(format!("threads={t}: parallel transpose SpMM diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn diff_spmm_par_graph_families() {
+    let mut rng = Pcg::seed(8);
+    for (name, g) in graph_cases() {
+        let h = gen::dense(&mut rng, g.ncols, 16);
+        let want = spmm(&g, &h);
+        let want_t = spmm_transpose(&g, &h);
+        for &t in &THREADS {
+            let pool = Pool::new(t);
+            assert_eq!(spmm_par(&g, &h, &pool), want, "{name}: SpMM diverged at {t} threads");
+            assert_eq!(
+                spmm_transpose_par(&g, &h, &pool),
+                want_t,
+                "{name}: transpose SpMM diverged at {t} threads"
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------- tile pack/execute
+
+#[test]
+fn diff_pack_par_equals_serial() {
+    check("pack_csr_batches_par == serial", 106, |rng| {
+        let a = if rng.chance(0.3) { gen::pathological(rng, 32) } else { gen::csr(rng, 32, 0.25) };
+        let bm = 1usize << rng.range(0, 4);
+        let bk = 1usize << rng.range(0, 4);
+        let r = rng.range(1, 9);
+        let nb = rng.range(1, 9);
+        let want = pack_csr_batches(&a, bm, bk, r, nb);
+        for &t in &THREADS {
+            let got = pack_csr_batches_par(&a, bm, bk, r, nb, &Pool::new(t));
+            if !batches_eq(&want, &got) {
+                return Err(format!(
+                    "threads={t}: pack diverged (bm={bm} bk={bk} r={r} nb={nb})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn diff_cpu_tile_exec_matches_spmm() {
+    check("CpuTileSpmm == spmm", 107, |rng| {
+        let a = if rng.chance(0.3) { gen::pathological(rng, 32) } else { gen::csr(rng, 32, 0.2) };
+        let f = rng.range(1, 10);
+        let h = gen::dense(rng, a.ncols, f);
+        let exec = CpuTileSpmm {
+            bm: 1usize << rng.range(0, 4),
+            bk: 1usize << rng.range(0, 4),
+            r: rng.range(1, 7),
+            nb: rng.range(1, 7),
+        };
+        let want = spmm(&a, &h);
+        for &t in &THREADS {
+            let got = exec.spmm(&a, &h, &Pool::new(t));
+            if got != want {
+                return Err(format!(
+                    "threads={t}: tile executor diverged (bm={} bk={} r={} nb={})",
+                    exec.bm, exec.bk, exec.r, exec.nb
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn diff_cpu_tile_exec_graph_families() {
+    let mut rng = Pcg::seed(9);
+    let exec = CpuTileSpmm { bm: 8, bk: 8, r: 4, nb: 4 };
+    for (name, g) in graph_cases() {
+        let h = gen::dense(&mut rng, g.ncols, 8);
+        let want = spmm(&g, &h);
+        for &t in &THREADS {
+            assert_eq!(
+                exec.spmm(&g, &h, &Pool::new(t)),
+                want,
+                "{name}: tile executor diverged at {t} threads"
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------------- edge shapes
+
+#[test]
+fn diff_more_workers_than_rows() {
+    // Thread counts far beyond the row count must degrade gracefully.
+    let mut rng = Pcg::seed(11);
+    let a = gen::csr_with_shape(&mut rng, 3, 40, 0.4);
+    let b = gen::csr_with_shape(&mut rng, 40, 5, 0.4);
+    let h = gen::dense(&mut rng, 40, 6);
+    let pool = Pool::new(64);
+    assert_eq!(spgemm_gustavson_par(&a, &b, &pool), spgemm_gustavson(&a, &b));
+    assert_eq!(spmm_par(&a, &h, &pool), spmm(&a, &h));
+}
+
+#[test]
+fn diff_empty_operands() {
+    let a = Csr::empty(6, 9);
+    let b = Csr::empty(9, 4);
+    let h = aires::sparse::spmm::Dense::zeros(9, 3);
+    for &t in &THREADS {
+        let pool = Pool::new(t);
+        assert_eq!(spgemm_gustavson_par(&a, &b, &pool), spgemm_gustavson(&a, &b));
+        assert_eq!(spmm_par(&a, &h, &pool), spmm(&a, &h));
+        assert_eq!(spmm_transpose_par(&a, &aires::sparse::spmm::Dense::zeros(6, 3), &pool),
+            spmm_transpose(&a, &aires::sparse::spmm::Dense::zeros(6, 3)));
+    }
+}

@@ -8,10 +8,15 @@ use crate::util::Stopwatch;
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Case label as printed in the `BENCH` log line.
     pub name: String,
+    /// Timed iterations (excluding warmup).
     pub iters: usize,
+    /// Mean wall-clock seconds per iteration.
     pub mean_s: f64,
+    /// Sample standard deviation of the iteration times.
     pub stddev_s: f64,
+    /// Fastest iteration.
     pub min_s: f64,
 }
 

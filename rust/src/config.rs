@@ -22,8 +22,11 @@ use anyhow::{anyhow, bail, Result};
 /// A full experiment configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
+    /// Calibrated simulator cost model with any overrides applied.
     pub cost_model: CostModel,
+    /// GCN feature width (paper default 256).
     pub feat_dim: u64,
+    /// GCN layers per epoch.
     pub layers: u32,
     /// Catalog dataset names to evaluate (empty = all).
     pub datasets: Vec<String>,
@@ -31,6 +34,15 @@ pub struct Config {
     /// (1 = serial, 0 = one per hardware thread). The CLI's `--threads`
     /// flag overrides this.
     pub threads: usize,
+    /// Segment staging depth for the executed `runtime::prefetch` pipeline
+    /// (1 = serial staging, 2 = double buffering). Output is byte-identical
+    /// at every depth; only overlap changes. `None` = unset: execution uses
+    /// the double-buffering default of 2 and the simulator hook stays at
+    /// its depth-1 calibration baseline. When set (here or via the CLI's
+    /// `--prefetch-depth`, which wins), the CLI mirrors the depth into
+    /// `cost_model.prefetch_depth` so modelled Phase II overhead moves
+    /// with the executed pipeline.
+    pub prefetch_depth: Option<usize>,
 }
 
 impl Default for Config {
@@ -41,6 +53,7 @@ impl Default for Config {
             layers: crate::coordinator::LAYERS,
             datasets: Vec::new(),
             threads: 1,
+            prefetch_depth: None,
         }
     }
 }
@@ -67,6 +80,8 @@ fn set_cm_field(cm: &mut CostModel, key: &str, v: f64) -> Result<()> {
         "kernel_launch_s" => cm.kernel_launch_s = v,
         "cpu_threads" => cm.cpu_threads = v,
         "cpu_parallel_eff" => cm.cpu_parallel_eff = v,
+        "partition_threads" => cm.partition_threads = v,
+        "prefetch_depth" => cm.prefetch_depth = v,
         other => bail!("unknown cost_model field {other:?}"),
     }
     Ok(())
@@ -115,6 +130,15 @@ impl Config {
                     }
                     cfg.threads = n as usize;
                 }
+                "prefetch_depth" => {
+                    let n = val
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("prefetch_depth must be a number"))?;
+                    if n < 1.0 || n.fract() != 0.0 {
+                        bail!("prefetch_depth must be a positive integer (1 = serial)");
+                    }
+                    cfg.prefetch_depth = Some(n as usize);
+                }
                 "datasets" => {
                     let arr =
                         val.as_arr().ok_or_else(|| anyhow!("datasets must be an array"))?;
@@ -138,6 +162,12 @@ impl Config {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow!("reading config {path}: {e}"))?;
         Self::from_json_str(&text)
+    }
+
+    /// Staging depth for the executed pipeline: the config's key when set,
+    /// else the double-buffering default of 2 (floored at 1).
+    pub fn resolved_prefetch_depth(&self) -> usize {
+        self.prefetch_depth.unwrap_or(2).max(1)
     }
 
     /// The catalog entries this config selects.
@@ -177,6 +207,8 @@ impl Config {
             ("kernel_launch_s", cm.kernel_launch_s),
             ("cpu_threads", cm.cpu_threads),
             ("cpu_parallel_eff", cm.cpu_parallel_eff),
+            ("partition_threads", cm.partition_threads),
+            ("prefetch_depth", cm.prefetch_depth),
         ] {
             cm_map.insert(k.to_string(), Json::Num(v));
         }
@@ -185,6 +217,9 @@ impl Config {
         root.insert("feat_dim".to_string(), Json::Num(self.feat_dim as f64));
         root.insert("layers".to_string(), Json::Num(self.layers as f64));
         root.insert("threads".to_string(), Json::Num(self.threads as f64));
+        if let Some(d) = self.prefetch_depth {
+            root.insert("prefetch_depth".to_string(), Json::Num(d as f64));
+        }
         root.insert(
             "datasets".to_string(),
             Json::Arr(self.datasets.iter().map(|d| Json::Str(d.clone())).collect()),
@@ -238,6 +273,32 @@ mod tests {
         assert!(Config::from_json_str(r#"{"threads":2.5}"#).is_err());
         let back = Config::from_json_str(&cfg.to_json().to_string()).unwrap();
         assert_eq!(back.threads, 4);
+    }
+
+    #[test]
+    fn prefetch_depth_key_roundtrips_and_validates() {
+        let cfg = Config::from_json_str(r#"{"prefetch_depth":4}"#).unwrap();
+        assert_eq!(cfg.prefetch_depth, Some(4));
+        assert_eq!(cfg.resolved_prefetch_depth(), 4);
+        let unset = Config::default();
+        assert_eq!(unset.prefetch_depth, None);
+        assert_eq!(unset.resolved_prefetch_depth(), 2, "double buffering by default");
+        assert!(Config::from_json_str(r#"{"prefetch_depth":0}"#).is_err());
+        assert!(Config::from_json_str(r#"{"prefetch_depth":1.5}"#).is_err());
+        let back = Config::from_json_str(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(back.prefetch_depth, Some(4), "set key survives the roundtrip");
+        let unset_back = Config::from_json_str(&unset.to_json().to_string()).unwrap();
+        assert_eq!(unset_back.prefetch_depth, None, "unset stays unset through the roundtrip");
+        // The simulator-side hooks stay neutral unless explicitly set.
+        assert_eq!(cfg.cost_model.prefetch_depth, 1.0);
+        assert_eq!(cfg.cost_model.partition_threads, 1.0);
+        let cm = Config::from_json_str(
+            r#"{"cost_model":{"prefetch_depth":2,"partition_threads":8}}"#,
+        )
+        .unwrap()
+        .cost_model;
+        assert_eq!(cm.staging_exposure(), 0.5);
+        assert!(cm.partition_parallelism() > 6.0);
     }
 
     #[test]

@@ -15,6 +15,7 @@ use crate::sparse::Csr;
 /// Paper model config (§V-A): 256-wide features, 99% sparse, 1 GCN layer
 /// per epoch cycle pair.
 pub const FEAT_DIM: u64 = 256;
+/// GCN layers per epoch (see [`FEAT_DIM`]).
 pub const LAYERS: u32 = 1;
 
 /// Fixed CPU cost per partial-row boundary in the naive pipeline: CSR
@@ -28,12 +29,17 @@ pub const MERGE_FIXED_S: f64 = 0.022;
 /// as a percentage of the SpGEMM computation latency.
 #[derive(Debug, Clone)]
 pub struct Fig3Row {
+    /// Dataset name.
     pub dataset: String,
     /// Segment byte budget left for CSR A after the static reservation.
     pub seg_budget: u64,
+    /// Naive segments the budget produces.
     pub n_segments: u64,
+    /// Time spent merging partial rows (the Fig. 3 overhead).
     pub merge_secs: f64,
+    /// SpGEMM compute time the overhead is normalized against.
     pub compute_secs: f64,
+    /// `merge / compute` as a percentage.
     pub overhead_pct: f64,
     /// RoBW alignment removes the overhead entirely (the paper's fix).
     pub robw_overhead_pct: f64,
@@ -99,11 +105,14 @@ pub fn fig3_cross_check(a: &Csr, budget: u64) -> (u64, u64) {
 /// One dataset's end-to-end epoch results across all four schedulers.
 #[derive(Debug, Clone)]
 pub struct Fig6Row {
+    /// Dataset name.
     pub dataset: String,
+    /// One [`EpochResult`] per scheduler, in `all_schedulers` order.
     pub results: Vec<EpochResult>,
 }
 
 impl Fig6Row {
+    /// Epoch latency of one scheduler (`None` = OOM).
     pub fn makespan(&self, sched: &str) -> Option<f64> {
         self.results.iter().find(|r| r.scheduler == sched).and_then(|r| r.makespan_s)
     }
@@ -119,6 +128,7 @@ pub fn fig6_speedup(cm: &CostModel) -> Vec<Fig6Row> {
     CATALOG.iter().map(|d| fig6_row(d, cm)).collect()
 }
 
+/// One dataset's Fig. 6 row.
 pub fn fig6_row(d: &DatasetStats, cm: &CostModel) -> Fig6Row {
     let w = Workload::from_catalog(d, FEAT_DIM, LAYERS);
     Fig6Row {
@@ -132,16 +142,25 @@ pub fn fig6_row(d: &DatasetStats, cm: &CostModel) -> Fig6Row {
 /// Fig. 7: GPU-CPU I/O breakdown (bytes + latency per memcpy kind).
 #[derive(Debug, Clone)]
 pub struct Fig7Row {
+    /// Dataset name.
     pub dataset: String,
+    /// Scheduler the row measures.
     pub scheduler: &'static str,
+    /// Host-to-device bytes.
     pub htod_bytes: u64,
+    /// Device-to-host bytes.
     pub dtoh_bytes: u64,
+    /// Unified-memory migration bytes.
     pub um_bytes: u64,
+    /// Seconds on the H2D engine.
     pub htod_secs: f64,
+    /// Seconds on the D2H engine.
     pub dtoh_secs: f64,
+    /// Seconds in UM fault handling.
     pub um_secs: f64,
 }
 
+/// Fig. 7 rows: per (dataset, scheduler) GPU-CPU traffic breakdown.
 pub fn fig7_io_breakdown(cm: &CostModel) -> Vec<Fig7Row> {
     let mut rows = Vec::new();
     for d in CATALOG.iter() {
@@ -172,14 +191,21 @@ pub fn fig7_io_breakdown(cm: &CostModel) -> Vec<Fig7Row> {
 /// dual-way path); CPU-SSD rides the classic NVMe->host path.
 #[derive(Debug, Clone)]
 pub struct Fig8Row {
+    /// Dataset name.
     pub dataset: String,
+    /// Scheduler the row measures.
     pub scheduler: &'static str,
+    /// Bytes over the GDS (GPU<->SSD direct) path.
     pub gpu_ssd_bytes: u64,
+    /// Achieved GDS bandwidth.
     pub gpu_ssd_gbps: f64,
+    /// Bytes over the classic NVMe<->host path.
     pub cpu_ssd_bytes: u64,
+    /// Achieved NVMe-host bandwidth.
     pub cpu_ssd_gbps: f64,
 }
 
+/// Fig. 8 rows: per (dataset, scheduler) storage-path bandwidth.
 pub fn fig8_bandwidth(cm: &CostModel) -> Vec<Fig8Row> {
     let mut rows = Vec::new();
     for d in CATALOG.iter() {
@@ -207,13 +233,18 @@ pub fn fig8_bandwidth(cm: &CostModel) -> Vec<Fig8Row> {
 /// Fig. 9: per-epoch latency vs GCN feature size (16..256).
 #[derive(Debug, Clone)]
 pub struct Fig9Row {
+    /// Dataset name.
     pub dataset: String,
+    /// Feature width this row was evaluated at.
     pub feat_dim: u64,
+    /// One [`EpochResult`] per scheduler.
     pub results: Vec<EpochResult>,
 }
 
+/// The feature-size sweep of Fig. 9.
 pub const FIG9_FEATURES: [u64; 5] = [16, 32, 64, 128, 256];
 
+/// Fig. 9 rows: one dataset swept over [`FIG9_FEATURES`].
 pub fn fig9_feature_size(cm: &CostModel, dataset: &str) -> Vec<Fig9Row> {
     let d = crate::graphgen::catalog::by_name(dataset).expect("dataset");
     let w256 = Workload::from_catalog(d, FEAT_DIM, LAYERS);
@@ -242,7 +273,9 @@ pub fn fig9_feature_size(cm: &CostModel, dataset: &str) -> Vec<Fig9Row> {
 /// Table III: impact of tightening the GPU memory constraint.
 #[derive(Debug, Clone)]
 pub struct Table3Row {
+    /// Dataset name.
     pub dataset: String,
+    /// GPU memory constraint (GB) this row tightened to.
     pub constraint_gb: f64,
     /// (scheduler, per-epoch seconds or None=OOM), paper column order.
     pub cells: Vec<(&'static str, Option<f64>)>,
@@ -255,6 +288,7 @@ pub const TABLE3_GRID: [(&str, &[f64]); 3] = [
     ("socLJ1", &[11.0, 10.0, 8.0]),
 ];
 
+/// Table III rows over [`TABLE3_GRID`].
 pub fn table3_memcap(cm: &CostModel) -> Vec<Table3Row> {
     let mut rows = Vec::new();
     for (name, caps) in TABLE3_GRID {

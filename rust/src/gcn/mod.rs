@@ -15,5 +15,5 @@ pub mod oocgcn;
 pub mod train;
 
 pub use model::Gcn2Ref;
-pub use oocgcn::OocGcnLayer;
+pub use oocgcn::{LayerReport, OocGcnLayer, StagingConfig};
 pub use train::Trainer;

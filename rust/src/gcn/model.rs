@@ -29,9 +29,13 @@ pub fn dense_affine(x: &Dense, w: &Dense, b: &[f32], relu: bool) -> Dense {
 
 /// Two-layer reference GCN: logits = Â·relu(Â·X·W1 + b1)·W2 + b2.
 pub struct Gcn2Ref {
+    /// First-layer weights `[f0, hidden]`.
     pub w1: Dense,
+    /// First-layer bias.
     pub b1: Vec<f32>,
+    /// Second-layer weights `[hidden, classes]`.
     pub w2: Dense,
+    /// Second-layer bias.
     pub b2: Vec<f32>,
 }
 

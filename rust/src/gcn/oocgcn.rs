@@ -7,36 +7,86 @@
 //! fused `gcn_combine` artifact. A [`GpuMem`] ledger enforces the memory
 //! constraint exactly the way the scheduler models it, so the laptop-scale
 //! run exercises the same planning code the paper-scale simulation uses.
+//!
+//! Phase II streaming goes through [`runtime::prefetch`](crate::runtime::prefetch):
+//! a producer task packs (and, when an I/O cost model is attached, charges
+//! the simulated H2D latency of) segment `i+1` while the calling thread
+//! computes segment `i` — the paper's transfer/compute overlap, executed
+//! rather than merely modelled. Partials land in fixed disjoint row ranges
+//! and are merged in segment order, so the output is byte-identical to the
+//! depth-1 serial pass at every prefetch depth and thread count
+//! (`rust/tests/differential.rs`).
 
-use crate::memsim::GpuMem;
-use crate::partition::robw::{materialize, robw_partition};
+use crate::gcn::model::dense_affine;
+use crate::memsim::{CostModel, GpuMem, Op};
+use crate::partition::robw::{materialize, robw_partition_par, RobwSegment};
 use crate::runtime::pool::Pool;
+use crate::runtime::prefetch::Prefetch;
 use crate::runtime::tile_exec::{BsrSpmmExec, CombineExec};
 use crate::runtime::Executor;
-use crate::sparse::spmm::Dense;
+use crate::sparse::spmm::{spmm_par, Dense};
 use crate::sparse::Csr;
 use anyhow::{anyhow, Result};
+use std::sync::Mutex;
 
 /// Execution report for one out-of-core layer pass.
 #[derive(Debug, Clone, Default)]
 pub struct LayerReport {
+    /// RoBW segments the adjacency streamed in.
     pub segments: usize,
+    /// Estimated accelerator invocations (tile batches).
     pub artifact_calls_estimate: usize,
+    /// Ledger high-water mark over the pass. With `prefetch_depth > 1`
+    /// this includes staged-ahead segments and (alone among the report
+    /// fields) depends on staging timing; everything else, above all the
+    /// output, is deterministic.
     pub peak_gpu_bytes: u64,
+    /// Total segment bytes staged host-to-device.
     pub h2d_bytes: u64,
+    /// Staging depth the pass ran with (1 = serial staging).
+    pub prefetch_depth: usize,
+}
+
+/// Phase II staging configuration for one forward pass.
+#[derive(Debug, Clone, Default)]
+pub struct StagingConfig {
+    /// Pipeline depth policy (see [`Prefetch`]); defaults to double
+    /// buffering (depth 2).
+    pub prefetch: Prefetch,
+    /// When set, the producer charges each segment's simulated H2D
+    /// latency (`CostModel::transfer_secs(Op::HtoD, bytes)`) as real
+    /// staging time — the I/O the scheduler models becomes wall-clock the
+    /// pipeline must actually hide (the `micro_hotpath` overlap bench).
+    pub io_cost: Option<CostModel>,
+}
+
+impl StagingConfig {
+    /// Serial staging (depth 1, no charged I/O): the oracle configuration.
+    pub fn serial() -> StagingConfig {
+        StagingConfig { prefetch: Prefetch::new(1), io_cost: None }
+    }
+
+    /// Double buffering at `depth` with no charged I/O.
+    pub fn depth(depth: usize) -> StagingConfig {
+        StagingConfig { prefetch: Prefetch::new(depth), io_cost: None }
+    }
 }
 
 /// One out-of-core GCN layer (aggregation + fused combine).
 pub struct OocGcnLayer {
+    /// Combination weights `[f, h]`.
     pub w: Dense,
+    /// Combination bias `[h]`.
     pub b: Vec<f32>,
+    /// Apply ReLU after the affine combine.
     pub relu: bool,
     /// Per-segment GPU byte budget for CSR A (Eq. 7's 3p).
     pub seg_budget: u64,
 }
 
 impl OocGcnLayer {
-    /// Forward with serial host-side packing (see [`Self::forward_pooled`]).
+    /// Forward with serial staging and a serial pool — the oracle every
+    /// pipelined configuration is byte-compared against.
     pub fn forward(
         &self,
         exec: &mut Executor,
@@ -44,15 +94,10 @@ impl OocGcnLayer {
         x: &Dense,
         mem: &mut GpuMem,
     ) -> Result<(Dense, LayerReport)> {
-        self.forward_pooled(exec, a_hat, x, mem, &Pool::serial())
+        self.forward_staged(exec, a_hat, x, mem, &Pool::serial(), &StagingConfig::serial())
     }
 
-    /// Forward: relu((Â·x)·w + b), streaming Â in RoBW segments.
-    ///
-    /// `mem` models the device: the feature panel and each segment are
-    /// "allocated" and freed as the schedule would, so exceeding the
-    /// constraint fails exactly like the simulated OOM. Per-segment tile
-    /// extraction/packing runs on `pool` (the CLI's `--threads`).
+    /// Forward on `pool` with the default double-buffered staging.
     pub fn forward_pooled(
         &self,
         exec: &mut Executor,
@@ -61,49 +106,231 @@ impl OocGcnLayer {
         mem: &mut GpuMem,
         pool: &Pool,
     ) -> Result<(Dense, LayerReport)> {
+        self.forward_staged(exec, a_hat, x, mem, pool, &StagingConfig::default())
+    }
+
+    /// Forward: relu((Â·x)·w + b), streaming Â in RoBW segments through
+    /// the prefetch pipeline.
+    ///
+    /// `mem` models the device: the feature panel and each in-flight
+    /// segment are "allocated" and freed as the schedule would, so
+    /// exceeding the constraint fails exactly like the simulated OOM.
+    /// Budget for `staging.prefetch.depth` concurrent segments (the AIRES
+    /// plan's `3p` term exists for exactly this headroom). Per-segment
+    /// tile extraction/packing runs on `pool` (the CLI's `--threads`);
+    /// staging of segment `i+1` overlaps segment `i`'s compute whenever
+    /// the depth allows.
+    pub fn forward_staged(
+        &self,
+        exec: &mut Executor,
+        a_hat: &Csr,
+        x: &Dense,
+        mem: &mut GpuMem,
+        pool: &Pool,
+        staging: &StagingConfig,
+    ) -> Result<(Dense, LayerReport)> {
         let spmm_exec = BsrSpmmExec::for_feature_width(exec, x.ncols)?;
         let comb = CombineExec::for_widths(exec, x.ncols, self.w.ncols, self.relu)?;
+        let denom = spmm_exec.shape.nb * spmm_exec.shape.bm * spmm_exec.shape.bk;
+        let mut calls = 0usize;
+        let (out, mut report) = self.forward_streamed(
+            exec,
+            a_hat,
+            x,
+            mem,
+            pool,
+            staging,
+            // Phase II: the partial SpGEMM for one staged segment.
+            |exec, seg, sub, agg| {
+                calls += sub.nnz().div_ceil(denom);
+                let part = spmm_exec.spmm_with_pool(exec, &sub, x, pool)?;
+                agg.data[seg.row_lo * x.ncols..seg.row_hi * x.ncols]
+                    .copy_from_slice(&part.data);
+                Ok(())
+            },
+            // Phase III: combine through the fused tile.
+            |exec, agg| comb.combine(exec, agg, &self.w, &self.b),
+        )?;
+        report.artifact_calls_estimate = calls;
+        Ok((out, report))
+    }
 
+    /// Artifact-free forward pass: identical planning, ledger and prefetch
+    /// pipeline, with per-segment aggregation on [`spmm_par`] and the
+    /// combination on the host. This is the execution surface the
+    /// differential suite drives in environments without compiled PJRT
+    /// artifacts; its output is byte-identical to
+    /// `dense_affine(spmm(a_hat, x), w, b, relu)` at every prefetch depth
+    /// and thread count.
+    pub fn forward_cpu(
+        &self,
+        a_hat: &Csr,
+        x: &Dense,
+        mem: &mut GpuMem,
+        pool: &Pool,
+        staging: &StagingConfig,
+    ) -> Result<(Dense, LayerReport)> {
+        self.forward_streamed(
+            &mut (),
+            a_hat,
+            x,
+            mem,
+            pool,
+            staging,
+            |_, seg, sub, agg| {
+                let part = spmm_par(&sub, x, pool);
+                agg.data[seg.row_lo * x.ncols..seg.row_hi * x.ncols]
+                    .copy_from_slice(&part.data);
+                Ok(())
+            },
+            |_, agg| Ok(dense_affine(agg, &self.w, &self.b, self.relu)),
+        )
+    }
+
+    /// Shared scaffolding of one streamed forward pass: panel residency
+    /// (Phase I), parallel RoBW planning, the Phase II prefetch pipeline,
+    /// and a ledger that ends balanced on success and on *every* error
+    /// path — stream aborts and `finish` failures alike free the panel,
+    /// and `stream_segments` has already returned any stranded segments.
+    /// `consume` computes one segment's partial into `agg` on the calling
+    /// thread; `finish` turns the full aggregation into the layer output
+    /// (Phase III). `ctx` is whatever mutable state both need (the PJRT
+    /// executor on the artifact path, `()` on the CPU path).
+    #[allow(clippy::too_many_arguments)]
+    fn forward_streamed<Ctx, C, Fin>(
+        &self,
+        ctx: &mut Ctx,
+        a_hat: &Csr,
+        x: &Dense,
+        mem: &mut GpuMem,
+        pool: &Pool,
+        staging: &StagingConfig,
+        mut consume: C,
+        finish: Fin,
+    ) -> Result<(Dense, LayerReport)>
+    where
+        C: FnMut(&mut Ctx, &RobwSegment, Csr, &mut Dense) -> Result<()>,
+        Fin: FnOnce(&mut Ctx, &Dense) -> Result<Dense>,
+    {
         // Phase I: feature panel resident (the GDS leg in the simulation).
         let b_bytes = (x.nrows * x.ncols * 4) as u64;
         mem.alloc(b_bytes, "feature panel")
             .map_err(|e| anyhow!("feature panel does not fit: {e}"))?;
 
-        let segs = robw_partition(a_hat, self.seg_budget);
+        let segs = robw_partition_par(a_hat, self.seg_budget, pool);
         let mut agg = Dense::zeros(a_hat.nrows, x.ncols);
-        let mut report = LayerReport { segments: segs.len(), ..Default::default() };
+        let mut report = LayerReport {
+            segments: segs.len(),
+            prefetch_depth: staging.prefetch.depth.max(1),
+            ..Default::default()
+        };
 
-        for seg in &segs {
-            // Phase II: segment in, partial C computed, segment freed.
-            mem.alloc(seg.bytes, "RoBW segment")
-                .map_err(|e| anyhow!("segment does not fit: {e}"))?;
-            report.h2d_bytes += seg.bytes;
-            let sub = materialize(a_hat, seg);
-            let part = spmm_exec.spmm_with_pool(exec, &sub, x, pool)?;
-            agg.data[seg.row_lo * x.ncols..seg.row_hi * x.ncols]
-                .copy_from_slice(&part.data);
-            report.artifact_calls_estimate +=
-                sub.nnz().div_ceil(spmm_exec.shape.nb * spmm_exec.shape.bm * spmm_exec.shape.bk);
-            mem.free(seg.bytes);
-        }
-
-        // Phase III: output stays "resident"; combine through the fused tile.
-        let out = comb.combine(exec, &agg, &self.w, &self.b)?;
+        // Phase II: pipelined — producer stages segment i+1 while the
+        // calling thread computes the partial for segment i.
+        let streamed = stream_segments(a_hat, &segs, mem, pool, staging, |seg, sub| {
+            consume(ctx, seg, sub, &mut agg)
+        });
+        // Phase III: output stays "resident" through the finisher.
+        let result = match streamed {
+            Ok(h2d) => {
+                report.h2d_bytes = h2d;
+                finish(ctx, &agg)
+            }
+            Err(e) => Err(e),
+        };
         report.peak_gpu_bytes = mem.peak;
         mem.free(b_bytes);
-        Ok((out, report))
+        Ok((result?, report))
     }
+}
+
+/// Staged-segment accounting shared between the producer and the consumer:
+/// `staged` tracks ledger bytes alloc'd but not yet freed, so an aborted
+/// pipeline (stage or compute error) can return stranded segments —
+/// including ones dropped unconsumed inside the hand-off queue — to the
+/// ledger instead of leaking them.
+struct SegmentLedger<'a> {
+    mem: &'a mut GpuMem,
+    staged: u64,
+}
+
+/// Stream planned segments through the prefetch pipeline.
+///
+/// The producer stages segment `i+1` (ledger alloc + pack + optional
+/// simulated H2D latency) while `consume` computes segment `i` on the
+/// calling thread; each segment is freed after its compute. Consumption is
+/// strictly ordered, so everything `consume` merges is deterministic; the
+/// ledger's high-water mark alone reflects real staging concurrency. On
+/// error, every staged-but-unconsumed segment is freed before returning,
+/// so the ledger ends balanced either way. Returns the total bytes staged.
+fn stream_segments<F>(
+    a_hat: &Csr,
+    segs: &[RobwSegment],
+    mem: &mut GpuMem,
+    pool: &Pool,
+    staging: &StagingConfig,
+    mut consume: F,
+) -> Result<u64>
+where
+    F: FnMut(&RobwSegment, Csr) -> Result<()>,
+{
+    let ledger = Mutex::new(SegmentLedger { mem, staged: 0 });
+    let mut h2d = 0u64;
+    let result = staging.prefetch.run(
+        pool,
+        segs.len(),
+        |i| {
+            let seg = &segs[i];
+            {
+                let mut l = ledger.lock().unwrap();
+                l.mem
+                    .alloc(seg.bytes, "RoBW segment")
+                    .map_err(|e| anyhow!("segment does not fit: {e}"))?;
+                l.staged += seg.bytes;
+            }
+            let sub = materialize(a_hat, seg);
+            if let Some(cm) = &staging.io_cost {
+                let dur = cm.transfer_secs(Op::HtoD, seg.bytes);
+                std::thread::sleep(std::time::Duration::from_secs_f64(dur));
+            }
+            Ok(sub)
+        },
+        |i, sub| {
+            let seg = &segs[i];
+            consume(seg, sub)?;
+            h2d += seg.bytes;
+            let mut l = ledger.lock().unwrap();
+            l.mem.free(seg.bytes);
+            l.staged -= seg.bytes;
+            Ok(())
+        },
+    );
+    // The producer has joined; reconcile whatever an abort stranded.
+    let l = ledger.into_inner().unwrap();
+    if l.staged > 0 {
+        l.mem.free(l.staged);
+    }
+    result?;
+    Ok(h2d)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::gcn::model::dense_affine;
     use crate::runtime::find_artifact_dir;
     use crate::sparse::norm::normalize_adjacency;
     use crate::sparse::spmm::spmm;
     use crate::sparse::Coo;
     use crate::util::rng::Pcg;
+
+    fn test_layer(rng: &mut Pcg, f: usize, h: usize, seg_budget: u64) -> OocGcnLayer {
+        OocGcnLayer {
+            w: Dense::from_vec(f, h, (0..f * h).map(|_| (rng.normal() * 0.2) as f32).collect()),
+            b: vec![0.1; h],
+            relu: true,
+            seg_budget,
+        }
+    }
 
     #[test]
     fn ooc_layer_matches_reference() {
@@ -117,17 +344,24 @@ mod tests {
         let a = crate::graphgen::kmer::generate(&mut rng, 500, 3.0);
         let a_hat = normalize_adjacency(&a);
         let x = Dense::from_vec(500, 64, (0..500 * 64).map(|_| rng.normal() as f32).collect());
-        let w = Dense::from_vec(64, 64, (0..64 * 64).map(|_| (rng.normal() * 0.2) as f32).collect());
-        let b: Vec<f32> = vec![0.1; 64];
+        let layer = test_layer(&mut rng, 64, 64, 4096);
 
-        let layer = OocGcnLayer { w: w.clone(), b: b.clone(), relu: true, seg_budget: 4096 };
         let mut mem = GpuMem::new(64 << 20);
         let (got, report) = layer.forward(&mut exec, &a_hat, &x, &mut mem).unwrap();
         assert!(report.segments > 1, "budget must force multiple segments");
+        assert_eq!(report.prefetch_depth, 1, "forward() is the serial-staging oracle");
 
-        let want = dense_affine(&spmm(&a_hat, &x), &w, &b, true);
+        let want = dense_affine(&spmm(&a_hat, &x), &layer.w, &layer.b, true);
         let diff = got.max_abs_diff(&want);
         assert!(diff < 1e-3, "max diff {diff}");
+
+        // The double-buffered pooled pass is byte-identical to the oracle.
+        let mut mem2 = GpuMem::new(64 << 20);
+        let (got2, report2) =
+            layer.forward_pooled(&mut exec, &a_hat, &x, &mut mem2, &Pool::new(4)).unwrap();
+        assert_eq!(got2, got, "prefetch pipeline must not change the output");
+        assert_eq!(report2.prefetch_depth, 2);
+        assert_eq!(report2.h2d_bytes, report.h2d_bytes);
     }
 
     #[test]
@@ -151,5 +385,75 @@ mod tests {
         };
         let mut mem = GpuMem::new(1024); // absurdly small
         assert!(layer.forward(&mut exec, &a_hat, &x, &mut mem).is_err());
+    }
+
+    #[test]
+    fn cpu_forward_matches_oracle_at_every_depth_and_thread_count() {
+        let mut rng = Pcg::seed(6);
+        let a = crate::graphgen::kmer::generate(&mut rng, 300, 3.0);
+        let a_hat = normalize_adjacency(&a);
+        let x = Dense::from_vec(300, 16, (0..300 * 16).map(|_| rng.normal() as f32).collect());
+        let layer = test_layer(&mut rng, 16, 8, 2048);
+        let want = dense_affine(&spmm(&a_hat, &x), &layer.w, &layer.b, true);
+
+        for depth in [1usize, 2, 4] {
+            for threads in [1usize, 2, 8] {
+                let mut mem = GpuMem::new(64 << 20);
+                let pool = Pool::new(threads);
+                let (got, report) = layer
+                    .forward_cpu(&a_hat, &x, &mut mem, &pool, &StagingConfig::depth(depth))
+                    .unwrap();
+                assert_eq!(got, want, "depth={depth} threads={threads}");
+                assert!(report.segments > 1);
+                assert_eq!(report.prefetch_depth, depth.max(1));
+                assert_eq!(mem.used, 0, "everything freed after the pass");
+            }
+        }
+    }
+
+    #[test]
+    fn cpu_forward_ooms_without_segment_headroom() {
+        let mut rng = Pcg::seed(7);
+        let a = crate::graphgen::kmer::generate(&mut rng, 200, 3.0);
+        let a_hat = normalize_adjacency(&a);
+        let x = Dense::zeros(200, 8);
+        let layer = test_layer(&mut rng, 8, 8, 1024);
+        // Panel fits, segments do not.
+        let mut mem = GpuMem::new((200 * 8 * 4) + 64);
+        let err = layer
+            .forward_cpu(&a_hat, &x, &mut mem, &Pool::serial(), &StagingConfig::serial())
+            .unwrap_err();
+        assert!(err.to_string().contains("segment does not fit"), "{err}");
+        assert_eq!(mem.used, 0, "error path must return panel + segments to the ledger");
+    }
+
+    #[test]
+    fn ledger_balances_under_tight_budgets_at_every_depth() {
+        // Near the OOM boundary with staging concurrency the *outcome*
+        // (Ok vs segment-OOM) may depend on timing, but the invariants may
+        // not: a success is byte-identical to the oracle and an error
+        // leaves the ledger fully freed.
+        let mut rng = Pcg::seed(8);
+        let a = crate::graphgen::kmer::generate(&mut rng, 200, 3.0);
+        let a_hat = normalize_adjacency(&a);
+        let x = Dense::from_vec(200, 8, (0..200 * 8).map(|_| rng.normal() as f32).collect());
+        let layer = test_layer(&mut rng, 8, 8, 1024);
+        let want = dense_affine(&spmm(&a_hat, &x), &layer.w, &layer.b, true);
+        let panel = (200 * 8 * 4) as u64;
+        for depth in [1usize, 2, 4] {
+            for headroom in [1024u64, 1536, 2048, 4096] {
+                let mut mem = GpuMem::new(panel + headroom);
+                let pool = Pool::new(2);
+                match layer.forward_cpu(&a_hat, &x, &mut mem, &pool, &StagingConfig::depth(depth))
+                {
+                    Ok((got, _)) => assert_eq!(got, want, "depth={depth} headroom={headroom}"),
+                    Err(e) => assert!(
+                        e.to_string().contains("segment does not fit"),
+                        "depth={depth} headroom={headroom}: {e}"
+                    ),
+                }
+                assert_eq!(mem.used, 0, "depth={depth} headroom={headroom}: ledger unbalanced");
+            }
+        }
     }
 }

@@ -14,9 +14,13 @@ use anyhow::{anyhow, Result};
 /// Training state bound to one `gcn2_train_step_*` artifact.
 pub struct Trainer {
     artifact: String,
+    /// Static node count of the artifact.
     pub n: usize,
+    /// Input feature width.
     pub f0: usize,
+    /// Hidden width.
     pub hidden: usize,
+    /// Output classes.
     pub classes: usize,
     a_dense: Vec<f32>,
     x: Vec<f32>,
@@ -25,6 +29,7 @@ pub struct Trainer {
     b1: Vec<f32>,
     w2: Vec<f32>,
     b2: Vec<f32>,
+    /// Loss per completed training step.
     pub losses: Vec<f32>,
 }
 

@@ -24,7 +24,9 @@ pub enum Family {
 /// One Table II row.
 #[derive(Debug, Clone, Copy)]
 pub struct DatasetStats {
+    /// Dataset name as the paper abbreviates it (e.g. "kP1a").
     pub name: &'static str,
+    /// Graph family the generators substitute for it.
     pub family: Family,
     /// Vertices, in millions (paper Table II col 2).
     pub vertices_m: f64,
@@ -37,9 +39,11 @@ pub struct DatasetStats {
 }
 
 impl DatasetStats {
+    /// Vertex count.
     pub fn vertices(&self) -> u64 {
         (self.vertices_m * 1e6) as u64
     }
+    /// Undirected edge count.
     pub fn edges(&self) -> u64 {
         (self.edges_m * 1e6) as u64
     }

@@ -9,8 +9,11 @@ use crate::util::rng::Pcg;
 /// RMAT parameters (Graph500 defaults a=0.57, b=0.19, c=0.19, d=0.05).
 #[derive(Debug, Clone, Copy)]
 pub struct RmatParams {
+    /// Top-left quadrant probability (hub mass).
     pub a: f64,
+    /// Top-right quadrant probability.
     pub b: f64,
+    /// Bottom-left quadrant probability (d = 1 - a - b - c).
     pub c: f64,
 }
 

@@ -14,6 +14,11 @@
 //! * L1 Pallas kernels + L2 JAX model are compiled once (`make artifacts`)
 //!   into `artifacts/*.hlo.txt`;
 //! * L3 (this crate) loads them via [`runtime`] and drives everything.
+//!
+//! See `ARCHITECTURE.md` at the repo root for the paper-to-code map and
+//! the module dependency diagram.
+
+#![warn(missing_docs)]
 
 pub mod benchlib;
 pub mod config;

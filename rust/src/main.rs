@@ -8,7 +8,7 @@
 //!   report [--out F]   regenerate the full evaluation report
 //!   train [--steps N] [--lr X] [--nodes N]
 //!                      e2e GCN training through the PJRT artifacts
-//!   spgemm [--nodes N] [--budget BYTES]
+//!   spgemm [--nodes N] [--budget BYTES] [--prefetch-depth D]
 //!                      one out-of-core aggregation through the artifacts,
 //!                      verified against the CPU oracle
 //!   prep DATASET       one-time RoBW preprocessing cost estimate
@@ -38,6 +38,14 @@ fn main() {
     // modelled experiments and the executed kernels agree.
     let threads_flag = arg_value(&args, "--threads").map(|v| v.parse::<usize>().expect("--threads"));
     let pool = Pool::new(threads_flag.unwrap_or(cfg.threads));
+    // --prefetch-depth N sizes the executed Phase II staging pipeline
+    // (1 = serial staging, 2 = double buffering; output is byte-identical
+    // at every depth). CLI flag wins over the config's `prefetch_depth`;
+    // neither set -> the double-buffering default of 2.
+    let prefetch_flag = arg_value(&args, "--prefetch-depth")
+        .map(|v| v.parse::<usize>().expect("--prefetch-depth"));
+    let prefetch_depth =
+        prefetch_flag.map(|d| d.max(1)).unwrap_or_else(|| cfg.resolved_prefetch_depth());
     let mut cm = cfg.cost_model.clone();
     // --threads always wins; otherwise the config's `threads` key flows
     // into the hook too, unless the config pinned cost_model.cpu_threads
@@ -46,6 +54,22 @@ fn main() {
     // value, e.g. 1.01, to decouple the simulated host from the pool).
     if threads_flag.is_some() || cm.cpu_threads == 1.0 {
         cm.cpu_threads = pool.threads() as f64;
+    }
+    // The RoBW partition scan only discounts when the parallel planner
+    // (`robw_partition_par`) is the selected code path — i.e. the pool is
+    // actually parallel (same pin escape hatch as cpu_threads).
+    if pool.threads() > 1 && cm.partition_threads == 1.0 {
+        cm.partition_threads = pool.threads() as f64;
+    }
+    // The simulator's overlap hook follows the staging depth whenever one
+    // was *requested* (CLI flag or config key) — executed and modelled
+    // Phase II then move together. Untouched, the CostModel stays the
+    // depth-1 calibration baseline, so every figure is unchanged by
+    // default (the execution-side default of 2 never leaks in on its own).
+    // A cost_model.prefetch_depth pinned away from 1.0 in the config wins
+    // over the mirror (same pin escape hatch as cpu_threads).
+    if (prefetch_flag.is_some() || cfg.prefetch_depth.is_some()) && cm.prefetch_depth == 1.0 {
+        cm.prefetch_depth = prefetch_depth as f64;
     }
     let cm = cm;
 
@@ -168,11 +192,14 @@ fn main() {
                 seg_budget: budget,
             };
             let mut mem = aires::memsim::GpuMem::new(256 << 20);
-            let (out, rep) =
-                layer.forward_pooled(&mut exec, &a_hat, &x, &mut mem, &pool).expect("forward");
+            let staging = aires::gcn::oocgcn::StagingConfig::depth(prefetch_depth);
+            let (out, rep) = layer
+                .forward_staged(&mut exec, &a_hat, &x, &mut mem, &pool, &staging)
+                .expect("forward");
             println!(
-                "out-of-core aggregation: {} segments, ~{} artifact calls, peak {}, H2D {}",
+                "out-of-core aggregation: {} segments (prefetch depth {}), ~{} artifact calls, peak {}, H2D {}",
                 rep.segments,
+                rep.prefetch_depth,
                 rep.artifact_calls_estimate,
                 aires::util::human_bytes(rep.peak_gpu_bytes),
                 aires::util::human_bytes(rep.h2d_bytes)
@@ -255,7 +282,7 @@ fn main() {
         _ => {
             println!(
                 "aires — out-of-core GCN co-design (AIRES reproduction)\n\n\
-                 usage: aires <catalog|features|fig3|fig6|fig7|fig8|fig9|table3|report|prep|train|spgemm|parcheck|trace|sweep|config-dump> [--config F] [--threads N] [args]\n\
+                 usage: aires <catalog|features|fig3|fig6|fig7|fig8|fig9|table3|report|prep|train|spgemm|parcheck|trace|sweep|config-dump> [--config F] [--threads N] [--prefetch-depth D] [args]\n\
                  see README.md for details"
             );
         }

@@ -37,10 +37,12 @@ pub struct OperandSizes {
 /// The Eq. 5-7 model.
 #[derive(Debug, Clone, Copy)]
 pub struct OutputModel {
+    /// Operand descriptors the equations read.
     pub sizes: OperandSizes,
 }
 
 impl OutputModel {
+    /// Model over explicit operand sizes.
     pub fn new(sizes: OperandSizes) -> Self {
         OutputModel { sizes }
     }

@@ -19,6 +19,7 @@ pub enum Res {
     GpuDma,
 }
 
+/// Every resource the simulator tracks, in serialization order.
 pub const ALL_RES: [Res; 6] =
     [Res::Nvme, Res::PcieH2d, Res::PcieD2h, Res::HostCpu, Res::Gpu, Res::GpuDma];
 
@@ -57,15 +58,21 @@ pub enum Op {
 /// for every figure (DESIGN.md §Simulator cost model).
 #[derive(Debug, Clone)]
 pub struct CostModel {
+    /// PCIe host-to-device bandwidth.
     pub pcie_h2d_gbps: f64,
+    /// PCIe device-to-host bandwidth.
     pub pcie_d2h_gbps: f64,
+    /// NVMe sequential read bandwidth (host path).
     pub nvme_read_gbps: f64,
+    /// NVMe sequential write bandwidth (host path).
     pub nvme_write_gbps: f64,
     /// Effective GDS NVMe->GPU throughput (bounded by NVMe, minus protocol).
     pub gds_read_gbps: f64,
+    /// Effective GDS GPU->NVMe throughput.
     pub gds_write_gbps: f64,
     /// Effective fault-driven UM migration throughput.
     pub um_gbps: f64,
+    /// Host-side memcpy bandwidth (staging/merging partial segments).
     pub host_memcpy_gbps: f64,
     /// CPU streaming throughput of the RoBW partitioning pass (calibrated
     /// against the real `partition::robw` implementation — see §Perf).
@@ -91,13 +98,26 @@ pub struct CostModel {
     /// Kernel launch overhead.
     pub kernel_launch_s: f64,
     /// Host compute threads driving the parallel row-range kernels
-    /// (`runtime::pool`); scales CPU compute and the RoBW partition scan
-    /// via [`CostModel::host_parallelism`]. Default 1.0 = serial (the
+    /// (`runtime::pool`); scales CPU compute via
+    /// [`CostModel::host_parallelism`]. Default 1.0 = serial (the
     /// calibration baseline; every figure is unchanged at the default).
+    /// The RoBW partition scan has its own gate — see `partition_threads`.
     pub cpu_threads: f64,
     /// Parallel efficiency per extra host thread (memory-bandwidth and
     /// merge overheads keep row-range kernels below linear scaling).
     pub cpu_parallel_eff: f64,
+    /// Host threads driving the *parallel RoBW partitioner*
+    /// (`partition::robw::robw_partition_par`). Deliberately separate from
+    /// `cpu_threads`: the `Op::CpuPartition` scan only speeds up when the
+    /// parallel planner is actually selected, which the CLI mirrors here
+    /// (serial planner keeps the default 1.0 and the scan stays at
+    /// calibration speed even with a sized pool).
+    pub partition_threads: f64,
+    /// Segment staging depth of the executed Phase II prefetch pipeline
+    /// (`runtime::prefetch`), mirrored from `--prefetch-depth`. Drives
+    /// [`CostModel::staging_exposure`]; 1.0 = serial staging (neutral
+    /// calibration baseline — every figure unchanged at the default).
+    pub prefetch_depth: f64,
 }
 
 impl Default for CostModel {
@@ -122,6 +142,8 @@ impl Default for CostModel {
             kernel_launch_s: 8e-6,
             cpu_threads: 1.0,
             cpu_parallel_eff: 0.85,
+            partition_threads: 1.0,
+            prefetch_depth: 1.0,
         }
     }
 }
@@ -135,6 +157,24 @@ impl CostModel {
         1.0 + (self.cpu_threads - 1.0).max(0.0) * self.cpu_parallel_eff
     }
 
+    /// Effective speedup of the RoBW partitioning scan. Scales with
+    /// `partition_threads` — set only when the parallel planner
+    /// (`robw_partition_par`) is the selected code path — not with the
+    /// general `cpu_threads` hook, so a sized pool alone never discounts a
+    /// serial planning pass.
+    pub fn partition_parallelism(&self) -> f64 {
+        1.0 + (self.partition_threads - 1.0).max(0.0) * self.cpu_parallel_eff
+    }
+
+    /// Fraction of per-segment staging overhead (cudaMalloc + DMA setup)
+    /// left *exposed* on the critical path by the Phase II prefetch
+    /// pipeline: staging segment `i+1` through `i+depth-1` proceeds under
+    /// segment `i`'s kernel, so only `1/depth` of the submission overhead
+    /// serializes with compute. 1.0 at the neutral depth of 1.
+    pub fn staging_exposure(&self) -> f64 {
+        1.0 / self.prefetch_depth.max(1.0)
+    }
+
     /// Duration of moving `bytes` over the op's channel.
     pub fn transfer_secs(&self, op: Op, bytes: u64) -> f64 {
         let gbps = match op {
@@ -146,9 +186,9 @@ impl CostModel {
             Op::DtoH => self.pcie_d2h_gbps,
             Op::UmFault => self.um_gbps,
             Op::HostMemcpy => self.host_memcpy_gbps,
-            // The RoBW scan is row-parallel (runtime::pool), so its
-            // throughput scales with the host thread hook.
-            Op::CpuPartition => self.cpu_partition_gbps * self.host_parallelism(),
+            // The RoBW scan only scales when the parallel planner is the
+            // selected code path (see `partition_parallelism`).
+            Op::CpuPartition => self.cpu_partition_gbps * self.partition_parallelism(),
             _ => panic!("not a transfer op: {op:?}"),
         };
         let lat = match op {
@@ -223,16 +263,56 @@ mod tests {
         par.cpu_threads = 4.0;
         assert!(par.host_parallelism() > 3.0 && par.host_parallelism() < 4.0);
         assert!(par.cpu_secs(1 << 30) < cm.cpu_secs(1 << 30));
-        assert!(
-            par.transfer_secs(Op::CpuPartition, 1 << 30)
-                < cm.transfer_secs(Op::CpuPartition, 1 << 30)
-        );
         // Non-CPU channels are untouched by the hook.
         assert_eq!(par.transfer_secs(Op::HtoD, 1 << 30), cm.transfer_secs(Op::HtoD, 1 << 30));
         // Degenerate sub-1.0 settings never speed anything up.
         let mut half = CostModel::default();
         half.cpu_threads = 0.5;
         assert_eq!(half.host_parallelism(), 1.0);
+    }
+
+    #[test]
+    fn partition_scan_scales_only_with_the_parallel_planner() {
+        let cm = CostModel::default();
+        // A sized pool alone (cpu_threads) must NOT discount the RoBW scan:
+        // the serial planner is still the code path.
+        let mut pool_only = CostModel::default();
+        pool_only.cpu_threads = 8.0;
+        assert_eq!(
+            pool_only.transfer_secs(Op::CpuPartition, 1 << 30),
+            cm.transfer_secs(Op::CpuPartition, 1 << 30),
+            "serial planner keeps calibration speed"
+        );
+        // Selecting the parallel planner (partition_threads) does.
+        let mut par = CostModel::default();
+        par.partition_threads = 8.0;
+        assert!(par.partition_parallelism() > 6.0);
+        assert!(
+            par.transfer_secs(Op::CpuPartition, 1 << 30)
+                < cm.transfer_secs(Op::CpuPartition, 1 << 30)
+        );
+        // Other channels stay untouched.
+        assert_eq!(
+            par.transfer_secs(Op::NvmeToHost, 1 << 30),
+            cm.transfer_secs(Op::NvmeToHost, 1 << 30)
+        );
+        // Degenerate settings never speed anything up.
+        let mut half = CostModel::default();
+        half.partition_threads = 0.25;
+        assert_eq!(half.partition_parallelism(), 1.0);
+    }
+
+    #[test]
+    fn staging_exposure_is_neutral_at_depth_one() {
+        let cm = CostModel::default();
+        assert_eq!(cm.staging_exposure(), 1.0);
+        let mut d2 = CostModel::default();
+        d2.prefetch_depth = 2.0;
+        assert_eq!(d2.staging_exposure(), 0.5);
+        // Degenerate sub-1.0 depths never expose more than the serial path.
+        let mut d0 = CostModel::default();
+        d0.prefetch_depth = 0.5;
+        assert_eq!(d0.staging_exposure(), 1.0);
     }
 
     #[test]

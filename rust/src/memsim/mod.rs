@@ -28,8 +28,11 @@ pub use stats::IoStats;
 /// paper's `cudaMalloc`-guided dynamic allocation (§IV).
 #[derive(Debug, Clone)]
 pub struct GpuMem {
+    /// Total device bytes (the evaluated constraint).
     pub capacity: u64,
+    /// Currently allocated bytes.
     pub used: u64,
+    /// High-water mark of `used` over the ledger's lifetime.
     pub peak: u64,
 }
 
@@ -39,9 +42,13 @@ pub struct GpuMem {
 /// offline crate set.)
 #[derive(Debug, Clone)]
 pub struct OomError {
+    /// Bytes the failing allocation asked for.
     pub wanted: u64,
+    /// Bytes already allocated at the time.
     pub used: u64,
+    /// The ledger's capacity.
     pub capacity: u64,
+    /// What was being allocated (for the failure message).
     pub context: String,
 }
 
@@ -58,6 +65,7 @@ impl std::fmt::Display for OomError {
 impl std::error::Error for OomError {}
 
 impl GpuMem {
+    /// Empty ledger with `capacity` bytes.
     pub fn new(capacity: u64) -> Self {
         GpuMem { capacity, used: 0, peak: 0 }
     }
@@ -82,6 +90,7 @@ impl GpuMem {
         self.used = self.used.saturating_sub(bytes);
     }
 
+    /// Unallocated bytes remaining.
     pub fn available(&self) -> u64 {
         self.capacity - self.used
     }

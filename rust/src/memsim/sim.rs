@@ -11,9 +11,13 @@ use super::channel::{CostModel, Op, Res, ALL_RES};
 /// One completed op in the log (drives the Fig. 7/8 breakdowns).
 #[derive(Debug, Clone)]
 pub struct OpRecord {
+    /// Op kind.
     pub op: Op,
+    /// Bytes moved (0 for compute ops).
     pub bytes: u64,
+    /// Simulated start time (seconds from epoch start).
     pub start: f64,
+    /// Simulated completion time.
     pub end: f64,
     /// Free-form tag for reports ("CSC B load", "RoBW seg 3", ...).
     pub tag: &'static str,
@@ -23,10 +27,12 @@ pub struct OpRecord {
 #[derive(Debug, Default)]
 pub struct Sim {
     busy: std::collections::HashMap<Res, f64>,
+    /// Every submitted op, in submission order.
     pub log: Vec<OpRecord>,
 }
 
 impl Sim {
+    /// Fresh simulator: all resources free at t = 0.
     pub fn new() -> Self {
         let mut busy = std::collections::HashMap::new();
         for r in ALL_RES {

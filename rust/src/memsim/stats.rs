@@ -9,13 +9,18 @@ use std::collections::BTreeMap;
 /// Aggregated per-op-kind I/O: bytes moved, busy seconds, op count.
 #[derive(Debug, Clone, Default)]
 pub struct IoStats {
+    /// Aggregates keyed by op-kind name ("HtoD", "GdsRead", ...).
     pub per_op: BTreeMap<&'static str, OpAgg>,
 }
 
+/// Totals for one op kind.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct OpAgg {
+    /// Bytes moved.
     pub bytes: u64,
+    /// Seconds the op kind held its resources.
     pub secs: f64,
+    /// Number of ops.
     pub count: u64,
 }
 
@@ -49,6 +54,7 @@ impl IoStats {
         IoStats { per_op }
     }
 
+    /// Aggregate for one op kind (zeroes if the kind never ran).
     pub fn get(&self, name: &str) -> OpAgg {
         self.per_op.get(name).copied().unwrap_or_default()
     }

@@ -13,5 +13,5 @@ pub mod robw;
 pub mod tiling;
 
 pub use naive::{naive_partition, NaiveSegment};
-pub use robw::{robw_partition, RobwSegment};
+pub use robw::{robw_partition, robw_partition_par, RobwSegment};
 pub use tiling::{plan_tiles, TilePlan};

@@ -16,13 +16,17 @@ use crate::sparse::{Csr, IDX_BYTES, VAL_BYTES};
 /// One naive segment: nnz range `[nnz_lo, nnz_hi)`, cutting rows freely.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct NaiveSegment {
+    /// First non-zero of the segment (inclusive).
     pub nnz_lo: usize,
+    /// One past the last non-zero (exclusive).
     pub nnz_hi: usize,
     /// First row touched and whether the segment starts mid-row.
     pub row_lo: usize,
+    /// True when the segment begins inside a row cut by the previous one.
     pub starts_partial: bool,
     /// Last row touched and whether the segment ends mid-row.
     pub row_hi: usize,
+    /// True when the segment's final row continues into the next segment.
     pub ends_partial: bool,
     /// Bytes of the partial tail (the data that must round-trip to host).
     pub partial_tail_bytes: u64,

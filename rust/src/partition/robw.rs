@@ -9,12 +9,15 @@
 //! Phase I), so the planning walk is allocation-free over `rowptr` and the
 //! copy loop is a straight memcpy per array — see §Perf in EXPERIMENTS.md.
 
+use crate::runtime::pool::{chunk_ranges, Pool};
 use crate::sparse::{Csr, IDX_BYTES, PTR_BYTES, VAL_BYTES};
 
 /// One RoBW segment: complete rows `[row_lo, row_hi)`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RobwSegment {
+    /// First row of the segment (inclusive).
     pub row_lo: usize,
+    /// One past the last row of the segment (exclusive).
     pub row_hi: usize,
     /// Non-zeros in the segment.
     pub nnz: usize,
@@ -65,6 +68,91 @@ pub fn robw_partition(a: &Csr, m_a: u64) -> Vec<RobwSegment> {
             bytes: calc_mem(end - start, z),
         });
         start = end;
+    }
+    segs
+}
+
+/// Build the [`RobwSegment`] record for rows `[row_lo, row_hi)`.
+fn make_segment(a: &Csr, row_lo: usize, row_hi: usize) -> RobwSegment {
+    let nnz = a.rowptr[row_hi] - a.rowptr[row_lo];
+    RobwSegment { row_lo, row_hi, nnz, bytes: calc_mem(row_hi - row_lo, nnz) }
+}
+
+/// Greedy boundary from `start`: the largest `e` with
+/// `calc_mem(e - start, nnz(start..e)) <= m_a`, floored at one row (the
+/// oversized-row escape). `rowptr` is already the nnz prefix sum and the
+/// footprint is strictly increasing in `e`, so the boundary is found by
+/// binary search in O(log n) instead of the serial walk's O(rows) —
+/// exactly the same boundary Algorithm 1's row-at-a-time loop produces.
+fn segment_end(a: &Csr, m_a: u64, start: usize) -> usize {
+    let cost = |e: usize| calc_mem(e - start, a.rowptr[e] - a.rowptr[start]);
+    if cost(start + 1) > m_a {
+        return start + 1;
+    }
+    // Invariant: `lo` is feasible, everything past `hi` is not.
+    let (mut lo, mut hi) = (start + 1, a.nrows);
+    while lo < hi {
+        let mid = lo + (hi - lo + 1) / 2;
+        if cost(mid) <= m_a {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    lo
+}
+
+/// Parallel Algorithm 1 on [`runtime::pool`](crate::runtime::pool):
+/// produces a plan **identical** to [`robw_partition`] at every thread
+/// count (the PR-1 determinism rule, extended to planning).
+///
+/// Phase 1 splits the rows into one fixed contiguous range per worker and
+/// plans greedy segments anchored at each range start; every planned
+/// segment is a true greedy segment (its end ignores the range boundary),
+/// so it is globally valid whenever its start row lies on the global
+/// boundary chain. Phase 2 is the ordered segment-boundary merge: walk the
+/// ranges in order, re-deriving boundaries from the live position until it
+/// coincides with a locally planned start, then splice the remainder of
+/// that range's plan wholesale. Plans are equal to the serial planner by
+/// construction — enforced across thread counts in
+/// `rust/tests/differential.rs`.
+pub fn robw_partition_par(a: &Csr, m_a: u64, pool: &Pool) -> Vec<RobwSegment> {
+    let n = a.nrows;
+    if pool.threads() <= 1 || n < 2 * pool.threads() {
+        return robw_partition(a, m_a);
+    }
+    let ranges = chunk_ranges(n, pool.threads());
+    let local: Vec<Vec<RobwSegment>> = pool.map_tasks(ranges.len(), |ci| {
+        let r = &ranges[ci];
+        let mut out = Vec::new();
+        let mut pos = r.start;
+        while pos < r.end {
+            let e = segment_end(a, m_a, pos);
+            out.push(make_segment(a, pos, e));
+            pos = e;
+        }
+        out
+    });
+    let mut segs: Vec<RobwSegment> = Vec::new();
+    let mut pos = 0usize;
+    for (ci, r) in ranges.iter().enumerate() {
+        // A segment spliced earlier may overrun this whole range.
+        if pos >= r.end {
+            continue;
+        }
+        let plan = &local[ci];
+        while pos < r.end {
+            // Local starts are sorted; an exact hit synchronizes the chains
+            // (a greedy segment depends only on its start row).
+            if let Ok(k) = plan.binary_search_by_key(&pos, |s| s.row_lo) {
+                segs.extend_from_slice(&plan[k..]);
+                pos = segs.last().expect("spliced plan is non-empty").row_hi;
+                break;
+            }
+            let e = segment_end(a, m_a, pos);
+            segs.push(make_segment(a, pos, e));
+            pos = e;
+        }
     }
     segs
 }
@@ -166,5 +254,50 @@ mod tests {
         let segs = robw_partition(&a, 1 << 20);
         assert_eq!(segs.len(), 1);
         assert_eq!((segs[0].row_lo, segs[0].row_hi), (0, 10));
+    }
+
+    #[test]
+    fn parallel_plan_equals_serial_plan() {
+        let mut rng = Pcg::seed(105);
+        for (nrows, density, budget) in
+            [(200usize, 0.1, 600u64), (500, 0.05, 1024), (937, 0.02, 400)]
+        {
+            let a = random_csr(&mut rng, nrows, 64, density);
+            let want = robw_partition(&a, budget);
+            for threads in [1usize, 2, 3, 4, 8] {
+                let got = robw_partition_par(&a, budget, &Pool::new(threads));
+                assert_eq!(got, want, "nrows={nrows} budget={budget} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_plan_handles_oversized_rows_and_tiny_budgets() {
+        // Hub row far over budget + near-zero budget (every row its own
+        // segment) — the splice must still reproduce the serial chain.
+        let mut coo = Coo::new(64, 300);
+        for c in 0..200 {
+            coo.push(17, c, 1.0);
+        }
+        for r in 0..64u32 {
+            coo.push(r, (r % 300) as u32, 2.0);
+        }
+        let a = coo.to_csr();
+        for budget in [1u64, 64, 120, 1 << 20] {
+            let want = robw_partition(&a, budget);
+            for threads in [2usize, 4, 8] {
+                let got = robw_partition_par(&a, budget, &Pool::new(threads));
+                assert_eq!(got, want, "budget={budget} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_plan_empty_and_small_inputs() {
+        let pool = Pool::new(8);
+        let empty = Csr::empty(10, 10);
+        assert_eq!(robw_partition_par(&empty, 1 << 20, &pool), robw_partition(&empty, 1 << 20));
+        let none = Csr::empty(0, 5);
+        assert_eq!(robw_partition_par(&none, 1 << 20, &pool), robw_partition(&none, 1 << 20));
     }
 }

@@ -12,12 +12,15 @@
 /// One available artifact shape (mirrors `aot.py` SPMM_VARIANTS).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SpmmVariant {
+    /// Artifact name stem.
     pub name: &'static str,
     /// Row-block slots per call.
     pub r: usize,
     /// Padded tile slots per row block.
     pub nb: usize,
+    /// Tile height.
     pub bm: usize,
+    /// Tile width.
     pub bk: usize,
     /// Feature-panel rows (K) the artifact was lowered with.
     pub k: usize,
@@ -28,6 +31,7 @@ pub struct SpmmVariant {
 /// The tiling decision for a segment.
 #[derive(Debug, Clone)]
 pub struct TilePlan {
+    /// The artifact variant the planner selected.
     pub variant: SpmmVariant,
     /// Number of artifact invocations needed.
     pub calls: usize,

@@ -10,7 +10,9 @@ use std::path::{Path, PathBuf};
 /// Element type of a tensor (the two the artifacts use).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer.
     S32,
 }
 
@@ -27,11 +29,14 @@ impl DType {
 /// Shape + dtype of one artifact input/output.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorSpec {
+    /// Tensor dimensions.
     pub shape: Vec<usize>,
+    /// Element type.
     pub dtype: DType,
 }
 
 impl TensorSpec {
+    /// Flat element count (1 for a scalar).
     pub fn elements(&self) -> usize {
         self.shape.iter().product::<usize>().max(1)
     }
@@ -54,10 +59,13 @@ impl TensorSpec {
 /// One artifact entry.
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
+    /// Artifact name (the executor's lookup key).
     pub name: String,
     /// HLO text file, relative to the manifest directory.
     pub file: String,
+    /// Input tensor contracts, in parameter order.
     pub inputs: Vec<TensorSpec>,
+    /// Output tensor contracts, in result order.
     pub outputs: Vec<TensorSpec>,
     /// Free-form numeric metadata (tile shapes etc).
     pub meta: BTreeMap<String, f64>,
@@ -66,7 +74,9 @@ pub struct ArtifactSpec {
 /// The parsed manifest.json.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Directory the manifest (and HLO files) live in.
     pub dir: PathBuf,
+    /// Every artifact the manifest declares.
     pub artifacts: Vec<ArtifactSpec>,
 }
 
@@ -122,6 +132,7 @@ impl Manifest {
         Ok(Manifest { dir: dir.to_path_buf(), artifacts })
     }
 
+    /// Look up an artifact by name.
     pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
         self.artifacts.iter().find(|a| a.name == name)
     }

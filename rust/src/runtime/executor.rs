@@ -12,11 +12,14 @@ use std::collections::HashMap;
 /// A typed input buffer for an execution.
 #[derive(Debug, Clone)]
 pub enum Buf {
+    /// Flat f32 payload.
     F32(Vec<f32>),
+    /// Flat i32 payload.
     S32(Vec<i32>),
 }
 
 impl Buf {
+    /// Element count.
     pub fn len(&self) -> usize {
         match self {
             Buf::F32(v) => v.len(),
@@ -24,10 +27,12 @@ impl Buf {
         }
     }
 
+    /// True when the buffer holds no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Element type of the payload.
     pub fn dtype(&self) -> DType {
         match self {
             Buf::F32(_) => DType::F32,
@@ -35,6 +40,7 @@ impl Buf {
         }
     }
 
+    /// Borrow as f32, erroring on an i32 payload.
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
             Buf::F32(v) => Ok(v),
@@ -65,6 +71,7 @@ impl Executor {
         Self::new(&dir)
     }
 
+    /// The manifest this executor serves.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }

@@ -11,11 +11,13 @@
 pub mod artifacts;
 pub mod executor;
 pub mod pool;
+pub mod prefetch;
 pub mod tile_exec;
 
 pub use artifacts::{Manifest, TensorSpec};
 pub use executor::Executor;
 pub use pool::Pool;
+pub use prefetch::Prefetch;
 pub use tile_exec::BsrSpmmExec;
 
 /// Default artifact directory relative to the repo root.

@@ -24,9 +24,10 @@
 //!   kernels are byte-identical to their serial oracles at every thread
 //!   count (enforced by `rust/tests/differential.rs`).
 
+use std::collections::VecDeque;
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 
 /// Handle carrying the worker-count policy for parallel regions.
 #[derive(Debug, Clone)]
@@ -51,8 +52,37 @@ impl Pool {
         Pool { threads: 1 }
     }
 
+    /// Worker count this pool runs parallel regions with.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Open a structured-concurrency region: a thin wrapper over
+    /// [`std::thread::scope`] that pipeline code (`runtime::prefetch`)
+    /// uses to run a staging task alongside the caller. Tasks spawned on
+    /// the scope may borrow from the enclosing stack frame and are all
+    /// joined before `scoped` returns, so no work outlives its operands.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use aires::runtime::pool::Pool;
+    ///
+    /// let pool = Pool::new(2);
+    /// let data = vec![1u64, 2, 3];
+    /// let total = pool.scoped(|s| {
+    ///     // A background task borrowing `data` — no 'static bound needed.
+    ///     let sum = s.spawn(|| data.iter().sum::<u64>());
+    ///     let max = data.iter().copied().max().unwrap();
+    ///     sum.join().unwrap() + max
+    /// });
+    /// assert_eq!(total, 9);
+    /// ```
+    pub fn scoped<'env, F, R>(&self, f: F) -> R
+    where
+        F: for<'scope> FnOnce(&'scope std::thread::Scope<'scope, 'env>) -> R,
+    {
+        std::thread::scope(f)
     }
 
     /// Run `f(0..ntasks)` across the pool and return the results in task
@@ -195,6 +225,119 @@ pub fn chunk_ranges(n: usize, k: usize) -> Vec<Range<usize>> {
     }
     debug_assert_eq!(lo, n);
     out
+}
+
+/// Bounded single-producer/single-consumer hand-off queue: the task
+/// hand-off primitive between a staging task and the consuming thread of a
+/// [`crate::runtime::prefetch`] pipeline. Capacity bounds how far the
+/// producer may run ahead (the double-buffering depth); `close` signals
+/// end-of-stream, `cancel` lets the consumer stop a blocked producer.
+///
+/// Hand-rolled rather than `std::sync::mpsc::sync_channel` for one
+/// semantic the pipeline's memory bound needs: [`Self::reserve`] blocks
+/// *before* the expensive production step, so a staged-but-unqueued item
+/// can never exist without a free slot waiting for it (`sync_channel`
+/// only blocks at send time, after production already happened).
+pub struct Handoff<T> {
+    capacity: usize,
+    state: Mutex<HandoffState<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+struct HandoffState<T> {
+    buf: VecDeque<T>,
+    closed: bool,
+    cancelled: bool,
+}
+
+impl<T> Handoff<T> {
+    /// Queue holding at most `capacity.max(1)` in-flight items.
+    pub fn bounded(capacity: usize) -> Handoff<T> {
+        Handoff {
+            capacity: capacity.max(1),
+            state: Mutex::new(HandoffState {
+                buf: VecDeque::new(),
+                closed: false,
+                cancelled: false,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+        }
+    }
+
+    /// Block until the queue has room for one more item (or the consumer
+    /// cancelled — then `false`). Producers call this *before* staging the
+    /// next item so production itself never runs ahead of the queue bound.
+    pub fn reserve(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.cancelled {
+                return false;
+            }
+            if st.buf.len() < self.capacity {
+                return true;
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Enqueue `item`, blocking while the queue is full. Returns `false`
+    /// (dropping the item) once the consumer has cancelled — the producer
+    /// should stop staging.
+    pub fn push(&self, item: T) -> bool {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.cancelled {
+                return false;
+            }
+            if st.buf.len() < self.capacity {
+                break;
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+        st.buf.push_back(item);
+        drop(st);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Dequeue the next item in FIFO order, blocking while the queue is
+    /// empty. Returns `None` once the channel is closed (or cancelled) and
+    /// drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(v) = st.buf.pop_front() {
+                drop(st);
+                self.not_full.notify_one();
+                return Some(v);
+            }
+            if st.closed || st.cancelled {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Producer side: no further items will be pushed. Buffered items stay
+    /// consumable; a consumer blocked in [`Self::pop`] wakes up.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+    }
+
+    /// Consumer side: stop the stream. A producer blocked in
+    /// [`Self::push`] wakes up and sees `false`, and already-buffered
+    /// items are dropped immediately.
+    pub fn cancel(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.cancelled = true;
+        st.buf.clear();
+        drop(st);
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
 }
 
 #[cfg(test)]
@@ -341,5 +484,65 @@ mod tests {
         let a = pool.map_tasks(100, |i| (i as u64).wrapping_mul(0x9e3779b97f4a7c15));
         let b = pool.map_tasks(100, |i| (i as u64).wrapping_mul(0x9e3779b97f4a7c15));
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn handoff_is_fifo_across_threads() {
+        let chan: Handoff<usize> = Handoff::bounded(2);
+        let got = Pool::new(2).scoped(|s| {
+            s.spawn(|| {
+                for i in 0..100 {
+                    assert!(chan.push(i), "consumer never cancels in this test");
+                }
+                chan.close();
+            });
+            let mut got = Vec::new();
+            while let Some(v) = chan.pop() {
+                got.push(v);
+            }
+            got
+        });
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handoff_close_drains_then_ends() {
+        let chan: Handoff<u32> = Handoff::bounded(4);
+        assert!(chan.push(1));
+        assert!(chan.push(2));
+        chan.close();
+        assert_eq!(chan.pop(), Some(1));
+        assert_eq!(chan.pop(), Some(2));
+        assert_eq!(chan.pop(), None);
+        assert_eq!(chan.pop(), None, "closed channel stays ended");
+    }
+
+    #[test]
+    fn handoff_cancel_unblocks_full_producer() {
+        let chan: Handoff<u32> = Handoff::bounded(1);
+        Pool::new(2).scoped(|s| {
+            let producer = s.spawn(|| {
+                let first = chan.push(7);
+                let second = chan.push(8);
+                // With capacity 1 and nothing consumed after the pop below,
+                // this one can only end via cancellation.
+                let third = chan.push(9);
+                (first, second, third)
+            });
+            // Popping the first item proves push(7) completed before cancel.
+            assert_eq!(chan.pop(), Some(7));
+            chan.cancel();
+            let (first, _, third) = producer.join().unwrap();
+            assert!(first, "push before cancel succeeds");
+            assert!(!third, "blocked push returns false on cancel");
+        });
+        assert_eq!(chan.pop(), None, "cancelled channel yields nothing");
+    }
+
+    #[test]
+    fn handoff_capacity_floor_is_one() {
+        let chan: Handoff<u8> = Handoff::bounded(0);
+        assert!(chan.push(9));
+        assert_eq!(chan.pop(), Some(9));
     }
 }

@@ -1,0 +1,278 @@
+//! Double-buffered asynchronous prefetch pipeline (paper §III-B, Phase II).
+//!
+//! AIRES's core system claim is that RoBW segment *transfers* overlap
+//! segment *compute*: while the kernel consumes segment `i`, the staging
+//! path (host-side pack + H2D transfer) prepares segment `i+1`. The
+//! scheduler simulation always modelled that overlap; this module makes
+//! the execution engine actually perform it.
+//!
+//! Shape: one **producer task** (spawned on [`Pool::scoped`]) runs the
+//! `stage` closure for successive indices and hands results through a
+//! bounded [`Handoff`] queue; the **calling thread** consumes them
+//! strictly in index order. The queue capacity is `depth - 1` and the
+//! producer reserves its slot *before* staging, so at most `depth` items
+//! are live at once — the one being consumed, the queued ones, and the
+//! one in production — which is exactly the headroom callers budget
+//! (e.g. the `GpuMem` ledger in `gcn::oocgcn`). `depth == 2` is classic
+//! double buffering; `depth == 1` degrades to the fully serial loop (no
+//! producer task, no queue) and is the neutral setting every oracle
+//! comparison uses.
+//!
+//! Determinism rule (same as the rest of `runtime::pool`): consumption
+//! order is the index order regardless of staging timing, so merges done
+//! in the consumer are ordered by construction and pipeline output is
+//! byte-identical to the serial loop at every depth and thread count
+//! (enforced by `rust/tests/differential.rs`). Errors keep the same rule:
+//! the error reported is always the lowest-index failure, whether it came
+//! from `stage` or `consume`.
+
+use super::pool::{Handoff, Pool};
+
+/// Configuration of one prefetch pipeline run.
+#[derive(Debug, Clone)]
+pub struct Prefetch {
+    /// Segment buffers resident at once: 1 = serial staging (neutral),
+    /// 2 = double buffering (default), higher values stage further ahead.
+    pub depth: usize,
+}
+
+impl Default for Prefetch {
+    fn default() -> Prefetch {
+        Prefetch { depth: 2 }
+    }
+}
+
+impl Prefetch {
+    /// Pipeline with the given depth (floored to 1).
+    pub fn new(depth: usize) -> Prefetch {
+        Prefetch { depth: depth.max(1) }
+    }
+
+    /// Run the pipeline over indices `0..n`.
+    ///
+    /// `stage(i)` prepares item `i` — on the calling thread at depth 1, on
+    /// the producer task otherwise. The producer reserves a queue slot
+    /// *before* staging, so across the consumed item, the queue, and the
+    /// item in production at most `depth` items are ever live. `consume(i,
+    /// item)` always runs on the calling thread, strictly in index order.
+    /// The first `Err` (lowest index, whether staged or consumed) aborts
+    /// the pipeline and is returned; a cancelled producer stops at its
+    /// next reservation or hand-off.
+    pub fn run<T, E, P, C>(&self, pool: &Pool, n: usize, stage: P, mut consume: C) -> Result<(), E>
+    where
+        T: Send,
+        E: Send,
+        P: Fn(usize) -> Result<T, E> + Sync,
+        C: FnMut(usize, T) -> Result<(), E>,
+    {
+        if n == 0 {
+            return Ok(());
+        }
+        if self.depth <= 1 || n == 1 {
+            for i in 0..n {
+                consume(i, stage(i)?)?;
+            }
+            return Ok(());
+        }
+        let chan: Handoff<Result<T, E>> = Handoff::bounded(self.depth - 1);
+        pool.scoped(|s| {
+            let chan = &chan;
+            let stage = &stage;
+            s.spawn(move || {
+                // Close on every exit path (including an unwinding stage
+                // panic) so the consumer can never block forever.
+                struct CloseOnExit<'a, T>(&'a Handoff<T>);
+                impl<T> Drop for CloseOnExit<'_, T> {
+                    fn drop(&mut self) {
+                        self.0.close();
+                    }
+                }
+                let _close = CloseOnExit(chan);
+                for i in 0..n {
+                    // Reserve the slot before staging: production never
+                    // runs ahead of the depth bound.
+                    if !chan.reserve() {
+                        return;
+                    }
+                    let item = stage(i);
+                    let failed = item.is_err();
+                    if !chan.push(item) || failed {
+                        return;
+                    }
+                }
+            });
+            // Cancel on every consumer exit path (early error return AND
+            // an unwinding consume panic): a producer blocked on a full
+            // queue must always be released before the scope joins it.
+            struct CancelOnExit<'a, T>(&'a Handoff<T>);
+            impl<T> Drop for CancelOnExit<'_, T> {
+                fn drop(&mut self) {
+                    self.0.cancel();
+                }
+            }
+            let _cancel = CancelOnExit(chan);
+            (0..n).try_for_each(|i| {
+                let item = chan.pop().expect("producer stages every index before closing");
+                consume(i, item?)
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn consumes_in_index_order_at_every_depth() {
+        let pool = Pool::new(4);
+        for depth in [1usize, 2, 3, 8] {
+            let mut seen = Vec::new();
+            let ok: Result<(), ()> = Prefetch::new(depth).run(
+                &pool,
+                25,
+                |i| Ok(i * 3),
+                |i, v| {
+                    seen.push((i, v));
+                    Ok(())
+                },
+            );
+            assert!(ok.is_ok());
+            assert_eq!(seen, (0..25).map(|i| (i, i * 3)).collect::<Vec<_>>(), "depth={depth}");
+        }
+    }
+
+    #[test]
+    fn zero_and_single_item_runs() {
+        let pool = Pool::new(2);
+        let mut hits = 0;
+        let ok: Result<(), ()> = Prefetch::new(4).run(&pool, 0, |_| Ok(()), |_, _| {
+            hits += 1;
+            Ok(())
+        });
+        assert!(ok.is_ok());
+        assert_eq!(hits, 0);
+        let ok: Result<(), ()> = Prefetch::new(4).run(&pool, 1, |i| Ok(i), |i, v| {
+            hits += 1;
+            assert_eq!((i, v), (0, 0));
+            Ok(())
+        });
+        assert!(ok.is_ok());
+        assert_eq!(hits, 1);
+    }
+
+    #[test]
+    fn stage_error_reports_lowest_index_and_stops() {
+        let pool = Pool::new(4);
+        for depth in [1usize, 2, 4] {
+            let staged = AtomicUsize::new(0);
+            let mut consumed = Vec::new();
+            let r = Prefetch::new(depth).run(
+                &pool,
+                20,
+                |i| {
+                    staged.fetch_add(1, Ordering::Relaxed);
+                    if i == 5 {
+                        Err(format!("stage {i} failed"))
+                    } else {
+                        Ok(i)
+                    }
+                },
+                |i, v| {
+                    consumed.push((i, v));
+                    Ok(())
+                },
+            );
+            assert_eq!(r.unwrap_err(), "stage 5 failed", "depth={depth}");
+            assert_eq!(consumed, (0..5).map(|i| (i, i)).collect::<Vec<_>>());
+            // The producer stops at the failed stage; nothing past it runs.
+            assert!(staged.load(Ordering::Relaxed) <= 6, "depth={depth}");
+        }
+    }
+
+    #[test]
+    fn consume_error_cancels_producer() {
+        let pool = Pool::new(4);
+        for depth in [1usize, 2, 4] {
+            let staged = AtomicUsize::new(0);
+            let r = Prefetch::new(depth).run(
+                &pool,
+                100,
+                |i| {
+                    staged.fetch_add(1, Ordering::Relaxed);
+                    Ok(i)
+                },
+                |i, _| if i == 3 { Err("consume 3 failed") } else { Ok(()) },
+            );
+            assert_eq!(r.unwrap_err(), "consume 3 failed", "depth={depth}");
+            // The producer stages at most depth ahead of the failure point
+            // plus the hand-off in flight, never the whole stream.
+            assert!(
+                staged.load(Ordering::Relaxed) <= 4 + depth + 1,
+                "depth={depth}: staged {}",
+                staged.load(Ordering::Relaxed)
+            );
+        }
+    }
+
+    #[test]
+    fn run_ahead_never_exceeds_depth() {
+        // Reserve-before-stage: live items (consumed-but-unfinished +
+        // queued + in production) never exceed depth. Track via a counter
+        // incremented at stage entry and decremented at consume exit.
+        for depth in [2usize, 3, 5] {
+            let live = AtomicUsize::new(0);
+            let peak = AtomicUsize::new(0);
+            let ok: Result<(), ()> = Prefetch::new(depth).run(
+                &Pool::new(4),
+                60,
+                |i| {
+                    let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                    peak.fetch_max(now, Ordering::SeqCst);
+                    Ok(i)
+                },
+                |_, _| {
+                    live.fetch_sub(1, Ordering::SeqCst);
+                    Ok(())
+                },
+            );
+            assert!(ok.is_ok());
+            assert!(
+                peak.load(Ordering::SeqCst) <= depth,
+                "depth={depth}: peak {} live items",
+                peak.load(Ordering::SeqCst)
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "consumer exploded")]
+    fn consume_panic_propagates_instead_of_deadlocking() {
+        // Regression: a consume panic must release the blocked producer
+        // (cancel-on-unwind) and propagate, not hang the join.
+        let _: Result<(), ()> = Prefetch::new(2).run(
+            &Pool::new(2),
+            100,
+            |i| Ok(i),
+            |i, _| {
+                if i == 3 {
+                    panic!("consumer exploded");
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn depth_zero_behaves_like_serial() {
+        let mut seen = Vec::new();
+        let ok: Result<(), ()> =
+            Prefetch::new(0).run(&Pool::serial(), 5, |i| Ok(i), |_, v| {
+                seen.push(v);
+                Ok(())
+            });
+        assert!(ok.is_ok());
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+    }
+}

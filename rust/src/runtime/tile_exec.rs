@@ -18,15 +18,22 @@ use anyhow::{anyhow, bail, Result};
 /// Static shape of one `bsr_spmm` artifact (from manifest meta).
 #[derive(Debug, Clone, Copy)]
 pub struct SpmmShape {
+    /// Row-block slots per call.
     pub r: usize,
+    /// Padded tile slots per row block.
     pub nb: usize,
+    /// Tile height.
     pub bm: usize,
+    /// Tile width.
     pub bk: usize,
+    /// Feature-panel rows (inner dimension) the artifact was lowered with.
     pub k: usize,
+    /// Feature width.
     pub f: usize,
 }
 
 impl SpmmShape {
+    /// Read the shape from an artifact's manifest metadata.
     pub fn from_spec(spec: &ArtifactSpec) -> Result<SpmmShape> {
         let get = |key: &str| {
             spec.meta
@@ -40,7 +47,9 @@ impl SpmmShape {
 
 /// Executes CSR x dense SpMM through a `bsr_spmm` artifact.
 pub struct BsrSpmmExec {
+    /// Name of the bound `bsr_spmm` artifact.
     pub artifact: String,
+    /// Its static tile grid.
     pub shape: SpmmShape,
 }
 
@@ -135,7 +144,9 @@ impl BsrSpmmExec {
 /// semantics — see `rust/tests/differential.rs`).
 #[derive(Debug, Clone, Copy)]
 pub struct CpuTileSpmm {
+    /// Tile height.
     pub bm: usize,
+    /// Tile width.
     pub bk: usize,
     /// Row-block slots per batch (the artifact grid's `r`).
     pub r: usize,
@@ -223,10 +234,13 @@ pub fn execute_batches_cpu(
 
 /// Executes the fused combine tile (`gcn_combine_*`): relu(x·w + b).
 pub struct CombineExec {
+    /// Name of the bound `gcn_combine` artifact.
     pub artifact: String,
     /// (p, f, h) static shape.
     pub p: usize,
+    /// Input feature width.
     pub f: usize,
+    /// Output (hidden) width.
     pub h: usize,
 }
 

@@ -159,8 +159,12 @@ impl Scheduler for Aires {
             }
             // Real segment count charges per-segment submission overheads
             // (cudaMalloc + DMA setup), even though the op log coalesces.
+            // The prefetch pipeline (`runtime::prefetch`) stages segments
+            // ahead of the kernel, so only the staging_exposure share of
+            // that overhead serializes with compute (neutral at depth 1).
             let n_real = stream_bytes.div_ceil((3 * plan.p).max(1)).max(1);
-            let overhead_s = n_real as f64 * (cm.gpu_malloc_s + cm.op_latency_s);
+            let overhead_s =
+                n_real as f64 * (cm.gpu_malloc_s + cm.op_latency_s) * cm.staging_exposure();
             let segs = chunks(stream_bytes, MAX_STREAM_OPS);
             // Kernel work: GPU memory traffic covers all three operands
             // every cycle, regardless of where they were sourced from.
@@ -307,6 +311,27 @@ mod tests {
         assert_eq!(plan.spill, 0, "no spill when C fits");
         assert_eq!(plan.b_panels, 1);
         assert!(plan.cache_frac > 0.99, "A fully cached with spare memory");
+    }
+
+    #[test]
+    fn prefetch_hook_neutral_at_depth_one_and_never_slower_deeper() {
+        let w = wl("kP1a");
+        let t_default = Aires.run_epoch(&w, &CostModel::default()).makespan_s.unwrap();
+        let mut d1 = CostModel::default();
+        d1.prefetch_depth = 1.0;
+        assert_eq!(
+            Aires.run_epoch(&w, &d1).makespan_s.unwrap(),
+            t_default,
+            "default calibration is the depth-1 serial staging baseline"
+        );
+        let mut last = t_default;
+        for depth in [2.0, 4.0] {
+            let mut cm = CostModel::default();
+            cm.prefetch_depth = depth;
+            let t = Aires.run_epoch(&w, &cm).makespan_s.unwrap();
+            assert!(t <= last + 1e-12, "depth {depth} must not slow the epoch");
+            last = t;
+        }
     }
 
     #[test]

@@ -8,11 +8,15 @@
 //! the per-channel I/O breakdown and the peak GPU residency. The paper's
 //! Figures 6-9 and Table III are sweeps over these runs.
 //!
-//! Host-side compute costs (UCG's CPU share via `CostModel::cpu_secs`, the
-//! RoBW partition scan via `Op::CpuPartition`) share the
-//! `cpu_threads`/`cpu_parallel_eff` hook with the real `runtime::pool`
-//! kernels, so `--threads` moves the simulated experiments and the executed
-//! kernels together (defaults keep the calibration serial and unchanged).
+//! Host-side compute costs share hooks with the real `runtime::pool`
+//! kernels so CLI knobs move the simulated experiments and the executed
+//! code together: UCG's CPU share (`CostModel::cpu_secs`) follows
+//! `cpu_threads`/`cpu_parallel_eff` (`--threads`), the RoBW partition scan
+//! (`Op::CpuPartition`) follows `partition_threads` — set only when the
+//! parallel planner `robw_partition_par` is actually selected — and
+//! AIRES's Phase II segment-submission overhead follows `prefetch_depth`
+//! (`--prefetch-depth`, via `CostModel::staging_exposure`). Defaults keep
+//! the calibration serial and every figure unchanged.
 
 pub mod aires;
 pub mod etc_sched;
@@ -31,16 +35,22 @@ use crate::memsim::{CostModel, IoStats, Sim};
 /// Table I feature matrix (asserted by tests; printed by the CLI).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Features {
+    /// Row block-wise alignment (complete rows per segment).
     pub alignment: bool,
+    /// Pinned-memory DMA transfers.
     pub dma: bool,
+    /// Unified-memory fault-driven reads.
     pub um_reads: bool,
+    /// Dual-way GDS path (NVMe<->GPU direct).
     pub dual_way: bool,
+    /// Algorithm-system co-design (RoBW + three-phase scheduling).
     pub co_design: bool,
 }
 
 /// One SpGEMM training workload (paper §V-A model configuration).
 #[derive(Debug, Clone)]
 pub struct Workload {
+    /// Dataset name.
     pub name: String,
     /// Graph vertices (rows/cols of CSR A).
     pub vertices: u64,
@@ -143,13 +153,16 @@ impl Workload {
 /// Outcome of one simulated epoch.
 #[derive(Debug, Clone)]
 pub struct EpochResult {
+    /// Scheduler name (Table I row).
     pub scheduler: &'static str,
+    /// Workload/dataset name.
     pub workload: String,
     /// End-to-end per-epoch latency (the paper's headline metric), or
     /// `None` if the scheduler hit OOM ('-' rows in Table III).
     pub makespan_s: Option<f64>,
     /// Why the run OOMed, when it did.
     pub oom: Option<String>,
+    /// Per-channel I/O breakdown (Figures 7-8).
     pub io: IoStats,
     /// Peak GPU bytes the schedule required.
     pub gpu_peak_bytes: u64,
@@ -158,6 +171,7 @@ pub struct EpochResult {
 }
 
 impl EpochResult {
+    /// An OOM outcome (Table III '-' cell).
     pub fn oom(scheduler: &'static str, workload: &Workload, why: String) -> Self {
         EpochResult {
             scheduler,
@@ -170,6 +184,7 @@ impl EpochResult {
         }
     }
 
+    /// A completed outcome summarizing a finished simulation.
     pub fn ok(scheduler: &'static str, workload: &Workload, sim: &Sim, peak: u64) -> Self {
         EpochResult {
             scheduler,

@@ -13,6 +13,7 @@ use super::{Csr, IDX_BYTES, VAL_BYTES};
 /// `[block_row*bm, (block_row+1)*bm)`.
 #[derive(Debug, Clone)]
 pub struct BsrRowBlock {
+    /// Index of this row block (rows `block_row*bm ..`).
     pub block_row: usize,
     /// Block-column index of each stored tile (sorted ascending).
     pub colidx: Vec<u32>,
@@ -32,9 +33,13 @@ impl BsrRowBlock {
 /// Block-sparse matrix with uniform `bm x bk` tiles.
 #[derive(Debug, Clone)]
 pub struct Bsr {
+    /// Logical (unpadded) row count of the source matrix.
     pub nrows: usize,
+    /// Logical (unpadded) column count of the source matrix.
     pub ncols: usize,
+    /// Tile height.
     pub bm: usize,
+    /// Tile width.
     pub bk: usize,
     /// ceil(nrows / bm) row blocks, in order.
     pub row_blocks: Vec<BsrRowBlock>,

@@ -7,22 +7,28 @@ use super::Csr;
 /// may emit the same edge twice).
 #[derive(Debug, Clone, Default)]
 pub struct Coo {
+    /// Row count.
     pub nrows: usize,
+    /// Column count.
     pub ncols: usize,
+    /// `(row, col, value)` triplets in insertion order.
     pub entries: Vec<(u32, u32, f32)>,
 }
 
 impl Coo {
+    /// Empty triplet list with the given shape.
     pub fn new(nrows: usize, ncols: usize) -> Self {
         Coo { nrows, ncols, entries: Vec::new() }
     }
 
+    /// Append one `(r, c, v)` triplet.
     #[inline]
     pub fn push(&mut self, r: u32, c: u32, v: f32) {
         debug_assert!((r as usize) < self.nrows && (c as usize) < self.ncols);
         self.entries.push((r, c, v));
     }
 
+    /// Stored triplet count (duplicates not yet merged).
     pub fn nnz(&self) -> usize {
         self.entries.len()
     }

@@ -5,7 +5,9 @@ use super::{Csr, IDX_BYTES, PTR_BYTES, VAL_BYTES};
 /// CSC matrix: `colptr[j]..colptr[j+1]` indexes the non-zeros of column `j`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Csc {
+    /// Row count.
     pub nrows: usize,
+    /// Column count.
     pub ncols: usize,
     /// len ncols + 1, monotone, last entry == nnz.
     pub colptr: Vec<usize>,
@@ -16,10 +18,12 @@ pub struct Csc {
 }
 
 impl Csc {
+    /// Empty matrix with the given shape.
     pub fn empty(nrows: usize, ncols: usize) -> Self {
         Csc { nrows, ncols, colptr: vec![0; ncols + 1], rowidx: Vec::new(), vals: Vec::new() }
     }
 
+    /// Stored non-zero count.
     #[inline]
     pub fn nnz(&self) -> usize {
         self.rowidx.len()

@@ -3,9 +3,36 @@
 use super::{Coo, Csc, IDX_BYTES, PTR_BYTES, VAL_BYTES};
 
 /// CSR matrix: `rowptr[i]..rowptr[i+1]` indexes the non-zeros of row `i`.
+///
+/// This is the format of the paper's matrix A — the operand RoBW
+/// partitioning slices and the accelerator path regrids into BSR tiles.
+///
+/// # Examples
+///
+/// Build a small matrix through [`Coo`] (the interchange format every
+/// generator emits) and inspect it:
+///
+/// ```
+/// use aires::sparse::{Coo, Csr};
+///
+/// // [[1, 0, 2],
+/// //  [0, 3, 0]]
+/// let mut coo = Coo::new(2, 3);
+/// coo.push(0, 0, 1.0);
+/// coo.push(0, 2, 2.0);
+/// coo.push(1, 1, 3.0);
+/// let m: Csr = coo.to_csr();
+///
+/// assert_eq!(m.nnz(), 3);
+/// assert_eq!(m.row_nnz(0), 2);
+/// assert_eq!(m.row(1).collect::<Vec<_>>(), vec![(1, 3.0)]);
+/// assert!(m.validate().is_ok());
+/// ```
 #[derive(Debug, Clone, PartialEq)]
 pub struct Csr {
+    /// Row count.
     pub nrows: usize,
+    /// Column count.
     pub ncols: usize,
     /// len nrows + 1, monotonically non-decreasing, last entry == nnz.
     pub rowptr: Vec<usize>,
@@ -69,6 +96,7 @@ impl Csr {
         Ok(())
     }
 
+    /// Stored non-zero count.
     #[inline]
     pub fn nnz(&self) -> usize {
         self.colidx.len()

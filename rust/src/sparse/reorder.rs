@@ -12,19 +12,24 @@ use super::{Coo, Csr};
 /// A vertex permutation: `perm[new] = old` and `inv[old] = new`.
 #[derive(Debug, Clone)]
 pub struct Permutation {
+    /// `perm[new] = old`.
     pub perm: Vec<u32>,
+    /// `inv[old] = new`.
     pub inv: Vec<u32>,
 }
 
 impl Permutation {
+    /// The identity permutation on `0..n`.
     pub fn identity(n: usize) -> Permutation {
         Permutation { perm: (0..n as u32).collect(), inv: (0..n as u32).collect() }
     }
 
+    /// Number of vertices permuted.
     pub fn len(&self) -> usize {
         self.perm.len()
     }
 
+    /// True for the empty (0-vertex) permutation.
     pub fn is_empty(&self) -> bool {
         self.perm.is_empty()
     }

@@ -20,6 +20,30 @@ use super::{Csc, Csr};
 
 /// Gustavson SpGEMM: C = A·B, both CSR. Dense accumulator per row —
 /// O(nnz(A) * avg_row(B)) time, O(ncols(B)) scratch.
+///
+/// # Examples
+///
+/// Multiplying by the identity returns the operand unchanged:
+///
+/// ```
+/// use aires::sparse::spgemm::spgemm_gustavson;
+/// use aires::sparse::Coo;
+///
+/// // A = [[1, 2], [0, 1]]
+/// let mut a = Coo::new(2, 2);
+/// a.push(0, 0, 1.0);
+/// a.push(0, 1, 2.0);
+/// a.push(1, 1, 1.0);
+/// let a = a.to_csr();
+///
+/// // B = I
+/// let mut b = Coo::new(2, 2);
+/// b.push(0, 0, 1.0);
+/// b.push(1, 1, 1.0);
+///
+/// let c = spgemm_gustavson(&a, &b.to_csr());
+/// assert_eq!(c, a);
+/// ```
 pub fn spgemm_gustavson(a: &Csr, b: &Csr) -> Csr {
     assert_eq!(a.ncols, b.nrows, "inner dimension mismatch");
     let n = b.ncols;
@@ -158,6 +182,7 @@ pub fn spgemm_gustavson_par(a: &Csr, b: &Csr, pool: &Pool) -> Csr {
 /// (row, column) pairs whose index sets intersected — the paper's "matches",
 /// which determine the dynamic output allocation (Eq. 5).
 pub struct CsrCscProduct {
+    /// The product C = A·B.
     pub c: Csr,
     /// Count of output non-zeros before cancellation (== nnz(C) in practice).
     pub matches: u64,

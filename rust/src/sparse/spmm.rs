@@ -14,31 +14,39 @@ use super::Csr;
 /// and the PJRT runtime (which consumes flat f32 buffers).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Dense {
+    /// Row count.
     pub nrows: usize,
+    /// Column count.
     pub ncols: usize,
+    /// Row-major values, `data[r * ncols + c]`.
     pub data: Vec<f32>,
 }
 
 impl Dense {
+    /// All-zero matrix of the given shape.
     pub fn zeros(nrows: usize, ncols: usize) -> Self {
         Dense { nrows, ncols, data: vec![0f32; nrows * ncols] }
     }
 
+    /// Wrap a row-major buffer (must be exactly `nrows * ncols` long).
     pub fn from_vec(nrows: usize, ncols: usize, data: Vec<f32>) -> Self {
         assert_eq!(data.len(), nrows * ncols);
         Dense { nrows, ncols, data }
     }
 
+    /// Element at `(r, c)`.
     #[inline]
     pub fn at(&self, r: usize, c: usize) -> f32 {
         self.data[r * self.ncols + c]
     }
 
+    /// Mutable element at `(r, c)`.
     #[inline]
     pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
         &mut self.data[r * self.ncols + c]
     }
 
+    /// Row `r` as a slice.
     pub fn row(&self, r: usize) -> &[f32] {
         &self.data[r * self.ncols..(r + 1) * self.ncols]
     }

@@ -220,4 +220,25 @@ mod tests {
             gen::pathological(rng, 24).validate()
         });
     }
+
+    #[test]
+    fn robw_parallel_plan_equals_serial_property() {
+        use crate::partition::robw::{robw_partition, robw_partition_par};
+        use crate::runtime::pool::Pool;
+        check("robw_partition_par == robw_partition", 7, |rng| {
+            let a =
+                if rng.chance(0.25) { gen::pathological(rng, 48) } else { gen::csr(rng, 48, 0.3) };
+            let budget = rng.range(1, 2048) as u64;
+            let want = robw_partition(&a, budget);
+            for threads in [2usize, 4, 8] {
+                if robw_partition_par(&a, budget, &Pool::new(threads)) != want {
+                    return Err(format!(
+                        "plan diverged at {threads} threads (budget={budget}, {}x{})",
+                        a.nrows, a.ncols
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
 }

@@ -36,9 +36,11 @@ pub fn human_secs(secs: f64) -> String {
 pub struct Stopwatch(std::time::Instant);
 
 impl Stopwatch {
+    /// Start timing now.
     pub fn start() -> Self {
         Stopwatch(std::time::Instant::now())
     }
+    /// Seconds elapsed since [`Stopwatch::start`].
     pub fn secs(&self) -> f64 {
         self.0.elapsed().as_secs_f64()
     }

@@ -30,6 +30,7 @@ impl Pcg {
         Self::new(seed, 0)
     }
 
+    /// Next raw 32-bit output of the PCG-XSH-RR stream.
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
@@ -39,6 +40,7 @@ impl Pcg {
         xorshifted.rotate_right(rot)
     }
 
+    /// Next 64 bits (two 32-bit outputs concatenated).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64

@@ -11,11 +11,22 @@
 //! shapes (empty rows, hub row, 1×N, N×1), and the graphgen families the
 //! paper's datasets map to (rmat, road, kmer adjacencies).
 //!
+//! Beyond the kernels, the same contract covers the *planning* and
+//! *streaming* layers: `robw_partition_par` must emit the exact serial
+//! plan, and the `runtime::prefetch` pipeline (`OocGcnLayer::forward_cpu`
+//! / `forward_staged`) must produce byte-identical layer output at every
+//! prefetch depth × thread count combination.
+//!
 //! Case count per property: `AIRES_PROP_CASES` (default 64).
 
+use aires::gcn::model::dense_affine;
+use aires::gcn::{OocGcnLayer, StagingConfig};
+use aires::memsim::GpuMem;
+use aires::partition::robw::{robw_partition, robw_partition_par};
 use aires::runtime::pool::Pool;
 use aires::runtime::tile_exec::CpuTileSpmm;
 use aires::sparse::block::{pack_csr_batches, pack_csr_batches_par, SpmmBatch};
+use aires::sparse::norm::normalize_adjacency;
 use aires::sparse::spgemm::{spgemm_gustavson, spgemm_gustavson_par};
 use aires::sparse::spmm::{spmm, spmm_par, spmm_transpose, spmm_transpose_par};
 use aires::sparse::Csr;
@@ -23,6 +34,9 @@ use aires::testing::{check, gen};
 use aires::util::rng::Pcg;
 
 const THREADS: [usize; 4] = [1, 2, 4, 8];
+/// Prefetch-pipeline sweep: depth {1,2,4} × threads {1,2,8}.
+const PREFETCH_DEPTHS: [usize; 3] = [1, 2, 4];
+const PREFETCH_THREADS: [usize; 3] = [1, 2, 8];
 
 fn batches_eq(a: &[SpmmBatch], b: &[SpmmBatch]) -> bool {
     a.len() == b.len()
@@ -227,6 +241,149 @@ fn diff_cpu_tile_exec_graph_families() {
                 want,
                 "{name}: tile executor diverged at {t} threads"
             );
+        }
+    }
+}
+
+// ------------------------------------------------------- RoBW planning
+
+#[test]
+fn diff_robw_parallel_plan_equals_serial() {
+    check("robw_partition_par == robw_partition", 108, |rng| {
+        let a = if rng.chance(0.3) { gen::pathological(rng, 64) } else { gen::csr(rng, 64, 0.25) };
+        let budget = rng.range(1, 4096) as u64;
+        let want = robw_partition(&a, budget);
+        for &t in &THREADS {
+            let got = robw_partition_par(&a, budget, &Pool::new(t));
+            if got != want {
+                return Err(format!(
+                    "threads={t}: plan diverged (budget={budget}, {}x{}, nnz {})",
+                    a.nrows,
+                    a.ncols,
+                    a.nnz()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn diff_robw_plan_graph_families() {
+    for (name, g) in graph_cases() {
+        for budget in [64u64, 1024, 1 << 20] {
+            let want = robw_partition(&g, budget);
+            for &t in &THREADS {
+                assert_eq!(
+                    robw_partition_par(&g, budget, &Pool::new(t)),
+                    want,
+                    "{name}: plan diverged at budget {budget}, {t} threads"
+                );
+            }
+        }
+    }
+}
+
+// --------------------------------------------------- prefetch pipeline
+
+fn random_layer(rng: &mut Pcg, f: usize) -> OocGcnLayer {
+    let h = rng.range(1, 9);
+    OocGcnLayer {
+        w: gen::dense(rng, f, h),
+        b: (0..h).map(|_| rng.normal() as f32).collect(),
+        relu: rng.chance(0.5),
+        seg_budget: rng.range(64, 2049) as u64,
+    }
+}
+
+#[test]
+fn diff_forward_cpu_prefetch_matches_serial_oracle() {
+    check("forward_cpu(depth, threads) == serial forward", 109, |rng| {
+        let a_hat = normalize_adjacency(&gen::adjacency(rng, 48, 0.2));
+        let f = rng.range(1, 10);
+        let x = gen::dense(rng, a_hat.ncols, f);
+        let layer = random_layer(rng, f);
+
+        // The serial-staging serial-pool pass is the oracle...
+        let mut mem = GpuMem::new(1 << 30);
+        let (want, base) = layer
+            .forward_cpu(&a_hat, &x, &mut mem, &Pool::serial(), &StagingConfig::serial())
+            .map_err(|e| e.to_string())?;
+        // ...and it must itself equal the closed-form reference.
+        let closed = dense_affine(&spmm(&a_hat, &x), &layer.w, &layer.b, layer.relu);
+        if want != closed {
+            return Err("serial forward_cpu diverged from dense_affine(spmm(..))".into());
+        }
+
+        for &depth in &PREFETCH_DEPTHS {
+            for &t in &PREFETCH_THREADS {
+                let mut mem = GpuMem::new(1 << 30);
+                let (got, rep) = layer
+                    .forward_cpu(&a_hat, &x, &mut mem, &Pool::new(t), &StagingConfig::depth(depth))
+                    .map_err(|e| e.to_string())?;
+                if got != want {
+                    return Err(format!("depth={depth} threads={t}: output diverged"));
+                }
+                if rep.segments != base.segments || rep.h2d_bytes != base.h2d_bytes {
+                    return Err(format!("depth={depth} threads={t}: plan/traffic diverged"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn diff_forward_cpu_prefetch_graph_families() {
+    let mut rng = Pcg::seed(10);
+    for (name, g) in graph_cases() {
+        let a_hat = normalize_adjacency(&g);
+        let x = gen::dense(&mut rng, a_hat.ncols, 8);
+        let layer = random_layer(&mut rng, 8);
+        let want = dense_affine(&spmm(&a_hat, &x), &layer.w, &layer.b, layer.relu);
+        for &depth in &PREFETCH_DEPTHS {
+            for &t in &PREFETCH_THREADS {
+                let mut mem = GpuMem::new(1 << 30);
+                let (got, _) = layer
+                    .forward_cpu(&a_hat, &x, &mut mem, &Pool::new(t), &StagingConfig::depth(depth))
+                    .unwrap();
+                assert_eq!(got, want, "{name}: diverged at depth {depth}, {t} threads");
+            }
+        }
+    }
+}
+
+/// The acceptance sweep on the artifact path: `forward_staged` at depth
+/// {1,2,4} × threads {1,2,8} against the serial `forward` oracle. Skips
+/// cleanly when the PJRT artifacts are not built (the CPU-path sweeps
+/// above enforce the same pipeline in that environment).
+#[test]
+fn diff_forward_staged_artifacts_match_serial_forward() {
+    let Some(dir) = aires::runtime::find_artifact_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut exec = aires::runtime::Executor::new(&dir).unwrap();
+    let mut rng = Pcg::seed(12);
+    let a_hat = normalize_adjacency(&aires::graphgen::kmer::generate(&mut rng, 500, 3.0));
+    let x = gen::dense(&mut rng, 500, 64);
+    let layer = OocGcnLayer {
+        w: gen::dense(&mut rng, 64, 64),
+        b: vec![0.05; 64],
+        relu: true,
+        seg_budget: 4096,
+    };
+    let mut mem = GpuMem::new(64 << 20);
+    let (want, _) = layer.forward(&mut exec, &a_hat, &x, &mut mem).unwrap();
+    for &depth in &PREFETCH_DEPTHS {
+        for &t in &PREFETCH_THREADS {
+            let mut mem = GpuMem::new(64 << 20);
+            let pool = Pool::new(t);
+            let staging = StagingConfig::depth(depth);
+            let (got, _) = layer
+                .forward_staged(&mut exec, &a_hat, &x, &mut mem, &pool, &staging)
+                .unwrap();
+            assert_eq!(got, want, "artifact path diverged at depth {depth}, {t} threads");
         }
     }
 }

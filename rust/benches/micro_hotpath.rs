@@ -108,8 +108,11 @@ fn main() {
         io.pcie_h2d_gbps = 0.16; // ~0.8 ms per 128 KiB segment staged
         let pool = aires::benchlib::pool_from_env();
         let run = |depth: usize| {
-            let staging =
-                StagingConfig { prefetch: Prefetch::new(depth), io_cost: Some(io.clone()) };
+            let staging = StagingConfig {
+                prefetch: Prefetch::new(depth),
+                io_cost: Some(io.clone()),
+                ..StagingConfig::default()
+            };
             let mut mem = GpuMem::new(1 << 30);
             layer.forward_cpu(&ga, &x, &mut mem, &pool, &staging).expect("forward_cpu").0
         };
@@ -123,6 +126,60 @@ fn main() {
         });
         report_speedup(&serial, &piped);
         assert_eq!(run(2), run(1), "prefetch must not change the output");
+
+        // --- segstore: disk-backed vs in-memory staging at depths {1,2}.
+        // Segments spill once to a fixture directory (AIRES_SEG_FIXTURE_DIR
+        // lets CI cache it between steps/runs — open_or_spill validates
+        // file sizes and every read is checksum-verified, so a stale cache
+        // respills instead of serving wrong bytes) and the forward pass
+        // streams from the files through a disabled host cache, i.e. every
+        // staged segment is a real read.
+        let segs = robw_partition(&ga, layer.seg_budget);
+        // _scratch keeps the RAII temp dir alive (and removed on every
+        // exit path, panics included) when no fixture dir is configured.
+        let (fix_dir, _scratch) = match std::env::var("AIRES_SEG_FIXTURE_DIR") {
+            Ok(d) => (std::path::PathBuf::from(d).join("kmer-60k"), None),
+            Err(_) => {
+                let t = aires::testing::TempDir::new("bench-seg");
+                (t.path().join("kmer-60k"), Some(t))
+            }
+        };
+        let store = std::sync::Arc::new(
+            aires::runtime::SegmentStore::open_or_spill(&ga, &segs, &fix_dir, 0)
+                .expect("spill segment fixture"),
+        );
+        let spilled: u64 = (0..store.len()).map(|i| store.meta(i).file_bytes).sum();
+        println!(
+            "disk-backed staging on kmer-60k ({} segments, {} on disk):",
+            store.len(),
+            aires::util::human_bytes(spilled)
+        );
+        let run_mem = |depth: usize| {
+            let mut mem = GpuMem::new(1 << 30);
+            layer
+                .forward_cpu(&ga, &x, &mut mem, &pool, &StagingConfig::depth(depth))
+                .expect("forward_cpu")
+                .0
+        };
+        let run_disk = |depth: usize| {
+            let staging = StagingConfig::disk(store.clone(), depth);
+            let mut mem = GpuMem::new(1 << 30);
+            layer.forward_cpu(&ga, &x, &mut mem, &pool, &staging).expect("forward_cpu disk").0
+        };
+        let mem_d1 = bench("forward_cpu in-memory staging, depth 1", 1, 5, || {
+            std::hint::black_box(run_mem(1));
+        });
+        bench("forward_cpu in-memory staging, depth 2", 1, 5, || {
+            std::hint::black_box(run_mem(2));
+        });
+        for depth in [1usize, 2] {
+            let r = bench(&format!("forward_cpu disk-backed staging, depth {depth}"), 1, 5, || {
+                std::hint::black_box(run_disk(depth));
+            });
+            report_speedup(&mem_d1, &r);
+        }
+        assert_eq!(run_disk(1), run_disk(2), "disk staging depth must not change the output");
+        assert_eq!(run_disk(2), run_mem(1), "disk-backed output must equal the in-memory pass");
     }
 
     // --- Bridge: BSR extraction + artifact batch packing ----------------

@@ -43,6 +43,15 @@ pub struct Config {
     /// `cost_model.prefetch_depth` so modelled Phase II overhead moves
     /// with the executed pipeline.
     pub prefetch_depth: Option<usize>,
+    /// Directory disk-backed staging spills RoBW segments to and serves
+    /// them back from (`runtime::segstore`). `None` = in-memory staging
+    /// (the default). The CLI's `--segment-dir` overrides this.
+    pub segment_dir: Option<String>,
+    /// Byte bound of the host-RAM cache tier between the segment files
+    /// and the `GpuMem` ledger: `0` disables the tier (every staged read
+    /// hits disk); `None` = unbounded. Only meaningful with disk-backed
+    /// staging. The CLI's `--host-cache-bytes` overrides this.
+    pub host_cache_bytes: Option<u64>,
 }
 
 impl Default for Config {
@@ -54,6 +63,8 @@ impl Default for Config {
             datasets: Vec::new(),
             threads: 1,
             prefetch_depth: None,
+            segment_dir: None,
+            host_cache_bytes: None,
         }
     }
 }
@@ -139,6 +150,24 @@ impl Config {
                     }
                     cfg.prefetch_depth = Some(n as usize);
                 }
+                "segment_dir" => {
+                    let dir = val
+                        .as_str()
+                        .ok_or_else(|| anyhow!("segment_dir must be a string"))?;
+                    if dir.is_empty() {
+                        bail!("segment_dir must not be empty (omit the key for in-memory staging)");
+                    }
+                    cfg.segment_dir = Some(dir.to_string());
+                }
+                "host_cache_bytes" => {
+                    let n = val
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("host_cache_bytes must be a number"))?;
+                    if n < 0.0 || n.fract() != 0.0 {
+                        bail!("host_cache_bytes must be a non-negative integer (0 = no cache)");
+                    }
+                    cfg.host_cache_bytes = Some(n as u64);
+                }
                 "datasets" => {
                     let arr =
                         val.as_arr().ok_or_else(|| anyhow!("datasets must be an array"))?;
@@ -220,6 +249,12 @@ impl Config {
         if let Some(d) = self.prefetch_depth {
             root.insert("prefetch_depth".to_string(), Json::Num(d as f64));
         }
+        if let Some(dir) = &self.segment_dir {
+            root.insert("segment_dir".to_string(), Json::Str(dir.clone()));
+        }
+        if let Some(b) = self.host_cache_bytes {
+            root.insert("host_cache_bytes".to_string(), Json::Num(b as f64));
+        }
         root.insert(
             "datasets".to_string(),
             Json::Arr(self.datasets.iter().map(|d| Json::Str(d.clone())).collect()),
@@ -299,6 +334,34 @@ mod tests {
         .cost_model;
         assert_eq!(cm.staging_exposure(), 0.5);
         assert!(cm.partition_parallelism() > 6.0);
+    }
+
+    #[test]
+    fn segment_store_keys_roundtrip_and_validate() {
+        let cfg = Config::from_json_str(
+            r#"{"segment_dir":"/tmp/segs","host_cache_bytes":1048576}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.segment_dir.as_deref(), Some("/tmp/segs"));
+        assert_eq!(cfg.host_cache_bytes, Some(1048576));
+        let back = Config::from_json_str(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(back.segment_dir, cfg.segment_dir);
+        assert_eq!(back.host_cache_bytes, cfg.host_cache_bytes);
+        // Unset stays unset through the roundtrip (in-memory staging).
+        let unset = Config::from_json_str("{}").unwrap();
+        assert_eq!((unset.segment_dir.clone(), unset.host_cache_bytes), (None, None));
+        let unset_back = Config::from_json_str(&unset.to_json().to_string()).unwrap();
+        assert_eq!(unset_back.segment_dir, None);
+        // Bad values fail loudly.
+        assert!(Config::from_json_str(r#"{"segment_dir":""}"#).is_err());
+        assert!(Config::from_json_str(r#"{"segment_dir":7}"#).is_err());
+        assert!(Config::from_json_str(r#"{"host_cache_bytes":-1}"#).is_err());
+        assert!(Config::from_json_str(r#"{"host_cache_bytes":1.5}"#).is_err());
+        // 0 is a valid bound: disk staging with the host tier disabled.
+        assert_eq!(
+            Config::from_json_str(r#"{"host_cache_bytes":0}"#).unwrap().host_cache_bytes,
+            Some(0)
+        );
     }
 
     #[test]

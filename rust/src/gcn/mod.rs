@@ -15,5 +15,5 @@ pub mod oocgcn;
 pub mod train;
 
 pub use model::Gcn2Ref;
-pub use oocgcn::{LayerReport, OocGcnLayer, StagingConfig};
+pub use oocgcn::{LayerReport, OocGcnLayer, StagingBacking, StagingConfig};
 pub use train::Trainer;

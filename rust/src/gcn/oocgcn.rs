@@ -18,16 +18,17 @@
 //! (`rust/tests/differential.rs`).
 
 use crate::gcn::model::dense_affine;
-use crate::memsim::{CostModel, GpuMem, Op};
+use crate::memsim::{CostModel, GpuMem, Op, StagingMeter};
 use crate::partition::robw::{materialize, robw_partition_par, RobwSegment};
 use crate::runtime::pool::Pool;
 use crate::runtime::prefetch::Prefetch;
+use crate::runtime::segstore::SegmentStore;
 use crate::runtime::tile_exec::{BsrSpmmExec, CombineExec};
 use crate::runtime::Executor;
 use crate::sparse::spmm::{spmm_par, Dense};
 use crate::sparse::Csr;
 use anyhow::{anyhow, Result};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Execution report for one out-of-core layer pass.
 #[derive(Debug, Clone, Default)]
@@ -45,6 +46,36 @@ pub struct LayerReport {
     pub h2d_bytes: u64,
     /// Staging depth the pass ran with (1 = serial staging).
     pub prefetch_depth: usize,
+    /// Bytes actually read from the NVMe tier — *measured* I/O of a
+    /// disk-backed pass (0 with in-memory backing; host-cache hits add
+    /// nothing). Deterministic: the producer reads segments strictly in
+    /// index order, so this does not depend on depth or thread count.
+    pub disk_bytes: u64,
+    /// Segment reads served by the host-RAM cache tier (disk backing only).
+    pub cache_hits: usize,
+    /// Segment reads that went to disk (disk backing only).
+    pub cache_misses: usize,
+    /// Seconds the cost model charges for the measured NVMe reads — set
+    /// when a disk-backed pass runs with [`StagingConfig::io_cost`]
+    /// attached: memsim charges the measured byte counts instead of
+    /// sleeping on planner estimates.
+    pub staged_io_modeled_s: f64,
+}
+
+/// Where the Phase II producer gets segment bytes from.
+#[derive(Debug, Clone, Default)]
+pub enum StagingBacking {
+    /// Slice segments out of the in-memory matrix (`materialize`) — the
+    /// historical path; any attached [`StagingConfig::io_cost`] is charged
+    /// as a simulated sleep on the planner-estimated segment bytes.
+    #[default]
+    Memory,
+    /// Read segments from a spilled [`SegmentStore`] — the true
+    /// out-of-core path: every staged segment is a checksum-verified file
+    /// read served through the store's bounded host-RAM cache tier, and
+    /// I/O accounting uses *measured* byte counts
+    /// ([`LayerReport::disk_bytes`]) instead of simulated sleeps.
+    Disk(Arc<SegmentStore>),
 }
 
 /// Phase II staging configuration for one forward pass.
@@ -53,22 +84,41 @@ pub struct StagingConfig {
     /// Pipeline depth policy (see [`Prefetch`]); defaults to double
     /// buffering (depth 2).
     pub prefetch: Prefetch,
-    /// When set, the producer charges each segment's simulated H2D
-    /// latency (`CostModel::transfer_secs(Op::HtoD, bytes)`) as real
-    /// staging time — the I/O the scheduler models becomes wall-clock the
-    /// pipeline must actually hide (the `micro_hotpath` overlap bench).
+    /// With [`StagingBacking::Memory`]: when set, the producer charges
+    /// each segment's simulated H2D latency
+    /// (`CostModel::transfer_secs(Op::HtoD, bytes)`) as real staging time
+    /// — the I/O the scheduler models becomes wall-clock the pipeline must
+    /// actually hide (the `micro_hotpath` overlap bench). With
+    /// [`StagingBacking::Disk`] nothing sleeps — the file reads are real —
+    /// and this model instead prices the measured disk bytes into
+    /// [`LayerReport::staged_io_modeled_s`].
     pub io_cost: Option<CostModel>,
+    /// Segment source: in-memory slicing (default) or a spilled
+    /// [`SegmentStore`]. Output is byte-identical either way at every
+    /// depth, thread count, and cache size
+    /// (`rust/tests/differential.rs`).
+    pub backing: StagingBacking,
 }
 
 impl StagingConfig {
-    /// Serial staging (depth 1, no charged I/O): the oracle configuration.
+    /// Serial staging (depth 1, in-memory, no charged I/O): the oracle
+    /// configuration.
     pub fn serial() -> StagingConfig {
-        StagingConfig { prefetch: Prefetch::new(1), io_cost: None }
+        StagingConfig { prefetch: Prefetch::new(1), ..StagingConfig::default() }
     }
 
-    /// Double buffering at `depth` with no charged I/O.
+    /// In-memory double buffering at `depth` with no charged I/O.
     pub fn depth(depth: usize) -> StagingConfig {
-        StagingConfig { prefetch: Prefetch::new(depth), io_cost: None }
+        StagingConfig { prefetch: Prefetch::new(depth), ..StagingConfig::default() }
+    }
+
+    /// Disk-backed staging from `store` at `depth`.
+    pub fn disk(store: Arc<SegmentStore>, depth: usize) -> StagingConfig {
+        StagingConfig {
+            prefetch: Prefetch::new(depth),
+            io_cost: None,
+            backing: StagingBacking::Disk(store),
+        }
     }
 }
 
@@ -212,12 +262,21 @@ impl OocGcnLayer {
         C: FnMut(&mut Ctx, &RobwSegment, Csr, &mut Dense) -> Result<()>,
         Fin: FnOnce(&mut Ctx, &Dense) -> Result<Dense>,
     {
+        // Plan first: a disk-backed pass must match the store's manifest
+        // *before* anything is allocated, or the "files on disk" and the
+        // "plan in memory" would silently disagree about row ranges.
+        let segs = robw_partition_par(a_hat, self.seg_budget, pool);
+        if let StagingBacking::Disk(store) = &staging.backing {
+            store
+                .check_plan(&segs)
+                .map_err(|e| anyhow!("segment store does not match the RoBW plan: {e}"))?;
+        }
+
         // Phase I: feature panel resident (the GDS leg in the simulation).
         let b_bytes = (x.nrows * x.ncols * 4) as u64;
         mem.alloc(b_bytes, "feature panel")
             .map_err(|e| anyhow!("feature panel does not fit: {e}"))?;
 
-        let segs = robw_partition_par(a_hat, self.seg_budget, pool);
         let mut agg = Dense::zeros(a_hat.nrows, x.ncols);
         let mut report = LayerReport {
             segments: segs.len(),
@@ -232,8 +291,14 @@ impl OocGcnLayer {
         });
         // Phase III: output stays "resident" through the finisher.
         let result = match streamed {
-            Ok(h2d) => {
-                report.h2d_bytes = h2d;
+            Ok(st) => {
+                report.h2d_bytes = st.h2d;
+                report.disk_bytes = st.meter.disk_bytes;
+                report.cache_hits = st.meter.cache_hits;
+                report.cache_misses = st.meter.cache_misses;
+                if let Some(cm) = &staging.io_cost {
+                    report.staged_io_modeled_s = st.meter.modeled_read_secs(cm);
+                }
                 finish(ctx, &agg)
             }
             Err(e) => Err(e),
@@ -252,17 +317,30 @@ impl OocGcnLayer {
 struct SegmentLedger<'a> {
     mem: &'a mut GpuMem,
     staged: u64,
+    meter: StagingMeter,
+}
+
+/// What one streamed pass measured (beyond the planner's estimates).
+struct StreamStats {
+    /// Planned segment bytes staged host-to-device.
+    h2d: u64,
+    /// Measured disk/cache traffic (zero for in-memory backing).
+    meter: StagingMeter,
 }
 
 /// Stream planned segments through the prefetch pipeline.
 ///
-/// The producer stages segment `i+1` (ledger alloc + pack + optional
-/// simulated H2D latency) while `consume` computes segment `i` on the
-/// calling thread; each segment is freed after its compute. Consumption is
-/// strictly ordered, so everything `consume` merges is deterministic; the
-/// ledger's high-water mark alone reflects real staging concurrency. On
-/// error, every staged-but-unconsumed segment is freed before returning,
-/// so the ledger ends balanced either way. Returns the total bytes staged.
+/// The producer stages segment `i+1` (ledger alloc + pack-or-read) while
+/// `consume` computes segment `i` on the calling thread; each segment is
+/// freed after its compute. In-memory backing slices the source matrix
+/// (plus the optional simulated H2D sleep); disk backing reads the
+/// [`SegmentStore`]'s checksum-verified files through its host cache and
+/// meters the *measured* bytes instead. Consumption is strictly ordered,
+/// so everything `consume` merges is deterministic; the ledger's
+/// high-water mark alone reflects real staging concurrency. On error —
+/// including a failed file read mid-stream — every staged-but-unconsumed
+/// segment is freed before returning, so the ledger ends balanced either
+/// way and the producer is always joined.
 fn stream_segments<F>(
     a_hat: &Csr,
     segs: &[RobwSegment],
@@ -270,11 +348,11 @@ fn stream_segments<F>(
     pool: &Pool,
     staging: &StagingConfig,
     mut consume: F,
-) -> Result<u64>
+) -> Result<StreamStats>
 where
     F: FnMut(&RobwSegment, Csr) -> Result<()>,
 {
-    let ledger = Mutex::new(SegmentLedger { mem, staged: 0 });
+    let ledger = Mutex::new(SegmentLedger { mem, staged: 0, meter: StagingMeter::default() });
     let mut h2d = 0u64;
     let result = staging.prefetch.run(
         pool,
@@ -288,12 +366,24 @@ where
                     .map_err(|e| anyhow!("segment does not fit: {e}"))?;
                 l.staged += seg.bytes;
             }
-            let sub = materialize(a_hat, seg);
-            if let Some(cm) = &staging.io_cost {
-                let dur = cm.transfer_secs(Op::HtoD, seg.bytes);
-                std::thread::sleep(std::time::Duration::from_secs_f64(dur));
+            match &staging.backing {
+                StagingBacking::Memory => {
+                    let sub = materialize(a_hat, seg);
+                    if let Some(cm) = &staging.io_cost {
+                        let dur = cm.transfer_secs(Op::HtoD, seg.bytes);
+                        std::thread::sleep(std::time::Duration::from_secs_f64(dur));
+                    }
+                    Ok(sub)
+                }
+                StagingBacking::Disk(store) => {
+                    let (sub, origin) = store
+                        .read(i)
+                        .map_err(|e| anyhow!("staging segment {i} from disk: {e}"))?;
+                    let mut l = ledger.lock().unwrap();
+                    l.meter.record(origin.disk_bytes, origin.cache_hit);
+                    Ok(sub)
+                }
             }
-            Ok(sub)
         },
         |i, sub| {
             let seg = &segs[i];
@@ -311,7 +401,7 @@ where
         l.mem.free(l.staged);
     }
     result?;
-    Ok(h2d)
+    Ok(StreamStats { h2d, meter: l.meter })
 }
 
 #[cfg(test)]
@@ -425,6 +515,84 @@ mod tests {
             .unwrap_err();
         assert!(err.to_string().contains("segment does not fit"), "{err}");
         assert_eq!(mem.used, 0, "error path must return panel + segments to the ledger");
+    }
+
+    #[test]
+    fn disk_backed_forward_matches_memory_and_meters_io() {
+        let mut rng = Pcg::seed(9);
+        let a = crate::graphgen::kmer::generate(&mut rng, 250, 3.0);
+        let a_hat = normalize_adjacency(&a);
+        let x = Dense::from_vec(250, 8, (0..250 * 8).map(|_| rng.normal() as f32).collect());
+        let layer = test_layer(&mut rng, 8, 8, 2048);
+        let mut mem = GpuMem::new(64 << 20);
+        let (want, base) = layer
+            .forward_cpu(&a_hat, &x, &mut mem, &Pool::serial(), &StagingConfig::serial())
+            .unwrap();
+        assert_eq!(base.disk_bytes, 0, "in-memory staging reads no disk");
+
+        let dir = crate::testing::TempDir::new("oocgcn-disk");
+        let segs = crate::partition::robw::robw_partition(&a_hat, layer.seg_budget);
+        let store = Arc::new(
+            SegmentStore::spill(&a_hat, &segs, dir.path(), 0).unwrap(),
+        );
+        let mut staging = StagingConfig::disk(store.clone(), 2);
+        staging.io_cost = Some(CostModel::default());
+        let mut mem2 = GpuMem::new(64 << 20);
+        let (got, rep) =
+            layer.forward_cpu(&a_hat, &x, &mut mem2, &Pool::new(2), &staging).unwrap();
+        assert_eq!(got, want, "disk-backed pass must be byte-identical");
+        assert_eq!(rep.segments, base.segments);
+        assert_eq!(rep.h2d_bytes, base.h2d_bytes);
+        assert_eq!(rep.cache_misses, segs.len(), "cacheless store reads every file");
+        assert_eq!(rep.cache_hits, 0);
+        let expect_disk: u64 = (0..store.len()).map(|i| store.meta(i).file_bytes).sum();
+        assert_eq!(rep.disk_bytes, expect_disk, "measured bytes = sum of file sizes");
+        assert!(rep.staged_io_modeled_s > 0.0, "io_cost prices the measured bytes");
+        assert_eq!(mem2.used, 0);
+    }
+
+    #[test]
+    fn disk_backed_forward_rejects_mismatched_plan() {
+        let mut rng = Pcg::seed(10);
+        let a = crate::graphgen::kmer::generate(&mut rng, 200, 3.0);
+        let a_hat = normalize_adjacency(&a);
+        let x = Dense::zeros(200, 8);
+        let layer = test_layer(&mut rng, 8, 8, 2048);
+        let dir = crate::testing::TempDir::new("oocgcn-planmismatch");
+        // Spill under a *different* budget than the layer plans with.
+        let other = crate::partition::robw::robw_partition(&a_hat, 512);
+        let store = Arc::new(SegmentStore::spill(&a_hat, &other, dir.path(), 0).unwrap());
+        let mut mem = GpuMem::new(64 << 20);
+        let err = layer
+            .forward_cpu(&a_hat, &x, &mut mem, &Pool::serial(), &StagingConfig::disk(store, 1))
+            .unwrap_err();
+        assert!(err.to_string().contains("does not match the RoBW plan"), "{err}");
+        assert_eq!(mem.used, 0, "plan guard fires before any allocation");
+    }
+
+    #[test]
+    fn warm_host_cache_serves_second_pass_without_disk() {
+        let mut rng = Pcg::seed(11);
+        let a = crate::graphgen::kmer::generate(&mut rng, 200, 3.0);
+        let a_hat = normalize_adjacency(&a);
+        let x = Dense::from_vec(200, 8, (0..200 * 8).map(|_| rng.normal() as f32).collect());
+        let layer = test_layer(&mut rng, 8, 8, 1536);
+        let segs = crate::partition::robw::robw_partition(&a_hat, layer.seg_budget);
+        let dir = crate::testing::TempDir::new("oocgcn-warm");
+        let unbounded = crate::runtime::segstore::UNBOUNDED_CACHE;
+        let store =
+            Arc::new(SegmentStore::spill(&a_hat, &segs, dir.path(), unbounded).unwrap());
+        let staging = StagingConfig::disk(store, 2);
+        let mut mem = GpuMem::new(64 << 20);
+        let (first, rep1) =
+            layer.forward_cpu(&a_hat, &x, &mut mem, &Pool::new(2), &staging).unwrap();
+        assert_eq!(rep1.cache_misses, segs.len());
+        let mut mem = GpuMem::new(64 << 20);
+        let (second, rep2) =
+            layer.forward_cpu(&a_hat, &x, &mut mem, &Pool::new(2), &staging).unwrap();
+        assert_eq!(second, first);
+        assert_eq!(rep2.cache_hits, segs.len(), "warm pass is all host-tier hits");
+        assert_eq!(rep2.disk_bytes, 0);
     }
 
     #[test]

@@ -10,7 +10,14 @@
 //!                      e2e GCN training through the PJRT artifacts
 //!   spgemm [--nodes N] [--budget BYTES] [--prefetch-depth D]
 //!                      one out-of-core aggregation through the artifacts,
-//!                      verified against the CPU oracle
+//!                      verified against the CPU oracle (--segment-dir
+//!                      stages from spilled files instead of memory)
+//!   segcheck [--nodes N] [--budget BYTES] [--segment-dir DIR]
+//!            [--host-cache-bytes N]
+//!                      spill RoBW segments to disk, stream the forward
+//!                      pass from the files through the host-cache tier,
+//!                      and verify byte-identity against the in-memory
+//!                      oracle (no compiled artifacts needed)
 //!   prep DATASET       one-time RoBW preprocessing cost estimate
 
 use aires::config::Config;
@@ -23,29 +30,81 @@ fn arg_value(args: &[String], key: &str) -> Option<String> {
     args.iter().position(|a| a == key).and_then(|i| args.get(i + 1).cloned())
 }
 
+/// Report a malformed invocation and exit with the conventional usage
+/// code (2). Flag mistakes must be *usage errors*, not `expect()` panics
+/// with a backtrace.
+fn usage_fail(msg: &str) -> ! {
+    eprintln!("error: {msg}");
+    eprintln!("run `aires` with no arguments for usage, or see README.md");
+    std::process::exit(2);
+}
+
+/// Value of `--key V`; a flag present without a value is a usage error
+/// (previously it was silently ignored).
+fn flag_value(args: &[String], key: &str) -> Option<String> {
+    let i = args.iter().position(|a| a == key)?;
+    match args.get(i + 1) {
+        Some(v) => Some(v.clone()),
+        None => usage_fail(&format!("{key} requires a value")),
+    }
+}
+
+/// Parsed value of `--key V`; a parse failure is a usage error naming the
+/// flag and the offending input.
+fn parsed_flag<T: std::str::FromStr>(args: &[String], key: &str, what: &str) -> Option<T> {
+    flag_value(args, key).map(|v| {
+        v.parse::<T>()
+            .unwrap_or_else(|_| usage_fail(&format!("{key} expects {what}, got {v:?}")))
+    })
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     // Every subcommand honours --config <file> (cost-model + workload
     // overrides; see rust/src/config.rs for the schema).
-    let cfg = match arg_value(&args, "--config") {
-        Some(path) => Config::from_file(&path).expect("config"),
+    let cfg = match flag_value(&args, "--config") {
+        Some(path) => Config::from_file(&path)
+            .unwrap_or_else(|e| usage_fail(&format!("--config {path}: {e}"))),
         None => Config::default(),
     };
     // Every subcommand honours --threads N (0 = one per hardware thread):
     // it sizes the runtime::pool the real kernels run on, and mirrors the
     // resolved worker count into the simulator's host-compute hook so the
     // modelled experiments and the executed kernels agree.
-    let threads_flag = arg_value(&args, "--threads").map(|v| v.parse::<usize>().expect("--threads"));
+    let threads_flag: Option<usize> =
+        parsed_flag(&args, "--threads", "a non-negative integer (0 = auto)");
     let pool = Pool::new(threads_flag.unwrap_or(cfg.threads));
     // --prefetch-depth N sizes the executed Phase II staging pipeline
     // (1 = serial staging, 2 = double buffering; output is byte-identical
     // at every depth). CLI flag wins over the config's `prefetch_depth`;
-    // neither set -> the double-buffering default of 2.
-    let prefetch_flag = arg_value(&args, "--prefetch-depth")
-        .map(|v| v.parse::<usize>().expect("--prefetch-depth"));
-    let prefetch_depth =
-        prefetch_flag.map(|d| d.max(1)).unwrap_or_else(|| cfg.resolved_prefetch_depth());
+    // neither set -> the double-buffering default of 2. A requested depth
+    // of 0 is clamped to 1 *with a warning* (previously a silent floor).
+    let prefetch_flag: Option<usize> =
+        parsed_flag(&args, "--prefetch-depth", "a positive integer (1 = serial staging)")
+            .map(|d: usize| {
+                if d == 0 {
+                    eprintln!(
+                        "warning: --prefetch-depth 0 is not a valid depth; \
+                         using 1 (serial staging)"
+                    );
+                    1
+                } else {
+                    d
+                }
+            });
+    let prefetch_depth = prefetch_flag.unwrap_or_else(|| cfg.resolved_prefetch_depth());
+    // Disk-backed staging surface: --segment-dir selects the spill/serve
+    // directory (config key `segment_dir` as fallback; neither = in-memory
+    // staging) and --host-cache-bytes bounds the host-RAM tier between
+    // the segment files and the GpuMem ledger (0 = no cache; unset =
+    // unbounded).
+    let segment_dir: Option<String> =
+        flag_value(&args, "--segment-dir").or_else(|| cfg.segment_dir.clone());
+    let host_cache_bytes: u64 =
+        parsed_flag(&args, "--host-cache-bytes", "a byte count (0 = no host cache)")
+            .or(cfg.host_cache_bytes)
+            .unwrap_or(aires::runtime::segstore::UNBOUNDED_CACHE);
     let mut cm = cfg.cost_model.clone();
     // --threads always wins; otherwise the config's `threads` key flows
     // into the hook too, unless the config pinned cost_model.cpu_threads
@@ -110,8 +169,7 @@ fn main() {
         "sweep" => {
             // Latency sweep over memory constraints for one dataset.
             let ds = arg_value(&args, "--dataset").unwrap_or_else(|| "kP1a".into());
-            let points: usize =
-                arg_value(&args, "--points").and_then(|v| v.parse().ok()).unwrap_or(8);
+            let points: usize = parsed_flag(&args, "--points", "a point count").unwrap_or(8);
             let d = aires::graphgen::catalog::by_name(&ds).expect("unknown dataset");
             println!("{:>9} {:>11} {:>9} {:>9} {:>9}", "cap (GB)", "MaxMemory", "UCG", "ETC", "AIRES");
             for i in 0..points {
@@ -150,11 +208,9 @@ fn main() {
             );
         }
         "train" => {
-            let steps: usize =
-                arg_value(&args, "--steps").and_then(|v| v.parse().ok()).unwrap_or(100);
-            let lr: f32 = arg_value(&args, "--lr").and_then(|v| v.parse().ok()).unwrap_or(2.0);
-            let nodes: usize =
-                arg_value(&args, "--nodes").and_then(|v| v.parse().ok()).unwrap_or(1024);
+            let steps: usize = parsed_flag(&args, "--steps", "a step count").unwrap_or(100);
+            let lr: f32 = parsed_flag(&args, "--lr", "a learning rate").unwrap_or(2.0);
+            let nodes: usize = parsed_flag(&args, "--nodes", "a node count").unwrap_or(1024);
             let mut exec = aires::runtime::Executor::from_env().expect("executor");
             let mut rng = Pcg::seed(42);
             let g = aires::graphgen::kmer::generate(&mut rng, nodes, 3.2);
@@ -168,10 +224,8 @@ fn main() {
             }
         }
         "spgemm" => {
-            let nodes: usize =
-                arg_value(&args, "--nodes").and_then(|v| v.parse().ok()).unwrap_or(600);
-            let budget: u64 =
-                arg_value(&args, "--budget").and_then(|v| v.parse().ok()).unwrap_or(8192);
+            let nodes: usize = parsed_flag(&args, "--nodes", "a node count").unwrap_or(600);
+            let budget: u64 = parsed_flag(&args, "--budget", "a byte budget").unwrap_or(8192);
             let mut exec = aires::runtime::Executor::from_env().expect("executor");
             let mut rng = Pcg::seed(7);
             let a = aires::graphgen::kmer::generate(&mut rng, nodes, 3.0);
@@ -192,7 +246,28 @@ fn main() {
                 seg_budget: budget,
             };
             let mut mem = aires::memsim::GpuMem::new(256 << 20);
-            let staging = aires::gcn::oocgcn::StagingConfig::depth(prefetch_depth);
+            // --segment-dir switches staging from in-memory slicing to
+            // real file reads through the host-cache tier.
+            let staging = match &segment_dir {
+                None => aires::gcn::oocgcn::StagingConfig::depth(prefetch_depth),
+                Some(dir) => {
+                    let segs = aires::partition::robw::robw_partition(&a_hat, budget);
+                    let store = aires::runtime::SegmentStore::open_or_spill(
+                        &a_hat,
+                        &segs,
+                        std::path::Path::new(dir),
+                        host_cache_bytes,
+                    )
+                    .unwrap_or_else(|e| {
+                        eprintln!("error: spilling segments to {dir}: {e}");
+                        std::process::exit(1);
+                    });
+                    aires::gcn::oocgcn::StagingConfig::disk(
+                        std::sync::Arc::new(store),
+                        prefetch_depth,
+                    )
+                }
+            };
             let (out, rep) = layer
                 .forward_staged(&mut exec, &a_hat, &x, &mut mem, &pool, &staging)
                 .expect("forward");
@@ -204,6 +279,14 @@ fn main() {
                 aires::util::human_bytes(rep.peak_gpu_bytes),
                 aires::util::human_bytes(rep.h2d_bytes)
             );
+            if segment_dir.is_some() {
+                println!(
+                    "disk-backed staging: {} from disk, {} cache hits / {} misses",
+                    aires::util::human_bytes(rep.disk_bytes),
+                    rep.cache_hits,
+                    rep.cache_misses
+                );
+            }
             // Verify against the CPU oracle.
             let want = aires::gcn::model::dense_affine(
                 &aires::sparse::spmm::spmm(&a_hat, &x),
@@ -214,6 +297,91 @@ fn main() {
             let diff = out.max_abs_diff(&want);
             println!("max |accelerator - oracle| = {diff:.2e} -> {}", if diff < 1e-3 { "OK" } else { "MISMATCH" });
         }
+        "segcheck" => {
+            // Disk-backed staging surface that needs no compiled
+            // artifacts: generate a graph, spill its RoBW segments to
+            // --segment-dir (a scratch dir when unset), stream the forward
+            // pass from the files through the host-cache tier, and verify
+            // byte-identity against the in-memory serial oracle.
+            use aires::gcn::oocgcn::StagingConfig;
+            use aires::memsim::GpuMem;
+            use aires::sparse::spmm::Dense;
+
+            let nodes: usize =
+                parsed_flag(&args, "--nodes", "a node count").unwrap_or(400);
+            let budget: u64 =
+                parsed_flag(&args, "--budget", "a byte budget").unwrap_or(4096);
+            let mut rng = Pcg::seed(13);
+            let a = aires::graphgen::kmer::generate(&mut rng, nodes, 3.0);
+            let a_hat = aires::sparse::norm::normalize_adjacency(&a);
+            let x = Dense::from_vec(
+                nodes,
+                32,
+                (0..nodes * 32).map(|_| rng.normal() as f32).collect(),
+            );
+            let layer = aires::gcn::OocGcnLayer {
+                w: Dense::from_vec(
+                    32,
+                    32,
+                    (0..32 * 32).map(|_| (rng.normal() * 0.2) as f32).collect(),
+                ),
+                b: vec![0.0; 32],
+                relu: true,
+                seg_budget: budget,
+            };
+            let (dir, ephemeral) = match &segment_dir {
+                Some(d) => (std::path::PathBuf::from(d), false),
+                None => (
+                    std::env::temp_dir().join(format!("aires-segcheck-{}", std::process::id())),
+                    true,
+                ),
+            };
+            let segs = aires::partition::robw::robw_partition(&a_hat, budget);
+            let store = aires::runtime::SegmentStore::open_or_spill(
+                &a_hat,
+                &segs,
+                &dir,
+                host_cache_bytes,
+            )
+            .unwrap_or_else(|e| {
+                eprintln!("error: spilling segments to {}: {e}", dir.display());
+                std::process::exit(1);
+            });
+            let spilled: u64 = (0..store.len()).map(|i| store.meta(i).file_bytes).sum();
+            println!(
+                "spilled {} segments ({}) to {}",
+                store.len(),
+                aires::util::human_bytes(spilled),
+                dir.display()
+            );
+            let staging =
+                StagingConfig::disk(std::sync::Arc::new(store), prefetch_depth);
+            let mut mem = GpuMem::new(1 << 30);
+            let (got, rep) = layer
+                .forward_cpu(&a_hat, &x, &mut mem, &pool, &staging)
+                .expect("disk-backed forward");
+            let mut mem2 = GpuMem::new(1 << 30);
+            let (want, _) = layer
+                .forward_cpu(&a_hat, &x, &mut mem2, &Pool::serial(), &StagingConfig::serial())
+                .expect("oracle forward");
+            println!(
+                "streamed {} segments (prefetch depth {}): {} from disk, {} cache hits / {} misses",
+                rep.segments,
+                rep.prefetch_depth,
+                aires::util::human_bytes(rep.disk_bytes),
+                rep.cache_hits,
+                rep.cache_misses
+            );
+            if ephemeral {
+                let _ = std::fs::remove_dir_all(&dir);
+            }
+            if got == want {
+                println!("disk-backed output byte-identical to the in-memory oracle: OK");
+            } else {
+                eprintln!("error: disk-backed output DIVERGED from the in-memory oracle");
+                std::process::exit(1);
+            }
+        }
         "parcheck" => {
             // Serial-vs-parallel differential check + timing of the hot
             // kernels on generated graphs: the runtime surface for
@@ -222,10 +390,8 @@ fn main() {
             use aires::sparse::spmm::{spmm, spmm_par, Dense};
             use aires::util::{human_secs, Stopwatch};
 
-            let scale: u32 =
-                arg_value(&args, "--scale").and_then(|v| v.parse().ok()).unwrap_or(11);
-            let feat: usize =
-                arg_value(&args, "--feat").and_then(|v| v.parse().ok()).unwrap_or(64);
+            let scale: u32 = parsed_flag(&args, "--scale", "an RMAT scale").unwrap_or(11);
+            let feat: usize = parsed_flag(&args, "--feat", "a feature width").unwrap_or(64);
             let mut rng = Pcg::seed(77);
             let a = aires::graphgen::rmat::generate(&mut rng, scale, 8, Default::default());
             let h = Dense::from_vec(
@@ -282,7 +448,7 @@ fn main() {
         _ => {
             println!(
                 "aires — out-of-core GCN co-design (AIRES reproduction)\n\n\
-                 usage: aires <catalog|features|fig3|fig6|fig7|fig8|fig9|table3|report|prep|train|spgemm|parcheck|trace|sweep|config-dump> [--config F] [--threads N] [--prefetch-depth D] [args]\n\
+                 usage: aires <catalog|features|fig3|fig6|fig7|fig8|fig9|table3|report|prep|train|spgemm|segcheck|parcheck|trace|sweep|config-dump> [--config F] [--threads N] [--prefetch-depth D] [--segment-dir DIR] [--host-cache-bytes N] [args]\n\
                  see README.md for details"
             );
         }

@@ -21,7 +21,7 @@ pub mod trace;
 pub use alloc::OutputModel;
 pub use channel::{CostModel, Op, Res};
 pub use sim::Sim;
-pub use stats::IoStats;
+pub use stats::{IoStats, StagingMeter};
 
 /// GPU memory ledger: capacity-checked alloc/free with peak tracking.
 /// Schedulers use it to decide segment sizes and detect OOM, mirroring the

@@ -2,9 +2,51 @@
 //! paper's Figure 7 (GPU-CPU breakdown by memcpy kind) and Figure 8
 //! (GPU/CPU-SSD achieved bandwidth).
 
-use super::channel::Op;
+use super::channel::{CostModel, Op};
 use super::sim::Sim;
 use std::collections::BTreeMap;
+
+/// Measured staging I/O of one executed disk-backed pipeline pass.
+///
+/// The simulated schedulers charge planner-*estimated* byte counts; the
+/// in-memory execution path mirrors that by sleeping on estimates
+/// (`StagingConfig::io_cost`). The disk-backed path instead performs real
+/// reads and records what actually moved per tier here — cache hits in the
+/// host-RAM tier add nothing — and converts the measured counts into
+/// modeled seconds through the same [`CostModel`] calibration, so figures
+/// derived from executed and simulated passes stay comparable.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StagingMeter {
+    /// Bytes actually read from the NVMe tier.
+    pub disk_bytes: u64,
+    /// Segment reads served by the host-RAM cache tier.
+    pub cache_hits: usize,
+    /// Segment reads that went to disk.
+    pub cache_misses: usize,
+}
+
+impl StagingMeter {
+    /// Record one segment read: a hit costs no disk bytes, a miss charges
+    /// the measured file size.
+    pub fn record(&mut self, disk_bytes: u64, cache_hit: bool) {
+        if cache_hit {
+            self.cache_hits += 1;
+        } else {
+            self.cache_misses += 1;
+            self.disk_bytes += disk_bytes;
+        }
+    }
+
+    /// Seconds the cost model charges for the measured NVMe reads
+    /// ([`Op::NvmeToHost`] over `disk_bytes`; 0 when nothing hit disk).
+    pub fn modeled_read_secs(&self, cm: &CostModel) -> f64 {
+        if self.disk_bytes == 0 {
+            0.0
+        } else {
+            cm.transfer_secs(Op::NvmeToHost, self.disk_bytes)
+        }
+    }
+}
 
 /// Aggregated per-op-kind I/O: bytes moved, busy seconds, op count.
 #[derive(Debug, Clone, Default)]
@@ -112,6 +154,19 @@ mod tests {
         assert_eq!(st.get("HtoD").count, 2);
         assert_eq!(st.gpu_cpu_bytes(), 1700);
         assert_eq!(st.get("UM").count, 0);
+    }
+
+    #[test]
+    fn staging_meter_accumulates_measured_bytes() {
+        let mut m = StagingMeter::default();
+        m.record(1000, false);
+        m.record(0, true);
+        m.record(500, false);
+        assert_eq!(m.disk_bytes, 1500);
+        assert_eq!((m.cache_hits, m.cache_misses), (1, 2));
+        let cm = CostModel::default();
+        assert!(m.modeled_read_secs(&cm) > 0.0);
+        assert_eq!(StagingMeter::default().modeled_read_secs(&cm), 0.0);
     }
 
     #[test]

@@ -12,12 +12,14 @@ pub mod artifacts;
 pub mod executor;
 pub mod pool;
 pub mod prefetch;
+pub mod segstore;
 pub mod tile_exec;
 
 pub use artifacts::{Manifest, TensorSpec};
 pub use executor::Executor;
 pub use pool::Pool;
 pub use prefetch::Prefetch;
+pub use segstore::{CacheStats, SegmentStore};
 pub use tile_exec::BsrSpmmExec;
 
 /// Default artifact directory relative to the repo root.

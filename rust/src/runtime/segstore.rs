@@ -1,0 +1,586 @@
+//! Disk-backed segment store with a bounded host-RAM cache tier.
+//!
+//! This is the paper's tiered memory system made concrete for the executed
+//! pipeline: planned RoBW segments are **spilled** to a directory in the
+//! [`sparse::segio`](crate::sparse::segio) format (the NVMe tier), and
+//! **served** back through a bounded host-memory cache (the host-RAM tier)
+//! that sits between disk and the [`GpuMem`](crate::memsim::GpuMem) ledger
+//! (the device tier). A cache hit is a host-memcpy-priced read; a miss is
+//! a real file read, checksum-verified before any compute sees the bytes.
+//!
+//! Eviction is deterministic LRU: the cache's state depends only on the
+//! sequence of `read` calls, never on timing. The prefetch producer is a
+//! single task reading segments strictly in index order, so hit/miss
+//! patterns — and therefore [`CacheStats`] — are identical at every
+//! prefetch depth and thread count (asserted in
+//! `rust/tests/differential.rs`).
+
+use crate::partition::robw::{materialize, RobwSegment};
+use crate::sparse::segio::{self, Fnv64, SegioError};
+use crate::sparse::Csr;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Host-cache capacity meaning "no bound": every decoded segment stays
+/// resident (the whole matrix ends up in host RAM, like the in-memory
+/// path but with a verified disk round trip behind it).
+pub const UNBOUNDED_CACHE: u64 = u64::MAX;
+
+/// One spilled segment's metadata (the store's in-memory manifest entry).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SegmentMeta {
+    /// First row of the segment (inclusive) in the source matrix.
+    pub row_lo: usize,
+    /// One past the last row (exclusive).
+    pub row_hi: usize,
+    /// Stored non-zeros.
+    pub nnz: usize,
+    /// The planner's `calcMem` footprint (ledger bytes while staged).
+    pub plan_bytes: u64,
+    /// Encoded file size on disk (header + sections).
+    pub file_bytes: u64,
+    /// Segment file path.
+    pub path: PathBuf,
+}
+
+/// Counters of one store's serving behaviour since creation.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Reads served from the host-RAM tier.
+    pub hits: usize,
+    /// Reads that went to disk.
+    pub misses: usize,
+    /// Segments evicted to keep the cache within its byte bound.
+    pub evictions: usize,
+    /// Total bytes read from disk (measured, not planned).
+    pub disk_bytes: u64,
+    /// Decoded bytes currently resident in the host tier.
+    pub resident_bytes: u64,
+}
+
+/// What one [`SegmentStore::read`] actually did — the measured I/O the
+/// staging layer charges (instead of the planner-estimate sleeps the
+/// in-memory path simulates).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReadOrigin {
+    /// Bytes read from disk for this call (0 on a cache hit).
+    pub disk_bytes: u64,
+    /// Whether the host-RAM tier served the read.
+    pub cache_hit: bool,
+}
+
+#[derive(Debug, Default)]
+struct HostCache {
+    /// Byte bound (0 disables the tier entirely).
+    capacity: u64,
+    used: u64,
+    /// Decoded segments keyed by index.
+    entries: HashMap<usize, Csr>,
+    /// LRU order: front = coldest, back = hottest.
+    order: Vec<usize>,
+    stats: CacheStats,
+}
+
+impl HostCache {
+    fn touch(&mut self, idx: usize) {
+        if let Some(pos) = self.order.iter().position(|&i| i == idx) {
+            self.order.remove(pos);
+        }
+        self.order.push(idx);
+    }
+
+    fn insert(&mut self, idx: usize, m: Csr) {
+        let cost = m.size_bytes();
+        if self.capacity == 0 || cost > self.capacity {
+            return; // tier disabled, or the segment alone exceeds the bound
+        }
+        while self.used + cost > self.capacity {
+            let coldest = self.order.remove(0);
+            let evicted = self.entries.remove(&coldest).expect("order tracks entries");
+            self.used -= evicted.size_bytes();
+            self.stats.evictions += 1;
+        }
+        self.used += cost;
+        self.entries.insert(idx, m);
+        self.order.push(idx);
+        self.stats.resident_bytes = self.used;
+    }
+}
+
+/// A spilled, partitioned matrix served through the host-RAM tier.
+///
+/// Build one with [`SegmentStore::spill`] (writes every planned segment to
+/// a directory) or [`SegmentStore::open_or_spill`] (reuses byte-valid
+/// fixture files — the bench/CI path). Reads are `&self` and
+/// thread-safe, so the prefetch producer can stage from the store while
+/// the consumer computes.
+#[derive(Debug)]
+pub struct SegmentStore {
+    dir: PathBuf,
+    segs: Vec<SegmentMeta>,
+    cache: Mutex<HostCache>,
+}
+
+/// Fingerprint of (matrix payload, planned layout). The fixture-reuse
+/// gate: two different matrices can plan identically-*sized* segments, so
+/// file sizes alone cannot prove a directory serves the right bytes —
+/// this hash covers every stored value and every planned boundary.
+fn fingerprint(a: &Csr, segs: &[RobwSegment]) -> u64 {
+    let mut h = Fnv64::new();
+    h.update(&(a.nrows as u64).to_le_bytes());
+    h.update(&(a.ncols as u64).to_le_bytes());
+    for &p in &a.rowptr {
+        h.update(&(p as u64).to_le_bytes());
+    }
+    for &c in &a.colidx {
+        h.update(&c.to_le_bytes());
+    }
+    for &v in &a.vals {
+        h.update(&v.to_bits().to_le_bytes());
+    }
+    for s in segs {
+        h.update(&(s.row_lo as u64).to_le_bytes());
+        h.update(&(s.row_hi as u64).to_le_bytes());
+        h.update(&(s.nnz as u64).to_le_bytes());
+    }
+    h.finish()
+}
+
+impl SegmentStore {
+    fn seg_path(dir: &Path, i: usize) -> PathBuf {
+        dir.join(format!("seg-{i:05}.bin"))
+    }
+
+    fn fingerprint_path(dir: &Path) -> PathBuf {
+        dir.join("fingerprint")
+    }
+
+    /// Spill every planned segment of `a` to `dir` (created if missing),
+    /// returning a store that serves them back through a host cache of at
+    /// most `host_cache_bytes` decoded bytes (`0` = no cache,
+    /// [`UNBOUNDED_CACHE`] = keep everything).
+    pub fn spill(
+        a: &Csr,
+        segs: &[RobwSegment],
+        dir: &Path,
+        host_cache_bytes: u64,
+    ) -> Result<SegmentStore, SegioError> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| SegioError::Io(format!("create {}: {e}", dir.display())))?;
+        // Marker first, segment files second: a spill interrupted mid-way
+        // leaves the marker + partial files, which the next open_or_spill
+        // detects (size check fails) and cleanly respills. The other order
+        // would leave a marker-less non-empty directory that
+        // clear_store_files permanently refuses to touch.
+        let fp = Self::fingerprint_path(dir);
+        std::fs::write(&fp, fingerprint(a, segs).to_le_bytes())
+            .map_err(|e| SegioError::Io(format!("write {}: {e}", fp.display())))?;
+        let mut metas = Vec::with_capacity(segs.len());
+        for (i, seg) in segs.iter().enumerate() {
+            let sub = materialize(a, seg);
+            let path = Self::seg_path(dir, i);
+            let file_bytes = segio::write_segment(&path, &sub)?;
+            metas.push(SegmentMeta {
+                row_lo: seg.row_lo,
+                row_hi: seg.row_hi,
+                nnz: seg.nnz,
+                plan_bytes: seg.bytes,
+                file_bytes,
+                path,
+            });
+        }
+        Ok(Self::with_metas(dir.to_path_buf(), metas, host_cache_bytes))
+    }
+
+    /// Reuse `dir`'s files when its recorded fingerprint matches this
+    /// (matrix, plan) *and* every expected segment file exists with
+    /// exactly the predicted encoded size; otherwise remove the previous
+    /// spill's files (`fingerprint` + `seg-*.bin`, nothing else) and
+    /// respill. A non-empty directory with no `fingerprint` marker is
+    /// refused outright — never deleted. This is the bench/CI fixture
+    /// path: a stale or partial fixture — a restored cache from another
+    /// plan, or even from a *different matrix* whose segments happen to
+    /// have the same sizes — can never serve wrong bytes. Size or
+    /// fingerprint mismatches trigger a respill here, and surviving
+    /// corruption is caught by the per-read checksum.
+    pub fn open_or_spill(
+        a: &Csr,
+        segs: &[RobwSegment],
+        dir: &Path,
+        host_cache_bytes: u64,
+    ) -> Result<SegmentStore, SegioError> {
+        let want_fp = fingerprint(a, segs).to_le_bytes();
+        let reusable = std::fs::read(Self::fingerprint_path(dir))
+            .map(|got| got == want_fp)
+            .unwrap_or(false)
+            && segs.iter().enumerate().all(|(i, seg)| {
+                let want = segio::encoded_len(seg.row_hi - seg.row_lo, seg.nnz);
+                std::fs::metadata(Self::seg_path(dir, i))
+                    .map(|m| m.len() == want)
+                    .unwrap_or(false)
+            })
+            && {
+                // No stale extra segment files from a longer previous plan.
+                std::fs::metadata(Self::seg_path(dir, segs.len())).is_err()
+            };
+        if reusable {
+            let metas = segs
+                .iter()
+                .enumerate()
+                .map(|(i, seg)| SegmentMeta {
+                    row_lo: seg.row_lo,
+                    row_hi: seg.row_hi,
+                    nnz: seg.nnz,
+                    plan_bytes: seg.bytes,
+                    file_bytes: segio::encoded_len(seg.row_hi - seg.row_lo, seg.nnz),
+                    path: Self::seg_path(dir, i),
+                })
+                .collect();
+            return Ok(Self::with_metas(dir.to_path_buf(), metas, host_cache_bytes));
+        }
+        Self::clear_store_files(dir)?;
+        Self::spill(a, segs, dir, host_cache_bytes)
+    }
+
+    /// Remove a previous spill's files (`fingerprint` + `seg-*.bin`) from
+    /// `dir` — and *only* those. A non-empty directory with no
+    /// `fingerprint` marker was never a segment store, and blindly wiping
+    /// it could destroy user data (e.g. `--segment-dir ~/data`), so that
+    /// case is a refusal, not a cleanup.
+    fn clear_store_files(dir: &Path) -> Result<(), SegioError> {
+        let entries = match std::fs::read_dir(dir) {
+            Err(_) => return Ok(()), // nothing on disk yet
+            Ok(entries) => entries,
+        };
+        let names: Vec<std::ffi::OsString> =
+            entries.filter_map(|e| e.ok().map(|e| e.file_name())).collect();
+        let is_store_file = |n: &std::ffi::OsString| {
+            let n = n.to_string_lossy();
+            n == "fingerprint" || (n.starts_with("seg-") && n.ends_with(".bin"))
+        };
+        let has_marker = names.iter().any(|n| n.to_string_lossy() == "fingerprint");
+        if !names.is_empty() && !has_marker {
+            return Err(SegioError::Io(format!(
+                "refusing to respill into {}: directory is non-empty and has no \
+                 `fingerprint` marker, so it is not a segment store",
+                dir.display()
+            )));
+        }
+        for n in names.iter().filter(|n| is_store_file(n)) {
+            let p = dir.join(n);
+            std::fs::remove_file(&p)
+                .map_err(|e| SegioError::Io(format!("remove {}: {e}", p.display())))?;
+        }
+        Ok(())
+    }
+
+    fn with_metas(dir: PathBuf, segs: Vec<SegmentMeta>, host_cache_bytes: u64) -> SegmentStore {
+        SegmentStore {
+            dir,
+            segs,
+            cache: Mutex::new(HostCache {
+                capacity: host_cache_bytes,
+                ..HostCache::default()
+            }),
+        }
+    }
+
+    /// Number of segments in the store.
+    pub fn len(&self) -> usize {
+        self.segs.len()
+    }
+
+    /// Whether the store holds no segments.
+    pub fn is_empty(&self) -> bool {
+        self.segs.is_empty()
+    }
+
+    /// Directory the segments live in.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Metadata of segment `i`.
+    pub fn meta(&self, i: usize) -> &SegmentMeta {
+        &self.segs[i]
+    }
+
+    /// Serving counters since the store was created.
+    pub fn stats(&self) -> CacheStats {
+        self.cache.lock().unwrap().stats
+    }
+
+    /// Verify the store's manifest matches a freshly planned segment list
+    /// (same count, same row ranges, same nnz) — the guard that keeps a
+    /// disk-backed pass byte-identical to the in-memory plan it claims to
+    /// serve.
+    pub fn check_plan(&self, segs: &[RobwSegment]) -> Result<(), String> {
+        if segs.len() != self.segs.len() {
+            return Err(format!(
+                "store holds {} segments, plan has {}",
+                self.segs.len(),
+                segs.len()
+            ));
+        }
+        for (i, (m, s)) in self.segs.iter().zip(segs.iter()).enumerate() {
+            if (m.row_lo, m.row_hi, m.nnz) != (s.row_lo, s.row_hi, s.nnz) {
+                return Err(format!(
+                    "segment {i}: store has rows [{}, {}) nnz {}, plan wants [{}, {}) nnz {}",
+                    m.row_lo, m.row_hi, m.nnz, s.row_lo, s.row_hi, s.nnz
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Read segment `i`: from the host tier when resident, else from disk
+    /// (checksum-verified), updating the LRU state either way. The
+    /// returned [`ReadOrigin`] reports the *measured* disk bytes — the
+    /// number the staging layer charges instead of a simulated sleep.
+    pub fn read(&self, i: usize) -> Result<(Csr, ReadOrigin), SegioError> {
+        let meta = &self.segs[i];
+        {
+            let mut cache = self.cache.lock().unwrap();
+            if let Some(m) = cache.entries.get(&i) {
+                let m = m.clone();
+                cache.touch(i);
+                cache.stats.hits += 1;
+                return Ok((m, ReadOrigin { disk_bytes: 0, cache_hit: true }));
+            }
+        }
+        // Disk read outside the lock: the producer is the only reader in
+        // the pipeline, but `&self` reads must never serialize on I/O.
+        let (m, bytes) = segio::read_segment(&meta.path)?;
+        if m.nrows != meta.row_hi - meta.row_lo || m.nnz() != meta.nnz {
+            return Err(SegioError::InvalidCsr(format!(
+                "segment {i} decoded to {} rows / {} nnz, manifest says {} rows / {} nnz",
+                m.nrows,
+                m.nnz(),
+                meta.row_hi - meta.row_lo,
+                meta.nnz
+            )));
+        }
+        let mut cache = self.cache.lock().unwrap();
+        cache.stats.misses += 1;
+        cache.stats.disk_bytes += bytes;
+        // A concurrent reader may have inserted `i` while we were on
+        // disk (the lock is dropped around the read); inserting again
+        // would double-count `used` and duplicate the LRU entry.
+        if !cache.entries.contains_key(&i) {
+            cache.insert(i, m.clone());
+        }
+        cache.stats.resident_bytes = cache.used;
+        Ok((m, ReadOrigin { disk_bytes: bytes, cache_hit: false }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::robw::robw_partition;
+    use crate::sparse::Coo;
+    use crate::testing::TempDir;
+    use crate::util::rng::Pcg;
+
+    fn random_csr(rng: &mut Pcg, nrows: usize, ncols: usize, density: f64) -> Csr {
+        let mut coo = Coo::new(nrows, ncols);
+        for r in 0..nrows {
+            for c in 0..ncols {
+                if rng.chance(density) {
+                    coo.push(r as u32, c as u32, rng.normal() as f32);
+                }
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn spilled_segments_reassemble_exactly() {
+        let mut rng = Pcg::seed(200);
+        let a = random_csr(&mut rng, 150, 40, 0.12);
+        let segs = robw_partition(&a, 700);
+        assert!(segs.len() > 2, "budget must force multiple segments");
+        let dir = TempDir::new("segstore-rt");
+        let store = SegmentStore::spill(&a, &segs, dir.path(), UNBOUNDED_CACHE).unwrap();
+        assert_eq!(store.len(), segs.len());
+        store.check_plan(&segs).unwrap();
+        let parts: Vec<Csr> = (0..store.len()).map(|i| store.read(i).unwrap().0).collect();
+        assert_eq!(Csr::vstack(&parts).unwrap(), a);
+    }
+
+    #[test]
+    fn cache_disabled_always_reads_disk() {
+        let mut rng = Pcg::seed(201);
+        let a = random_csr(&mut rng, 80, 30, 0.15);
+        let segs = robw_partition(&a, 600);
+        let dir = TempDir::new("segstore-nocache");
+        let store = SegmentStore::spill(&a, &segs, dir.path(), 0).unwrap();
+        for _ in 0..2 {
+            for i in 0..store.len() {
+                let (_, origin) = store.read(i).unwrap();
+                assert!(!origin.cache_hit);
+                assert!(origin.disk_bytes > 0);
+            }
+        }
+        let st = store.stats();
+        assert_eq!(st.hits, 0);
+        assert_eq!(st.misses, 2 * segs.len());
+        assert_eq!(st.resident_bytes, 0);
+    }
+
+    #[test]
+    fn unbounded_cache_hits_on_second_pass() {
+        let mut rng = Pcg::seed(202);
+        let a = random_csr(&mut rng, 80, 30, 0.15);
+        let segs = robw_partition(&a, 600);
+        let dir = TempDir::new("segstore-warm");
+        let store = SegmentStore::spill(&a, &segs, dir.path(), UNBOUNDED_CACHE).unwrap();
+        let first: Vec<Csr> = (0..store.len()).map(|i| store.read(i).unwrap().0).collect();
+        let disk_after_first = store.stats().disk_bytes;
+        for (i, want) in first.iter().enumerate() {
+            let (m, origin) = store.read(i).unwrap();
+            assert_eq!(&m, want);
+            assert!(origin.cache_hit, "segment {i} must be resident");
+            assert_eq!(origin.disk_bytes, 0);
+        }
+        let st = store.stats();
+        assert_eq!(st.misses, segs.len());
+        assert_eq!(st.hits, segs.len());
+        assert_eq!(st.disk_bytes, disk_after_first, "warm pass reads no disk");
+    }
+
+    #[test]
+    fn lru_eviction_is_deterministic_and_bounded() {
+        let mut rng = Pcg::seed(203);
+        let a = random_csr(&mut rng, 120, 30, 0.2);
+        let segs = robw_partition(&a, 512);
+        assert!(segs.len() >= 4);
+        // Budget for roughly two decoded segments.
+        let seg_cost: u64 =
+            segio::encoded_len(segs[0].row_hi - segs[0].row_lo, segs[0].nnz) - 64;
+        let cap = seg_cost * 2 + 16;
+        let dir = TempDir::new("segstore-lru");
+        let run = |dir: &std::path::Path| {
+            let store = SegmentStore::spill(&a, &segs, dir, cap).unwrap();
+            let mut origins = Vec::new();
+            // Sequential sweep twice, then a re-read of the coldest index.
+            for _ in 0..2 {
+                for i in 0..store.len() {
+                    origins.push(store.read(i).unwrap().1);
+                }
+            }
+            origins.push(store.read(0).unwrap().1);
+            (origins, store.stats())
+        };
+        let d1 = TempDir::new("segstore-lru-b");
+        let (o1, s1) = run(dir.path());
+        let (o2, s2) = run(d1.path());
+        assert_eq!(o1, o2, "cache behaviour must not depend on the directory/run");
+        assert_eq!(s1, s2);
+        assert!(s1.evictions > 0, "a bounded cache under a sweep must evict");
+        assert!(s1.resident_bytes <= cap);
+    }
+
+    #[test]
+    fn open_or_spill_reuses_valid_fixture_and_respills_stale_one() {
+        let mut rng = Pcg::seed(204);
+        let a = random_csr(&mut rng, 90, 25, 0.15);
+        let segs = robw_partition(&a, 700);
+        let dir = TempDir::new("segstore-fixture");
+        let s1 = SegmentStore::spill(&a, &segs, dir.path(), 0).unwrap();
+        let mtime = std::fs::metadata(&s1.meta(0).path).unwrap().modified().unwrap();
+        let s2 = SegmentStore::open_or_spill(&a, &segs, dir.path(), 0).unwrap();
+        assert_eq!(
+            std::fs::metadata(&s2.meta(0).path).unwrap().modified().unwrap(),
+            mtime,
+            "byte-valid fixture must be reused, not rewritten"
+        );
+        let whole: Vec<Csr> = (0..s2.len()).map(|i| s2.read(i).unwrap().0).collect();
+        assert_eq!(Csr::vstack(&whole).unwrap(), a);
+        // Truncate one file: the size check must force a respill.
+        let victim = s2.meta(1).path.clone();
+        let bytes = std::fs::read(&victim).unwrap();
+        std::fs::write(&victim, &bytes[..bytes.len() - 3]).unwrap();
+        let s3 = SegmentStore::open_or_spill(&a, &segs, dir.path(), 0).unwrap();
+        let whole: Vec<Csr> = (0..s3.len()).map(|i| s3.read(i).unwrap().0).collect();
+        assert_eq!(Csr::vstack(&whole).unwrap(), a, "respilled store serves good bytes");
+        // A plan with a different segment count is never silently reused.
+        let coarse = robw_partition(&a, u64::MAX / 8);
+        assert_ne!(coarse.len(), segs.len());
+        let s4 = SegmentStore::open_or_spill(&a, &coarse, dir.path(), 0).unwrap();
+        assert_eq!(s4.len(), coarse.len());
+        assert_eq!(s4.read(0).unwrap().0, a, "single coarse segment is the whole matrix");
+    }
+
+    #[test]
+    fn open_or_spill_rejects_same_shaped_fixture_of_a_different_matrix() {
+        // Same sparsity pattern, one value changed: every planned segment
+        // has identical (rows, nnz) and therefore identical file *sizes*.
+        // Only the fingerprint can tell the fixtures apart — without it,
+        // reuse would silently serve the old matrix's bytes.
+        let mut rng = Pcg::seed(206);
+        let a = random_csr(&mut rng, 70, 20, 0.2);
+        let mut b = a.clone();
+        b.vals[0] += 1.0;
+        let segs = robw_partition(&a, 500);
+        let dir = TempDir::new("segstore-fp");
+        SegmentStore::spill(&a, &segs, dir.path(), 0).unwrap();
+        let sb = SegmentStore::open_or_spill(&b, &segs, dir.path(), 0).unwrap();
+        let parts: Vec<Csr> = (0..sb.len()).map(|i| sb.read(i).unwrap().0).collect();
+        assert_eq!(Csr::vstack(&parts).unwrap(), b, "store must serve b, not the stale a");
+    }
+
+    #[test]
+    fn interrupted_spill_is_self_healing() {
+        let mut rng = Pcg::seed(208);
+        let a = random_csr(&mut rng, 80, 20, 0.2);
+        let segs = robw_partition(&a, 600);
+        let dir = TempDir::new("segstore-interrupted");
+        // Simulate a spill killed mid-way: marker on disk, one garbage
+        // segment file, nothing else. The next open must respill cleanly.
+        std::fs::write(dir.path().join("fingerprint"), 0u64.to_le_bytes()).unwrap();
+        std::fs::write(SegmentStore::seg_path(dir.path(), 0), b"partial").unwrap();
+        let store = SegmentStore::open_or_spill(&a, &segs, dir.path(), 0).unwrap();
+        let parts: Vec<Csr> = (0..store.len()).map(|i| store.read(i).unwrap().0).collect();
+        assert_eq!(Csr::vstack(&parts).unwrap(), a);
+    }
+
+    #[test]
+    fn open_or_spill_never_wipes_a_directory_that_is_not_a_store() {
+        let mut rng = Pcg::seed(207);
+        let a = random_csr(&mut rng, 60, 20, 0.2);
+        let segs = robw_partition(&a, 600);
+        // Non-empty directory without a fingerprint marker: refuse.
+        let dir = TempDir::new("segstore-guard");
+        let precious = dir.path().join("user-data.txt");
+        std::fs::write(&precious, b"do not delete").unwrap();
+        let err = SegmentStore::open_or_spill(&a, &segs, dir.path(), 0).unwrap_err();
+        assert!(err.to_string().contains("refusing to respill"), "{err}");
+        assert!(precious.exists(), "foreign files must survive the refusal");
+        // A real (stale) store dir with a foreign file alongside: respill
+        // touches only store files and leaves the foreign one alone.
+        let dir2 = TempDir::new("segstore-guard2");
+        let other = robw_partition(&a, 300);
+        SegmentStore::spill(&a, &other, dir2.path(), 0).unwrap();
+        let precious2 = dir2.path().join("notes.md");
+        std::fs::write(&precious2, b"keep me").unwrap();
+        let store = SegmentStore::open_or_spill(&a, &segs, dir2.path(), 0).unwrap();
+        assert_eq!(store.len(), segs.len());
+        assert!(precious2.exists(), "respill must only remove seg-*.bin + fingerprint");
+        // No leftovers from the longer stale plan.
+        assert!(!SegmentStore::seg_path(dir2.path(), segs.len()).exists());
+    }
+
+    #[test]
+    fn check_plan_rejects_mismatches() {
+        let mut rng = Pcg::seed(205);
+        let a = random_csr(&mut rng, 60, 20, 0.2);
+        let segs = robw_partition(&a, 600);
+        let dir = TempDir::new("segstore-plan");
+        let store = SegmentStore::spill(&a, &segs, dir.path(), 0).unwrap();
+        store.check_plan(&segs).unwrap();
+        let other = robw_partition(&a, 300);
+        assert!(store.check_plan(&other).is_err());
+    }
+}

@@ -15,6 +15,7 @@ pub mod csc;
 pub mod csr;
 pub mod norm;
 pub mod reorder;
+pub mod segio;
 pub mod spgemm;
 pub mod spmm;
 

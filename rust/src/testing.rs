@@ -5,6 +5,37 @@
 
 use crate::util::rng::Pcg;
 
+/// RAII scratch directory for tests and bench fixtures (the offline crate
+/// cache has no `tempfile`). Unique per (process, instance); removed on
+/// drop, so aborted streams cannot leak segment files between test runs.
+pub struct TempDir {
+    path: std::path::PathBuf,
+}
+
+impl TempDir {
+    /// Create `std::env::temp_dir()/aires-<prefix>-<pid>-<n>`.
+    pub fn new(prefix: &str) -> TempDir {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static NEXT: AtomicU64 = AtomicU64::new(0);
+        let n = NEXT.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir()
+            .join(format!("aires-{prefix}-{}-{n}", std::process::id()));
+        std::fs::create_dir_all(&path).expect("create temp dir");
+        TempDir { path }
+    }
+
+    /// The directory's path.
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
 /// Number of cases per property (override with `AIRES_PROP_CASES`).
 pub fn default_cases() -> u64 {
     std::env::var("AIRES_PROP_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(64)

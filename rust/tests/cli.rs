@@ -1,0 +1,106 @@
+//! CLI integration: flag handling exercised against the real binary.
+//!
+//! Regression coverage for the PR 3 bugfix: malformed flag values used to
+//! `expect()`-panic with a backtrace, and `--prefetch-depth 0` was
+//! silently floored to 1. Malformed input must now exit with the
+//! conventional usage code (2) and a message naming the flag; depth 0
+//! must warn explicitly.
+
+use aires::testing::TempDir;
+use std::process::Command;
+
+fn aires_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_aires"))
+}
+
+fn run(args: &[&str]) -> (Option<i32>, String, String) {
+    let out = aires_bin().args(args).output().expect("spawn aires binary");
+    (
+        out.status.code(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn malformed_prefetch_depth_is_a_usage_error_not_a_panic() {
+    let (code, _, err) = run(&["catalog", "--prefetch-depth", "abc"]);
+    assert_eq!(code, Some(2), "usage errors exit 2; stderr: {err}");
+    assert!(err.contains("--prefetch-depth"), "must name the flag: {err}");
+    assert!(err.contains("abc"), "must echo the offending value: {err}");
+    assert!(!err.contains("panicked"), "must not panic: {err}");
+}
+
+#[test]
+fn malformed_threads_is_a_usage_error() {
+    let (code, _, err) = run(&["catalog", "--threads", "many"]);
+    assert_eq!(code, Some(2), "stderr: {err}");
+    assert!(err.contains("--threads"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
+}
+
+#[test]
+fn malformed_host_cache_bytes_is_a_usage_error() {
+    let (code, _, err) = run(&["catalog", "--host-cache-bytes", "-5"]);
+    assert_eq!(code, Some(2), "stderr: {err}");
+    assert!(err.contains("--host-cache-bytes"), "{err}");
+}
+
+#[test]
+fn flag_without_value_is_a_usage_error() {
+    // Previously a trailing flag was silently ignored.
+    let (code, _, err) = run(&["catalog", "--prefetch-depth"]);
+    assert_eq!(code, Some(2), "stderr: {err}");
+    assert!(err.contains("requires a value"), "{err}");
+}
+
+#[test]
+fn malformed_subcommand_numeric_flags_are_usage_errors() {
+    // The rework covers pre-existing per-subcommand flags too (parsed
+    // before any executor/artifact setup, so this needs no PJRT).
+    let (code, _, err) = run(&["spgemm", "--nodes", "60O"]);
+    assert_eq!(code, Some(2), "stderr: {err}");
+    assert!(err.contains("--nodes"), "{err}");
+    let (code, _, err) = run(&["train", "--lr", "fast"]);
+    assert_eq!(code, Some(2), "stderr: {err}");
+    assert!(err.contains("--lr"), "{err}");
+}
+
+#[test]
+fn prefetch_depth_zero_warns_and_still_runs() {
+    let (code, out, err) = run(&["catalog", "--prefetch-depth", "0"]);
+    assert_eq!(code, Some(0), "depth 0 is clamped, not fatal; stderr: {err}");
+    assert!(!out.is_empty(), "subcommand still produced its output");
+    assert!(err.contains("warning"), "clamp must be announced: {err}");
+    assert!(err.contains("--prefetch-depth 0"), "{err}");
+}
+
+#[test]
+fn missing_config_file_is_a_usage_error_not_a_panic() {
+    let (code, _, err) = run(&["catalog", "--config", "/nonexistent/aires-config.json"]);
+    assert_eq!(code, Some(2), "stderr: {err}");
+    assert!(!err.contains("panicked"), "{err}");
+    assert!(err.contains("--config"), "{err}");
+}
+
+#[test]
+fn segcheck_streams_from_disk_and_verifies_byte_identity() {
+    let dir = TempDir::new("cli-segcheck");
+    let (code, out, err) = run(&[
+        "segcheck",
+        "--nodes",
+        "200",
+        "--budget",
+        "2048",
+        "--segment-dir",
+        dir.path().to_str().unwrap(),
+        "--host-cache-bytes",
+        "65536",
+    ]);
+    assert_eq!(code, Some(0), "stderr: {err}");
+    assert!(out.contains("byte-identical"), "stdout: {out}");
+    assert!(
+        dir.path().join("seg-00000.bin").exists(),
+        "--segment-dir must hold the spilled segment files"
+    );
+}

@@ -24,6 +24,9 @@ use aires::gcn::{OocGcnLayer, StagingConfig};
 use aires::memsim::GpuMem;
 use aires::partition::robw::{robw_partition, robw_partition_par};
 use aires::runtime::pool::Pool;
+use aires::runtime::segstore::{SegmentStore, UNBOUNDED_CACHE};
+use aires::testing::TempDir;
+use std::sync::Arc;
 use aires::runtime::tile_exec::CpuTileSpmm;
 use aires::sparse::block::{pack_csr_batches, pack_csr_batches_par, SpmmBatch};
 use aires::sparse::norm::normalize_adjacency;
@@ -386,6 +389,223 @@ fn diff_forward_staged_artifacts_match_serial_forward() {
             assert_eq!(got, want, "artifact path diverged at depth {depth}, {t} threads");
         }
     }
+}
+
+// --------------------------------------------- disk-backed segment staging
+
+/// Host-cache byte bounds the disk sweeps cover: no cache (every read
+/// hits disk), a tiny bound (~1.5 segments: constant eviction), and
+/// unbounded (everything resident after first touch).
+fn cache_points(segs: &[aires::partition::robw::RobwSegment]) -> [u64; 3] {
+    let max_seg = segs.iter().map(|s| s.bytes).max().unwrap_or(0);
+    [0, max_seg + max_seg / 2 + 1, UNBOUNDED_CACHE]
+}
+
+#[test]
+fn diff_forward_cpu_disk_backed_matches_memory_oracle() {
+    // Acceptance sweep: disk-backed forward_cpu must be byte-identical to
+    // the in-memory serial oracle at every (depth, threads, cache-size)
+    // point, with a balanced ledger, and with *identical measured I/O*
+    // across depths and thread counts (the producer reads strictly in
+    // index order, so cache behaviour may not depend on pipelining).
+    check("forward_cpu(disk) == forward_cpu(memory)", 110, |rng| {
+        let a_hat = normalize_adjacency(&gen::adjacency(rng, 48, 0.2));
+        let f = rng.range(1, 10);
+        let x = gen::dense(rng, a_hat.ncols, f);
+        let layer = random_layer(rng, f);
+
+        let mut mem = GpuMem::new(1 << 30);
+        let (want, base) = layer
+            .forward_cpu(&a_hat, &x, &mut mem, &Pool::serial(), &StagingConfig::serial())
+            .map_err(|e| e.to_string())?;
+
+        let segs = robw_partition(&a_hat, layer.seg_budget);
+        let dir = TempDir::new("diff-disk");
+        // Spill once; every configuration below re-opens the same files
+        // with a fresh cache, so cache stats are comparable across points.
+        SegmentStore::spill(&a_hat, &segs, dir.path(), 0).map_err(|e| e.to_string())?;
+
+        for cache in cache_points(&segs) {
+            let mut expect_io = None;
+            for &depth in &PREFETCH_DEPTHS {
+                for &t in &[1usize, 8] {
+                    let store = SegmentStore::open_or_spill(&a_hat, &segs, dir.path(), cache)
+                        .map_err(|e| e.to_string())?;
+                    let mut mem = GpuMem::new(1 << 30);
+                    let (got, rep) = layer
+                        .forward_cpu(
+                            &a_hat,
+                            &x,
+                            &mut mem,
+                            &Pool::new(t),
+                            &StagingConfig::disk(Arc::new(store), depth),
+                        )
+                        .map_err(|e| format!("cache={cache} depth={depth} threads={t}: {e}"))?;
+                    if got != want {
+                        return Err(format!(
+                            "cache={cache} depth={depth} threads={t}: output diverged"
+                        ));
+                    }
+                    if rep.segments != base.segments || rep.h2d_bytes != base.h2d_bytes {
+                        return Err(format!(
+                            "cache={cache} depth={depth} threads={t}: plan/traffic diverged"
+                        ));
+                    }
+                    if mem.used != 0 {
+                        return Err(format!(
+                            "cache={cache} depth={depth} threads={t}: ledger unbalanced"
+                        ));
+                    }
+                    let io = (rep.disk_bytes, rep.cache_hits, rep.cache_misses);
+                    match expect_io {
+                        None => expect_io = Some(io),
+                        Some(w) if w != io => {
+                            return Err(format!(
+                                "cache={cache} depth={depth} threads={t}: measured I/O \
+                                 {io:?} != {w:?} (must not depend on pipelining)"
+                            ));
+                        }
+                        _ => {}
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn diff_forward_cpu_disk_backed_graph_families() {
+    let mut rng = Pcg::seed(13);
+    for (name, g) in graph_cases() {
+        let a_hat = normalize_adjacency(&g);
+        let x = gen::dense(&mut rng, a_hat.ncols, 8);
+        let layer = random_layer(&mut rng, 8);
+        let want = dense_affine(&spmm(&a_hat, &x), &layer.w, &layer.b, layer.relu);
+        let segs = robw_partition(&a_hat, layer.seg_budget);
+        let dir = TempDir::new("diff-disk-family");
+        SegmentStore::spill(&a_hat, &segs, dir.path(), 0).unwrap();
+        for cache in cache_points(&segs) {
+            for &depth in &PREFETCH_DEPTHS {
+                for &t in &[1usize, 8] {
+                    let store =
+                        SegmentStore::open_or_spill(&a_hat, &segs, dir.path(), cache).unwrap();
+                    let mut mem = GpuMem::new(1 << 30);
+                    let (got, _) = layer
+                        .forward_cpu(
+                            &a_hat,
+                            &x,
+                            &mut mem,
+                            &Pool::new(t),
+                            &StagingConfig::disk(Arc::new(store), depth),
+                        )
+                        .unwrap();
+                    assert_eq!(
+                        got, want,
+                        "{name}: diverged at cache {cache}, depth {depth}, {t} threads"
+                    );
+                    assert_eq!(mem.used, 0, "{name}: ledger unbalanced");
+                }
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------- fault injection
+
+/// I/O faults injected into one segment file mid-stream.
+#[derive(Debug, Clone, Copy)]
+enum Fault {
+    /// Cut the file in half (decoder sees a short payload).
+    Truncate,
+    /// Flip one payload byte (checksum must catch it).
+    Corrupt,
+    /// Delete the file entirely.
+    Remove,
+}
+
+#[test]
+fn diff_injected_io_faults_fail_cleanly_at_every_depth() {
+    // Extends the PR 2 abort-cleanup coverage to real I/O: a truncated,
+    // corrupted, or missing segment file mid-stream must surface a clean
+    // typed error from the streamed forward pass, leave the GpuMem ledger
+    // balanced, and join the producer (this test returning at all proves
+    // no deadlock; the ledger assert proves no leaked staging).
+    let mut rng = Pcg::seed(14);
+    let a_hat = normalize_adjacency(&aires::graphgen::kmer::generate(&mut rng, 400, 3.0));
+    let x = gen::dense(&mut rng, a_hat.ncols, 8);
+    let layer = OocGcnLayer {
+        w: gen::dense(&mut rng, 8, 8),
+        b: vec![0.1; 8],
+        relu: true,
+        seg_budget: 2048,
+    };
+    let segs = robw_partition(&a_hat, layer.seg_budget);
+    assert!(segs.len() >= 4, "need a real stream to fault mid-way");
+    let victim = segs.len() / 2;
+
+    for fault in [Fault::Truncate, Fault::Corrupt, Fault::Remove] {
+        for &depth in &PREFETCH_DEPTHS {
+            for &t in &[1usize, 8] {
+                let dir = TempDir::new("diff-fault");
+                let store = SegmentStore::spill(&a_hat, &segs, dir.path(), 0).unwrap();
+                let path = store.meta(victim).path.clone();
+                match fault {
+                    Fault::Truncate => {
+                        let bytes = std::fs::read(&path).unwrap();
+                        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+                    }
+                    Fault::Corrupt => {
+                        let mut bytes = std::fs::read(&path).unwrap();
+                        let last = bytes.len() - 1;
+                        bytes[last] ^= 0xff;
+                        std::fs::write(&path, &bytes).unwrap();
+                    }
+                    Fault::Remove => std::fs::remove_file(&path).unwrap(),
+                }
+                let mut mem = GpuMem::new(1 << 30);
+                let err = layer
+                    .forward_cpu(
+                        &a_hat,
+                        &x,
+                        &mut mem,
+                        &Pool::new(t),
+                        &StagingConfig::disk(Arc::new(store), depth),
+                    )
+                    .unwrap_err();
+                let msg = err.to_string();
+                assert!(
+                    msg.contains(&format!("staging segment {victim} from disk")),
+                    "{fault:?} depth={depth} threads={t}: error must name the segment: {msg}"
+                );
+                let detail = match fault {
+                    Fault::Truncate => "truncated",
+                    Fault::Corrupt => "checksum mismatch",
+                    Fault::Remove => "segment I/O",
+                };
+                assert!(
+                    msg.contains(detail),
+                    "{fault:?} depth={depth} threads={t}: expected {detail:?} in: {msg}"
+                );
+                assert_eq!(
+                    mem.used, 0,
+                    "{fault:?} depth={depth} threads={t}: ledger must balance after the fault"
+                );
+            }
+        }
+    }
+
+    // Control: the same store contents without a fault stream cleanly —
+    // the faults above, not the harness, caused the failures.
+    let dir = TempDir::new("diff-fault-control");
+    let store = SegmentStore::spill(&a_hat, &segs, dir.path(), 0).unwrap();
+    let mut mem = GpuMem::new(1 << 30);
+    let (got, _) = layer
+        .forward_cpu(&a_hat, &x, &mut mem, &Pool::new(2), &StagingConfig::disk(Arc::new(store), 2))
+        .unwrap();
+    let want = dense_affine(&spmm(&a_hat, &x), &layer.w, &layer.b, layer.relu);
+    assert_eq!(got, want);
+    assert_eq!(mem.used, 0);
 }
 
 // ------------------------------------------------------------- edge shapes

@@ -1,21 +1,49 @@
 //! Micro-benchmarks of the hot paths (§Perf in EXPERIMENTS.md):
 //! RoBW partitioning, BSR extraction + batch packing, SpGEMM oracle,
-//! the simulator event loop, and the PJRT artifact call path.
+//! the simulator event loop, the PJRT artifact call path, and the
+//! streaming pipeline (prefetch overlap, disk staging, buffer recycling).
 //!
 //! Run: `cargo bench --bench micro_hotpath`
+//!
+//! Fast mode (`AIRES_BENCH_FAST=1`) runs only the streaming section on a
+//! smaller graph — the CI bench-smoke configuration. The streaming
+//! section **self-checks**: every benched configuration's output is
+//! asserted byte-identical to the in-memory serial oracle (and recycled
+//! against fresh), so a perf run can never silently diverge; it then
+//! emits `BENCH_streaming.json` (ns/segment + allocations/segment for
+//! the recycled vs fresh disk paths — the repo's perf trajectory seed)
+//! to `AIRES_BENCH_JSON` or ./BENCH_streaming.json.
 
-use aires::benchlib::{bench, report_speedup, report_throughput};
+use aires::benchlib::{allocation_count, bench, report_speedup, report_throughput};
 use aires::gcn::{OocGcnLayer, StagingConfig};
 use aires::memsim::{CostModel, GpuMem, Op, Sim};
 use aires::partition::robw::{robw_partition, robw_partition_par};
 use aires::runtime::pool::Pool;
 use aires::runtime::prefetch::Prefetch;
+use aires::runtime::recycle::BufferPool;
 use aires::sparse::block::{pack_artifact_batches, pack_csr_batches_par, Bsr};
 use aires::sparse::spgemm::{spgemm_gustavson, spgemm_gustavson_par};
 use aires::sparse::spmm::{spmm, spmm_par, Dense};
+use aires::util::json::Json;
 use aires::util::rng::Pcg;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Count heap allocations across the whole bench so the streaming section
+/// can report allocations/segment for the recycled vs fresh paths.
+#[global_allocator]
+static COUNTING: aires::benchlib::CountingAlloc = aires::benchlib::CountingAlloc;
 
 fn main() {
+    let fast = std::env::var("AIRES_BENCH_FAST").map(|v| v != "0").unwrap_or(false);
+    if !fast {
+        kernel_benches();
+    }
+    streaming_benches(fast);
+}
+
+/// The original kernel/bridge/simulator benches (skipped in fast mode).
+fn kernel_benches() {
     let cm = CostModel::default();
     let mut rng = Pcg::seed(77);
 
@@ -56,7 +84,7 @@ fn main() {
         flops as f64 / spgemm_serial.mean_s / 1e6
     );
 
-    // --- L3: SpMM (aggregation oracle) ----------------------------------
+    // --- L3: SpMM (aggregation oracle, lane-blocked microkernel) --------
     let h = Dense::from_vec(a.ncols, 64, (0..a.ncols * 64).map(|_| 0.5f32).collect());
     let spmm_serial = bench("spmm(rmat-12 x 64)", 1, 5, || {
         std::hint::black_box(spmm(&a, &h));
@@ -82,104 +110,6 @@ fn main() {
             std::hint::black_box(spmm_par(&a, &h, &pool));
         });
         report_speedup(&spmm_serial, &rp);
-    }
-
-    // --- runtime::prefetch: staged segment I/O overlapped with compute --
-    // Phase II executed: the producer stages RoBW segment i+1 (pack + the
-    // segment's simulated H2D latency charged through memsim::channel as
-    // real staging time) while the calling thread computes segment i.
-    // Depth 1 serializes staging and compute; depth 2 (double buffering)
-    // hides the smaller of the two. The cost model below makes the pass
-    // deliberately I/O-bound-ish (a saturated link) so the overlap is
-    // visible; outputs are byte-identical at every depth.
-    {
-        let mut rngp = Pcg::seed(80);
-        let ga = aires::sparse::norm::normalize_adjacency(
-            &aires::graphgen::kmer::generate(&mut rngp, 60_000, 3.2),
-        );
-        let x = Dense::from_vec(ga.ncols, 32, vec![0.5f32; ga.ncols * 32]);
-        let layer = OocGcnLayer {
-            w: Dense::from_vec(32, 32, vec![0.1f32; 32 * 32]),
-            b: vec![0.0; 32],
-            relu: true,
-            seg_budget: 128 << 10,
-        };
-        let mut io = CostModel::default();
-        io.pcie_h2d_gbps = 0.16; // ~0.8 ms per 128 KiB segment staged
-        let pool = aires::benchlib::pool_from_env();
-        let run = |depth: usize| {
-            let staging = StagingConfig {
-                prefetch: Prefetch::new(depth),
-                io_cost: Some(io.clone()),
-                ..StagingConfig::default()
-            };
-            let mut mem = GpuMem::new(1 << 30);
-            layer.forward_cpu(&ga, &x, &mut mem, &pool, &staging).expect("forward_cpu").0
-        };
-        let segments = robw_partition(&ga, layer.seg_budget).len();
-        println!("prefetch overlap on kmer-60k ({segments} segments, {}t pool):", pool.threads());
-        let serial = bench("forward_cpu staged I/O, depth 1 (serial)", 1, 5, || {
-            std::hint::black_box(run(1));
-        });
-        let piped = bench("forward_cpu staged I/O, depth 2 (double-buffered)", 1, 5, || {
-            std::hint::black_box(run(2));
-        });
-        report_speedup(&serial, &piped);
-        assert_eq!(run(2), run(1), "prefetch must not change the output");
-
-        // --- segstore: disk-backed vs in-memory staging at depths {1,2}.
-        // Segments spill once to a fixture directory (AIRES_SEG_FIXTURE_DIR
-        // lets CI cache it between steps/runs — open_or_spill validates
-        // file sizes and every read is checksum-verified, so a stale cache
-        // respills instead of serving wrong bytes) and the forward pass
-        // streams from the files through a disabled host cache, i.e. every
-        // staged segment is a real read.
-        let segs = robw_partition(&ga, layer.seg_budget);
-        // _scratch keeps the RAII temp dir alive (and removed on every
-        // exit path, panics included) when no fixture dir is configured.
-        let (fix_dir, _scratch) = match std::env::var("AIRES_SEG_FIXTURE_DIR") {
-            Ok(d) => (std::path::PathBuf::from(d).join("kmer-60k"), None),
-            Err(_) => {
-                let t = aires::testing::TempDir::new("bench-seg");
-                (t.path().join("kmer-60k"), Some(t))
-            }
-        };
-        let store = std::sync::Arc::new(
-            aires::runtime::SegmentStore::open_or_spill(&ga, &segs, &fix_dir, 0)
-                .expect("spill segment fixture"),
-        );
-        let spilled: u64 = (0..store.len()).map(|i| store.meta(i).file_bytes).sum();
-        println!(
-            "disk-backed staging on kmer-60k ({} segments, {} on disk):",
-            store.len(),
-            aires::util::human_bytes(spilled)
-        );
-        let run_mem = |depth: usize| {
-            let mut mem = GpuMem::new(1 << 30);
-            layer
-                .forward_cpu(&ga, &x, &mut mem, &pool, &StagingConfig::depth(depth))
-                .expect("forward_cpu")
-                .0
-        };
-        let run_disk = |depth: usize| {
-            let staging = StagingConfig::disk(store.clone(), depth);
-            let mut mem = GpuMem::new(1 << 30);
-            layer.forward_cpu(&ga, &x, &mut mem, &pool, &staging).expect("forward_cpu disk").0
-        };
-        let mem_d1 = bench("forward_cpu in-memory staging, depth 1", 1, 5, || {
-            std::hint::black_box(run_mem(1));
-        });
-        bench("forward_cpu in-memory staging, depth 2", 1, 5, || {
-            std::hint::black_box(run_mem(2));
-        });
-        for depth in [1usize, 2] {
-            let r = bench(&format!("forward_cpu disk-backed staging, depth {depth}"), 1, 5, || {
-                std::hint::black_box(run_disk(depth));
-            });
-            report_speedup(&mem_d1, &r);
-        }
-        assert_eq!(run_disk(1), run_disk(2), "disk staging depth must not change the output");
-        assert_eq!(run_disk(2), run_mem(1), "disk-backed output must equal the in-memory pass");
     }
 
     // --- Bridge: BSR extraction + artifact batch packing ----------------
@@ -269,4 +199,178 @@ fn main() {
         }
         Err(e) => println!("skipping PJRT benches: {e}"),
     }
+}
+
+/// runtime::prefetch + runtime::segstore + runtime::recycle: staged
+/// segment I/O overlapped with compute, disk-backed vs in-memory staging,
+/// and the recycled vs fresh disk paths. Self-checking: every benched
+/// configuration is asserted byte-identical to the in-memory serial
+/// oracle before any number is reported.
+fn streaming_benches(fast: bool) {
+    let nodes = if fast { 12_000 } else { 60_000 };
+    let seg_budget: u64 = if fast { 32 << 10 } else { 128 << 10 };
+    let iters = if fast { 3 } else { 5 };
+
+    let mut rngp = Pcg::seed(80);
+    let ga = aires::sparse::norm::normalize_adjacency(
+        &aires::graphgen::kmer::generate(&mut rngp, nodes, 3.2),
+    );
+    let x = Dense::from_vec(ga.ncols, 32, vec![0.5f32; ga.ncols * 32]);
+    let layer = OocGcnLayer {
+        w: Dense::from_vec(32, 32, vec![0.1f32; 32 * 32]),
+        b: vec![0.0; 32],
+        relu: true,
+        seg_budget,
+    };
+    let pool = aires::benchlib::pool_from_env();
+
+    // --- Phase II overlap: staged I/O (simulated H2D latency) hidden by
+    // double buffering. The cost model makes the pass deliberately
+    // I/O-bound-ish (a saturated link) so the overlap is visible.
+    let mut io = CostModel::default();
+    io.pcie_h2d_gbps = 0.16; // ~0.8 ms per 128 KiB segment staged
+    let run = |depth: usize| {
+        let staging = StagingConfig {
+            prefetch: Prefetch::new(depth),
+            io_cost: Some(io.clone()),
+            ..StagingConfig::default()
+        };
+        let mut mem = GpuMem::new(1 << 30);
+        layer.forward_cpu(&ga, &x, &mut mem, &pool, &staging).expect("forward_cpu").0
+    };
+    let segments = robw_partition(&ga, layer.seg_budget).len();
+    println!(
+        "prefetch overlap on kmer-{nodes} ({segments} segments, {}t pool):",
+        pool.threads()
+    );
+    let serial = bench("forward_cpu staged I/O, depth 1 (serial)", 1, iters, || {
+        std::hint::black_box(run(1));
+    });
+    let piped = bench("forward_cpu staged I/O, depth 2 (double-buffered)", 1, iters, || {
+        std::hint::black_box(run(2));
+    });
+    report_speedup(&serial, &piped);
+    assert_eq!(run(2), run(1), "prefetch must not change the output");
+
+    // --- segstore: disk-backed vs in-memory staging, fresh vs recycled.
+    // Segments spill once to a fixture directory (AIRES_SEG_FIXTURE_DIR
+    // lets CI cache it between steps/runs — open_or_spill validates file
+    // sizes and every read is checksum-verified, so a stale cache respills
+    // instead of serving wrong bytes) and the forward pass streams from
+    // the files through a disabled host cache, i.e. every staged segment
+    // is a real read.
+    let segs = robw_partition(&ga, layer.seg_budget);
+    // _scratch keeps the RAII temp dir alive (and removed on every exit
+    // path, panics included) when no fixture dir is configured.
+    let fixture = format!("kmer-{nodes}");
+    let (fix_dir, _scratch) = match std::env::var("AIRES_SEG_FIXTURE_DIR") {
+        Ok(d) => (std::path::PathBuf::from(d).join(&fixture), None),
+        Err(_) => {
+            let t = aires::testing::TempDir::new("bench-seg");
+            (t.path().join(&fixture), Some(t))
+        }
+    };
+    let store = Arc::new(
+        aires::runtime::SegmentStore::open_or_spill(&ga, &segs, &fix_dir, 0)
+            .expect("spill segment fixture"),
+    );
+    let spilled: u64 = (0..store.len()).map(|i| store.meta(i).file_bytes).sum();
+    println!(
+        "disk-backed staging on kmer-{nodes} ({} segments, {} on disk):",
+        store.len(),
+        aires::util::human_bytes(spilled)
+    );
+    let run_mem = |depth: usize| {
+        let mut mem = GpuMem::new(1 << 30);
+        layer
+            .forward_cpu(&ga, &x, &mut mem, &pool, &StagingConfig::depth(depth))
+            .expect("forward_cpu")
+            .0
+    };
+    // The recycle pool is shared across iterations: after the first pass
+    // its slabs are at the plan's high-water capacities, so the timed
+    // iterations measure the allocation-free steady state.
+    let recycle = Arc::new(BufferPool::new(64 << 20));
+    let run_disk = |depth: usize, recycled: bool| {
+        let mut staging = StagingConfig::disk(store.clone(), depth);
+        if recycled {
+            staging = staging.with_recycle(recycle.clone());
+        }
+        let mut mem = GpuMem::new(1 << 30);
+        layer.forward_cpu(&ga, &x, &mut mem, &pool, &staging).expect("forward_cpu disk").0
+    };
+
+    // Self-check before timing: every configuration that will be benched
+    // must equal the in-memory serial oracle, and the recycled path must
+    // equal the fresh one bit for bit.
+    let oracle = run_mem(1);
+    for depth in [1usize, 2] {
+        let fresh = run_disk(depth, false);
+        let recycled = run_disk(depth, true);
+        assert_eq!(fresh, oracle, "disk fresh depth {depth} diverged from the oracle");
+        assert_eq!(recycled, fresh, "recycled depth {depth} diverged from fresh");
+    }
+    assert_eq!(run_mem(2), oracle, "in-memory depth 2 diverged from the oracle");
+    println!("BENCH streaming self-check: all staging configurations byte-identical OK");
+
+    let mem_d1 = bench("forward_cpu in-memory staging, depth 1", 1, iters, || {
+        std::hint::black_box(run_mem(1));
+    });
+    bench("forward_cpu in-memory staging, depth 2", 1, iters, || {
+        std::hint::black_box(run_mem(2));
+    });
+    let mut results = BTreeMap::new();
+    for (label, recycled) in [("fresh", false), ("recycled", true)] {
+        for depth in [1usize, 2] {
+            // Warm outside the counted window (bench warmup = 0), so the
+            // allocation delta covers exactly the timed passes.
+            std::hint::black_box(run_disk(depth, recycled));
+            let allocs_before = allocation_count();
+            let r = bench(
+                &format!("forward_cpu disk {label} staging, depth {depth}"),
+                0,
+                iters,
+                || {
+                    std::hint::black_box(run_disk(depth, recycled));
+                },
+            );
+            let allocs = allocation_count() - allocs_before;
+            let allocs_per_segment = allocs as f64 / iters as f64 / store.len() as f64;
+            let ns_per_segment = r.mean_s / store.len() as f64 * 1e9;
+            println!(
+                "BENCH forward_cpu disk {label} depth {depth}: {:.0} ns/segment, \
+                 {allocs_per_segment:.1} allocs/segment",
+                ns_per_segment
+            );
+            report_speedup(&mem_d1, &r);
+            let mut entry = BTreeMap::new();
+            entry.insert("mean_s".to_string(), Json::Num(r.mean_s));
+            entry.insert("min_s".to_string(), Json::Num(r.min_s));
+            entry.insert("ns_per_segment".to_string(), Json::Num(ns_per_segment));
+            entry.insert("allocs_per_segment".to_string(), Json::Num(allocs_per_segment));
+            results.insert(format!("{label}_depth{depth}"), Json::Obj(entry));
+        }
+    }
+    let st = recycle.stats();
+    println!(
+        "BENCH recycle pool: {} hits / {} misses over the run ({} dropped by the cap)",
+        st.hits, st.misses, st.drops
+    );
+
+    // Seed/extend the perf trajectory: machine-readable streaming numbers.
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("micro_hotpath/streaming".to_string()));
+    root.insert("graph".to_string(), Json::Str(fixture));
+    root.insert("segments".to_string(), Json::Num(store.len() as f64));
+    root.insert("iters".to_string(), Json::Num(iters as f64));
+    root.insert("threads".to_string(), Json::Num(pool.threads() as f64));
+    root.insert("fast_mode".to_string(), Json::Num(if fast { 1.0 } else { 0.0 }));
+    root.insert("self_check".to_string(), Json::Str("ok".to_string()));
+    root.insert("recycle_pool_hits".to_string(), Json::Num(st.hits as f64));
+    root.insert("recycle_pool_misses".to_string(), Json::Num(st.misses as f64));
+    root.insert("results".to_string(), Json::Obj(results));
+    let out = std::env::var("AIRES_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_streaming.json".to_string());
+    std::fs::write(&out, format!("{}\n", Json::Obj(root))).expect("write bench json");
+    println!("BENCH wrote {out}");
 }

@@ -2,8 +2,55 @@
 //! crate cache). Used by every `rust/benches/*` target: warmup, N timed
 //! iterations, mean / stddev / min reporting, and a `BENCH` prefixed line
 //! per result so `cargo bench | grep BENCH` yields a machine-readable log.
+//!
+//! Also hosts [`CountingAlloc`], a global-allocator shim that counts heap
+//! allocations: the `micro_hotpath` bench and `rust/tests/alloc_free.rs`
+//! install it to measure (and assert) the allocation traffic of the
+//! recycled vs fresh staging paths.
 
 use crate::util::Stopwatch;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Heap allocations observed by [`CountingAlloc`] since process start
+/// (alloc + realloc calls; deallocations are not counted).
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Counting wrapper over the system allocator. Install it in a test or
+/// bench binary with
+/// `#[global_allocator] static A: aires::benchlib::CountingAlloc = aires::benchlib::CountingAlloc;`
+/// and read the running total via [`allocation_count`]. The counter is a
+/// single relaxed atomic — cheap enough to leave on for a whole bench run.
+pub struct CountingAlloc;
+
+// SAFETY: defers entirely to `System`; the only addition is a relaxed
+// counter increment, which allocates nothing and cannot unwind.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Total heap allocations counted so far. Returns 0 forever unless the
+/// binary installed [`CountingAlloc`] as its `#[global_allocator]`.
+pub fn allocation_count() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
 
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]

@@ -52,6 +52,13 @@ pub struct Config {
     /// hits disk); `None` = unbounded. Only meaningful with disk-backed
     /// staging. The CLI's `--host-cache-bytes` overrides this.
     pub host_cache_bytes: Option<u64>,
+    /// Retention cap of the staging buffer-recycle pool
+    /// (`runtime::recycle`): `0` disables recycling (every staged segment
+    /// allocates fresh scratch — the pre-recycling behaviour); `None` =
+    /// recycle with the default cap. Output is byte-identical either way;
+    /// only allocator traffic changes. The CLI's `--recycle-cap-bytes`
+    /// overrides this.
+    pub recycle_cap_bytes: Option<u64>,
 }
 
 impl Default for Config {
@@ -65,6 +72,7 @@ impl Default for Config {
             prefetch_depth: None,
             segment_dir: None,
             host_cache_bytes: None,
+            recycle_cap_bytes: None,
         }
     }
 }
@@ -168,6 +176,18 @@ impl Config {
                     }
                     cfg.host_cache_bytes = Some(n as u64);
                 }
+                "recycle_cap_bytes" => {
+                    let n = val
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("recycle_cap_bytes must be a number"))?;
+                    if n < 0.0 || n.fract() != 0.0 {
+                        bail!(
+                            "recycle_cap_bytes must be a non-negative integer \
+                             (0 = no buffer recycling)"
+                        );
+                    }
+                    cfg.recycle_cap_bytes = Some(n as u64);
+                }
                 "datasets" => {
                     let arr =
                         val.as_arr().ok_or_else(|| anyhow!("datasets must be an array"))?;
@@ -254,6 +274,9 @@ impl Config {
         }
         if let Some(b) = self.host_cache_bytes {
             root.insert("host_cache_bytes".to_string(), Json::Num(b as f64));
+        }
+        if let Some(b) = self.recycle_cap_bytes {
+            root.insert("recycle_cap_bytes".to_string(), Json::Num(b as f64));
         }
         root.insert(
             "datasets".to_string(),
@@ -362,6 +385,26 @@ mod tests {
             Config::from_json_str(r#"{"host_cache_bytes":0}"#).unwrap().host_cache_bytes,
             Some(0)
         );
+    }
+
+    #[test]
+    fn recycle_cap_key_roundtrips_and_validates() {
+        let cfg = Config::from_json_str(r#"{"recycle_cap_bytes":1048576}"#).unwrap();
+        assert_eq!(cfg.recycle_cap_bytes, Some(1 << 20));
+        let back = Config::from_json_str(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(back.recycle_cap_bytes, Some(1 << 20));
+        // Unset stays unset (the CLI then applies the default cap).
+        let unset = Config::from_json_str("{}").unwrap();
+        assert_eq!(unset.recycle_cap_bytes, None);
+        let unset_back = Config::from_json_str(&unset.to_json().to_string()).unwrap();
+        assert_eq!(unset_back.recycle_cap_bytes, None);
+        // 0 is valid: recycling disabled (the fresh-allocation oracle).
+        assert_eq!(
+            Config::from_json_str(r#"{"recycle_cap_bytes":0}"#).unwrap().recycle_cap_bytes,
+            Some(0)
+        );
+        assert!(Config::from_json_str(r#"{"recycle_cap_bytes":-1}"#).is_err());
+        assert!(Config::from_json_str(r#"{"recycle_cap_bytes":1.5}"#).is_err());
     }
 
     #[test]

@@ -19,13 +19,14 @@
 
 use crate::gcn::model::dense_affine;
 use crate::memsim::{CostModel, GpuMem, Op, StagingMeter};
-use crate::partition::robw::{materialize, robw_partition_par, RobwSegment};
+use crate::partition::robw::{materialize_into, robw_partition_par, RobwSegment};
 use crate::runtime::pool::Pool;
 use crate::runtime::prefetch::Prefetch;
-use crate::runtime::segstore::SegmentStore;
+use crate::runtime::recycle::BufferPool;
+use crate::runtime::segstore::{SegmentRead, SegmentStore};
 use crate::runtime::tile_exec::{BsrSpmmExec, CombineExec};
 use crate::runtime::Executor;
-use crate::sparse::spmm::{spmm_par, Dense};
+use crate::sparse::spmm::{spmm_par_into, Dense};
 use crate::sparse::Csr;
 use anyhow::{anyhow, Result};
 use std::sync::{Arc, Mutex};
@@ -98,11 +99,20 @@ pub struct StagingConfig {
     /// depth, thread count, and cache size
     /// (`rust/tests/differential.rs`).
     pub backing: StagingBacking,
+    /// Buffer recycling policy. `None` (default) is the fresh-allocation
+    /// oracle: every staged segment allocates its own scratch, exactly
+    /// the historical behaviour. `Some(pool)` threads the
+    /// [`BufferPool`] through the whole pipeline — the producer decodes
+    /// into recycled scratch, the consumer hands drained buffers back
+    /// through the prefetch return channel, and steady-state staging
+    /// performs zero heap allocations per segment
+    /// (`rust/tests/alloc_free.rs`). Output is byte-identical either way.
+    pub recycle: Option<Arc<BufferPool>>,
 }
 
 impl StagingConfig {
-    /// Serial staging (depth 1, in-memory, no charged I/O): the oracle
-    /// configuration.
+    /// Serial staging (depth 1, in-memory, no charged I/O, fresh
+    /// allocations): the oracle configuration.
     pub fn serial() -> StagingConfig {
         StagingConfig { prefetch: Prefetch::new(1), ..StagingConfig::default() }
     }
@@ -118,7 +128,14 @@ impl StagingConfig {
             prefetch: Prefetch::new(depth),
             io_cost: None,
             backing: StagingBacking::Disk(store),
+            recycle: None,
         }
+    }
+
+    /// The same configuration with buffer recycling through `pool`.
+    pub fn with_recycle(mut self, pool: Arc<BufferPool>) -> StagingConfig {
+        self.recycle = Some(pool);
+        self
     }
 }
 
@@ -193,7 +210,7 @@ impl OocGcnLayer {
             // Phase II: the partial SpGEMM for one staged segment.
             |exec, seg, sub, agg| {
                 calls += sub.nnz().div_ceil(denom);
-                let part = spmm_exec.spmm_with_pool(exec, &sub, x, pool)?;
+                let part = spmm_exec.spmm_with_pool(exec, sub, x, pool)?;
                 agg.data[seg.row_lo * x.ncols..seg.row_hi * x.ncols]
                     .copy_from_slice(&part.data);
                 Ok(())
@@ -206,8 +223,11 @@ impl OocGcnLayer {
     }
 
     /// Artifact-free forward pass: identical planning, ledger and prefetch
-    /// pipeline, with per-segment aggregation on [`spmm_par`] and the
-    /// combination on the host. This is the execution surface the
+    /// pipeline, with per-segment aggregation on
+    /// [`spmm_par_into`](crate::sparse::spmm::spmm_par_into) — each
+    /// partial lands directly in its row range of the pass-wide
+    /// aggregation panel, no per-segment partial is ever allocated — and
+    /// the combination on the host. This is the execution surface the
     /// differential suite drives in environments without compiled PJRT
     /// artifacts; its output is byte-identical to
     /// `dense_affine(spmm(a_hat, x), w, b, relu)` at every prefetch depth
@@ -228,9 +248,12 @@ impl OocGcnLayer {
             pool,
             staging,
             |_, seg, sub, agg| {
-                let part = spmm_par(&sub, x, pool);
-                agg.data[seg.row_lo * x.ncols..seg.row_hi * x.ncols]
-                    .copy_from_slice(&part.data);
+                spmm_par_into(
+                    sub,
+                    x,
+                    pool,
+                    &mut agg.data[seg.row_lo * x.ncols..seg.row_hi * x.ncols],
+                );
                 Ok(())
             },
             |_, agg| Ok(dense_affine(agg, &self.w, &self.b, self.relu)),
@@ -246,6 +269,11 @@ impl OocGcnLayer {
     /// thread; `finish` turns the full aggregation into the layer output
     /// (Phase III). `ctx` is whatever mutable state both need (the PJRT
     /// executor on the artifact path, `()` on the CPU path).
+    ///
+    /// One aggregation panel and (under [`StagingConfig::recycle`]) one
+    /// set of per-segment scratch buffers serve the entire pass: segments
+    /// borrow scratch from the recycle pool on the way in and return it
+    /// through the pipeline's hand-back channel on the way out.
     #[allow(clippy::too_many_arguments)]
     fn forward_streamed<Ctx, C, Fin>(
         &self,
@@ -259,7 +287,7 @@ impl OocGcnLayer {
         finish: Fin,
     ) -> Result<(Dense, LayerReport)>
     where
-        C: FnMut(&mut Ctx, &RobwSegment, Csr, &mut Dense) -> Result<()>,
+        C: FnMut(&mut Ctx, &RobwSegment, &Csr, &mut Dense) -> Result<()>,
         Fin: FnOnce(&mut Ctx, &Dense) -> Result<Dense>,
     {
         // Plan first: a disk-backed pass must match the store's manifest
@@ -277,7 +305,15 @@ impl OocGcnLayer {
         mem.alloc(b_bytes, "feature panel")
             .map_err(|e| anyhow!("feature panel does not fit: {e}"))?;
 
-        let mut agg = Dense::zeros(a_hat.nrows, x.ncols);
+        // The pass-wide aggregation panel: recycled across passes when a
+        // pool is attached (take_panel zero-fills, so the contents are
+        // identical to a fresh Dense::zeros).
+        let mut agg = match &staging.recycle {
+            Some(rp) => {
+                Dense::from_vec(a_hat.nrows, x.ncols, rp.take_panel(a_hat.nrows * x.ncols))
+            }
+            None => Dense::zeros(a_hat.nrows, x.ncols),
+        };
         let mut report = LayerReport {
             segments: segs.len(),
             prefetch_depth: staging.prefetch.depth.max(1),
@@ -305,6 +341,11 @@ impl OocGcnLayer {
         };
         report.peak_gpu_bytes = mem.peak;
         mem.free(b_bytes);
+        // Retire the panel slab for the next pass (on every path — the
+        // `?` below runs after the slab is back in the pool).
+        if let Some(rp) = &staging.recycle {
+            rp.put_panel(std::mem::take(&mut agg.data));
+        }
         Ok((result?, report))
     }
 }
@@ -341,6 +382,13 @@ struct StreamStats {
 /// including a failed file read mid-stream — every staged-but-unconsumed
 /// segment is freed before returning, so the ledger ends balanced either
 /// way and the producer is always joined.
+///
+/// With [`StagingConfig::recycle`] set, segment scratch circulates instead
+/// of churning: the producer decodes/slices into buffers drained by the
+/// consumer (handed back through the pipeline's return channel, topped up
+/// from the pool), scratch capacities are sized once from the plan's
+/// maxima, and leftovers retire to the pool when the stream ends — zero
+/// steady-state allocations per segment (`rust/tests/alloc_free.rs`).
 fn stream_segments<F>(
     a_hat: &Csr,
     segs: &[RobwSegment],
@@ -350,14 +398,26 @@ fn stream_segments<F>(
     mut consume: F,
 ) -> Result<StreamStats>
 where
-    F: FnMut(&RobwSegment, Csr) -> Result<()>,
+    F: FnMut(&RobwSegment, &Csr) -> Result<()>,
 {
     let ledger = Mutex::new(SegmentLedger { mem, staged: 0, meter: StagingMeter::default() });
     let mut h2d = 0u64;
-    let result = staging.prefetch.run(
+    let recycle = staging.recycle.as_deref();
+    // Plan-wide scratch maxima, used only by recycled in-memory staging
+    // (the disk path uses the store's precomputed maxima): the first take
+    // per in-flight slot already covers every later segment, so
+    // capacities never regrow mid-stream.
+    let (max_rows, max_nnz) = match (&staging.backing, recycle) {
+        (StagingBacking::Memory, Some(_)) => (
+            segs.iter().map(|s| s.row_hi - s.row_lo).max().unwrap_or(0),
+            segs.iter().map(|s| s.nnz).max().unwrap_or(0),
+        ),
+        _ => (0, 0),
+    };
+    let result = staging.prefetch.run_recycling(
         pool,
         segs.len(),
-        |i| {
+        |i, reuse: Option<Csr>| {
             let seg = &segs[i];
             {
                 let mut l = ledger.lock().unwrap();
@@ -368,16 +428,21 @@ where
             }
             match &staging.backing {
                 StagingBacking::Memory => {
-                    let sub = materialize(a_hat, seg);
+                    let mut sub = match (reuse, recycle) {
+                        (Some(m), _) => m,
+                        (None, Some(rp)) => rp.take_csr(max_rows, max_nnz),
+                        (None, None) => Csr::empty(0, 0),
+                    };
+                    materialize_into(a_hat, seg, &mut sub);
                     if let Some(cm) = &staging.io_cost {
                         let dur = cm.transfer_secs(Op::HtoD, seg.bytes);
                         std::thread::sleep(std::time::Duration::from_secs_f64(dur));
                     }
-                    Ok(sub)
+                    Ok(SegmentRead::Owned(sub))
                 }
                 StagingBacking::Disk(store) => {
                     let (sub, origin) = store
-                        .read(i)
+                        .read_reusing(i, reuse, recycle)
                         .map_err(|e| anyhow!("staging segment {i} from disk: {e}"))?;
                     let mut l = ledger.lock().unwrap();
                     l.meter.record(origin.disk_bytes, origin.cache_hit);
@@ -385,14 +450,18 @@ where
                 }
             }
         },
-        |i, sub| {
+        |i, sub: SegmentRead| {
             let seg = &segs[i];
-            consume(seg, sub)?;
+            consume(seg, &sub)?;
             h2d += seg.bytes;
-            let mut l = ledger.lock().unwrap();
-            l.mem.free(seg.bytes);
-            l.staged -= seg.bytes;
-            Ok(())
+            {
+                let mut l = ledger.lock().unwrap();
+                l.mem.free(seg.bytes);
+                l.staged -= seg.bytes;
+            }
+            // Hand the drained buffers back to the producer. Without a
+            // recycle pool they are dropped — the fresh-allocation oracle.
+            Ok(if recycle.is_some() { sub.reclaim() } else { None })
         },
     );
     // The producer has joined; reconcile whatever an abort stranded.
@@ -400,7 +469,13 @@ where
     if l.staged > 0 {
         l.mem.free(l.staged);
     }
-    result?;
+    let leftovers = result?;
+    // Retire end-of-stream buffers to the pool for the next pass.
+    if let Some(rp) = recycle {
+        for m in leftovers {
+            rp.put_csr(m);
+        }
+    }
     Ok(StreamStats { h2d, meter: l.meter })
 }
 
@@ -593,6 +668,52 @@ mod tests {
         assert_eq!(second, first);
         assert_eq!(rep2.cache_hits, segs.len(), "warm pass is all host-tier hits");
         assert_eq!(rep2.disk_bytes, 0);
+    }
+
+    #[test]
+    fn recycled_staging_is_byte_identical_and_actually_recycles() {
+        let mut rng = Pcg::seed(12);
+        let a = crate::graphgen::kmer::generate(&mut rng, 250, 3.0);
+        let a_hat = normalize_adjacency(&a);
+        let x = Dense::from_vec(250, 8, (0..250 * 8).map(|_| rng.normal() as f32).collect());
+        let layer = test_layer(&mut rng, 8, 8, 1536);
+        let mut mem = GpuMem::new(64 << 20);
+        let (want, base) = layer
+            .forward_cpu(&a_hat, &x, &mut mem, &Pool::serial(), &StagingConfig::serial())
+            .unwrap();
+        assert!(base.segments > 3, "need a real stream");
+
+        let pool_mem = Arc::new(BufferPool::new(64 << 20));
+        for depth in [1usize, 2, 4] {
+            // In-memory backing, recycled.
+            let staging = StagingConfig::depth(depth).with_recycle(pool_mem.clone());
+            let mut mem = GpuMem::new(64 << 20);
+            let (got, rep) =
+                layer.forward_cpu(&a_hat, &x, &mut mem, &Pool::new(2), &staging).unwrap();
+            assert_eq!(got, want, "memory recycled depth={depth}");
+            assert_eq!(rep.h2d_bytes, base.h2d_bytes);
+            assert_eq!(mem.used, 0);
+        }
+        let st = pool_mem.stats();
+        assert!(st.hits > 0, "buffers must actually cycle through the pool");
+        assert!(st.returns > 0, "end-of-stream buffers retire to the pool");
+
+        // Disk backing, recycled, cacheless (every read from a file).
+        let dir = crate::testing::TempDir::new("oocgcn-recycle");
+        let segs = crate::partition::robw::robw_partition(&a_hat, layer.seg_budget);
+        let store = Arc::new(SegmentStore::spill(&a_hat, &segs, dir.path(), 0).unwrap());
+        let pool_disk = Arc::new(BufferPool::new(64 << 20));
+        for depth in [1usize, 2] {
+            let staging =
+                StagingConfig::disk(store.clone(), depth).with_recycle(pool_disk.clone());
+            let mut mem = GpuMem::new(64 << 20);
+            let (got, rep) =
+                layer.forward_cpu(&a_hat, &x, &mut mem, &Pool::new(2), &staging).unwrap();
+            assert_eq!(got, want, "disk recycled depth={depth}");
+            assert_eq!(rep.cache_hits, 0);
+            assert_eq!(mem.used, 0);
+        }
+        assert!(pool_disk.stats().hits > 0);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! at build time (L2); this driver owns the parameter state and the loop —
 //! no Python anywhere near the path.
 
-use crate::runtime::executor::Buf;
+use crate::runtime::executor::BufView;
 use crate::runtime::Executor;
 use crate::sparse::norm::normalize_adjacency;
 use crate::sparse::Csr;
@@ -25,6 +25,11 @@ pub struct Trainer {
     a_dense: Vec<f32>,
     x: Vec<f32>,
     labels: Vec<i32>,
+    /// Device literals of the three constant inputs (Â, X, labels), built
+    /// once on the first step. They never change across SGD steps, so
+    /// re-wrapping (and with it deep-copying the full dense graph) per
+    /// step was pure allocator churn.
+    const_lits: Option<[xla::Literal; 3]>,
     w1: Vec<f32>,
     b1: Vec<f32>,
     w2: Vec<f32>,
@@ -101,6 +106,7 @@ impl Trainer {
             a_dense,
             x,
             labels,
+            const_lits: None,
             w1,
             b1: vec![0.0; hidden],
             w2,
@@ -110,19 +116,28 @@ impl Trainer {
     }
 
     /// One SGD step; returns the loss before the update.
+    ///
+    /// Only the parameters and the learning rate are re-wrapped per step;
+    /// the constant inputs (dense Â, X, labels — by far the largest
+    /// buffers) are built into literals once and reused, so the training
+    /// loop no longer copies the full graph on every step.
     pub fn step(&mut self, exec: &mut Executor, lr: f32) -> Result<f32> {
-        let outs = exec.run(
+        if self.const_lits.is_none() {
+            self.const_lits = Some([
+                exec.prep_literal_view(&self.artifact, 0, BufView::F32(&self.a_dense))?,
+                exec.prep_literal_view(&self.artifact, 1, BufView::F32(&self.x))?,
+                exec.prep_literal_view(&self.artifact, 6, BufView::S32(&self.labels))?,
+            ]);
+        }
+        let w1 = exec.prep_literal_view(&self.artifact, 2, BufView::F32(&self.w1))?;
+        let b1 = exec.prep_literal_view(&self.artifact, 3, BufView::F32(&self.b1))?;
+        let w2 = exec.prep_literal_view(&self.artifact, 4, BufView::F32(&self.w2))?;
+        let b2 = exec.prep_literal_view(&self.artifact, 5, BufView::F32(&self.b2))?;
+        let lr_lit = exec.prep_literal_view(&self.artifact, 7, BufView::F32(&[lr]))?;
+        let [a, x, labels] = self.const_lits.as_ref().expect("built above");
+        let outs = exec.run_literals(
             &self.artifact,
-            &[
-                Buf::F32(self.a_dense.clone()),
-                Buf::F32(self.x.clone()),
-                Buf::F32(self.w1.clone()),
-                Buf::F32(self.b1.clone()),
-                Buf::F32(self.w2.clone()),
-                Buf::F32(self.b2.clone()),
-                Buf::S32(self.labels.clone()),
-                Buf::F32(vec![lr]),
-            ],
+            &[a, x, &w1, &b1, &w2, &b2, labels, &lr_lit],
         )?;
         let loss = outs[0].as_f32()?[0];
         self.w1 = outs[1].as_f32()?.to_vec();

@@ -105,6 +105,17 @@ fn main() {
         parsed_flag(&args, "--host-cache-bytes", "a byte count (0 = no host cache)")
             .or(cfg.host_cache_bytes)
             .unwrap_or(aires::runtime::segstore::UNBOUNDED_CACHE);
+    // --recycle-cap-bytes bounds the staging buffer-recycle pool
+    // (`runtime::recycle`): staged-segment scratch circulates through the
+    // pipeline instead of being reallocated per segment. 0 disables
+    // recycling (the fresh-allocation baseline); unset = the default cap.
+    // Output is byte-identical either way.
+    let recycle_cap_bytes: u64 =
+        parsed_flag(&args, "--recycle-cap-bytes", "a byte count (0 = no buffer recycling)")
+            .or(cfg.recycle_cap_bytes)
+            .unwrap_or(aires::runtime::recycle::DEFAULT_RECYCLE_CAP);
+    let recycle_pool = (recycle_cap_bytes > 0)
+        .then(|| std::sync::Arc::new(aires::runtime::BufferPool::new(recycle_cap_bytes)));
     let mut cm = cfg.cost_model.clone();
     // --threads always wins; otherwise the config's `threads` key flows
     // into the hook too, unless the config pinned cost_model.cpu_threads
@@ -248,7 +259,7 @@ fn main() {
             let mut mem = aires::memsim::GpuMem::new(256 << 20);
             // --segment-dir switches staging from in-memory slicing to
             // real file reads through the host-cache tier.
-            let staging = match &segment_dir {
+            let mut staging = match &segment_dir {
                 None => aires::gcn::oocgcn::StagingConfig::depth(prefetch_depth),
                 Some(dir) => {
                     let segs = aires::partition::robw::robw_partition(&a_hat, budget);
@@ -268,6 +279,9 @@ fn main() {
                     )
                 }
             };
+            if let Some(rp) = &recycle_pool {
+                staging = staging.with_recycle(rp.clone());
+            }
             let (out, rep) = layer
                 .forward_staged(&mut exec, &a_hat, &x, &mut mem, &pool, &staging)
                 .expect("forward");
@@ -354,8 +368,11 @@ fn main() {
                 aires::util::human_bytes(spilled),
                 dir.display()
             );
-            let staging =
+            let mut staging =
                 StagingConfig::disk(std::sync::Arc::new(store), prefetch_depth);
+            if let Some(rp) = &recycle_pool {
+                staging = staging.with_recycle(rp.clone());
+            }
             let mut mem = GpuMem::new(1 << 30);
             let (got, rep) = layer
                 .forward_cpu(&a_hat, &x, &mut mem, &pool, &staging)
@@ -374,6 +391,13 @@ fn main() {
             );
             if ephemeral {
                 let _ = std::fs::remove_dir_all(&dir);
+            }
+            if let Some(rp) = &recycle_pool {
+                let st = rp.stats();
+                println!(
+                    "recycle pool: {} hits / {} misses, {} returned ({} dropped by the cap)",
+                    st.hits, st.misses, st.returns, st.drops
+                );
             }
             if got == want {
                 println!("disk-backed output byte-identical to the in-memory oracle: OK");
@@ -448,7 +472,7 @@ fn main() {
         _ => {
             println!(
                 "aires — out-of-core GCN co-design (AIRES reproduction)\n\n\
-                 usage: aires <catalog|features|fig3|fig6|fig7|fig8|fig9|table3|report|prep|train|spgemm|segcheck|parcheck|trace|sweep|config-dump> [--config F] [--threads N] [--prefetch-depth D] [--segment-dir DIR] [--host-cache-bytes N] [args]\n\
+                 usage: aires <catalog|features|fig3|fig6|fig7|fig8|fig9|table3|report|prep|train|spgemm|segcheck|parcheck|trace|sweep|config-dump> [--config F] [--threads N] [--prefetch-depth D] [--segment-dir DIR] [--host-cache-bytes N] [--recycle-cap-bytes N] [args]\n\
                  see README.md for details"
             );
         }

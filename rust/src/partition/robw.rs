@@ -162,6 +162,13 @@ pub fn materialize(a: &Csr, seg: &RobwSegment) -> Csr {
     a.slice_rows(seg.row_lo, seg.row_hi)
 }
 
+/// [`materialize`] into caller-owned scratch (see [`Csr::slice_rows_into`]):
+/// the in-memory staging producer reuses one recycled scratch matrix per
+/// in-flight segment instead of allocating three fresh sections each time.
+pub fn materialize_into(a: &Csr, seg: &RobwSegment, out: &mut Csr) {
+    a.slice_rows_into(seg.row_lo, seg.row_hi, out);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

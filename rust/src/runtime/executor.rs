@@ -47,6 +47,50 @@ impl Buf {
             _ => bail!("expected f32 buffer"),
         }
     }
+
+    /// Borrowed view of the payload (clone-free literal building).
+    pub fn view(&self) -> BufView<'_> {
+        match self {
+            Buf::F32(v) => BufView::F32(v),
+            Buf::S32(v) => BufView::S32(v),
+        }
+    }
+}
+
+/// Borrowed view of an input buffer: lets callers build execution
+/// literals straight from slices they already own, without wrapping them
+/// in an owned [`Buf`] first (the training loop used to deep-copy its
+/// constant graph/feature/label buffers on every SGD step for exactly
+/// this reason).
+#[derive(Debug, Clone, Copy)]
+pub enum BufView<'a> {
+    /// Flat f32 payload.
+    F32(&'a [f32]),
+    /// Flat i32 payload.
+    S32(&'a [i32]),
+}
+
+impl BufView<'_> {
+    /// Element count.
+    pub fn len(&self) -> usize {
+        match self {
+            BufView::F32(v) => v.len(),
+            BufView::S32(v) => v.len(),
+        }
+    }
+
+    /// True when the view holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Element type of the payload.
+    pub fn dtype(&self) -> DType {
+        match self {
+            BufView::F32(_) => DType::F32,
+            BufView::S32(_) => DType::S32,
+        }
+    }
 }
 
 /// Compiled-executable cache over a PJRT CPU client.
@@ -97,7 +141,7 @@ impl Executor {
         Ok(())
     }
 
-    fn literal(spec: &super::artifacts::TensorSpec, buf: &Buf) -> Result<xla::Literal> {
+    fn literal(spec: &super::artifacts::TensorSpec, buf: BufView<'_>) -> Result<xla::Literal> {
         if buf.dtype() != spec.dtype {
             bail!("dtype mismatch: artifact wants {:?}", spec.dtype);
         }
@@ -106,8 +150,8 @@ impl Executor {
         }
         let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
         let lit = match buf {
-            Buf::F32(v) => xla::Literal::vec1(v),
-            Buf::S32(v) => xla::Literal::vec1(v),
+            BufView::F32(v) => xla::Literal::vec1(v),
+            BufView::S32(v) => xla::Literal::vec1(v),
         };
         if spec.shape.is_empty() {
             // Scalar: reshape to rank 0.
@@ -129,7 +173,9 @@ impl Executor {
             .iter()
             .zip(inputs.iter())
             .enumerate()
-            .map(|(i, (s, b))| Self::literal(s, b).with_context(|| format!("{name} input {i}")))
+            .map(|(i, (s, b))| {
+                Self::literal(s, b.view()).with_context(|| format!("{name} input {i}"))
+            })
             .collect::<Result<Vec<_>>>()?;
         let exe = self.compiled.get(name).unwrap();
         let result = exe
@@ -168,6 +214,19 @@ impl Executor {
     /// executions — §Perf: re-uploading an unchanged operand per call costs
     /// a full copy of its buffer).
     pub fn prep_literal(&self, name: &str, idx: usize, buf: &Buf) -> Result<xla::Literal> {
+        self.prep_literal_view(name, idx, buf.view())
+    }
+
+    /// [`Self::prep_literal`] from a borrowed slice view — no owned [`Buf`]
+    /// wrapper (and therefore no payload copy) required. This is how the
+    /// training loop hoists its constant inputs (adjacency, features,
+    /// labels) out of the per-step path.
+    pub fn prep_literal_view(
+        &self,
+        name: &str,
+        idx: usize,
+        buf: BufView<'_>,
+    ) -> Result<xla::Literal> {
         let spec = self.manifest.get(name).ok_or_else(|| anyhow!("unknown artifact {name}"))?;
         let ispec =
             spec.inputs.get(idx).ok_or_else(|| anyhow!("{name}: no input {idx}"))?;

@@ -12,6 +12,7 @@ pub mod artifacts;
 pub mod executor;
 pub mod pool;
 pub mod prefetch;
+pub mod recycle;
 pub mod segstore;
 pub mod tile_exec;
 
@@ -19,7 +20,8 @@ pub use artifacts::{Manifest, TensorSpec};
 pub use executor::Executor;
 pub use pool::Pool;
 pub use prefetch::Prefetch;
-pub use segstore::{CacheStats, SegmentStore};
+pub use recycle::{BufferPool, RecycleStats};
+pub use segstore::{CacheStats, SegmentRead, SegmentStore};
 pub use tile_exec::BsrSpmmExec;
 
 /// Default artifact directory relative to the repo root.

@@ -65,22 +65,80 @@ impl Prefetch {
         P: Fn(usize) -> Result<T, E> + Sync,
         C: FnMut(usize, T) -> Result<(), E>,
     {
+        // One pipeline implementation: `run` is the no-hand-back special
+        // case of [`Self::run_recycling`] (the return lane stays empty).
+        self.run_recycling::<T, (), E, _, _>(
+            pool,
+            n,
+            |i, _| stage(i),
+            |i, item| {
+                consume(i, item)?;
+                Ok(None)
+            },
+        )
+        .map(|_| ())
+    }
+
+    /// [`Self::run`] with a **return channel**: the consumer hands each
+    /// drained per-item buffer back to the producer, which reuses it for a
+    /// later stage instead of allocating afresh — the steady-state
+    /// allocation-free contract of the recycled staging path
+    /// (`rust/tests/alloc_free.rs`).
+    ///
+    /// `stage(i, reuse)` receives a previously drained buffer when one has
+    /// come back in time (`None` otherwise — at most the first
+    /// `depth + 1` stages, so a warmed pipeline never misses);
+    /// `consume(i, item)` returns `Ok(Some(buffer))` to send the drained
+    /// buffer back, `Ok(None)` to drop it (the fresh-allocation oracle
+    /// does this). On success the buffers still in flight at end-of-stream
+    /// are returned so the caller can retire them to a pool; on error they
+    /// are dropped with the aborted items.
+    ///
+    /// Determinism is unchanged from [`Self::run`]: consumption is
+    /// strictly index-ordered and the reported error is the lowest-index
+    /// failure. Buffer hand-back affects *allocation provenance only* —
+    /// every staged item is fully overwritten before the consumer sees it,
+    /// so output is byte-identical to the non-recycling pipeline
+    /// (`rust/tests/differential.rs`).
+    pub fn run_recycling<T, U, E, P, C>(
+        &self,
+        pool: &Pool,
+        n: usize,
+        stage: P,
+        mut consume: C,
+    ) -> Result<Vec<U>, E>
+    where
+        T: Send,
+        U: Send,
+        E: Send,
+        P: Fn(usize, Option<U>) -> Result<T, E> + Sync,
+        C: FnMut(usize, T) -> Result<Option<U>, E>,
+    {
         if n == 0 {
-            return Ok(());
+            return Ok(Vec::new());
         }
         if self.depth <= 1 || n == 1 {
+            // Serial staging: the drained buffer is carried straight into
+            // the next stage — perfect recycling, zero channel machinery.
+            let mut spare: Option<U> = None;
             for i in 0..n {
-                consume(i, stage(i)?)?;
+                let item = stage(i, spare.take())?;
+                spare = consume(i, item)?;
             }
-            return Ok(());
+            return Ok(spare.into_iter().collect());
         }
         let chan: Handoff<Result<T, E>> = Handoff::bounded(self.depth - 1);
-        pool.scoped(|s| {
+        // The return lane is sized to the whole stream, so the consumer's
+        // push can never block: a blocked return-push while the producer
+        // waits in reserve() would deadlock the pipeline. Memory stays
+        // bounded by the items actually in flight (at most `depth` exist
+        // at once), not by this capacity.
+        let returns: Handoff<U> = Handoff::bounded(n);
+        let result = pool.scoped(|s| {
             let chan = &chan;
+            let returns = &returns;
             let stage = &stage;
             s.spawn(move || {
-                // Close on every exit path (including an unwinding stage
-                // panic) so the consumer can never block forever.
                 struct CloseOnExit<'a, T>(&'a Handoff<T>);
                 impl<T> Drop for CloseOnExit<'_, T> {
                     fn drop(&mut self) {
@@ -89,21 +147,19 @@ impl Prefetch {
                 }
                 let _close = CloseOnExit(chan);
                 for i in 0..n {
-                    // Reserve the slot before staging: production never
-                    // runs ahead of the depth bound.
                     if !chan.reserve() {
                         return;
                     }
-                    let item = stage(i);
+                    // Pick up a drained buffer if the consumer has sent
+                    // one back; never wait for it (staging ahead matters
+                    // more than reuse on a cold pipeline).
+                    let item = stage(i, returns.try_pop());
                     let failed = item.is_err();
                     if !chan.push(item) || failed {
                         return;
                     }
                 }
             });
-            // Cancel on every consumer exit path (early error return AND
-            // an unwinding consume panic): a producer blocked on a full
-            // queue must always be released before the scope joins it.
             struct CancelOnExit<'a, T>(&'a Handoff<T>);
             impl<T> Drop for CancelOnExit<'_, T> {
                 fn drop(&mut self) {
@@ -113,9 +169,21 @@ impl Prefetch {
             let _cancel = CancelOnExit(chan);
             (0..n).try_for_each(|i| {
                 let item = chan.pop().expect("producer stages every index before closing");
-                consume(i, item?)
+                if let Some(buf) = consume(i, item?)? {
+                    // Capacity n: never blocks (see above).
+                    returns.push(buf);
+                }
+                Ok(())
             })
-        })
+        });
+        result?;
+        // The producer has joined; whatever it did not reuse flows back to
+        // the caller for retirement.
+        let mut leftovers = Vec::new();
+        while let Some(buf) = returns.try_pop() {
+            leftovers.push(buf);
+        }
+        Ok(leftovers)
     }
 }
 
@@ -262,6 +330,114 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn recycling_preserves_order_and_returns_leftovers() {
+        let pool = Pool::new(4);
+        for depth in [1usize, 2, 3, 8] {
+            let mut seen = Vec::new();
+            let leftovers: Vec<u64> = Prefetch::new(depth)
+                .run_recycling::<usize, u64, (), _, _>(
+                    &pool,
+                    30,
+                    |i, _reuse| Ok(i * 2),
+                    |i, v| {
+                        seen.push((i, v));
+                        Ok(Some(i as u64))
+                    },
+                )
+                .unwrap();
+            assert_eq!(seen, (0..30).map(|i| (i, i * 2)).collect::<Vec<_>>(), "depth={depth}");
+            // Every buffer the producer did not pick up comes back out.
+            assert!(!leftovers.is_empty(), "depth={depth}: last buffer is always left over");
+        }
+    }
+
+    #[test]
+    fn serial_recycling_reuses_every_drained_buffer() {
+        // Depth 1: stage i+1 must receive exactly the buffer drained by
+        // consume i — the strict per-segment reuse the allocation-free
+        // test builds on.
+        let reused = AtomicUsize::new(0);
+        let leftovers = Prefetch::new(1)
+            .run_recycling::<usize, u32, (), _, _>(
+                &Pool::serial(),
+                20,
+                |i, reuse| {
+                    match reuse {
+                        Some(tag) => {
+                            assert_eq!(tag as usize, i - 1, "buffer from the previous drain");
+                            reused.fetch_add(1, Ordering::Relaxed);
+                        }
+                        None => assert_eq!(i, 0, "only the first stage starts cold"),
+                    }
+                    Ok(i)
+                },
+                |i, _| Ok(Some(i as u32)),
+            )
+            .unwrap();
+        assert_eq!(reused.load(Ordering::Relaxed), 19);
+        assert_eq!(leftovers, vec![19]);
+    }
+
+    #[test]
+    fn pipelined_recycling_misses_at_most_depth_plus_one_stages() {
+        // Reuse can lag the drain by the pipeline depth, never more: cold
+        // stages (no recycled buffer offered) are bounded by depth + 1.
+        for depth in [2usize, 3, 5] {
+            let cold = AtomicUsize::new(0);
+            let ok = Prefetch::new(depth).run_recycling::<usize, u8, (), _, _>(
+                &Pool::new(4),
+                100,
+                |i, reuse| {
+                    if reuse.is_none() {
+                        cold.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Ok(i)
+                },
+                |_, _| Ok(Some(0)),
+            );
+            assert!(ok.is_ok());
+            assert!(
+                cold.load(Ordering::Relaxed) <= depth + 1,
+                "depth={depth}: {} cold stages",
+                cold.load(Ordering::Relaxed)
+            );
+        }
+    }
+
+    #[test]
+    fn recycling_consume_error_reports_lowest_index() {
+        for depth in [1usize, 2, 4] {
+            let r = Prefetch::new(depth).run_recycling::<usize, u8, &str, _, _>(
+                &Pool::new(4),
+                50,
+                |i, _| Ok(i),
+                |i, _| if i == 7 { Err("consume 7 failed") } else { Ok(Some(0)) },
+            );
+            assert_eq!(r.unwrap_err(), "consume 7 failed", "depth={depth}");
+        }
+    }
+
+    #[test]
+    fn recycling_with_no_returns_degrades_to_plain_run() {
+        // Consume returning None everywhere is the fresh-allocation
+        // oracle: stage must then never see a recycled buffer.
+        for depth in [1usize, 2, 4] {
+            let leftovers = Prefetch::new(depth)
+                .run_recycling::<usize, u8, (), _, _>(
+                    &Pool::new(2),
+                    25,
+                    |i, reuse| {
+                        assert!(reuse.is_none(), "depth={depth}: nothing was ever returned");
+                        Ok(i)
+                    },
+                    |_, _| Ok(None),
+                )
+                .unwrap();
+            assert!(leftovers.is_empty(), "depth={depth}");
+        }
     }
 
     #[test]

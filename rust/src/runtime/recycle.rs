@@ -1,0 +1,338 @@
+//! Deterministic buffer recycling for the staging pipeline.
+//!
+//! AIRES names sparse-format **memory allocation** (next to data
+//! alignment) as the dominant cost of out-of-core SpGEMM, yet the Phase II
+//! streaming path used to allocate a fresh byte buffer, a fresh CSR
+//! triple, and a fresh dense partial for *every* staged segment. This
+//! module is the fix: a std-only [`BufferPool`] of reusable slabs that the
+//! whole staging pipeline draws from — the prefetch producer takes
+//! decode scratch here, the consumer hands drained segment buffers back
+//! through the [`Prefetch::run_recycling`](crate::runtime::prefetch::Prefetch::run_recycling)
+//! return channel, and `OocGcnLayer::forward_streamed` computes every
+//! partial straight into one pass-wide output panel. In steady state the
+//! hot loop performs **zero heap allocations per segment** (enforced by
+//! the counting-allocator test in `rust/tests/alloc_free.rs`).
+//!
+//! Determinism: recycling changes only *where buffer capacity comes from*,
+//! never the bytes written through it — every staged segment is fully
+//! overwritten before compute sees it, so recycled and fresh passes are
+//! byte-identical (swept in `rust/tests/differential.rs`). Retention is
+//! bounded: a pool never holds more than its high-water cap of slab
+//! capacity; buffers returned beyond the cap are simply dropped.
+
+use crate::sparse::Csr;
+use std::sync::Mutex;
+
+/// Default retention cap for CLI-constructed pools: generous enough to
+/// hold a few staged segments plus decode scratch at any paper-scale
+/// budget, small enough to never matter next to the feature panel.
+pub const DEFAULT_RECYCLE_CAP: u64 = 256 << 20;
+
+/// Counters of one pool's serving behaviour since creation.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RecycleStats {
+    /// `take_*` calls served from a retained slab (no fresh allocation).
+    pub hits: usize,
+    /// `take_*` calls that had to allocate a fresh slab.
+    pub misses: usize,
+    /// Buffers handed back through `put_*`.
+    pub returns: usize,
+    /// Returned buffers dropped because retaining them would exceed the cap.
+    pub drops: usize,
+    /// Slab capacity bytes currently retained (idle in the pool).
+    pub retained_bytes: u64,
+    /// High-water mark of `retained_bytes` over the pool's lifetime.
+    pub retained_peak_bytes: u64,
+}
+
+#[derive(Debug, Default)]
+struct Slabs {
+    /// Idle CSR scratch (empty vectors, capacity retained). LIFO so the
+    /// most recently drained (cache-warm) slab is reused first.
+    csr: Vec<Csr>,
+    /// Idle byte buffers (file-read scratch).
+    bytes: Vec<Vec<u8>>,
+    /// Idle dense panels (f32 slabs).
+    panels: Vec<Vec<f32>>,
+    stats: RecycleStats,
+}
+
+/// Capacity bytes a CSR scratch pins while idle in the pool.
+fn csr_slab_bytes(m: &Csr) -> u64 {
+    m.rowptr.capacity() as u64 * std::mem::size_of::<usize>() as u64
+        + m.colidx.capacity() as u64 * 4
+        + m.vals.capacity() as u64 * 4
+}
+
+/// Bounded pool of reusable staging buffers.
+///
+/// All methods take `&self` (internally mutex-guarded), so the prefetch
+/// producer and the consuming thread can share one pool. `take_*` pops the
+/// most recently returned slab and grows it to the requested capacity
+/// (a no-op once capacities have reached the plan's high-water mark);
+/// `put_*` retains the buffer unless the pool is already at its cap, in
+/// which case the buffer is dropped (CSR scratch and panels come back
+/// cleared; byte buffers keep their stale contents — see
+/// [`BufferPool::take_bytes`]).
+///
+/// # Examples
+///
+/// ```
+/// use aires::runtime::recycle::BufferPool;
+///
+/// let pool = BufferPool::new(1 << 20);
+/// let buf = pool.take_bytes(4096);
+/// assert!(buf.capacity() >= 4096);
+/// pool.put_bytes(buf);
+/// // The second take reuses the retained slab: a hit, not an allocation.
+/// let again = pool.take_bytes(4096);
+/// assert_eq!(pool.stats().hits, 1);
+/// drop(again);
+/// ```
+#[derive(Debug)]
+pub struct BufferPool {
+    cap_bytes: u64,
+    slabs: Mutex<Slabs>,
+}
+
+impl BufferPool {
+    /// Pool retaining at most `cap_bytes` of idle slab capacity
+    /// (`0` retains nothing: every `put_*` drops, every `take_*` allocates
+    /// — the degenerate "fresh" behaviour, useful for A/B benches).
+    pub fn new(cap_bytes: u64) -> BufferPool {
+        BufferPool { cap_bytes, slabs: Mutex::new(Slabs::default()) }
+    }
+
+    /// Retention cap this pool was built with.
+    pub fn cap_bytes(&self) -> u64 {
+        self.cap_bytes
+    }
+
+    /// Serving counters since the pool was created.
+    pub fn stats(&self) -> RecycleStats {
+        self.slabs.lock().unwrap().stats
+    }
+
+    /// Take a byte buffer with capacity at least `min_cap`. Contents and
+    /// length are **unspecified** (whatever the previous user left — every
+    /// consumer overwrites before reading, and preserving the length lets
+    /// `read_segment_into`'s resize skip the full zero-fill in steady
+    /// state).
+    pub fn take_bytes(&self, min_cap: usize) -> Vec<u8> {
+        let mut s = self.slabs.lock().unwrap();
+        match s.bytes.pop() {
+            Some(mut b) => {
+                s.stats.hits += 1;
+                s.stats.retained_bytes -= b.capacity() as u64;
+                drop(s);
+                if b.capacity() < min_cap {
+                    b.reserve(min_cap - b.len());
+                }
+                b
+            }
+            None => {
+                s.stats.misses += 1;
+                drop(s);
+                Vec::with_capacity(min_cap)
+            }
+        }
+    }
+
+    /// Return a byte buffer to the pool (dropped beyond the cap).
+    pub fn put_bytes(&self, b: Vec<u8>) {
+        self.retain(b.capacity() as u64, b, |s| &mut s.bytes);
+    }
+
+    /// Take empty CSR scratch whose sections can hold `rows` rows and
+    /// `nnz` stored entries without reallocating. Callers streaming a
+    /// planned segment sequence should pass the *plan-wide maxima* so the
+    /// first take already covers every later segment.
+    pub fn take_csr(&self, rows: usize, nnz: usize) -> Csr {
+        let popped = {
+            let mut s = self.slabs.lock().unwrap();
+            match s.csr.pop() {
+                Some(m) => {
+                    s.stats.hits += 1;
+                    s.stats.retained_bytes -= csr_slab_bytes(&m);
+                    Some(m)
+                }
+                None => {
+                    s.stats.misses += 1;
+                    None
+                }
+            }
+        };
+        let mut m = popped.unwrap_or_else(|| Csr::empty(0, 0));
+        reserve_csr(&mut m, rows, nnz);
+        m
+    }
+
+    /// Return CSR scratch to the pool (cleared; dropped beyond the cap).
+    pub fn put_csr(&self, mut m: Csr) {
+        m.nrows = 0;
+        m.ncols = 0;
+        m.rowptr.clear();
+        m.colidx.clear();
+        m.vals.clear();
+        let cost = csr_slab_bytes(&m);
+        self.retain(cost, m, |s| &mut s.csr);
+    }
+
+    /// Take a dense f32 panel of exactly `len` elements, zero-filled.
+    pub fn take_panel(&self, len: usize) -> Vec<f32> {
+        let popped = {
+            let mut s = self.slabs.lock().unwrap();
+            match s.panels.pop() {
+                Some(p) => {
+                    s.stats.hits += 1;
+                    s.stats.retained_bytes -= p.capacity() as u64 * 4;
+                    Some(p)
+                }
+                None => {
+                    s.stats.misses += 1;
+                    None
+                }
+            }
+        };
+        let mut p = popped.unwrap_or_default();
+        p.clear();
+        p.resize(len, 0.0);
+        p
+    }
+
+    /// Return a dense panel to the pool (cleared; dropped beyond the cap).
+    pub fn put_panel(&self, mut p: Vec<f32>) {
+        p.clear();
+        let cost = p.capacity() as u64 * 4;
+        self.retain(cost, p, |s| &mut s.panels);
+    }
+
+    /// Shared retention policy of every `put_*`: count the return, drop
+    /// the slab when retaining `cost` more bytes would exceed the cap,
+    /// else account it and push onto its free list.
+    fn retain<T>(&self, cost: u64, item: T, select: impl FnOnce(&mut Slabs) -> &mut Vec<T>) {
+        let mut s = self.slabs.lock().unwrap();
+        s.stats.returns += 1;
+        if s.stats.retained_bytes + cost > self.cap_bytes {
+            s.stats.drops += 1;
+            return;
+        }
+        s.stats.retained_bytes += cost;
+        s.stats.retained_peak_bytes = s.stats.retained_peak_bytes.max(s.stats.retained_bytes);
+        select(&mut *s).push(item);
+    }
+}
+
+/// Grow `m`'s sections so `rows` rows / `nnz` entries fit without
+/// reallocation. The vectors are empty here, so `reserve(n)` is a no-op
+/// whenever capacity already covers `n`.
+fn reserve_csr(m: &mut Csr, rows: usize, nnz: usize) {
+    debug_assert!(m.rowptr.is_empty() && m.colidx.is_empty() && m.vals.is_empty());
+    m.rowptr.reserve(rows + 1);
+    m.colidx.reserve(nnz);
+    m.vals.reserve(nnz);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_put_cycle_reuses_capacity() {
+        let pool = BufferPool::new(1 << 20);
+        let b = pool.take_bytes(1000);
+        assert_eq!(pool.stats().misses, 1);
+        let cap = b.capacity();
+        pool.put_bytes(b);
+        assert_eq!(pool.stats().returns, 1);
+        assert_eq!(pool.stats().retained_bytes, cap as u64);
+        let b2 = pool.take_bytes(500);
+        assert_eq!(pool.stats().hits, 1);
+        assert!(b2.capacity() >= cap, "smaller request reuses the big slab");
+        assert_eq!(pool.stats().retained_bytes, 0);
+    }
+
+    #[test]
+    fn csr_scratch_roundtrip_preserves_capacity_and_clears_contents() {
+        let pool = BufferPool::new(1 << 20);
+        let mut m = pool.take_csr(100, 400);
+        assert!(m.rowptr.capacity() >= 101);
+        assert!(m.colidx.capacity() >= 400 && m.vals.capacity() >= 400);
+        // Simulate a decode filling it.
+        m.nrows = 1;
+        m.ncols = 2;
+        m.rowptr.extend([0, 1]);
+        m.colidx.push(1);
+        m.vals.push(2.5);
+        pool.put_csr(m);
+        let m2 = pool.take_csr(10, 10);
+        assert_eq!((m2.nrows, m2.ncols, m2.nnz()), (0, 0, 0), "returned scratch is cleared");
+        assert!(m2.rowptr.is_empty());
+        assert!(m2.colidx.capacity() >= 400, "capacity survives the round trip");
+        assert_eq!(pool.stats().hits, 1);
+    }
+
+    #[test]
+    fn panels_come_back_zeroed_at_the_requested_length() {
+        let pool = BufferPool::new(1 << 20);
+        let mut p = pool.take_panel(8);
+        assert_eq!(p, vec![0.0; 8]);
+        p.iter_mut().for_each(|v| *v = 7.0);
+        pool.put_panel(p);
+        let p2 = pool.take_panel(5);
+        assert_eq!(p2, vec![0.0; 5], "reused panel is re-zeroed and resized");
+        assert_eq!(pool.stats().hits, 1);
+    }
+
+    #[test]
+    fn cap_bounds_retention_and_counts_drops() {
+        // Cap below one slab: every return is dropped, takes always miss.
+        let pool = BufferPool::new(16);
+        let b = pool.take_bytes(1024);
+        pool.put_bytes(b);
+        let st = pool.stats();
+        assert_eq!(st.drops, 1);
+        assert_eq!(st.retained_bytes, 0);
+        let _ = pool.take_bytes(8);
+        assert_eq!(pool.stats().misses, 2, "dropped slab cannot be reused");
+
+        // Cap of zero is the degenerate always-fresh pool.
+        let fresh = BufferPool::new(0);
+        fresh.put_panel(vec![1.0; 64]);
+        assert_eq!(fresh.stats().drops, 1);
+        assert_eq!(fresh.stats().retained_bytes, 0);
+    }
+
+    #[test]
+    fn retained_peak_tracks_high_water() {
+        let pool = BufferPool::new(1 << 20);
+        let a = pool.take_bytes(1000);
+        let b = pool.take_bytes(2000);
+        let (ca, cb) = (a.capacity() as u64, b.capacity() as u64);
+        pool.put_bytes(a);
+        pool.put_bytes(b);
+        assert_eq!(pool.stats().retained_peak_bytes, ca + cb);
+        let _ = pool.take_bytes(1);
+        assert_eq!(pool.stats().retained_peak_bytes, ca + cb, "peak is monotone");
+        assert!(pool.stats().retained_bytes < ca + cb);
+    }
+
+    #[test]
+    fn pool_is_shareable_across_threads() {
+        let pool = BufferPool::new(1 << 20);
+        std::thread::scope(|s| {
+            let p = &pool;
+            s.spawn(move || {
+                for _ in 0..100 {
+                    p.put_bytes(p.take_bytes(256));
+                }
+            });
+            for _ in 0..100 {
+                pool.put_csr(pool.take_csr(16, 64));
+            }
+        });
+        let st = pool.stats();
+        assert_eq!(st.hits + st.misses, 200);
+        assert_eq!(st.returns, 200);
+    }
+}

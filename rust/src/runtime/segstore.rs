@@ -14,13 +14,23 @@
 //! patterns — and therefore [`CacheStats`] — are identical at every
 //! prefetch depth and thread count (asserted in
 //! `rust/tests/differential.rs`).
+//!
+//! Resident segments are `Arc`-shared: a cache hit hands out a reference
+//! to the resident matrix instead of deep-copying its three sections (the
+//! defensive clone the pre-recycling path paid on every warm read), and a
+//! miss that lands in the cache shares the freshly decoded buffers the
+//! same way. Reads that bypass the cache return an owned [`Csr`] the
+//! consumer can hand back to the staging pipeline's
+//! [`BufferPool`](crate::runtime::recycle::BufferPool) — see
+//! [`SegmentRead`].
 
-use crate::partition::robw::{materialize, RobwSegment};
+use crate::partition::robw::{calc_mem, materialize, RobwSegment};
+use crate::runtime::recycle::BufferPool;
 use crate::sparse::segio::{self, Fnv64, SegioError};
 use crate::sparse::Csr;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Host-cache capacity meaning "no bound": every decoded segment stays
 /// resident (the whole matrix ends up in host RAM, like the in-memory
@@ -70,13 +80,61 @@ pub struct ReadOrigin {
     pub cache_hit: bool,
 }
 
+/// A served segment: either an owned matrix (cache-bypassing read — its
+/// buffers can be handed back to the staging pipeline's recycle pool) or
+/// a shared reference to a cache-resident matrix (no copy was made; the
+/// bytes belong to the host tier).
+#[derive(Debug, Clone)]
+pub enum SegmentRead {
+    /// Owned decoded segment; [`SegmentRead::reclaim`] yields its buffers.
+    Owned(Csr),
+    /// Cache-resident segment, shared without a defensive clone.
+    Shared(Arc<Csr>),
+}
+
+impl SegmentRead {
+    /// The decoded matrix, however it is held.
+    pub fn csr(&self) -> &Csr {
+        match self {
+            SegmentRead::Owned(m) => m,
+            SegmentRead::Shared(m) => m,
+        }
+    }
+
+    /// Recover the owned buffers for recycling — `None` when the matrix
+    /// is cache-resident (its buffers keep serving future hits).
+    pub fn reclaim(self) -> Option<Csr> {
+        match self {
+            SegmentRead::Owned(m) => Some(m),
+            SegmentRead::Shared(_) => None,
+        }
+    }
+
+    /// Clone out an owned matrix (test/tool convenience; copies on the
+    /// shared variant).
+    pub fn into_csr(self) -> Csr {
+        match self {
+            SegmentRead::Owned(m) => m,
+            SegmentRead::Shared(m) => (*m).clone(),
+        }
+    }
+}
+
+impl std::ops::Deref for SegmentRead {
+    type Target = Csr;
+
+    fn deref(&self) -> &Csr {
+        self.csr()
+    }
+}
+
 #[derive(Debug, Default)]
 struct HostCache {
     /// Byte bound (0 disables the tier entirely).
     capacity: u64,
     used: u64,
-    /// Decoded segments keyed by index.
-    entries: HashMap<usize, Csr>,
+    /// Decoded segments keyed by index, shared with in-flight readers.
+    entries: HashMap<usize, Arc<Csr>>,
     /// LRU order: front = coldest, back = hottest.
     order: Vec<usize>,
     stats: CacheStats,
@@ -90,10 +148,13 @@ impl HostCache {
         self.order.push(idx);
     }
 
-    fn insert(&mut self, idx: usize, m: Csr) {
+    /// Insert a decoded segment, evicting LRU entries to stay within the
+    /// bound. Returns `false` when the tier is disabled or the segment
+    /// alone exceeds it (the caller then keeps sole ownership).
+    fn insert(&mut self, idx: usize, m: Arc<Csr>) -> bool {
         let cost = m.size_bytes();
         if self.capacity == 0 || cost > self.capacity {
-            return; // tier disabled, or the segment alone exceeds the bound
+            return false; // tier disabled, or the segment alone exceeds the bound
         }
         while self.used + cost > self.capacity {
             let coldest = self.order.remove(0);
@@ -105,6 +166,7 @@ impl HostCache {
         self.entries.insert(idx, m);
         self.order.push(idx);
         self.stats.resident_bytes = self.used;
+        true
     }
 }
 
@@ -119,6 +181,17 @@ impl HostCache {
 pub struct SegmentStore {
     dir: PathBuf,
     segs: Vec<SegmentMeta>,
+    /// Largest encoded segment file — the byte-scratch capacity that
+    /// covers every read, so a recycled scratch buffer never regrows
+    /// mid-stream.
+    max_file_bytes: u64,
+    /// Largest segment row count (scratch hint, precomputed once).
+    max_seg_rows: usize,
+    /// Largest segment nnz (scratch hint, precomputed once).
+    max_seg_nnz: usize,
+    /// Immutable copy of the host tier's byte bound, readable without the
+    /// cache lock (cacheability prediction in [`Self::read_reusing`]).
+    cache_capacity: u64,
     cache: Mutex<HostCache>,
 }
 
@@ -276,9 +349,16 @@ impl SegmentStore {
     }
 
     fn with_metas(dir: PathBuf, segs: Vec<SegmentMeta>, host_cache_bytes: u64) -> SegmentStore {
+        let max_file_bytes = segs.iter().map(|m| m.file_bytes).max().unwrap_or(0);
+        let max_seg_rows = segs.iter().map(|m| m.row_hi - m.row_lo).max().unwrap_or(0);
+        let max_seg_nnz = segs.iter().map(|m| m.nnz).max().unwrap_or(0);
         SegmentStore {
             dir,
             segs,
+            max_file_bytes,
+            max_seg_rows,
+            max_seg_nnz,
+            cache_capacity: host_cache_bytes,
             cache: Mutex::new(HostCache {
                 capacity: host_cache_bytes,
                 ..HostCache::default()
@@ -338,28 +418,104 @@ impl SegmentStore {
     /// (checksum-verified), updating the LRU state either way. The
     /// returned [`ReadOrigin`] reports the *measured* disk bytes — the
     /// number the staging layer charges instead of a simulated sleep.
-    pub fn read(&self, i: usize) -> Result<(Csr, ReadOrigin), SegioError> {
+    ///
+    /// A cache hit shares the resident matrix ([`SegmentRead::Shared`])
+    /// instead of deep-copying it; a miss that lands in the cache shares
+    /// the freshly decoded buffers the same way, and a miss the cache
+    /// refuses (tier disabled or segment too big) is handed over owned.
+    pub fn read(&self, i: usize) -> Result<(SegmentRead, ReadOrigin), SegioError> {
+        self.read_reusing(i, None, None)
+    }
+
+    /// [`Self::read`] with recycled buffers: `reuse` is a drained segment
+    /// scratch from the pipeline's return channel (decoded into in place),
+    /// and `pool` supplies byte/CSR scratch when `reuse` is absent and
+    /// retires the producer-side byte buffer after the decode. With both
+    /// warm and the host tier disabled, a read performs zero heap
+    /// allocations beyond kernel I/O (`rust/tests/alloc_free.rs`).
+    /// Byte-for-byte the served matrix is identical to [`Self::read`]'s.
+    pub fn read_reusing(
+        &self,
+        i: usize,
+        reuse: Option<Csr>,
+        pool: Option<&BufferPool>,
+    ) -> Result<(SegmentRead, ReadOrigin), SegioError> {
         let meta = &self.segs[i];
         {
             let mut cache = self.cache.lock().unwrap();
             if let Some(m) = cache.entries.get(&i) {
-                let m = m.clone();
+                let m = Arc::clone(m);
                 cache.touch(i);
                 cache.stats.hits += 1;
-                return Ok((m, ReadOrigin { disk_bytes: 0, cache_hit: true }));
+                drop(cache);
+                // The drained scratch is not needed for a resident read;
+                // keep it circulating rather than dropping it.
+                if let (Some(m), Some(pool)) = (reuse, pool) {
+                    pool.put_csr(m);
+                }
+                return Ok((SegmentRead::Shared(m), ReadOrigin { disk_bytes: 0, cache_hit: true }));
             }
         }
         // Disk read outside the lock: the producer is the only reader in
         // the pipeline, but `&self` reads must never serialize on I/O.
-        let (m, bytes) = segio::read_segment(&meta.path)?;
+        // A read that will land in the host tier donates its buffers to
+        // the cache (the consumer gets a Shared view and reclaims
+        // nothing), so burning pooled plan-maxima scratch on it would
+        // drain the pool for good and then pay a shrink copy — predict
+        // cacheability from the manifest (exactly the decoded size, by
+        // construction) and decode into exact-size fresh sections instead.
+        let decoded_bytes = calc_mem(meta.row_hi - meta.row_lo, meta.nnz);
+        let likely_cached = self.cache_capacity > 0 && decoded_bytes <= self.cache_capacity;
+        // Otherwise: the recycled hand-back first, the pool second, a
+        // fresh allocation last. Hints are store-wide maxima (precomputed
+        // once) so capacities reach their high-water mark on first use
+        // and never regrow mid-stream.
+        let mut m = if likely_cached {
+            if let (Some(m), Some(pool)) = (reuse, pool) {
+                // Keep the drained scratch circulating for later
+                // non-cacheable reads instead of dropping it.
+                pool.put_csr(m);
+            }
+            Csr::empty(0, 0)
+        } else {
+            match (reuse, pool) {
+                (Some(m), _) => m,
+                (None, Some(pool)) => pool.take_csr(self.max_seg_rows, self.max_seg_nnz),
+                (None, None) => Csr::empty(0, 0),
+            }
+        };
+        let mut scratch = match pool {
+            Some(pool) => pool.take_bytes(self.max_file_bytes as usize),
+            None => Vec::new(),
+        };
+        let read = segio::read_segment_into(&meta.path, &mut scratch, &mut m);
+        if let Some(pool) = pool {
+            pool.put_bytes(scratch);
+        }
+        // On any failure the plan-maxima-sized scratch goes back to the
+        // pool (like the byte scratch above) so a retried pass does not
+        // re-warm it.
+        let bytes = match read {
+            Ok(b) => b,
+            Err(e) => {
+                if let Some(pool) = pool {
+                    pool.put_csr(m);
+                }
+                return Err(e);
+            }
+        };
         if m.nrows != meta.row_hi - meta.row_lo || m.nnz() != meta.nnz {
-            return Err(SegioError::InvalidCsr(format!(
+            let err = SegioError::InvalidCsr(format!(
                 "segment {i} decoded to {} rows / {} nnz, manifest says {} rows / {} nnz",
                 m.nrows,
                 m.nnz(),
                 meta.row_hi - meta.row_lo,
                 meta.nnz
-            )));
+            ));
+            if let Some(pool) = pool {
+                pool.put_csr(m);
+            }
+            return Err(err);
         }
         let mut cache = self.cache.lock().unwrap();
         cache.stats.misses += 1;
@@ -367,11 +523,27 @@ impl SegmentStore {
         // A concurrent reader may have inserted `i` while we were on
         // disk (the lock is dropped around the read); inserting again
         // would double-count `used` and duplicate the LRU entry.
-        if !cache.entries.contains_key(&i) {
-            cache.insert(i, m.clone());
-        }
+        // Decide cacheability *before* Arc-wrapping: the cache-disabled
+        // path must stay free of per-segment allocations.
+        let cacheable = cache.capacity > 0 && m.size_bytes() <= cache.capacity;
+        let result = if cache.entries.contains_key(&i) || !cacheable {
+            SegmentRead::Owned(m)
+        } else {
+            // The cache is charged the *logical* size, so a resident
+            // entry must not keep pinning plan-wide scratch capacity —
+            // shrink before sharing (this buffer is being donated to the
+            // cache, not returned to the pool, so no warm capacity is
+            // lost).
+            m.rowptr.shrink_to_fit();
+            m.colidx.shrink_to_fit();
+            m.vals.shrink_to_fit();
+            let shared = Arc::new(m);
+            let inserted = cache.insert(i, Arc::clone(&shared));
+            debug_assert!(inserted, "cacheability was checked above");
+            SegmentRead::Shared(shared)
+        };
         cache.stats.resident_bytes = cache.used;
-        Ok((m, ReadOrigin { disk_bytes: bytes, cache_hit: false }))
+        Ok((result, ReadOrigin { disk_bytes: bytes, cache_hit: false }))
     }
 }
 
@@ -405,7 +577,8 @@ mod tests {
         let store = SegmentStore::spill(&a, &segs, dir.path(), UNBOUNDED_CACHE).unwrap();
         assert_eq!(store.len(), segs.len());
         store.check_plan(&segs).unwrap();
-        let parts: Vec<Csr> = (0..store.len()).map(|i| store.read(i).unwrap().0).collect();
+        let parts: Vec<Csr> =
+            (0..store.len()).map(|i| store.read(i).unwrap().0.into_csr()).collect();
         assert_eq!(Csr::vstack(&parts).unwrap(), a);
     }
 
@@ -436,11 +609,12 @@ mod tests {
         let segs = robw_partition(&a, 600);
         let dir = TempDir::new("segstore-warm");
         let store = SegmentStore::spill(&a, &segs, dir.path(), UNBOUNDED_CACHE).unwrap();
-        let first: Vec<Csr> = (0..store.len()).map(|i| store.read(i).unwrap().0).collect();
+        let first: Vec<Csr> =
+            (0..store.len()).map(|i| store.read(i).unwrap().0.into_csr()).collect();
         let disk_after_first = store.stats().disk_bytes;
         for (i, want) in first.iter().enumerate() {
             let (m, origin) = store.read(i).unwrap();
-            assert_eq!(&m, want);
+            assert_eq!(m.csr(), want);
             assert!(origin.cache_hit, "segment {i} must be resident");
             assert_eq!(origin.disk_bytes, 0);
         }
@@ -496,21 +670,22 @@ mod tests {
             mtime,
             "byte-valid fixture must be reused, not rewritten"
         );
-        let whole: Vec<Csr> = (0..s2.len()).map(|i| s2.read(i).unwrap().0).collect();
+        let whole: Vec<Csr> = (0..s2.len()).map(|i| s2.read(i).unwrap().0.into_csr()).collect();
         assert_eq!(Csr::vstack(&whole).unwrap(), a);
         // Truncate one file: the size check must force a respill.
         let victim = s2.meta(1).path.clone();
         let bytes = std::fs::read(&victim).unwrap();
         std::fs::write(&victim, &bytes[..bytes.len() - 3]).unwrap();
         let s3 = SegmentStore::open_or_spill(&a, &segs, dir.path(), 0).unwrap();
-        let whole: Vec<Csr> = (0..s3.len()).map(|i| s3.read(i).unwrap().0).collect();
+        let whole: Vec<Csr> = (0..s3.len()).map(|i| s3.read(i).unwrap().0.into_csr()).collect();
         assert_eq!(Csr::vstack(&whole).unwrap(), a, "respilled store serves good bytes");
         // A plan with a different segment count is never silently reused.
         let coarse = robw_partition(&a, u64::MAX / 8);
         assert_ne!(coarse.len(), segs.len());
         let s4 = SegmentStore::open_or_spill(&a, &coarse, dir.path(), 0).unwrap();
         assert_eq!(s4.len(), coarse.len());
-        assert_eq!(s4.read(0).unwrap().0, a, "single coarse segment is the whole matrix");
+        let coarse_read = s4.read(0).unwrap().0.into_csr();
+        assert_eq!(coarse_read, a, "single coarse segment is the whole matrix");
     }
 
     #[test]
@@ -527,7 +702,7 @@ mod tests {
         let dir = TempDir::new("segstore-fp");
         SegmentStore::spill(&a, &segs, dir.path(), 0).unwrap();
         let sb = SegmentStore::open_or_spill(&b, &segs, dir.path(), 0).unwrap();
-        let parts: Vec<Csr> = (0..sb.len()).map(|i| sb.read(i).unwrap().0).collect();
+        let parts: Vec<Csr> = (0..sb.len()).map(|i| sb.read(i).unwrap().0.into_csr()).collect();
         assert_eq!(Csr::vstack(&parts).unwrap(), b, "store must serve b, not the stale a");
     }
 
@@ -542,7 +717,8 @@ mod tests {
         std::fs::write(dir.path().join("fingerprint"), 0u64.to_le_bytes()).unwrap();
         std::fs::write(SegmentStore::seg_path(dir.path(), 0), b"partial").unwrap();
         let store = SegmentStore::open_or_spill(&a, &segs, dir.path(), 0).unwrap();
-        let parts: Vec<Csr> = (0..store.len()).map(|i| store.read(i).unwrap().0).collect();
+        let parts: Vec<Csr> =
+            (0..store.len()).map(|i| store.read(i).unwrap().0.into_csr()).collect();
         assert_eq!(Csr::vstack(&parts).unwrap(), a);
     }
 

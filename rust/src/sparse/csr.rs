@@ -191,16 +191,40 @@ impl Csr {
         }
     }
 
+    /// Slice rows `[lo, hi)` into caller-owned scratch: `out`'s sections
+    /// are cleared and refilled in place, so a slice whose sections fit
+    /// the scratch capacity performs zero heap allocations — the
+    /// in-memory-staging counterpart of `segio::decode_segment_into`.
+    pub fn slice_rows_into(&self, lo: usize, hi: usize, out: &mut Csr) {
+        assert!(lo <= hi && hi <= self.nrows);
+        let base = self.rowptr[lo];
+        let end = self.rowptr[hi];
+        out.nrows = hi - lo;
+        out.ncols = self.ncols;
+        out.rowptr.clear();
+        out.rowptr.reserve(hi - lo + 1);
+        out.rowptr.extend(self.rowptr[lo..=hi].iter().map(|p| p - base));
+        out.colidx.clear();
+        out.colidx.extend_from_slice(&self.colidx[base..end]);
+        out.vals.clear();
+        out.vals.extend_from_slice(&self.vals[base..end]);
+    }
+
     /// Vertically concatenate row slices (inverse of `slice_rows`; the
     /// "merge" operation the naive partitioner is forced to perform).
+    /// Output sections are pre-sized from the parts' totals, so assembly
+    /// never regrows mid-concatenation.
     pub fn vstack(parts: &[Csr]) -> Result<Csr, String> {
         if parts.is_empty() {
             return Err("vstack of nothing".into());
         }
         let ncols = parts[0].ncols;
-        let mut rowptr = vec![0usize];
-        let mut colidx = Vec::new();
-        let mut vals = Vec::new();
+        let total_rows: usize = parts.iter().map(|p| p.nrows).sum();
+        let total_nnz: usize = parts.iter().map(|p| p.nnz()).sum();
+        let mut rowptr = Vec::with_capacity(total_rows + 1);
+        rowptr.push(0usize);
+        let mut colidx = Vec::with_capacity(total_nnz);
+        let mut vals = Vec::with_capacity(total_nnz);
         let mut nrows = 0;
         for p in parts {
             if p.ncols != ncols {
@@ -269,6 +293,22 @@ mod tests {
             vec![a.slice_rows(0, 7), a.slice_rows(7, 7), a.slice_rows(7, 15), a.slice_rows(15, 20)];
         let merged = Csr::vstack(&parts).unwrap();
         assert_eq!(a, merged);
+    }
+
+    #[test]
+    fn slice_rows_into_matches_slice_rows_and_reuses_scratch() {
+        let mut rng = Pcg::seed(3);
+        let a = random_csr(&mut rng, 30, 11, 0.3);
+        let mut scratch = Csr::empty(0, 0);
+        for (lo, hi) in [(0usize, 12usize), (12, 12), (5, 30), (0, 30)] {
+            a.slice_rows_into(lo, hi, &mut scratch);
+            assert_eq!(scratch, a.slice_rows(lo, hi), "rows [{lo}, {hi})");
+        }
+        // A stale, larger previous slice must be fully overwritten.
+        a.slice_rows_into(0, 30, &mut scratch);
+        a.slice_rows_into(10, 13, &mut scratch);
+        assert_eq!(scratch, a.slice_rows(10, 13));
+        scratch.validate().unwrap();
     }
 
     #[test]

@@ -210,8 +210,43 @@ pub fn encode_segment(m: &Csr) -> Vec<u8> {
 /// Decode a segment buffer back into a [`Csr`], verifying magic, version,
 /// both checksums, section lengths, and the CSR invariants. The exact
 /// inverse of [`encode_segment`]: `decode(encode(m)) == m` for every valid
-/// CSR (property-tested across all operand families).
+/// CSR (property-tested across all operand families). Allocates fresh
+/// section vectors; the streaming hot loop uses [`decode_segment_into`]
+/// with recycled scratch instead.
 pub fn decode_segment(buf: &[u8]) -> Result<Csr, SegioError> {
+    let mut m = Csr::empty(0, 0);
+    decode_segment_into(buf, &mut m)?;
+    Ok(m)
+}
+
+/// [`decode_segment`] into caller-owned scratch: `out`'s section vectors
+/// are cleared and refilled in place, so a decode whose sections fit the
+/// scratch capacity performs **zero heap allocations** — the per-segment
+/// contract of the recycled staging path (`rust/tests/alloc_free.rs`).
+/// Verification is identical to [`decode_segment`]. On error `out` is
+/// reset to a valid empty 0×0 matrix (never left holding partial
+/// sections).
+pub fn decode_segment_into(buf: &[u8], out: &mut Csr) -> Result<(), SegioError> {
+    let result = decode_into_raw(buf, out);
+    if result.is_err() {
+        out.nrows = 0;
+        out.ncols = 0;
+        out.rowptr.clear();
+        out.rowptr.push(0);
+        out.colidx.clear();
+        out.vals.clear();
+    }
+    result
+}
+
+/// Decode body: clears and refills `out`; may leave it partially written
+/// on error (the public wrapper resets it).
+fn decode_into_raw(buf: &[u8], out: &mut Csr) -> Result<(), SegioError> {
+    out.nrows = 0;
+    out.ncols = 0;
+    out.rowptr.clear();
+    out.colidx.clear();
+    out.vals.clear();
     if buf.len() < HEADER_BYTES {
         return Err(SegioError::Truncated { need: HEADER_BYTES as u64, got: buf.len() as u64 });
     }
@@ -272,23 +307,25 @@ pub fn decode_segment(buf: &[u8]) -> Result<Csr, SegioError> {
     }
 
     let mut off = 0usize;
-    let mut rowptr = Vec::with_capacity(nrows + 1);
+    out.rowptr.reserve(nrows + 1);
     for _ in 0..=nrows {
-        rowptr.push(get_u64(payload, off) as usize);
+        out.rowptr.push(get_u64(payload, off) as usize);
         off += 8;
     }
-    let mut colidx = Vec::with_capacity(nnz);
+    out.colidx.reserve(nnz);
     for _ in 0..nnz {
-        colidx.push(get_u32(payload, off));
+        out.colidx.push(get_u32(payload, off));
         off += 4;
     }
-    let mut vals = Vec::with_capacity(nnz);
+    out.vals.reserve(nnz);
     for _ in 0..nnz {
-        vals.push(f32::from_bits(get_u32(payload, off)));
+        out.vals.push(f32::from_bits(get_u32(payload, off)));
         off += 4;
     }
     debug_assert_eq!(off, payload.len());
-    Csr::new(nrows, ncols, rowptr, colidx, vals).map_err(SegioError::InvalidCsr)
+    out.nrows = nrows;
+    out.ncols = ncols;
+    out.validate().map_err(SegioError::InvalidCsr)
 }
 
 /// Write one encoded segment to `path`. Returns the bytes written.
@@ -304,13 +341,40 @@ pub fn write_segment(path: &Path, m: &Csr) -> Result<u64, SegioError> {
 /// byte count (the *measured* I/O the staging layer charges, as opposed
 /// to the planner's estimate).
 pub fn read_segment(path: &Path) -> Result<(Csr, u64), SegioError> {
+    let mut scratch = Vec::new();
+    let mut m = Csr::empty(0, 0);
+    let bytes = read_segment_into(path, &mut scratch, &mut m)?;
+    Ok((m, bytes))
+}
+
+/// [`read_segment`] into caller-owned buffers: the file bytes land in
+/// `scratch` (cleared and sized to the file) and the decoded matrix in
+/// `out`'s recycled sections. Once both have reached the stream's
+/// high-water capacity, a read performs no heap allocation beyond the
+/// kernel I/O itself — the producer-side half of the allocation-free
+/// staging contract. Returns the measured file byte count.
+pub fn read_segment_into(
+    path: &Path,
+    scratch: &mut Vec<u8>,
+    out: &mut Csr,
+) -> Result<u64, SegioError> {
     let mut f = std::fs::File::open(path)
         .map_err(|e| SegioError::Io(format!("open {}: {e}", path.display())))?;
-    let mut buf = Vec::new();
-    f.read_to_end(&mut buf)
+    // Size from metadata + read_exact (not read_to_end): read_to_end's
+    // EOF probe can reallocate even when the scratch capacity already
+    // covers the file, which would break the zero-allocation steady state.
+    let len = f
+        .metadata()
+        .map_err(|e| SegioError::Io(format!("stat {}: {e}", path.display())))?
+        .len() as usize;
+    // resize without a prior clear: read_exact overwrites every byte, so
+    // only the grown tail (usually empty in steady state) needs the
+    // zero-fill — no full memset per staged segment.
+    scratch.resize(len, 0);
+    f.read_exact(scratch)
         .map_err(|e| SegioError::Io(format!("read {}: {e}", path.display())))?;
-    let m = decode_segment(&buf)?;
-    Ok((m, buf.len() as u64))
+    decode_segment_into(scratch, out)?;
+    Ok(len as u64)
 }
 
 #[cfg(test)]

@@ -1,14 +1,34 @@
 //! SpMM: CSR × dense — the aggregation step (Eq. 1) when the feature panel
 //! is materialized densely, and the CPU oracle for the `bsr_spmm` artifact.
 //!
+//! The inner loops are a **lane-blocked microkernel** (the GE-SpMM /
+//! Accel-GCN feature-dimension blocking, arXiv:2007.03179 /
+//! arXiv:2308.11825, at CPU scale): the feature dimension is walked in
+//! fixed [`SPMM_LANES`]-wide blocks with a scalar-width tail, each block's
+//! partial sums living in a register-resident accumulator array across the
+//! whole sparse row, and row slicing hoisted out of the nnz loop. Each
+//! output element still receives exactly the serial sequence of
+//! `acc += a_ik * h_kj` operations in `k` (row) order, so the blocked
+//! kernels are **bit-identical** to the scalar loops they replaced
+//! (enforced against an in-test scalar oracle in
+//! `rust/tests/differential.rs`).
+//!
 //! `spmm_par` / `spmm_transpose_par` are the row-range parallel variants on
 //! [`crate::runtime::pool::Pool`]: fixed contiguous output-row partitions,
 //! one writer per row, serial per-row arithmetic order — byte-identical to
-//! the serial oracles at every thread count.
+//! the serial oracles at every thread count. `spmm_into` / `spmm_par_into`
+//! write into a caller-owned destination (the pass-wide aggregation panel
+//! of `OocGcnLayer::forward_streamed`), eliminating the per-segment partial
+//! allocation the streaming hot loop used to pay.
 
 use crate::runtime::pool::Pool;
 
 use super::Csr;
+
+/// Feature-dimension block width of the SpMM microkernel. Eight f32 lanes
+/// fill two SSE / one AVX register; the accumulator array is a fixed-size
+/// stack array the compiler keeps in registers across the sparse row.
+pub const SPMM_LANES: usize = 8;
 
 /// Dense row-major matrix, the interchange type between the sparse substrate
 /// and the PJRT runtime (which consumes flat f32 buffers).
@@ -53,12 +73,15 @@ impl Dense {
 
     /// Sparsify into CSR, dropping |v| <= eps (the paper's output is
     /// CSR C; the accelerator path produces dense row blocks that are
-    /// re-compressed before leaving the device working set).
+    /// re-compressed before leaving the device working set). A counting
+    /// pass sizes the index/value sections exactly up front, so the Phase
+    /// III packaging loop never regrows them from empty.
     pub fn to_csr(&self, eps: f32) -> super::Csr {
+        let nnz = self.data.iter().filter(|v| v.abs() > eps).count();
         let mut rowptr = Vec::with_capacity(self.nrows + 1);
         rowptr.push(0usize);
-        let mut colidx = Vec::new();
-        let mut vals = Vec::new();
+        let mut colidx = Vec::with_capacity(nnz);
+        let mut vals = Vec::with_capacity(nnz);
         for r in 0..self.nrows {
             for (c, &v) in self.row(r).iter().enumerate() {
                 if v.abs() > eps {
@@ -82,42 +105,112 @@ impl Dense {
     }
 }
 
-/// out = A · H, A in CSR, H dense. Row-major streaming: one pass over nnz.
-pub fn spmm(a: &Csr, h: &Dense) -> Dense {
-    assert_eq!(a.ncols, h.nrows, "inner dimension mismatch");
+/// Lane-blocked microkernel for one output row: `orow = A[i, :] · H`,
+/// overwriting `orow` entirely (rows with no stored entries become zero).
+///
+/// The feature dimension is walked in [`SPMM_LANES`]-wide blocks with a
+/// narrower tail; each block keeps its partial sums in a fixed stack
+/// accumulator across the whole sparse row, loading/storing the output
+/// once per block instead of once per non-zero. Row slicing (`rowptr`
+/// lookup, section slices) is hoisted out of the nnz loop. Per output
+/// element the f32 operation sequence is exactly the scalar kernel's
+/// (`acc += a_ik * h_kj` in stored-`k` order), so results are
+/// bit-identical to the pre-blocking loops.
+#[inline]
+fn spmm_row_into(a: &Csr, h: &Dense, i: usize, orow: &mut [f32]) {
     let f = h.ncols;
-    let mut out = Dense::zeros(a.nrows, f);
-    for i in 0..a.nrows {
-        let orow = &mut out.data[i * f..(i + 1) * f];
-        for (k, av) in a.row(i) {
-            let hrow = h.row(k as usize);
-            for (o, &hv) in orow.iter_mut().zip(hrow.iter()) {
-                *o += av * hv;
+    let lo = a.rowptr[i];
+    let hi = a.rowptr[i + 1];
+    let cols = &a.colidx[lo..hi];
+    let vals = &a.vals[lo..hi];
+    let mut j = 0usize;
+    while j + SPMM_LANES <= f {
+        let mut acc = [0f32; SPMM_LANES];
+        for (&k, &av) in cols.iter().zip(vals.iter()) {
+            let base = k as usize * f + j;
+            let hblk = &h.data[base..base + SPMM_LANES];
+            for l in 0..SPMM_LANES {
+                acc[l] += av * hblk[l];
             }
         }
+        orow[j..j + SPMM_LANES].copy_from_slice(&acc);
+        j += SPMM_LANES;
     }
+    if j < f {
+        // Scalar-width tail: same accumulator discipline, partial block.
+        let t = f - j;
+        let mut acc = [0f32; SPMM_LANES];
+        for (&k, &av) in cols.iter().zip(vals.iter()) {
+            let base = k as usize * f + j;
+            let hblk = &h.data[base..base + t];
+            for (al, &hv) in acc[..t].iter_mut().zip(hblk.iter()) {
+                *al += av * hv;
+            }
+        }
+        orow[j..f].copy_from_slice(&acc[..t]);
+    }
+}
+
+/// Lane-blocked `orow += av * hrow` (the transpose kernel's scatter step):
+/// [`SPMM_LANES`]-wide unrolled blocks with a scalar tail. Element order
+/// within the row is ascending either way, so this is bit-identical to the
+/// scalar zip loop it replaced.
+#[inline]
+fn axpy_lanes(orow: &mut [f32], hrow: &[f32], av: f32) {
+    let mut ob = orow.chunks_exact_mut(SPMM_LANES);
+    let mut hb = hrow.chunks_exact(SPMM_LANES);
+    for (o, hc) in ob.by_ref().zip(hb.by_ref()) {
+        for l in 0..SPMM_LANES {
+            o[l] += av * hc[l];
+        }
+    }
+    for (o, &hv) in ob.into_remainder().iter_mut().zip(hb.remainder().iter()) {
+        *o += av * hv;
+    }
+}
+
+/// out = A · H, A in CSR, H dense. Row-major streaming: one pass over nnz
+/// through the lane-blocked microkernel.
+pub fn spmm(a: &Csr, h: &Dense) -> Dense {
+    let mut out = Dense::zeros(a.nrows, h.ncols);
+    spmm_into(a, h, &mut out.data);
     out
 }
 
-/// Row-parallel `out = A · H`: output rows are split into one contiguous
-/// chunk per pool worker; each worker runs the serial inner loop over its
-/// rows. Byte-identical to [`spmm`] (same per-row accumulation order).
-pub fn spmm_par(a: &Csr, h: &Dense, pool: &Pool) -> Dense {
+/// [`spmm`] into a caller-owned destination: `out` must hold exactly
+/// `a.nrows * h.ncols` row-major elements and is **overwritten** (no
+/// pre-zeroing needed). This is how the streaming forward pass computes
+/// each segment's partial directly into its row range of the pass-wide
+/// aggregation panel instead of allocating a fresh partial per segment.
+pub fn spmm_into(a: &Csr, h: &Dense, out: &mut [f32]) {
     assert_eq!(a.ncols, h.nrows, "inner dimension mismatch");
     let f = h.ncols;
-    let mut out = Dense::zeros(a.nrows, f);
-    pool.for_each_row_chunk(&mut out.data, f, |range, chunk| {
+    assert_eq!(out.len(), a.nrows * f, "destination shape mismatch");
+    for i in 0..a.nrows {
+        spmm_row_into(a, h, i, &mut out[i * f..(i + 1) * f]);
+    }
+}
+
+/// Row-parallel `out = A · H`: output rows are split into one contiguous
+/// chunk per pool worker; each worker runs the serial lane-blocked kernel
+/// over its rows. Byte-identical to [`spmm`] (same per-row accumulation
+/// order).
+pub fn spmm_par(a: &Csr, h: &Dense, pool: &Pool) -> Dense {
+    let mut out = Dense::zeros(a.nrows, h.ncols);
+    spmm_par_into(a, h, pool, &mut out.data);
+    out
+}
+
+/// [`spmm_par`] into a caller-owned destination (see [`spmm_into`]).
+pub fn spmm_par_into(a: &Csr, h: &Dense, pool: &Pool, out: &mut [f32]) {
+    assert_eq!(a.ncols, h.nrows, "inner dimension mismatch");
+    let f = h.ncols;
+    assert_eq!(out.len(), a.nrows * f, "destination shape mismatch");
+    pool.for_each_row_chunk(out, f, |range, chunk| {
         for (local, i) in range.clone().enumerate() {
-            let orow = &mut chunk[local * f..(local + 1) * f];
-            for (k, av) in a.row(i) {
-                let hrow = h.row(k as usize);
-                for (o, &hv) in orow.iter_mut().zip(hrow.iter()) {
-                    *o += av * hv;
-                }
-            }
+            spmm_row_into(a, h, i, &mut chunk[local * f..(local + 1) * f]);
         }
     });
-    out
 }
 
 /// out = Aᵀ · H without materializing Aᵀ (scatter form) — backward pass of
@@ -130,9 +223,7 @@ pub fn spmm_transpose(a: &Csr, h: &Dense) -> Dense {
         let hrow = h.row(i);
         for (k, av) in a.row(i) {
             let orow = &mut out.data[k as usize * f..(k as usize + 1) * f];
-            for (o, &hv) in orow.iter_mut().zip(hrow.iter()) {
-                *o += av * hv;
-            }
+            axpy_lanes(orow, hrow, av);
         }
     }
     out
@@ -163,10 +254,7 @@ pub fn spmm_transpose_par(a: &Csr, h: &Dense, pool: &Pool) -> Dense {
                     continue;
                 }
                 let local = k - range.start;
-                let orow = &mut chunk[local * f..(local + 1) * f];
-                for (o, &hv) in orow.iter_mut().zip(hrow.iter()) {
-                    *o += av * hv;
-                }
+                axpy_lanes(&mut chunk[local * f..(local + 1) * f], hrow, av);
             }
         }
     });
@@ -175,7 +263,10 @@ pub fn spmm_transpose_par(a: &Csr, h: &Dense, pool: &Pool) -> Dense {
 
 /// Assemble the sparse output CSR C from per-segment dense results —
 /// Phase III's final packaging (complete rows per RoBW segment make this
-/// a pure concatenation, the very property the alignment buys).
+/// a pure concatenation, the very property the alignment buys). The
+/// sections are pre-sized end to end: [`Dense::to_csr`] counts each
+/// part's nnz before building it, and [`Csr::vstack`] sizes the final
+/// arrays from the parts' totals, so packaging never regrows a vector.
 pub fn assemble_csr_c(segments: &[(usize, Dense)], ncols: usize, eps: f32) -> super::Csr {
     let mut parts: Vec<super::Csr> = Vec::with_capacity(segments.len());
     let mut expected_row = 0usize;
@@ -265,6 +356,44 @@ mod tests {
             let want = dense_spmm(&a, &h);
             assert!(got.max_abs_diff(&want) < 1e-4);
         }
+    }
+
+    #[test]
+    fn spmm_covers_every_lane_tail_width() {
+        // The microkernel has a blocked body and a scalar tail: sweep
+        // feature widths around the lane boundary so both paths and their
+        // seam are exercised.
+        let mut rng = Pcg::seed(25);
+        let a = random_csr(&mut rng, 20, 15, 0.3);
+        for f in [1usize, 2, 7, 8, 9, 15, 16, 17, 24] {
+            let h = random_dense(&mut rng, 15, f);
+            let got = spmm(&a, &h);
+            let want = dense_spmm(&a, &h);
+            assert!(got.max_abs_diff(&want) < 1e-4, "f={f}");
+        }
+    }
+
+    #[test]
+    fn spmm_into_writes_segment_ranges_of_a_shared_panel() {
+        // Computing each RoBW segment's partial directly into its row
+        // range of one panel must equal the whole-matrix product — and
+        // must fully overwrite stale panel contents.
+        let mut rng = Pcg::seed(26);
+        let a = random_csr(&mut rng, 40, 18, 0.25);
+        let h = random_dense(&mut rng, 18, 9);
+        let want = spmm(&a, &h);
+        let f = h.ncols;
+        let mut panel = vec![f32::NAN; a.nrows * f];
+        let pool = Pool::new(3);
+        for (lo, hi) in [(0usize, 13usize), (13, 13), (13, 29), (29, 40)] {
+            let sub = a.slice_rows(lo, hi);
+            if lo % 2 == 0 {
+                spmm_into(&sub, &h, &mut panel[lo * f..hi * f]);
+            } else {
+                spmm_par_into(&sub, &h, &pool, &mut panel[lo * f..hi * f]);
+            }
+        }
+        assert_eq!(panel, want.data, "segment-wise panel fill == whole product");
     }
 
     #[test]

@@ -1,0 +1,176 @@
+//! Allocation-freedom of the recycled staging pipeline, proven with a
+//! counting `#[global_allocator]`.
+//!
+//! AIRES identifies sparse-format memory allocation as the dominant
+//! out-of-core SpGEMM overhead; the recycling subsystem
+//! (`runtime::recycle` + the `Prefetch::run_recycling` return channel +
+//! `segio::*_into` decoding + `spmm_par_into` panel writes) exists to
+//! remove it from the steady state. This suite pins that property:
+//!
+//! 1. **Strict per-segment**: on the cache-disabled disk-backed path at
+//!    depth 1, segment 1 may allocate (pool warm-up at the plan's
+//!    high-water capacities) but segments 2..n perform **zero** heap
+//!    allocations — counted around each stage+consume step.
+//! 2. **End-to-end scale-invariance**: a warmed `forward_cpu` pass over
+//!    the recycled disk path costs a small constant number of allocations
+//!    regardless of segment count, while the fresh path scales with it.
+//!
+//! Everything lives in ONE `#[test]` because the allocation counter is
+//! process-global: concurrent tests would bleed counts into each other.
+
+use aires::benchlib::allocation_count;
+use aires::gcn::{OocGcnLayer, StagingConfig};
+use aires::memsim::GpuMem;
+use aires::partition::robw::robw_partition;
+use aires::runtime::pool::Pool;
+use aires::runtime::prefetch::Prefetch;
+use aires::runtime::recycle::BufferPool;
+use aires::runtime::segstore::{SegmentRead, SegmentStore};
+use aires::sparse::spmm::{spmm_par_into, Dense};
+use aires::testing::TempDir;
+use aires::util::rng::Pcg;
+use std::sync::Arc;
+
+#[global_allocator]
+static COUNTING: aires::benchlib::CountingAlloc = aires::benchlib::CountingAlloc;
+
+#[test]
+fn recycled_disk_path_is_allocation_free_in_steady_state() {
+    let mut rng = Pcg::seed(400);
+    let a = aires::graphgen::kmer::generate(&mut rng, 600, 3.0);
+    let a_hat = aires::sparse::norm::normalize_adjacency(&a);
+    let x = Dense::from_vec(600, 16, (0..600 * 16).map(|_| rng.normal() as f32).collect());
+    let layer = OocGcnLayer {
+        w: Dense::from_vec(16, 8, (0..16 * 8).map(|_| (rng.normal() * 0.2) as f32).collect()),
+        b: vec![0.1; 8],
+        relu: true,
+        seg_budget: 2 << 10,
+    };
+    let segs = robw_partition(&a_hat, layer.seg_budget);
+    let n = segs.len();
+    assert!(n >= 8, "need a real stream to measure steady state (got {n} segments)");
+
+    // Host cache disabled: every read is a real file read, and every
+    // served segment is Owned — the full recycling cycle.
+    let dir = TempDir::new("alloc-free");
+    let store = Arc::new(SegmentStore::spill(&a_hat, &segs, dir.path(), 0).unwrap());
+    let bpool = BufferPool::new(64 << 20);
+    let serial = Pool::serial();
+    let f = x.ncols;
+
+    // ---- 1. Strict per-segment counting at depth 1 ---------------------
+    // Depth 1 runs stage(i) then consume(i) serially on this thread, so a
+    // counter snapshot taken inside each consume cleanly brackets one
+    // segment's stage + compute. Pre-allocate everything the measurement
+    // itself needs (snapshot vec, aggregation panel) before streaming.
+    let mut agg = Dense::zeros(a_hat.nrows, f);
+    let mut snaps: Vec<u64> = Vec::with_capacity(n + 1);
+    snaps.push(allocation_count());
+    let leftovers = Prefetch::new(1)
+        .run_recycling::<SegmentRead, aires::sparse::Csr, String, _, _>(
+            &serial,
+            n,
+            |i, reuse| {
+                store
+                    .read_reusing(i, reuse, Some(&bpool))
+                    .map(|(m, _)| m)
+                    .map_err(|e| e.to_string())
+            },
+            |i, item| {
+                let seg = &segs[i];
+                spmm_par_into(
+                    &item,
+                    &x,
+                    &serial,
+                    &mut agg.data[seg.row_lo * f..seg.row_hi * f],
+                );
+                snaps.push(allocation_count());
+                Ok(item.reclaim())
+            },
+        )
+        .unwrap();
+    for m in leftovers {
+        bpool.put_csr(m);
+    }
+    let deltas: Vec<u64> = snaps.windows(2).map(|w| w[1] - w[0]).collect();
+    assert_eq!(deltas.len(), n);
+    // Segment 0 warms the pool (scratch sized to the plan's maxima).
+    assert!(deltas[0] > 0, "first segment allocates its scratch once");
+    for (i, &d) in deltas.iter().enumerate().skip(1) {
+        assert_eq!(
+            d, 0,
+            "segment {i}/{n} allocated {d} times in steady state (deltas: {deltas:?})"
+        );
+    }
+    // The pool saw exactly the warm-up misses plus per-segment reuse.
+    let st = bpool.stats();
+    assert!(st.hits >= n - 1, "byte scratch must be reused every segment: {st:?}");
+
+    // The streamed panel equals the serial product — the measurement did
+    // not trade correctness for allocation counts.
+    let want = aires::sparse::spmm::spmm(&a_hat, &x);
+    assert_eq!(agg, want, "recycled streamed aggregation diverged");
+
+    // ---- 2. End-to-end scale-invariance of forward_cpu -----------------
+    // A warmed recycled pass allocates O(1); the fresh path O(segments).
+    // Use depth 1 so the pipeline spawns no producer thread (thread spawns
+    // allocate and would blur the constant).
+    let count_pass = |staging: &StagingConfig| {
+        let mut mem = GpuMem::new(1 << 30);
+        let before = allocation_count();
+        let (out, _) = layer.forward_cpu(&a_hat, &x, &mut mem, &serial, staging).unwrap();
+        let allocs = allocation_count() - before;
+        (out, allocs)
+    };
+    let shared = Arc::new(BufferPool::new(64 << 20));
+    let recycled_cfg = StagingConfig::disk(store.clone(), 1).with_recycle(shared.clone());
+    let fresh_cfg = StagingConfig::disk(store.clone(), 1);
+    let (out_warmup, _) = count_pass(&recycled_cfg); // warm the pool
+    let (out_recycled, allocs_recycled) = count_pass(&recycled_cfg);
+    let (out_fresh, allocs_fresh) = count_pass(&fresh_cfg);
+    assert_eq!(out_recycled, out_fresh, "recycled and fresh passes must agree");
+    assert_eq!(out_recycled, out_warmup);
+    // Fresh pays at least rowptr+colidx+vals+file-scratch per segment.
+    assert!(
+        allocs_fresh >= 3 * n as u64,
+        "fresh pass should allocate per segment: {allocs_fresh} over {n} segments"
+    );
+    // A warmed recycled pass costs a small constant (plan vec, panel,
+    // report plumbing) — far below one allocation per segment and
+    // independent of the segment count.
+    assert!(
+        allocs_recycled < allocs_fresh / 2,
+        "recycled pass ({allocs_recycled}) must allocate far less than fresh ({allocs_fresh})"
+    );
+    assert!(
+        allocs_recycled < 48 + n as u64 / 8,
+        "recycled warmed pass must not scale with segments: {allocs_recycled} over {n}"
+    );
+
+    // Scale-invariance: double the stream length, same warmed cost.
+    let fine_budget = 1536u64;
+    let fine_segs = robw_partition(&a_hat, fine_budget);
+    let n2 = fine_segs.len();
+    assert!(n2 > n, "finer budget must yield more segments");
+    let dir2 = TempDir::new("alloc-free-fine");
+    let store2 = Arc::new(SegmentStore::spill(&a_hat, &fine_segs, dir2.path(), 0).unwrap());
+    let layer2 = OocGcnLayer {
+        w: layer.w.clone(),
+        b: layer.b.clone(),
+        relu: layer.relu,
+        seg_budget: fine_budget,
+    };
+    let cfg2 = StagingConfig::disk(store2, 1).with_recycle(shared.clone());
+    let count2 = |staging: &StagingConfig| {
+        let mut mem = GpuMem::new(1 << 30);
+        let before = allocation_count();
+        let _ = layer2.forward_cpu(&a_hat, &x, &mut mem, &serial, staging).unwrap();
+        allocation_count() - before
+    };
+    let _ = count2(&cfg2); // warm at the finer plan's capacities
+    let allocs_fine = count2(&cfg2);
+    assert!(
+        allocs_fine < 48 + n2 as u64 / 8,
+        "warmed cost must stay constant as segments grow: {allocs_fine} over {n2} segments"
+    );
+}

@@ -47,6 +47,14 @@ fn malformed_host_cache_bytes_is_a_usage_error() {
 }
 
 #[test]
+fn malformed_recycle_cap_bytes_is_a_usage_error() {
+    let (code, _, err) = run(&["catalog", "--recycle-cap-bytes", "lots"]);
+    assert_eq!(code, Some(2), "stderr: {err}");
+    assert!(err.contains("--recycle-cap-bytes"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
+}
+
+#[test]
 fn flag_without_value_is_a_usage_error() {
     // Previously a trailing flag was silently ignored.
     let (code, _, err) = run(&["catalog", "--prefetch-depth"]);
@@ -99,8 +107,30 @@ fn segcheck_streams_from_disk_and_verifies_byte_identity() {
     ]);
     assert_eq!(code, Some(0), "stderr: {err}");
     assert!(out.contains("byte-identical"), "stdout: {out}");
+    assert!(out.contains("recycle pool"), "recycling is on by default: {out}");
     assert!(
         dir.path().join("seg-00000.bin").exists(),
         "--segment-dir must hold the spilled segment files"
     );
+}
+
+#[test]
+fn segcheck_with_recycling_disabled_still_verifies() {
+    // --recycle-cap-bytes 0 selects the fresh-allocation path; output
+    // must be byte-identical either way and the pool line disappears.
+    let dir = TempDir::new("cli-segcheck-fresh");
+    let (code, out, err) = run(&[
+        "segcheck",
+        "--nodes",
+        "200",
+        "--budget",
+        "2048",
+        "--segment-dir",
+        dir.path().to_str().unwrap(),
+        "--recycle-cap-bytes",
+        "0",
+    ]);
+    assert_eq!(code, Some(0), "stderr: {err}");
+    assert!(out.contains("byte-identical"), "stdout: {out}");
+    assert!(!out.contains("recycle pool"), "no pool line when disabled: {out}");
 }

@@ -24,6 +24,7 @@ use aires::gcn::{OocGcnLayer, StagingConfig};
 use aires::memsim::GpuMem;
 use aires::partition::robw::{robw_partition, robw_partition_par};
 use aires::runtime::pool::Pool;
+use aires::runtime::recycle::BufferPool;
 use aires::runtime::segstore::{SegmentStore, UNBOUNDED_CACHE};
 use aires::testing::TempDir;
 use std::sync::Arc;
@@ -114,6 +115,80 @@ fn diff_spgemm_par_graph_families() {
 }
 
 // -------------------------------------------------------------------- SpMM
+
+/// The pre-lane-blocking scalar SpMM, kept verbatim as the bit-identity
+/// oracle: one `out[j] += a_ik * h_kj` per non-zero, `j` innermost. The
+/// lane-blocked microkernel reorders *memory traffic* (feature blocks,
+/// register accumulators) but must preserve the per-element f32 operation
+/// sequence exactly, so `==` — not an epsilon — is the contract.
+fn scalar_spmm(a: &Csr, h: &aires::sparse::spmm::Dense) -> aires::sparse::spmm::Dense {
+    let f = h.ncols;
+    let mut out = aires::sparse::spmm::Dense::zeros(a.nrows, f);
+    for i in 0..a.nrows {
+        let orow = &mut out.data[i * f..(i + 1) * f];
+        for (k, av) in a.row(i) {
+            let hrow = h.row(k as usize);
+            for (o, &hv) in orow.iter_mut().zip(hrow.iter()) {
+                *o += av * hv;
+            }
+        }
+    }
+    out
+}
+
+/// The pre-lane-blocking scalar transpose SpMM (scatter form), verbatim.
+fn scalar_spmm_transpose(
+    a: &Csr,
+    h: &aires::sparse::spmm::Dense,
+) -> aires::sparse::spmm::Dense {
+    let f = h.ncols;
+    let mut out = aires::sparse::spmm::Dense::zeros(a.ncols, f);
+    for i in 0..a.nrows {
+        let hrow = h.row(i);
+        for (k, av) in a.row(i) {
+            let orow = &mut out.data[k as usize * f..(k as usize + 1) * f];
+            for (o, &hv) in orow.iter_mut().zip(hrow.iter()) {
+                *o += av * hv;
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn diff_lane_blocked_spmm_bit_equals_scalar_oracle() {
+    check("lane-blocked spmm == pre-PR scalar kernel", 111, |rng| {
+        let a = if rng.chance(0.3) { gen::pathological(rng, 40) } else { gen::csr(rng, 40, 0.3) };
+        // Sweep widths around the lane boundary: blocked body, tail, both.
+        let f = rng.range(1, 21);
+        let h = gen::dense(rng, a.ncols, f);
+        if spmm(&a, &h) != scalar_spmm(&a, &h) {
+            return Err(format!("spmm diverged at f={f} on {}x{}", a.nrows, a.ncols));
+        }
+        let ht = gen::dense(rng, a.nrows, f);
+        if spmm_transpose(&a, &ht) != scalar_spmm_transpose(&a, &ht) {
+            return Err(format!("spmm_transpose diverged at f={f}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn diff_lane_blocked_spmm_graph_families() {
+    let mut rng = Pcg::seed(15);
+    for (name, g) in graph_cases() {
+        for f in [1usize, 7, 8, 9, 16, 19] {
+            let h = gen::dense(&mut rng, g.ncols, f);
+            assert_eq!(spmm(&g, &h), scalar_spmm(&g, &h), "{name}: spmm diverged at f={f}");
+            let ht = gen::dense(&mut rng, g.nrows, f);
+            assert_eq!(
+                spmm_transpose(&g, &ht),
+                scalar_spmm_transpose(&g, &ht),
+                "{name}: transpose diverged at f={f}"
+            );
+        }
+    }
+}
 
 #[test]
 fn diff_spmm_par_random_operands() {
@@ -511,6 +586,92 @@ fn diff_forward_cpu_disk_backed_graph_families() {
     }
 }
 
+#[test]
+fn diff_recycled_staging_matches_fresh_at_every_point() {
+    // The acceptance sweep for buffer recycling: with one BufferPool
+    // shared across *all* configurations (so later runs decode into
+    // buffers drained by earlier, differently-shaped runs), the recycled
+    // pass must stay byte-identical to the fresh pass — and to the serial
+    // in-memory oracle — at every depth x threads x cache-size point, on
+    // both backings, with identical measured I/O and a balanced ledger.
+    check("forward_cpu(recycled) == forward_cpu(fresh)", 112, |rng| {
+        let a_hat = normalize_adjacency(&gen::adjacency(rng, 48, 0.2));
+        let f = rng.range(1, 10);
+        let x = gen::dense(rng, a_hat.ncols, f);
+        let layer = random_layer(rng, f);
+
+        let mut mem = GpuMem::new(1 << 30);
+        let (want, base) = layer
+            .forward_cpu(&a_hat, &x, &mut mem, &Pool::serial(), &StagingConfig::serial())
+            .map_err(|e| e.to_string())?;
+
+        let pool_shared = Arc::new(BufferPool::new(64 << 20));
+        // In-memory backing, recycled.
+        for &depth in &PREFETCH_DEPTHS {
+            for &t in &[1usize, 8] {
+                let staging = StagingConfig::depth(depth).with_recycle(pool_shared.clone());
+                let mut mem = GpuMem::new(1 << 30);
+                let (got, rep) = layer
+                    .forward_cpu(&a_hat, &x, &mut mem, &Pool::new(t), &staging)
+                    .map_err(|e| format!("mem depth={depth} threads={t}: {e}"))?;
+                if got != want {
+                    return Err(format!("mem recycled depth={depth} threads={t}: diverged"));
+                }
+                if rep.h2d_bytes != base.h2d_bytes || rep.segments != base.segments {
+                    return Err(format!("mem recycled depth={depth} threads={t}: traffic"));
+                }
+                if mem.used != 0 {
+                    return Err(format!("mem recycled depth={depth} threads={t}: ledger"));
+                }
+            }
+        }
+
+        // Disk backing: recycled vs fresh under every cache point.
+        let segs = robw_partition(&a_hat, layer.seg_budget);
+        let dir = TempDir::new("diff-recycle");
+        SegmentStore::spill(&a_hat, &segs, dir.path(), 0).map_err(|e| e.to_string())?;
+        for cache in cache_points(&segs) {
+            for &depth in &PREFETCH_DEPTHS {
+                for &t in &[1usize, 8] {
+                    let run = |recycle: Option<Arc<BufferPool>>| {
+                        let store =
+                            SegmentStore::open_or_spill(&a_hat, &segs, dir.path(), cache)
+                                .map_err(|e| e.to_string())?;
+                        let mut staging = StagingConfig::disk(Arc::new(store), depth);
+                        if let Some(rp) = recycle {
+                            staging = staging.with_recycle(rp);
+                        }
+                        let mut mem = GpuMem::new(1 << 30);
+                        let (got, rep) = layer
+                            .forward_cpu(&a_hat, &x, &mut mem, &Pool::new(t), &staging)
+                            .map_err(|e| e.to_string())?;
+                        if mem.used != 0 {
+                            return Err("ledger unbalanced".to_string());
+                        }
+                        Ok::<_, String>((got, rep.disk_bytes, rep.cache_hits, rep.cache_misses))
+                    };
+                    let fresh = run(None)
+                        .map_err(|e| format!("cache={cache} depth={depth} t={t} fresh: {e}"))?;
+                    let rec = run(Some(pool_shared.clone()))
+                        .map_err(|e| format!("cache={cache} depth={depth} t={t} rec: {e}"))?;
+                    if rec != fresh {
+                        return Err(format!(
+                            "cache={cache} depth={depth} threads={t}: recycled != fresh \
+                             (output or measured I/O)"
+                        ));
+                    }
+                    if fresh.0 != want {
+                        return Err(format!(
+                            "cache={cache} depth={depth} threads={t}: disk != oracle"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 // ------------------------------------------------------- fault injection
 
 /// I/O faults injected into one segment file mid-stream.
@@ -544,53 +705,57 @@ fn diff_injected_io_faults_fail_cleanly_at_every_depth() {
     assert!(segs.len() >= 4, "need a real stream to fault mid-way");
     let victim = segs.len() / 2;
 
+    let recycle = Arc::new(BufferPool::new(64 << 20));
     for fault in [Fault::Truncate, Fault::Corrupt, Fault::Remove] {
         for &depth in &PREFETCH_DEPTHS {
             for &t in &[1usize, 8] {
-                let dir = TempDir::new("diff-fault");
-                let store = SegmentStore::spill(&a_hat, &segs, dir.path(), 0).unwrap();
-                let path = store.meta(victim).path.clone();
-                match fault {
-                    Fault::Truncate => {
-                        let bytes = std::fs::read(&path).unwrap();
-                        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+                for recycled in [false, true] {
+                    let dir = TempDir::new("diff-fault");
+                    let store = SegmentStore::spill(&a_hat, &segs, dir.path(), 0).unwrap();
+                    let path = store.meta(victim).path.clone();
+                    match fault {
+                        Fault::Truncate => {
+                            let bytes = std::fs::read(&path).unwrap();
+                            std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+                        }
+                        Fault::Corrupt => {
+                            let mut bytes = std::fs::read(&path).unwrap();
+                            let last = bytes.len() - 1;
+                            bytes[last] ^= 0xff;
+                            std::fs::write(&path, &bytes).unwrap();
+                        }
+                        Fault::Remove => std::fs::remove_file(&path).unwrap(),
                     }
-                    Fault::Corrupt => {
-                        let mut bytes = std::fs::read(&path).unwrap();
-                        let last = bytes.len() - 1;
-                        bytes[last] ^= 0xff;
-                        std::fs::write(&path, &bytes).unwrap();
+                    let mut staging = StagingConfig::disk(Arc::new(store), depth);
+                    if recycled {
+                        staging = staging.with_recycle(recycle.clone());
                     }
-                    Fault::Remove => std::fs::remove_file(&path).unwrap(),
+                    let mut mem = GpuMem::new(1 << 30);
+                    let err = layer
+                        .forward_cpu(&a_hat, &x, &mut mem, &Pool::new(t), &staging)
+                        .unwrap_err();
+                    let msg = err.to_string();
+                    assert!(
+                        msg.contains(&format!("staging segment {victim} from disk")),
+                        "{fault:?} depth={depth} threads={t} recycled={recycled}: \
+                         error must name the segment: {msg}"
+                    );
+                    let detail = match fault {
+                        Fault::Truncate => "truncated",
+                        Fault::Corrupt => "checksum mismatch",
+                        Fault::Remove => "segment I/O",
+                    };
+                    assert!(
+                        msg.contains(detail),
+                        "{fault:?} depth={depth} threads={t} recycled={recycled}: \
+                         expected {detail:?} in: {msg}"
+                    );
+                    assert_eq!(
+                        mem.used, 0,
+                        "{fault:?} depth={depth} threads={t} recycled={recycled}: \
+                         ledger must balance after the fault"
+                    );
                 }
-                let mut mem = GpuMem::new(1 << 30);
-                let err = layer
-                    .forward_cpu(
-                        &a_hat,
-                        &x,
-                        &mut mem,
-                        &Pool::new(t),
-                        &StagingConfig::disk(Arc::new(store), depth),
-                    )
-                    .unwrap_err();
-                let msg = err.to_string();
-                assert!(
-                    msg.contains(&format!("staging segment {victim} from disk")),
-                    "{fault:?} depth={depth} threads={t}: error must name the segment: {msg}"
-                );
-                let detail = match fault {
-                    Fault::Truncate => "truncated",
-                    Fault::Corrupt => "checksum mismatch",
-                    Fault::Remove => "segment I/O",
-                };
-                assert!(
-                    msg.contains(detail),
-                    "{fault:?} depth={depth} threads={t}: expected {detail:?} in: {msg}"
-                );
-                assert_eq!(
-                    mem.used, 0,
-                    "{fault:?} depth={depth} threads={t}: ledger must balance after the fault"
-                );
             }
         }
     }

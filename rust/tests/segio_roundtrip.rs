@@ -11,8 +11,8 @@
 
 use aires::partition::robw::{materialize, robw_partition};
 use aires::sparse::segio::{
-    decode_segment, encode_segment, fnv1a64, read_segment, write_segment, SegioError,
-    FORMAT_VERSION, HEADER_BYTES,
+    decode_segment, decode_segment_into, encode_segment, fnv1a64, read_segment,
+    read_segment_into, write_segment, SegioError, FORMAT_VERSION, HEADER_BYTES,
 };
 use aires::sparse::Csr;
 use aires::testing::{check, gen, TempDir};
@@ -157,6 +157,80 @@ fn every_truncation_is_rejected() {
         let _ = rng.below(2); // keep the stream advancing per case
         Ok(())
     });
+}
+
+#[test]
+fn decode_into_recycled_scratch_equals_fresh_decode() {
+    // The recycled staging path decodes every segment into the same
+    // caller-owned scratch. Reusing one scratch across the full operand
+    // family mix must never leak a previous decode into the next one.
+    let mut scratch = Csr::empty(0, 0);
+    check("segio decode_segment_into == decode_segment", 307, |rng| {
+        let m = operand(rng);
+        let buf = encode_segment(&m);
+        let want = decode_segment(&buf).map_err(|e| format!("fresh decode failed: {e}"))?;
+        decode_segment_into(&buf, &mut scratch)
+            .map_err(|e| format!("recycled decode failed: {e}"))?;
+        if scratch != want {
+            return Err(format!(
+                "recycled decode diverged on {}x{} (nnz {})",
+                m.nrows,
+                m.ncols,
+                m.nnz()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn decode_into_resets_scratch_on_every_defect() {
+    // After a failed decode the scratch must be an empty 0x0 matrix, not
+    // a half-written hybrid of the old and new segment.
+    let mut rng = Pcg::seed(308);
+    let good = encode_segment(&operand(&mut rng));
+    let mut scratch = decode_segment(&good).unwrap(); // non-empty contents
+    let mut bad = good.clone();
+    *bad.last_mut().unwrap() ^= 0x01; // payload corruption
+    assert!(decode_segment_into(&bad, &mut scratch).is_err());
+    assert_eq!(scratch, Csr::empty(0, 0));
+    let mut scratch = decode_segment(&good).unwrap();
+    assert!(decode_segment_into(&good[..HEADER_BYTES - 1], &mut scratch).is_err());
+    assert_eq!(scratch, Csr::empty(0, 0));
+}
+
+#[test]
+fn read_into_reuses_buffers_across_files() {
+    let dir = TempDir::new("segio-read-into");
+    let mut rng = Pcg::seed(309);
+    let mut bytes_scratch = Vec::new();
+    let mut csr_scratch = Csr::empty(0, 0);
+    for i in 0..8 {
+        let m = operand(&mut rng);
+        let path = dir.path().join(format!("case-{i}.bin"));
+        let written = write_segment(&path, &m).unwrap();
+        let read = read_segment_into(&path, &mut bytes_scratch, &mut csr_scratch).unwrap();
+        assert_eq!(read, written, "case {i}");
+        assert_eq!(csr_scratch, m, "case {i}");
+        // The fresh-allocation reader agrees byte for byte.
+        let (fresh, fresh_read) = read_segment(&path).unwrap();
+        assert_eq!(fresh, csr_scratch);
+        assert_eq!(fresh_read, read);
+    }
+    // Truncation through the recycled reader carries the typed error.
+    let m = operand(&mut rng);
+    let path = dir.path().join("trunc.bin");
+    write_segment(&path, &m).unwrap();
+    let full = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+    assert!(matches!(
+        read_segment_into(&path, &mut bytes_scratch, &mut csr_scratch),
+        Err(SegioError::Truncated { .. })
+    ));
+    assert!(matches!(
+        read_segment_into(&dir.path().join("nope.bin"), &mut bytes_scratch, &mut csr_scratch),
+        Err(SegioError::Io(_))
+    ));
 }
 
 #[test]

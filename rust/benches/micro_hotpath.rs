@@ -1,7 +1,9 @@
 //! Micro-benchmarks of the hot paths (§Perf in EXPERIMENTS.md):
 //! RoBW partitioning, BSR extraction + batch packing, SpGEMM oracle,
 //! the simulator event loop, the PJRT artifact call path, and the
-//! streaming pipeline (prefetch overlap, disk staging, buffer recycling).
+//! streaming pipeline (prefetch overlap, disk staging, buffer recycling,
+//! and the cross-layer multi-layer pipeline vs its drain-at-boundary
+//! oracle — ns/layer + allocs/segment).
 //!
 //! Run: `cargo bench --bench micro_hotpath`
 //!
@@ -15,7 +17,7 @@
 //! to `AIRES_BENCH_JSON` or ./BENCH_streaming.json.
 
 use aires::benchlib::{allocation_count, bench, report_speedup, report_throughput};
-use aires::gcn::{OocGcnLayer, StagingConfig};
+use aires::gcn::{OocGcnLayer, OocGcnModel, PipelineConfig, StagingConfig};
 use aires::memsim::{CostModel, GpuMem, Op, Sim};
 use aires::partition::robw::{robw_partition, robw_partition_par};
 use aires::runtime::pool::Pool;
@@ -356,6 +358,106 @@ fn streaming_benches(fast: bool) {
         "BENCH recycle pool: {} hits / {} misses over the run ({} dropped by the cap)",
         st.hits, st.misses, st.drops
     );
+
+    // --- Cross-layer pipeline: a 3-layer forward, pipelined (one
+    // scheduler, the producer rolls onto the next layer's plan) vs
+    // drain-at-boundary (isolated single-layer passes). The same charged
+    // staging latency as the overlap bench makes the per-boundary drain —
+    // the cold re-fill of the pipeline at each layer — visible wall-clock.
+    const BENCH_LAYERS: usize = 3;
+    let model = OocGcnModel::new(
+        (0..BENCH_LAYERS)
+            .map(|_| OocGcnLayer {
+                w: Dense::from_vec(32, 32, vec![0.1f32; 32 * 32]),
+                b: vec![0.0; 32],
+                relu: true,
+                seg_budget,
+            })
+            .collect(),
+    )
+    .expect("equal-width layers chain");
+    let run_multi = |pipelined: bool| {
+        let staging = StagingConfig {
+            prefetch: Prefetch::new(2),
+            io_cost: Some(io.clone()),
+            ..StagingConfig::default()
+        };
+        let cfg = PipelineConfig::staged(staging);
+        let mut mem = GpuMem::new(1 << 30);
+        if pipelined {
+            model.forward_cpu(&ga, &x, &mut mem, &pool, &cfg).expect("pipelined model").0
+        } else {
+            model
+                .forward_cpu_sequential(&ga, &x, &mut mem, &pool, &cfg)
+                .expect("sequential model")
+                .0
+        }
+    };
+    // Self-check: the pipelined pass must equal the drain-at-boundary
+    // oracle bit for bit before any number is reported.
+    let multi_want = run_multi(false);
+    assert_eq!(run_multi(true), multi_want, "cross-layer pipeline diverged");
+    println!(
+        "cross-layer pipeline on kmer-{nodes} ({BENCH_LAYERS} layers x {} segments):",
+        segments
+    );
+    let seq = bench("model forward, drain at every layer boundary", 1, iters, || {
+        std::hint::black_box(run_multi(false));
+    });
+    let piped = bench("model forward, one cross-layer pipeline", 1, iters, || {
+        std::hint::black_box(run_multi(true));
+    });
+    report_speedup(&seq, &piped);
+    let ns_per_layer_seq = seq.mean_s / BENCH_LAYERS as f64 * 1e9;
+    let ns_per_layer_piped = piped.mean_s / BENCH_LAYERS as f64 * 1e9;
+    println!(
+        "BENCH multilayer: {ns_per_layer_seq:.0} ns/layer drained, \
+         {ns_per_layer_piped:.0} ns/layer pipelined"
+    );
+
+    // Allocations/segment of the recycled cross-layer disk path (the
+    // alloc-free CI gate's bench counterpart; warmed outside the window).
+    let multi_cfg = PipelineConfig::staged(
+        StagingConfig::disk(store.clone(), 1).with_recycle(recycle.clone()),
+    );
+    let run_multi_disk = || {
+        let mut mem = GpuMem::new(1 << 30);
+        model.forward_cpu(&ga, &x, &mut mem, &pool, &multi_cfg).expect("model disk").0
+    };
+    // Warm the pool at model scale; the warm pass doubles as the disk
+    // path's self-check against the drained oracle.
+    assert_eq!(run_multi_disk(), multi_want, "cross-layer disk path diverged");
+    let allocs_before = allocation_count();
+    let rm = bench("model forward disk recycled, depth 1", 0, iters, || {
+        std::hint::black_box(run_multi_disk());
+    });
+    let multi_allocs = allocation_count() - allocs_before;
+    let multi_segments = (store.len() * BENCH_LAYERS) as f64;
+    let multi_allocs_per_segment = multi_allocs as f64 / iters as f64 / multi_segments;
+    let multi_ns_per_layer = rm.mean_s / BENCH_LAYERS as f64 * 1e9;
+    println!(
+        "BENCH model disk recycled: {multi_ns_per_layer:.0} ns/layer, \
+         {multi_allocs_per_segment:.2} allocs/segment over {multi_segments:.0} segments"
+    );
+
+    // Machine-readable cross-layer numbers ride the same JSON artifact.
+    for (key, r, allocs_per_seg) in [
+        ("multilayer_drained_depth2", &seq, None),
+        ("multilayer_pipelined_depth2", &piped, None),
+        ("multilayer_disk_recycled_depth1", &rm, Some(multi_allocs_per_segment)),
+    ] {
+        let mut entry = BTreeMap::new();
+        entry.insert("mean_s".to_string(), Json::Num(r.mean_s));
+        entry.insert("min_s".to_string(), Json::Num(r.min_s));
+        entry.insert(
+            "ns_per_layer".to_string(),
+            Json::Num(r.mean_s / BENCH_LAYERS as f64 * 1e9),
+        );
+        if let Some(a) = allocs_per_seg {
+            entry.insert("allocs_per_segment".to_string(), Json::Num(a));
+        }
+        results.insert(key.to_string(), Json::Obj(entry));
+    }
 
     // Seed/extend the perf trajectory: machine-readable streaming numbers.
     let mut root = BTreeMap::new();

@@ -59,6 +59,12 @@ pub struct Config {
     /// only allocator traffic changes. The CLI's `--recycle-cap-bytes`
     /// overrides this.
     pub recycle_cap_bytes: Option<u64>,
+    /// Directory the multi-layer pipeline spills intermediate feature
+    /// panels to (`runtime::segstore::PanelStore`, the `gcnstream`
+    /// subcommand). `None` = intermediate panels stay resident in host
+    /// RAM (the default). Output is byte-identical either way. The CLI's
+    /// `--panel-dir` overrides this.
+    pub panel_dir: Option<String>,
 }
 
 impl Default for Config {
@@ -73,6 +79,7 @@ impl Default for Config {
             segment_dir: None,
             host_cache_bytes: None,
             recycle_cap_bytes: None,
+            panel_dir: None,
         }
     }
 }
@@ -166,6 +173,14 @@ impl Config {
                         bail!("segment_dir must not be empty (omit the key for in-memory staging)");
                     }
                     cfg.segment_dir = Some(dir.to_string());
+                }
+                "panel_dir" => {
+                    let dir =
+                        val.as_str().ok_or_else(|| anyhow!("panel_dir must be a string"))?;
+                    if dir.is_empty() {
+                        bail!("panel_dir must not be empty (omit the key to keep panels in RAM)");
+                    }
+                    cfg.panel_dir = Some(dir.to_string());
                 }
                 "host_cache_bytes" => {
                     let n = val
@@ -278,6 +293,9 @@ impl Config {
         if let Some(b) = self.recycle_cap_bytes {
             root.insert("recycle_cap_bytes".to_string(), Json::Num(b as f64));
         }
+        if let Some(dir) = &self.panel_dir {
+            root.insert("panel_dir".to_string(), Json::Str(dir.clone()));
+        }
         root.insert(
             "datasets".to_string(),
             Json::Arr(self.datasets.iter().map(|d| Json::Str(d.clone())).collect()),
@@ -385,6 +403,21 @@ mod tests {
             Config::from_json_str(r#"{"host_cache_bytes":0}"#).unwrap().host_cache_bytes,
             Some(0)
         );
+    }
+
+    #[test]
+    fn panel_dir_key_roundtrips_and_validates() {
+        let cfg = Config::from_json_str(r#"{"panel_dir":"/tmp/panels"}"#).unwrap();
+        assert_eq!(cfg.panel_dir.as_deref(), Some("/tmp/panels"));
+        let back = Config::from_json_str(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(back.panel_dir, cfg.panel_dir);
+        // Unset stays unset (intermediate panels stay in host RAM).
+        let unset = Config::from_json_str("{}").unwrap();
+        assert_eq!(unset.panel_dir, None);
+        let unset_back = Config::from_json_str(&unset.to_json().to_string()).unwrap();
+        assert_eq!(unset_back.panel_dir, None);
+        assert!(Config::from_json_str(r#"{"panel_dir":""}"#).is_err());
+        assert!(Config::from_json_str(r#"{"panel_dir":3}"#).is_err());
     }
 
     #[test]

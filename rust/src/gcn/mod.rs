@@ -7,13 +7,19 @@
 //!   executed tile-by-tile through the PJRT `bsr_spmm` artifact, combined
 //!   through the fused `gcn_combine` artifact — the real compute that the
 //!   scheduler simulations model at paper scale;
+//! * [`pipeline`] — the cross-layer streaming executor: an N-layer
+//!   forward under one scheduler, overlapping layer `l`'s Phase III
+//!   combine with layer `l+1`'s Phase I/II staging and optionally
+//!   spilling intermediate feature panels through the tiered store;
 //! * [`train`] — the e2e training driver looping the `gcn2_train_step`
 //!   artifact (loss curve in EXPERIMENTS.md).
 
 pub mod model;
 pub mod oocgcn;
+pub mod pipeline;
 pub mod train;
 
 pub use model::Gcn2Ref;
 pub use oocgcn::{LayerReport, OocGcnLayer, StagingBacking, StagingConfig};
+pub use pipeline::{OocGcnModel, PipelineConfig, PipelineReport};
 pub use train::Trainer;

@@ -16,20 +16,25 @@
 //! and are merged in segment order, so the output is byte-identical to the
 //! depth-1 serial pass at every prefetch depth and thread count
 //! (`rust/tests/differential.rs`).
+//!
+//! Since the cross-layer refactor the streaming scaffolding itself lives
+//! in [`gcn::pipeline`](crate::gcn::pipeline): a single-layer forward is
+//! the one-layer special case of the multi-layer engine
+//! ([`OocGcnModel`](crate::gcn::pipeline::OocGcnModel) runs N layers under
+//! one scheduler without draining the pipeline at layer boundaries), so
+//! `forward_staged`/`forward_cpu` here are thin wrappers.
 
-use crate::gcn::model::dense_affine;
-use crate::memsim::{CostModel, GpuMem, Op, StagingMeter};
-use crate::partition::robw::{materialize_into, robw_partition_par, RobwSegment};
+use crate::gcn::pipeline::{forward_pipelined_cpu, forward_pipelined_staged, PipelineConfig};
+use crate::memsim::{CostModel, GpuMem};
 use crate::runtime::pool::Pool;
 use crate::runtime::prefetch::Prefetch;
 use crate::runtime::recycle::BufferPool;
-use crate::runtime::segstore::{SegmentRead, SegmentStore};
-use crate::runtime::tile_exec::{BsrSpmmExec, CombineExec};
+use crate::runtime::segstore::SegmentStore;
 use crate::runtime::Executor;
-use crate::sparse::spmm::{spmm_par_into, Dense};
+use crate::sparse::spmm::Dense;
 use crate::sparse::Csr;
-use anyhow::{anyhow, Result};
-use std::sync::{Arc, Mutex};
+use anyhow::Result;
+use std::sync::Arc;
 
 /// Execution report for one out-of-core layer pass.
 #[derive(Debug, Clone, Default)]
@@ -196,30 +201,17 @@ impl OocGcnLayer {
         pool: &Pool,
         staging: &StagingConfig,
     ) -> Result<(Dense, LayerReport)> {
-        let spmm_exec = BsrSpmmExec::for_feature_width(exec, x.ncols)?;
-        let comb = CombineExec::for_widths(exec, x.ncols, self.w.ncols, self.relu)?;
-        let denom = spmm_exec.shape.nb * spmm_exec.shape.bm * spmm_exec.shape.bk;
-        let mut calls = 0usize;
-        let (out, mut report) = self.forward_streamed(
+        let cfg = PipelineConfig::staged(staging.clone());
+        let (out, rep) = forward_pipelined_staged(
+            std::slice::from_ref(self),
             exec,
             a_hat,
             x,
             mem,
             pool,
-            staging,
-            // Phase II: the partial SpGEMM for one staged segment.
-            |exec, seg, sub, agg| {
-                calls += sub.nnz().div_ceil(denom);
-                let part = spmm_exec.spmm_with_pool(exec, sub, x, pool)?;
-                agg.data[seg.row_lo * x.ncols..seg.row_hi * x.ncols]
-                    .copy_from_slice(&part.data);
-                Ok(())
-            },
-            // Phase III: combine through the fused tile.
-            |exec, agg| comb.combine(exec, agg, &self.w, &self.b),
+            &cfg,
         )?;
-        report.artifact_calls_estimate = calls;
-        Ok((out, report))
+        Ok((out, rep.into_single()))
     }
 
     /// Artifact-free forward pass: identical planning, ledger and prefetch
@@ -240,248 +232,17 @@ impl OocGcnLayer {
         pool: &Pool,
         staging: &StagingConfig,
     ) -> Result<(Dense, LayerReport)> {
-        self.forward_streamed(
-            &mut (),
-            a_hat,
-            x,
-            mem,
-            pool,
-            staging,
-            |_, seg, sub, agg| {
-                spmm_par_into(
-                    sub,
-                    x,
-                    pool,
-                    &mut agg.data[seg.row_lo * x.ncols..seg.row_hi * x.ncols],
-                );
-                Ok(())
-            },
-            |_, agg| Ok(dense_affine(agg, &self.w, &self.b, self.relu)),
-        )
+        let cfg = PipelineConfig::staged(staging.clone());
+        let (out, rep) =
+            forward_pipelined_cpu(std::slice::from_ref(self), a_hat, x, mem, pool, &cfg)?;
+        Ok((out, rep.into_single()))
     }
-
-    /// Shared scaffolding of one streamed forward pass: panel residency
-    /// (Phase I), parallel RoBW planning, the Phase II prefetch pipeline,
-    /// and a ledger that ends balanced on success and on *every* error
-    /// path — stream aborts and `finish` failures alike free the panel,
-    /// and `stream_segments` has already returned any stranded segments.
-    /// `consume` computes one segment's partial into `agg` on the calling
-    /// thread; `finish` turns the full aggregation into the layer output
-    /// (Phase III). `ctx` is whatever mutable state both need (the PJRT
-    /// executor on the artifact path, `()` on the CPU path).
-    ///
-    /// One aggregation panel and (under [`StagingConfig::recycle`]) one
-    /// set of per-segment scratch buffers serve the entire pass: segments
-    /// borrow scratch from the recycle pool on the way in and return it
-    /// through the pipeline's hand-back channel on the way out.
-    #[allow(clippy::too_many_arguments)]
-    fn forward_streamed<Ctx, C, Fin>(
-        &self,
-        ctx: &mut Ctx,
-        a_hat: &Csr,
-        x: &Dense,
-        mem: &mut GpuMem,
-        pool: &Pool,
-        staging: &StagingConfig,
-        mut consume: C,
-        finish: Fin,
-    ) -> Result<(Dense, LayerReport)>
-    where
-        C: FnMut(&mut Ctx, &RobwSegment, &Csr, &mut Dense) -> Result<()>,
-        Fin: FnOnce(&mut Ctx, &Dense) -> Result<Dense>,
-    {
-        // Plan first: a disk-backed pass must match the store's manifest
-        // *before* anything is allocated, or the "files on disk" and the
-        // "plan in memory" would silently disagree about row ranges.
-        let segs = robw_partition_par(a_hat, self.seg_budget, pool);
-        if let StagingBacking::Disk(store) = &staging.backing {
-            store
-                .check_plan(&segs)
-                .map_err(|e| anyhow!("segment store does not match the RoBW plan: {e}"))?;
-        }
-
-        // Phase I: feature panel resident (the GDS leg in the simulation).
-        let b_bytes = (x.nrows * x.ncols * 4) as u64;
-        mem.alloc(b_bytes, "feature panel")
-            .map_err(|e| anyhow!("feature panel does not fit: {e}"))?;
-
-        // The pass-wide aggregation panel: recycled across passes when a
-        // pool is attached (take_panel zero-fills, so the contents are
-        // identical to a fresh Dense::zeros).
-        let mut agg = match &staging.recycle {
-            Some(rp) => {
-                Dense::from_vec(a_hat.nrows, x.ncols, rp.take_panel(a_hat.nrows * x.ncols))
-            }
-            None => Dense::zeros(a_hat.nrows, x.ncols),
-        };
-        let mut report = LayerReport {
-            segments: segs.len(),
-            prefetch_depth: staging.prefetch.depth.max(1),
-            ..Default::default()
-        };
-
-        // Phase II: pipelined — producer stages segment i+1 while the
-        // calling thread computes the partial for segment i.
-        let streamed = stream_segments(a_hat, &segs, mem, pool, staging, |seg, sub| {
-            consume(ctx, seg, sub, &mut agg)
-        });
-        // Phase III: output stays "resident" through the finisher.
-        let result = match streamed {
-            Ok(st) => {
-                report.h2d_bytes = st.h2d;
-                report.disk_bytes = st.meter.disk_bytes;
-                report.cache_hits = st.meter.cache_hits;
-                report.cache_misses = st.meter.cache_misses;
-                if let Some(cm) = &staging.io_cost {
-                    report.staged_io_modeled_s = st.meter.modeled_read_secs(cm);
-                }
-                finish(ctx, &agg)
-            }
-            Err(e) => Err(e),
-        };
-        report.peak_gpu_bytes = mem.peak;
-        mem.free(b_bytes);
-        // Retire the panel slab for the next pass (on every path — the
-        // `?` below runs after the slab is back in the pool).
-        if let Some(rp) = &staging.recycle {
-            rp.put_panel(std::mem::take(&mut agg.data));
-        }
-        Ok((result?, report))
-    }
-}
-
-/// Staged-segment accounting shared between the producer and the consumer:
-/// `staged` tracks ledger bytes alloc'd but not yet freed, so an aborted
-/// pipeline (stage or compute error) can return stranded segments —
-/// including ones dropped unconsumed inside the hand-off queue — to the
-/// ledger instead of leaking them.
-struct SegmentLedger<'a> {
-    mem: &'a mut GpuMem,
-    staged: u64,
-    meter: StagingMeter,
-}
-
-/// What one streamed pass measured (beyond the planner's estimates).
-struct StreamStats {
-    /// Planned segment bytes staged host-to-device.
-    h2d: u64,
-    /// Measured disk/cache traffic (zero for in-memory backing).
-    meter: StagingMeter,
-}
-
-/// Stream planned segments through the prefetch pipeline.
-///
-/// The producer stages segment `i+1` (ledger alloc + pack-or-read) while
-/// `consume` computes segment `i` on the calling thread; each segment is
-/// freed after its compute. In-memory backing slices the source matrix
-/// (plus the optional simulated H2D sleep); disk backing reads the
-/// [`SegmentStore`]'s checksum-verified files through its host cache and
-/// meters the *measured* bytes instead. Consumption is strictly ordered,
-/// so everything `consume` merges is deterministic; the ledger's
-/// high-water mark alone reflects real staging concurrency. On error —
-/// including a failed file read mid-stream — every staged-but-unconsumed
-/// segment is freed before returning, so the ledger ends balanced either
-/// way and the producer is always joined.
-///
-/// With [`StagingConfig::recycle`] set, segment scratch circulates instead
-/// of churning: the producer decodes/slices into buffers drained by the
-/// consumer (handed back through the pipeline's return channel, topped up
-/// from the pool), scratch capacities are sized once from the plan's
-/// maxima, and leftovers retire to the pool when the stream ends — zero
-/// steady-state allocations per segment (`rust/tests/alloc_free.rs`).
-fn stream_segments<F>(
-    a_hat: &Csr,
-    segs: &[RobwSegment],
-    mem: &mut GpuMem,
-    pool: &Pool,
-    staging: &StagingConfig,
-    mut consume: F,
-) -> Result<StreamStats>
-where
-    F: FnMut(&RobwSegment, &Csr) -> Result<()>,
-{
-    let ledger = Mutex::new(SegmentLedger { mem, staged: 0, meter: StagingMeter::default() });
-    let mut h2d = 0u64;
-    let recycle = staging.recycle.as_deref();
-    // Plan-wide scratch maxima, used only by recycled in-memory staging
-    // (the disk path uses the store's precomputed maxima): the first take
-    // per in-flight slot already covers every later segment, so
-    // capacities never regrow mid-stream.
-    let (max_rows, max_nnz) = match (&staging.backing, recycle) {
-        (StagingBacking::Memory, Some(_)) => (
-            segs.iter().map(|s| s.row_hi - s.row_lo).max().unwrap_or(0),
-            segs.iter().map(|s| s.nnz).max().unwrap_or(0),
-        ),
-        _ => (0, 0),
-    };
-    let result = staging.prefetch.run_recycling(
-        pool,
-        segs.len(),
-        |i, reuse: Option<Csr>| {
-            let seg = &segs[i];
-            {
-                let mut l = ledger.lock().unwrap();
-                l.mem
-                    .alloc(seg.bytes, "RoBW segment")
-                    .map_err(|e| anyhow!("segment does not fit: {e}"))?;
-                l.staged += seg.bytes;
-            }
-            match &staging.backing {
-                StagingBacking::Memory => {
-                    let mut sub = match (reuse, recycle) {
-                        (Some(m), _) => m,
-                        (None, Some(rp)) => rp.take_csr(max_rows, max_nnz),
-                        (None, None) => Csr::empty(0, 0),
-                    };
-                    materialize_into(a_hat, seg, &mut sub);
-                    if let Some(cm) = &staging.io_cost {
-                        let dur = cm.transfer_secs(Op::HtoD, seg.bytes);
-                        std::thread::sleep(std::time::Duration::from_secs_f64(dur));
-                    }
-                    Ok(SegmentRead::Owned(sub))
-                }
-                StagingBacking::Disk(store) => {
-                    let (sub, origin) = store
-                        .read_reusing(i, reuse, recycle)
-                        .map_err(|e| anyhow!("staging segment {i} from disk: {e}"))?;
-                    let mut l = ledger.lock().unwrap();
-                    l.meter.record(origin.disk_bytes, origin.cache_hit);
-                    Ok(sub)
-                }
-            }
-        },
-        |i, sub: SegmentRead| {
-            let seg = &segs[i];
-            consume(seg, &sub)?;
-            h2d += seg.bytes;
-            {
-                let mut l = ledger.lock().unwrap();
-                l.mem.free(seg.bytes);
-                l.staged -= seg.bytes;
-            }
-            // Hand the drained buffers back to the producer. Without a
-            // recycle pool they are dropped — the fresh-allocation oracle.
-            Ok(if recycle.is_some() { sub.reclaim() } else { None })
-        },
-    );
-    // The producer has joined; reconcile whatever an abort stranded.
-    let l = ledger.into_inner().unwrap();
-    if l.staged > 0 {
-        l.mem.free(l.staged);
-    }
-    let leftovers = result?;
-    // Retire end-of-stream buffers to the pool for the next pass.
-    if let Some(rp) = recycle {
-        for m in leftovers {
-            rp.put_csr(m);
-        }
-    }
-    Ok(StreamStats { h2d, meter: l.meter })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gcn::model::dense_affine;
     use crate::runtime::find_artifact_dir;
     use crate::sparse::norm::normalize_adjacency;
     use crate::sparse::spmm::spmm;

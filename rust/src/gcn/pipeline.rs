@@ -1,0 +1,871 @@
+//! Cross-layer streaming pipeline: an N-layer out-of-core GCN forward
+//! under **one** scheduler (the multi-layer extension of the paper's
+//! three-phase design).
+//!
+//! The single-layer path ran each `OocGcnLayer` as an isolated pass — the
+//! prefetch pipeline drained at every layer boundary: the producer closed
+//! its hand-off after the layer's last segment, the consumer ran Phase III,
+//! and the next layer started staging from a cold pipeline. This module
+//! removes the drain. [`OocGcnModel`] concatenates every layer's RoBW plan
+//! into one global segment index space and runs a single
+//! [`Prefetch::run_recycling`](crate::runtime::prefetch::Prefetch::run_recycling)
+//! over it, so the producer *rolls onto the next layer's plan instead of
+//! closing the hand-off*: while the calling thread finishes layer `l`'s
+//! last partials and its Phase III combine, the producer is already
+//! staging layer `l+1`'s first segments (its Phase I panel reservation and
+//! Phase II reads need nothing from layer `l`'s output — only the
+//! *compute* does, and consumption stays strictly index-ordered).
+//!
+//! Intermediate feature panels can spill through the same tiered store the
+//! adjacency segments use: with a [`PanelStore`] attached
+//! ([`PipelineConfig::panel_spill`]), layer `l`'s combined output is
+//! written to disk in the [`segio`](crate::sparse::segio) dense-panel
+//! record format (checksummed, golden-vector pinned) and read back —
+//! through the store's deterministic-LRU host tier — as layer `l+1`'s
+//! Phase I input, so no intermediate activation has to stay resident in
+//! host RAM between layers. Panel bytes round-trip as raw f32 bit
+//! patterns, so a spilling pass is byte-identical to one that keeps every
+//! panel in memory.
+//!
+//! Determinism rule (unchanged): consumption is strictly ordered over the
+//! global index space, partials land in fixed disjoint row ranges, and
+//! combines run in layer order — so the pipelined multi-layer output is
+//! **byte-identical to the sequential per-layer oracle** at every prefetch
+//! depth, thread count, cache size, and backing, with or without panel
+//! spilling (`rust/tests/differential.rs`). The `GpuMem` ledger is the one
+//! timing-dependent observable: with cross-layer overlap it may briefly
+//! hold layer `l`'s panel alongside layer `l+1`'s staged-ahead segments,
+//! so its peak (and OOM behaviour *near* the capacity boundary) reflects
+//! real staging concurrency, exactly as at depth > 1 within one layer.
+
+use crate::gcn::model::dense_affine;
+use crate::gcn::oocgcn::{LayerReport, OocGcnLayer, StagingBacking, StagingConfig};
+use crate::memsim::{GpuMem, Op, StagingMeter};
+use crate::partition::robw::{materialize_into, robw_partition_par, RobwSegment};
+use crate::runtime::pool::Pool;
+use crate::runtime::recycle::BufferPool;
+use crate::runtime::segstore::{PanelRead, PanelStore, SegmentRead};
+use crate::runtime::tile_exec::{BsrSpmmExec, CombineExec};
+use crate::runtime::Executor;
+use crate::sparse::spmm::{spmm_par_into, Dense};
+use crate::sparse::Csr;
+use anyhow::{anyhow, bail, Result};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+/// Configuration of one multi-layer pipelined forward pass.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineConfig {
+    /// Phase II staging configuration, shared by every layer: prefetch
+    /// depth, segment backing (in-memory or a spilled
+    /// [`SegmentStore`](crate::runtime::segstore::SegmentStore)),
+    /// optional charged I/O cost, and the buffer-recycle pool.
+    pub staging: StagingConfig,
+    /// When set, every *intermediate* feature panel (layer `l`'s output,
+    /// `l < N-1`) spills to this store after Phase III and is read back —
+    /// through its host cache — at layer `l+1`'s Phase I, instead of
+    /// staying resident in host RAM across the boundary. The final
+    /// layer's output is always returned in memory. Output is
+    /// byte-identical either way.
+    pub panel_spill: Option<Arc<PanelStore>>,
+}
+
+impl PipelineConfig {
+    /// Serial staging (depth 1, in-memory, fresh allocations, no panel
+    /// spilling): the oracle configuration.
+    pub fn serial() -> PipelineConfig {
+        PipelineConfig { staging: StagingConfig::serial(), panel_spill: None }
+    }
+
+    /// Pipeline over the given staging configuration, panels in RAM.
+    pub fn staged(staging: StagingConfig) -> PipelineConfig {
+        PipelineConfig { staging, panel_spill: None }
+    }
+
+    /// The same configuration with intermediate panels spilled through
+    /// `store`.
+    pub fn with_panel_spill(mut self, store: Arc<PanelStore>) -> PipelineConfig {
+        self.panel_spill = Some(store);
+        self
+    }
+}
+
+/// Execution report of one multi-layer pass: one [`LayerReport`] per layer
+/// plus the panel-tier traffic of the pass.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineReport {
+    /// Per-layer reports, in layer order. Deterministic per layer (the
+    /// producer stages each layer's segments strictly in order) except for
+    /// `peak_gpu_bytes`, which reflects staging concurrency.
+    pub per_layer: Vec<LayerReport>,
+    /// Bytes written to the panel tier (0 without panel spilling).
+    pub panel_spill_bytes: u64,
+    /// Measured bytes read back from panel files (0 on host-tier hits).
+    pub panel_read_bytes: u64,
+    /// Panel reads served by the panel store's host cache.
+    pub panel_cache_hits: usize,
+    /// Panel reads that went to disk.
+    pub panel_cache_misses: usize,
+}
+
+impl PipelineReport {
+    /// Merge the per-layer reports into one pass-wide [`LayerReport`]:
+    /// additive fields are summed, `peak_gpu_bytes` and `prefetch_depth`
+    /// are maxima.
+    pub fn merged(&self) -> LayerReport {
+        let mut m = LayerReport::default();
+        for r in &self.per_layer {
+            m.segments += r.segments;
+            m.artifact_calls_estimate += r.artifact_calls_estimate;
+            m.peak_gpu_bytes = m.peak_gpu_bytes.max(r.peak_gpu_bytes);
+            m.h2d_bytes += r.h2d_bytes;
+            m.prefetch_depth = m.prefetch_depth.max(r.prefetch_depth);
+            m.disk_bytes += r.disk_bytes;
+            m.cache_hits += r.cache_hits;
+            m.cache_misses += r.cache_misses;
+            m.staged_io_modeled_s += r.staged_io_modeled_s;
+        }
+        m
+    }
+
+    /// The sole layer's report — the single-layer wrappers'
+    /// (`OocGcnLayer::{forward_staged, forward_cpu}`) return value.
+    pub(crate) fn into_single(mut self) -> LayerReport {
+        debug_assert_eq!(self.per_layer.len(), 1);
+        self.per_layer.pop().expect("single-layer pipeline report")
+    }
+}
+
+/// An N-layer out-of-core GCN: an ordered list of [`OocGcnLayer`]s run
+/// under one cross-layer scheduler.
+pub struct OocGcnModel {
+    /// The layers, in forward order. Adjacent widths must chain
+    /// (`layers[l].w.ncols == layers[l+1].w.nrows`, checked by
+    /// [`OocGcnModel::new`]).
+    pub layers: Vec<OocGcnLayer>,
+}
+
+impl OocGcnModel {
+    /// Build a model, validating that adjacent layer widths chain.
+    pub fn new(layers: Vec<OocGcnLayer>) -> Result<OocGcnModel> {
+        if layers.is_empty() {
+            bail!("a GCN model needs at least one layer");
+        }
+        for (l, w) in layers.windows(2).enumerate() {
+            if w[0].w.ncols != w[1].w.nrows {
+                bail!(
+                    "layer {l} outputs width {} but layer {} expects width {}",
+                    w[0].w.ncols,
+                    l + 1,
+                    w[1].w.nrows
+                );
+            }
+        }
+        Ok(OocGcnModel { layers })
+    }
+
+    /// Number of layers.
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Whether the model has no layers (never true for a constructed one).
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Artifact-free pipelined multi-layer forward: per-segment
+    /// aggregation on [`spmm_par_into`] straight into the pass-wide panel,
+    /// host-side combines, one cross-layer prefetch pipeline. This is the
+    /// execution surface the differential suite drives; its output is
+    /// byte-identical to [`Self::forward_cpu_sequential`] at every
+    /// configuration point.
+    pub fn forward_cpu(
+        &self,
+        a_hat: &Csr,
+        x: &Dense,
+        mem: &mut GpuMem,
+        pool: &Pool,
+        cfg: &PipelineConfig,
+    ) -> Result<(Dense, PipelineReport)> {
+        forward_pipelined_cpu(&self.layers, a_hat, x, mem, pool, cfg)
+    }
+
+    /// The drain-at-boundary oracle: run each layer as an isolated
+    /// single-layer pass (the pre-pipeline behaviour), chaining outputs in
+    /// host RAM. Intermediate panels are never spilled here — the point of
+    /// the oracle is the *simplest* correct execution. Used by the
+    /// differential suite, `micro_hotpath`'s overlap bench, and the
+    /// `gcnstream` CLI verification.
+    pub fn forward_cpu_sequential(
+        &self,
+        a_hat: &Csr,
+        x: &Dense,
+        mem: &mut GpuMem,
+        pool: &Pool,
+        cfg: &PipelineConfig,
+    ) -> Result<(Dense, PipelineReport)> {
+        let mut report = PipelineReport::default();
+        let mut cur = None;
+        for layer in &self.layers {
+            let input = cur.as_ref().unwrap_or(x);
+            let (out, rep) = layer.forward_cpu(a_hat, input, mem, pool, &cfg.staging)?;
+            report.per_layer.push(rep);
+            cur = Some(out);
+        }
+        Ok((cur.expect("model has at least one layer"), report))
+    }
+
+    /// Pipelined multi-layer forward through the PJRT artifacts: each
+    /// segment's aggregation runs the `bsr_spmm` artifact, each Phase III
+    /// combine the fused `gcn_combine` artifact, under the same
+    /// cross-layer scheduler as [`Self::forward_cpu`].
+    pub fn forward_staged(
+        &self,
+        exec: &mut Executor,
+        a_hat: &Csr,
+        x: &Dense,
+        mem: &mut GpuMem,
+        pool: &Pool,
+        cfg: &PipelineConfig,
+    ) -> Result<(Dense, PipelineReport)> {
+        forward_pipelined_staged(&self.layers, exec, a_hat, x, mem, pool, cfg)
+    }
+}
+
+/// CPU-compute instantiation of the cross-layer engine (shared by
+/// [`OocGcnModel::forward_cpu`] and the single-layer
+/// `OocGcnLayer::forward_cpu` wrapper).
+pub(crate) fn forward_pipelined_cpu(
+    layers: &[OocGcnLayer],
+    a_hat: &Csr,
+    x: &Dense,
+    mem: &mut GpuMem,
+    pool: &Pool,
+    cfg: &PipelineConfig,
+) -> Result<(Dense, PipelineReport)> {
+    forward_pipelined(
+        layers,
+        &mut (),
+        a_hat,
+        x,
+        mem,
+        pool,
+        cfg,
+        &mut |_, _, seg, sub, x_l, agg| {
+            spmm_par_into(
+                sub,
+                x_l,
+                pool,
+                &mut agg.data[seg.row_lo * x_l.ncols..seg.row_hi * x_l.ncols],
+            );
+            Ok(())
+        },
+        &mut |_, l, agg| Ok(dense_affine(agg, &layers[l].w, &layers[l].b, layers[l].relu)),
+    )
+}
+
+/// Artifact-compute instantiation of the cross-layer engine (shared by
+/// [`OocGcnModel::forward_staged`] and the single-layer
+/// `OocGcnLayer::forward_staged` wrapper). Per-layer `bsr_spmm` /
+/// `gcn_combine` executors are resolved up front so a missing artifact
+/// fails before any staging.
+pub(crate) fn forward_pipelined_staged(
+    layers: &[OocGcnLayer],
+    exec: &mut Executor,
+    a_hat: &Csr,
+    x: &Dense,
+    mem: &mut GpuMem,
+    pool: &Pool,
+    cfg: &PipelineConfig,
+) -> Result<(Dense, PipelineReport)> {
+    let widths = layer_widths(layers, x.ncols)?;
+    let mut kernels = Vec::with_capacity(layers.len());
+    for (l, layer) in layers.iter().enumerate() {
+        let sp = BsrSpmmExec::for_feature_width(exec, widths[l])?;
+        let cb = CombineExec::for_widths(exec, widths[l], layer.w.ncols, layer.relu)?;
+        kernels.push((sp, cb));
+    }
+    let mut calls = vec![0usize; layers.len()];
+    let (out, mut rep) = forward_pipelined(
+        layers,
+        exec,
+        a_hat,
+        x,
+        mem,
+        pool,
+        cfg,
+        &mut |exec, l, seg, sub, x_l, agg| {
+            let (sp, _) = &kernels[l];
+            let denom = sp.shape.nb * sp.shape.bm * sp.shape.bk;
+            calls[l] += sub.nnz().div_ceil(denom);
+            let part = sp.spmm_with_pool(exec, sub, x_l, pool)?;
+            agg.data[seg.row_lo * x_l.ncols..seg.row_hi * x_l.ncols]
+                .copy_from_slice(&part.data);
+            Ok(())
+        },
+        &mut |exec, l, agg| kernels[l].1.combine(exec, agg, &layers[l].w, &layers[l].b),
+    )?;
+    for (r, c) in rep.per_layer.iter_mut().zip(calls) {
+        r.artifact_calls_estimate = c;
+    }
+    Ok((out, rep))
+}
+
+/// Input feature width per layer, validating the chain starts at `f0`.
+fn layer_widths(layers: &[OocGcnLayer], f0: usize) -> Result<Vec<usize>> {
+    let mut widths = Vec::with_capacity(layers.len());
+    let mut w = f0;
+    for (l, layer) in layers.iter().enumerate() {
+        if layer.w.nrows != w {
+            bail!("layer {l}: weight rows {} do not match input width {w}", layer.w.nrows);
+        }
+        widths.push(w);
+        w = layer.w.ncols;
+    }
+    Ok(widths)
+}
+
+/// Poison-tolerant ledger lock: the ledger holds plain counters that are
+/// valid at every instruction boundary, so when a worker panics mid-pass
+/// (poisoning the mutex on its way down) the *original* panic must surface
+/// — not a secondary `PoisonError` unwrap that masks it. (This replaces
+/// the old `stream_segments` `.lock().unwrap()`s.)
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Ledger state shared between the staging producer and the consumer:
+/// segment and feature-panel bytes alloc'd but not yet freed (so an
+/// aborted pipeline can reconcile exactly what was stranded), plus one
+/// [`StagingMeter`] per layer for measured disk I/O.
+struct LedgerState<'a> {
+    mem: &'a mut GpuMem,
+    /// Staged segment bytes not yet freed by a consume.
+    staged: u64,
+    /// Feature-panel bytes (Phase I residency) not yet freed by a finish.
+    panels: u64,
+    meters: Vec<StagingMeter>,
+}
+
+/// The consumer's view of the current layer's input panel.
+enum XCur<'a> {
+    /// The caller's input (layer 0).
+    Borrowed(&'a Dense),
+    /// A previous layer's output held in host RAM.
+    Owned(Dense),
+    /// A previous layer's output served shared from the panel-store host
+    /// tier.
+    Shared(Arc<Dense>),
+    /// A previous layer's output spilled to the panel store, not yet read
+    /// back (becomes `Owned`/`Shared` at the next layer's first segment).
+    Spilled,
+}
+
+impl XCur<'_> {
+    fn panel(&self) -> &Dense {
+        match self {
+            XCur::Borrowed(p) => p,
+            XCur::Owned(p) => p,
+            XCur::Shared(p) => p,
+            XCur::Spilled => unreachable!("panel read back before the layer's first consume"),
+        }
+    }
+
+    /// Retire an owned panel's slab to the recycle pool when this view is
+    /// replaced or abandoned.
+    fn retire(&mut self, recycle: Option<&BufferPool>) {
+        if let XCur::Owned(p) = std::mem::replace(self, XCur::Spilled) {
+            if let Some(rp) = recycle {
+                rp.put_panel(p.data);
+            }
+        }
+    }
+}
+
+/// The cross-layer streaming engine. One prefetch pipeline spans every
+/// layer's RoBW plan; `consume` computes one segment's partial into the
+/// current layer's aggregation panel on the calling thread, `finish` turns
+/// a full aggregation into that layer's output (Phase III). `ctx` is
+/// whatever mutable state both need (the PJRT executor on the artifact
+/// path, `()` on the CPU path).
+///
+/// Phase structure per layer `l`, embedded in the one pipeline:
+/// * **Phase I** — the producer reserves layer `l`'s input-panel bytes on
+///   the ledger immediately before staging its first segment (so panel
+///   residency precedes that layer's Phase II exactly as in the
+///   single-layer pass), and the consumer materializes the panel — reading
+///   it back from the panel store when the previous layer spilled it — at
+///   the layer's first consume.
+/// * **Phase II** — segments stage through the shared producer, which
+///   rolls from plan `l` straight onto plan `l+1`.
+/// * **Phase III** — at the layer's last consume the combine runs, the
+///   panel bytes are freed, and the output either becomes the next
+///   layer's input in RAM or spills to the panel store.
+///
+/// The ledger ends balanced on success and on every error path: stranded
+/// segments *and* panel reservations are reconciled after the producer has
+/// joined, and aggregation/input slabs retire to the recycle pool.
+#[allow(clippy::too_many_arguments)]
+fn forward_pipelined<Ctx>(
+    layers: &[OocGcnLayer],
+    ctx: &mut Ctx,
+    a_hat: &Csr,
+    x0: &Dense,
+    mem: &mut GpuMem,
+    pool: &Pool,
+    cfg: &PipelineConfig,
+    consume: &mut dyn FnMut(&mut Ctx, usize, &RobwSegment, &Csr, &Dense, &mut Dense) -> Result<()>,
+    finish: &mut dyn FnMut(&mut Ctx, usize, &Dense) -> Result<Dense>,
+) -> Result<(Dense, PipelineReport)> {
+    let staging = &cfg.staging;
+    let nl = layers.len();
+    if nl == 0 {
+        bail!("a GCN model needs at least one layer");
+    }
+    let widths = layer_widths(layers, x0.ncols)?;
+
+    // Plan every layer first: a disk-backed pass must match the store's
+    // manifest for *every* layer before anything is allocated, or the
+    // files on disk and the plans in memory would silently disagree.
+    // Layers share the adjacency, so a repeated seg_budget (the common
+    // case — every in-repo model uses one budget) reuses the plan of the
+    // first layer that computed it instead of re-running the partition
+    // scan per layer.
+    let mut plans: Vec<Vec<RobwSegment>> = Vec::with_capacity(nl);
+    for layer in layers {
+        let planned = plans.len();
+        match layers[..planned].iter().position(|p| p.seg_budget == layer.seg_budget) {
+            Some(prev) => {
+                let plan = plans[prev].clone();
+                plans.push(plan);
+            }
+            None => plans.push(robw_partition_par(a_hat, layer.seg_budget, pool)),
+        }
+    }
+    if let StagingBacking::Disk(store) = &staging.backing {
+        for (l, plan) in plans.iter().enumerate() {
+            store.check_plan(plan).map_err(|e| {
+                anyhow!("layer {l}: segment store does not match the RoBW plan: {e}")
+            })?;
+        }
+    }
+
+    // Global index space: layer l owns [starts[l], starts[l + 1]).
+    let mut starts = Vec::with_capacity(nl + 1);
+    let mut acc = 0usize;
+    for p in &plans {
+        starts.push(acc);
+        acc += p.len();
+    }
+    starts.push(acc);
+    let n_total = acc;
+
+    let panel_bytes: Vec<u64> = widths.iter().map(|&f| (a_hat.nrows * f * 4) as u64).collect();
+    let mut reports: Vec<LayerReport> = plans
+        .iter()
+        .map(|p| LayerReport {
+            segments: p.len(),
+            prefetch_depth: staging.prefetch.depth.max(1),
+            ..Default::default()
+        })
+        .collect();
+
+    // A 0-row matrix plans zero segments for every layer; run the combine
+    // chain directly (each layer's aggregation is the empty panel).
+    if n_total == 0 {
+        let mut out = Dense::zeros(0, x0.ncols);
+        for l in 0..nl {
+            out = finish(ctx, l, &Dense::zeros(a_hat.nrows, widths[l]))?;
+        }
+        return Ok((out, PipelineReport { per_layer: reports, ..PipelineReport::default() }));
+    }
+
+    let recycle = staging.recycle.as_deref();
+    // Scratch maxima across every layer's plan, used only by recycled
+    // in-memory staging (the disk path uses the store's precomputed ones):
+    // the first take per in-flight slot covers every later segment of
+    // every layer, so capacities never regrow mid-pass.
+    let (max_rows, max_nnz) = match (&staging.backing, recycle) {
+        (StagingBacking::Memory, Some(_)) => (
+            plans.iter().flatten().map(|s| s.row_hi - s.row_lo).max().unwrap_or(0),
+            plans.iter().flatten().map(|s| s.nnz).max().unwrap_or(0),
+        ),
+        _ => (0, 0),
+    };
+    // Every plan is non-empty here (n_total > 0 and all layers share the
+    // matrix), so `starts` is strictly increasing and the layer of global
+    // index g is the last start at or before it.
+    let locate = |g: usize| -> (usize, usize) {
+        let l = starts.partition_point(|&s| s <= g) - 1;
+        (l, g - starts[l])
+    };
+
+    let ledger = Mutex::new(LedgerState {
+        mem,
+        staged: 0,
+        panels: 0,
+        meters: vec![StagingMeter::default(); nl],
+    });
+
+    // Consumer-side state (all touched only on the calling thread).
+    let mut x_cur = XCur::Borrowed(x0);
+    let mut agg: Option<Dense> = None;
+    let mut final_out: Option<Dense> = None;
+    let mut panel_spill_bytes = 0u64;
+    let mut panel_read_bytes = 0u64;
+    let mut panel_hits = 0usize;
+    let mut panel_misses = 0usize;
+
+    let streamed = staging.prefetch.run_recycling(
+        pool,
+        n_total,
+        // ---- Producer: Phase I panel reservation + Phase II staging.
+        |g: usize, reuse: Option<Csr>| {
+            let (l, i) = locate(g);
+            let seg = &plans[l][i];
+            {
+                let mut led = lock(&ledger);
+                if i == 0 {
+                    // Phase I of layer l: its input panel becomes resident
+                    // before the layer's first segment stages — the same
+                    // ledger order as the single-layer pass.
+                    led.mem.alloc(panel_bytes[l], "feature panel").map_err(|e| {
+                        anyhow!("layer {l}: feature panel does not fit: {e}")
+                    })?;
+                    led.panels += panel_bytes[l];
+                }
+                led.mem
+                    .alloc(seg.bytes, "RoBW segment")
+                    .map_err(|e| anyhow!("layer {l}: segment does not fit: {e}"))?;
+                led.staged += seg.bytes;
+            }
+            match &staging.backing {
+                StagingBacking::Memory => {
+                    let mut sub = match (reuse, recycle) {
+                        (Some(m), _) => m,
+                        (None, Some(rp)) => rp.take_csr(max_rows, max_nnz),
+                        (None, None) => Csr::empty(0, 0),
+                    };
+                    materialize_into(a_hat, seg, &mut sub);
+                    if let Some(cm) = &staging.io_cost {
+                        let dur = cm.transfer_secs(Op::HtoD, seg.bytes);
+                        std::thread::sleep(std::time::Duration::from_secs_f64(dur));
+                    }
+                    Ok(SegmentRead::Owned(sub))
+                }
+                StagingBacking::Disk(store) => {
+                    let (sub, origin) = store
+                        .read_reusing(i, reuse, recycle)
+                        .map_err(|e| anyhow!("layer {l}: staging segment {i} from disk: {e}"))?;
+                    lock(&ledger).meters[l].record(origin.disk_bytes, origin.cache_hit);
+                    Ok(sub)
+                }
+            }
+        },
+        // ---- Consumer: Phase II compute + Phase III at layer boundaries.
+        |g: usize, sub: SegmentRead| {
+            let (l, i) = locate(g);
+            let seg = &plans[l][i];
+            if i == 0 {
+                // Layer open: materialize the input panel (reading back a
+                // spilled one) and take this layer's aggregation panel.
+                if let XCur::Spilled = x_cur {
+                    let ps = cfg.panel_spill.as_ref().expect("spilled only with a store");
+                    let (panel, origin) = ps.read_reusing(l - 1, recycle).map_err(|e| {
+                        anyhow!("layer {l}: reading back spilled feature panel: {e}")
+                    })?;
+                    panel_read_bytes += origin.disk_bytes;
+                    if origin.cache_hit {
+                        panel_hits += 1;
+                    } else {
+                        panel_misses += 1;
+                    }
+                    x_cur = match panel {
+                        PanelRead::Owned(p) => XCur::Owned(p),
+                        PanelRead::Shared(p) => XCur::Shared(p),
+                    };
+                }
+                agg = Some(match recycle {
+                    Some(rp) => Dense::from_vec(
+                        a_hat.nrows,
+                        widths[l],
+                        rp.take_panel(a_hat.nrows * widths[l]),
+                    ),
+                    None => Dense::zeros(a_hat.nrows, widths[l]),
+                });
+            }
+            consume(
+                ctx,
+                l,
+                seg,
+                &sub,
+                x_cur.panel(),
+                agg.as_mut().expect("aggregation panel taken at layer open"),
+            )?;
+            reports[l].h2d_bytes += seg.bytes;
+            {
+                let mut led = lock(&ledger);
+                led.mem.free(seg.bytes);
+                led.staged -= seg.bytes;
+            }
+            let give_back = if recycle.is_some() { sub.reclaim() } else { None };
+            if i + 1 == plans[l].len() {
+                // Phase III: combine, then retire the aggregation slab on
+                // every path (the `?` runs after it is back in the pool).
+                let full = agg.take().expect("aggregation panel present at layer close");
+                let finished = finish(ctx, l, &full);
+                if let Some(rp) = recycle {
+                    rp.put_panel(full.data);
+                }
+                let out = finished?;
+                {
+                    let mut led = lock(&ledger);
+                    led.mem.free(panel_bytes[l]);
+                    led.panels -= panel_bytes[l];
+                    reports[l].peak_gpu_bytes = led.mem.peak;
+                }
+                x_cur.retire(recycle);
+                if l + 1 == nl {
+                    final_out = Some(out);
+                } else if let Some(ps) = &cfg.panel_spill {
+                    let bytes = ps.put(l, &out).map_err(|e| {
+                        anyhow!("layer {l}: spilling feature panel to disk: {e}")
+                    })?;
+                    panel_spill_bytes += bytes;
+                    if let Some(rp) = recycle {
+                        rp.put_panel(out.data);
+                    }
+                    x_cur = XCur::Spilled;
+                } else {
+                    x_cur = XCur::Owned(out);
+                }
+            }
+            Ok(give_back)
+        },
+    );
+
+    // The producer has joined; reconcile whatever an abort stranded —
+    // staged-but-unconsumed segments and unreleased panel reservations.
+    let led = ledger.into_inner().unwrap_or_else(PoisonError::into_inner);
+    if led.staged > 0 {
+        led.mem.free(led.staged);
+    }
+    if led.panels > 0 {
+        led.mem.free(led.panels);
+    }
+    // Retire consumer-side slabs an abort left behind.
+    if let (Some(a), Some(rp)) = (agg.take(), recycle) {
+        rp.put_panel(a.data);
+    }
+    x_cur.retire(recycle);
+    let leftovers = streamed?;
+    if let Some(rp) = recycle {
+        for m in leftovers {
+            rp.put_csr(m);
+        }
+    }
+
+    // Fill the deterministic measured-I/O fields per layer.
+    for (l, r) in reports.iter_mut().enumerate() {
+        let meter = &led.meters[l];
+        r.disk_bytes = meter.disk_bytes;
+        r.cache_hits = meter.cache_hits;
+        r.cache_misses = meter.cache_misses;
+        if let Some(cm) = &staging.io_cost {
+            r.staged_io_modeled_s = meter.modeled_read_secs(cm);
+        }
+    }
+    Ok((
+        final_out.expect("last layer finished on the success path"),
+        PipelineReport {
+            per_layer: reports,
+            panel_spill_bytes,
+            panel_read_bytes,
+            panel_cache_hits: panel_hits,
+            panel_cache_misses: panel_misses,
+        },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::segstore::SegmentStore;
+    use crate::sparse::norm::normalize_adjacency;
+    use crate::sparse::spmm::spmm;
+    use crate::testing::TempDir;
+    use crate::util::rng::Pcg;
+
+    fn test_layer(rng: &mut Pcg, f: usize, h: usize, seg_budget: u64) -> OocGcnLayer {
+        OocGcnLayer {
+            w: Dense::from_vec(f, h, (0..f * h).map(|_| (rng.normal() * 0.2) as f32).collect()),
+            b: vec![0.05; h],
+            relu: true,
+            seg_budget,
+        }
+    }
+
+    fn test_model(rng: &mut Pcg, f: usize, n_layers: usize, seg_budget: u64) -> OocGcnModel {
+        OocGcnModel::new((0..n_layers).map(|_| test_layer(rng, f, f, seg_budget)).collect())
+            .unwrap()
+    }
+
+    /// Closed-form reference: chain spmm + dense_affine per layer.
+    fn reference_forward(model: &OocGcnModel, a_hat: &Csr, x: &Dense) -> Dense {
+        let mut cur = x.clone();
+        for l in &model.layers {
+            cur = dense_affine(&spmm(a_hat, &cur), &l.w, &l.b, l.relu);
+        }
+        cur
+    }
+
+    #[test]
+    fn model_rejects_unchained_widths() {
+        let mut rng = Pcg::seed(20);
+        let a = test_layer(&mut rng, 8, 8, 1024);
+        let b = test_layer(&mut rng, 4, 4, 1024);
+        let err = OocGcnModel::new(vec![a, b]).unwrap_err();
+        assert!(err.to_string().contains("layer 0"), "{err}");
+        assert!(OocGcnModel::new(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn pipelined_forward_matches_reference_and_sequential() {
+        let mut rng = Pcg::seed(21);
+        let a = crate::graphgen::kmer::generate(&mut rng, 250, 3.0);
+        let a_hat = normalize_adjacency(&a);
+        let x = Dense::from_vec(250, 8, (0..250 * 8).map(|_| rng.normal() as f32).collect());
+        for n_layers in [1usize, 2, 3] {
+            let model = test_model(&mut rng, 8, n_layers, 1536);
+            let want = reference_forward(&model, &a_hat, &x);
+            let mut mem = GpuMem::new(1 << 30);
+            let serial = PipelineConfig::serial();
+            let (seq, seq_rep) = model
+                .forward_cpu_sequential(&a_hat, &x, &mut mem, &Pool::serial(), &serial)
+                .unwrap();
+            assert_eq!(seq, want, "sequential oracle diverged from closed form");
+            assert_eq!(mem.used, 0);
+            for depth in [1usize, 2, 4] {
+                let mut mem = GpuMem::new(1 << 30);
+                let cfg = PipelineConfig::staged(StagingConfig::depth(depth));
+                let (got, rep) =
+                    model.forward_cpu(&a_hat, &x, &mut mem, &Pool::new(2), &cfg).unwrap();
+                assert_eq!(got, want, "layers={n_layers} depth={depth}");
+                assert_eq!(mem.used, 0, "ledger must balance");
+                assert_eq!(rep.per_layer.len(), n_layers);
+                for (r, s) in rep.per_layer.iter().zip(seq_rep.per_layer.iter()) {
+                    assert_eq!(r.segments, s.segments);
+                    assert_eq!(r.h2d_bytes, s.h2d_bytes);
+                }
+                let merged = rep.merged();
+                assert_eq!(
+                    merged.segments,
+                    rep.per_layer.iter().map(|r| r.segments).sum::<usize>()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn panel_spilling_is_byte_identical_and_measures_io() {
+        let mut rng = Pcg::seed(22);
+        let a = crate::graphgen::kmer::generate(&mut rng, 220, 3.0);
+        let a_hat = normalize_adjacency(&a);
+        let x = Dense::from_vec(220, 8, (0..220 * 8).map(|_| rng.normal() as f32).collect());
+        let model = test_model(&mut rng, 8, 3, 1536);
+        let want = reference_forward(&model, &a_hat, &x);
+
+        let dir = TempDir::new("pipeline-panel");
+        let pstore = Arc::new(PanelStore::new(dir.path(), 0).unwrap());
+        let cfg = PipelineConfig::staged(StagingConfig::depth(2))
+            .with_panel_spill(pstore.clone());
+        let mut mem = GpuMem::new(1 << 30);
+        let (got, rep) = model.forward_cpu(&a_hat, &x, &mut mem, &Pool::new(2), &cfg).unwrap();
+        assert_eq!(got, want, "panel-spilled pass must be byte-identical");
+        assert_eq!(mem.used, 0);
+        // Two intermediate panels spilled and read back (never the last).
+        assert_eq!(pstore.len(), 2);
+        assert_eq!(rep.panel_cache_hits + rep.panel_cache_misses, 2);
+        assert_eq!(rep.panel_cache_misses, 2, "cacheless panel store reads disk");
+        let expect: u64 = (0..2).map(|i| pstore.meta(i).unwrap().file_bytes).sum();
+        assert_eq!(rep.panel_spill_bytes, expect);
+        assert_eq!(rep.panel_read_bytes, expect);
+    }
+
+    #[test]
+    fn disk_backed_multilayer_shares_one_store_across_layers() {
+        let mut rng = Pcg::seed(23);
+        let a = crate::graphgen::kmer::generate(&mut rng, 200, 3.0);
+        let a_hat = normalize_adjacency(&a);
+        let x = Dense::from_vec(200, 8, (0..200 * 8).map(|_| rng.normal() as f32).collect());
+        let model = test_model(&mut rng, 8, 2, 1536);
+        let want = reference_forward(&model, &a_hat, &x);
+        let segs = crate::partition::robw::robw_partition(&a_hat, 1536);
+        let dir = TempDir::new("pipeline-disk");
+        let unbounded = crate::runtime::segstore::UNBOUNDED_CACHE;
+        let store =
+            Arc::new(SegmentStore::spill(&a_hat, &segs, dir.path(), unbounded).unwrap());
+        let cfg = PipelineConfig::staged(StagingConfig::disk(store, 2));
+        let mut mem = GpuMem::new(1 << 30);
+        let (got, rep) = model.forward_cpu(&a_hat, &x, &mut mem, &Pool::new(2), &cfg).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(mem.used, 0);
+        // Layer 0 misses to disk; layer 1 re-reads the same segments from
+        // the warm host tier.
+        assert_eq!(rep.per_layer[0].cache_misses, segs.len());
+        assert_eq!(rep.per_layer[1].cache_hits, segs.len());
+        assert_eq!(rep.per_layer[1].disk_bytes, 0);
+    }
+
+    #[test]
+    fn mismatched_budget_disk_pass_fails_before_allocating() {
+        let mut rng = Pcg::seed(24);
+        let a = crate::graphgen::kmer::generate(&mut rng, 150, 3.0);
+        let a_hat = normalize_adjacency(&a);
+        let x = Dense::zeros(150, 8);
+        // Layer 1 plans under a different budget than the store was
+        // spilled with: the plan check must fail before any allocation.
+        let l0 = test_layer(&mut rng, 8, 8, 1024);
+        let l1 = OocGcnLayer { seg_budget: 2048, ..test_layer(&mut rng, 8, 8, 1024) };
+        let model = OocGcnModel::new(vec![l0, l1]).unwrap();
+        let segs = crate::partition::robw::robw_partition(&a_hat, 1024);
+        let dir = TempDir::new("pipeline-mismatch");
+        let store = Arc::new(SegmentStore::spill(&a_hat, &segs, dir.path(), 0).unwrap());
+        let cfg = PipelineConfig::staged(StagingConfig::disk(store, 1));
+        let mut mem = GpuMem::new(1 << 30);
+        let err =
+            model.forward_cpu(&a_hat, &x, &mut mem, &Pool::serial(), &cfg).unwrap_err();
+        assert!(err.to_string().contains("layer 1"), "{err}");
+        assert!(err.to_string().contains("does not match the RoBW plan"), "{err}");
+        assert_eq!(mem.used, 0, "plan guard fires before any allocation");
+    }
+
+    #[test]
+    fn midstream_panel_oom_balances_the_ledger() {
+        let mut rng = Pcg::seed(25);
+        let a = crate::graphgen::kmer::generate(&mut rng, 120, 3.0);
+        let a_hat = normalize_adjacency(&a);
+        let x = Dense::from_vec(120, 4, (0..120 * 4).map(|_| rng.normal() as f32).collect());
+        // Layer 1 widens 4 -> 16: its panel cannot fit a ledger sized for
+        // layer 0 plus headroom, so the pass aborts at the boundary.
+        let l0 = test_layer(&mut rng, 4, 16, 1024);
+        let l1 = test_layer(&mut rng, 16, 16, 1024);
+        let model = OocGcnModel::new(vec![l0, l1]).unwrap();
+        let panel0 = (120 * 4 * 4) as u64;
+        let mut mem = GpuMem::new(panel0 + 2048);
+        let err = model
+            .forward_cpu(
+                &a_hat,
+                &x,
+                &mut mem,
+                &Pool::serial(),
+                &PipelineConfig::staged(StagingConfig::depth(1)),
+            )
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("does not fit"),
+            "expected an OOM at the layer boundary: {err}"
+        );
+        assert_eq!(mem.used, 0, "abort must return panels and segments to the ledger");
+    }
+}

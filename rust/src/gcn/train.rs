@@ -11,6 +11,38 @@ use crate::sparse::Csr;
 use crate::util::rng::Pcg;
 use anyhow::{anyhow, Result};
 
+/// Truncate or pad `adjacency` to an `n × n` square, dropping entries in
+/// columns `>= n`.
+///
+/// Rebuild is fully pre-sized: columns are strictly ascending within each
+/// row, so the survivors of a truncated row are exactly a prefix
+/// (`partition_point`), a counting pass sizes all three sections up
+/// front, and the copy pass is one `extend_from_slice` per row — the
+/// same prefix-copy discipline as [`Csr::slice_rows_into`]. The previous
+/// implementation round-tripped every surviving entry through a dense
+/// `Coo` push loop and a full `to_csr` re-sort.
+fn square_to_n(adjacency: &Csr, n: usize) -> Csr {
+    let rows = adjacency.nrows.min(n);
+    let mut rowptr = Vec::with_capacity(n + 1);
+    rowptr.push(0usize);
+    let mut nnz = 0usize;
+    for i in 0..rows {
+        let (lo, hi) = (adjacency.rowptr[i], adjacency.rowptr[i + 1]);
+        nnz += adjacency.colidx[lo..hi].partition_point(|&c| (c as usize) < n);
+        rowptr.push(nnz);
+    }
+    rowptr.resize(n + 1, nnz); // padded rows are empty
+    let mut colidx = Vec::with_capacity(nnz);
+    let mut vals = Vec::with_capacity(nnz);
+    for i in 0..rows {
+        let lo = adjacency.rowptr[i];
+        let keep = rowptr[i + 1] - rowptr[i];
+        colidx.extend_from_slice(&adjacency.colidx[lo..lo + keep]);
+        vals.extend_from_slice(&adjacency.vals[lo..lo + keep]);
+    }
+    Csr { nrows: n, ncols: n, rowptr, colidx, vals }
+}
+
 /// Training state bound to one `gcn2_train_step_*` artifact.
 pub struct Trainer {
     artifact: String,
@@ -53,29 +85,7 @@ impl Trainer {
         let classes = spec.meta["c"] as usize;
 
         // Truncate / pad the adjacency to n nodes, then normalize.
-        let sub = if adjacency.nrows >= n {
-            let mut s = adjacency.slice_rows(0, n);
-            // Drop columns >= n to stay square.
-            let mut coo = crate::sparse::Coo::new(n, n);
-            for i in 0..n {
-                for (c, v) in s.row(i) {
-                    if (c as usize) < n {
-                        coo.push(i as u32, c, v);
-                    }
-                }
-            }
-            s = coo.to_csr();
-            s
-        } else {
-            let mut coo = crate::sparse::Coo::new(n, n);
-            for i in 0..adjacency.nrows {
-                for (c, v) in adjacency.row(i) {
-                    coo.push(i as u32, c, v);
-                }
-            }
-            coo.to_csr()
-        };
-        let a_hat = normalize_adjacency(&sub);
+        let a_hat = normalize_adjacency(&square_to_n(adjacency, n));
         let a_dense = a_hat.to_dense();
 
         let mut rng = Pcg::seed(features_seed);
@@ -164,6 +174,43 @@ impl Trainer {
 mod tests {
     use super::*;
     use crate::runtime::find_artifact_dir;
+
+    /// The pre-refactor semantics, kept as the oracle: push every entry
+    /// with row < n and col < n through a COO and re-sort.
+    fn square_to_n_reference(adjacency: &Csr, n: usize) -> Csr {
+        let mut coo = crate::sparse::Coo::new(n, n);
+        for i in 0..adjacency.nrows.min(n) {
+            for (c, v) in adjacency.row(i) {
+                if (c as usize) < n {
+                    coo.push(i as u32, c, v);
+                }
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn square_to_n_matches_the_coo_reference() {
+        let mut rng = Pcg::seed(30);
+        for (nodes, n) in [(120usize, 80usize), (80, 80), (50, 96), (1, 4), (64, 1)] {
+            let g = crate::graphgen::kmer::generate(&mut rng, nodes, 3.0);
+            let got = square_to_n(&g, n);
+            got.validate().unwrap();
+            assert_eq!(got, square_to_n_reference(&g, n), "nodes={nodes} n={n}");
+        }
+        // Rectangular input with columns past n: survivors are a prefix.
+        let mut coo = crate::sparse::Coo::new(4, 10);
+        for r in 0..4u32 {
+            for c in [0u32, 2, 5, 9] {
+                coo.push(r, c, (r + c) as f32);
+            }
+        }
+        let wide = coo.to_csr();
+        let got = square_to_n(&wide, 6);
+        got.validate().unwrap();
+        assert_eq!(got, square_to_n_reference(&wide, 6));
+        assert_eq!(got.nnz(), 4 * 3, "columns >= 6 dropped");
+    }
 
     #[test]
     fn trainer_reduces_loss_on_kmer_graph() {

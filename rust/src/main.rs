@@ -18,6 +18,13 @@
 //!                      pass from the files through the host-cache tier,
 //!                      and verify byte-identity against the in-memory
 //!                      oracle (no compiled artifacts needed)
+//!   gcnstream [--layers L] [--nodes N] [--budget BYTES]
+//!             [--segment-dir DIR] [--panel-dir DIR]
+//!                      run an L-layer forward through the cross-layer
+//!                      streaming pipeline (one scheduler, no drain at
+//!                      layer boundaries; --panel-dir spills intermediate
+//!                      feature panels) and verify byte-identity against
+//!                      the per-layer sequential oracle (artifact-free)
 //!   prep DATASET       one-time RoBW preprocessing cost estimate
 
 use aires::config::Config;
@@ -56,6 +63,43 @@ fn parsed_flag<T: std::str::FromStr>(args: &[String], key: &str, what: &str) -> 
         v.parse::<T>()
             .unwrap_or_else(|_| usage_fail(&format!("{key} expects {what}, got {v:?}")))
     })
+}
+
+/// Phase II staging configuration shared by the streaming subcommands
+/// (`spgemm`, `gcnstream`): in-memory slicing by default, disk-backed via
+/// `open_or_spill` when a segment directory is selected, recycled when
+/// the buffer pool is enabled. A spill failure is a fatal runtime error
+/// (exit 1), not a usage error.
+fn staging_for(
+    a_hat: &aires::sparse::Csr,
+    budget: u64,
+    segment_dir: &Option<String>,
+    host_cache_bytes: u64,
+    prefetch_depth: usize,
+    recycle_pool: &Option<std::sync::Arc<aires::runtime::BufferPool>>,
+) -> aires::gcn::oocgcn::StagingConfig {
+    use aires::gcn::oocgcn::StagingConfig;
+    let mut staging = match segment_dir {
+        None => StagingConfig::depth(prefetch_depth),
+        Some(dir) => {
+            let segs = aires::partition::robw::robw_partition(a_hat, budget);
+            let store = aires::runtime::SegmentStore::open_or_spill(
+                a_hat,
+                &segs,
+                std::path::Path::new(dir),
+                host_cache_bytes,
+            )
+            .unwrap_or_else(|e| {
+                eprintln!("error: spilling segments to {dir}: {e}");
+                std::process::exit(1);
+            });
+            StagingConfig::disk(std::sync::Arc::new(store), prefetch_depth)
+        }
+    };
+    if let Some(rp) = recycle_pool {
+        staging = staging.with_recycle(rp.clone());
+    }
+    staging
 }
 
 fn main() {
@@ -259,29 +303,14 @@ fn main() {
             let mut mem = aires::memsim::GpuMem::new(256 << 20);
             // --segment-dir switches staging from in-memory slicing to
             // real file reads through the host-cache tier.
-            let mut staging = match &segment_dir {
-                None => aires::gcn::oocgcn::StagingConfig::depth(prefetch_depth),
-                Some(dir) => {
-                    let segs = aires::partition::robw::robw_partition(&a_hat, budget);
-                    let store = aires::runtime::SegmentStore::open_or_spill(
-                        &a_hat,
-                        &segs,
-                        std::path::Path::new(dir),
-                        host_cache_bytes,
-                    )
-                    .unwrap_or_else(|e| {
-                        eprintln!("error: spilling segments to {dir}: {e}");
-                        std::process::exit(1);
-                    });
-                    aires::gcn::oocgcn::StagingConfig::disk(
-                        std::sync::Arc::new(store),
-                        prefetch_depth,
-                    )
-                }
-            };
-            if let Some(rp) = &recycle_pool {
-                staging = staging.with_recycle(rp.clone());
-            }
+            let staging = staging_for(
+                &a_hat,
+                budget,
+                &segment_dir,
+                host_cache_bytes,
+                prefetch_depth,
+                &recycle_pool,
+            );
             let (out, rep) = layer
                 .forward_staged(&mut exec, &a_hat, &x, &mut mem, &pool, &staging)
                 .expect("forward");
@@ -406,6 +435,165 @@ fn main() {
                 std::process::exit(1);
             }
         }
+        "gcnstream" => {
+            // Multi-layer cross-layer streaming surface (no compiled
+            // artifacts needed): build an L-layer model, run it through
+            // the pipelined executor — layer l+1's segments stage while
+            // layer l's combine runs — and verify the output is
+            // byte-identical to the drain-at-boundary per-layer oracle.
+            use aires::gcn::pipeline::{OocGcnModel, PipelineConfig};
+            use aires::memsim::GpuMem;
+            use aires::runtime::PanelStore;
+            use aires::sparse::spmm::Dense;
+
+            let nodes: usize = parsed_flag(&args, "--nodes", "a node count").unwrap_or(300);
+            let budget: u64 = parsed_flag(&args, "--budget", "a byte budget").unwrap_or(4096);
+            // --layers L sizes the model; 0 is clamped to 1 with a
+            // warning (same convention as --prefetch-depth 0); unset
+            // falls back to the config's `layers` key.
+            let layers_n: usize =
+                parsed_flag(&args, "--layers", "a positive layer count (the model depth)")
+                    .map(|l: usize| {
+                        if l == 0 {
+                            eprintln!(
+                                "warning: --layers 0 is not a valid model depth; \
+                                 using 1 (single layer)"
+                            );
+                            1
+                        } else {
+                            l
+                        }
+                    })
+                    .unwrap_or((cfg.layers as usize).max(1));
+            let f = 16usize;
+            let mut rng = Pcg::seed(17);
+            let a = aires::graphgen::kmer::generate(&mut rng, nodes, 3.0);
+            let a_hat = aires::sparse::norm::normalize_adjacency(&a);
+            let x = Dense::from_vec(
+                nodes,
+                f,
+                (0..nodes * f).map(|_| rng.normal() as f32).collect(),
+            );
+            let model = OocGcnModel::new(
+                (0..layers_n)
+                    .map(|_| aires::gcn::OocGcnLayer {
+                        w: Dense::from_vec(
+                            f,
+                            f,
+                            (0..f * f).map(|_| (rng.normal() * 0.2) as f32).collect(),
+                        ),
+                        b: vec![0.05; f],
+                        relu: true,
+                        seg_budget: budget,
+                    })
+                    .collect(),
+            )
+            .expect("equal-width layers always chain");
+
+            // Segment backing: in-memory slicing, or real file reads when
+            // --segment-dir / config `segment_dir` is set (one store
+            // serves every layer).
+            let staging = staging_for(
+                &a_hat,
+                budget,
+                &segment_dir,
+                host_cache_bytes,
+                prefetch_depth,
+                &recycle_pool,
+            );
+            // Panel spilling: --panel-dir / config `panel_dir` routes
+            // every intermediate feature panel through the disk tier.
+            // The panel tier runs cacheless here: each intermediate panel
+            // is read back exactly once per pass, so caching it would
+            // just pin the activations in host RAM — the residency
+            // spilling exists to avoid.
+            let panel_dir: Option<String> =
+                flag_value(&args, "--panel-dir").or_else(|| cfg.panel_dir.clone());
+            let mut pcfg = PipelineConfig::staged(staging);
+            let panel_store = panel_dir.as_ref().map(|dir| {
+                let store = PanelStore::new(std::path::Path::new(dir), 0).unwrap_or_else(|e| {
+                    eprintln!("error: opening panel dir {dir}: {e}");
+                    std::process::exit(1);
+                });
+                std::sync::Arc::new(store)
+            });
+            if let Some(ps) = &panel_store {
+                pcfg = pcfg.with_panel_spill(ps.clone());
+            }
+
+            let mut mem = GpuMem::new(1 << 30);
+            let (got, rep) = model
+                .forward_cpu(&a_hat, &x, &mut mem, &pool, &pcfg)
+                .expect("pipelined multi-layer forward");
+            let mut mem2 = GpuMem::new(1 << 30);
+            let (want, _) = model
+                .forward_cpu_sequential(
+                    &a_hat,
+                    &x,
+                    &mut mem2,
+                    &Pool::serial(),
+                    &PipelineConfig::serial(),
+                )
+                .expect("sequential oracle forward");
+
+            let merged = rep.merged();
+            println!(
+                "gcnstream: {layers_n} layers over {nodes} nodes, {} segments total \
+                 (prefetch depth {}, one cross-layer pipeline)",
+                merged.segments, merged.prefetch_depth
+            );
+            for (l, r) in rep.per_layer.iter().enumerate() {
+                let disk = if segment_dir.is_some() {
+                    format!(
+                        ", {} from disk, {} hits / {} misses",
+                        aires::util::human_bytes(r.disk_bytes),
+                        r.cache_hits,
+                        r.cache_misses
+                    )
+                } else {
+                    String::new()
+                };
+                println!(
+                    "  layer {l}: {} segments, H2D {}{disk}",
+                    r.segments,
+                    aires::util::human_bytes(r.h2d_bytes)
+                );
+            }
+            println!(
+                "merged: H2D {}, peak {}",
+                aires::util::human_bytes(merged.h2d_bytes),
+                aires::util::human_bytes(merged.peak_gpu_bytes)
+            );
+            if let Some(ps) = &panel_store {
+                println!(
+                    "panel spill: wrote {} ({} panels) to {}, read back {} \
+                     ({} hits / {} misses)",
+                    aires::util::human_bytes(rep.panel_spill_bytes),
+                    ps.len(),
+                    ps.dir().display(),
+                    aires::util::human_bytes(rep.panel_read_bytes),
+                    rep.panel_cache_hits,
+                    rep.panel_cache_misses
+                );
+            }
+            if let Some(rp) = &recycle_pool {
+                let st = rp.stats();
+                println!(
+                    "recycle pool: {} hits / {} misses, {} returned ({} dropped by the cap)",
+                    st.hits, st.misses, st.returns, st.drops
+                );
+            }
+            if got == want {
+                println!(
+                    "pipelined multi-layer output byte-identical to the per-layer oracle: OK"
+                );
+            } else {
+                eprintln!(
+                    "error: pipelined multi-layer output DIVERGED from the per-layer oracle"
+                );
+                std::process::exit(1);
+            }
+        }
         "parcheck" => {
             // Serial-vs-parallel differential check + timing of the hot
             // kernels on generated graphs: the runtime surface for
@@ -472,7 +660,7 @@ fn main() {
         _ => {
             println!(
                 "aires — out-of-core GCN co-design (AIRES reproduction)\n\n\
-                 usage: aires <catalog|features|fig3|fig6|fig7|fig8|fig9|table3|report|prep|train|spgemm|segcheck|parcheck|trace|sweep|config-dump> [--config F] [--threads N] [--prefetch-depth D] [--segment-dir DIR] [--host-cache-bytes N] [--recycle-cap-bytes N] [args]\n\
+                 usage: aires <catalog|features|fig3|fig6|fig7|fig8|fig9|table3|report|prep|train|spgemm|segcheck|gcnstream|parcheck|trace|sweep|config-dump> [--config F] [--threads N] [--prefetch-depth D] [--segment-dir DIR] [--host-cache-bytes N] [--recycle-cap-bytes N] [--layers L] [--panel-dir DIR] [args]\n\
                  see README.md for details"
             );
         }

@@ -21,7 +21,7 @@ pub use executor::Executor;
 pub use pool::Pool;
 pub use prefetch::Prefetch;
 pub use recycle::{BufferPool, RecycleStats};
-pub use segstore::{CacheStats, SegmentRead, SegmentStore};
+pub use segstore::{CacheStats, PanelRead, PanelStore, SegmentRead, SegmentStore};
 pub use tile_exec::BsrSpmmExec;
 
 /// Default artifact directory relative to the repo root.

@@ -8,10 +8,11 @@
 //! whole staging pipeline draws from — the prefetch producer takes
 //! decode scratch here, the consumer hands drained segment buffers back
 //! through the [`Prefetch::run_recycling`](crate::runtime::prefetch::Prefetch::run_recycling)
-//! return channel, and `OocGcnLayer::forward_streamed` computes every
-//! partial straight into one pass-wide output panel. In steady state the
-//! hot loop performs **zero heap allocations per segment** (enforced by
-//! the counting-allocator test in `rust/tests/alloc_free.rs`).
+//! return channel, and the `gcn::pipeline` streaming engine computes every
+//! partial straight into one per-layer output panel (whose slab circulates
+//! across layers of a multi-layer pass). In steady state the hot loop
+//! performs **zero heap allocations per segment** (enforced by the
+//! counting-allocator test in `rust/tests/alloc_free.rs`).
 //!
 //! Determinism: recycling changes only *where buffer capacity comes from*,
 //! never the bytes written through it — every staged segment is fully
@@ -180,6 +181,21 @@ impl BufferPool {
 
     /// Take a dense f32 panel of exactly `len` elements, zero-filled.
     pub fn take_panel(&self, len: usize) -> Vec<f32> {
+        let mut p = self.pop_panel(len);
+        p.resize(len, 0.0);
+        p
+    }
+
+    /// Take an **empty** f32 slab with capacity at least `min_cap` — the
+    /// panel analog of [`Self::take_bytes`] for callers that push every
+    /// element themselves (e.g. a panel decode): no zero-fill is paid for
+    /// contents that are about to be overwritten.
+    pub fn take_panel_scratch(&self, min_cap: usize) -> Vec<f32> {
+        self.pop_panel(min_cap)
+    }
+
+    /// Pop (or allocate) a cleared panel slab with capacity ≥ `min_cap`.
+    fn pop_panel(&self, min_cap: usize) -> Vec<f32> {
         let popped = {
             let mut s = self.slabs.lock().unwrap();
             match s.panels.pop() {
@@ -196,7 +212,7 @@ impl BufferPool {
         };
         let mut p = popped.unwrap_or_default();
         p.clear();
-        p.resize(len, 0.0);
+        p.reserve(min_cap);
         p
     }
 
@@ -281,6 +297,20 @@ mod tests {
         pool.put_panel(p);
         let p2 = pool.take_panel(5);
         assert_eq!(p2, vec![0.0; 5], "reused panel is re-zeroed and resized");
+        assert_eq!(pool.stats().hits, 1);
+    }
+
+    #[test]
+    fn panel_scratch_skips_the_zero_fill_but_keeps_capacity() {
+        let pool = BufferPool::new(1 << 20);
+        let mut p = pool.take_panel_scratch(64);
+        assert!(p.is_empty(), "scratch comes back empty, not zero-filled");
+        assert!(p.capacity() >= 64);
+        p.extend(std::iter::repeat(3.0).take(64));
+        pool.put_panel(p);
+        let p2 = pool.take_panel_scratch(16);
+        assert!(p2.is_empty());
+        assert!(p2.capacity() >= 64, "capacity survives the round trip");
         assert_eq!(pool.stats().hits, 1);
     }
 

@@ -27,6 +27,7 @@
 use crate::partition::robw::{calc_mem, materialize, RobwSegment};
 use crate::runtime::recycle::BufferPool;
 use crate::sparse::segio::{self, Fnv64, SegioError};
+use crate::sparse::spmm::Dense;
 use crate::sparse::Csr;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -128,19 +129,34 @@ impl std::ops::Deref for SegmentRead {
     }
 }
 
-#[derive(Debug, Default)]
-struct HostCache {
+/// The deterministic-LRU host tier, generic over what it holds: decoded
+/// CSR segments for [`SegmentStore`], dense feature panels for
+/// [`PanelStore`]. Entry costs are supplied by the caller at insertion
+/// (decoded logical bytes), so eviction accounting is type-agnostic.
+#[derive(Debug)]
+struct HostCache<T> {
     /// Byte bound (0 disables the tier entirely).
     capacity: u64,
     used: u64,
-    /// Decoded segments keyed by index, shared with in-flight readers.
-    entries: HashMap<usize, Arc<Csr>>,
+    /// Decoded entries keyed by index, shared with in-flight readers,
+    /// each with the cost it was charged at insertion.
+    entries: HashMap<usize, (Arc<T>, u64)>,
     /// LRU order: front = coldest, back = hottest.
     order: Vec<usize>,
     stats: CacheStats,
 }
 
-impl HostCache {
+impl<T> HostCache<T> {
+    fn new(capacity: u64) -> HostCache<T> {
+        HostCache {
+            capacity,
+            used: 0,
+            entries: HashMap::new(),
+            order: Vec::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
     fn touch(&mut self, idx: usize) {
         if let Some(pos) = self.order.iter().position(|&i| i == idx) {
             self.order.remove(pos);
@@ -148,25 +164,42 @@ impl HostCache {
         self.order.push(idx);
     }
 
-    /// Insert a decoded segment, evicting LRU entries to stay within the
-    /// bound. Returns `false` when the tier is disabled or the segment
-    /// alone exceeds it (the caller then keeps sole ownership).
-    fn insert(&mut self, idx: usize, m: Arc<Csr>) -> bool {
-        let cost = m.size_bytes();
+    /// Shared view of a resident entry (no LRU update; see [`Self::touch`]).
+    fn get(&self, idx: usize) -> Option<Arc<T>> {
+        self.entries.get(&idx).map(|(m, _)| Arc::clone(m))
+    }
+
+    /// Insert a decoded entry charged `cost` bytes, evicting LRU entries
+    /// to stay within the bound. Returns `false` when the tier is disabled
+    /// or the entry alone exceeds it (the caller then keeps sole
+    /// ownership).
+    fn insert(&mut self, idx: usize, m: Arc<T>, cost: u64) -> bool {
         if self.capacity == 0 || cost > self.capacity {
-            return false; // tier disabled, or the segment alone exceeds the bound
+            return false; // tier disabled, or the entry alone exceeds the bound
         }
         while self.used + cost > self.capacity {
             let coldest = self.order.remove(0);
-            let evicted = self.entries.remove(&coldest).expect("order tracks entries");
-            self.used -= evicted.size_bytes();
+            let (_, evicted_cost) =
+                self.entries.remove(&coldest).expect("order tracks entries");
+            self.used -= evicted_cost;
             self.stats.evictions += 1;
         }
         self.used += cost;
-        self.entries.insert(idx, m);
+        self.entries.insert(idx, (m, cost));
         self.order.push(idx);
         self.stats.resident_bytes = self.used;
         true
+    }
+
+    /// Drop a resident entry (a rewritten panel must not serve stale
+    /// bytes). Not counted as an eviction — nothing was displaced by
+    /// pressure.
+    fn remove(&mut self, idx: usize) {
+        if let Some((_, cost)) = self.entries.remove(&idx) {
+            self.used -= cost;
+            self.order.retain(|&i| i != idx);
+            self.stats.resident_bytes = self.used;
+        }
     }
 }
 
@@ -192,7 +225,7 @@ pub struct SegmentStore {
     /// Immutable copy of the host tier's byte bound, readable without the
     /// cache lock (cacheability prediction in [`Self::read_reusing`]).
     cache_capacity: u64,
-    cache: Mutex<HostCache>,
+    cache: Mutex<HostCache<Csr>>,
 }
 
 /// Fingerprint of (matrix payload, planned layout). The fixture-reuse
@@ -359,10 +392,7 @@ impl SegmentStore {
             max_seg_rows,
             max_seg_nnz,
             cache_capacity: host_cache_bytes,
-            cache: Mutex::new(HostCache {
-                capacity: host_cache_bytes,
-                ..HostCache::default()
-            }),
+            cache: Mutex::new(HostCache::new(host_cache_bytes)),
         }
     }
 
@@ -443,8 +473,7 @@ impl SegmentStore {
         let meta = &self.segs[i];
         {
             let mut cache = self.cache.lock().unwrap();
-            if let Some(m) = cache.entries.get(&i) {
-                let m = Arc::clone(m);
+            if let Some(m) = cache.get(i) {
                 cache.touch(i);
                 cache.stats.hits += 1;
                 drop(cache);
@@ -537,12 +566,262 @@ impl SegmentStore {
             m.rowptr.shrink_to_fit();
             m.colidx.shrink_to_fit();
             m.vals.shrink_to_fit();
+            let cost = m.size_bytes();
             let shared = Arc::new(m);
-            let inserted = cache.insert(i, Arc::clone(&shared));
+            let inserted = cache.insert(i, Arc::clone(&shared), cost);
             debug_assert!(inserted, "cacheability was checked above");
             SegmentRead::Shared(shared)
         };
         cache.stats.resident_bytes = cache.used;
+        Ok((result, ReadOrigin { disk_bytes: bytes, cache_hit: false }))
+    }
+}
+
+// ------------------------------------------------------------ panel tier
+
+/// One spilled feature panel's metadata (manifest entry of a
+/// [`PanelStore`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PanelMeta {
+    /// Panel row count.
+    pub nrows: usize,
+    /// Panel column count (the layer's feature width).
+    pub ncols: usize,
+    /// Encoded file size on disk (header + payload).
+    pub file_bytes: u64,
+    /// Panel file path.
+    pub path: PathBuf,
+}
+
+/// A served feature panel: owned (its data vector can retire to the
+/// staging [`BufferPool`]) or shared with the host tier — the panel-side
+/// analog of [`SegmentRead`].
+#[derive(Debug, Clone)]
+pub enum PanelRead {
+    /// Owned decoded panel.
+    Owned(Dense),
+    /// Cache-resident panel, shared without a defensive clone.
+    Shared(Arc<Dense>),
+}
+
+impl PanelRead {
+    /// The decoded panel, however it is held.
+    pub fn dense(&self) -> &Dense {
+        match self {
+            PanelRead::Owned(p) => p,
+            PanelRead::Shared(p) => p,
+        }
+    }
+
+    /// Clone out an owned panel (test/tool convenience; copies on the
+    /// shared variant).
+    pub fn into_dense(self) -> Dense {
+        match self {
+            PanelRead::Owned(p) => p,
+            PanelRead::Shared(p) => (*p).clone(),
+        }
+    }
+}
+
+impl std::ops::Deref for PanelRead {
+    type Target = Dense;
+
+    fn deref(&self) -> &Dense {
+        self.dense()
+    }
+}
+
+/// Disk-backed store for intermediate dense feature panels, served through
+/// the same deterministic-LRU host tier as CSR segments.
+///
+/// The cross-layer pipeline (`gcn::pipeline`) writes layer `l`'s output
+/// panel here after its Phase III combine ([`PanelStore::put`] →
+/// `panel-%05d.bin` in the [`segio`] panel record format) and reads it
+/// back as layer `l+1`'s Phase I input ([`PanelStore::read`]), so the
+/// intermediate activations of an N-layer forward need not stay resident
+/// in host RAM between layers. Unlike [`SegmentStore`] the manifest grows
+/// as the pass runs — panels are produced mid-stream, not pre-spilled —
+/// and a rewrite of slot `l` invalidates any cache-resident copy before
+/// the new bytes land.
+///
+/// Determinism matches the segment tier: the pipeline consumer writes and
+/// reads panels strictly in layer order, so hit/miss patterns and measured
+/// panel I/O are identical at every prefetch depth and thread count.
+#[derive(Debug)]
+pub struct PanelStore {
+    dir: PathBuf,
+    cache_capacity: u64,
+    state: Mutex<PanelState>,
+}
+
+#[derive(Debug)]
+struct PanelState {
+    metas: HashMap<usize, PanelMeta>,
+    cache: HostCache<Dense>,
+}
+
+/// Decoded logical bytes of a panel (what the host tier is charged).
+fn panel_cost(p: &Dense) -> u64 {
+    p.data.len() as u64 * 4
+}
+
+impl PanelStore {
+    fn panel_path(dir: &Path, idx: usize) -> PathBuf {
+        dir.join(format!("panel-{idx:05}.bin"))
+    }
+
+    /// Open (creating if missing) a panel directory, serving reads through
+    /// a host cache of at most `host_cache_bytes` decoded bytes (`0` = no
+    /// cache, [`UNBOUNDED_CACHE`] = keep everything). The directory is
+    /// scratch space: slots are rewritten in place by each pass.
+    pub fn new(dir: &Path, host_cache_bytes: u64) -> Result<PanelStore, SegioError> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| SegioError::Io(format!("create {}: {e}", dir.display())))?;
+        Ok(PanelStore {
+            dir: dir.to_path_buf(),
+            cache_capacity: host_cache_bytes,
+            state: Mutex::new(PanelState {
+                metas: HashMap::new(),
+                cache: HostCache::new(host_cache_bytes),
+            }),
+        })
+    }
+
+    /// Directory the panel files live in.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Number of panels the store currently holds.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().metas.len()
+    }
+
+    /// Whether no panel has been spilled yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Metadata of panel `idx` (`None` until it has been spilled).
+    pub fn meta(&self, idx: usize) -> Option<PanelMeta> {
+        self.state.lock().unwrap().metas.get(&idx).cloned()
+    }
+
+    /// Serving counters since the store was created.
+    pub fn stats(&self) -> CacheStats {
+        self.state.lock().unwrap().cache.stats
+    }
+
+    /// Spill panel `idx` to disk, replacing any previous spill of the same
+    /// slot (and dropping its stale cache entry *before* the write, so a
+    /// concurrent reader can never see old bytes under a new manifest).
+    /// Returns the encoded file size — the measured panel-spill I/O the
+    /// pipeline report charges.
+    pub fn put(&self, idx: usize, p: &Dense) -> Result<u64, SegioError> {
+        let path = Self::panel_path(&self.dir, idx);
+        {
+            let mut st = self.state.lock().unwrap();
+            st.cache.remove(idx);
+            st.metas.remove(&idx);
+        }
+        let file_bytes = segio::write_panel(&path, p)?;
+        let mut st = self.state.lock().unwrap();
+        st.metas.insert(
+            idx,
+            PanelMeta { nrows: p.nrows, ncols: p.ncols, file_bytes, path },
+        );
+        Ok(file_bytes)
+    }
+
+    /// Read panel `idx`: from the host tier when resident, else from disk
+    /// (checksum-verified), updating the LRU state either way.
+    pub fn read(&self, idx: usize) -> Result<(PanelRead, ReadOrigin), SegioError> {
+        self.read_reusing(idx, None)
+    }
+
+    /// [`Self::read`] with recycled buffers: `pool` supplies the byte
+    /// scratch and the panel slab a cache-bypassing read decodes into, and
+    /// retires the byte scratch after the decode. Byte-for-byte the served
+    /// panel is identical to [`Self::read`]'s.
+    pub fn read_reusing(
+        &self,
+        idx: usize,
+        pool: Option<&BufferPool>,
+    ) -> Result<(PanelRead, ReadOrigin), SegioError> {
+        let meta = {
+            let mut st = self.state.lock().unwrap();
+            if let Some(p) = st.cache.get(idx) {
+                st.cache.touch(idx);
+                st.cache.stats.hits += 1;
+                return Ok((PanelRead::Shared(p), ReadOrigin { disk_bytes: 0, cache_hit: true }));
+            }
+            st.metas
+                .get(&idx)
+                .cloned()
+                .ok_or_else(|| SegioError::Io(format!("panel {idx} was never spilled")))?
+        };
+        // Disk read outside the lock, like the segment tier. A read that
+        // will land in the host tier decodes into exact-size fresh storage
+        // (its buffer is donated to the cache); one that will not borrows
+        // pooled scratch the caller's pipeline keeps circulating.
+        let decoded = (meta.nrows * meta.ncols * 4) as u64;
+        let likely_cached = self.cache_capacity > 0 && decoded <= self.cache_capacity;
+        let mut p = match (likely_cached, pool) {
+            // Empty scratch, not a zero-filled panel: the decode pushes
+            // every element itself, so a take_panel memset would be pure
+            // waste on the per-layer readback path.
+            (false, Some(pool)) => Dense {
+                nrows: 0,
+                ncols: 0,
+                data: pool.take_panel_scratch(meta.nrows * meta.ncols),
+            },
+            _ => Dense::zeros(0, 0),
+        };
+        let mut scratch = match pool {
+            Some(pool) => pool.take_bytes(meta.file_bytes as usize),
+            None => Vec::new(),
+        };
+        let read = segio::read_panel_into(&meta.path, &mut scratch, &mut p);
+        if let Some(pool) = pool {
+            pool.put_bytes(scratch);
+        }
+        let bytes = match read {
+            Ok(b) => b,
+            Err(e) => {
+                if let Some(pool) = pool {
+                    pool.put_panel(p.data);
+                }
+                return Err(e);
+            }
+        };
+        if p.nrows != meta.nrows || p.ncols != meta.ncols {
+            let err = SegioError::InvalidPanel(format!(
+                "panel {idx} decoded to {}×{}, manifest says {}×{}",
+                p.nrows, p.ncols, meta.nrows, meta.ncols
+            ));
+            if let Some(pool) = pool {
+                pool.put_panel(p.data);
+            }
+            return Err(err);
+        }
+        let mut st = self.state.lock().unwrap();
+        st.cache.stats.misses += 1;
+        st.cache.stats.disk_bytes += bytes;
+        let cost = panel_cost(&p);
+        let cacheable = st.cache.capacity > 0 && cost <= st.cache.capacity;
+        let result = if st.cache.entries.contains_key(&idx) || !cacheable {
+            PanelRead::Owned(p)
+        } else {
+            // Donated to the cache: shrink so a resident panel pins only
+            // its logical bytes (same discipline as the segment tier).
+            p.data.shrink_to_fit();
+            let shared = Arc::new(p);
+            let inserted = st.cache.insert(idx, Arc::clone(&shared), cost);
+            debug_assert!(inserted, "cacheability was checked above");
+            PanelRead::Shared(shared)
+        };
+        let used = st.cache.used;
+        st.cache.stats.resident_bytes = used;
         Ok((result, ReadOrigin { disk_bytes: bytes, cache_hit: false }))
     }
 }
@@ -746,6 +1025,94 @@ mod tests {
         assert!(precious2.exists(), "respill must only remove seg-*.bin + fingerprint");
         // No leftovers from the longer stale plan.
         assert!(!SegmentStore::seg_path(dir2.path(), segs.len()).exists());
+    }
+
+    #[test]
+    fn panel_store_roundtrips_and_serves_from_cache() {
+        let mut rng = Pcg::seed(210);
+        let dir = TempDir::new("panelstore-rt");
+        let store = PanelStore::new(dir.path(), UNBOUNDED_CACHE).unwrap();
+        assert!(store.is_empty());
+        let p0 = Dense::from_vec(6, 4, (0..24).map(|_| rng.normal() as f32).collect());
+        let p1 = Dense::from_vec(6, 3, (0..18).map(|_| rng.normal() as f32).collect());
+        let b0 = store.put(0, &p0).unwrap();
+        store.put(1, &p1).unwrap();
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.meta(0).unwrap().file_bytes, b0);
+        assert_eq!(b0, segio::encoded_panel_len(6, 4));
+
+        // First read misses to disk, second is a host-tier hit.
+        let (r0, o0) = store.read(0).unwrap();
+        assert_eq!(r0.dense(), &p0);
+        assert!(!o0.cache_hit);
+        assert_eq!(o0.disk_bytes, b0);
+        let (r0b, o0b) = store.read(0).unwrap();
+        assert_eq!(r0b.dense(), &p0);
+        assert!(o0b.cache_hit);
+        assert_eq!(o0b.disk_bytes, 0);
+        assert_eq!(store.read(1).unwrap().0.into_dense(), p1);
+        let st = store.stats();
+        assert_eq!((st.hits, st.misses), (1, 2));
+
+        // A never-spilled slot is a typed error.
+        assert!(matches!(store.read(7), Err(SegioError::Io(_))));
+    }
+
+    #[test]
+    fn panel_rewrite_invalidates_the_cached_copy() {
+        let dir = TempDir::new("panelstore-rewrite");
+        let store = PanelStore::new(dir.path(), UNBOUNDED_CACHE).unwrap();
+        let old = Dense::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        store.put(0, &old).unwrap();
+        let (r, _) = store.read(0).unwrap();
+        assert_eq!(r.dense(), &old);
+        // Rewrite the slot: the resident copy must not survive.
+        let new = Dense::from_vec(2, 2, vec![9.0, 8.0, 7.0, 6.0]);
+        store.put(0, &new).unwrap();
+        let (r2, o2) = store.read(0).unwrap();
+        assert_eq!(r2.dense(), &new, "rewritten slot must serve the new bytes");
+        assert!(!o2.cache_hit, "stale cache entry must have been dropped");
+    }
+
+    #[test]
+    fn panel_cache_disabled_reads_disk_and_recycles_scratch() {
+        let dir = TempDir::new("panelstore-nocache");
+        let store = PanelStore::new(dir.path(), 0).unwrap();
+        let p = Dense::from_vec(5, 3, (0..15).map(|i| i as f32).collect());
+        store.put(0, &p).unwrap();
+        let pool = BufferPool::new(1 << 20);
+        for _ in 0..3 {
+            let (r, o) = store.read_reusing(0, Some(&pool)).unwrap();
+            assert!(!o.cache_hit);
+            assert!(o.disk_bytes > 0);
+            match r {
+                PanelRead::Owned(d) => {
+                    assert_eq!(d, p);
+                    pool.put_panel(d.data);
+                }
+                PanelRead::Shared(_) => panic!("cacheless reads are owned"),
+            }
+        }
+        let st = pool.stats();
+        assert!(st.hits > 0, "byte + panel scratch must cycle through the pool: {st:?}");
+        assert_eq!(store.stats().hits, 0);
+        assert_eq!(store.stats().resident_bytes, 0);
+    }
+
+    #[test]
+    fn panel_corruption_surfaces_typed_errors() {
+        let dir = TempDir::new("panelstore-fault");
+        let store = PanelStore::new(dir.path(), 0).unwrap();
+        let p = Dense::from_vec(4, 4, (0..16).map(|i| i as f32 * 0.5).collect());
+        store.put(0, &p).unwrap();
+        let path = store.meta(0).unwrap().path;
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(matches!(store.read(0), Err(SegioError::PayloadChecksum { .. })));
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(matches!(store.read(0), Err(SegioError::Truncated { .. })));
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! On-disk segment I/O: the versioned, checksummed binary format RoBW/CSR
-//! segments are spilled to and staged back from (paper §III-B's tiered
+//! segments — and, since the cross-layer pipeline, dense feature panels —
+//! are spilled to and staged back from (paper §III-B's tiered
 //! GPU ↔ NVMe ↔ host-RAM system, made concrete).
 //!
 //! Layout (fixed little-endian, so files are byte-stable across runs and
@@ -9,25 +10,35 @@
 //! offset  size  field
 //! 0       8     magic            b"AIRESSEG"
 //! 8       4     format version   u32 (currently 1)
-//! 12      4     reserved         u32 (must be 0)
+//! 12      4     record kind      u32 (0 = CSR segment, 1 = dense panel)
 //! 16      8     nrows            u64
 //! 24      8     ncols            u64
-//! 32      8     nnz              u64
+//! 32      8     nnz              u64 (must be 0 for dense panels)
 //! 40      8     payload length   u64 (bytes after the 64-byte header)
 //! 48      8     payload checksum FNV-1a 64 over the payload bytes
 //! 56      8     header checksum  FNV-1a 64 over bytes 0..56
-//! 64      ...   payload: rowptr (nrows+1 × u64) ++ colidx (nnz × u32)
-//!               ++ vals (nnz × f32 bit patterns)
+//! 64      ...   payload, by record kind:
+//!               CSR segment: rowptr (nrows+1 × u64) ++ colidx (nnz × u32)
+//!                            ++ vals (nnz × f32 bit patterns)
+//!               dense panel: nrows × ncols row-major f32 bit patterns
 //! ```
 //!
+//! The record-kind field occupies what version 1 originally reserved as a
+//! must-be-zero word, so every pre-existing CSR segment file is already a
+//! valid `KIND_CSR` record — the golden vectors below pin both layouts.
+//!
 //! Decoding is strict: every structural defect maps to a typed
-//! [`SegioError`] (wrong magic, unsupported version, truncation, checksum
-//! mismatch, CSR-invariant violation), so the streaming layer can abort
-//! cleanly instead of computing on garbage. Checks run in layout order —
-//! magic, then version, then header checksum, then lengths, then payload
-//! checksum, then CSR validation — so the reported error names the
-//! outermost defect.
+//! [`SegioError`] (wrong magic, unsupported version, wrong record kind,
+//! truncation, checksum mismatch, CSR-invariant violation), so the
+//! streaming layer can abort cleanly instead of computing on garbage.
+//! Checks run in layout order — magic, then version, then record kind,
+//! then header checksum, then lengths, then payload checksum, then
+//! structural validation — so the reported error names the outermost
+//! defect. Feeding a panel file to the CSR decoder (or vice versa) is a
+//! [`SegioError::WrongKind`], never a silent misread: the two payloads are
+//! length-checked against different formulas and share no interpretation.
 
+use super::spmm::Dense;
 use super::Csr;
 use std::io::{Read, Write};
 use std::path::Path;
@@ -36,6 +47,10 @@ use std::path::Path;
 pub const MAGIC: [u8; 8] = *b"AIRESSEG";
 /// Current (and only) format version.
 pub const FORMAT_VERSION: u32 = 1;
+/// Record kind of a sparse CSR segment (the original, and default, kind).
+pub const KIND_CSR: u32 = 0;
+/// Record kind of a dense feature panel (row-major f32 payload).
+pub const KIND_PANEL: u32 = 1;
 /// Fixed header size in bytes; the payload starts here.
 pub const HEADER_BYTES: usize = 64;
 
@@ -59,6 +74,14 @@ pub enum SegioError {
         /// Version this build understands.
         expected: u32,
     },
+    /// Record-kind field does not match the decoder (a dense panel fed to
+    /// the CSR decoder, or vice versa) — valid file, wrong reader.
+    WrongKind {
+        /// Kind the file claims ([`KIND_CSR`] / [`KIND_PANEL`]).
+        found: u32,
+        /// Kind this decoder reads.
+        expected: u32,
+    },
     /// Header bytes fail their checksum (corrupt metadata).
     HeaderChecksum {
         /// Checksum stored in the file.
@@ -76,6 +99,9 @@ pub enum SegioError {
     /// Sections decode but violate a CSR invariant (e.g. non-monotone
     /// rowptr) — structurally valid bytes, semantically invalid matrix.
     InvalidCsr(String),
+    /// Panel header fields are inconsistent (payload length not
+    /// `nrows × ncols × 4`, dimension overflow, non-zero nnz slot).
+    InvalidPanel(String),
     /// Underlying filesystem error (with path context).
     Io(String),
 }
@@ -90,6 +116,19 @@ impl std::fmt::Display for SegioError {
             SegioError::WrongVersion { found, expected } => {
                 write!(f, "unsupported segment format version {found} (expected {expected})")
             }
+            SegioError::WrongKind { found, expected } => {
+                let name = |k: u32| match k {
+                    KIND_CSR => "CSR segment",
+                    KIND_PANEL => "dense panel",
+                    _ => "unknown",
+                };
+                write!(
+                    f,
+                    "wrong record kind {found} ({}): this decoder reads kind {expected} ({})",
+                    name(*found),
+                    name(*expected)
+                )
+            }
             SegioError::HeaderChecksum { stored, computed } => write!(
                 f,
                 "segment header checksum mismatch: \
@@ -101,6 +140,9 @@ impl std::fmt::Display for SegioError {
                  stored {stored:#018x}, computed {computed:#018x}"
             ),
             SegioError::InvalidCsr(msg) => write!(f, "decoded segment is not a valid CSR: {msg}"),
+            SegioError::InvalidPanel(msg) => {
+                write!(f, "decoded record is not a valid dense panel: {msg}")
+            }
             SegioError::Io(msg) => write!(f, "segment I/O: {msg}"),
         }
     }
@@ -157,6 +199,13 @@ pub fn encoded_len(nrows: usize, nnz: usize) -> u64 {
     HEADER_BYTES as u64 + (nrows as u64 + 1) * 8 + nnz as u64 * 4 + nnz as u64 * 4
 }
 
+/// Exact encoded size of a dense panel with `nrows × ncols` elements —
+/// header + row-major f32 payload (the panel-tier analog of
+/// [`encoded_len`]).
+pub fn encoded_panel_len(nrows: usize, ncols: usize) -> u64 {
+    HEADER_BYTES as u64 + nrows as u64 * ncols as u64 * 4
+}
+
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
@@ -191,12 +240,18 @@ pub fn encode_segment(m: &Csr) -> Vec<u8> {
     }
     debug_assert_eq!(payload.len(), payload_len);
 
+    seal_header(KIND_CSR, m.nrows, m.ncols, nnz, payload)
+}
+
+/// Prepend and seal the common 64-byte header over a finished payload.
+/// Shared by both record kinds; `nnz` is 0 for panels.
+fn seal_header(kind: u32, nrows: usize, ncols: usize, nnz: usize, payload: Vec<u8>) -> Vec<u8> {
     let mut buf = Vec::with_capacity(HEADER_BYTES + payload.len());
     buf.extend_from_slice(&MAGIC);
     put_u32(&mut buf, FORMAT_VERSION);
-    put_u32(&mut buf, 0); // reserved
-    put_u64(&mut buf, m.nrows as u64);
-    put_u64(&mut buf, m.ncols as u64);
+    put_u32(&mut buf, kind);
+    put_u64(&mut buf, nrows as u64);
+    put_u64(&mut buf, ncols as u64);
     put_u64(&mut buf, nnz as u64);
     put_u64(&mut buf, payload.len() as u64);
     put_u64(&mut buf, fnv1a64(&payload));
@@ -205,6 +260,35 @@ pub fn encode_segment(m: &Csr) -> Vec<u8> {
     debug_assert_eq!(buf.len(), HEADER_BYTES);
     buf.extend_from_slice(&payload);
     buf
+}
+
+/// Verify the layout-order header prefix every record kind shares: size,
+/// magic, version, record kind, header checksum. Returns nothing — the
+/// caller re-reads the count fields it needs.
+fn check_header(buf: &[u8], expect_kind: u32) -> Result<(), SegioError> {
+    if buf.len() < HEADER_BYTES {
+        return Err(SegioError::Truncated { need: HEADER_BYTES as u64, got: buf.len() as u64 });
+    }
+    if buf[0..8] != MAGIC {
+        return Err(SegioError::BadMagic);
+    }
+    let version = get_u32(buf, 8);
+    if version != FORMAT_VERSION {
+        return Err(SegioError::WrongVersion { found: version, expected: FORMAT_VERSION });
+    }
+    let kind = get_u32(buf, 12);
+    if kind != expect_kind {
+        return Err(SegioError::WrongKind { found: kind, expected: expect_kind });
+    }
+    let stored_header_sum = get_u64(buf, 56);
+    let computed_header_sum = fnv1a64(&buf[0..56]);
+    if stored_header_sum != computed_header_sum {
+        return Err(SegioError::HeaderChecksum {
+            stored: stored_header_sum,
+            computed: computed_header_sum,
+        });
+    }
+    Ok(())
 }
 
 /// Decode a segment buffer back into a [`Csr`], verifying magic, version,
@@ -247,24 +331,7 @@ fn decode_into_raw(buf: &[u8], out: &mut Csr) -> Result<(), SegioError> {
     out.rowptr.clear();
     out.colidx.clear();
     out.vals.clear();
-    if buf.len() < HEADER_BYTES {
-        return Err(SegioError::Truncated { need: HEADER_BYTES as u64, got: buf.len() as u64 });
-    }
-    if buf[0..8] != MAGIC {
-        return Err(SegioError::BadMagic);
-    }
-    let version = get_u32(buf, 8);
-    if version != FORMAT_VERSION {
-        return Err(SegioError::WrongVersion { found: version, expected: FORMAT_VERSION });
-    }
-    let stored_header_sum = get_u64(buf, 56);
-    let computed_header_sum = fnv1a64(&buf[0..56]);
-    if stored_header_sum != computed_header_sum {
-        return Err(SegioError::HeaderChecksum {
-            stored: stored_header_sum,
-            computed: computed_header_sum,
-        });
-    }
+    check_header(buf, KIND_CSR)?;
     let nrows64 = get_u64(buf, 16);
     let ncols64 = get_u64(buf, 24);
     let nnz64 = get_u64(buf, 32);
@@ -374,6 +441,134 @@ pub fn read_segment_into(
     f.read_exact(scratch)
         .map_err(|e| SegioError::Io(format!("read {}: {e}", path.display())))?;
     decode_segment_into(scratch, out)?;
+    Ok(len as u64)
+}
+
+// --------------------------------------------------- dense-panel records
+
+/// Encode a dense feature panel into the on-disk byte format
+/// ([`KIND_PANEL`]). Deterministic and exact: the payload is the row-major
+/// f32 *bit patterns*, so `decode(encode(p)) == p` down to the last bit —
+/// the property that keeps a panel-spilling multi-layer pass byte-identical
+/// to one that holds every intermediate panel in host RAM.
+pub fn encode_panel(p: &Dense) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(p.data.len() * 4);
+    for &v in &p.data {
+        put_u32(&mut payload, v.to_bits());
+    }
+    seal_header(KIND_PANEL, p.nrows, p.ncols, 0, payload)
+}
+
+/// Decode a panel buffer back into a [`Dense`], verifying magic, version,
+/// record kind, both checksums, and the dimension/payload consistency.
+/// The exact inverse of [`encode_panel`]. Allocates a fresh data vector;
+/// the pipeline's panel tier uses [`decode_panel_into`] with recycled
+/// scratch instead.
+pub fn decode_panel(buf: &[u8]) -> Result<Dense, SegioError> {
+    let mut p = Dense::zeros(0, 0);
+    decode_panel_into(buf, &mut p)?;
+    Ok(p)
+}
+
+/// [`decode_panel`] into caller-owned scratch: `out.data` is cleared and
+/// refilled in place, so a decode that fits the scratch capacity performs
+/// zero heap allocations. On error `out` is reset to a valid empty 0×0
+/// panel (never left holding partial data).
+pub fn decode_panel_into(buf: &[u8], out: &mut Dense) -> Result<(), SegioError> {
+    let result = decode_panel_raw(buf, out);
+    if result.is_err() {
+        out.nrows = 0;
+        out.ncols = 0;
+        out.data.clear();
+    }
+    result
+}
+
+/// Decode body: clears and refills `out`; may leave it partially written
+/// on error (the public wrapper resets it).
+fn decode_panel_raw(buf: &[u8], out: &mut Dense) -> Result<(), SegioError> {
+    out.nrows = 0;
+    out.ncols = 0;
+    out.data.clear();
+    check_header(buf, KIND_PANEL)?;
+    let nrows64 = get_u64(buf, 16);
+    let ncols64 = get_u64(buf, 24);
+    let nnz64 = get_u64(buf, 32);
+    let payload_len = get_u64(buf, 40);
+    if nnz64 != 0 {
+        return Err(SegioError::InvalidPanel(format!(
+            "panel records must have a zero nnz field, got {nnz64}"
+        )));
+    }
+    // Checked arithmetic: crafted dimensions with re-sealed checksums must
+    // surface a typed error, not a wrapped-multiply false match.
+    let want_payload = nrows64
+        .checked_mul(ncols64)
+        .and_then(|n| n.checked_mul(4))
+        .ok_or_else(|| {
+            SegioError::InvalidPanel(format!(
+                "nrows={nrows64} × ncols={ncols64} overflows the addressable payload size"
+            ))
+        })?;
+    if payload_len != want_payload {
+        return Err(SegioError::InvalidPanel(format!(
+            "payload length {payload_len} inconsistent with nrows={nrows64} ncols={ncols64} \
+             (expected {want_payload})"
+        )));
+    }
+    let need = (HEADER_BYTES as u64).checked_add(payload_len).unwrap_or(u64::MAX);
+    if (buf.len() as u64) < need {
+        return Err(SegioError::Truncated { need, got: buf.len() as u64 });
+    }
+    // The truncation check bounds the counts by the real buffer size, so
+    // the usize casts and the reserve below cannot overflow.
+    let payload = &buf[HEADER_BYTES..HEADER_BYTES + payload_len as usize];
+    let stored_payload_sum = get_u64(buf, 48);
+    let computed_payload_sum = fnv1a64(payload);
+    if stored_payload_sum != computed_payload_sum {
+        return Err(SegioError::PayloadChecksum {
+            stored: stored_payload_sum,
+            computed: computed_payload_sum,
+        });
+    }
+    let n = (nrows64 * ncols64) as usize;
+    out.data.reserve(n);
+    for i in 0..n {
+        out.data.push(f32::from_bits(get_u32(payload, i * 4)));
+    }
+    out.nrows = nrows64 as usize;
+    out.ncols = ncols64 as usize;
+    Ok(())
+}
+
+/// Write one encoded panel to `path`. Returns the bytes written.
+pub fn write_panel(path: &Path, p: &Dense) -> Result<u64, SegioError> {
+    let buf = encode_panel(p);
+    let mut f = std::fs::File::create(path)
+        .map_err(|e| SegioError::Io(format!("create {}: {e}", path.display())))?;
+    f.write_all(&buf).map_err(|e| SegioError::Io(format!("write {}: {e}", path.display())))?;
+    Ok(buf.len() as u64)
+}
+
+/// Read and decode one panel file into caller-owned buffers (the panel-tier
+/// analog of [`read_segment_into`]): file bytes land in `scratch`, the
+/// decoded panel in `out`'s recycled data vector. Returns the measured
+/// file byte count.
+pub fn read_panel_into(
+    path: &Path,
+    scratch: &mut Vec<u8>,
+    out: &mut Dense,
+) -> Result<u64, SegioError> {
+    let mut f = std::fs::File::open(path)
+        .map_err(|e| SegioError::Io(format!("open {}: {e}", path.display())))?;
+    let len = f
+        .metadata()
+        .map_err(|e| SegioError::Io(format!("stat {}: {e}", path.display())))?
+        .len() as usize;
+    scratch.resize(len, 0);
+    f.read_exact(scratch)
+        .map_err(|e| SegioError::Io(format!("read {}: {e}", path.display())))?;
+    decode_panel_into(scratch, out)?;
     Ok(len as u64)
 }
 
@@ -515,5 +710,122 @@ mod tests {
             read_segment(&dir.path().join("missing.bin")),
             Err(SegioError::Io(_))
         ));
+    }
+
+    fn example_panel() -> Dense {
+        Dense::from_vec(2, 3, vec![1.0, 2.0, 3.0, -4.0, 0.5, 6.0])
+    }
+
+    #[test]
+    fn golden_panel_encoding_is_byte_stable() {
+        // Golden vector computed independently (Python struct/FNV-1a) from
+        // the layout spec — pins the panel record kind the same way the
+        // CSR golden vector pins segments.
+        let want: [u8; 88] = [
+            65, 73, 82, 69, 83, 83, 69, 71, 1, 0, 0, 0, 1, 0, 0, 0, 2, 0, 0, 0, 0, 0, 0, 0, 3, 0,
+            0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 24, 0, 0, 0, 0, 0, 0, 0, 69, 185, 8, 35,
+            128, 218, 222, 195, 235, 183, 34, 93, 20, 81, 129, 48, 0, 0, 128, 63, 0, 0, 0, 64, 0,
+            0, 64, 64, 0, 0, 128, 192, 0, 0, 0, 63, 0, 0, 192, 64,
+        ];
+        let got = encode_panel(&example_panel());
+        assert_eq!(got, want.to_vec());
+        assert_eq!(got.len() as u64, encoded_panel_len(2, 3));
+    }
+
+    #[test]
+    fn panel_roundtrip_is_bit_exact() {
+        // Includes values a lossy float path would disturb: subnormals,
+        // negative zero, infinities, and an exact NaN bit pattern survive
+        // because the payload is raw bit patterns.
+        let mut p = example_panel();
+        p.data[0] = f32::from_bits(0x0000_0001); // subnormal
+        p.data[1] = -0.0;
+        p.data[2] = f32::INFINITY;
+        let back = decode_panel(&encode_panel(&p)).unwrap();
+        assert_eq!(back.nrows, p.nrows);
+        assert_eq!(back.ncols, p.ncols);
+        for (a, b) in p.data.iter().zip(back.data.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for p in [Dense::zeros(0, 0), Dense::zeros(0, 7), Dense::zeros(5, 0)] {
+            assert_eq!(decode_panel(&encode_panel(&p)).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn panel_rejects_every_defect_with_the_right_variant() {
+        let good = encode_panel(&example_panel());
+
+        let mut bad_magic = good.clone();
+        bad_magic[0] ^= 0xff;
+        assert_eq!(decode_panel(&bad_magic), Err(SegioError::BadMagic));
+
+        let mut bad_payload = good.clone();
+        *bad_payload.last_mut().unwrap() ^= 0x01;
+        assert!(matches!(decode_panel(&bad_payload), Err(SegioError::PayloadChecksum { .. })));
+
+        let mut bad_header = good.clone();
+        bad_header[20] ^= 0x01; // nrows field
+        assert!(matches!(decode_panel(&bad_header), Err(SegioError::HeaderChecksum { .. })));
+
+        assert!(matches!(decode_panel(&good[..good.len() - 1]), Err(SegioError::Truncated { .. })));
+        assert!(matches!(decode_panel(&good[..10]), Err(SegioError::Truncated { .. })));
+
+        // A non-zero nnz slot with a re-sealed checksum is invalid.
+        let mut bad_nnz = good.clone();
+        bad_nnz[32..40].copy_from_slice(&7u64.to_le_bytes());
+        let sum = fnv1a64(&bad_nnz[0..56]);
+        bad_nnz[56..64].copy_from_slice(&sum.to_le_bytes());
+        assert!(matches!(decode_panel(&bad_nnz), Err(SegioError::InvalidPanel(_))));
+
+        // Overflowing dimensions with re-sealed checksums: typed error,
+        // not a wrapped-multiply false match.
+        let mut huge = good.clone();
+        huge[16..24].copy_from_slice(&(1u64 << 62).to_le_bytes());
+        huge[24..32].copy_from_slice(&(1u64 << 62).to_le_bytes());
+        let sum = fnv1a64(&huge[0..56]);
+        huge[56..64].copy_from_slice(&sum.to_le_bytes());
+        assert!(matches!(decode_panel(&huge), Err(SegioError::InvalidPanel(_))));
+    }
+
+    #[test]
+    fn kind_confusion_is_a_typed_error_both_ways() {
+        // A panel fed to the CSR decoder — and a CSR segment fed to the
+        // panel decoder — must fail on the record kind, not misread bytes.
+        let panel = encode_panel(&example_panel());
+        assert_eq!(
+            decode_segment(&panel),
+            Err(SegioError::WrongKind { found: KIND_PANEL, expected: KIND_CSR })
+        );
+        let seg = encode_segment(&example_csr());
+        assert_eq!(
+            decode_panel(&seg),
+            Err(SegioError::WrongKind { found: KIND_CSR, expected: KIND_PANEL })
+        );
+    }
+
+    #[test]
+    fn panel_file_roundtrip() {
+        let dir = crate::testing::TempDir::new("segio-panel");
+        let path = dir.path().join("panel.bin");
+        let p = example_panel();
+        let written = write_panel(&path, &p).unwrap();
+        let mut scratch = Vec::new();
+        let mut back = Dense::zeros(0, 0);
+        let read = read_panel_into(&path, &mut scratch, &mut back).unwrap();
+        assert_eq!(back, p);
+        assert_eq!(written, read);
+        assert!(matches!(
+            read_panel_into(&dir.path().join("missing.bin"), &mut scratch, &mut back),
+            Err(SegioError::Io(_))
+        ));
+        // A decode failure (not just a missing file) resets the scratch.
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 2]).unwrap();
+        assert!(matches!(
+            read_panel_into(&path, &mut scratch, &mut back),
+            Err(SegioError::Truncated { .. })
+        ));
+        assert_eq!((back.nrows, back.data.len()), (0, 0), "decode error resets the scratch panel");
     }
 }

@@ -17,9 +17,9 @@
 //! [`crate::runtime::pool::Pool`]: fixed contiguous output-row partitions,
 //! one writer per row, serial per-row arithmetic order — byte-identical to
 //! the serial oracles at every thread count. `spmm_into` / `spmm_par_into`
-//! write into a caller-owned destination (the pass-wide aggregation panel
-//! of `OocGcnLayer::forward_streamed`), eliminating the per-segment partial
-//! allocation the streaming hot loop used to pay.
+//! write into a caller-owned destination (the per-layer aggregation panel
+//! of the `gcn::pipeline` streaming engine), eliminating the per-segment
+//! partial allocation the streaming hot loop used to pay.
 
 use crate::runtime::pool::Pool;
 

@@ -19,7 +19,7 @@
 //! process-global: concurrent tests would bleed counts into each other.
 
 use aires::benchlib::allocation_count;
-use aires::gcn::{OocGcnLayer, StagingConfig};
+use aires::gcn::{OocGcnLayer, OocGcnModel, PipelineConfig, StagingConfig};
 use aires::memsim::GpuMem;
 use aires::partition::robw::robw_partition;
 use aires::runtime::pool::Pool;
@@ -173,4 +173,59 @@ fn recycled_disk_path_is_allocation_free_in_steady_state() {
         allocs_fine < 48 + n2 as u64 / 8,
         "warmed cost must stay constant as segments grow: {allocs_fine} over {n2} segments"
     );
+
+    // ---- 3. Cross-layer pipeline stays allocation-free per segment -----
+    // A 3-layer model over the SAME store streams 3n segments through one
+    // pipeline. A warmed recycled pass must cost a small constant per
+    // *layer* (combine output, plan vec, report plumbing) — never per
+    // segment — while the fresh path still scales with the segment count.
+    // The one recycle pool also proves the panel slab circulates across
+    // layers: every layer's aggregation panel is the same slab.
+    let wsq = Dense::from_vec(
+        16,
+        16,
+        (0..16 * 16).map(|_| (rng.normal() * 0.2) as f32).collect(),
+    );
+    let model = OocGcnModel::new(
+        (0..3)
+            .map(|_| OocGcnLayer {
+                w: wsq.clone(),
+                b: vec![0.1; 16],
+                relu: true,
+                seg_budget: layer.seg_budget,
+            })
+            .collect(),
+    )
+    .unwrap();
+    let n3 = 3 * n as u64;
+    let mpool = Arc::new(BufferPool::new(64 << 20));
+    let count_model = |cfg: &PipelineConfig| {
+        let mut mem = GpuMem::new(1 << 30);
+        let before = allocation_count();
+        let (out, _) = model.forward_cpu(&a_hat, &x, &mut mem, &serial, cfg).unwrap();
+        (out, allocation_count() - before)
+    };
+    let recycled_model =
+        PipelineConfig::staged(StagingConfig::disk(store.clone(), 1).with_recycle(mpool.clone()));
+    let fresh_model = PipelineConfig::staged(StagingConfig::disk(store.clone(), 1));
+    let (out_warm, _) = count_model(&recycled_model); // warm the pool
+    let (out_rec, allocs_rec) = count_model(&recycled_model);
+    let (out_fresh, allocs_fresh3) = count_model(&fresh_model);
+    assert_eq!(out_rec, out_fresh, "recycled and fresh multi-layer passes must agree");
+    assert_eq!(out_rec, out_warm);
+    assert!(
+        allocs_fresh3 >= 3 * n3,
+        "fresh cross-layer pass should allocate per segment: {allocs_fresh3} over {n3}"
+    );
+    assert!(
+        allocs_rec < allocs_fresh3 / 2,
+        "recycled cross-layer pass ({allocs_rec}) must allocate far less than fresh \
+         ({allocs_fresh3})"
+    );
+    assert!(
+        allocs_rec < 128 + n3 / 8,
+        "recycled warmed cross-layer pass must not scale with segments: \
+         {allocs_rec} over {n3}"
+    );
+    assert!(mpool.stats().hits > 0, "segment scratch must cycle across layers");
 }

@@ -115,6 +115,91 @@ fn segcheck_streams_from_disk_and_verifies_byte_identity() {
 }
 
 #[test]
+fn gcnstream_layers_zero_warns_and_still_runs() {
+    let (code, out, err) =
+        run(&["gcnstream", "--nodes", "120", "--budget", "2048", "--layers", "0"]);
+    assert_eq!(code, Some(0), "layers 0 is clamped, not fatal; stderr: {err}");
+    assert!(err.contains("warning"), "clamp must be announced: {err}");
+    assert!(err.contains("--layers 0"), "{err}");
+    assert!(out.contains("1 layers"), "runs as a single layer: {out}");
+    assert!(out.contains("byte-identical"), "stdout: {out}");
+}
+
+#[test]
+fn gcnstream_malformed_layers_is_a_usage_error_not_a_panic() {
+    let (code, _, err) = run(&["gcnstream", "--layers", "three"]);
+    assert_eq!(code, Some(2), "usage errors exit 2; stderr: {err}");
+    assert!(err.contains("--layers"), "must name the flag: {err}");
+    assert!(err.contains("three"), "must echo the offending value: {err}");
+    assert!(!err.contains("panicked"), "must not panic: {err}");
+    // A trailing flag without a value is the same class of error.
+    let (code, _, err) = run(&["gcnstream", "--layers"]);
+    assert_eq!(code, Some(2), "stderr: {err}");
+    assert!(err.contains("requires a value"), "{err}");
+}
+
+#[test]
+fn gcnstream_segment_dir_reuse_smoke() {
+    // Two runs into the same --segment-dir: the second must reuse the
+    // spilled fixture (open_or_spill fingerprint path) and still verify
+    // byte-identity across all layers.
+    let dir = TempDir::new("cli-gcnstream");
+    let args = [
+        "gcnstream",
+        "--nodes",
+        "150",
+        "--budget",
+        "2048",
+        "--layers",
+        "2",
+        "--segment-dir",
+        dir.path().to_str().unwrap(),
+    ];
+    let (code, out, err) = run(&args);
+    assert_eq!(code, Some(0), "stderr: {err}");
+    assert!(out.contains("byte-identical"), "stdout: {out}");
+    assert!(out.contains("layer 1:"), "per-layer report lines: {out}");
+    let seg0 = dir.path().join("seg-00000.bin");
+    assert!(seg0.exists(), "--segment-dir must hold the spilled segment files");
+    let mtime = std::fs::metadata(&seg0).unwrap().modified().unwrap();
+    let (code, out, err) = run(&args);
+    assert_eq!(code, Some(0), "second run; stderr: {err}");
+    assert!(out.contains("byte-identical"), "stdout: {out}");
+    assert_eq!(
+        std::fs::metadata(&seg0).unwrap().modified().unwrap(),
+        mtime,
+        "byte-valid fixture must be reused, not respilled"
+    );
+}
+
+#[test]
+fn gcnstream_panel_dir_spills_and_verifies() {
+    let dir = TempDir::new("cli-gcnstream-panels");
+    let (code, out, err) = run(&[
+        "gcnstream",
+        "--nodes",
+        "120",
+        "--budget",
+        "2048",
+        "--layers",
+        "3",
+        "--panel-dir",
+        dir.path().to_str().unwrap(),
+    ]);
+    assert_eq!(code, Some(0), "stderr: {err}");
+    assert!(out.contains("panel spill"), "panel tier must be reported: {out}");
+    assert!(out.contains("byte-identical"), "stdout: {out}");
+    assert!(
+        dir.path().join("panel-00000.bin").exists(),
+        "--panel-dir must hold the spilled intermediate panels"
+    );
+    assert!(
+        !dir.path().join("panel-00002.bin").exists(),
+        "the final layer's output is returned, never spilled"
+    );
+}
+
+#[test]
 fn segcheck_with_recycling_disabled_still_verifies() {
     // --recycle-cap-bytes 0 selects the fresh-allocation path; output
     // must be byte-identical either way and the pool line disappears.

@@ -20,8 +20,9 @@
 //! Case count per property: `AIRES_PROP_CASES` (default 64).
 
 use aires::gcn::model::dense_affine;
-use aires::gcn::{OocGcnLayer, StagingConfig};
+use aires::gcn::{OocGcnLayer, OocGcnModel, PipelineConfig, StagingConfig};
 use aires::memsim::GpuMem;
+use aires::runtime::segstore::PanelStore;
 use aires::partition::robw::{robw_partition, robw_partition_par};
 use aires::runtime::pool::Pool;
 use aires::runtime::recycle::BufferPool;
@@ -670,6 +671,138 @@ fn diff_recycled_staging_matches_fresh_at_every_point() {
         }
         Ok(())
     });
+}
+
+// ------------------------------------------- cross-layer pipelined model
+
+/// The multi-layer acceptance sweep: the cross-layer pipelined forward
+/// (`OocGcnModel::forward_cpu` — one prefetch pipeline spanning every
+/// layer's plan, no drain at layer boundaries) must be **byte-identical**
+/// to the per-layer sequential oracle (a plain loop of single-layer
+/// `forward_cpu` calls) at every layers × depth × threads × backing ×
+/// cache point, with a balanced ledger and measured I/O that does not
+/// depend on pipelining. Panel spilling and buffer recycling ride the
+/// same sweep: both must leave the output bit-for-bit unchanged.
+#[test]
+fn diff_multilayer_pipeline_matches_per_layer_oracle() {
+    let mut rng = Pcg::seed(18);
+    let a_hat = normalize_adjacency(&aires::graphgen::kmer::generate(&mut rng, 300, 3.0));
+    let budget = 2048u64;
+    let f = 8usize;
+    let x = gen::dense(&mut rng, a_hat.ncols, f);
+    let segs = robw_partition(&a_hat, budget);
+    assert!(segs.len() >= 4, "need a real stream per layer");
+    let shared_recycle = Arc::new(BufferPool::new(64 << 20));
+
+    for n_layers in [1usize, 2, 3] {
+        let model = OocGcnModel::new(
+            (0..n_layers)
+                .map(|_| OocGcnLayer {
+                    w: gen::dense(&mut rng, f, f),
+                    b: (0..f).map(|_| rng.normal() as f32).collect(),
+                    relu: true,
+                    seg_budget: budget,
+                })
+                .collect(),
+        )
+        .unwrap();
+
+        // The drain-at-boundary oracle: isolated single-layer passes.
+        let mut mem = GpuMem::new(1 << 30);
+        let mut cur = x.clone();
+        let mut base = Vec::new();
+        for layer in &model.layers {
+            let (out, rep) = layer
+                .forward_cpu(&a_hat, &cur, &mut mem, &Pool::serial(), &StagingConfig::serial())
+                .unwrap();
+            base.push(rep);
+            cur = out;
+        }
+        let want = cur;
+        assert_eq!(mem.used, 0);
+
+        // In-memory backing: depth × threads, fresh and recycled.
+        for &depth in &PREFETCH_DEPTHS {
+            for &t in &[1usize, 8] {
+                for recycled in [false, true] {
+                    let mut staging = StagingConfig::depth(depth);
+                    if recycled {
+                        staging = staging.with_recycle(shared_recycle.clone());
+                    }
+                    let cfg = PipelineConfig::staged(staging);
+                    let mut mem = GpuMem::new(1 << 30);
+                    let (got, rep) =
+                        model.forward_cpu(&a_hat, &x, &mut mem, &Pool::new(t), &cfg).unwrap();
+                    assert_eq!(
+                        got, want,
+                        "layers={n_layers} depth={depth} threads={t} recycled={recycled}"
+                    );
+                    assert_eq!(mem.used, 0, "ledger unbalanced");
+                    assert_eq!(rep.per_layer.len(), n_layers);
+                    for (l, (r, b)) in rep.per_layer.iter().zip(base.iter()).enumerate() {
+                        assert_eq!(r.segments, b.segments, "layer {l} plan diverged");
+                        assert_eq!(r.h2d_bytes, b.h2d_bytes, "layer {l} traffic diverged");
+                    }
+                }
+            }
+        }
+
+        // Disk backing: cache points × depth × threads, measured I/O
+        // identical across pipelining configurations.
+        let dir = TempDir::new("diff-mlayer");
+        SegmentStore::spill(&a_hat, &segs, dir.path(), 0).unwrap();
+        for cache in cache_points(&segs) {
+            let mut expect_io: Option<Vec<(u64, usize, usize)>> = None;
+            for &depth in &PREFETCH_DEPTHS {
+                for &t in &[1usize, 8] {
+                    let store =
+                        SegmentStore::open_or_spill(&a_hat, &segs, dir.path(), cache).unwrap();
+                    let cfg =
+                        PipelineConfig::staged(StagingConfig::disk(Arc::new(store), depth));
+                    let mut mem = GpuMem::new(1 << 30);
+                    let (got, rep) =
+                        model.forward_cpu(&a_hat, &x, &mut mem, &Pool::new(t), &cfg).unwrap();
+                    assert_eq!(got, want, "layers={n_layers} cache={cache} depth={depth} t={t}");
+                    assert_eq!(mem.used, 0);
+                    let io: Vec<_> = rep
+                        .per_layer
+                        .iter()
+                        .map(|r| (r.disk_bytes, r.cache_hits, r.cache_misses))
+                        .collect();
+                    match &expect_io {
+                        None => expect_io = Some(io),
+                        Some(w) => assert_eq!(
+                            &io, w,
+                            "layers={n_layers} cache={cache} depth={depth} t={t}: \
+                             measured I/O must not depend on pipelining"
+                        ),
+                    }
+                }
+            }
+        }
+
+        // Panel spilling (with recycling): intermediate panels round-trip
+        // through the segio dense-panel record without disturbing a bit.
+        for &depth in &PREFETCH_DEPTHS {
+            let pdir = TempDir::new("diff-mlayer-panel");
+            let pstore = Arc::new(PanelStore::new(pdir.path(), 0).unwrap());
+            let staging = StagingConfig::depth(depth).with_recycle(shared_recycle.clone());
+            let cfg = PipelineConfig::staged(staging).with_panel_spill(pstore.clone());
+            let mut mem = GpuMem::new(1 << 30);
+            let (got, rep) =
+                model.forward_cpu(&a_hat, &x, &mut mem, &Pool::new(2), &cfg).unwrap();
+            assert_eq!(got, want, "panel-spilled layers={n_layers} depth={depth}");
+            assert_eq!(mem.used, 0);
+            assert_eq!(pstore.len(), n_layers - 1, "every intermediate panel spills");
+            assert_eq!(rep.panel_cache_hits + rep.panel_cache_misses, n_layers - 1);
+            if n_layers > 1 {
+                assert!(rep.panel_spill_bytes > 0);
+                assert_eq!(rep.panel_read_bytes, rep.panel_spill_bytes, "cacheless reads");
+            } else {
+                assert_eq!(rep.panel_spill_bytes, 0);
+            }
+        }
+    }
 }
 
 // ------------------------------------------------------- fault injection

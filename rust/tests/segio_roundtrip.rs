@@ -11,9 +11,11 @@
 
 use aires::partition::robw::{materialize, robw_partition};
 use aires::sparse::segio::{
-    decode_segment, decode_segment_into, encode_segment, fnv1a64, read_segment,
-    read_segment_into, write_segment, SegioError, FORMAT_VERSION, HEADER_BYTES,
+    decode_panel, decode_panel_into, decode_segment, decode_segment_into, encode_panel,
+    encode_segment, fnv1a64, read_segment, read_segment_into, write_segment, SegioError,
+    FORMAT_VERSION, HEADER_BYTES, KIND_CSR, KIND_PANEL,
 };
+use aires::sparse::spmm::Dense;
 use aires::sparse::Csr;
 use aires::testing::{check, gen, TempDir};
 use aires::util::rng::Pcg;
@@ -231,6 +233,67 @@ fn read_into_reuses_buffers_across_files() {
         read_segment_into(&dir.path().join("nope.bin"), &mut bytes_scratch, &mut csr_scratch),
         Err(SegioError::Io(_))
     ));
+}
+
+/// A random dense panel with bit-pattern variety (negative zeros,
+/// subnormals) the feature-panel spill path must preserve exactly.
+fn panel_operand(rng: &mut Pcg) -> Dense {
+    let nrows = rng.range(0, 40);
+    let ncols = rng.range(0, 12);
+    let data = (0..nrows * ncols)
+        .map(|_| match rng.range(0, 12) {
+            0 => -0.0,
+            1 => f32::from_bits(rng.range(1, 1 << 20) as u32), // subnormal
+            _ => rng.normal() as f32,
+        })
+        .collect();
+    Dense::from_vec(nrows, ncols, data)
+}
+
+#[test]
+fn panel_roundtrip_is_bit_identical_across_shapes() {
+    // The cross-layer pipeline's panel spill rides this property: a
+    // spilled-and-reloaded intermediate panel must not disturb one bit,
+    // or the multi-layer differential sweep loses byte-identity.
+    let mut scratch = Dense::zeros(0, 0);
+    check("segio decode_panel(encode_panel(p)) == p", 310, |rng| {
+        let p = panel_operand(rng);
+        let buf = encode_panel(&p);
+        let back = decode_panel(&buf).map_err(|e| format!("decode failed: {e}"))?;
+        if back.nrows != p.nrows || back.ncols != p.ncols || back.data.len() != p.data.len() {
+            return Err(format!("shape diverged on {}x{}", p.nrows, p.ncols));
+        }
+        for (i, (a, b)) in p.data.iter().zip(back.data.iter()).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("bit {i} diverged: {:#x} != {:#x}", a.to_bits(), b.to_bits()));
+            }
+        }
+        if encode_panel(&back) != buf {
+            return Err("re-encoding is not byte-identical".into());
+        }
+        // Recycled-scratch decode agrees with the fresh one.
+        decode_panel_into(&buf, &mut scratch)
+            .map_err(|e| format!("recycled decode failed: {e}"))?;
+        if scratch != back {
+            return Err("recycled panel decode diverged".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn panel_and_segment_records_never_cross_decode() {
+    let mut rng = Pcg::seed(311);
+    let seg = encode_segment(&operand(&mut rng));
+    let panel = encode_panel(&panel_operand(&mut rng));
+    assert_eq!(
+        decode_panel(&seg).unwrap_err(),
+        SegioError::WrongKind { found: KIND_CSR, expected: KIND_PANEL }
+    );
+    assert_eq!(
+        decode_segment(&panel).unwrap_err(),
+        SegioError::WrongKind { found: KIND_PANEL, expected: KIND_CSR }
+    );
 }
 
 #[test]

@@ -17,7 +17,10 @@
 //! to `AIRES_BENCH_JSON` or ./BENCH_streaming.json.
 
 use aires::benchlib::{allocation_count, bench, report_speedup, report_throughput};
-use aires::gcn::{OocGcnLayer, OocGcnModel, PipelineConfig, StagingConfig};
+use aires::gcn::{
+    serve_batch, serve_open_loop, OocGcnLayer, OocGcnModel, OpenLoopConfig, PipelineConfig,
+    StagingConfig, TenantQuery,
+};
 use aires::memsim::{CostModel, GpuMem, Op, Sim};
 use aires::partition::robw::{robw_partition, robw_partition_par};
 use aires::runtime::pool::Pool;
@@ -458,6 +461,60 @@ fn streaming_benches(fast: bool) {
         }
         results.insert(key.to_string(), Json::Obj(entry));
     }
+
+    // --- Multi-tenant fan-out serving: N tenants share one staged pass
+    // of the adjacency per batch (gcn::serve). Self-checking like the
+    // rest of the section: every served tenant must equal the solo
+    // oracle bit for bit, staged I/O must be charged once per segment
+    // (not per tenant), and the ledger must balance — before any
+    // latency number is reported.
+    const TENANTS: usize = 4;
+    let queries: Vec<TenantQuery> =
+        (0..TENANTS).map(|_| TenantQuery { x: x.clone(), layer: layer.clone() }).collect();
+    let serve_staging = StagingConfig::disk(store.clone(), 2).with_recycle(recycle.clone());
+    let mut mem = GpuMem::new(1 << 30);
+    let (batch_out, batch_rep) = serve_batch(&ga, &queries, &mut mem, &pool, &serve_staging);
+    for (t, r) in batch_out.iter().enumerate() {
+        let got = r.as_ref().unwrap_or_else(|e| panic!("served tenant {t}: {e}"));
+        assert_eq!(got, &oracle, "served tenant {t} diverged from the solo oracle");
+    }
+    assert_eq!(mem.used, 0, "serve ledger must balance");
+    assert_eq!(
+        batch_rep.cache_misses,
+        store.len(),
+        "staged I/O must be charged once per segment, not once per tenant"
+    );
+    println!(
+        "BENCH serve self-check: {TENANTS} tenants byte-identical to solo, \
+         {} segments staged once OK",
+        batch_rep.segments
+    );
+    let olc = OpenLoopConfig {
+        requests_per_tenant: iters.max(2),
+        rate_hz: 1000.0,
+        max_batch: TENANTS,
+    };
+    let mut mem = GpuMem::new(1 << 30);
+    let srep = serve_open_loop(&ga, &queries, &mut mem, &pool, &serve_staging, &olc);
+    assert!(srep.ledger_balanced, "serve ledger must balance after every batch");
+    println!(
+        "BENCH serve open-loop: {TENANTS} tenants x {} requests, {} batches, \
+         {:.1} segments/s",
+        olc.requests_per_tenant, srep.batches, srep.segments_per_s
+    );
+    for t in &srep.per_tenant {
+        println!(
+            "BENCH serve tenant {}: p50 {:.2} ms, p99 {:.2} ms ({} completed, {} rejected)",
+            t.tenant,
+            t.p50_s * 1e3,
+            t.p99_s * 1e3,
+            t.completed,
+            t.rejected
+        );
+    }
+    // The full ServeReport (per-tenant latency percentiles included)
+    // rides the same JSON artifact CI already uploads.
+    results.insert("serve_open_loop".to_string(), srep.to_json());
 
     // Seed/extend the perf trajectory: machine-readable streaming numbers.
     let mut root = BTreeMap::new();

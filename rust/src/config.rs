@@ -65,6 +65,11 @@ pub struct Config {
     /// RAM (the default). Output is byte-identical either way. The CLI's
     /// `--panel-dir` overrides this.
     pub panel_dir: Option<String>,
+    /// Concurrent tenant queries the `serve` subcommand batches onto one
+    /// staged pass of the adjacency (`gcn::serve`). `None` = unset: the
+    /// CLI uses its own default of 4. The CLI's `--tenants` flag
+    /// overrides this.
+    pub tenants: Option<usize>,
 }
 
 impl Default for Config {
@@ -80,6 +85,7 @@ impl Default for Config {
             host_cache_bytes: None,
             recycle_cap_bytes: None,
             panel_dir: None,
+            tenants: None,
         }
     }
 }
@@ -203,6 +209,14 @@ impl Config {
                     }
                     cfg.recycle_cap_bytes = Some(n as u64);
                 }
+                "tenants" => {
+                    let n =
+                        val.as_f64().ok_or_else(|| anyhow!("tenants must be a number"))?;
+                    if n < 1.0 || n.fract() != 0.0 {
+                        bail!("tenants must be a positive integer");
+                    }
+                    cfg.tenants = Some(n as usize);
+                }
                 "datasets" => {
                     let arr =
                         val.as_arr().ok_or_else(|| anyhow!("datasets must be an array"))?;
@@ -295,6 +309,9 @@ impl Config {
         }
         if let Some(dir) = &self.panel_dir {
             root.insert("panel_dir".to_string(), Json::Str(dir.clone()));
+        }
+        if let Some(t) = self.tenants {
+            root.insert("tenants".to_string(), Json::Num(t as f64));
         }
         root.insert(
             "datasets".to_string(),
@@ -438,6 +455,23 @@ mod tests {
         );
         assert!(Config::from_json_str(r#"{"recycle_cap_bytes":-1}"#).is_err());
         assert!(Config::from_json_str(r#"{"recycle_cap_bytes":1.5}"#).is_err());
+    }
+
+    #[test]
+    fn tenants_key_roundtrips_and_validates() {
+        let cfg = Config::from_json_str(r#"{"tenants":8}"#).unwrap();
+        assert_eq!(cfg.tenants, Some(8));
+        let back = Config::from_json_str(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(back.tenants, Some(8), "set key survives the roundtrip");
+        // Unset stays unset (the CLI then applies its own default).
+        let unset = Config::from_json_str("{}").unwrap();
+        assert_eq!(unset.tenants, None);
+        let unset_back = Config::from_json_str(&unset.to_json().to_string()).unwrap();
+        assert_eq!(unset_back.tenants, None);
+        assert!(Config::from_json_str(r#"{"tenants":0}"#).is_err());
+        assert!(Config::from_json_str(r#"{"tenants":-2}"#).is_err());
+        assert!(Config::from_json_str(r#"{"tenants":1.5}"#).is_err());
+        assert!(Config::from_json_str(r#"{"tenants":"four"}"#).is_err());
     }
 
     #[test]

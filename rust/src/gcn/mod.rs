@@ -11,15 +11,24 @@
 //!   forward under one scheduler, overlapping layer `l`'s Phase III
 //!   combine with layer `l+1`'s Phase I/II staging and optionally
 //!   spilling intermediate feature panels through the tiered store;
+//! * [`serve`] — the multi-tenant batched inference front end: one
+//!   staged pass of the adjacency fanned out across N admitted tenant
+//!   queries, with admission control against the [`GpuMem`](crate::memsim::GpuMem)
+//!   ledger and open-loop latency reporting;
 //! * [`train`] — the e2e training driver looping the `gcn2_train_step`
 //!   artifact (loss curve in EXPERIMENTS.md).
 
 pub mod model;
 pub mod oocgcn;
 pub mod pipeline;
+pub mod serve;
 pub mod train;
 
 pub use model::Gcn2Ref;
 pub use oocgcn::{LayerReport, OocGcnLayer, StagingBacking, StagingConfig};
 pub use pipeline::{OocGcnModel, PipelineConfig, PipelineReport};
+pub use serve::{
+    serve_batch, serve_open_loop, BatchReport, OpenLoopConfig, ServeError, ServeReport,
+    TenantQuery,
+};
 pub use train::Trainer;

@@ -145,6 +145,7 @@ impl StagingConfig {
 }
 
 /// One out-of-core GCN layer (aggregation + fused combine).
+#[derive(Debug, Clone)]
 pub struct OocGcnLayer {
     /// Combination weights `[f, h]`.
     pub w: Dense,

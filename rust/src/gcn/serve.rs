@@ -1,0 +1,760 @@
+//! Multi-tenant batched inference: one staged pass of the adjacency
+//! serving N concurrent tenant queries.
+//!
+//! The production north star ("millions of users") makes single-consumer
+//! streaming untenable: staging a RoBW segment from the NVMe tier costs
+//! the same whether one query or fifty multiply against it, so the
+//! batched-SpMM insight (Wang et al., arXiv:1903.11409) lifts directly
+//! into the out-of-core setting — **amortize every staged segment across
+//! the whole batch before eviction**. This module is that front end:
+//!
+//! * **Admission control** ([`serve_batch`]): tenants are admitted in
+//!   fixed order, each charging its feature-panel bytes against the
+//!   [`GpuMem`] ledger. A tenant that does not fit is *rejected with a
+//!   typed error* ([`ServeError::Admission`]) — never queued against the
+//!   ledger, so admission can never deadlock the pass.
+//! * **One staged pass**: the batch is planned once (from the admitted
+//!   tenants' shared `seg_budget`) and streamed once through
+//!   [`Prefetch::run_fanout`](crate::runtime::prefetch::Prefetch::run_fanout):
+//!   each staged segment is multiplied against every admitted tenant's
+//!   panel, then retired. Staged I/O is charged **once per segment, not
+//!   once per tenant** (pinned by `diff_multitenant_matches_solo`).
+//! * **Determinism**: every tenant's merge runs over its own disjoint
+//!   aggregation panel in fixed row ranges, so tenant `t`'s output is
+//!   byte-identical to running `t` alone through
+//!   [`OocGcnLayer::forward_cpu`] at every prefetch depth, thread count,
+//!   backing, and recycle point.
+//! * **Open-loop load** ([`serve_open_loop`]): a fixed-rate arrival
+//!   schedule batches pending requests per staged pass and reports
+//!   per-tenant p50/p99 latency plus aggregate segments/s in a
+//!   [`ServeReport`] (emitted into `BENCH_streaming.json` by the
+//!   `micro_hotpath` bench and the `serve` CLI subcommand).
+
+use crate::gcn::model::dense_affine;
+use crate::gcn::oocgcn::{OocGcnLayer, StagingBacking, StagingConfig};
+use crate::memsim::{GpuMem, OomError, Op, StagingMeter};
+use crate::partition::robw::{materialize_into, robw_partition_par};
+use crate::runtime::pool::Pool;
+use crate::runtime::segstore::SegmentRead;
+use crate::sparse::spmm::{spmm_par_into, Dense};
+use crate::sparse::Csr;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
+
+/// Poison-tolerant ledger lock (same contract as `gcn::pipeline`): the
+/// ledger holds plain counters, so a panicking fan-out worker must not
+/// mask its own payload behind a secondary `PoisonError` panic.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// One tenant's query: a feature panel and the layer to run it through,
+/// against the batch's shared graph.
+#[derive(Debug, Clone)]
+pub struct TenantQuery {
+    /// Node features, `[a_hat.nrows, f]`.
+    pub x: Dense,
+    /// Layer configuration (weights, bias, activation, segment budget).
+    pub layer: OocGcnLayer,
+}
+
+/// Why a tenant's query was not answered.
+#[derive(Debug, Clone)]
+pub enum ServeError {
+    /// The tenant's feature-panel reservation exceeded the ledger —
+    /// rejected at admission, before any staging.
+    Admission(OomError),
+    /// The tenant's `seg_budget` differs from the batch plan's, so its
+    /// query cannot ride this staged pass.
+    PlanMismatch {
+        /// The rejected tenant's segment budget.
+        tenant_budget: u64,
+        /// The budget the batch was planned with.
+        batch_budget: u64,
+    },
+    /// The query's shapes do not fit the shared graph.
+    BadQuery(String),
+    /// The staged pass itself failed (planning, staging I/O, or segment
+    /// ledger); every admitted tenant of the batch observes it.
+    Streaming(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Admission(e) => write!(f, "admission rejected: {e}"),
+            ServeError::PlanMismatch { tenant_budget, batch_budget } => write!(
+                f,
+                "segment budget {tenant_budget} does not match the batch plan's {batch_budget}"
+            ),
+            ServeError::BadQuery(msg) => write!(f, "bad query: {msg}"),
+            ServeError::Streaming(msg) => write!(f, "streaming failure: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// What one [`serve_batch`] pass did.
+#[derive(Debug, Clone, Default)]
+pub struct BatchReport {
+    /// RoBW segments the batch plan streamed.
+    pub segments: usize,
+    /// Tenants admitted onto the staged pass.
+    pub tenants_admitted: usize,
+    /// Tenants rejected (admission, plan mismatch, or bad shapes).
+    pub tenants_rejected: usize,
+    /// Total segment bytes staged — once per segment, independent of the
+    /// tenant count.
+    pub staged_bytes: u64,
+    /// Ledger high-water mark over the pass.
+    pub peak_gpu_bytes: u64,
+    /// Staging depth the pass ran with.
+    pub prefetch_depth: usize,
+    /// Measured bytes read from the NVMe tier (disk backing only).
+    pub disk_bytes: u64,
+    /// Segment reads served by the host-RAM cache tier.
+    pub cache_hits: usize,
+    /// Segment reads that went to disk.
+    pub cache_misses: usize,
+}
+
+/// Ledger state shared between the staging producer and the fan-out
+/// consumers: staged-but-unretired segment bytes (reconciled after an
+/// abort) plus the one per-batch [`StagingMeter`].
+struct BatchLedger<'a> {
+    mem: &'a mut GpuMem,
+    staged: u64,
+    meter: StagingMeter,
+}
+
+/// Serve a batch of tenant queries with **one** staged pass of `a_hat`.
+///
+/// Scheduling, in fixed tenant order:
+/// 1. Queries with shapes that do not fit the graph are rejected
+///    ([`ServeError::BadQuery`]). The first well-formed query's
+///    `seg_budget` fixes the batch plan; any other budget is rejected
+///    ([`ServeError::PlanMismatch`]).
+/// 2. Each remaining tenant charges its feature-panel bytes against the
+///    ledger; an allocation failure rejects *that tenant only*
+///    ([`ServeError::Admission`]) — the rest of the batch proceeds, and
+///    nothing ever blocks on the ledger.
+/// 3. The plan streams once through
+///    [`run_fanout`](crate::runtime::prefetch::Prefetch::run_fanout):
+///    every staged segment multiplies against each admitted tenant's
+///    panel (each tenant's arithmetic identical to its solo pass), then
+///    retires — segment ledger bytes freed and, with recycling, the slab
+///    returned to the producer. A mid-stream failure aborts the pass and
+///    surfaces as [`ServeError::Streaming`] on every admitted tenant.
+///
+/// On return the ledger is balanced on every path (panel reservations
+/// and staged segments all freed), and each tenant's slot holds either
+/// its combined output — byte-identical to its solo run — or the typed
+/// error that kept it from completing.
+pub fn serve_batch(
+    a_hat: &Csr,
+    queries: &[TenantQuery],
+    mem: &mut GpuMem,
+    pool: &Pool,
+    staging: &StagingConfig,
+) -> (Vec<Result<Dense, ServeError>>, BatchReport) {
+    let nrows = a_hat.nrows;
+    let nt = queries.len();
+    let mut report =
+        BatchReport { prefetch_depth: staging.prefetch.depth.max(1), ..BatchReport::default() };
+    let mut out: Vec<Option<Result<Dense, ServeError>>> = (0..nt).map(|_| None).collect();
+
+    // ---- 1. Validate shapes and fix the batch plan's budget. -----------
+    let mut batch_budget: Option<u64> = None;
+    let mut candidates: Vec<usize> = Vec::new();
+    for (t, q) in queries.iter().enumerate() {
+        if q.x.nrows != nrows {
+            out[t] = Some(Err(ServeError::BadQuery(format!(
+                "feature panel has {} rows, the shared graph has {nrows}",
+                q.x.nrows
+            ))));
+            continue;
+        }
+        if q.layer.w.nrows != q.x.ncols {
+            out[t] = Some(Err(ServeError::BadQuery(format!(
+                "weight rows {} do not match the feature width {}",
+                q.layer.w.nrows, q.x.ncols
+            ))));
+            continue;
+        }
+        match batch_budget {
+            None => {
+                batch_budget = Some(q.layer.seg_budget);
+                candidates.push(t);
+            }
+            Some(b) if q.layer.seg_budget == b => candidates.push(t),
+            Some(b) => {
+                out[t] = Some(Err(ServeError::PlanMismatch {
+                    tenant_budget: q.layer.seg_budget,
+                    batch_budget: b,
+                }))
+            }
+        }
+    }
+    let finish = |out: Vec<Option<Result<Dense, ServeError>>>, mut report: BatchReport| {
+        report.tenants_rejected = nt - report.tenants_admitted;
+        (
+            out.into_iter()
+                .map(|r| r.expect("every tenant slot resolved before return"))
+                .collect(),
+            report,
+        )
+    };
+    let Some(budget) = batch_budget else {
+        return finish(out, report);
+    };
+
+    // ---- 2. Plan once, verify the store, admit tenants. ----------------
+    let plan = robw_partition_par(a_hat, budget, pool);
+    report.segments = plan.len();
+    report.staged_bytes = plan.iter().map(|s| s.bytes).sum();
+    if let StagingBacking::Disk(store) = &staging.backing {
+        if let Err(e) = store.check_plan(&plan) {
+            let err =
+                ServeError::Streaming(format!("segment store does not match the RoBW plan: {e}"));
+            for t in candidates {
+                out[t] = Some(Err(err.clone()));
+            }
+            return finish(out, report);
+        }
+    }
+    let mut admitted: Vec<usize> = Vec::new();
+    let mut panel_bytes: Vec<u64> = Vec::new();
+    for &t in &candidates {
+        let bytes = (nrows * queries[t].x.ncols * 4) as u64;
+        match mem.alloc(bytes, "tenant feature panel") {
+            Ok(()) => {
+                admitted.push(t);
+                panel_bytes.push(bytes);
+            }
+            Err(e) => out[t] = Some(Err(ServeError::Admission(e))),
+        }
+    }
+    report.tenants_admitted = admitted.len();
+
+    // Empty batch or 0-row graph: run the combines on empty aggregations
+    // (the same degenerate path the pipeline takes), free the panels, done.
+    if admitted.is_empty() || plan.is_empty() {
+        for (k, &t) in admitted.iter().enumerate() {
+            let q = &queries[t];
+            let agg = Dense::zeros(nrows, q.x.ncols);
+            out[t] = Some(Ok(dense_affine(&agg, &q.layer.w, &q.layer.b, q.layer.relu)));
+            mem.free(panel_bytes[k]);
+        }
+        report.peak_gpu_bytes = mem.peak;
+        return finish(out, report);
+    }
+
+    // ---- 3. One staged pass, fanned out across the batch. --------------
+    let recycle = staging.recycle.as_deref();
+    // Plan-wide scratch maxima for recycled in-memory staging (the disk
+    // path uses the store's precomputed capacities).
+    let (max_rows, max_nnz) = match (&staging.backing, recycle) {
+        (StagingBacking::Memory, Some(_)) => (
+            plan.iter().map(|s| s.row_hi - s.row_lo).max().unwrap_or(0),
+            plan.iter().map(|s| s.nnz).max().unwrap_or(0),
+        ),
+        _ => (0, 0),
+    };
+    let mut aggs: Vec<Dense> = admitted
+        .iter()
+        .map(|&t| {
+            let f = queries[t].x.ncols;
+            match recycle {
+                Some(rp) => Dense::from_vec(nrows, f, rp.take_panel(nrows * f)),
+                None => Dense::zeros(nrows, f),
+            }
+        })
+        .collect();
+    let ledger = Mutex::new(BatchLedger { mem, staged: 0, meter: StagingMeter::default() });
+    let plan_ref = &plan;
+    // Each tenant's merge is serial *within* the tenant (the batch is the
+    // parallel axis) and writes the same disjoint row ranges in the same
+    // order as its solo pass — `spmm_par_into` computes rows
+    // independently, so the bytes match the solo pool-parallel run too.
+    let serial = Pool::serial();
+    let mut consumers: Vec<_> = aggs
+        .iter_mut()
+        .zip(&admitted)
+        .map(|(agg, &t)| {
+            let q = &queries[t];
+            let f = q.x.ncols;
+            let serial = &serial;
+            move |i: usize, sub: &SegmentRead| -> Result<(), ServeError> {
+                let seg = &plan_ref[i];
+                spmm_par_into(
+                    sub.csr(),
+                    &q.x,
+                    serial,
+                    &mut agg.data[seg.row_lo * f..seg.row_hi * f],
+                );
+                Ok(())
+            }
+        })
+        .collect();
+    let streamed = staging.prefetch.run_fanout(
+        pool,
+        plan.len(),
+        // Producer: charge the segment once, stage it once.
+        |i: usize, reuse: Option<Csr>| -> Result<SegmentRead, ServeError> {
+            let seg = &plan_ref[i];
+            {
+                let mut led = lock(&ledger);
+                led.mem.alloc(seg.bytes, "RoBW segment").map_err(|e| {
+                    ServeError::Streaming(format!("segment {i} does not fit: {e}"))
+                })?;
+                led.staged += seg.bytes;
+            }
+            match &staging.backing {
+                StagingBacking::Memory => {
+                    let mut sub = match (reuse, recycle) {
+                        (Some(m), _) => m,
+                        (None, Some(rp)) => rp.take_csr(max_rows, max_nnz),
+                        (None, None) => Csr::empty(0, 0),
+                    };
+                    materialize_into(a_hat, seg, &mut sub);
+                    if let Some(cm) = &staging.io_cost {
+                        let dur = cm.transfer_secs(Op::HtoD, seg.bytes);
+                        std::thread::sleep(std::time::Duration::from_secs_f64(dur));
+                    }
+                    Ok(SegmentRead::Owned(sub))
+                }
+                StagingBacking::Disk(store) => {
+                    let (sub, origin) = store.read_reusing(i, reuse, recycle).map_err(|e| {
+                        ServeError::Streaming(format!("staging segment {i} from disk: {e}"))
+                    })?;
+                    lock(&ledger).meter.record(origin.disk_bytes, origin.cache_hit);
+                    Ok(sub)
+                }
+            }
+        },
+        &mut consumers,
+        // Retire: runs only after the last tenant drained the segment —
+        // free its ledger bytes and recycle the slab.
+        |i: usize, sub: SegmentRead| {
+            let seg = &plan_ref[i];
+            let mut led = lock(&ledger);
+            led.mem.free(seg.bytes);
+            led.staged -= seg.bytes;
+            Ok(if recycle.is_some() { sub.reclaim() } else { None })
+        },
+    );
+    drop(consumers);
+
+    // The stream has joined; reconcile whatever an abort stranded.
+    let led = ledger.into_inner().unwrap_or_else(PoisonError::into_inner);
+    if led.staged > 0 {
+        led.mem.free(led.staged);
+    }
+    report.disk_bytes = led.meter.disk_bytes;
+    report.cache_hits = led.meter.cache_hits;
+    report.cache_misses = led.meter.cache_misses;
+    match streamed {
+        Ok(leftovers) => {
+            if let Some(rp) = recycle {
+                for m in leftovers {
+                    rp.put_csr(m);
+                }
+            }
+            for (k, &t) in admitted.iter().enumerate() {
+                let q = &queries[t];
+                out[t] = Some(Ok(dense_affine(&aggs[k], &q.layer.w, &q.layer.b, q.layer.relu)));
+            }
+        }
+        Err(e) => {
+            for &t in &admitted {
+                out[t] = Some(Err(e.clone()));
+            }
+        }
+    }
+    // Retire the aggregation slabs and release every panel reservation —
+    // the ledger balances on the success and the abort path alike.
+    if let Some(rp) = recycle {
+        for agg in aggs {
+            rp.put_panel(agg.data);
+        }
+    }
+    for &bytes in &panel_bytes {
+        led.mem.free(bytes);
+    }
+    report.peak_gpu_bytes = led.mem.peak;
+    finish(out, report)
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample set (`p` in
+/// `[0, 100]`; `NaN` on an empty set). Deterministic: no interpolation,
+/// just the sample at the scaled rank.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let p = p.clamp(0.0, 100.0);
+    let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+/// Open-loop load profile for [`serve_open_loop`].
+#[derive(Debug, Clone)]
+pub struct OpenLoopConfig {
+    /// Requests each tenant issues over the run.
+    pub requests_per_tenant: usize,
+    /// Aggregate arrival rate in requests per second (the schedule is
+    /// fixed up front — arrivals do not wait for completions, hence
+    /// "open loop").
+    pub rate_hz: f64,
+    /// Most requests answered by one staged pass.
+    pub max_batch: usize,
+}
+
+impl Default for OpenLoopConfig {
+    fn default() -> OpenLoopConfig {
+        OpenLoopConfig { requests_per_tenant: 8, rate_hz: 64.0, max_batch: 16 }
+    }
+}
+
+/// One tenant's latency summary over an open-loop run.
+#[derive(Debug, Clone)]
+pub struct TenantLatency {
+    /// Tenant index.
+    pub tenant: usize,
+    /// Requests answered with an output.
+    pub completed: usize,
+    /// Requests rejected with a typed error.
+    pub rejected: usize,
+    /// Median request latency in seconds (`NaN` with no completions).
+    pub p50_s: f64,
+    /// 99th-percentile request latency in seconds.
+    pub p99_s: f64,
+}
+
+/// Aggregate report of one open-loop serving run.
+#[derive(Debug, Clone, Default)]
+pub struct ServeReport {
+    /// Tenants in the catalog.
+    pub tenants: usize,
+    /// Total requests issued.
+    pub requests: usize,
+    /// Staged passes run.
+    pub batches: usize,
+    /// Segments streamed across all passes.
+    pub segments_streamed: usize,
+    /// Wall-clock of the run in seconds.
+    pub wall_s: f64,
+    /// Aggregate staged-segment throughput (`segments_streamed / wall_s`).
+    pub segments_per_s: f64,
+    /// Whether the ledger returned to its pre-run level after every batch.
+    pub ledger_balanced: bool,
+    /// Per-tenant latency summaries, in tenant order.
+    pub per_tenant: Vec<TenantLatency>,
+}
+
+impl ServeReport {
+    /// JSON object mirroring the report (the `BENCH_streaming.json` /
+    /// `serve` CLI emission format).
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("tenants".to_string(), Json::Num(self.tenants as f64));
+        root.insert("requests".to_string(), Json::Num(self.requests as f64));
+        root.insert("batches".to_string(), Json::Num(self.batches as f64));
+        root.insert("segments_streamed".to_string(), Json::Num(self.segments_streamed as f64));
+        root.insert("wall_s".to_string(), Json::Num(self.wall_s));
+        root.insert("segments_per_s".to_string(), Json::Num(self.segments_per_s));
+        root.insert("ledger_balanced".to_string(), Json::Bool(self.ledger_balanced));
+        let mut tenants = BTreeMap::new();
+        for t in &self.per_tenant {
+            let mut entry = BTreeMap::new();
+            entry.insert("completed".to_string(), Json::Num(t.completed as f64));
+            entry.insert("rejected".to_string(), Json::Num(t.rejected as f64));
+            entry.insert("p50_s".to_string(), Json::Num(t.p50_s));
+            entry.insert("p99_s".to_string(), Json::Num(t.p99_s));
+            tenants.insert(format!("tenant_{}", t.tenant), Json::Obj(entry));
+        }
+        root.insert("per_tenant".to_string(), Json::Obj(tenants));
+        Json::Obj(root)
+    }
+}
+
+/// Drive [`serve_batch`] under open-loop load: requests arrive round-robin
+/// across `queries` at a fixed aggregate rate, pending requests batch (up
+/// to `max_batch` — deduplicated per tenant, since identical queries share
+/// one answer) onto staged passes, and every request's latency is measured
+/// arrival-to-completion. Returns per-tenant p50/p99 latency and aggregate
+/// segments/s.
+pub fn serve_open_loop(
+    a_hat: &Csr,
+    queries: &[TenantQuery],
+    mem: &mut GpuMem,
+    pool: &Pool,
+    staging: &StagingConfig,
+    cfg: &OpenLoopConfig,
+) -> ServeReport {
+    let nt = queries.len();
+    let total = nt * cfg.requests_per_tenant;
+    let rate = if cfg.rate_hz > 0.0 { cfg.rate_hz } else { 1.0 };
+    let max_batch = cfg.max_batch.max(1);
+    let baseline_used = mem.used;
+    let mut report = ServeReport {
+        tenants: nt,
+        requests: total,
+        ledger_balanced: true,
+        ..ServeReport::default()
+    };
+    let mut samples: Vec<Vec<f64>> = vec![Vec::new(); nt];
+    let mut rejected = vec![0usize; nt];
+    let start = Instant::now();
+    let mut next = 0usize; // next request (global index) not yet served
+    while next < total {
+        // Open loop: arrival `k` is due at `k / rate`, regardless of how
+        // the server is keeping up. Sleep only when ahead of the schedule.
+        let due = next as f64 / rate;
+        let now = start.elapsed().as_secs_f64();
+        if now < due {
+            std::thread::sleep(std::time::Duration::from_secs_f64(due - now));
+        }
+        let now = start.elapsed().as_secs_f64();
+        let mut batch: Vec<usize> = Vec::new();
+        while next < total && (next as f64 / rate) <= now && batch.len() < max_batch {
+            batch.push(next);
+            next += 1;
+        }
+        // Distinct tenants of the pending batch, in fixed tenant order —
+        // a tenant's duplicate requests share the one answer.
+        let mut tenant_ids: Vec<usize> = batch.iter().map(|&r| r % nt).collect();
+        tenant_ids.sort_unstable();
+        tenant_ids.dedup();
+        let batch_queries: Vec<TenantQuery> =
+            tenant_ids.iter().map(|&t| queries[t].clone()).collect();
+        let (results, brep) = serve_batch(a_hat, &batch_queries, mem, pool, staging);
+        report.batches += 1;
+        report.segments_streamed += brep.segments;
+        if mem.used != baseline_used {
+            report.ledger_balanced = false;
+        }
+        let done = start.elapsed().as_secs_f64();
+        for &r in &batch {
+            let t = r % nt;
+            let k = tenant_ids.binary_search(&t).expect("tenant is in the batch");
+            match &results[k] {
+                Ok(_) => samples[t].push(done - r as f64 / rate),
+                Err(_) => rejected[t] += 1,
+            }
+        }
+    }
+    report.wall_s = start.elapsed().as_secs_f64();
+    report.segments_per_s = if report.wall_s > 0.0 {
+        report.segments_streamed as f64 / report.wall_s
+    } else {
+        0.0
+    };
+    report.per_tenant = (0..nt)
+        .map(|t| {
+            let mut lat = std::mem::take(&mut samples[t]);
+            lat.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+            TenantLatency {
+                tenant: t,
+                completed: lat.len(),
+                rejected: rejected[t],
+                p50_s: percentile(&lat, 50.0),
+                p99_s: percentile(&lat, 99.0),
+            }
+        })
+        .collect();
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::GpuMem;
+    use crate::runtime::recycle::BufferPool;
+    use crate::runtime::segstore::SegmentStore;
+    use crate::sparse::norm::normalize_adjacency;
+    use crate::testing::TempDir;
+    use crate::util::rng::Pcg;
+    use std::sync::Arc;
+
+    fn test_graph(seed: u64, nodes: usize) -> Csr {
+        let mut rng = Pcg::seed(seed);
+        normalize_adjacency(&crate::graphgen::kmer::generate(&mut rng, nodes, 3.0))
+    }
+
+    fn tenant(rng: &mut Pcg, nrows: usize, f: usize, h: usize, budget: u64) -> TenantQuery {
+        TenantQuery {
+            x: Dense::from_vec(nrows, f, (0..nrows * f).map(|_| rng.normal() as f32).collect()),
+            layer: OocGcnLayer {
+                w: Dense::from_vec(
+                    f,
+                    h,
+                    (0..f * h).map(|_| (rng.normal() * 0.2) as f32).collect(),
+                ),
+                b: vec![0.05; h],
+                relu: true,
+                seg_budget: budget,
+            },
+        }
+    }
+
+    #[test]
+    fn batch_matches_solo_runs_byte_for_byte() {
+        let a_hat = test_graph(91, 200);
+        let mut rng = Pcg::seed(92);
+        let queries: Vec<TenantQuery> =
+            (0..3).map(|t| tenant(&mut rng, 200, 8 + 4 * t, 6, 2048)).collect();
+        let pool = Pool::new(4);
+        let staging = StagingConfig::depth(2);
+        let mut mem = GpuMem::new(1 << 30);
+        let (results, rep) = serve_batch(&a_hat, &queries, &mut mem, &pool, &staging);
+        assert_eq!(rep.tenants_admitted, 3);
+        assert_eq!(mem.used, 0, "ledger balances after the pass");
+        for (t, (r, q)) in results.iter().zip(&queries).enumerate() {
+            let got = r.as_ref().unwrap_or_else(|e| panic!("tenant {t}: {e}"));
+            let mut solo_mem = GpuMem::new(1 << 30);
+            let (want, _) = q
+                .layer
+                .forward_cpu(&a_hat, &q.x, &mut solo_mem, &pool, &staging)
+                .unwrap();
+            assert_eq!(got, &want, "tenant {t} diverged from its solo pass");
+        }
+    }
+
+    #[test]
+    fn admission_rejects_with_typed_error_and_balances() {
+        let a_hat = test_graph(93, 150);
+        let mut rng = Pcg::seed(94);
+        let queries: Vec<TenantQuery> =
+            (0..3).map(|_| tenant(&mut rng, 150, 16, 4, 2048)).collect();
+        let panel = (150 * 16 * 4) as u64;
+        let plan_max: u64 = robw_partition_par(&a_hat, 2048, &Pool::serial())
+            .iter()
+            .map(|s| s.bytes)
+            .max()
+            .unwrap();
+        // Room for two panels plus staging headroom, but not three panels.
+        let mut mem = GpuMem::new(2 * panel + 3 * plan_max);
+        let (results, rep) =
+            serve_batch(&a_hat, &queries, &mut mem, &Pool::new(2), &StagingConfig::depth(2));
+        assert_eq!(rep.tenants_admitted, 2);
+        assert_eq!(rep.tenants_rejected, 1);
+        assert!(results[0].is_ok());
+        assert!(results[1].is_ok());
+        assert!(
+            matches!(results[2], Err(ServeError::Admission(_))),
+            "third tenant must be rejected, got {:?}",
+            results[2]
+        );
+        assert_eq!(mem.used, 0, "rejected tenants leave nothing allocated");
+    }
+
+    #[test]
+    fn plan_mismatch_and_bad_shapes_are_typed_rejections() {
+        let a_hat = test_graph(95, 120);
+        let mut rng = Pcg::seed(96);
+        let good = tenant(&mut rng, 120, 8, 4, 2048);
+        let other_budget = tenant(&mut rng, 120, 8, 4, 4096);
+        let wrong_rows = tenant(&mut rng, 60, 8, 4, 2048);
+        let mut unchained = tenant(&mut rng, 120, 8, 4, 2048);
+        unchained.layer.w = Dense::zeros(5, 4);
+        let queries = vec![good, other_budget, wrong_rows, unchained];
+        let mut mem = GpuMem::new(1 << 30);
+        let (results, rep) =
+            serve_batch(&a_hat, &queries, &mut mem, &Pool::serial(), &StagingConfig::serial());
+        assert!(results[0].is_ok());
+        assert!(matches!(
+            results[1],
+            Err(ServeError::PlanMismatch { tenant_budget: 4096, batch_budget: 2048 })
+        ));
+        assert!(matches!(results[2], Err(ServeError::BadQuery(_))));
+        assert!(matches!(results[3], Err(ServeError::BadQuery(_))));
+        assert_eq!(rep.tenants_admitted, 1);
+        assert_eq!(rep.tenants_rejected, 3);
+        assert_eq!(mem.used, 0);
+    }
+
+    #[test]
+    fn disk_backed_batch_stages_each_segment_once() {
+        let a_hat = test_graph(97, 180);
+        let mut rng = Pcg::seed(98);
+        let queries: Vec<TenantQuery> =
+            (0..4).map(|_| tenant(&mut rng, 180, 8, 4, 2048)).collect();
+        let plan = robw_partition_par(&a_hat, 2048, &Pool::serial());
+        let dir = TempDir::new("serve-disk");
+        let store = Arc::new(SegmentStore::spill(&a_hat, &plan, dir.path(), 0).unwrap());
+        let rp = Arc::new(BufferPool::new(64 << 20));
+        let staging = StagingConfig::disk(store, 2).with_recycle(rp);
+        let mut mem = GpuMem::new(1 << 30);
+        let (results, rep) = serve_batch(&a_hat, &queries, &mut mem, &Pool::new(4), &staging);
+        assert!(results.iter().all(|r| r.is_ok()));
+        assert_eq!(rep.cache_misses, plan.len(), "every segment read exactly once");
+        assert_eq!(rep.cache_hits, 0);
+        let file_bytes: u64 = (0..plan.len())
+            .map(|i| match &staging.backing {
+                StagingBacking::Disk(s) => s.meta(i).file_bytes,
+                _ => unreachable!(),
+            })
+            .sum();
+        assert_eq!(rep.disk_bytes, file_bytes, "I/O charged once per segment, not per tenant");
+        assert_eq!(mem.used, 0);
+    }
+
+    #[test]
+    fn empty_and_degenerate_batches_resolve() {
+        let a_hat = test_graph(99, 100);
+        let mut mem = GpuMem::new(1 << 20);
+        let (results, rep) =
+            serve_batch(&a_hat, &[], &mut mem, &Pool::serial(), &StagingConfig::serial());
+        assert!(results.is_empty());
+        assert_eq!(rep.tenants_admitted, 0);
+        assert_eq!(mem.used, 0);
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        assert!(percentile(&[], 50.0).is_nan());
+        assert_eq!(percentile(&[7.0], 50.0), 7.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 50.0), 51.0);
+        assert_eq!(percentile(&v, 99.0), 99.0);
+        assert_eq!(percentile(&v, 100.0), 100.0);
+    }
+
+    #[test]
+    fn open_loop_reports_finite_latencies_and_balanced_ledger() {
+        let a_hat = test_graph(101, 150);
+        let mut rng = Pcg::seed(102);
+        let queries: Vec<TenantQuery> =
+            (0..2).map(|_| tenant(&mut rng, 150, 8, 4, 2048)).collect();
+        let mut mem = GpuMem::new(1 << 30);
+        let cfg = OpenLoopConfig { requests_per_tenant: 4, rate_hz: 400.0, max_batch: 8 };
+        let rep = serve_open_loop(
+            &a_hat,
+            &queries,
+            &mut mem,
+            &Pool::new(2),
+            &StagingConfig::depth(2),
+            &cfg,
+        );
+        assert_eq!(rep.requests, 8);
+        assert!(rep.batches >= 1);
+        assert!(rep.ledger_balanced, "ledger must return to baseline after every batch");
+        assert_eq!(rep.per_tenant.len(), 2);
+        for t in &rep.per_tenant {
+            assert_eq!(t.completed + t.rejected, 4);
+            assert!(t.completed > 0, "tenant {} completed nothing", t.tenant);
+            assert!(t.p50_s.is_finite() && t.p50_s >= 0.0);
+            assert!(t.p99_s.is_finite() && t.p99_s >= t.p50_s);
+        }
+        assert!(rep.segments_per_s > 0.0);
+        let json = format!("{}", rep.to_json());
+        assert!(json.contains("p99_s"), "{json}");
+        assert!(json.contains("tenant_1"), "{json}");
+    }
+}

@@ -25,6 +25,13 @@
 //!                      layer boundaries; --panel-dir spills intermediate
 //!                      feature panels) and verify byte-identity against
 //!                      the per-layer sequential oracle (artifact-free)
+//!   serve [--scale S] [--feat F] [--budget BYTES] [--tenants N]
+//!         [--requests R] [--rate-hz HZ] [--max-batch B] [--out F]
+//!                      multi-tenant batched inference under open-loop
+//!                      load: one staged pass of the adjacency serves
+//!                      every admitted tenant per batch; reports
+//!                      per-tenant p50/p99 latency and segments/s
+//!                      (--out writes the ServeReport as JSON)
 //!   prep DATASET       one-time RoBW preprocessing cost estimate
 
 use aires::config::Config;
@@ -594,6 +601,138 @@ fn main() {
                 std::process::exit(1);
             }
         }
+        "serve" => {
+            // Multi-tenant batched inference surface (no compiled
+            // artifacts needed): N tenant queries share one staged pass
+            // of the adjacency per batch under open-loop load.
+            use aires::gcn::serve::{serve_open_loop, OpenLoopConfig, TenantQuery};
+            use aires::memsim::GpuMem;
+            use aires::sparse::spmm::Dense;
+
+            let scale: u32 = parsed_flag(&args, "--scale", "an RMAT scale").unwrap_or(8);
+            let feat: usize = parsed_flag(&args, "--feat", "a feature width").unwrap_or(32);
+            let budget: u64 = parsed_flag(&args, "--budget", "a byte budget").unwrap_or(8192);
+            // --tenants N (config key `tenants` as fallback, default 4);
+            // 0 is clamped to 1 with a warning (same convention as
+            // --prefetch-depth 0).
+            let tenants: usize = parsed_flag(&args, "--tenants", "a tenant count")
+                .map(|t: usize| {
+                    if t == 0 {
+                        eprintln!("warning: --tenants 0 serves nobody; using 1");
+                        1
+                    } else {
+                        t
+                    }
+                })
+                .unwrap_or_else(|| cfg.tenants.unwrap_or(4));
+            let requests: usize =
+                parsed_flag(&args, "--requests", "a per-tenant request count")
+                    .map(|r: usize| {
+                        if r == 0 {
+                            eprintln!("warning: --requests 0 issues nothing; using 1");
+                            1
+                        } else {
+                            r
+                        }
+                    })
+                    .unwrap_or(8);
+            let rate_hz: f64 = parsed_flag(&args, "--rate-hz", "an aggregate arrival rate")
+                .map(|r: f64| {
+                    if r <= 0.0 {
+                        eprintln!("warning: --rate-hz {r} is not an arrival rate; using 200");
+                        200.0
+                    } else {
+                        r
+                    }
+                })
+                .unwrap_or(200.0);
+            let max_batch: usize = parsed_flag(&args, "--max-batch", "a batch bound")
+                .map(|b: usize| {
+                    if b == 0 {
+                        eprintln!("warning: --max-batch 0 admits nothing; using 1");
+                        1
+                    } else {
+                        b
+                    }
+                })
+                .unwrap_or(16);
+
+            let mut rng = Pcg::seed(23);
+            let a = aires::graphgen::rmat::generate(&mut rng, scale, 8, Default::default());
+            let a_hat = aires::sparse::norm::normalize_adjacency(&a);
+            let nodes = a_hat.nrows;
+            let queries: Vec<TenantQuery> = (0..tenants)
+                .map(|_| TenantQuery {
+                    x: Dense::from_vec(
+                        nodes,
+                        feat,
+                        (0..nodes * feat).map(|_| rng.normal() as f32).collect(),
+                    ),
+                    layer: aires::gcn::OocGcnLayer {
+                        w: Dense::from_vec(
+                            feat,
+                            feat,
+                            (0..feat * feat).map(|_| (rng.normal() * 0.2) as f32).collect(),
+                        ),
+                        b: vec![0.05; feat],
+                        relu: true,
+                        seg_budget: budget,
+                    },
+                })
+                .collect();
+            let staging = staging_for(
+                &a_hat,
+                budget,
+                &segment_dir,
+                host_cache_bytes,
+                prefetch_depth,
+                &recycle_pool,
+            );
+            let mut mem = GpuMem::new(256 << 20);
+            println!(
+                "serve: rmat-{scale} ({nodes} nodes, {} nnz), {tenants} tenants x \
+                 {requests} requests at {rate_hz} req/s aggregate (batch <= {max_batch}, \
+                 prefetch depth {prefetch_depth})",
+                a_hat.nnz()
+            );
+            let olc = OpenLoopConfig { requests_per_tenant: requests, rate_hz, max_batch };
+            let rep = serve_open_loop(&a_hat, &queries, &mut mem, &pool, &staging, &olc);
+            println!(
+                "served {} requests in {} batches ({} segments streamed, {:.1} segments/s, \
+                 {:.2}s wall)",
+                rep.requests, rep.batches, rep.segments_streamed, rep.segments_per_s, rep.wall_s
+            );
+            for t in &rep.per_tenant {
+                println!(
+                    "  tenant {}: p50 {:.2}ms, p99 {:.2}ms ({} completed, {} rejected)",
+                    t.tenant,
+                    t.p50_s * 1e3,
+                    t.p99_s * 1e3,
+                    t.completed,
+                    t.rejected
+                );
+            }
+            if let Some(rp) = &recycle_pool {
+                let st = rp.stats();
+                println!(
+                    "recycle pool: {} hits / {} misses, {} returned ({} dropped by the cap)",
+                    st.hits, st.misses, st.returns, st.drops
+                );
+            }
+            if let Some(out) = flag_value(&args, "--out") {
+                std::fs::write(&out, format!("{}\n", rep.to_json())).unwrap_or_else(|e| {
+                    eprintln!("error: writing serve report to {out}: {e}");
+                    std::process::exit(1);
+                });
+                println!("wrote {out}");
+            }
+            if rep.ledger_balanced {
+                println!("ledger balanced after every batch: OK");
+            } else {
+                eprintln!("error: ledger NOT balanced after a batch");
+                std::process::exit(1);
+            }
+        }
         "parcheck" => {
             // Serial-vs-parallel differential check + timing of the hot
             // kernels on generated graphs: the runtime surface for
@@ -660,7 +799,7 @@ fn main() {
         _ => {
             println!(
                 "aires — out-of-core GCN co-design (AIRES reproduction)\n\n\
-                 usage: aires <catalog|features|fig3|fig6|fig7|fig8|fig9|table3|report|prep|train|spgemm|segcheck|gcnstream|parcheck|trace|sweep|config-dump> [--config F] [--threads N] [--prefetch-depth D] [--segment-dir DIR] [--host-cache-bytes N] [--recycle-cap-bytes N] [--layers L] [--panel-dir DIR] [args]\n\
+                 usage: aires <catalog|features|fig3|fig6|fig7|fig8|fig9|table3|report|prep|train|spgemm|segcheck|gcnstream|serve|parcheck|trace|sweep|config-dump> [--config F] [--threads N] [--prefetch-depth D] [--segment-dir DIR] [--host-cache-bytes N] [--recycle-cap-bytes N] [--layers L] [--panel-dir DIR] [--tenants N] [args]\n\
                  see README.md for details"
             );
         }

@@ -70,9 +70,17 @@ impl GpuMem {
         GpuMem { capacity, used: 0, peak: 0 }
     }
 
+    /// Whether `bytes` more would still fit under the capacity.
+    /// Overflow-safe: a request near `u64::MAX` (e.g. a corrupted or
+    /// adversarial panel size reaching admission control) reports "does
+    /// not fit" instead of wrapping past the capacity check.
+    pub fn can_fit(&self, bytes: u64) -> bool {
+        self.used.checked_add(bytes).is_some_and(|total| total <= self.capacity)
+    }
+
     /// Allocate `bytes`, failing with [`OomError`] if over capacity.
     pub fn alloc(&mut self, bytes: u64, context: &str) -> Result<(), OomError> {
-        if self.used + bytes > self.capacity {
+        if !self.can_fit(bytes) {
             return Err(OomError {
                 wanted: bytes,
                 used: self.used,
@@ -119,5 +127,16 @@ mod tests {
         let mut m = GpuMem::new(10);
         let err = m.alloc(11, "CSR C output").unwrap_err();
         assert!(err.to_string().contains("CSR C output"));
+    }
+
+    #[test]
+    fn huge_requests_reject_without_overflowing() {
+        let mut m = GpuMem::new(u64::MAX);
+        m.alloc(16, "resident").unwrap();
+        assert!(!m.can_fit(u64::MAX), "used + wanted would wrap past the capacity check");
+        let err = m.alloc(u64::MAX, "absurd panel").unwrap_err();
+        assert_eq!(err.wanted, u64::MAX);
+        assert_eq!(m.used, 16, "the failed allocation charges nothing");
+        assert!(m.can_fit(u64::MAX - 16));
     }
 }

@@ -27,7 +27,16 @@
 use std::collections::VecDeque;
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+
+/// Poison-tolerant lock: every mutex in this module guards state that is
+/// valid at each instruction boundary (slot options, hand-off queues), so
+/// when a worker panics mid-region the *original* panic payload must
+/// surface at the scope join — not a secondary `PoisonError` panic from
+/// the next thread that touches the state.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Handle carrying the worker-count policy for parallel regions.
 #[derive(Debug, Clone)]
@@ -126,14 +135,18 @@ impl Pool {
                             break;
                         }
                         let out = f(&mut state, i);
-                        *slots[i].lock().unwrap() = Some(out);
+                        *lock(&slots[i]) = Some(out);
                     }
                 });
             }
         });
         slots
             .into_iter()
-            .map(|m| m.into_inner().unwrap().expect("worker completed every claimed task"))
+            .map(|m| {
+                m.into_inner()
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .expect("worker completed every claimed task")
+            })
             .collect()
     }
 
@@ -206,7 +219,7 @@ impl Pool {
                         break;
                     }
                     let (range, chunk) =
-                        tasks[i].lock().unwrap().take().expect("each chunk claimed once");
+                        lock(&tasks[i]).take().expect("each chunk claimed once");
                     f(range, chunk);
                 });
             }
@@ -277,7 +290,7 @@ impl<T> Handoff<T> {
     /// cancelled — then `false`). Producers call this *before* staging the
     /// next item so production itself never runs ahead of the queue bound.
     pub fn reserve(&self) -> bool {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock(&self.state);
         loop {
             if st.cancelled {
                 return false;
@@ -285,28 +298,31 @@ impl<T> Handoff<T> {
             if st.buf.len() < self.capacity {
                 return true;
             }
-            st = self.not_full.wait(st).unwrap();
+            st = self.not_full.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
     }
 
-    /// Enqueue `item`, blocking while the queue is full. Returns `false`
-    /// (dropping the item) once the consumer has cancelled — the producer
-    /// should stop staging.
-    pub fn push(&self, item: T) -> bool {
-        let mut st = self.state.lock().unwrap();
+    /// Enqueue `item`, blocking while the queue is full. Once the consumer
+    /// has cancelled, the item is handed **back** as `Err(item)` instead of
+    /// being dropped — a recycling pipeline's slab must survive the abort
+    /// and retire to its pool, not leak to the allocator (the producer
+    /// should stop staging either way).
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut st = lock(&self.state);
         loop {
             if st.cancelled {
-                return false;
+                drop(st);
+                return Err(item);
             }
             if st.buf.len() < self.capacity {
                 break;
             }
-            st = self.not_full.wait(st).unwrap();
+            st = self.not_full.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
         st.buf.push_back(item);
         drop(st);
         self.not_empty.notify_one();
-        true
+        Ok(())
     }
 
     /// Non-blocking dequeue: the next buffered item if one is ready, else
@@ -314,7 +330,7 @@ impl<T> Handoff<T> {
     /// recycling pipeline's producer uses this to pick up a drained buffer
     /// when one has come back without ever stalling the staging stream.
     pub fn try_pop(&self) -> Option<T> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock(&self.state);
         let v = st.buf.pop_front();
         if v.is_some() {
             drop(st);
@@ -327,7 +343,7 @@ impl<T> Handoff<T> {
     /// empty. Returns `None` once the channel is closed (or cancelled) and
     /// drained.
     pub fn pop(&self) -> Option<T> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock(&self.state);
         loop {
             if let Some(v) = st.buf.pop_front() {
                 drop(st);
@@ -337,27 +353,34 @@ impl<T> Handoff<T> {
             if st.closed || st.cancelled {
                 return None;
             }
-            st = self.not_empty.wait(st).unwrap();
+            st = self.not_empty.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
     }
 
     /// Producer side: no further items will be pushed. Buffered items stay
     /// consumable; a consumer blocked in [`Self::pop`] wakes up.
     pub fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        lock(&self.state).closed = true;
         self.not_empty.notify_all();
     }
 
     /// Consumer side: stop the stream. A producer blocked in
-    /// [`Self::push`] wakes up and sees `false`, and already-buffered
-    /// items are dropped immediately.
-    pub fn cancel(&self) {
-        let mut st = self.state.lock().unwrap();
+    /// [`Self::push`] wakes up and gets its item back, and the buffered
+    /// items are drained and **returned** to the caller rather than
+    /// dropped. Two reasons, both found auditing the multi-consumer
+    /// fan-out: a return lane's buffered slabs must outlive the abort so
+    /// they can retire to their pool (the old drop-under-lock lost them),
+    /// and dropping arbitrary `T`s while holding the state mutex let a
+    /// panicking `Drop` poison the channel for every other thread.
+    #[must_use = "the drained items carry recyclable buffers; drop them deliberately"]
+    pub fn cancel(&self) -> Vec<T> {
+        let mut st = lock(&self.state);
         st.cancelled = true;
-        st.buf.clear();
+        let drained: Vec<T> = st.buf.drain(..).collect();
         drop(st);
         self.not_full.notify_all();
         self.not_empty.notify_all();
+        drained
     }
 }
 
@@ -513,7 +536,7 @@ mod tests {
         let got = Pool::new(2).scoped(|s| {
             s.spawn(|| {
                 for i in 0..100 {
-                    assert!(chan.push(i), "consumer never cancels in this test");
+                    assert!(chan.push(i).is_ok(), "consumer never cancels in this test");
                 }
                 chan.close();
             });
@@ -529,8 +552,8 @@ mod tests {
     #[test]
     fn handoff_close_drains_then_ends() {
         let chan: Handoff<u32> = Handoff::bounded(4);
-        assert!(chan.push(1));
-        assert!(chan.push(2));
+        assert!(chan.push(1).is_ok());
+        assert!(chan.push(2).is_ok());
         chan.close();
         assert_eq!(chan.pop(), Some(1));
         assert_eq!(chan.pop(), Some(2));
@@ -552,10 +575,11 @@ mod tests {
             });
             // Popping the first item proves push(7) completed before cancel.
             assert_eq!(chan.pop(), Some(7));
-            chan.cancel();
+            let drained = chan.cancel();
             let (first, _, third) = producer.join().unwrap();
-            assert!(first, "push before cancel succeeds");
-            assert!(!third, "blocked push returns false on cancel");
+            assert!(first.is_ok(), "push before cancel succeeds");
+            assert_eq!(third, Err(9), "blocked push hands the item back on cancel");
+            assert_eq!(drained, vec![8], "cancel returns the buffered items");
         });
         assert_eq!(chan.pop(), None, "cancelled channel yields nothing");
     }
@@ -564,12 +588,12 @@ mod tests {
     fn handoff_try_pop_never_blocks() {
         let chan: Handoff<u32> = Handoff::bounded(2);
         assert_eq!(chan.try_pop(), None, "empty open channel yields None immediately");
-        assert!(chan.push(5));
-        assert!(chan.push(6));
+        assert!(chan.push(5).is_ok());
+        assert!(chan.push(6).is_ok());
         assert_eq!(chan.try_pop(), Some(5));
         // try_pop freed a slot: a producer blocked on push would wake. Here
         // we just verify the slot is reusable without blocking.
-        assert!(chan.push(7));
+        assert!(chan.push(7).is_ok());
         chan.close();
         assert_eq!(chan.try_pop(), Some(6));
         assert_eq!(chan.try_pop(), Some(7), "close drains buffered items");
@@ -579,7 +603,90 @@ mod tests {
     #[test]
     fn handoff_capacity_floor_is_one() {
         let chan: Handoff<u8> = Handoff::bounded(0);
-        assert!(chan.push(9));
+        assert!(chan.push(9).is_ok());
         assert_eq!(chan.pop(), Some(9));
+    }
+
+    #[test]
+    fn handoff_push_after_cancel_hands_the_item_back() {
+        // The lost-slab window of the multi-consumer audit: a drainer
+        // returning a slab through a lane whose consumer already aborted
+        // must get the slab back (to retire it to the pool), never have it
+        // silently destroyed.
+        let chan: Handoff<Vec<u8>> = Handoff::bounded(4);
+        assert!(chan.push(vec![1, 2, 3]).is_ok());
+        let drained = chan.cancel();
+        assert_eq!(drained, vec![vec![1, 2, 3]], "buffered slab survives the cancel");
+        assert_eq!(
+            chan.push(vec![4, 5]),
+            Err(vec![4, 5]),
+            "post-cancel push returns the slab to its caller"
+        );
+        assert_eq!(chan.try_pop(), None);
+    }
+
+    #[test]
+    fn handoff_survives_panicking_drop_during_cancel() {
+        // cancel() used to clear the buffer while *holding* the state
+        // mutex, so an item whose Drop panics poisoned the channel: every
+        // later push/pop then died with a PoisonError that masked the
+        // original panic. Now cancel hands the items out and the drop runs
+        // outside the lock; the channel stays usable and the original
+        // payload is what the catcher sees.
+        struct Grenade(bool);
+        impl Drop for Grenade {
+            fn drop(&mut self) {
+                if self.0 && !std::thread::panicking() {
+                    panic!("slab drop exploded");
+                }
+            }
+        }
+        let chan: Handoff<Grenade> = Handoff::bounded(2);
+        assert!(chan.push(Grenade(true)).is_ok());
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            drop(chan.cancel());
+        }))
+        .expect_err("the armed drop must panic");
+        assert_eq!(
+            caught.downcast_ref::<&str>().copied(),
+            Some("slab drop exploded"),
+            "the original payload surfaces"
+        );
+        // The channel mutex was never poisoned: both sides still answer
+        // (as the cancelled channel they are) instead of panicking.
+        assert!(chan.push(Grenade(false)).is_err(), "cancelled channel rejects pushes");
+        assert!(chan.pop().is_none(), "cancelled channel drains clean");
+        assert!(!chan.reserve(), "reserve sees the cancel, not a poison panic");
+    }
+
+    #[test]
+    fn handoff_multi_drainer_return_lane_never_wedges() {
+        // Fan-out return-lane sizing contract: with capacity >= the number
+        // of slabs simultaneously in flight (segments x drainers here),
+        // every drainer's give-back push completes without blocking even
+        // when the producer never pops — the stuck-producer window the
+        // fan-out audit closed by sizing the lane for *all* consumers.
+        const DRAINERS: usize = 4;
+        const SLABS: usize = 8;
+        let lane: Handoff<(usize, usize)> = Handoff::bounded(DRAINERS * SLABS);
+        Pool::new(DRAINERS).scoped(|s| {
+            for d in 0..DRAINERS {
+                let lane = &lane;
+                s.spawn(move || {
+                    for i in 0..SLABS {
+                        assert!(lane.push((d, i)).is_ok(), "lane sized for every drainer");
+                    }
+                });
+            }
+        });
+        lane.close();
+        let mut got = Vec::new();
+        while let Some(v) = lane.try_pop() {
+            got.push(v);
+        }
+        got.sort_unstable();
+        let want: Vec<(usize, usize)> =
+            (0..DRAINERS).flat_map(|d| (0..SLABS).map(move |i| (d, i))).collect();
+        assert_eq!(got, want, "every slab crossed the lane exactly once");
     }
 }

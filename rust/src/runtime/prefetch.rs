@@ -25,8 +25,14 @@
 //! (enforced by `rust/tests/differential.rs`). Errors keep the same rule:
 //! the error reported is always the lowest-index failure, whether it came
 //! from `stage` or `consume`.
+//!
+//! Fan-out ([`Prefetch::run_fanout`]) keeps the same shape but hands each
+//! staged item to N independent consumers before retiring it — one staged
+//! pass of the adjacency serving a whole batch of tenant queries
+//! (`gcn::serve`), with the scope join acting as the "last drainer" that
+//! gates slab retirement.
 
-use super::pool::{Handoff, Pool};
+use super::pool::{chunk_ranges, Handoff, Pool};
 
 /// Configuration of one prefetch pipeline run.
 #[derive(Debug, Clone)]
@@ -155,7 +161,7 @@ impl Prefetch {
                     // more than reuse on a cold pipeline).
                     let item = stage(i, returns.try_pop());
                     let failed = item.is_err();
-                    if !chan.push(item) || failed {
+                    if chan.push(item).is_err() || failed {
                         return;
                     }
                 }
@@ -163,15 +169,19 @@ impl Prefetch {
             struct CancelOnExit<'a, T>(&'a Handoff<T>);
             impl<T> Drop for CancelOnExit<'_, T> {
                 fn drop(&mut self) {
-                    self.0.cancel();
+                    // The drained items are aborted stage results; dropping
+                    // them here (outside the channel lock) is deliberate.
+                    drop(self.0.cancel());
                 }
             }
             let _cancel = CancelOnExit(chan);
             (0..n).try_for_each(|i| {
                 let item = chan.pop().expect("producer stages every index before closing");
                 if let Some(buf) = consume(i, item?)? {
-                    // Capacity n: never blocks (see above).
-                    returns.push(buf);
+                    // Capacity n: never blocks (see above). The return lane
+                    // is never cancelled, so the hand-back cannot fail.
+                    let given_back = returns.push(buf);
+                    debug_assert!(given_back.is_ok(), "return lane is never cancelled");
                 }
                 Ok(())
             })
@@ -184,6 +194,96 @@ impl Prefetch {
             leftovers.push(buf);
         }
         Ok(leftovers)
+    }
+
+    /// [`Self::run_recycling`] with **fan-out**: every staged item is
+    /// handed to *each* of the `consumers` (shared, by reference) before
+    /// `retire` sees it — one staged pass of the stream serving N
+    /// consumers, the multi-tenant batched-inference shape of
+    /// `gcn::serve`.
+    ///
+    /// Consumers are independent: consumer `t` observes exactly the
+    /// `(i, &item)` sequence it would observe running the stream alone, so
+    /// a per-consumer merge that is deterministic solo stays byte-identical
+    /// under fan-out. When the pool has more than one worker and there is
+    /// more than one consumer, consumers run concurrently on staged item
+    /// `i` (chunked by [`super::pool::chunk_ranges`], each chunk walking
+    /// its consumers in index order); with a serial pool or a single
+    /// consumer, the fan-out is a plain in-order loop with no extra
+    /// machinery.
+    ///
+    /// `retire(i, item)` runs on the calling thread strictly after every
+    /// consumer has finished with item `i` — the scope join is the
+    /// "last drainer", so retiring the item's buffer (e.g. reclaiming a
+    /// segment slab into the return lane by returning `Ok(Some(buf))`) can
+    /// never race a consumer still reading it. Error priority is
+    /// deterministic: the reported error is the lowest-index failure, and
+    /// for a given item the lowest-index consumer's error wins over higher
+    /// consumers and over `retire`.
+    pub fn run_fanout<T, U, E, P, C, R>(
+        &self,
+        pool: &Pool,
+        n: usize,
+        stage: P,
+        consumers: &mut [C],
+        mut retire: R,
+    ) -> Result<Vec<U>, E>
+    where
+        T: Send + Sync,
+        U: Send,
+        E: Send,
+        P: Fn(usize, Option<U>) -> Result<T, E> + Sync,
+        C: FnMut(usize, &T) -> Result<(), E> + Send,
+        R: FnMut(usize, T) -> Result<Option<U>, E>,
+    {
+        let serial_fanout = pool.threads() <= 1 || consumers.len() <= 1;
+        // Chunking and error slots are fixed for the whole stream and
+        // allocated once up front — the steady state stays allocation-free
+        // on the serial path and allocates only for thread spawns on the
+        // parallel one.
+        let ranges = chunk_ranges(consumers.len(), pool.threads());
+        let mut errs: Vec<Option<E>> = (0..ranges.len()).map(|_| None).collect();
+        self.run_recycling(
+            pool,
+            n,
+            stage,
+            |i, item: T| {
+                if serial_fanout {
+                    for c in consumers.iter_mut() {
+                        c(i, &item)?;
+                    }
+                } else {
+                    pool.scoped(|s| {
+                        let mut rest: &mut [C] = consumers;
+                        let mut err_rest: &mut [Option<E>] = &mut errs;
+                        for r in &ranges {
+                            let (chunk, tail) = rest.split_at_mut(r.len());
+                            rest = tail;
+                            let (slot, etail) = err_rest.split_at_mut(1);
+                            err_rest = etail;
+                            let item = &item;
+                            s.spawn(move || {
+                                for c in chunk.iter_mut() {
+                                    if let Err(e) = c(i, item) {
+                                        slot[0] = Some(e);
+                                        return;
+                                    }
+                                }
+                            });
+                        }
+                    });
+                    // Chunks cover contiguous ascending consumer ranges and
+                    // each stops at its first failure, so the first
+                    // non-empty slot holds the lowest-index consumer error.
+                    for slot in errs.iter_mut() {
+                        if let Some(e) = slot.take() {
+                            return Err(e);
+                        }
+                    }
+                }
+                retire(i, item)
+            },
+        )
     }
 }
 
@@ -438,6 +538,179 @@ mod tests {
                 .unwrap();
             assert!(leftovers.is_empty(), "depth={depth}");
         }
+    }
+
+    #[test]
+    fn fanout_gives_every_consumer_the_full_stream_in_order() {
+        for threads in [1usize, 4] {
+            for depth in [1usize, 2, 4] {
+                let pool = Pool::new(threads);
+                let mut logs: Vec<Vec<(usize, usize)>> = vec![Vec::new(); 5];
+                let mut consumers: Vec<_> = logs
+                    .iter_mut()
+                    .map(|log| {
+                        move |i: usize, v: &usize| {
+                            log.push((i, *v));
+                            Ok(())
+                        }
+                    })
+                    .collect();
+                let mut retired = Vec::new();
+                let leftovers = Prefetch::new(depth)
+                    .run_fanout::<usize, u8, (), _, _, _>(
+                        &pool,
+                        12,
+                        |i, _| Ok(i * 7),
+                        &mut consumers,
+                        |i, item| {
+                            retired.push((i, item));
+                            Ok(None)
+                        },
+                    )
+                    .unwrap();
+                assert!(leftovers.is_empty(), "no buffers were handed back");
+                drop(consumers);
+                let want: Vec<(usize, usize)> = (0..12).map(|i| (i, i * 7)).collect();
+                for (t, log) in logs.iter().enumerate() {
+                    assert_eq!(
+                        log, &want,
+                        "threads={threads} depth={depth}: consumer {t} must see \
+                         exactly its solo stream"
+                    );
+                }
+                assert_eq!(retired, want, "retire sees every item once, in order");
+            }
+        }
+    }
+
+    #[test]
+    fn fanout_retires_only_after_every_consumer_drained() {
+        // The scope join is the last drainer: when retire(i, ..) runs, all
+        // N consumers must have finished item i — the invariant that makes
+        // slab reclamation safe under fan-out.
+        const TENANTS: usize = 6;
+        for threads in [1usize, 4] {
+            let pool = Pool::new(threads);
+            let drained = AtomicUsize::new(0);
+            let mut consumers: Vec<_> = (0..TENANTS)
+                .map(|_| {
+                    |_: usize, _: &usize| {
+                        drained.fetch_add(1, Ordering::SeqCst);
+                        Ok(())
+                    }
+                })
+                .collect();
+            let ok = Prefetch::new(3).run_fanout::<usize, u8, String, _, _, _>(
+                &pool,
+                10,
+                |i, _| Ok(i),
+                &mut consumers,
+                |i, _| {
+                    let seen = drained.load(Ordering::SeqCst);
+                    if seen == (i + 1) * TENANTS {
+                        Ok(None)
+                    } else {
+                        Err(format!("item {i} retired after only {seen} drains"))
+                    }
+                },
+            );
+            assert!(ok.is_ok(), "threads={threads}: {ok:?}");
+        }
+    }
+
+    #[test]
+    fn fanout_recycles_retired_buffers_into_stage() {
+        let cold = AtomicUsize::new(0);
+        let mut consumers: Vec<_> = (0..3).map(|_| |_: usize, _: &usize| Ok(())).collect();
+        let leftovers = Prefetch::new(2)
+            .run_fanout::<usize, u64, (), _, _, _>(
+                &Pool::new(4),
+                40,
+                |i, reuse| {
+                    if reuse.is_none() {
+                        cold.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Ok(i)
+                },
+                &mut consumers,
+                |i, _| Ok(Some(i as u64)),
+            )
+            .unwrap();
+        assert!(!leftovers.is_empty(), "the last drained buffer always flows back");
+        assert!(
+            cold.load(Ordering::Relaxed) <= 3,
+            "warmed fan-out reuses retired buffers: {} cold stages",
+            cold.load(Ordering::Relaxed)
+        );
+    }
+
+    #[test]
+    fn fanout_error_prefers_lowest_item_then_lowest_consumer() {
+        for threads in [1usize, 4] {
+            let pool = Pool::new(threads);
+            // Consumers 1 and 3 both fail on item 4; consumer 2 fails later
+            // (item 6). The reported error must be consumer 1's — lowest
+            // consumer on the lowest failing item — at every thread count.
+            let mut consumers: Vec<_> = (0..5)
+                .map(|t| {
+                    move |i: usize, _: &usize| {
+                        if ((t == 1 || t == 3) && i == 4) || (t == 2 && i == 6) {
+                            Err(format!("tenant {t} failed on item {i}"))
+                        } else {
+                            Ok(())
+                        }
+                    }
+                })
+                .collect();
+            let err = Prefetch::new(2)
+                .run_fanout::<usize, u8, String, _, _, _>(
+                    &pool,
+                    20,
+                    |i, _| Ok(i),
+                    &mut consumers,
+                    |_, _| Ok(None),
+                )
+                .unwrap_err();
+            assert_eq!(err, "tenant 1 failed on item 4", "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn consumer_panic_payload_surfaces_not_a_poison_error() {
+        // Poison-tolerance regression: a consumer panicking mid-stream
+        // unwinds across the hand-off channel's mutexes. Every lock on
+        // that path recovers the guard from a `PoisonError`, so the caller
+        // catches the *original* payload — not a secondary poison panic
+        // from the producer touching the channel afterwards.
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _: Result<(), ()> = Prefetch::new(3).run(
+                &Pool::new(4),
+                50,
+                |i| Ok(i),
+                |i, _| {
+                    if i == 7 {
+                        panic!("tenant merge exploded");
+                    }
+                    Ok(())
+                },
+            );
+        }))
+        .expect_err("the consumer panic must propagate");
+        assert_eq!(
+            caught.downcast_ref::<&str>().copied(),
+            Some("tenant merge exploded"),
+            "original payload must surface"
+        );
+        // The machinery is reusable after the abort: a fresh run on the
+        // same pool completes normally.
+        let pool = Pool::new(4);
+        let mut seen = Vec::new();
+        let ok: Result<(), ()> = Prefetch::new(3).run(&pool, 10, |i| Ok(i), |_, v| {
+            seen.push(v);
+            Ok(())
+        });
+        assert!(ok.is_ok());
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
     }
 
     #[test]

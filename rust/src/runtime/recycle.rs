@@ -22,7 +22,15 @@
 //! capacity; buffers returned beyond the cap are simply dropped.
 
 use crate::sparse::Csr;
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Poison-tolerant lock: the slab lists are valid at every instruction
+/// boundary, so when a streaming worker panics the original payload must
+/// surface at the join — not a secondary `PoisonError` panic from the
+/// next thread that takes or returns a slab.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Default retention cap for CLI-constructed pools: generous enough to
 /// hold a few staged segments plus decode scratch at any paper-scale
@@ -111,7 +119,7 @@ impl BufferPool {
 
     /// Serving counters since the pool was created.
     pub fn stats(&self) -> RecycleStats {
-        self.slabs.lock().unwrap().stats
+        lock(&self.slabs).stats
     }
 
     /// Take a byte buffer with capacity at least `min_cap`. Contents and
@@ -120,7 +128,7 @@ impl BufferPool {
     /// `read_segment_into`'s resize skip the full zero-fill in steady
     /// state).
     pub fn take_bytes(&self, min_cap: usize) -> Vec<u8> {
-        let mut s = self.slabs.lock().unwrap();
+        let mut s = lock(&self.slabs);
         match s.bytes.pop() {
             Some(mut b) => {
                 s.stats.hits += 1;
@@ -150,7 +158,7 @@ impl BufferPool {
     /// first take already covers every later segment.
     pub fn take_csr(&self, rows: usize, nnz: usize) -> Csr {
         let popped = {
-            let mut s = self.slabs.lock().unwrap();
+            let mut s = lock(&self.slabs);
             match s.csr.pop() {
                 Some(m) => {
                     s.stats.hits += 1;
@@ -197,7 +205,7 @@ impl BufferPool {
     /// Pop (or allocate) a cleared panel slab with capacity ≥ `min_cap`.
     fn pop_panel(&self, min_cap: usize) -> Vec<f32> {
         let popped = {
-            let mut s = self.slabs.lock().unwrap();
+            let mut s = lock(&self.slabs);
             match s.panels.pop() {
                 Some(p) => {
                     s.stats.hits += 1;
@@ -227,7 +235,7 @@ impl BufferPool {
     /// the slab when retaining `cost` more bytes would exceed the cap,
     /// else account it and push onto its free list.
     fn retain<T>(&self, cost: u64, item: T, select: impl FnOnce(&mut Slabs) -> &mut Vec<T>) {
-        let mut s = self.slabs.lock().unwrap();
+        let mut s = lock(&self.slabs);
         s.stats.returns += 1;
         if s.stats.retained_bytes + cost > self.cap_bytes {
             s.stats.drops += 1;

@@ -31,7 +31,15 @@ use crate::sparse::spmm::Dense;
 use crate::sparse::Csr;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+/// Poison-tolerant lock: cache and panel state are valid at every
+/// instruction boundary, so a panicking reader must not convert every
+/// later `stats()`/`read_reusing` call into a `PoisonError` panic that
+/// masks the original failure.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Host-cache capacity meaning "no bound": every decoded segment stays
 /// resident (the whole matrix ends up in host RAM, like the in-memory
@@ -418,7 +426,7 @@ impl SegmentStore {
 
     /// Serving counters since the store was created.
     pub fn stats(&self) -> CacheStats {
-        self.cache.lock().unwrap().stats
+        lock(&self.cache).stats
     }
 
     /// Verify the store's manifest matches a freshly planned segment list
@@ -472,7 +480,7 @@ impl SegmentStore {
     ) -> Result<(SegmentRead, ReadOrigin), SegioError> {
         let meta = &self.segs[i];
         {
-            let mut cache = self.cache.lock().unwrap();
+            let mut cache = lock(&self.cache);
             if let Some(m) = cache.get(i) {
                 cache.touch(i);
                 cache.stats.hits += 1;
@@ -546,7 +554,7 @@ impl SegmentStore {
             }
             return Err(err);
         }
-        let mut cache = self.cache.lock().unwrap();
+        let mut cache = lock(&self.cache);
         cache.stats.misses += 1;
         cache.stats.disk_bytes += bytes;
         // A concurrent reader may have inserted `i` while we were on
@@ -694,7 +702,7 @@ impl PanelStore {
 
     /// Number of panels the store currently holds.
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().metas.len()
+        lock(&self.state).metas.len()
     }
 
     /// Whether no panel has been spilled yet.
@@ -704,12 +712,12 @@ impl PanelStore {
 
     /// Metadata of panel `idx` (`None` until it has been spilled).
     pub fn meta(&self, idx: usize) -> Option<PanelMeta> {
-        self.state.lock().unwrap().metas.get(&idx).cloned()
+        lock(&self.state).metas.get(&idx).cloned()
     }
 
     /// Serving counters since the store was created.
     pub fn stats(&self) -> CacheStats {
-        self.state.lock().unwrap().cache.stats
+        lock(&self.state).cache.stats
     }
 
     /// Spill panel `idx` to disk, replacing any previous spill of the same
@@ -720,12 +728,12 @@ impl PanelStore {
     pub fn put(&self, idx: usize, p: &Dense) -> Result<u64, SegioError> {
         let path = Self::panel_path(&self.dir, idx);
         {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock(&self.state);
             st.cache.remove(idx);
             st.metas.remove(&idx);
         }
         let file_bytes = segio::write_panel(&path, p)?;
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock(&self.state);
         st.metas.insert(
             idx,
             PanelMeta { nrows: p.nrows, ncols: p.ncols, file_bytes, path },
@@ -749,7 +757,7 @@ impl PanelStore {
         pool: Option<&BufferPool>,
     ) -> Result<(PanelRead, ReadOrigin), SegioError> {
         let meta = {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock(&self.state);
             if let Some(p) = st.cache.get(idx) {
                 st.cache.touch(idx);
                 st.cache.stats.hits += 1;
@@ -804,7 +812,7 @@ impl PanelStore {
             }
             return Err(err);
         }
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock(&self.state);
         st.cache.stats.misses += 1;
         st.cache.stats.disk_bytes += bytes;
         let cost = panel_cost(&p);

@@ -358,12 +358,20 @@ fn decode_into_raw(buf: &[u8], out: &mut Csr) -> Result<(), SegioError> {
     if (buf.len() as u64) < need {
         return Err(SegioError::Truncated { need, got: buf.len() as u64 });
     }
-    // The truncation check bounds every count by the real buffer size, so
-    // the usize casts and allocations below cannot overflow.
-    let nrows = nrows64 as usize;
-    let ncols = ncols64 as usize;
-    let nnz = nnz64 as usize;
-    let payload = &buf[HEADER_BYTES..HEADER_BYTES + payload_len as usize];
+    // The truncation check bounds the *payload* by the real buffer size,
+    // but on 32-bit targets a count near `u64::MAX` would still wrap a
+    // bare `as usize` cast (ncols is not even part of the payload bound),
+    // so every narrowing goes through `try_from` with a typed error.
+    let narrow = |v: u64, what: &str| {
+        usize::try_from(v).map_err(|_| {
+            SegioError::InvalidCsr(format!("{what} {v} exceeds this platform's address space"))
+        })
+    };
+    let nrows = narrow(nrows64, "nrows")?;
+    let ncols = narrow(ncols64, "ncols")?;
+    let nnz = narrow(nnz64, "nnz")?;
+    let payload_usize = narrow(payload_len, "payload length")?;
+    let payload = &buf[HEADER_BYTES..HEADER_BYTES + payload_usize];
     let stored_payload_sum = get_u64(buf, 48);
     let computed_payload_sum = fnv1a64(payload);
     if stored_payload_sum != computed_payload_sum {
@@ -520,9 +528,18 @@ fn decode_panel_raw(buf: &[u8], out: &mut Dense) -> Result<(), SegioError> {
     if (buf.len() as u64) < need {
         return Err(SegioError::Truncated { need, got: buf.len() as u64 });
     }
-    // The truncation check bounds the counts by the real buffer size, so
-    // the usize casts and the reserve below cannot overflow.
-    let payload = &buf[HEADER_BYTES..HEADER_BYTES + payload_len as usize];
+    // The truncation check bounds the payload by the real buffer size, but
+    // the raw counts can still exceed a 32-bit address space — narrow them
+    // with `try_from` so a crafted header yields the typed error there too.
+    let narrow = |v: u64, what: &str| {
+        usize::try_from(v).map_err(|_| {
+            SegioError::InvalidPanel(format!("{what} {v} exceeds this platform's address space"))
+        })
+    };
+    let nrows = narrow(nrows64, "nrows")?;
+    let ncols = narrow(ncols64, "ncols")?;
+    let payload_usize = narrow(payload_len, "payload length")?;
+    let payload = &buf[HEADER_BYTES..HEADER_BYTES + payload_usize];
     let stored_payload_sum = get_u64(buf, 48);
     let computed_payload_sum = fnv1a64(payload);
     if stored_payload_sum != computed_payload_sum {
@@ -531,13 +548,15 @@ fn decode_panel_raw(buf: &[u8], out: &mut Dense) -> Result<(), SegioError> {
             computed: computed_payload_sum,
         });
     }
-    let n = (nrows64 * ncols64) as usize;
+    // want_payload == payload_len fits usize, so the element count (a
+    // quarter of it) does too — reuse the checked product, never re-multiply.
+    let n = payload_usize / 4;
     out.data.reserve(n);
     for i in 0..n {
         out.data.push(f32::from_bits(get_u32(payload, i * 4)));
     }
-    out.nrows = nrows64 as usize;
-    out.ncols = ncols64 as usize;
+    out.nrows = nrows;
+    out.ncols = ncols;
     Ok(())
 }
 
@@ -687,6 +706,29 @@ mod tests {
     }
 
     #[test]
+    fn counts_beyond_the_address_space_narrow_with_a_typed_error() {
+        // ncols is the one CSR count the payload-length consistency check
+        // does not bound, so a crafted header can smuggle an arbitrary
+        // 64-bit value through every earlier guard. A bare `as usize` cast
+        // wrapped it silently on 32-bit targets; the narrowing now goes
+        // through `try_from`, so any unrepresentable count is the typed
+        // error and a representable one decodes unchanged.
+        let mut buf = encode_segment(&example_csr());
+        buf[24..32].copy_from_slice(&u64::MAX.to_le_bytes()); // ncols
+        let sum = fnv1a64(&buf[0..56]);
+        buf[56..64].copy_from_slice(&sum.to_le_bytes());
+        let r = decode_segment(&buf);
+        if usize::try_from(u64::MAX).is_err() {
+            // 32-bit target: rejected before any section is read.
+            assert!(matches!(r, Err(SegioError::InvalidCsr(_))), "{r:?}");
+        } else {
+            // 64-bit target: the value is representable — the matrix is
+            // simply astronomically wide, and nothing wrapped.
+            assert_eq!(r.unwrap().ncols, u64::MAX as usize);
+        }
+    }
+
+    #[test]
     fn rejects_semantically_invalid_csr() {
         // Non-monotone rowptr survives both checksums (they protect bytes,
         // not invariants) and must be caught by CSR validation.
@@ -786,6 +828,27 @@ mod tests {
         let sum = fnv1a64(&huge[0..56]);
         huge[56..64].copy_from_slice(&sum.to_le_bytes());
         assert!(matches!(decode_panel(&huge), Err(SegioError::InvalidPanel(_))));
+
+        // A zero-area panel smuggles an arbitrary row count past the
+        // payload-length check (huge × 0 = 0, consistently). The count
+        // must narrow via `try_from`: typed rejection where usize cannot
+        // hold it, a faithful (not wrapped) value where it can.
+        let mut zero_area = good.clone();
+        zero_area[16..24].copy_from_slice(&(1u64 << 40).to_le_bytes()); // nrows
+        zero_area[24..32].copy_from_slice(&0u64.to_le_bytes()); // ncols
+        zero_area[40..48].copy_from_slice(&0u64.to_le_bytes()); // payload_len
+        let psum = fnv1a64(&[]);
+        zero_area[48..56].copy_from_slice(&psum.to_le_bytes());
+        let sum = fnv1a64(&zero_area[0..56]);
+        zero_area[56..64].copy_from_slice(&sum.to_le_bytes());
+        let r = decode_panel(&zero_area);
+        if usize::try_from(1u64 << 40).is_err() {
+            assert!(matches!(r, Err(SegioError::InvalidPanel(_))), "{r:?}");
+        } else {
+            let p = r.unwrap();
+            assert_eq!((p.nrows, p.ncols), (1usize << 40, 0));
+            assert!(p.data.is_empty());
+        }
     }
 
     #[test]

@@ -19,7 +19,7 @@
 //! process-global: concurrent tests would bleed counts into each other.
 
 use aires::benchlib::allocation_count;
-use aires::gcn::{OocGcnLayer, OocGcnModel, PipelineConfig, StagingConfig};
+use aires::gcn::{serve_batch, OocGcnLayer, OocGcnModel, PipelineConfig, StagingConfig, TenantQuery};
 use aires::memsim::GpuMem;
 use aires::partition::robw::robw_partition;
 use aires::runtime::pool::Pool;
@@ -228,4 +228,47 @@ fn recycled_disk_path_is_allocation_free_in_steady_state() {
          {allocs_rec} over {n3}"
     );
     assert!(mpool.stats().hits > 0, "segment scratch must cycle across layers");
+
+    // ---- 4. Multi-tenant serve stays allocation-free per segment -------
+    // A warmed recycled serve_batch over the same store fans each staged
+    // segment out to every tenant. Its per-pass cost is constant (plan
+    // vec, admission bookkeeping, one combine output per tenant) — the
+    // per-segment staging cycle allocates nothing, exactly like the solo
+    // pass — while the fresh path still scales with the segment count.
+    let queries: Vec<TenantQuery> = (0..2)
+        .map(|_| TenantQuery { x: x.clone(), layer: layer.clone() })
+        .collect();
+    let spool = Arc::new(BufferPool::new(64 << 20));
+    let count_serve = |staging: &StagingConfig| {
+        let mut mem = GpuMem::new(1 << 30);
+        let before = allocation_count();
+        let (results, _) = serve_batch(&a_hat, &queries, &mut mem, &serial, staging);
+        let allocs = allocation_count() - before;
+        let outs: Vec<Dense> =
+            results.into_iter().map(|r| r.expect("serve tenants complete")).collect();
+        (outs, allocs)
+    };
+    let recycled_serve = StagingConfig::disk(store.clone(), 1).with_recycle(spool.clone());
+    let fresh_serve = StagingConfig::disk(store.clone(), 1);
+    let (outs_warm, _) = count_serve(&recycled_serve); // warm the pool
+    let (outs_rec, allocs_serve_rec) = count_serve(&recycled_serve);
+    let (outs_fresh, allocs_serve_fresh) = count_serve(&fresh_serve);
+    assert_eq!(outs_rec, outs_fresh, "recycled and fresh serve passes must agree");
+    assert_eq!(outs_rec, outs_warm);
+    assert_eq!(outs_rec[0], out_recycled, "served tenant diverged from its solo pass");
+    assert_eq!(outs_rec[0], outs_rec[1], "identical tenants must get identical answers");
+    assert!(
+        allocs_serve_fresh >= 3 * n as u64,
+        "fresh serve pass should allocate per segment: {allocs_serve_fresh} over {n}"
+    );
+    assert!(
+        allocs_serve_rec < allocs_serve_fresh / 2,
+        "recycled serve pass ({allocs_serve_rec}) must allocate far less than fresh \
+         ({allocs_serve_fresh})"
+    );
+    assert!(
+        allocs_serve_rec < 96 + n as u64 / 8,
+        "recycled warmed serve pass must not scale with segments: \
+         {allocs_serve_rec} over {n}"
+    );
 }

@@ -200,6 +200,60 @@ fn gcnstream_panel_dir_spills_and_verifies() {
 }
 
 #[test]
+fn serve_open_loop_smoke_reports_latency_and_balance() {
+    let out_file = TempDir::new("cli-serve");
+    let report = out_file.path().join("serve.json");
+    let (code, out, err) = run(&[
+        "serve",
+        "--scale",
+        "7",
+        "--feat",
+        "16",
+        "--budget",
+        "4096",
+        "--tenants",
+        "4",
+        "--requests",
+        "2",
+        "--rate-hz",
+        "500",
+        "--out",
+        report.to_str().unwrap(),
+    ]);
+    assert_eq!(code, Some(0), "stderr: {err}");
+    assert!(out.contains("4 tenants"), "stdout: {out}");
+    assert!(out.contains("tenant 3:"), "per-tenant latency lines: {out}");
+    assert!(out.contains("p99"), "stdout: {out}");
+    assert!(out.contains("ledger balanced after every batch: OK"), "stdout: {out}");
+    assert!(!err.contains("panicked"), "{err}");
+    let json = std::fs::read_to_string(&report).expect("--out writes the ServeReport");
+    assert!(json.contains("\"ledger_balanced\": true") || json.contains("\"ledger_balanced\":true"),
+        "report must record balance: {json}");
+    assert!(json.contains("tenant_3"), "report carries every tenant: {json}");
+    assert!(json.contains("p99_s"), "report carries percentiles: {json}");
+}
+
+#[test]
+fn serve_malformed_flags_are_usage_errors_and_zero_clamps_warn() {
+    let (code, _, err) = run(&["serve", "--tenants", "many"]);
+    assert_eq!(code, Some(2), "usage errors exit 2; stderr: {err}");
+    assert!(err.contains("--tenants"), "must name the flag: {err}");
+    assert!(err.contains("many"), "must echo the offending value: {err}");
+    assert!(!err.contains("panicked"), "{err}");
+    let (code, _, err) = run(&["serve", "--rate-hz"]);
+    assert_eq!(code, Some(2), "stderr: {err}");
+    assert!(err.contains("requires a value"), "{err}");
+    // Zero tenants serves nobody: clamped to 1 with a warning, not fatal.
+    let (code, out, err) = run(&[
+        "serve", "--scale", "6", "--feat", "8", "--tenants", "0", "--requests", "1",
+        "--rate-hz", "500",
+    ]);
+    assert_eq!(code, Some(0), "tenants 0 is clamped, not fatal; stderr: {err}");
+    assert!(err.contains("warning"), "clamp must be announced: {err}");
+    assert!(out.contains("1 tenants"), "runs with one tenant: {out}");
+}
+
+#[test]
 fn segcheck_with_recycling_disabled_still_verifies() {
     // --recycle-cap-bytes 0 selects the fresh-allocation path; output
     // must be byte-identical either way and the pool line disappears.

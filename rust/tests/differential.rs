@@ -20,7 +20,7 @@
 //! Case count per property: `AIRES_PROP_CASES` (default 64).
 
 use aires::gcn::model::dense_affine;
-use aires::gcn::{OocGcnLayer, OocGcnModel, PipelineConfig, StagingConfig};
+use aires::gcn::{serve_batch, OocGcnLayer, OocGcnModel, PipelineConfig, StagingConfig, TenantQuery};
 use aires::memsim::GpuMem;
 use aires::runtime::segstore::PanelStore;
 use aires::partition::robw::{robw_partition, robw_partition_par};
@@ -932,4 +932,131 @@ fn diff_empty_operands() {
         assert_eq!(spmm_transpose_par(&a, &aires::sparse::spmm::Dense::zeros(6, 3), &pool),
             spmm_transpose(&a, &aires::sparse::spmm::Dense::zeros(6, 3)));
     }
+}
+
+// ------------------------------------------------------- multi-tenant serve
+
+#[test]
+fn diff_multitenant_matches_solo() {
+    // The fan-out serving acceptance sweep: a batch of N tenants through
+    // `serve_batch` must give every tenant output byte-identical to its
+    // solo `forward_cpu` pass at every tenants x depth x threads x
+    // backing x recycle point, with a balanced ledger — and, on the disk
+    // backing, with staged I/O charged exactly once per segment (the
+    // StagingMeter counts equal ONE solo pass's, independent of N).
+    check("serve_batch(N tenants) == N solo passes", 113, |rng| {
+        let a_hat = normalize_adjacency(&gen::adjacency(rng, 48, 0.2));
+        let budget = rng.range(64, 2049) as u64;
+        let queries: Vec<TenantQuery> = (0..4)
+            .map(|_| {
+                let f = rng.range(1, 10);
+                let mut layer = random_layer(rng, f);
+                // One staged pass serves the whole batch, so every tenant
+                // rides the same RoBW plan.
+                layer.seg_budget = budget;
+                TenantQuery { x: gen::dense(rng, a_hat.ncols, f), layer }
+            })
+            .collect();
+
+        // Solo oracles: each tenant alone, serial staging, serial pool.
+        let solos: Vec<_> = queries
+            .iter()
+            .map(|q| {
+                let mut mem = GpuMem::new(1 << 30);
+                q.layer
+                    .forward_cpu(&a_hat, &q.x, &mut mem, &Pool::serial(), &StagingConfig::serial())
+                    .map(|(out, _)| out)
+                    .map_err(|e| e.to_string())
+            })
+            .collect::<Result<_, _>>()?;
+
+        // Solo disk-I/O baseline (cache 0: every staged read hits disk).
+        let segs = robw_partition(&a_hat, budget);
+        let dir = TempDir::new("diff-serve");
+        SegmentStore::spill(&a_hat, &segs, dir.path(), 0).map_err(|e| e.to_string())?;
+        let solo_io = {
+            let store = SegmentStore::open_or_spill(&a_hat, &segs, dir.path(), 0)
+                .map_err(|e| e.to_string())?;
+            let mut mem = GpuMem::new(1 << 30);
+            let (_, rep) = queries[0]
+                .layer
+                .forward_cpu(
+                    &a_hat,
+                    &queries[0].x,
+                    &mut mem,
+                    &Pool::serial(),
+                    &StagingConfig::disk(Arc::new(store), 1),
+                )
+                .map_err(|e| e.to_string())?;
+            (rep.disk_bytes, rep.cache_hits, rep.cache_misses)
+        };
+
+        for &nt in &[1usize, 2, 4] {
+            for &depth in &PREFETCH_DEPTHS {
+                for &t in &[1usize, 8] {
+                    for &recycled in &[false, true] {
+                        let point = format!("nt={nt} depth={depth} threads={t} recycled={recycled}");
+                        let recycle = recycled.then(|| Arc::new(BufferPool::new(64 << 20)));
+                        let verify = |results: Vec<Result<aires::sparse::spmm::Dense, _>>,
+                                      rep: &aires::gcn::BatchReport,
+                                      used: u64,
+                                      backing: &str|
+                         -> Result<(), String> {
+                            if rep.tenants_admitted != nt || rep.tenants_rejected != 0 {
+                                return Err(format!("{point} {backing}: admission diverged"));
+                            }
+                            for (k, r) in results.iter().enumerate() {
+                                match r {
+                                    Ok(out) if *out == solos[k] => {}
+                                    Ok(_) => {
+                                        return Err(format!(
+                                            "{point} {backing}: tenant {k} diverged from solo"
+                                        ))
+                                    }
+                                    Err(e) => {
+                                        return Err(format!("{point} {backing}: tenant {k}: {e}"))
+                                    }
+                                }
+                            }
+                            if used != 0 {
+                                return Err(format!("{point} {backing}: ledger unbalanced"));
+                            }
+                            Ok(())
+                        };
+
+                        // In-memory backing.
+                        let mut staging = StagingConfig::depth(depth);
+                        if let Some(rp) = &recycle {
+                            staging = staging.with_recycle(rp.clone());
+                        }
+                        let mut mem = GpuMem::new(1 << 30);
+                        let (results, rep) =
+                            serve_batch(&a_hat, &queries[..nt], &mut mem, &Pool::new(t), &staging);
+                        verify(results, &rep, mem.used, "memory")?;
+
+                        // Disk backing, cache 0: one fresh store per run so
+                        // the meter counts are comparable across points.
+                        let store = SegmentStore::open_or_spill(&a_hat, &segs, dir.path(), 0)
+                            .map_err(|e| e.to_string())?;
+                        let mut staging = StagingConfig::disk(Arc::new(store), depth);
+                        if let Some(rp) = &recycle {
+                            staging = staging.with_recycle(rp.clone());
+                        }
+                        let mut mem = GpuMem::new(1 << 30);
+                        let (results, rep) =
+                            serve_batch(&a_hat, &queries[..nt], &mut mem, &Pool::new(t), &staging);
+                        verify(results, &rep, mem.used, "disk")?;
+                        let io = (rep.disk_bytes, rep.cache_hits, rep.cache_misses);
+                        if io != solo_io {
+                            return Err(format!(
+                                "{point} disk: staged I/O {io:?} != one solo pass's {solo_io:?} \
+                                 (must be charged once per segment, not once per tenant)"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
 }

@@ -13,10 +13,13 @@
 //! asserted byte-identical to the in-memory serial oracle (and recycled
 //! against fresh), so a perf run can never silently diverge; it then
 //! emits `BENCH_streaming.json` (ns/segment + allocations/segment for
-//! the recycled vs fresh disk paths — the repo's perf trajectory seed)
-//! to `AIRES_BENCH_JSON` or ./BENCH_streaming.json.
+//! the recycled vs fresh disk paths, the serve open-loop latency
+//! percentiles, and — outside fast mode — the `rmat_large` 2^20-node
+//! scenario) to `AIRES_BENCH_JSON` or ./BENCH_streaming.json. Feed the
+//! emission into the perf-trajectory store with `aires bench ingest`
+//! and gate regressions with `aires bench gate` (see `src/benchdb/`).
 
-use aires::benchlib::{allocation_count, bench, report_speedup, report_throughput};
+use aires::benchlib::{allocation_count, bench, report_speedup, report_throughput, result_json};
 use aires::gcn::{
     serve_batch, serve_open_loop, OocGcnLayer, OocGcnModel, OpenLoopConfig, PipelineConfig,
     StagingConfig, TenantQuery,
@@ -348,12 +351,16 @@ fn streaming_benches(fast: bool) {
                 ns_per_segment
             );
             report_speedup(&mem_d1, &r);
-            let mut entry = BTreeMap::new();
-            entry.insert("mean_s".to_string(), Json::Num(r.mean_s));
-            entry.insert("min_s".to_string(), Json::Num(r.min_s));
-            entry.insert("ns_per_segment".to_string(), Json::Num(ns_per_segment));
-            entry.insert("allocs_per_segment".to_string(), Json::Num(allocs_per_segment));
-            results.insert(format!("{label}_depth{depth}"), Json::Obj(entry));
+            results.insert(
+                format!("{label}_depth{depth}"),
+                result_json(
+                    &r,
+                    &[
+                        ("ns_per_segment", ns_per_segment),
+                        ("allocs_per_segment", allocs_per_segment),
+                    ],
+                ),
+            );
         }
     }
     let st = recycle.stats();
@@ -449,17 +456,11 @@ fn streaming_benches(fast: bool) {
         ("multilayer_pipelined_depth2", &piped, None),
         ("multilayer_disk_recycled_depth1", &rm, Some(multi_allocs_per_segment)),
     ] {
-        let mut entry = BTreeMap::new();
-        entry.insert("mean_s".to_string(), Json::Num(r.mean_s));
-        entry.insert("min_s".to_string(), Json::Num(r.min_s));
-        entry.insert(
-            "ns_per_layer".to_string(),
-            Json::Num(r.mean_s / BENCH_LAYERS as f64 * 1e9),
-        );
+        let mut extras = vec![("ns_per_layer", r.mean_s / BENCH_LAYERS as f64 * 1e9)];
         if let Some(a) = allocs_per_seg {
-            entry.insert("allocs_per_segment".to_string(), Json::Num(a));
+            extras.push(("allocs_per_segment", a));
         }
-        results.insert(key.to_string(), Json::Obj(entry));
+        results.insert(key.to_string(), result_json(r, &extras));
     }
 
     // --- Multi-tenant fan-out serving: N tenants share one staged pass
@@ -515,6 +516,53 @@ fn streaming_benches(fast: bool) {
     // The full ServeReport (per-tenant latency percentiles included)
     // rides the same JSON artifact CI already uploads.
     results.insert("serve_open_loop".to_string(), srep.to_json());
+
+    // --- rmat_large: a 2^20-node RMAT graph under a tight segment
+    // budget — the out-of-core regime (hundreds of segments) that the
+    // small kmer workload cannot exercise. Skipped in fast mode
+    // (AIRES_BENCH_FAST): the graph alone takes seconds to generate.
+    // Self-checking like the rest of the section: depth 2 must equal
+    // the depth-1 serial pass bit for bit before the number is kept.
+    if !fast {
+        let mut rngl = Pcg::seed(81);
+        let gl = aires::sparse::norm::normalize_adjacency(&aires::graphgen::rmat::generate(
+            &mut rngl,
+            20,
+            4,
+            Default::default(),
+        ));
+        let xl = Dense::from_vec(gl.ncols, 16, vec![0.5f32; gl.ncols * 16]);
+        let large_budget: u64 = 256 << 10;
+        let large_layer = OocGcnLayer {
+            w: Dense::from_vec(16, 16, vec![0.1f32; 16 * 16]),
+            b: vec![0.0; 16],
+            relu: true,
+            seg_budget: large_budget,
+        };
+        let large_segments = robw_partition(&gl, large_budget).len();
+        let run_large = |depth: usize| {
+            let mut mem = GpuMem::new(4u64 << 30);
+            large_layer
+                .forward_cpu(&gl, &xl, &mut mem, &pool, &StagingConfig::depth(depth))
+                .expect("rmat_large forward")
+                .0
+        };
+        assert_eq!(run_large(2), run_large(1), "rmat_large depth 2 diverged from serial");
+        println!(
+            "rmat_large on rmat-20 ({} nodes, {} nnz, {large_segments} segments):",
+            gl.nrows,
+            gl.nnz()
+        );
+        let rl = bench("forward_cpu rmat_large in-memory, depth 2", 1, iters, || {
+            std::hint::black_box(run_large(2));
+        });
+        let large_ns = rl.mean_s / large_segments as f64 * 1e9;
+        println!("BENCH rmat_large: {large_ns:.0} ns/segment over {large_segments} segments");
+        results.insert(
+            "rmat_large".to_string(),
+            result_json(&rl, &[("ns_per_segment", large_ns), ("segments", large_segments as f64)]),
+        );
+    }
 
     // Seed/extend the perf trajectory: machine-readable streaming numbers.
     let mut root = BTreeMap::new();

@@ -1,0 +1,129 @@
+//! Flatten a `BENCH_streaming.json` emission into run records.
+
+use super::{BenchDbError, RunRecord};
+use crate::util::json::{self, Json};
+
+/// Unit label for a flattened metric path, keyed on its last
+/// '.'-separated component: `segments_per_s` → `seg/s`,
+/// `ns_per_segment`/`ns_per_layer` → `ns`, `allocs_per_segment` →
+/// `allocs`, any `*_s` leaf (latency seconds: `mean_s`, `min_s`,
+/// `p50_s`, `p99_s`, ...) → `s`, everything else → `count`.
+pub fn unit_for(metric: &str) -> &'static str {
+    let leaf = metric.rsplit('.').next().unwrap_or(metric);
+    if leaf == "segments_per_s" {
+        "seg/s"
+    } else if leaf == "ns_per_segment" || leaf == "ns_per_layer" {
+        "ns"
+    } else if leaf == "allocs_per_segment" {
+        "allocs"
+    } else if leaf.ends_with("_s") {
+        "s"
+    } else {
+        "count"
+    }
+}
+
+/// Parse a `BENCH_streaming.json` emission and flatten every numeric
+/// leaf under its `results` object into [`RunRecord`]s stamped with
+/// `(commit, ts)`.
+///
+/// The top-level key of `results` is the scenario; nested objects
+/// (e.g. the serve report's `per_tenant.tenant_0.p99_s`) become
+/// '.'-joined metric paths, so open-loop latency percentiles land in
+/// the same record stream as the kernel numbers. Booleans ingest as
+/// `0.0`/`1.0` (so self-check flags like `ledger_balanced` are
+/// trended too); strings, nulls, arrays, and non-finite numbers are
+/// skipped. A source without a `results` object, or whose `results`
+/// yields no records at all, is a [`BenchDbError::BadSource`].
+pub fn records_from_bench_json(
+    text: &str,
+    commit: &str,
+    ts: u64,
+) -> Result<Vec<RunRecord>, BenchDbError> {
+    let parsed = json::parse(text).map_err(BenchDbError::BadSource)?;
+    let obj = match &parsed {
+        Json::Obj(obj) => obj,
+        other => {
+            return Err(BenchDbError::BadSource(format!(
+                "expected a JSON object, got {other}"
+            )))
+        }
+    };
+    let results = match obj.get("results") {
+        Some(Json::Obj(results)) => results,
+        Some(other) => {
+            return Err(BenchDbError::BadSource(format!(
+                "\"results\" must be an object, got {other}"
+            )))
+        }
+        None => {
+            return Err(BenchDbError::BadSource(
+                "missing top-level \"results\" object".to_string(),
+            ))
+        }
+    };
+    let mut out = Vec::new();
+    for (scenario, value) in results {
+        flatten(scenario, "", value, commit, ts, &mut out);
+    }
+    if out.is_empty() {
+        return Err(BenchDbError::BadSource(
+            "\"results\" contains no numeric leaves".to_string(),
+        ));
+    }
+    Ok(out)
+}
+
+/// Depth-first flatten of one scenario's value tree. `prefix` is the
+/// '.'-joined path so far ("" at the scenario root); a numeric leaf at
+/// the root itself gets the metric name `value`.
+fn flatten(
+    scenario: &str,
+    prefix: &str,
+    value: &Json,
+    commit: &str,
+    ts: u64,
+    out: &mut Vec<RunRecord>,
+) {
+    match value {
+        Json::Num(n) => {
+            if n.is_finite() {
+                push_leaf(scenario, prefix, *n, commit, ts, out);
+            }
+        }
+        Json::Bool(b) => {
+            push_leaf(scenario, prefix, if *b { 1.0 } else { 0.0 }, commit, ts, out);
+        }
+        Json::Obj(obj) => {
+            for (key, child) in obj {
+                let path = if prefix.is_empty() {
+                    key.clone()
+                } else {
+                    format!("{prefix}.{key}")
+                };
+                flatten(scenario, &path, child, commit, ts, out);
+            }
+        }
+        // Strings, nulls, and arrays carry no trendable scalar.
+        Json::Str(_) | Json::Null | Json::Arr(_) => {}
+    }
+}
+
+fn push_leaf(
+    scenario: &str,
+    prefix: &str,
+    value: f64,
+    commit: &str,
+    ts: u64,
+    out: &mut Vec<RunRecord>,
+) {
+    let metric = if prefix.is_empty() { "value" } else { prefix };
+    out.push(RunRecord {
+        commit: commit.to_string(),
+        ts,
+        scenario: scenario.to_string(),
+        metric: metric.to_string(),
+        value,
+        unit: unit_for(metric).to_string(),
+    });
+}

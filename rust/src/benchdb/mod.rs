@@ -1,0 +1,115 @@
+//! Perf-trajectory database: the append-only results store that makes
+//! "fast as the hardware allows" *enforceable* across commits.
+//!
+//! The `micro_hotpath` bench self-checks byte-identity and then emits one
+//! `BENCH_streaming.json` per run — but a JSON file per run is a
+//! snapshot, not a trajectory. This module accumulates those snapshots
+//! into an on-disk store and turns them into a regression gate:
+//!
+//! * **[`RunRecord`]** — one schema-versioned datapoint: `(schema,
+//!   commit, ts, scenario, metric, value, unit)`. A *run* is the set of
+//!   records sharing `(ts, commit)`; one `bench ingest` writes one run.
+//! * **Store** ([`append_records`] / [`read_trajectory`]) — append-only
+//!   JSONL, one canonical record per line (sorted keys, byte-stable —
+//!   pinned by a golden vector like `segio`'s). The reader is
+//!   *skip-and-report*: a torn trailing line, an interleaved garbage
+//!   line, or a wrong-schema-version line becomes a typed
+//!   [`BenchDbError`] in [`Trajectory::skipped`] — never a panic, and
+//!   never a reason to drop the valid prefix.
+//! * **Ingest** ([`records_from_bench_json`]) — flattens a
+//!   `BENCH_streaming.json` emission (every numeric leaf under
+//!   `results`, dotted-path metric names) into records, folding the
+//!   kernel numbers (ns/segment, allocs/segment) and the open-loop
+//!   [`ServeReport`](crate::gcn::ServeReport) latency percentiles into
+//!   the *same* record stream.
+//! * **Stats + gate** ([`scenario_stats`] / [`gate`]) — per-scenario
+//!   min/p50/p99 tables across stored runs (nearest-rank
+//!   [`percentile`](crate::util::percentile), the same function `serve`
+//!   reports with), and a regression gate: the newest run's
+//!   lower-is-better metrics ([`gated_metric`]: `ns_per_segment`,
+//!   `ns_per_layer`, any `p99_s` leaf) are compared against the *median
+//!   of all prior runs*; any regression beyond the configured percentage
+//!   fails the gate. No baseline (empty store, first run) passes
+//!   vacuously — the run seeds the baseline instead.
+//!
+//! The CLI surface is the `bench` subcommand family (`bench ingest`,
+//! `bench report`, `bench gate --max-regress-pct X`); CI's `bench-smoke`
+//! job runs the full ingest → report → gate loop against a cached
+//! trajectory store. std-only, like everything else in the crate.
+
+mod ingest;
+mod record;
+mod stats;
+mod store;
+
+pub use ingest::{records_from_bench_json, unit_for};
+pub use record::{RunRecord, SCHEMA_VERSION};
+pub use stats::{gate, gated_metric, scenario_stats, GateCheck, GateOutcome, MetricStats};
+pub use store::{append_records, parse_trajectory, read_trajectory, SkippedLine, Trajectory};
+
+/// A run's identity inside the trajectory: `(ts, commit)`. Runs are
+/// ordered by timestamp, ties broken by the commit string, so "the
+/// newest run" is deterministic even when two ingests land in the same
+/// second.
+pub type RunId = (u64, String);
+
+/// Typed trajectory-store failure. Per-line defects are *reported*, not
+/// fatal: the reader records them in [`Trajectory::skipped`] and keeps
+/// the valid records — the same skip-and-report discipline `segio`
+/// applies to on-disk segments.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BenchDbError {
+    /// Underlying filesystem error (with path context). The only fatal
+    /// variant: without the file there is nothing to skip *to*.
+    Io(String),
+    /// The line is not a JSON object (torn trailing line, interleaved
+    /// garbage, or a non-object value).
+    Malformed(String),
+    /// The record's schema version differs from [`SCHEMA_VERSION`] —
+    /// a valid line written by an incompatible build.
+    WrongSchema {
+        /// Version the record claims.
+        found: u32,
+        /// Version this build understands.
+        expected: u32,
+    },
+    /// A required record field is absent.
+    MissingField(&'static str),
+    /// A record field is present but has the wrong type or an invalid
+    /// value (non-integer timestamp, non-finite value, ...).
+    BadField {
+        /// Field that failed validation.
+        field: &'static str,
+        /// What was wrong with it.
+        msg: String,
+    },
+    /// The ingest source (`BENCH_streaming.json`) is not a bench
+    /// emission this build understands.
+    BadSource(String),
+}
+
+impl std::fmt::Display for BenchDbError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BenchDbError::Io(msg) => write!(f, "trajectory I/O: {msg}"),
+            BenchDbError::Malformed(msg) => {
+                write!(f, "not a JSONL record: {msg}")
+            }
+            BenchDbError::WrongSchema { found, expected } => write!(
+                f,
+                "unsupported record schema version {found} (expected {expected})"
+            ),
+            BenchDbError::MissingField(field) => {
+                write!(f, "record is missing the {field:?} field")
+            }
+            BenchDbError::BadField { field, msg } => {
+                write!(f, "record field {field:?} is invalid: {msg}")
+            }
+            BenchDbError::BadSource(msg) => {
+                write!(f, "not a bench emission: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BenchDbError {}

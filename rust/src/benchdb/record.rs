@@ -1,0 +1,132 @@
+//! Schema-versioned run records and their canonical JSONL encoding.
+
+use super::BenchDbError;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// On-disk record schema version this build reads and writes. Bump when
+/// a field is added, removed, or reinterpreted; the reader skips (never
+/// mis-parses) records from other versions.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// One datapoint in the perf trajectory: a single `(scenario, metric)`
+/// measurement taken at `(ts, commit)`.
+///
+/// The canonical line encoding ([`RunRecord::to_line`]) is a
+/// sorted-key, no-whitespace JSON object — byte-stable across builds
+/// and pinned by a golden-vector test, like `segio`'s segment headers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunRecord {
+    /// Commit the bench ran at (short or full hash; `"unknown"` when
+    /// outside a checkout).
+    pub commit: String,
+    /// Ingest time, seconds since the Unix epoch. Together with
+    /// `commit` this identifies the run (see [`RunId`](super::RunId)).
+    pub ts: u64,
+    /// Scenario identifier, e.g. `fresh_depth1` or `serve_open_loop`.
+    pub scenario: String,
+    /// Metric name within the scenario — a '.'-joined path for nested
+    /// emissions, e.g. `ns_per_segment` or `per_tenant.tenant_0.p99_s`.
+    pub metric: String,
+    /// Measured value. Always finite (enforced on parse and ingest).
+    pub value: f64,
+    /// Unit label for display, e.g. `ns`, `s`, `allocs`, `seg/s`.
+    pub unit: String,
+}
+
+impl RunRecord {
+    /// Canonical single-line encoding (no trailing newline). Keys are
+    /// emitted sorted by `Json`'s `BTreeMap` backing, so the same
+    /// record always produces the same bytes.
+    pub fn to_line(&self) -> String {
+        let mut obj = BTreeMap::new();
+        obj.insert("schema".to_string(), Json::Num(f64::from(SCHEMA_VERSION)));
+        obj.insert("commit".to_string(), Json::Str(self.commit.clone()));
+        obj.insert("ts".to_string(), Json::Num(self.ts as f64));
+        obj.insert("scenario".to_string(), Json::Str(self.scenario.clone()));
+        obj.insert("metric".to_string(), Json::Str(self.metric.clone()));
+        obj.insert("value".to_string(), Json::Num(self.value));
+        obj.insert("unit".to_string(), Json::Str(self.unit.clone()));
+        Json::Obj(obj).to_string()
+    }
+
+    /// Validate a parsed JSON value as a record. Checks, in order:
+    /// object shape, schema version, then each field's presence and
+    /// type. All failures are typed [`BenchDbError`]s — the store
+    /// reader turns them into skip-and-report entries.
+    pub fn from_json(json: &Json) -> Result<RunRecord, BenchDbError> {
+        let obj = match json {
+            Json::Obj(obj) => obj,
+            other => {
+                return Err(BenchDbError::Malformed(format!(
+                    "expected a JSON object, got {other}"
+                )))
+            }
+        };
+        let schema = require_u64(obj, "schema")?;
+        if schema != u64::from(SCHEMA_VERSION) {
+            return Err(BenchDbError::WrongSchema {
+                found: schema.min(u64::from(u32::MAX)) as u32,
+                expected: SCHEMA_VERSION,
+            });
+        }
+        let commit = require_str(obj, "commit")?;
+        let ts = require_u64(obj, "ts")?;
+        let scenario = require_str(obj, "scenario")?;
+        let metric = require_str(obj, "metric")?;
+        let unit = require_str(obj, "unit")?;
+        let value = require_num(obj, "value")?;
+        if !value.is_finite() {
+            return Err(BenchDbError::BadField {
+                field: "value",
+                msg: format!("must be finite, got {value}"),
+            });
+        }
+        Ok(RunRecord {
+            commit,
+            ts,
+            scenario,
+            metric,
+            value,
+            unit,
+        })
+    }
+}
+
+fn require_field<'a>(
+    obj: &'a BTreeMap<String, Json>,
+    field: &'static str,
+) -> Result<&'a Json, BenchDbError> {
+    obj.get(field).ok_or(BenchDbError::MissingField(field))
+}
+
+fn require_str(obj: &BTreeMap<String, Json>, field: &'static str) -> Result<String, BenchDbError> {
+    match require_field(obj, field)? {
+        Json::Str(s) => Ok(s.clone()),
+        other => Err(BenchDbError::BadField {
+            field,
+            msg: format!("expected a string, got {other}"),
+        }),
+    }
+}
+
+fn require_num(obj: &BTreeMap<String, Json>, field: &'static str) -> Result<f64, BenchDbError> {
+    match require_field(obj, field)? {
+        Json::Num(n) => Ok(*n),
+        other => Err(BenchDbError::BadField {
+            field,
+            msg: format!("expected a number, got {other}"),
+        }),
+    }
+}
+
+fn require_u64(obj: &BTreeMap<String, Json>, field: &'static str) -> Result<u64, BenchDbError> {
+    let n = require_num(obj, field)?;
+    if !n.is_finite() || n.fract() != 0.0 || n < 0.0 || n > u64::MAX as f64 {
+        return Err(BenchDbError::BadField {
+            field,
+            msg: format!("expected a non-negative integer, got {n}"),
+        });
+    }
+    Ok(n as u64)
+}

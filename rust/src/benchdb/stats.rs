@@ -1,0 +1,177 @@
+//! Per-scenario statistics and the regression gate.
+
+use super::{RunId, Trajectory};
+use crate::util::percentile;
+use std::collections::BTreeMap;
+
+/// Summary of one `(scenario, metric)` series across all stored runs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricStats {
+    /// Scenario identifier.
+    pub scenario: String,
+    /// Metric path within the scenario.
+    pub metric: String,
+    /// Unit label (taken from the newest record of the series).
+    pub unit: String,
+    /// Number of stored samples.
+    pub samples: usize,
+    /// Smallest stored value.
+    pub min: f64,
+    /// Nearest-rank median across stored values.
+    pub p50: f64,
+    /// Nearest-rank 99th percentile across stored values.
+    pub p99: f64,
+    /// Value from the newest run that recorded this metric.
+    pub latest: f64,
+}
+
+/// Per-scenario min/p50/p99/latest for every metric series in the
+/// trajectory, sorted by `(scenario, metric)`. Percentiles use the
+/// same nearest-rank [`percentile`] the serve report uses.
+pub fn scenario_stats(traj: &Trajectory) -> Vec<MetricStats> {
+    let mut series: BTreeMap<(String, String), Vec<(RunId, f64, String)>> = BTreeMap::new();
+    for rec in &traj.records {
+        series
+            .entry((rec.scenario.clone(), rec.metric.clone()))
+            .or_default()
+            .push(((rec.ts, rec.commit.clone()), rec.value, rec.unit.clone()));
+    }
+    let mut out = Vec::with_capacity(series.len());
+    for ((scenario, metric), samples) in series {
+        let mut sorted: Vec<f64> = samples.iter().map(|(_, v, _)| *v).collect();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite values"));
+        // Newest run wins for `latest`/`unit`; max_by_key over the run id
+        // keeps the *last* maximal element, so a duplicated metric within
+        // one run resolves to its final record in file order.
+        let (_, latest, unit) = samples
+            .iter()
+            .max_by(|a, b| a.0.cmp(&b.0))
+            .expect("series is non-empty")
+            .clone();
+        out.push(MetricStats {
+            scenario,
+            metric,
+            unit,
+            samples: sorted.len(),
+            min: sorted[0],
+            p50: percentile(&sorted, 50.0),
+            p99: percentile(&sorted, 99.0),
+            latest,
+        });
+    }
+    out
+}
+
+/// Whether a metric participates in the regression gate. Gated metrics
+/// are the lower-is-better latency series: per-segment and per-layer
+/// kernel time, and any open-loop `p99_s` latency leaf (tenant or
+/// aggregate). Throughput, allocation counts, and self-check flags are
+/// reported but not gated.
+pub fn gated_metric(metric: &str) -> bool {
+    let leaf = metric.rsplit('.').next().unwrap_or(metric);
+    leaf == "ns_per_segment" || leaf == "ns_per_layer" || leaf == "p99_s"
+}
+
+/// One gated comparison: the newest run's value against the baseline
+/// median of all prior runs for the same `(scenario, metric)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GateCheck {
+    /// Scenario identifier.
+    pub scenario: String,
+    /// Metric path within the scenario.
+    pub metric: String,
+    /// Unit label.
+    pub unit: String,
+    /// Median of the metric across all runs *before* the newest one.
+    pub baseline_median: f64,
+    /// The newest run's value.
+    pub latest: f64,
+    /// Relative change in percent: `(latest - median) / median * 100`.
+    /// Positive means slower. `0.0` when the baseline median is zero
+    /// or negative (the check is then skipped, never divided).
+    pub regress_pct: f64,
+    /// Whether this check exceeded the allowed regression.
+    pub failed: bool,
+}
+
+/// Gate verdict: every gated comparison plus the context needed to
+/// explain a vacuous pass.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GateOutcome {
+    /// Newest run's identity, if the store holds any runs.
+    pub latest_run: Option<RunId>,
+    /// Number of baseline runs the newest run was compared against.
+    /// `0` means the gate passed vacuously (empty store or first run —
+    /// it seeds the baseline instead of being judged).
+    pub baseline_runs: usize,
+    /// Per-metric comparisons, sorted by `(scenario, metric)`.
+    pub checks: Vec<GateCheck>,
+    /// Gated metrics skipped because their baseline median was zero or
+    /// negative — comparing against those would divide by zero.
+    pub skipped_zero_baseline: usize,
+}
+
+impl GateOutcome {
+    /// `true` when no check failed (including the vacuous cases).
+    pub fn passed(&self) -> bool {
+        self.checks.iter().all(|c| !c.failed)
+    }
+}
+
+/// Compare the newest run's gated metrics against the median of all
+/// prior runs, failing any metric that regressed by more than
+/// `max_regress_pct` percent. With fewer than two runs there is no
+/// baseline: the outcome has no checks and passes vacuously.
+pub fn gate(traj: &Trajectory, max_regress_pct: f64) -> GateOutcome {
+    let runs = traj.runs();
+    let mut outcome = GateOutcome {
+        latest_run: runs.last().cloned(),
+        ..GateOutcome::default()
+    };
+    let latest = match runs.last() {
+        Some(latest) if runs.len() >= 2 => latest.clone(),
+        _ => return outcome,
+    };
+    outcome.baseline_runs = runs.len() - 1;
+    // Baseline series: per gated (scenario, metric), one value per
+    // prior run (last record wins within a run, matching `latest`).
+    let mut baseline: BTreeMap<(String, String), BTreeMap<RunId, f64>> = BTreeMap::new();
+    let mut newest: BTreeMap<(String, String), (f64, String)> = BTreeMap::new();
+    for rec in &traj.records {
+        if !gated_metric(&rec.metric) {
+            continue;
+        }
+        let key = (rec.scenario.clone(), rec.metric.clone());
+        let run: RunId = (rec.ts, rec.commit.clone());
+        if run == latest {
+            newest.insert(key, (rec.value, rec.unit.clone()));
+        } else {
+            baseline.entry(key).or_default().insert(run, rec.value);
+        }
+    }
+    for ((scenario, metric), (value, unit)) in newest {
+        let priors = match baseline.get(&(scenario.clone(), metric.clone())) {
+            Some(priors) if !priors.is_empty() => priors,
+            // Metric is new in this run: nothing to compare against.
+            _ => continue,
+        };
+        let mut sorted: Vec<f64> = priors.values().copied().collect();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite values"));
+        let median = percentile(&sorted, 50.0);
+        if median <= 0.0 {
+            outcome.skipped_zero_baseline += 1;
+            continue;
+        }
+        let regress_pct = (value - median) / median * 100.0;
+        outcome.checks.push(GateCheck {
+            scenario,
+            metric,
+            unit,
+            baseline_median: median,
+            latest: value,
+            regress_pct,
+            failed: regress_pct > max_regress_pct,
+        });
+    }
+    outcome
+}

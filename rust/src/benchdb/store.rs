@@ -1,0 +1,154 @@
+//! Append-only JSONL store: writer, skip-and-report reader, run index.
+
+use super::{BenchDbError, RunId, RunRecord};
+use crate::util::json;
+use std::collections::BTreeSet;
+use std::io::Write;
+use std::path::Path;
+
+/// A defective line the reader skipped, with its 1-based line number
+/// and the typed reason. Reported, never fatal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SkippedLine {
+    /// 1-based line number in the trajectory file.
+    pub line: usize,
+    /// Why the line was skipped.
+    pub error: BenchDbError,
+}
+
+/// The parsed trajectory: every valid record plus a report of every
+/// line that was skipped. An empty file parses to an empty trajectory.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trajectory {
+    /// Valid records in file order.
+    pub records: Vec<RunRecord>,
+    /// Defective lines, in file order, with typed reasons.
+    pub skipped: Vec<SkippedLine>,
+}
+
+impl Trajectory {
+    /// Distinct run identities, sorted by `(ts, commit)` — oldest
+    /// first. The last entry is the newest run.
+    pub fn runs(&self) -> Vec<RunId> {
+        let set: BTreeSet<RunId> = self
+            .records
+            .iter()
+            .map(|r| (r.ts, r.commit.clone()))
+            .collect();
+        set.into_iter().collect()
+    }
+
+    /// The newest run's identity, or `None` for an empty trajectory.
+    pub fn latest_run(&self) -> Option<RunId> {
+        self.runs().pop()
+    }
+
+    /// Records belonging to one run, in file order.
+    pub fn run_records(&self, run: &RunId) -> Vec<&RunRecord> {
+        self.records
+            .iter()
+            .filter(|r| r.ts == run.0 && r.commit == run.1)
+            .collect()
+    }
+}
+
+/// Parse trajectory text. Blank lines are ignored; every other line
+/// must be one canonical record. Lines that fail to parse or validate
+/// are collected in [`Trajectory::skipped`] with 1-based line numbers —
+/// a torn trailing line from an interrupted append surfaces here as a
+/// [`BenchDbError::Malformed`] skip, never a panic or a lost prefix.
+pub fn parse_trajectory(text: &str) -> Trajectory {
+    let mut out = Trajectory::default();
+    for (idx, line) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parsed = match json::parse(line) {
+            Ok(v) => v,
+            Err(msg) => {
+                out.skipped.push(SkippedLine {
+                    line: lineno,
+                    error: BenchDbError::Malformed(msg),
+                });
+                continue;
+            }
+        };
+        match RunRecord::from_json(&parsed) {
+            Ok(rec) => out.records.push(rec),
+            Err(error) => out.skipped.push(SkippedLine {
+                line: lineno,
+                error,
+            }),
+        }
+    }
+    out
+}
+
+/// Read and parse a trajectory file. A missing or unreadable file is
+/// the one fatal case ([`BenchDbError::Io`]); per-line defects are
+/// reported via [`Trajectory::skipped`] as in [`parse_trajectory`].
+pub fn read_trajectory(path: &Path) -> Result<Trajectory, BenchDbError> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| BenchDbError::Io(format!("read {}: {e}", path.display())))?;
+    Ok(parse_trajectory(&text))
+}
+
+/// Append records to the trajectory file (creating it, and any parent
+/// directories, on first use). Each record becomes one canonical line;
+/// the batch is written with a single `write_all` so a crash tears at
+/// most the final line — which the reader then skips-and-reports. If
+/// the existing file ends mid-line (a previous torn write), a newline
+/// is inserted first so the torn fragment stays isolated on its own
+/// line instead of corrupting the first new record.
+pub fn append_records(path: &Path, records: &[RunRecord]) -> Result<(), BenchDbError> {
+    if records.is_empty() {
+        return Ok(());
+    }
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .map_err(|e| BenchDbError::Io(format!("create {}: {e}", parent.display())))?;
+        }
+    }
+    let mut buf = String::new();
+    if tail_is_torn(path)? {
+        buf.push('\n');
+    }
+    for rec in records {
+        buf.push_str(&rec.to_line());
+        buf.push('\n');
+    }
+    let mut file = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .map_err(|e| BenchDbError::Io(format!("open {}: {e}", path.display())))?;
+    file.write_all(buf.as_bytes())
+        .map_err(|e| BenchDbError::Io(format!("append {}: {e}", path.display())))?;
+    Ok(())
+}
+
+/// Whether the file exists, is non-empty, and does not end with a
+/// newline — i.e. a previous append was torn mid-line.
+fn tail_is_torn(path: &Path) -> Result<bool, BenchDbError> {
+    use std::io::{Read, Seek, SeekFrom};
+    let mut file = match std::fs::File::open(path) {
+        Ok(f) => f,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(false),
+        Err(e) => return Err(BenchDbError::Io(format!("open {}: {e}", path.display()))),
+    };
+    let len = file
+        .metadata()
+        .map_err(|e| BenchDbError::Io(format!("stat {}: {e}", path.display())))?
+        .len();
+    if len == 0 {
+        return Ok(false);
+    }
+    file.seek(SeekFrom::End(-1))
+        .map_err(|e| BenchDbError::Io(format!("seek {}: {e}", path.display())))?;
+    let mut last = [0u8; 1];
+    file.read_exact(&mut last)
+        .map_err(|e| BenchDbError::Io(format!("read {}: {e}", path.display())))?;
+    Ok(last[0] != b'\n')
+}

@@ -97,6 +97,21 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
     result
 }
 
+/// Machine-readable form of one bench case: `mean_s` and `min_s` plus
+/// any derived metrics (`ns_per_segment`, ...), as a JSON object whose
+/// sorted-key emission feeds the perf-trajectory artifact
+/// (`BENCH_streaming.json` → `bench ingest`).
+pub fn result_json(r: &BenchResult, extra: &[(&str, f64)]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("mean_s".to_string(), Json::Num(r.mean_s));
+    obj.insert("min_s".to_string(), Json::Num(r.min_s));
+    for (k, v) in extra {
+        obj.insert((*k).to_string(), Json::Num(*v));
+    }
+    Json::Obj(obj)
+}
+
 /// Throughput helper: report bytes/s over the measured mean.
 pub fn report_throughput(r: &BenchResult, bytes: u64) {
     let gbps = bytes as f64 / r.mean_s / 1e9;
@@ -135,6 +150,19 @@ mod tests {
         assert!(r.mean_s >= 0.0);
         assert!(r.min_s <= r.mean_s + 1e-12);
         assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn result_json_carries_extras() {
+        let r = BenchResult {
+            name: "case".into(),
+            iters: 3,
+            mean_s: 0.25,
+            stddev_s: 0.0,
+            min_s: 0.125,
+        };
+        let j = result_json(&r, &[("ns_per_segment", 1234.5)]).to_string();
+        assert_eq!(j, r#"{"mean_s":0.25,"min_s":0.125,"ns_per_segment":1234.5}"#);
     }
 
     #[test]

@@ -70,6 +70,10 @@ pub struct Config {
     /// CLI uses its own default of 4. The CLI's `--tenants` flag
     /// overrides this.
     pub tenants: Option<usize>,
+    /// Path of the perf-trajectory JSONL store the `bench` subcommand
+    /// family reads and appends (`benchdb`). `None` = unset: `bench`
+    /// then requires the `--db` flag. The CLI's `--db` overrides this.
+    pub bench_db: Option<String>,
 }
 
 impl Default for Config {
@@ -86,6 +90,7 @@ impl Default for Config {
             recycle_cap_bytes: None,
             panel_dir: None,
             tenants: None,
+            bench_db: None,
         }
     }
 }
@@ -217,6 +222,14 @@ impl Config {
                     }
                     cfg.tenants = Some(n as usize);
                 }
+                "bench_db" => {
+                    let path =
+                        val.as_str().ok_or_else(|| anyhow!("bench_db must be a string"))?;
+                    if path.is_empty() {
+                        bail!("bench_db must not be empty (omit the key and pass --db instead)");
+                    }
+                    cfg.bench_db = Some(path.to_string());
+                }
                 "datasets" => {
                     let arr =
                         val.as_arr().ok_or_else(|| anyhow!("datasets must be an array"))?;
@@ -312,6 +325,9 @@ impl Config {
         }
         if let Some(t) = self.tenants {
             root.insert("tenants".to_string(), Json::Num(t as f64));
+        }
+        if let Some(path) = &self.bench_db {
+            root.insert("bench_db".to_string(), Json::Str(path.clone()));
         }
         root.insert(
             "datasets".to_string(),
@@ -472,6 +488,21 @@ mod tests {
         assert!(Config::from_json_str(r#"{"tenants":-2}"#).is_err());
         assert!(Config::from_json_str(r#"{"tenants":1.5}"#).is_err());
         assert!(Config::from_json_str(r#"{"tenants":"four"}"#).is_err());
+    }
+
+    #[test]
+    fn bench_db_key_roundtrips_and_validates() {
+        let cfg = Config::from_json_str(r#"{"bench_db":"perf/trajectory.jsonl"}"#).unwrap();
+        assert_eq!(cfg.bench_db.as_deref(), Some("perf/trajectory.jsonl"));
+        let back = Config::from_json_str(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(back.bench_db, cfg.bench_db, "set key survives the roundtrip");
+        // Unset stays unset (the CLI then requires --db).
+        let unset = Config::from_json_str("{}").unwrap();
+        assert_eq!(unset.bench_db, None);
+        let unset_back = Config::from_json_str(&unset.to_json().to_string()).unwrap();
+        assert_eq!(unset_back.bench_db, None);
+        assert!(Config::from_json_str(r#"{"bench_db":""}"#).is_err());
+        assert!(Config::from_json_str(r#"{"bench_db":9}"#).is_err());
     }
 
     #[test]

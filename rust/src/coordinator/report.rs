@@ -185,6 +185,64 @@ pub fn table1_md() -> String {
     out
 }
 
+/// Perf-trajectory summary (`bench report`) as a markdown table: one
+/// row per `(scenario, metric)` series with min/p50/p99 across stored
+/// runs and the newest run's value.
+pub fn bench_trajectory_md(stats: &[crate::benchdb::MetricStats], runs: usize) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "{} stored run(s), {} metric series\n", runs, stats.len());
+    out.push_str(
+        "| Scenario | Metric | Unit | Samples | Min | p50 | p99 | Latest |\n|---|---|---|---|---|---|---|---|\n",
+    );
+    for s in stats {
+        let _ = writeln!(
+            out,
+            "| {} | {} | {} | {} | {:.4} | {:.4} | {:.4} | {:.4} |",
+            s.scenario, s.metric, s.unit, s.samples, s.min, s.p50, s.p99, s.latest
+        );
+    }
+    out
+}
+
+/// Gate verdict (`bench gate`) as a markdown table: one row per gated
+/// comparison with the baseline median, the newest run's value, and
+/// the relative change (positive = slower).
+pub fn bench_gate_md(outcome: &crate::benchdb::GateOutcome) -> String {
+    let mut out = String::new();
+    if let Some((ts, commit)) = &outcome.latest_run {
+        let _ = writeln!(
+            out,
+            "latest run: commit {commit} at ts {ts}, baseline: {} prior run(s)\n",
+            outcome.baseline_runs
+        );
+    }
+    out.push_str(
+        "| Scenario | Metric | Baseline median | Latest | Change | Verdict |\n|---|---|---|---|---|---|\n",
+    );
+    for c in &outcome.checks {
+        let _ = writeln!(
+            out,
+            "| {} | {} | {:.4} {} | {:.4} {} | {:+.2}% | {} |",
+            c.scenario,
+            c.metric,
+            c.baseline_median,
+            c.unit,
+            c.latest,
+            c.unit,
+            c.regress_pct,
+            if c.failed { "FAIL" } else { "ok" },
+        );
+    }
+    if outcome.skipped_zero_baseline > 0 {
+        let _ = writeln!(
+            out,
+            "\n{} gated metric(s) skipped: zero/negative baseline median.",
+            outcome.skipped_zero_baseline
+        );
+    }
+    out
+}
+
 /// The full evaluation report (all tables + figures), used by
 /// `aires report` and the reproduce_paper example.
 pub fn full_report(cm: &crate::memsim::CostModel) -> String {
@@ -218,6 +276,41 @@ mod tests {
         assert!(table2_md().contains("kV1r"));
         let t3 = table3_md(&table3_memcap(&cm));
         assert!(t3.contains("| - |"), "OOM cells must render as '-':\n{t3}");
+    }
+
+    #[test]
+    fn bench_tables_render() {
+        let stats = vec![crate::benchdb::MetricStats {
+            scenario: "fresh_depth1".into(),
+            metric: "ns_per_segment".into(),
+            unit: "ns".into(),
+            samples: 3,
+            min: 90.0,
+            p50: 100.0,
+            p99: 110.0,
+            latest: 95.0,
+        }];
+        let table = bench_trajectory_md(&stats, 3);
+        assert!(table.contains("| fresh_depth1 | ns_per_segment | ns | 3 |"), "{table}");
+
+        let outcome = crate::benchdb::GateOutcome {
+            latest_run: Some((1722873600, "abc123".into())),
+            baseline_runs: 2,
+            checks: vec![crate::benchdb::GateCheck {
+                scenario: "fresh_depth1".into(),
+                metric: "ns_per_segment".into(),
+                unit: "ns".into(),
+                baseline_median: 100.0,
+                latest: 150.0,
+                regress_pct: 50.0,
+                failed: true,
+            }],
+            skipped_zero_baseline: 1,
+        };
+        let table = bench_gate_md(&outcome);
+        assert!(table.contains("commit abc123"), "{table}");
+        assert!(table.contains("| +50.00% | FAIL |"), "{table}");
+        assert!(table.contains("1 gated metric(s) skipped"), "{table}");
     }
 
     #[test]

@@ -390,14 +390,11 @@ pub fn serve_batch(
 
 /// Nearest-rank percentile of an ascending-sorted sample set (`p` in
 /// `[0, 100]`; `NaN` on an empty set). Deterministic: no interpolation,
-/// just the sample at the scaled rank.
+/// just the sample at the scaled rank. Delegates to
+/// [`crate::util::percentile`] — the same function the perf-trajectory
+/// statistics use, so serve reports and `bench report` tables agree.
 pub fn percentile(sorted: &[f64], p: f64) -> f64 {
-    if sorted.is_empty() {
-        return f64::NAN;
-    }
-    let p = p.clamp(0.0, 100.0);
-    let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
-    sorted[rank.min(sorted.len() - 1)]
+    crate::util::percentile(sorted, p)
 }
 
 /// Open-loop load profile for [`serve_open_loop`].

@@ -20,6 +20,7 @@
 
 #![warn(missing_docs)]
 
+pub mod benchdb;
 pub mod benchlib;
 pub mod config;
 pub mod coordinator;

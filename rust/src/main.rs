@@ -32,6 +32,20 @@
 //!                      every admitted tenant per batch; reports
 //!                      per-tenant p50/p99 latency and segments/s
 //!                      (--out writes the ServeReport as JSON)
+//!   bench ingest --db F [--json F] [--commit C]
+//!                      flatten a BENCH_streaming.json emission into the
+//!                      append-only perf-trajectory store (one line per
+//!                      scenario/metric datapoint, stamped commit+ts)
+//!   bench report --db F
+//!                      per-scenario min/p50/p99/latest table across all
+//!                      stored runs (defective lines are skipped with a
+//!                      warning, never fatal)
+//!   bench gate --db F --max-regress-pct X
+//!                      compare the newest run's gated metrics
+//!                      (ns/segment, ns/layer, serve p99) against the
+//!                      median of all prior runs; exit 1 on any
+//!                      regression beyond X% (an empty or single-run
+//!                      store passes vacuously — it seeds the baseline)
 //!   prep DATASET       one-time RoBW preprocessing cost estimate
 
 use aires::config::Config;
@@ -796,10 +810,126 @@ fn main() {
             }
             println!("OK: parallel outputs byte-identical to the serial oracles");
         }
+        "bench" => {
+            // Perf-trajectory store: ingest BENCH_streaming.json emissions,
+            // render the trajectory, and gate the newest run against the
+            // stored baseline. See rust/src/benchdb/ for the record schema
+            // and gate semantics.
+            use aires::benchdb;
+
+            let action = args
+                .get(1)
+                .map(String::as_str)
+                .unwrap_or_else(|| usage_fail("bench requires an action: ingest, report, or gate"));
+            // The store path is required (config key `bench_db` as
+            // fallback): every action reads or extends the same file.
+            let db: String = flag_value(&args, "--db")
+                .or_else(|| cfg.bench_db.clone())
+                .unwrap_or_else(|| {
+                    usage_fail(
+                        "bench requires --db <trajectory.jsonl> (or the `bench_db` config key)",
+                    )
+                });
+            let db_path = std::path::Path::new(&db);
+            let warn_skipped = |traj: &benchdb::Trajectory| {
+                for s in &traj.skipped {
+                    eprintln!("warning: {db}:{}: skipped line: {}", s.line, s.error);
+                }
+            };
+            match action {
+                "ingest" => {
+                    let json_path: String = flag_value(&args, "--json")
+                        .or_else(|| std::env::var("AIRES_BENCH_JSON").ok())
+                        .unwrap_or_else(|| "BENCH_streaming.json".into());
+                    let commit: String = flag_value(&args, "--commit")
+                        .or_else(|| std::env::var("GITHUB_SHA").ok())
+                        .unwrap_or_else(|| "unknown".into());
+                    let ts = std::time::SystemTime::now()
+                        .duration_since(std::time::UNIX_EPOCH)
+                        .map(|d| d.as_secs())
+                        .unwrap_or(0);
+                    let text = std::fs::read_to_string(&json_path).unwrap_or_else(|e| {
+                        eprintln!("error: reading {json_path}: {e}");
+                        std::process::exit(1);
+                    });
+                    let records = benchdb::records_from_bench_json(&text, &commit, ts)
+                        .unwrap_or_else(|e| {
+                            eprintln!("error: {json_path}: {e}");
+                            std::process::exit(1);
+                        });
+                    benchdb::append_records(db_path, &records).unwrap_or_else(|e| {
+                        eprintln!("error: {e}");
+                        std::process::exit(1);
+                    });
+                    println!(
+                        "ingested {} records from {json_path} into {db} \
+                         (run: commit {commit}, ts {ts})",
+                        records.len()
+                    );
+                }
+                "report" => {
+                    let traj = benchdb::read_trajectory(db_path).unwrap_or_else(|e| {
+                        eprintln!("error: {e}");
+                        std::process::exit(1);
+                    });
+                    warn_skipped(&traj);
+                    let stats = benchdb::scenario_stats(&traj);
+                    print!("{}", report::bench_trajectory_md(&stats, traj.runs().len()));
+                }
+                "gate" => {
+                    let pct: f64 = parsed_flag(
+                        &args,
+                        "--max-regress-pct",
+                        "a percentage (e.g. 10 allows +10%)",
+                    )
+                    .unwrap_or_else(|| {
+                        usage_fail("bench gate requires --max-regress-pct <percent>")
+                    });
+                    if !pct.is_finite() {
+                        usage_fail(&format!("--max-regress-pct must be finite, got {pct}"));
+                    }
+                    // A store that does not exist yet cannot gate anything:
+                    // warn and pass, so the first CI run seeds the baseline
+                    // instead of failing the pipeline.
+                    if !db_path.exists() {
+                        eprintln!("warning: trajectory {db} does not exist yet; nothing to gate");
+                        println!("bench gate: PASS (no stored runs)");
+                        return;
+                    }
+                    let traj = benchdb::read_trajectory(db_path).unwrap_or_else(|e| {
+                        eprintln!("error: {e}");
+                        std::process::exit(1);
+                    });
+                    warn_skipped(&traj);
+                    let outcome = benchdb::gate(&traj, pct);
+                    if outcome.baseline_runs == 0 {
+                        // Empty store or a single run: no baseline median
+                        // exists, so there is nothing to divide by — the
+                        // newest run seeds the baseline instead.
+                        eprintln!(
+                            "warning: {} stored run(s) — no baseline to compare against",
+                            traj.runs().len()
+                        );
+                        println!("bench gate: PASS (baseline seeded, not judged)");
+                        return;
+                    }
+                    print!("{}", report::bench_gate_md(&outcome));
+                    if outcome.passed() {
+                        println!("bench gate: PASS (threshold {pct}%)");
+                    } else {
+                        eprintln!("error: bench gate: FAIL — regression beyond {pct}%");
+                        std::process::exit(1);
+                    }
+                }
+                other => usage_fail(&format!(
+                    "unknown bench action {other:?}; expected ingest, report, or gate"
+                )),
+            }
+        }
         _ => {
             println!(
                 "aires — out-of-core GCN co-design (AIRES reproduction)\n\n\
-                 usage: aires <catalog|features|fig3|fig6|fig7|fig8|fig9|table3|report|prep|train|spgemm|segcheck|gcnstream|serve|parcheck|trace|sweep|config-dump> [--config F] [--threads N] [--prefetch-depth D] [--segment-dir DIR] [--host-cache-bytes N] [--recycle-cap-bytes N] [--layers L] [--panel-dir DIR] [--tenants N] [args]\n\
+                 usage: aires <catalog|features|fig3|fig6|fig7|fig8|fig9|table3|report|prep|train|spgemm|segcheck|gcnstream|serve|bench|parcheck|trace|sweep|config-dump> [--config F] [--threads N] [--prefetch-depth D] [--segment-dir DIR] [--host-cache-bytes N] [--recycle-cap-bytes N] [--layers L] [--panel-dir DIR] [--tenants N] [--db F] [args]\n\
                  see README.md for details"
             );
         }

@@ -32,6 +32,20 @@ pub fn human_secs(secs: f64) -> String {
     }
 }
 
+/// Nearest-rank percentile of an ascending-sorted sample set (`p` in
+/// `[0, 100]`; `NaN` on an empty set). Deterministic: no interpolation,
+/// just the sample at the scaled rank. Shared by the serve latency
+/// report and the perf-trajectory statistics so both summarize samples
+/// identically.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let p = p.clamp(0.0, 100.0);
+    let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
 /// Wall-clock stopwatch used by the bench harness and examples.
 pub struct Stopwatch(std::time::Instant);
 

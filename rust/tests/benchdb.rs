@@ -1,0 +1,360 @@
+//! Perf-trajectory store: golden-vector pin of the JSONL record
+//! encoding (the on-disk format must not drift silently), fault
+//! injection on the skip-and-report reader (torn tail, garbage line,
+//! wrong schema — typed errors, never panics), nearest-rank percentile
+//! vs a naive sort-based oracle (property), and the regression gate's
+//! pass/fail/vacuous semantics on synthetic trajectories.
+
+use aires::benchdb::{
+    append_records, gate, gated_metric, parse_trajectory, read_trajectory,
+    records_from_bench_json, scenario_stats, unit_for, BenchDbError, RunRecord, Trajectory,
+    SCHEMA_VERSION,
+};
+use aires::testing::{check, TempDir};
+use aires::util::percentile;
+
+fn rec(commit: &str, ts: u64, scenario: &str, metric: &str, value: f64) -> RunRecord {
+    RunRecord {
+        commit: commit.to_string(),
+        ts,
+        scenario: scenario.to_string(),
+        metric: metric.to_string(),
+        value,
+        unit: unit_for(metric).to_string(),
+    }
+}
+
+fn traj(records: Vec<RunRecord>) -> Trajectory {
+    Trajectory { records, skipped: Vec::new() }
+}
+
+/// Naive sort-based nearest-rank oracle, written independently of the
+/// library: sort a copy, index at `round(p/100 * (n-1))`.
+fn oracle_percentile(values: &[f64], p: f64) -> f64 {
+    let mut sorted = values.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len();
+    let rank = ((p.clamp(0.0, 100.0) / 100.0) * (n as f64 - 1.0)).round() as usize;
+    sorted[rank.min(n - 1)]
+}
+
+// --- golden vectors: the on-disk line format, byte for byte -------------
+
+#[test]
+fn golden_record_encoding_is_byte_stable() {
+    assert_eq!(SCHEMA_VERSION, 1, "bumping the schema invalidates these vectors on purpose");
+    let r = rec("abc123", 1722873600, "fresh_depth1", "ns_per_segment", 1234.5);
+    assert_eq!(
+        r.to_line(),
+        r#"{"commit":"abc123","metric":"ns_per_segment","scenario":"fresh_depth1","schema":1,"ts":1722873600,"unit":"ns","value":1234.5}"#
+    );
+    // Dotted serve-percentile path, seconds unit, fractional value.
+    let r2 = rec("deadbeef", 1, "serve_open_loop", "per_tenant.tenant_0.p99_s", 0.5);
+    assert_eq!(
+        r2.to_line(),
+        r#"{"commit":"deadbeef","metric":"per_tenant.tenant_0.p99_s","scenario":"serve_open_loop","schema":1,"ts":1,"unit":"s","value":0.5}"#
+    );
+    // The canonical lines decode back to the records they encode.
+    let parsed = parse_trajectory(&format!("{}\n{}\n", r.to_line(), r2.to_line()));
+    assert!(parsed.skipped.is_empty(), "{:?}", parsed.skipped);
+    assert_eq!(parsed.records, vec![r, r2]);
+}
+
+// --- fault injection: skip-and-report, never panic ----------------------
+
+#[test]
+fn reader_skips_and_reports_defective_lines() {
+    let good1 = rec("a", 1, "s", "ns_per_segment", 1.0).to_line();
+    let good2 = rec("b", 2, "s", "ns_per_segment", 2.0).to_line();
+    let wrong_schema = good1.replace("\"schema\":1", "\"schema\":99");
+    let torn = &good2[..good2.len() / 2];
+    // Garbage first, a blank line in the middle, the torn tail last.
+    let text = format!("not json at all\n{good1}\n{wrong_schema}\n\n{good2}\n{torn}");
+    let parsed = parse_trajectory(&text);
+    assert_eq!(parsed.records.len(), 2, "valid records survive: {:?}", parsed.skipped);
+    assert_eq!(parsed.skipped.len(), 3);
+    assert_eq!(parsed.skipped[0].line, 1);
+    assert!(matches!(parsed.skipped[0].error, BenchDbError::Malformed(_)));
+    assert_eq!(parsed.skipped[1].line, 3);
+    assert!(matches!(
+        parsed.skipped[1].error,
+        BenchDbError::WrongSchema { found: 99, expected: 1 }
+    ));
+    assert_eq!(parsed.skipped[2].line, 6);
+    assert!(matches!(parsed.skipped[2].error, BenchDbError::Malformed(_)));
+    // The valid prefix still renders: stats see both surviving samples.
+    let stats = scenario_stats(&parsed);
+    assert_eq!(stats.len(), 1);
+    assert_eq!(stats[0].samples, 2);
+    assert_eq!(stats[0].latest, 2.0);
+}
+
+#[test]
+fn typed_errors_for_missing_and_bad_fields() {
+    let base = rec("a", 1, "s", "m", 1.0).to_line();
+    let no_commit = base.replace("\"commit\":\"a\",", "");
+    let bad_ts = base.replace("\"ts\":1", "\"ts\":-3");
+    let bad_value = base.replace("\"value\":1", "\"value\":\"fast\"");
+    let parsed = parse_trajectory(&format!("{no_commit}\n{bad_ts}\n{bad_value}\n[1,2]\n"));
+    assert!(parsed.records.is_empty());
+    assert_eq!(parsed.skipped.len(), 4);
+    assert_eq!(parsed.skipped[0].error, BenchDbError::MissingField("commit"));
+    assert!(matches!(parsed.skipped[1].error, BenchDbError::BadField { field: "ts", .. }));
+    assert!(matches!(parsed.skipped[2].error, BenchDbError::BadField { field: "value", .. }));
+    assert!(matches!(parsed.skipped[3].error, BenchDbError::Malformed(_)));
+}
+
+#[test]
+fn missing_trajectory_file_is_a_typed_io_error() {
+    let dir = TempDir::new("benchdb-io");
+    let err = read_trajectory(&dir.path().join("nope.jsonl")).unwrap_err();
+    assert!(matches!(err, BenchDbError::Io(_)));
+}
+
+#[test]
+fn append_creates_parents_and_recovers_from_a_torn_tail() {
+    let dir = TempDir::new("benchdb-append");
+    let path = dir.path().join("nested/store/trajectory.jsonl");
+    append_records(&path, &[rec("a", 1, "s", "ns_per_segment", 10.0)]).unwrap();
+    append_records(&path, &[rec("b", 2, "s", "ns_per_segment", 11.0)]).unwrap();
+    let parsed = read_trajectory(&path).unwrap();
+    assert_eq!(parsed.records.len(), 2);
+    assert!(parsed.skipped.is_empty());
+    // Simulate a crash mid-append: tear the final line.
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, &text[..text.len() - 20]).unwrap();
+    let parsed = read_trajectory(&path).unwrap();
+    assert_eq!(parsed.records.len(), 1, "the valid prefix survives the tear");
+    assert_eq!(parsed.skipped.len(), 1);
+    assert!(matches!(parsed.skipped[0].error, BenchDbError::Malformed(_)));
+    // The store stays appendable: the next run starts on a fresh line,
+    // leaving the torn fragment isolated instead of corrupting it too.
+    append_records(&path, &[rec("c", 3, "s", "ns_per_segment", 12.0)]).unwrap();
+    let parsed = read_trajectory(&path).unwrap();
+    assert_eq!(parsed.records.len(), 2);
+    assert_eq!(parsed.skipped.len(), 1);
+    assert_eq!(parsed.latest_run(), Some((3, "c".to_string())));
+}
+
+// --- property: nearest-rank percentile vs the sort oracle ---------------
+
+#[test]
+fn percentile_matches_sort_oracle_property() {
+    check("percentile == sort oracle", 41, |rng| {
+        let n = rng.range(1, 64);
+        let mode = rng.range(0, 3);
+        let values: Vec<f64> = (0..n)
+            .map(|_| match mode {
+                0 => rng.f64() * 10.0,               // spread samples
+                1 => (rng.range(0, 4) as f64) * 0.5, // heavy ties
+                _ => 2.5,                            // all equal
+            })
+            .collect();
+        let mut sorted = values.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut prev = f64::NEG_INFINITY;
+        for p in [0.0, 25.0, 50.0, 75.0, 90.0, 99.0, 100.0] {
+            let got = percentile(&sorted, p);
+            if got != oracle_percentile(&values, p) {
+                return Err(format!(
+                    "p={p}: got {got}, oracle {} (n={n})",
+                    oracle_percentile(&values, p)
+                ));
+            }
+            if got != aires::gcn::serve::percentile(&sorted, p) {
+                return Err(format!("p={p}: serve::percentile disagrees with util"));
+            }
+            if !values.contains(&got) {
+                return Err(format!("p={p}: {got} is not a member of the sample"));
+            }
+            if got < prev {
+                return Err(format!("percentile not monotone in p: {got} < {prev} at p={p}"));
+            }
+            prev = got;
+        }
+        let p = rng.f64() * 100.0;
+        if percentile(&sorted, p) != oracle_percentile(&values, p) {
+            return Err(format!("random p={p}: oracle mismatch"));
+        }
+        if percentile(&sorted, 0.0) != sorted[0] || percentile(&sorted, 100.0) != sorted[n - 1] {
+            return Err("p=0/p=100 must be min/max".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn report_percentiles_match_sort_oracle_property() {
+    check("scenario_stats p50/p99 == sort oracle", 42, |rng| {
+        let runs = rng.range(1, 12);
+        let mut records = Vec::new();
+        let mut values = Vec::new();
+        for r in 0..runs {
+            // Quantized draws so tied samples across runs are common.
+            let v = (rng.f64() * 800.0).round() / 8.0;
+            values.push(v);
+            records.push(rec(&format!("c{r:02}"), 100 + r as u64, "scen", "ns_per_segment", v));
+        }
+        let stats = scenario_stats(&traj(records));
+        if stats.len() != 1 {
+            return Err(format!("expected one series, got {}", stats.len()));
+        }
+        let s = &stats[0];
+        if s.samples != runs {
+            return Err(format!("samples {} != runs {runs}", s.samples));
+        }
+        for (name, got, p) in [("p50", s.p50, 50.0), ("p99", s.p99, 99.0), ("min", s.min, 0.0)] {
+            if got != oracle_percentile(&values, p) {
+                return Err(format!(
+                    "{name}: got {got}, oracle {}",
+                    oracle_percentile(&values, p)
+                ));
+            }
+        }
+        if s.latest != *values.last().unwrap() {
+            return Err(format!("latest {} != newest run's value", s.latest));
+        }
+        Ok(())
+    });
+}
+
+// --- the regression gate ------------------------------------------------
+
+#[test]
+fn gate_fails_beyond_threshold_and_passes_within() {
+    let mut records = vec![
+        rec("run-a", 100, "fresh_depth1", "ns_per_segment", 100.0),
+        rec("run-b", 200, "fresh_depth1", "ns_per_segment", 104.0),
+    ];
+    // run-b vs the run-a baseline: +4% is within a 10% threshold.
+    let out = gate(&traj(records.clone()), 10.0);
+    assert_eq!(out.baseline_runs, 1);
+    assert_eq!(out.checks.len(), 1);
+    assert!((out.checks[0].regress_pct - 4.0).abs() < 1e-9, "{:?}", out.checks[0]);
+    assert!(out.passed());
+    // A synthetic 2x regression fails the same threshold...
+    records.push(rec("run-c", 300, "fresh_depth1", "ns_per_segment", 208.0));
+    let out = gate(&traj(records.clone()), 10.0);
+    assert_eq!(out.baseline_runs, 2);
+    assert_eq!(out.checks[0].baseline_median, 104.0, "nearest-rank median of [100, 104]");
+    assert_eq!(out.checks[0].regress_pct, 100.0);
+    assert!(!out.passed());
+    assert!(out.checks[0].failed);
+    // ...but a generous threshold admits it.
+    assert!(gate(&traj(records.clone()), 150.0).passed());
+    // An improvement (negative regression) always passes.
+    records.push(rec("run-d", 400, "fresh_depth1", "ns_per_segment", 90.0));
+    let out = gate(&traj(records), 10.0);
+    assert!(out.passed());
+    assert!(out.checks[0].regress_pct < 0.0);
+}
+
+#[test]
+fn gate_is_vacuous_without_a_baseline() {
+    // Empty store: nothing to gate, nothing to divide by.
+    let out = gate(&Trajectory::default(), 5.0);
+    assert!(out.passed());
+    assert_eq!((out.baseline_runs, out.checks.len()), (0, 0));
+    assert_eq!(out.latest_run, None);
+    // A single run seeds the baseline instead of being judged.
+    let out = gate(&traj(vec![rec("a", 1, "s", "ns_per_segment", 5.0)]), 5.0);
+    assert!(out.passed());
+    assert_eq!((out.baseline_runs, out.checks.len()), (0, 0));
+    assert_eq!(out.latest_run, Some((1, "a".to_string())));
+}
+
+#[test]
+fn gate_skips_zero_baselines_and_ungated_metrics() {
+    let records = vec![
+        rec("a", 1, "s", "ns_per_segment", 0.0),
+        rec("a", 1, "s", "allocs_per_segment", 5.0),
+        rec("b", 2, "s", "ns_per_segment", 50.0),
+        // 100x worse, but allocation counts are reported, not gated.
+        rec("b", 2, "s", "allocs_per_segment", 500.0),
+    ];
+    let out = gate(&traj(records), 5.0);
+    assert!(out.passed(), "a zero baseline must be skipped, never divided: {out:?}");
+    assert_eq!(out.skipped_zero_baseline, 1);
+    assert!(out.checks.is_empty());
+    // A metric first seen in the newest run has no priors: skipped too.
+    let out = gate(
+        &traj(vec![
+            rec("a", 1, "s", "ns_per_segment", 10.0),
+            rec("b", 2, "s", "ns_per_segment", 10.0),
+            rec("b", 2, "s2", "ns_per_segment", 99.0),
+        ]),
+        5.0,
+    );
+    assert!(out.passed());
+    assert_eq!(out.checks.len(), 1);
+    assert!(gated_metric("ns_per_segment"));
+    assert!(gated_metric("ns_per_layer"));
+    assert!(gated_metric("per_tenant.tenant_0.p99_s"));
+    assert!(!gated_metric("per_tenant.tenant_0.p50_s"));
+    assert!(!gated_metric("allocs_per_segment"));
+    assert!(!gated_metric("segments_per_s"));
+}
+
+// --- ingest: BENCH_streaming.json → records -----------------------------
+
+#[test]
+fn ingest_flattens_bench_emission_including_serve_percentiles() {
+    let text = r#"{"bench":"micro_hotpath/streaming","graph":"kmer-12000","results":{"fresh_depth1":{"mean_s":0.01,"ns_per_segment":100.5},"serve_open_loop":{"ledger_balanced":true,"per_tenant":{"tenant_0":{"p50_s":0.001,"p99_s":0.002}},"segments_per_s":500}}}"#;
+    let recs = records_from_bench_json(text, "abc", 7).unwrap();
+    let find = |scenario: &str, metric: &str| {
+        recs.iter()
+            .find(|r| r.scenario == scenario && r.metric == metric)
+            .unwrap_or_else(|| panic!("missing {scenario}/{metric} in {recs:?}"))
+    };
+    assert_eq!(find("fresh_depth1", "ns_per_segment").value, 100.5);
+    assert_eq!(find("fresh_depth1", "ns_per_segment").unit, "ns");
+    assert_eq!(find("fresh_depth1", "mean_s").unit, "s");
+    // Serve open-loop percentiles land in the same record stream.
+    assert_eq!(find("serve_open_loop", "per_tenant.tenant_0.p99_s").value, 0.002);
+    assert_eq!(find("serve_open_loop", "per_tenant.tenant_0.p99_s").unit, "s");
+    assert_eq!(find("serve_open_loop", "segments_per_s").unit, "seg/s");
+    // Booleans trend as 0/1; the non-results top-level keys do not ingest.
+    assert_eq!(find("serve_open_loop", "ledger_balanced").value, 1.0);
+    assert_eq!(recs.len(), 6);
+    for r in &recs {
+        assert_eq!((r.commit.as_str(), r.ts), ("abc", 7));
+    }
+}
+
+#[test]
+fn ingest_rejects_non_bench_sources() {
+    for bad in ["{}", "[]", r#"{"results":{}}"#, r#"{"results":3}"#, "not json"] {
+        assert!(
+            matches!(records_from_bench_json(bad, "c", 1), Err(BenchDbError::BadSource(_))),
+            "source {bad:?} must be a BadSource error"
+        );
+    }
+}
+
+#[test]
+fn ingest_append_report_gate_end_to_end() {
+    let dir = TempDir::new("benchdb-e2e");
+    let db = dir.path().join("trajectory.jsonl");
+    let emission = |ns: f64| {
+        format!(r#"{{"bench":"micro_hotpath/streaming","results":{{"fresh_depth1":{{"ns_per_segment":{ns}}}}}}}"#)
+    };
+    for (commit, ts, ns) in [("run-a", 10u64, 100.0), ("run-b", 20, 102.0)] {
+        let recs = records_from_bench_json(&emission(ns), commit, ts).unwrap();
+        append_records(&db, &recs).unwrap();
+    }
+    let parsed = read_trajectory(&db).unwrap();
+    assert!(parsed.skipped.is_empty());
+    assert_eq!(parsed.runs().len(), 2);
+    assert!(gate(&parsed, 10.0).passed(), "+2% is within 10%");
+    // A 10x regression lands as the newest run and fails the gate.
+    let recs = records_from_bench_json(&emission(1000.0), "run-c", 30).unwrap();
+    append_records(&db, &recs).unwrap();
+    let parsed = read_trajectory(&db).unwrap();
+    let out = gate(&parsed, 10.0);
+    assert!(!out.passed());
+    assert_eq!(out.latest_run, Some((30, "run-c".to_string())));
+    let stats = scenario_stats(&parsed);
+    assert_eq!(stats[0].samples, 3);
+    assert_eq!(stats[0].latest, 1000.0);
+    assert_eq!(stats[0].min, 100.0);
+}

@@ -253,6 +253,144 @@ fn serve_malformed_flags_are_usage_errors_and_zero_clamps_warn() {
     assert!(out.contains("1 tenants"), "runs with one tenant: {out}");
 }
 
+// --- bench subcommand family: the perf-trajectory store -----------------
+
+/// Minimal BENCH_streaming.json emission with a controllable gated
+/// metric (ns/segment) and a serve p99, mirroring what micro_hotpath
+/// writes.
+fn bench_emission(ns_per_segment: f64) -> String {
+    format!(
+        r#"{{"bench":"micro_hotpath/streaming","results":{{"fresh_depth1":{{"mean_s":0.01,"ns_per_segment":{ns_per_segment}}},"serve_open_loop":{{"ledger_balanced":true,"per_tenant":{{"tenant_0":{{"p50_s":0.001,"p99_s":0.002}}}}}}}}}}"#
+    )
+}
+
+#[test]
+fn bench_without_db_is_a_usage_error() {
+    for action in ["ingest", "report", "gate"] {
+        let (code, _, err) = run(&["bench", action]);
+        assert_eq!(code, Some(2), "bench {action} without --db exits 2; stderr: {err}");
+        assert!(err.contains("--db"), "must name the missing flag: {err}");
+        assert!(!err.contains("panicked"), "{err}");
+    }
+    // No action at all is the same class of error.
+    let (code, _, err) = run(&["bench"]);
+    assert_eq!(code, Some(2), "stderr: {err}");
+    assert!(err.contains("ingest"), "must list the actions: {err}");
+    let (code, _, err) = run(&["bench", "prune", "--db", "x.jsonl"]);
+    assert_eq!(code, Some(2), "unknown action exits 2; stderr: {err}");
+    assert!(err.contains("prune"), "must echo the unknown action: {err}");
+}
+
+#[test]
+fn bench_gate_malformed_threshold_is_a_usage_error() {
+    let (code, _, err) = run(&["bench", "gate", "--db", "x.jsonl", "--max-regress-pct", "lots"]);
+    assert_eq!(code, Some(2), "usage errors exit 2; stderr: {err}");
+    assert!(err.contains("--max-regress-pct"), "must name the flag: {err}");
+    assert!(err.contains("lots"), "must echo the offending value: {err}");
+    assert!(!err.contains("panicked"), "{err}");
+    // Missing threshold entirely is the same class of error.
+    let (code, _, err) = run(&["bench", "gate", "--db", "x.jsonl"]);
+    assert_eq!(code, Some(2), "stderr: {err}");
+    assert!(err.contains("--max-regress-pct"), "{err}");
+}
+
+#[test]
+fn bench_gate_on_an_empty_store_warns_and_passes() {
+    let dir = TempDir::new("cli-bench-empty");
+    // Store file does not exist yet: first CI run seeds, never fails.
+    let missing = dir.path().join("trajectory.jsonl");
+    let (code, out, err) =
+        run(&["bench", "gate", "--db", missing.to_str().unwrap(), "--max-regress-pct", "10"]);
+    assert_eq!(code, Some(0), "missing store passes; stderr: {err}");
+    assert!(out.contains("PASS"), "stdout: {out}");
+    assert!(err.contains("warning"), "the vacuous pass must be announced: {err}");
+    // An existing-but-empty store is the same vacuous pass (no division).
+    let empty = dir.path().join("empty.jsonl");
+    std::fs::write(&empty, "").unwrap();
+    let (code, out, err) =
+        run(&["bench", "gate", "--db", empty.to_str().unwrap(), "--max-regress-pct", "10"]);
+    assert_eq!(code, Some(0), "empty store passes; stderr: {err}");
+    assert!(out.contains("PASS"), "stdout: {out}");
+    assert!(err.contains("warning"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
+}
+
+#[test]
+fn bench_ingest_report_gate_end_to_end() {
+    let dir = TempDir::new("cli-bench-e2e");
+    let db = dir.path().join("perf/trajectory.jsonl");
+    let db_s = db.to_str().unwrap().to_string();
+    let json = dir.path().join("BENCH_streaming.json");
+    let json_s = json.to_str().unwrap().to_string();
+
+    // Two healthy runs. Run identity is (ts, commit): same-second
+    // ingests stay ordered because run-a < run-b < run-c lexically.
+    for (commit, ns) in [("run-a", 100.0), ("run-b", 102.0)] {
+        std::fs::write(&json, bench_emission(ns)).unwrap();
+        let (code, out, err) =
+            run(&["bench", "ingest", "--db", &db_s, "--json", &json_s, "--commit", commit]);
+        assert_eq!(code, Some(0), "stderr: {err}");
+        assert!(out.contains("ingested"), "stdout: {out}");
+        assert!(out.contains(commit), "run identity echoed: {out}");
+    }
+
+    // Report renders per-scenario stats incl. the serve percentiles.
+    let (code, out, err) = run(&["bench", "report", "--db", &db_s]);
+    assert_eq!(code, Some(0), "stderr: {err}");
+    assert!(out.contains("2 stored run(s)"), "stdout: {out}");
+    assert!(out.contains("| fresh_depth1 | ns_per_segment | ns |"), "stdout: {out}");
+    assert!(out.contains("per_tenant.tenant_0.p99_s"), "serve p99 folded in: {out}");
+
+    // +2% is within a 10% threshold.
+    let (code, out, err) =
+        run(&["bench", "gate", "--db", &db_s, "--max-regress-pct", "10"]);
+    assert_eq!(code, Some(0), "within-threshold run passes; stderr: {err}\n{out}");
+    assert!(out.contains("PASS"), "stdout: {out}");
+
+    // A synthetic 10x regression as the newest run fails the same gate.
+    std::fs::write(&json, bench_emission(1000.0)).unwrap();
+    let (code, _, err) =
+        run(&["bench", "ingest", "--db", &db_s, "--json", &json_s, "--commit", "run-c"]);
+    assert_eq!(code, Some(0), "stderr: {err}");
+    let (code, out, err) =
+        run(&["bench", "gate", "--db", &db_s, "--max-regress-pct", "10"]);
+    assert_eq!(code, Some(1), "regression beyond threshold exits 1; stdout: {out}");
+    assert!(out.contains("FAIL"), "the failing check is rendered: {out}");
+    assert!(err.contains("FAIL"), "stderr announces the verdict: {err}");
+    assert!(!err.contains("panicked"), "{err}");
+
+    // A garbage line in the store degrades to a warning, never a panic:
+    // report still renders the valid prefix and gate still gates.
+    use std::io::Write as _;
+    let mut f = std::fs::OpenOptions::new().append(true).open(&db).unwrap();
+    writeln!(f, "torn garbage {{").unwrap();
+    drop(f);
+    let (code, out, err) = run(&["bench", "report", "--db", &db_s]);
+    assert_eq!(code, Some(0), "stderr: {err}");
+    assert!(err.contains("skipped line"), "defect reported on stderr: {err}");
+    assert!(out.contains("3 stored run(s)"), "valid prefix renders: {out}");
+}
+
+#[test]
+fn bench_db_config_key_is_the_flag_fallback() {
+    let dir = TempDir::new("cli-bench-cfg");
+    let db = dir.path().join("trajectory.jsonl");
+    let cfg = dir.path().join("aires.json");
+    std::fs::write(&cfg, format!(r#"{{"bench_db":"{}"}}"#, db.to_str().unwrap())).unwrap();
+    // With the config key set, --db is optional; store is still missing,
+    // so gate warns-and-passes through the fallback path.
+    let (code, out, err) = run(&[
+        "bench",
+        "gate",
+        "--config",
+        cfg.to_str().unwrap(),
+        "--max-regress-pct",
+        "10",
+    ]);
+    assert_eq!(code, Some(0), "stderr: {err}");
+    assert!(out.contains("PASS"), "stdout: {out}");
+}
+
 #[test]
 fn segcheck_with_recycling_disabled_still_verifies() {
     // --recycle-cap-bytes 0 selects the fresh-allocation path; output

@@ -14,8 +14,9 @@
 //! against fresh), so a perf run can never silently diverge; it then
 //! emits `BENCH_streaming.json` (ns/segment + allocations/segment for
 //! the recycled vs fresh disk paths, the serve open-loop latency
-//! percentiles, and — outside fast mode — the `rmat_large` 2^20-node
-//! scenario) to `AIRES_BENCH_JSON` or ./BENCH_streaming.json. Feed the
+//! percentiles, the streamed-training `ns_per_step`, and — outside fast
+//! mode — the `rmat_large` 2^20-node scenario) to `AIRES_BENCH_JSON` or
+//! ./BENCH_streaming.json. Feed the
 //! emission into the perf-trajectory store with `aires bench ingest`
 //! and gate regressions with `aires bench gate` (see `src/benchdb/`).
 
@@ -516,6 +517,80 @@ fn streaming_benches(fast: bool) {
     // The full ServeReport (per-tenant latency percentiles included)
     // rides the same JSON artifact CI already uploads.
     results.insert("serve_open_loop".to_string(), srep.to_json());
+
+    // --- Streamed training: one SGD step = forward + streamed backward
+    // through the recycled disk path, gradient/activation panels through
+    // the tiered panel store (gcn::train_stream). Self-checking like the
+    // rest of the section: the streamed loss must be byte-identical to
+    // the dense CPU oracle on the warm-up steps before any number is
+    // reported. Emits the `ns_per_step` the bench gate trends.
+    {
+        use aires::gcn::train_stream::{dense_step_oracle, synthetic_labels};
+        use aires::gcn::{RecomputePolicy, StreamedTrainer, TrainStreamConfig};
+
+        let classes = 4usize;
+        let mut rngt = Pcg::seed(82);
+        let labels = synthetic_labels(&x, classes, &mut rngt);
+        let widths = [32usize, 32, 32, classes];
+        let train_layers: Vec<OocGcnLayer> = (0..3)
+            .map(|l| OocGcnLayer {
+                w: Dense::from_vec(
+                    widths[l],
+                    widths[l + 1],
+                    (0..widths[l] * widths[l + 1])
+                        .map(|_| (rngt.normal() * 0.2) as f32)
+                        .collect(),
+                ),
+                b: vec![0.0; widths[l + 1]],
+                relu: l < 2,
+                seg_budget,
+            })
+            .collect();
+        let pdir = aires::testing::TempDir::new("bench-train-panels");
+        let panels =
+            Arc::new(aires::runtime::segstore::PanelStore::new(pdir.path(), 0).expect("panels"));
+        let tstaging = StagingConfig::disk(store.clone(), 2).with_recycle(recycle.clone());
+        let tcfg = TrainStreamConfig::new(tstaging, panels).with_policy(RecomputePolicy::Reload);
+        let mut tr = StreamedTrainer::new(train_layers.clone(), labels.clone()).expect("trainer");
+        let mut oracle_layers = train_layers;
+        let lr = 0.1f32;
+        // Self-check + pool/panel warm-up: two steps against the oracle.
+        let mut backward_segments = 0usize;
+        for step in 0..2 {
+            let mut mem = GpuMem::new(1 << 30);
+            let rep = tr.step(&ga, &x, &mut mem, &pool, &tcfg, lr).expect("streamed step");
+            let want =
+                dense_step_oracle(&mut oracle_layers, &ga, &x, &labels, lr).expect("dense oracle");
+            assert_eq!(
+                rep.loss.to_bits(),
+                want.to_bits(),
+                "streamed training step {step} diverged from the dense oracle"
+            );
+            assert_eq!(mem.used, 0, "train ledger must balance");
+            backward_segments = rep.backward_segments;
+        }
+        println!("BENCH train_stream self-check: streamed loss matches dense oracle OK");
+        let allocs_before = allocation_count();
+        let rt = bench("train_stream step (3 layers, disk recycled, depth 2)", 0, iters, || {
+            let mut m = GpuMem::new(1 << 30);
+            std::hint::black_box(tr.step(&ga, &x, &mut m, &pool, &tcfg, lr).expect("train step"));
+        });
+        let train_allocs = allocation_count() - allocs_before;
+        let ns_per_step = rt.mean_s * 1e9;
+        let allocs_per_step = train_allocs as f64 / iters as f64;
+        println!(
+            "BENCH train_stream: {ns_per_step:.0} ns/step, {allocs_per_step:.0} allocs/step \
+             over {} forward + {backward_segments} backward segments",
+            store.len() * BENCH_LAYERS
+        );
+        results.insert(
+            "train_stream".to_string(),
+            result_json(
+                &rt,
+                &[("ns_per_step", ns_per_step), ("allocs_per_step", allocs_per_step)],
+            ),
+        );
+    }
 
     // --- rmat_large: a 2^20-node RMAT graph under a tight segment
     // budget — the out-of-core regime (hundreds of segments) that the

@@ -12,9 +12,9 @@ pub fn unit_for(metric: &str) -> &'static str {
     let leaf = metric.rsplit('.').next().unwrap_or(metric);
     if leaf == "segments_per_s" {
         "seg/s"
-    } else if leaf == "ns_per_segment" || leaf == "ns_per_layer" {
+    } else if leaf == "ns_per_segment" || leaf == "ns_per_layer" || leaf == "ns_per_step" {
         "ns"
-    } else if leaf == "allocs_per_segment" {
+    } else if leaf == "allocs_per_segment" || leaf == "allocs_per_step" {
         "allocs"
     } else if leaf.ends_with("_s") {
         "s"

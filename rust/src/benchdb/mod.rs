@@ -27,10 +27,13 @@
 //!   [`percentile`](crate::util::percentile), the same function `serve`
 //!   reports with), and a regression gate: the newest run's
 //!   lower-is-better metrics ([`gated_metric`]: `ns_per_segment`,
-//!   `ns_per_layer`, any `p99_s` leaf) are compared against the *median
-//!   of all prior runs*; any regression beyond the configured percentage
-//!   fails the gate. No baseline (empty store, first run) passes
-//!   vacuously — the run seeds the baseline instead.
+//!   `ns_per_layer`, `ns_per_step`, any `p99_s` leaf) are compared
+//!   against the *median of all prior runs*; any regression beyond the
+//!   configured percentage fails the gate. No baseline (empty store,
+//!   first run) passes vacuously — the run seeds the baseline instead.
+//!   [`trend_lines`] renders the commit-to-commit view of the same
+//!   gated series: one point per run, each with its delta vs the
+//!   previous commit.
 //!
 //! The CLI surface is the `bench` subcommand family (`bench ingest`,
 //! `bench report`, `bench gate --max-regress-pct X`); CI's `bench-smoke`
@@ -44,7 +47,10 @@ mod store;
 
 pub use ingest::{records_from_bench_json, unit_for};
 pub use record::{RunRecord, SCHEMA_VERSION};
-pub use stats::{gate, gated_metric, scenario_stats, GateCheck, GateOutcome, MetricStats};
+pub use stats::{
+    gate, gated_metric, scenario_stats, trend_lines, GateCheck, GateOutcome, MetricStats,
+    TrendLine, TrendPoint,
+};
 pub use store::{append_records, parse_trajectory, read_trajectory, SkippedLine, Trajectory};
 
 /// A run's identity inside the trajectory: `(ts, commit)`. Runs are

@@ -63,13 +63,76 @@ pub fn scenario_stats(traj: &Trajectory) -> Vec<MetricStats> {
 }
 
 /// Whether a metric participates in the regression gate. Gated metrics
-/// are the lower-is-better latency series: per-segment and per-layer
-/// kernel time, and any open-loop `p99_s` latency leaf (tenant or
-/// aggregate). Throughput, allocation counts, and self-check flags are
-/// reported but not gated.
+/// are the lower-is-better latency series: per-segment, per-layer and
+/// per-training-step kernel time, and any open-loop `p99_s` latency
+/// leaf (tenant or aggregate). Throughput, allocation counts, and
+/// self-check flags are reported but not gated.
 pub fn gated_metric(metric: &str) -> bool {
     let leaf = metric.rsplit('.').next().unwrap_or(metric);
-    leaf == "ns_per_segment" || leaf == "ns_per_layer" || leaf == "p99_s"
+    leaf == "ns_per_segment" || leaf == "ns_per_layer" || leaf == "ns_per_step" || leaf == "p99_s"
+}
+
+/// One run's sample within a [`TrendLine`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrendPoint {
+    /// The run this sample belongs to.
+    pub run: RunId,
+    /// The metric's value in that run (last record wins within a run).
+    pub value: f64,
+    /// Relative change vs the previous point in percent (positive =
+    /// slower). `None` for the first point of a series, or when the
+    /// previous value is zero or negative (nothing to divide by).
+    pub delta_pct: Option<f64>,
+}
+
+/// Cross-commit trend of one gated `(scenario, metric)` series.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrendLine {
+    /// Scenario identifier.
+    pub scenario: String,
+    /// Metric path within the scenario.
+    pub metric: String,
+    /// Unit label (taken from the newest record of the series).
+    pub unit: String,
+    /// One point per run that recorded the metric, oldest first.
+    pub points: Vec<TrendPoint>,
+}
+
+/// Cross-commit trend of every *gated* metric series: one point per
+/// run, ordered oldest-first, each stamped with its delta against the
+/// previous run's value. This is the commit-to-commit view the `bench
+/// report` table (an all-runs aggregate) cannot show: where in the
+/// trajectory a metric moved, not just that it did.
+pub fn trend_lines(traj: &Trajectory) -> Vec<TrendLine> {
+    let mut series: BTreeMap<(String, String), (BTreeMap<RunId, f64>, String)> = BTreeMap::new();
+    for rec in &traj.records {
+        if !gated_metric(&rec.metric) {
+            continue;
+        }
+        let entry = series
+            .entry((rec.scenario.clone(), rec.metric.clone()))
+            .or_insert_with(|| (BTreeMap::new(), rec.unit.clone()));
+        // Last record in file order wins within a run (same resolution
+        // rule as `scenario_stats`' `latest`); newest unit wins.
+        entry.0.insert((rec.ts, rec.commit.clone()), rec.value);
+        entry.1 = rec.unit.clone();
+    }
+    series
+        .into_iter()
+        .map(|((scenario, metric), (runs, unit))| {
+            let mut points = Vec::with_capacity(runs.len());
+            let mut prev: Option<f64> = None;
+            for (run, value) in runs {
+                let delta_pct = match prev {
+                    Some(p) if p > 0.0 => Some((value - p) / p * 100.0),
+                    _ => None,
+                };
+                points.push(TrendPoint { run, value, delta_pct });
+                prev = Some(value);
+            }
+            TrendLine { scenario, metric, unit, points }
+        })
+        .collect()
 }
 
 /// One gated comparison: the newest run's value against the baseline

@@ -74,6 +74,16 @@ pub struct Config {
     /// family reads and appends (`benchdb`). `None` = unset: `bench`
     /// then requires the `--db` flag. The CLI's `--db` overrides this.
     pub bench_db: Option<String>,
+    /// Route the `train` subcommand through the streamed out-of-core
+    /// trainer (`gcn::train_stream`) instead of the dense PJRT artifact.
+    /// `None` = unset (artifact path). The CLI's `--train-stream` flag
+    /// also enables it.
+    pub train_stream: Option<bool>,
+    /// Recompute-vs-reload policy for the streamed trainer's aggregated
+    /// inputs: `"reload"`, `"recompute"`, or `"auto"`. `None` = unset
+    /// (the CLI defaults to `auto`). The CLI's `--recompute-policy`
+    /// overrides this.
+    pub recompute_policy: Option<String>,
 }
 
 impl Default for Config {
@@ -91,6 +101,8 @@ impl Default for Config {
             panel_dir: None,
             tenants: None,
             bench_db: None,
+            train_stream: None,
+            recompute_policy: None,
         }
     }
 }
@@ -230,6 +242,22 @@ impl Config {
                     }
                     cfg.bench_db = Some(path.to_string());
                 }
+                "train_stream" => {
+                    cfg.train_stream = Some(
+                        val.as_bool()
+                            .ok_or_else(|| anyhow!("train_stream must be a boolean"))?,
+                    );
+                }
+                "recompute_policy" => {
+                    let s = val
+                        .as_str()
+                        .ok_or_else(|| anyhow!("recompute_policy must be a string"))?;
+                    // Validate eagerly so typos fail at config-load time, not
+                    // mid-training.
+                    s.parse::<crate::gcn::RecomputePolicy>()
+                        .map_err(|e| anyhow!("recompute_policy: {e}"))?;
+                    cfg.recompute_policy = Some(s.to_string());
+                }
                 "datasets" => {
                     let arr =
                         val.as_arr().ok_or_else(|| anyhow!("datasets must be an array"))?;
@@ -328,6 +356,12 @@ impl Config {
         }
         if let Some(path) = &self.bench_db {
             root.insert("bench_db".to_string(), Json::Str(path.clone()));
+        }
+        if let Some(b) = self.train_stream {
+            root.insert("train_stream".to_string(), Json::Bool(b));
+        }
+        if let Some(p) = &self.recompute_policy {
+            root.insert("recompute_policy".to_string(), Json::Str(p.clone()));
         }
         root.insert(
             "datasets".to_string(),
@@ -503,6 +537,39 @@ mod tests {
         assert_eq!(unset_back.bench_db, None);
         assert!(Config::from_json_str(r#"{"bench_db":""}"#).is_err());
         assert!(Config::from_json_str(r#"{"bench_db":9}"#).is_err());
+    }
+
+    #[test]
+    fn train_stream_keys_roundtrip_and_validate() {
+        let cfg = Config::from_json_str(
+            r#"{"train_stream":true,"recompute_policy":"recompute"}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.train_stream, Some(true));
+        assert_eq!(cfg.recompute_policy.as_deref(), Some("recompute"));
+        let back = Config::from_json_str(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(back.train_stream, Some(true), "set keys survive the roundtrip");
+        assert_eq!(back.recompute_policy, cfg.recompute_policy);
+        // false is distinct from unset and also roundtrips.
+        let off = Config::from_json_str(r#"{"train_stream":false}"#).unwrap();
+        assert_eq!(off.train_stream, Some(false));
+        let off_back = Config::from_json_str(&off.to_json().to_string()).unwrap();
+        assert_eq!(off_back.train_stream, Some(false));
+        // Unset stays unset (the CLI then uses the artifact path / auto).
+        let unset = Config::from_json_str("{}").unwrap();
+        assert_eq!((unset.train_stream, unset.recompute_policy.clone()), (None, None));
+        let unset_back = Config::from_json_str(&unset.to_json().to_string()).unwrap();
+        assert_eq!(unset_back.train_stream, None);
+        assert_eq!(unset_back.recompute_policy, None);
+        // All three policies are accepted; anything else fails at load time.
+        for p in ["reload", "recompute", "auto"] {
+            let text = format!("{{\"recompute_policy\":{p:?}}}");
+            assert!(Config::from_json_str(&text).is_ok(), "policy {p}");
+        }
+        assert!(Config::from_json_str(r#"{"recompute_policy":"fast"}"#).is_err());
+        assert!(Config::from_json_str(r#"{"recompute_policy":3}"#).is_err());
+        assert!(Config::from_json_str(r#"{"train_stream":1}"#).is_err());
+        assert!(Config::from_json_str(r#"{"train_stream":"yes"}"#).is_err());
     }
 
     #[test]

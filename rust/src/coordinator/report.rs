@@ -204,6 +204,45 @@ pub fn bench_trajectory_md(stats: &[crate::benchdb::MetricStats], runs: usize) -
     out
 }
 
+/// Cross-commit trend lines (`bench report`) as a markdown table: one
+/// row per gated `(scenario, metric)` series showing the last few runs
+/// oldest → latest and the latest value's delta vs the previous commit.
+/// Empty when the store holds no gated series yet.
+pub fn bench_trend_md(trends: &[crate::benchdb::TrendLine]) -> String {
+    if trends.is_empty() {
+        return String::new();
+    }
+    // Bound each cell to the newest runs so wide trajectories stay
+    // readable; the aggregate table above already covers the full span.
+    const TREND_POINTS: usize = 6;
+    let mut out = String::from("\nCross-commit trend (gated metrics):\n\n");
+    out.push_str(
+        "| Scenario | Metric | Trend (oldest → latest) | Latest | Δ vs prev |\n|---|---|---|---|---|\n",
+    );
+    for t in trends {
+        let tail = &t.points[t.points.len().saturating_sub(TREND_POINTS)..];
+        let cells: Vec<String> = tail.iter().map(|p| format!("{:.4}", p.value)).collect();
+        let prefix = if t.points.len() > tail.len() { "… " } else { "" };
+        let latest = tail.last().expect("series has at least one point");
+        let delta = match latest.delta_pct {
+            Some(d) => format!("{d:+.2}%"),
+            None => "-".to_string(), // first run, or a zero previous value
+        };
+        let _ = writeln!(
+            out,
+            "| {} | {} | {}{} | {:.4} {} | {} |",
+            t.scenario,
+            t.metric,
+            prefix,
+            cells.join(" → "),
+            latest.value,
+            t.unit,
+            delta,
+        );
+    }
+    out
+}
+
 /// Gate verdict (`bench gate`) as a markdown table: one row per gated
 /// comparison with the baseline median, the newest run's value, and
 /// the relative change (positive = slower).
@@ -311,6 +350,42 @@ mod tests {
         assert!(table.contains("commit abc123"), "{table}");
         assert!(table.contains("| +50.00% | FAIL |"), "{table}");
         assert!(table.contains("1 gated metric(s) skipped"), "{table}");
+    }
+
+    #[test]
+    fn bench_trend_table_renders_and_truncates() {
+        use crate::benchdb::{TrendLine, TrendPoint};
+        assert_eq!(bench_trend_md(&[]), "", "no gated series -> no table");
+        // Eight runs: the cell shows only the newest six, with an
+        // ellipsis marking the truncation, and the latest delta rendered.
+        let points: Vec<TrendPoint> = (0..8)
+            .map(|i| TrendPoint {
+                run: (i as u64, format!("c{i}")),
+                value: 100.0 + i as f64,
+                delta_pct: (i > 0).then(|| 100.0 / (99.0 + i as f64)),
+            })
+            .collect();
+        let trends = vec![TrendLine {
+            scenario: "train_stream".into(),
+            metric: "ns_per_step".into(),
+            unit: "ns".into(),
+            points,
+        }];
+        let table = bench_trend_md(&trends);
+        assert!(table.contains("| train_stream | ns_per_step |"), "{table}");
+        assert!(table.contains("… 102.0000 → "), "truncated to the newest runs: {table}");
+        assert!(!table.contains("101.0000 →"), "older points dropped from the cell: {table}");
+        assert!(table.contains("107.0000 ns"), "{table}");
+        assert!(table.contains("+0.94%"), "latest delta vs previous commit: {table}");
+        // A single-point series renders with no delta (nothing previous).
+        let one = vec![TrendLine {
+            scenario: "s".into(),
+            metric: "p99_s".into(),
+            unit: "s".into(),
+            points: vec![TrendPoint { run: (1, "a".into()), value: 0.5, delta_pct: None }],
+        }];
+        let table = bench_trend_md(&one);
+        assert!(table.contains("| 0.5000 s | - |"), "{table}");
     }
 
     #[test]

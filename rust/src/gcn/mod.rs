@@ -16,13 +16,18 @@
 //!   queries, with admission control against the [`GpuMem`](crate::memsim::GpuMem)
 //!   ledger and open-loop latency reporting;
 //! * [`train`] — the e2e training driver looping the `gcn2_train_step`
-//!   artifact (loss curve in EXPERIMENTS.md).
+//!   artifact (loss curve in EXPERIMENTS.md);
+//! * [`train_stream`] — out-of-core training end to end: the streamed
+//!   backward pass reversing the concatenated RoBW plan, gradient panels
+//!   through the tiered store, and the recompute-vs-reload policy for
+//!   aggregated inputs, with the dense CPU path as its bitwise oracle.
 
 pub mod model;
 pub mod oocgcn;
 pub mod pipeline;
 pub mod serve;
 pub mod train;
+pub mod train_stream;
 
 pub use model::Gcn2Ref;
 pub use oocgcn::{LayerReport, OocGcnLayer, StagingBacking, StagingConfig};
@@ -32,3 +37,4 @@ pub use serve::{
     TenantQuery,
 };
 pub use train::Trainer;
+pub use train_stream::{RecomputePolicy, StepReport, StreamedTrainer, TrainStreamConfig};

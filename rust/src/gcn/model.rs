@@ -1,5 +1,6 @@
 //! Pure-rust reference GCN (the CPU oracle for the accelerator path).
 
+use crate::runtime::pool::Pool;
 use crate::sparse::spmm::{spmm, Dense};
 use crate::sparse::Csr;
 use crate::util::rng::Pcg;
@@ -82,6 +83,101 @@ pub fn softmax_xent(logits: &Dense, y: &[i32]) -> f64 {
     total / logits.nrows as f64
 }
 
+/// Mean softmax cross-entropy *and* its gradient w.r.t. the logits:
+/// `grad[i][c] = (softmax(row_i)[c] - [c == y_i]) / nrows`.
+///
+/// The loss arithmetic is exactly [`softmax_xent`]'s, operation for
+/// operation (f64 shifted-exp sum, same fold for the row max), so a
+/// trainer that reports this loss is bitwise comparable to one that
+/// calls `softmax_xent` on the same logits. Probabilities are formed in
+/// f64 from the same shifted exps and cast to f32 at the end.
+pub fn softmax_xent_grad(logits: &Dense, y: &[i32]) -> (f64, Dense) {
+    assert_eq!(logits.nrows, y.len());
+    let n = logits.nrows;
+    let mut grad = Dense::zeros(n, logits.ncols);
+    let mut total = 0f64;
+    for i in 0..n {
+        let row = logits.row(i);
+        let maxv = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let sum: f64 = row.iter().map(|&v| ((v - maxv) as f64).exp()).sum();
+        let logz: f64 = sum.ln() + maxv as f64;
+        total += logz - row[y[i] as usize] as f64;
+        let grow = &mut grad.data[i * logits.ncols..(i + 1) * logits.ncols];
+        for (g, &v) in grow.iter_mut().zip(row.iter()) {
+            *g = ((((v - maxv) as f64).exp() / sum) / n as f64) as f32;
+        }
+        grow[y[i] as usize] -= 1.0 / n as f32;
+    }
+    (total / n as f64, grad)
+}
+
+/// `dw += aᵀ · dz` for one row range: `a` is `rows × f` and `dz` is
+/// `rows × h`, both row-major slices; `dw` is the `f × h` weight-gradient
+/// accumulator. The row loop is outermost and ascending, so accumulating
+/// segment-by-segment over ascending row ranges produces the identical
+/// f32 addition sequence per `dw` element as one whole-matrix call — the
+/// property that makes the recompute policy, the reload policy, and the
+/// dense oracle bitwise interchangeable. Parallel over `dw` rows (each
+/// input column `i` owns a disjoint `dw` row), deterministically.
+pub fn add_at_b(dw: &mut Dense, a: &[f32], dz: &[f32], rows: usize, pool: &Pool) {
+    let (f, h) = (dw.nrows, dw.ncols);
+    assert_eq!(a.len(), rows * f, "operand a shape mismatch");
+    assert_eq!(dz.len(), rows * h, "operand dz shape mismatch");
+    pool.for_each_row_chunk(&mut dw.data, h, |range, chunk| {
+        for r in 0..rows {
+            let arow = &a[r * f..(r + 1) * f];
+            let zrow = &dz[r * h..(r + 1) * h];
+            for i in range.clone() {
+                let av = arow[i];
+                if av == 0.0 {
+                    continue;
+                }
+                let drow = &mut chunk[(i - range.start) * h..(i - range.start + 1) * h];
+                for (d, &z) in drow.iter_mut().zip(zrow.iter()) {
+                    *d += av * z;
+                }
+            }
+        }
+    });
+}
+
+/// `out = dz · wᵀ`: `dz` is `n × h`, `w` is `f × h`, `out` holds `n × f`
+/// row-major and is overwritten. Each output element is one ascending dot
+/// product, so any row partitioning is bitwise identical to the serial
+/// loop. This is the backward combine (dAgg from dZ) of the streamed
+/// trainer.
+pub fn matmul_bt_into(dz: &Dense, w: &Dense, pool: &Pool, out: &mut [f32]) {
+    let (n, h, f) = (dz.nrows, dz.ncols, w.nrows);
+    assert_eq!(w.ncols, h, "inner dimension mismatch");
+    assert_eq!(out.len(), n * f, "destination shape mismatch");
+    pool.for_each_row_chunk(out, f, |range, chunk| {
+        for (local, r) in range.clone().enumerate() {
+            let zrow = &dz.data[r * h..(r + 1) * h];
+            let orow = &mut chunk[local * f..(local + 1) * f];
+            for (i, o) in orow.iter_mut().enumerate() {
+                let wrow = &w.data[i * h..(i + 1) * h];
+                let mut acc = 0f32;
+                for (&z, &wv) in zrow.iter().zip(wrow.iter()) {
+                    acc += z * wv;
+                }
+                *o = acc;
+            }
+        }
+    });
+}
+
+/// Column sums of `dz` into `out` (the bias gradient), rows ascending —
+/// serial on purpose: the reduction order *is* the contract.
+pub fn column_sums_into(dz: &Dense, out: &mut [f32]) {
+    assert_eq!(out.len(), dz.ncols, "destination shape mismatch");
+    out.fill(0.0);
+    for r in 0..dz.nrows {
+        for (o, &z) in out.iter_mut().zip(dz.row(r).iter()) {
+            *o += z;
+        }
+    }
+}
+
 /// Classification accuracy of logits vs labels.
 pub fn accuracy(logits: &Dense, y: &[i32]) -> f64 {
     let mut hit = 0usize;
@@ -144,6 +240,82 @@ mod tests {
         assert_eq!(accuracy(&logits, &y), 1.0);
         let wrong: Vec<i32> = (0..4).map(|i| ((i + 1) % 2) as i32).collect();
         assert_eq!(accuracy(&logits, &wrong), 0.0);
+    }
+
+    #[test]
+    fn softmax_xent_grad_loss_is_bitwise_softmax_xent() {
+        let mut rng = Pcg::seed(5);
+        let logits =
+            Dense::from_vec(17, 5, (0..17 * 5).map(|_| rng.normal() as f32).collect());
+        let y: Vec<i32> = (0..17).map(|i| (i % 5) as i32).collect();
+        let (loss, grad) = softmax_xent_grad(&logits, &y);
+        assert_eq!(loss.to_bits(), softmax_xent(&logits, &y).to_bits());
+        // Gradient rows sum to ~0 (softmax probs sum to 1, one-hot to 1).
+        for i in 0..17 {
+            let s: f64 = grad.row(i).iter().map(|&v| v as f64).sum();
+            assert!(s.abs() < 1e-6, "row {i} sums to {s}");
+        }
+        // Central differences validate the direction (f64 loss, f32 logits).
+        let eps = 1e-3f32;
+        for (i, j) in [(0usize, 0usize), (3, 2), (16, 4)] {
+            let mut up = logits.clone();
+            *up.at_mut(i, j) += eps;
+            let mut dn = logits.clone();
+            *dn.at_mut(i, j) -= eps;
+            let fd = (softmax_xent(&up, &y) - softmax_xent(&dn, &y)) / (2.0 * eps as f64);
+            let g = grad.at(i, j) as f64;
+            assert!((fd - g).abs() < 1e-4, "({i},{j}): fd {fd} vs grad {g}");
+        }
+    }
+
+    #[test]
+    fn add_at_b_segment_accumulation_is_bitwise_whole() {
+        // dW accumulated segment-by-segment over ascending row ranges must
+        // be byte-identical to one whole-matrix call at any thread count —
+        // the contract the recompute policy's per-segment dW rests on.
+        let mut rng = Pcg::seed(6);
+        let (rows, f, h) = (37usize, 6usize, 4usize);
+        let a: Vec<f32> = (0..rows * f).map(|_| rng.normal() as f32).collect();
+        let dz: Vec<f32> = (0..rows * h).map(|_| rng.normal() as f32).collect();
+        let mut whole = Dense::zeros(f, h);
+        add_at_b(&mut whole, &a, &dz, rows, &Pool::serial());
+        for threads in [1usize, 2, 8] {
+            let pool = Pool::new(threads);
+            let mut seg = Dense::zeros(f, h);
+            for (lo, hi) in [(0usize, 11usize), (11, 11), (11, 30), (30, 37)] {
+                add_at_b(&mut seg, &a[lo * f..hi * f], &dz[lo * h..hi * h], hi - lo, &pool);
+            }
+            assert_eq!(seg, whole, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn matmul_bt_and_column_sums_match_naive() {
+        let mut rng = Pcg::seed(7);
+        let (n, h, f) = (13usize, 5usize, 7usize);
+        let dz = Dense::from_vec(n, h, (0..n * h).map(|_| rng.normal() as f32).collect());
+        let w = Dense::from_vec(f, h, (0..f * h).map(|_| rng.normal() as f32).collect());
+        let mut naive = vec![0f32; n * f];
+        for r in 0..n {
+            for i in 0..f {
+                let mut acc = 0f32;
+                for j in 0..h {
+                    acc += dz.at(r, j) * w.at(i, j);
+                }
+                naive[r * f + i] = acc;
+            }
+        }
+        for threads in [1usize, 4] {
+            let mut out = vec![f32::NAN; n * f];
+            matmul_bt_into(&dz, &w, &Pool::new(threads), &mut out);
+            assert_eq!(out, naive, "threads={threads}");
+        }
+        let mut db = vec![f32::NAN; h];
+        column_sums_into(&dz, &mut db);
+        for j in 0..h {
+            let want: f32 = (0..n).fold(0f32, |acc, r| acc + dz.at(r, j));
+            assert_eq!(db[j], want);
+        }
     }
 
     #[test]

@@ -312,7 +312,9 @@ pub(crate) fn forward_pipelined_staged(
 }
 
 /// Input feature width per layer, validating the chain starts at `f0`.
-fn layer_widths(layers: &[OocGcnLayer], f0: usize) -> Result<Vec<usize>> {
+/// Crate-visible: `gcn::train_stream` validates the same chain before a
+/// streamed training step and sizes its backward scratch from it.
+pub(crate) fn layer_widths(layers: &[OocGcnLayer], f0: usize) -> Result<Vec<usize>> {
     let mut widths = Vec::with_capacity(layers.len());
     let mut w = f0;
     for (l, layer) in layers.iter().enumerate() {
@@ -405,8 +407,12 @@ impl XCur<'_> {
 /// The ledger ends balanced on success and on every error path: stranded
 /// segments *and* panel reservations are reconciled after the producer has
 /// joined, and aggregation/input slabs retire to the recycle pool.
+///
+/// Crate-visible so `gcn::train_stream` can drive the same engine with a
+/// `finish` that additionally spills each layer's aggregated input for the
+/// backward pass's reload policy.
 #[allow(clippy::too_many_arguments)]
-fn forward_pipelined<Ctx>(
+pub(crate) fn forward_pipelined<Ctx>(
     layers: &[OocGcnLayer],
     ctx: &mut Ctx,
     a_hat: &Csr,

@@ -14,6 +14,14 @@ use anyhow::{anyhow, Result};
 /// Truncate or pad `adjacency` to an `n × n` square, dropping entries in
 /// columns `>= n`.
 ///
+/// Padding contract: rows `>= adjacency.nrows` come out *empty* —
+/// isolated zero-degree nodes. [`normalize_adjacency`] then anchors every
+/// such node with a self-loop-only row (Â's `D^-1/2 (A+I) D^-1/2` adds the
+/// identity before normalizing), so a padded node's features pass through
+/// aggregation unmixed and training on a padded graph is well-defined —
+/// the padded case `trainer_reduces_loss_on_kmer_graph` pins. Entries in
+/// columns `>= n` of surviving rows are dropped, not wrapped.
+///
 /// Rebuild is fully pre-sized: columns are strictly ascending within each
 /// row, so the survivors of a truncated row are exactly a prefix
 /// (`partition_point`), a counting pass sizes all three sections up
@@ -159,13 +167,19 @@ impl Trainer {
     }
 
     /// Run `steps` SGD steps, returning (first, best, last) losses.
+    /// `steps == 0` is a typed error: there would be no losses to report
+    /// (the `first`/`last` unwraps below used to panic on an empty curve;
+    /// the streamed trainer shares this guard).
     pub fn train(&mut self, exec: &mut Executor, steps: usize, lr: f32) -> Result<(f32, f32, f32)> {
+        if steps == 0 {
+            return Err(anyhow!("training needs at least one step"));
+        }
         for _ in 0..steps {
             self.step(exec, lr)?;
         }
-        let first = *self.losses.first().unwrap();
+        let first = *self.losses.first().expect("at least one step ran");
         let best = self.losses.iter().copied().fold(f32::INFINITY, f32::min);
-        let last = *self.losses.last().unwrap();
+        let last = *self.losses.last().expect("at least one step ran");
         Ok((first, best, last))
     }
 }
@@ -220,9 +234,19 @@ mod tests {
         };
         let mut exec = Executor::new(&dir).unwrap();
         let mut rng = Pcg::seed(3);
-        let g = crate::graphgen::kmer::generate(&mut rng, 1024, 3.2);
+        // Exact-size graph plus a padded one (`nodes < n`: square_to_n
+        // fills the tail with isolated nodes that normalize_adjacency
+        // anchors via self-loops — training must still converge).
+        for nodes in [1024usize, 700] {
+            let g = crate::graphgen::kmer::generate(&mut rng, nodes, 3.2);
+            let mut tr = Trainer::new(&exec, &g, 42).unwrap();
+            let (first, _best, last) = tr.train(&mut exec, 25, 2.0).unwrap();
+            assert!(last < first, "nodes={nodes}: loss must decrease: {first} -> {last}");
+        }
+        // steps == 0 is a typed error, not a panic on the empty loss curve.
+        let g = crate::graphgen::kmer::generate(&mut rng, 256, 3.2);
         let mut tr = Trainer::new(&exec, &g, 42).unwrap();
-        let (first, _best, last) = tr.train(&mut exec, 25, 2.0).unwrap();
-        assert!(last < first, "loss must decrease: {first} -> {last}");
+        let err = tr.train(&mut exec, 0, 2.0).unwrap_err();
+        assert!(err.to_string().contains("at least one step"), "{err}");
     }
 }

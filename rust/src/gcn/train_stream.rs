@@ -1,0 +1,1296 @@
+//! Streamed out-of-core training: the backward pass as a second traversal
+//! of the concatenated RoBW plan, run *in reverse* through the same
+//! prefetch pipeline as the forward — AIRES's Phase II/III dual-way
+//! transfer idea applied to gradients.
+//!
+//! The forward pass runs through [`forward_pipelined`] with a panel store
+//! attached, so every intermediate activation H_l spills to the tiered
+//! store instead of staying resident. The backward pass then walks the
+//! layers top-down; for layer `l` (input width `f`, output width `h`,
+//! aggregated input `agg_l = Â·X_l`, output `H_l = act(agg_l·W_l + b_l)`):
+//!
+//! * `dZ_l` — the upstream gradient: the softmax-xent gradient at the top
+//!   layer, otherwise the dX panel the layer above spilled — masked by
+//!   `H_l > 0` when the layer applies ReLU;
+//! * `dW_l = agg_lᵀ · dZ_l`, `db_l = colsum(dZ_l)`;
+//! * `dX_l = Âᵀ · (dZ_l · W_lᵀ)` (the scatter-free
+//!   [`spmm_transpose_par_into`] form), spilled through the panel store as
+//!   the next layer's `dZ` — gradients never accumulate in host RAM across
+//!   layers, just as activations never do in the forward.
+//!
+//! `dW_l` needs `agg_l`, which the forward consumed. Two policies, the
+//! **recompute-vs-reload** choice ([`RecomputePolicy`]):
+//!
+//! * **Reload** — the forward's finish hook spills each `agg_l` to the
+//!   panel store; the backward reads it back at the layer close and does
+//!   one whole-matrix `add_at_b`. No backward SpMM work, one extra panel
+//!   of I/O per layer. The right choice when staging is cheap.
+//! * **Recompute** — the backward re-streams layer `l`'s RoBW segments and
+//!   recomputes each segment's `agg` rows from `Â_seg · X_l` into a
+//!   bounded scratch, accumulating `dW` segment-wise. No `agg` spill or
+//!   reload I/O at all — the choice when I/O is the bottleneck.
+//! * **Auto** resolves deterministically from the staging configuration:
+//!   a charged I/O cost model marks staging as the bottleneck →
+//!   Recompute; otherwise staging is cheap → Reload.
+//!
+//! Both policies are **byte-identical** to the dense CPU oracle
+//! ([`dense_gradients`] / [`dense_step_oracle`]) at every prefetch depth,
+//! thread count, backing, and recycle mode (`rust/tests/differential.rs`):
+//! segment-wise `dW` accumulation visits rows in the same ascending order
+//! as the whole-matrix product, the owner-scans-all transpose kernel gives
+//! every `dX` element its additions in the same global row order as the
+//! serial scatter, recomputed `agg` rows are bitwise the forward's rows
+//! (same segment, same input panel, per-row-independent kernel), and panel
+//! round-trips preserve raw f32 bit patterns. Loss arithmetic is shared
+//! ([`softmax_xent_grad`] is operation-for-operation the
+//! [`softmax_xent`](crate::gcn::model::softmax_xent) sum), as is the SGD
+//! update ([`sgd_apply`]), so losses *and* parameters stay bitwise equal
+//! to the oracle across steps.
+//!
+//! Backward overlap mirrors the forward: while the calling thread combines
+//! layer `l`'s gradients (its `add_at_b` / transpose scatter / SGD apply),
+//! the producer is already staging layer `l−1`'s segments — layer L's
+//! backward overlaps layer L−1's gradient combine, under one
+//! [`run_recycling`](crate::runtime::prefetch::Prefetch::run_recycling)
+//! pipeline whose scratch buffers flow back through the recycle pool
+//! (steady-state constant-alloc, `rust/tests/alloc_free.rs`).
+
+use crate::gcn::model::{
+    add_at_b, column_sums_into, dense_affine, matmul_bt_into, softmax_xent, softmax_xent_grad,
+};
+use crate::gcn::oocgcn::{OocGcnLayer, StagingBacking, StagingConfig};
+use crate::gcn::pipeline::{forward_pipelined, layer_widths, PipelineConfig, PipelineReport};
+use crate::memsim::{GpuMem, Op, StagingMeter};
+use crate::partition::robw::{materialize_into, robw_partition_par, RobwSegment};
+use crate::runtime::pool::Pool;
+use crate::runtime::recycle::BufferPool;
+use crate::runtime::segstore::{PanelRead, PanelStore, SegmentRead};
+use crate::sparse::spmm::{spmm, spmm_par_into, spmm_transpose, spmm_transpose_par_into, Dense};
+use crate::sparse::Csr;
+use crate::util::rng::Pcg;
+use anyhow::{anyhow, bail, Result};
+use std::str::FromStr;
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+/// How the backward pass obtains each layer's aggregated input `agg_l`
+/// (needed for `dW_l = agg_lᵀ·dZ_l`) after the forward consumed it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecomputePolicy {
+    /// Spill every `agg_l` during the forward and reload it at the
+    /// layer's backward close — cheap when staging is cheap.
+    Reload,
+    /// Recompute `agg` rows segment-by-segment from the spilled input
+    /// activations — no `agg` I/O at all, for I/O-bound passes.
+    Recompute,
+    /// Resolve from the staging configuration: a charged I/O cost model
+    /// means staging is the bottleneck → [`Self::Recompute`]; otherwise
+    /// staging is cheap → [`Self::Reload`]. Deterministic — the same
+    /// configuration always resolves the same way.
+    Auto,
+}
+
+impl RecomputePolicy {
+    /// Resolve [`Self::Auto`] against a staging configuration; the
+    /// explicit policies resolve to themselves.
+    pub fn resolve(self, staging: &StagingConfig) -> RecomputePolicy {
+        match self {
+            RecomputePolicy::Auto => {
+                if staging.io_cost.is_some() {
+                    RecomputePolicy::Recompute
+                } else {
+                    RecomputePolicy::Reload
+                }
+            }
+            explicit => explicit,
+        }
+    }
+
+    /// CLI-facing name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RecomputePolicy::Reload => "reload",
+            RecomputePolicy::Recompute => "recompute",
+            RecomputePolicy::Auto => "auto",
+        }
+    }
+}
+
+impl FromStr for RecomputePolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<RecomputePolicy> {
+        match s {
+            "reload" => Ok(RecomputePolicy::Reload),
+            "recompute" => Ok(RecomputePolicy::Recompute),
+            "auto" => Ok(RecomputePolicy::Auto),
+            other => bail!("unknown recompute policy {other:?} (reload|recompute|auto)"),
+        }
+    }
+}
+
+impl std::fmt::Display for RecomputePolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Configuration of one streamed training step.
+#[derive(Clone)]
+pub struct TrainStreamConfig {
+    /// Phase II staging (depth, backing, I/O cost, recycle pool), shared
+    /// by the forward and backward traversals.
+    pub staging: StagingConfig,
+    /// The tiered panel store activations, aggregated inputs, and
+    /// gradient panels stream through. Always required — streamed
+    /// training is out-of-core by construction.
+    pub panels: Arc<PanelStore>,
+    /// Recompute-vs-reload policy for aggregated inputs.
+    pub policy: RecomputePolicy,
+}
+
+impl TrainStreamConfig {
+    /// Build with the [`RecomputePolicy::Auto`] policy.
+    pub fn new(staging: StagingConfig, panels: Arc<PanelStore>) -> TrainStreamConfig {
+        TrainStreamConfig { staging, panels, policy: RecomputePolicy::Auto }
+    }
+
+    /// The same configuration with an explicit policy.
+    pub fn with_policy(mut self, policy: RecomputePolicy) -> TrainStreamConfig {
+        self.policy = policy;
+        self
+    }
+}
+
+/// Panel-store slot layout of one streamed step for an `nl`-layer model.
+/// Activation slots `0..nl-1` are written by the forward engine's own
+/// panel spilling (layer `l`'s output H_l at slot `l`, never the last
+/// layer's); aggregated inputs live above them; one rotating slot carries
+/// the dX hand-off between adjacent backward layers (safe to reuse
+/// because backward consumption is strictly layer-ordered).
+fn agg_slot(nl: usize, l: usize) -> usize {
+    nl + l
+}
+
+fn grad_slot(nl: usize) -> usize {
+    2 * nl
+}
+
+/// Report of one streamed training step.
+#[derive(Debug, Clone)]
+pub struct StepReport {
+    /// Softmax-xent loss of the step (before the SGD update) — bitwise
+    /// the dense oracle's loss.
+    pub loss: f32,
+    /// The policy the step actually ran ([`RecomputePolicy::Auto`]
+    /// resolved).
+    pub policy: RecomputePolicy,
+    /// The forward traversal's pipeline report.
+    pub forward: PipelineReport,
+    /// Segments the backward traversal streamed (layer 0 streams none
+    /// under [`RecomputePolicy::Reload`] — its `dW` is one whole-matrix
+    /// product off the reloaded panel).
+    pub backward_segments: usize,
+    /// Bytes of aggregated-input panels spilled during the forward
+    /// (Reload only).
+    pub agg_spill_bytes: u64,
+    /// Bytes of aggregated-input panels read back from disk (Reload only;
+    /// host-tier hits add nothing).
+    pub agg_read_bytes: u64,
+    /// Bytes of gradient (dX) panels spilled between backward layers.
+    pub grad_spill_bytes: u64,
+    /// Bytes of gradient panels read back from disk.
+    pub grad_read_bytes: u64,
+    /// Bytes of activation panels read back from disk for ReLU masks and
+    /// recompute inputs.
+    pub act_read_bytes: u64,
+    /// Backward panel reads served by the panel store's host cache.
+    pub backward_panel_hits: usize,
+    /// Backward panel reads that went to disk.
+    pub backward_panel_misses: usize,
+    /// Measured adjacency bytes the backward traversal read from the NVMe
+    /// tier (disk backing only).
+    pub backward_disk_bytes: u64,
+    /// Backward segment reads served by the segment store's host cache.
+    pub backward_cache_hits: usize,
+    /// Backward segment reads that went to disk.
+    pub backward_cache_misses: usize,
+    /// Ledger high-water mark over the whole step (forward + backward).
+    pub peak_gpu_bytes: u64,
+}
+
+/// Apply one SGD update in place: `W -= lr·dW`, `b -= lr·db`. Shared by
+/// the streamed trainer and the dense oracle so parameters stay bitwise
+/// equal between them.
+pub fn sgd_apply(layer: &mut OocGcnLayer, dw: &Dense, db: &[f32], lr: f32) {
+    assert_eq!((layer.w.nrows, layer.w.ncols), (dw.nrows, dw.ncols), "dW shape mismatch");
+    assert_eq!(layer.b.len(), db.len(), "db shape mismatch");
+    for (w, &g) in layer.w.data.iter_mut().zip(dw.data.iter()) {
+        *w -= lr * g;
+    }
+    for (b, &g) in layer.b.iter_mut().zip(db.iter()) {
+        *b -= lr * g;
+    }
+}
+
+/// Zero `dz` wherever the layer's forward output `h` is non-positive —
+/// the ReLU backward mask (`H > 0 ⇔` pre-activation `> 0`; exact zeros
+/// mask, matching the forward's `max(z, 0)`).
+fn mask_relu(dz: &mut Dense, h: &Dense) {
+    debug_assert_eq!((dz.nrows, dz.ncols), (h.nrows, h.ncols));
+    for (d, &v) in dz.data.iter_mut().zip(h.data.iter()) {
+        if v <= 0.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+/// Learnable synthetic labels for a feature matrix: random projection of
+/// the features, quantile-split into `classes` — the same scheme the
+/// artifact-backed [`Trainer`](crate::gcn::train::Trainer) uses, factored
+/// out so the streamed CLI path can train without artifacts.
+pub fn synthetic_labels(x: &Dense, classes: usize, rng: &mut Pcg) -> Vec<i32> {
+    let (n, f0) = (x.nrows, x.ncols);
+    assert!(classes > 0, "need at least one class");
+    if n == 0 {
+        return Vec::new();
+    }
+    let proj: Vec<f32> = (0..f0).map(|_| rng.normal() as f32).collect();
+    let scores: Vec<f32> = (0..n)
+        .map(|i| x.row(i).iter().zip(proj.iter()).map(|(&a, &b)| a * b).sum())
+        .collect();
+    let mut sorted = scores.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    scores
+        .iter()
+        .map(|s| {
+            let rank = sorted.partition_point(|&v| v < *s);
+            ((rank * classes / n).min(classes - 1)) as i32
+        })
+        .collect()
+}
+
+/// Poison-tolerant ledger lock (same rationale as the forward engine's:
+/// surface the original worker panic, not a secondary `PoisonError`).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Ledger state shared between the backward staging producer and the
+/// consumer: staged segment bytes, the current layer's working-set bytes,
+/// and the traversal's measured-I/O meter.
+struct BackLedger<'a> {
+    mem: &'a mut GpuMem,
+    /// Staged segment bytes not yet freed by a consume.
+    staged: u64,
+    /// Backward working-set bytes charged at layer opens, freed at closes.
+    work: u64,
+    meter: StagingMeter,
+}
+
+/// The backward pass's view of layer `l`'s input activations X_l
+/// (recompute policy only).
+enum XInput<'a> {
+    /// The caller's features (layer 0).
+    Borrowed(&'a Dense),
+    /// A spilled activation panel read back owned.
+    Owned(Dense),
+    /// A spilled activation panel served shared from the host tier.
+    Shared(Arc<Dense>),
+}
+
+impl XInput<'_> {
+    fn panel(&self) -> &Dense {
+        match self {
+            XInput::Borrowed(p) => p,
+            XInput::Owned(p) => p,
+            XInput::Shared(p) => p,
+        }
+    }
+
+    fn retire(self, recycle: Option<&BufferPool>) {
+        if let XInput::Owned(p) = self {
+            if let Some(rp) = recycle {
+                rp.put_panel(p.data);
+            }
+        }
+    }
+}
+
+/// Consumer-side state of one backward traversal. A struct (rather than
+/// captured locals) so `open_layer`/`segment`/`close_layer` can borrow
+/// disjoint fields without fighting the closure borrow checker, and so an
+/// abort can [`Self::reclaim`] every live slab in one place.
+struct BackwardPass<'a> {
+    layers: &'a mut [OocGcnLayer],
+    plans: &'a [Vec<RobwSegment>],
+    widths: &'a [usize],
+    n: usize,
+    x0: &'a Dense,
+    logits: &'a Dense,
+    /// The softmax-xent gradient, taken at the top layer's open.
+    grad_out: Option<Dense>,
+    panels: &'a PanelStore,
+    recycle: Option<&'a BufferPool>,
+    pool: &'a Pool,
+    recompute: bool,
+    lr: f32,
+    // ---- live per-layer state (Some between open and close).
+    dz: Option<Dense>,
+    dagg: Option<Vec<f32>>,
+    dx: Option<Dense>,
+    xl: Option<XInput<'a>>,
+    scratch: Option<Vec<f32>>,
+    dw: Option<Dense>,
+    /// Working-set bytes currently charged on the ledger for this layer.
+    work: u64,
+    // ---- traversal counters.
+    grad_spill_bytes: u64,
+    grad_read_bytes: u64,
+    agg_read_bytes: u64,
+    act_read_bytes: u64,
+    panel_hits: usize,
+    panel_misses: usize,
+}
+
+impl<'a> BackwardPass<'a> {
+    fn zeroed(&self, len: usize) -> Vec<f32> {
+        match self.recycle {
+            Some(rp) => rp.take_panel(len),
+            None => vec![0f32; len],
+        }
+    }
+
+    fn retire_vec(&self, v: Vec<f32>) {
+        if let Some(rp) = self.recycle {
+            rp.put_panel(v);
+        }
+    }
+
+    fn retire_read(&self, pr: PanelRead) {
+        if let PanelRead::Owned(p) = pr {
+            if let Some(rp) = self.recycle {
+                rp.put_panel(p.data);
+            }
+        }
+    }
+
+    /// Turn a panel read into an owned, mutable `Dense` (the dZ panel is
+    /// masked and consumed in place; a cache-shared panel is copied into
+    /// recycled scratch rather than mutated under the host tier).
+    fn owned_panel(&self, pr: PanelRead) -> Dense {
+        match pr {
+            PanelRead::Owned(p) => p,
+            PanelRead::Shared(p) => {
+                let mut v = match self.recycle {
+                    Some(rp) => rp.take_panel_scratch(p.data.len()),
+                    None => Vec::with_capacity(p.data.len()),
+                };
+                v.extend_from_slice(&p.data);
+                Dense::from_vec(p.nrows, p.ncols, v)
+            }
+        }
+    }
+
+    fn note_panel(&mut self, cache_hit: bool) {
+        if cache_hit {
+            self.panel_hits += 1;
+        } else {
+            self.panel_misses += 1;
+        }
+    }
+
+    /// Layer open: charge the layer's backward working set, materialize
+    /// dZ (softmax gradient at the top, spilled dX below), apply the ReLU
+    /// mask, and precompute `dAgg = dZ·Wᵀ` plus the recompute-policy
+    /// residents.
+    fn open_layer(&mut self, l: usize, ledger: &Mutex<BackLedger>) -> Result<()> {
+        let nl = self.layers.len();
+        let n = self.n;
+        let (f, h) = (self.widths[l], self.layers[l].w.ncols);
+        let max_seg_rows = self.plans[l].iter().map(|s| s.row_hi - s.row_lo).max().unwrap_or(0);
+        // dZ, plus (inner layers) dAgg and the dX accumulator, plus
+        // (recompute) the dW accumulator, the per-segment aggregation
+        // scratch, and the resident input panel.
+        let mut work = (n * h * 4) as u64;
+        if l > 0 {
+            work += 2 * (n * f * 4) as u64;
+        }
+        if self.recompute {
+            work += ((f * h + max_seg_rows * f + n * f) * 4) as u64;
+        }
+        {
+            let mut led = lock(ledger);
+            led.mem
+                .alloc(work, "backward working set")
+                .map_err(|e| anyhow!("backward layer {l}: working set does not fit: {e}"))?;
+            led.work += work;
+        }
+        self.work = work;
+
+        let mut dz = if l + 1 == nl {
+            self.grad_out.take().expect("softmax gradient present at top-layer open")
+        } else {
+            let (pr, origin) =
+                self.panels.read_reusing(grad_slot(nl), self.recycle).map_err(|e| {
+                    anyhow!("backward layer {l}: reading spilled gradient panel: {e}")
+                })?;
+            self.grad_read_bytes += origin.disk_bytes;
+            self.note_panel(origin.cache_hit);
+            self.owned_panel(pr)
+        };
+        debug_assert_eq!((dz.nrows, dz.ncols), (n, h));
+
+        if self.layers[l].relu {
+            if l + 1 == nl {
+                mask_relu(&mut dz, self.logits);
+            } else {
+                // The mask panel is resident only for the mask itself.
+                let mask_bytes = (n * h * 4) as u64;
+                {
+                    let mut led = lock(ledger);
+                    led.mem.alloc(mask_bytes, "relu mask panel").map_err(|e| {
+                        anyhow!("backward layer {l}: mask panel does not fit: {e}")
+                    })?;
+                    led.work += mask_bytes;
+                }
+                self.work += mask_bytes;
+                let (pr, origin) = self.panels.read_reusing(l, self.recycle).map_err(|e| {
+                    anyhow!("backward layer {l}: reading spilled activation panel: {e}")
+                })?;
+                self.act_read_bytes += origin.disk_bytes;
+                self.note_panel(origin.cache_hit);
+                mask_relu(&mut dz, &pr);
+                self.retire_read(pr);
+                {
+                    let mut led = lock(ledger);
+                    led.mem.free(mask_bytes);
+                    led.work -= mask_bytes;
+                }
+                self.work -= mask_bytes;
+            }
+        }
+
+        if l > 0 {
+            let mut dagg = self.zeroed(n * f);
+            matmul_bt_into(&dz, &self.layers[l].w, self.pool, &mut dagg);
+            self.dagg = Some(dagg);
+            self.dx = Some(Dense::from_vec(n, f, self.zeroed(n * f)));
+        }
+        if self.recompute {
+            self.dw = Some(Dense::from_vec(f, h, self.zeroed(f * h)));
+            self.scratch = Some(self.zeroed(max_seg_rows * f));
+            self.xl = Some(if l == 0 {
+                XInput::Borrowed(self.x0)
+            } else {
+                let (pr, origin) =
+                    self.panels.read_reusing(l - 1, self.recycle).map_err(|e| {
+                        anyhow!("backward layer {l}: reading spilled input panel: {e}")
+                    })?;
+                self.act_read_bytes += origin.disk_bytes;
+                self.note_panel(origin.cache_hit);
+                match pr {
+                    PanelRead::Owned(p) => XInput::Owned(p),
+                    PanelRead::Shared(p) => XInput::Shared(p),
+                }
+            });
+        }
+        self.dz = Some(dz);
+        Ok(())
+    }
+
+    /// One streamed backward segment: under recompute, re-derive the
+    /// segment's `agg` rows (bitwise the forward's — same sub-matrix, same
+    /// input panel, per-row-independent kernel) and fold them into `dW`;
+    /// for inner layers, scatter the segment's `dAgg` rows into the `dX`
+    /// accumulator through the deterministic owner-scans-all transpose.
+    fn segment(&mut self, l: usize, i: usize, sub: &Csr) -> Result<()> {
+        let seg = &self.plans[l][i];
+        let (lo, hi) = (seg.row_lo, seg.row_hi);
+        let rows = hi - lo;
+        let f = self.widths[l];
+        let h = self.layers[l].w.ncols;
+        if self.recompute {
+            let scratch = self.scratch.as_mut().expect("recompute scratch live at segment");
+            let xl = self.xl.as_ref().expect("recompute input panel live at segment");
+            spmm_par_into(sub, xl.panel(), self.pool, &mut scratch[..rows * f]);
+            let dz = self.dz.as_ref().expect("dZ live at segment");
+            let dw = self.dw.as_mut().expect("dW accumulator live at segment");
+            add_at_b(dw, &scratch[..rows * f], &dz.data[lo * h..hi * h], rows, self.pool);
+        }
+        if l > 0 {
+            let dagg = self.dagg.as_ref().expect("dAgg live at segment");
+            let dx = self.dx.as_mut().expect("dX accumulator live at segment");
+            spmm_transpose_par_into(sub, &dagg[lo * f..hi * f], f, self.pool, &mut dx.data);
+        }
+        Ok(())
+    }
+
+    /// Layer close: finish `dW` (reloading the spilled aggregated input
+    /// under the reload policy), reduce `db`, apply SGD, spill `dX` as the
+    /// next layer's dZ, and retire every slab to the recycle pool.
+    fn close_layer(&mut self, l: usize, ledger: &Mutex<BackLedger>) -> Result<()> {
+        let nl = self.layers.len();
+        let n = self.n;
+        let (f, h) = (self.widths[l], self.layers[l].w.ncols);
+        let dz = self.dz.take().expect("dZ present at layer close");
+        let dw = if self.recompute {
+            self.dw.take().expect("dW accumulator present at layer close")
+        } else {
+            let agg_bytes = (n * f * 4) as u64;
+            {
+                let mut led = lock(ledger);
+                led.mem.alloc(agg_bytes, "reloaded aggregation panel").map_err(|e| {
+                    anyhow!("backward layer {l}: reloaded panel does not fit: {e}")
+                })?;
+                led.work += agg_bytes;
+            }
+            self.work += agg_bytes;
+            let (pr, origin) =
+                self.panels.read_reusing(agg_slot(nl, l), self.recycle).map_err(|e| {
+                    anyhow!("backward layer {l}: reloading aggregated input: {e}")
+                })?;
+            self.agg_read_bytes += origin.disk_bytes;
+            self.note_panel(origin.cache_hit);
+            let mut dw = Dense::from_vec(f, h, self.zeroed(f * h));
+            // Whole-matrix product: same per-element row order as the
+            // segment-wise accumulation, so both policies match bitwise.
+            add_at_b(&mut dw, &pr.data, &dz.data, n, self.pool);
+            self.retire_read(pr);
+            dw
+        };
+        let mut db = self.zeroed(h);
+        column_sums_into(&dz, &mut db);
+        sgd_apply(&mut self.layers[l], &dw, &db, self.lr);
+        if l > 0 {
+            let dx = self.dx.take().expect("dX accumulator present at layer close");
+            let bytes = self.panels.put(grad_slot(nl), &dx).map_err(|e| {
+                anyhow!("backward layer {l}: spilling gradient panel: {e}")
+            })?;
+            self.grad_spill_bytes += bytes;
+            self.retire_vec(dx.data);
+            if let Some(dagg) = self.dagg.take() {
+                self.retire_vec(dagg);
+            }
+        }
+        self.retire_vec(dz.data);
+        self.retire_vec(dw.data);
+        self.retire_vec(db);
+        if let Some(s) = self.scratch.take() {
+            self.retire_vec(s);
+        }
+        if let Some(x) = self.xl.take() {
+            x.retire(self.recycle);
+        }
+        {
+            let mut led = lock(ledger);
+            led.mem.free(self.work);
+            led.work -= self.work;
+        }
+        self.work = 0;
+        Ok(())
+    }
+
+    /// Retire every live slab — the abort path's cleanup (idempotent; a
+    /// successful traversal has already taken everything).
+    fn reclaim(&mut self) {
+        if let Some(d) = self.dz.take() {
+            self.retire_vec(d.data);
+        }
+        if let Some(v) = self.dagg.take() {
+            self.retire_vec(v);
+        }
+        if let Some(d) = self.dx.take() {
+            self.retire_vec(d.data);
+        }
+        if let Some(d) = self.dw.take() {
+            self.retire_vec(d.data);
+        }
+        if let Some(v) = self.scratch.take() {
+            self.retire_vec(v);
+        }
+        if let Some(x) = self.xl.take() {
+            x.retire(self.recycle);
+        }
+        self.grad_out = None;
+    }
+}
+
+/// Out-of-core trainer: owns the parameter state and streams both
+/// traversals of every step through the tiered stores. The dense-artifact
+/// [`Trainer`](crate::gcn::train::Trainer) is this path's oracle, not a
+/// dependency — no PJRT artifact is touched here.
+pub struct StreamedTrainer {
+    /// The model parameters, updated in place each step.
+    pub layers: Vec<OocGcnLayer>,
+    labels: Vec<i32>,
+    /// Loss per completed step — bitwise the dense oracle's losses.
+    pub losses: Vec<f32>,
+}
+
+impl StreamedTrainer {
+    /// Build a trainer, validating the width chain and the label range.
+    pub fn new(layers: Vec<OocGcnLayer>, labels: Vec<i32>) -> Result<StreamedTrainer> {
+        if layers.is_empty() {
+            bail!("a streamed trainer needs at least one layer");
+        }
+        for (l, w) in layers.windows(2).enumerate() {
+            if w[0].w.ncols != w[1].w.nrows {
+                bail!(
+                    "layer {l} outputs width {} but layer {} expects width {}",
+                    w[0].w.ncols,
+                    l + 1,
+                    w[1].w.nrows
+                );
+            }
+        }
+        let classes = layers.last().expect("non-empty").w.ncols;
+        if let Some(&y) = labels.iter().find(|&&y| y < 0 || y as usize >= classes) {
+            bail!("label {y} out of range for {classes} classes");
+        }
+        Ok(StreamedTrainer { layers, labels, losses: Vec::new() })
+    }
+
+    /// One streamed SGD step: pipelined forward (activations — and, under
+    /// reload, aggregated inputs — spilling through the panel store),
+    /// softmax-xent loss, then the streamed backward traversal in reverse
+    /// layer order. Returns the step's report; the loss is also appended
+    /// to [`Self::losses`].
+    pub fn step(
+        &mut self,
+        a_hat: &Csr,
+        x0: &Dense,
+        mem: &mut GpuMem,
+        pool: &Pool,
+        cfg: &TrainStreamConfig,
+        lr: f32,
+    ) -> Result<StepReport> {
+        let nl = self.layers.len();
+        let n = a_hat.nrows;
+        if n == 0 {
+            bail!("streamed training needs a non-empty graph");
+        }
+        if x0.nrows != n {
+            bail!("features have {} rows but the graph has {n} nodes", x0.nrows);
+        }
+        if self.labels.len() != n {
+            bail!("{} labels for {n} nodes", self.labels.len());
+        }
+        let widths = layer_widths(&self.layers, x0.ncols)?;
+        let resolved = cfg.policy.resolve(&cfg.staging);
+        let recompute = resolved == RecomputePolicy::Recompute;
+        let staging = &cfg.staging;
+        let recycle = staging.recycle.as_deref();
+        let panels: &PanelStore = &cfg.panels;
+
+        // ---- Forward through the shared cross-layer engine. Under the
+        // reload policy the finish hook spills every layer's aggregated
+        // input before the combine.
+        let pcfg =
+            PipelineConfig { staging: staging.clone(), panel_spill: Some(cfg.panels.clone()) };
+        let layers = &self.layers;
+        let mut agg_spill = 0u64;
+        let (logits, forward) = forward_pipelined(
+            layers,
+            &mut agg_spill,
+            a_hat,
+            x0,
+            mem,
+            pool,
+            &pcfg,
+            &mut |_, _, seg, sub, x_l, agg| {
+                spmm_par_into(
+                    sub,
+                    x_l,
+                    pool,
+                    &mut agg.data[seg.row_lo * x_l.ncols..seg.row_hi * x_l.ncols],
+                );
+                Ok(())
+            },
+            &mut |spill: &mut u64, l, agg| {
+                if !recompute {
+                    *spill += panels.put(agg_slot(nl, l), agg).map_err(|e| {
+                        anyhow!("layer {l}: spilling aggregated input: {e}")
+                    })?;
+                }
+                Ok(dense_affine(agg, &layers[l].w, &layers[l].b, layers[l].relu))
+            },
+        )?;
+
+        let (loss64, grad) = softmax_xent_grad(&logits, &self.labels);
+
+        // ---- Backward plans: same memoization-by-budget as the forward
+        // (which already validated any disk manifest against them).
+        let mut plans: Vec<Vec<RobwSegment>> = Vec::with_capacity(nl);
+        for layer in layers {
+            let planned = plans.len();
+            match layers[..planned].iter().position(|p| p.seg_budget == layer.seg_budget) {
+                Some(prev) => {
+                    let plan = plans[prev].clone();
+                    plans.push(plan);
+                }
+                None => plans.push(robw_partition_par(a_hat, layer.seg_budget, pool)),
+            }
+        }
+        // Reverse layer order; under reload, layer 0 streams no segments
+        // (its dW is one whole-matrix product off the reloaded panel) and
+        // runs as the epilogue instead.
+        let mut order: Vec<(usize, usize)> = Vec::new();
+        for l in (0..nl).rev() {
+            if l > 0 || recompute {
+                for i in 0..plans[l].len() {
+                    order.push((l, i));
+                }
+            }
+        }
+        let (max_rows, max_nnz) = match (&staging.backing, recycle) {
+            (StagingBacking::Memory, Some(_)) => (
+                plans.iter().flatten().map(|s| s.row_hi - s.row_lo).max().unwrap_or(0),
+                plans.iter().flatten().map(|s| s.nnz).max().unwrap_or(0),
+            ),
+            _ => (0, 0),
+        };
+
+        let ledger =
+            Mutex::new(BackLedger { mem, staged: 0, work: 0, meter: StagingMeter::default() });
+        let mut bp = BackwardPass {
+            layers: &mut self.layers,
+            plans: &plans,
+            widths: &widths,
+            n,
+            x0,
+            logits: &logits,
+            grad_out: Some(grad),
+            panels,
+            recycle,
+            pool,
+            recompute,
+            lr,
+            dz: None,
+            dagg: None,
+            dx: None,
+            xl: None,
+            scratch: None,
+            dw: None,
+            work: 0,
+            grad_spill_bytes: 0,
+            grad_read_bytes: 0,
+            agg_read_bytes: 0,
+            act_read_bytes: 0,
+            panel_hits: 0,
+            panel_misses: 0,
+        };
+
+        let streamed = staging.prefetch.run_recycling(
+            pool,
+            order.len(),
+            // ---- Producer: stage backward segments in reverse-layer,
+            // ascending-row order (the mirror of the forward's roll-on).
+            |g: usize, reuse: Option<Csr>| {
+                let (l, i) = order[g];
+                let seg = &plans[l][i];
+                {
+                    let mut led = lock(&ledger);
+                    led.mem
+                        .alloc(seg.bytes, "RoBW segment")
+                        .map_err(|e| anyhow!("backward layer {l}: segment does not fit: {e}"))?;
+                    led.staged += seg.bytes;
+                }
+                match &staging.backing {
+                    StagingBacking::Memory => {
+                        let mut sub = match (reuse, recycle) {
+                            (Some(m), _) => m,
+                            (None, Some(rp)) => rp.take_csr(max_rows, max_nnz),
+                            (None, None) => Csr::empty(0, 0),
+                        };
+                        materialize_into(a_hat, seg, &mut sub);
+                        if let Some(cm) = &staging.io_cost {
+                            let dur = cm.transfer_secs(Op::HtoD, seg.bytes);
+                            std::thread::sleep(std::time::Duration::from_secs_f64(dur));
+                        }
+                        Ok(SegmentRead::Owned(sub))
+                    }
+                    StagingBacking::Disk(store) => {
+                        let (sub, origin) = store.read_reusing(i, reuse, recycle).map_err(|e| {
+                            anyhow!("backward layer {l}: staging segment {i} from disk: {e}")
+                        })?;
+                        lock(&ledger).meter.record(origin.disk_bytes, origin.cache_hit);
+                        Ok(sub)
+                    }
+                }
+            },
+            // ---- Consumer: layer opens/closes on the strictly ordered
+            // calling thread; layer l's combine overlaps layer l-1's
+            // staging exactly as in the forward.
+            |g: usize, sub: SegmentRead| {
+                let (l, i) = order[g];
+                if i == 0 {
+                    bp.open_layer(l, &ledger)?;
+                }
+                bp.segment(l, i, &sub)?;
+                {
+                    let mut led = lock(&ledger);
+                    led.mem.free(plans[l][i].bytes);
+                    led.staged -= plans[l][i].bytes;
+                }
+                let give_back = if recycle.is_some() { sub.reclaim() } else { None };
+                if i + 1 == plans[l].len() {
+                    bp.close_layer(l, &ledger)?;
+                }
+                Ok(give_back)
+            },
+        );
+
+        // Reload epilogue: layer 0 streams no segments, so its open/close
+        // run here — against the still-live ledger — after the pipeline
+        // drains. (A 1-layer reload model does its entire backward here.)
+        let mut epilogue_err: Option<anyhow::Error> = None;
+        if streamed.is_ok() && !recompute {
+            if let Err(e) = bp.open_layer(0, &ledger).and_then(|()| bp.close_layer(0, &ledger)) {
+                epilogue_err = Some(e);
+            }
+        }
+
+        // Reconcile whatever an abort stranded, on every path.
+        bp.reclaim();
+        let backward_segments = order.len();
+        let (grad_spill_bytes, grad_read_bytes) = (bp.grad_spill_bytes, bp.grad_read_bytes);
+        let (agg_read_bytes, act_read_bytes) = (bp.agg_read_bytes, bp.act_read_bytes);
+        let (panel_hits, panel_misses) = (bp.panel_hits, bp.panel_misses);
+        let led = ledger.into_inner().unwrap_or_else(PoisonError::into_inner);
+        if led.staged > 0 {
+            led.mem.free(led.staged);
+        }
+        if led.work > 0 {
+            led.mem.free(led.work);
+        }
+        let peak_gpu_bytes = led.mem.peak;
+        let (backward_disk_bytes, backward_cache_hits, backward_cache_misses) =
+            (led.meter.disk_bytes, led.meter.cache_hits, led.meter.cache_misses);
+        let leftovers = streamed?;
+        if let Some(rp) = recycle {
+            for m in leftovers {
+                rp.put_csr(m);
+            }
+        }
+        if let Some(e) = epilogue_err {
+            return Err(e);
+        }
+
+        let loss = loss64 as f32;
+        self.losses.push(loss);
+        Ok(StepReport {
+            loss,
+            policy: resolved,
+            forward,
+            backward_segments,
+            agg_spill_bytes: agg_spill,
+            agg_read_bytes,
+            grad_spill_bytes,
+            grad_read_bytes,
+            act_read_bytes,
+            backward_panel_hits: panel_hits,
+            backward_panel_misses: panel_misses,
+            backward_disk_bytes,
+            backward_cache_hits,
+            backward_cache_misses,
+            peak_gpu_bytes,
+        })
+    }
+
+    /// Run `steps` streamed SGD steps, returning (first, best, last)
+    /// losses of this run. `steps == 0` is a typed error — there would be
+    /// no losses to report (the guard the artifact-backed
+    /// [`Trainer::train`](crate::gcn::train::Trainer::train) shares).
+    pub fn train(
+        &mut self,
+        a_hat: &Csr,
+        x0: &Dense,
+        mem: &mut GpuMem,
+        pool: &Pool,
+        cfg: &TrainStreamConfig,
+        steps: usize,
+        lr: f32,
+    ) -> Result<(f32, f32, f32)> {
+        if steps == 0 {
+            bail!("training needs at least one step");
+        }
+        for _ in 0..steps {
+            self.step(a_hat, x0, mem, pool, cfg, lr)?;
+        }
+        let first = self.losses[self.losses.len() - steps];
+        let best = self.losses[self.losses.len() - steps..]
+            .iter()
+            .copied()
+            .fold(f32::INFINITY, f32::min);
+        let last = *self.losses.last().expect("at least one step ran");
+        Ok((first, best, last))
+    }
+}
+
+/// Per-layer parameter gradients of the dense oracle.
+pub struct LayerGrads {
+    /// `dW = aggᵀ·dZ`.
+    pub dw: Dense,
+    /// `db = colsum(dZ)`.
+    pub db: Vec<f32>,
+}
+
+/// Dense CPU gradient oracle: whole-matrix forward keeping every
+/// aggregated input and activation in RAM, then the textbook backward
+/// chain — using the *same* shared kernels ([`add_at_b`],
+/// [`matmul_bt_into`], [`column_sums_into`], [`mask_relu`]) in the same
+/// per-element accumulation order as the streamed pass, so gradients are
+/// bitwise comparable. Serial by construction (the point of an oracle).
+pub fn dense_gradients(
+    layers: &[OocGcnLayer],
+    a_hat: &Csr,
+    x0: &Dense,
+    labels: &[i32],
+) -> Result<(f64, Vec<LayerGrads>)> {
+    let nl = layers.len();
+    if nl == 0 {
+        bail!("a GCN model needs at least one layer");
+    }
+    let widths = layer_widths(layers, x0.ncols)?;
+    let n = a_hat.nrows;
+    let serial = Pool::serial();
+
+    let mut aggs: Vec<Dense> = Vec::with_capacity(nl);
+    let mut acts: Vec<Dense> = Vec::with_capacity(nl);
+    for l in 0..nl {
+        let input = if l == 0 { x0 } else { &acts[l - 1] };
+        let agg = spmm(a_hat, input);
+        let act = dense_affine(&agg, &layers[l].w, &layers[l].b, layers[l].relu);
+        aggs.push(agg);
+        acts.push(act);
+    }
+
+    let (loss, mut dz) = softmax_xent_grad(&acts[nl - 1], labels);
+    let mut grads: Vec<LayerGrads> = Vec::with_capacity(nl);
+    for _ in 0..nl {
+        grads.push(LayerGrads { dw: Dense::zeros(0, 0), db: Vec::new() });
+    }
+    for l in (0..nl).rev() {
+        if layers[l].relu {
+            mask_relu(&mut dz, &acts[l]);
+        }
+        let h = layers[l].w.ncols;
+        let mut dw = Dense::zeros(widths[l], h);
+        add_at_b(&mut dw, &aggs[l].data, &dz.data, n, &serial);
+        let mut db = vec![0f32; h];
+        column_sums_into(&dz, &mut db);
+        grads[l] = LayerGrads { dw, db };
+        if l > 0 {
+            let f = widths[l];
+            let mut dagg = vec![0f32; n * f];
+            matmul_bt_into(&dz, &layers[l].w, &serial, &mut dagg);
+            dz = spmm_transpose(a_hat, &Dense::from_vec(n, f, dagg));
+        }
+    }
+    Ok((loss, grads))
+}
+
+/// Dense forward + softmax-xent loss only — the finite-difference probe
+/// the gradient checks perturb.
+pub fn dense_loss(layers: &[OocGcnLayer], a_hat: &Csr, x0: &Dense, labels: &[i32]) -> Result<f64> {
+    let nl = layers.len();
+    if nl == 0 {
+        bail!("a GCN model needs at least one layer");
+    }
+    layer_widths(layers, x0.ncols)?;
+    let mut cur = None;
+    for layer in layers {
+        let input = cur.as_ref().unwrap_or(x0);
+        let agg = spmm(a_hat, input);
+        cur = Some(dense_affine(&agg, &layer.w, &layer.b, layer.relu));
+    }
+    Ok(softmax_xent(&cur.expect("at least one layer"), labels))
+}
+
+/// One dense-oracle SGD step, updating `layers` in place and returning
+/// the step's loss. Uses [`sgd_apply`] — the same update arithmetic as
+/// the streamed trainer — so oracle and streamed parameters stay bitwise
+/// equal step after step.
+pub fn dense_step_oracle(
+    layers: &mut [OocGcnLayer],
+    a_hat: &Csr,
+    x0: &Dense,
+    labels: &[i32],
+    lr: f32,
+) -> Result<f32> {
+    let (loss, grads) = dense_gradients(layers, a_hat, x0, labels)?;
+    for (layer, g) in layers.iter_mut().zip(grads.iter()) {
+        sgd_apply(layer, &g.dw, &g.db, lr);
+    }
+    Ok(loss as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graphgen::kmer;
+    use crate::sparse::norm::normalize_adjacency;
+    use crate::testing::TempDir;
+
+    fn test_layers(rng: &mut Pcg, dims: &[usize], relus: &[bool], budget: u64) -> Vec<OocGcnLayer> {
+        assert_eq!(dims.len(), relus.len() + 1);
+        dims.windows(2)
+            .zip(relus.iter())
+            .map(|(w, &relu)| OocGcnLayer {
+                w: Dense::from_vec(
+                    w[0],
+                    w[1],
+                    (0..w[0] * w[1]).map(|_| (rng.normal() * 0.3) as f32).collect(),
+                ),
+                b: (0..w[1]).map(|_| (rng.normal() * 0.1) as f32).collect(),
+                relu,
+                seg_budget: budget,
+            })
+            .collect()
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    fn fd_w(
+        layers: &mut [OocGcnLayer],
+        a_hat: &Csr,
+        x0: &Dense,
+        y: &[i32],
+        l: usize,
+        k: usize,
+        eps: f32,
+    ) -> f64 {
+        let orig = layers[l].w.data[k];
+        layers[l].w.data[k] = orig + eps;
+        let lp = dense_loss(layers, a_hat, x0, y).unwrap();
+        layers[l].w.data[k] = orig - eps;
+        let lm = dense_loss(layers, a_hat, x0, y).unwrap();
+        layers[l].w.data[k] = orig;
+        (lp - lm) / (2.0 * eps as f64)
+    }
+
+    fn fd_b(
+        layers: &mut [OocGcnLayer],
+        a_hat: &Csr,
+        x0: &Dense,
+        y: &[i32],
+        l: usize,
+        k: usize,
+        eps: f32,
+    ) -> f64 {
+        let orig = layers[l].b[k];
+        layers[l].b[k] = orig + eps;
+        let lp = dense_loss(layers, a_hat, x0, y).unwrap();
+        layers[l].b[k] = orig - eps;
+        let lm = dense_loss(layers, a_hat, x0, y).unwrap();
+        layers[l].b[k] = orig;
+        (lp - lm) / (2.0 * eps as f64)
+    }
+
+    #[test]
+    fn recompute_policy_parses_and_resolves() {
+        for p in [RecomputePolicy::Reload, RecomputePolicy::Recompute, RecomputePolicy::Auto] {
+            assert_eq!(p.as_str().parse::<RecomputePolicy>().unwrap(), p);
+        }
+        assert!("fast".parse::<RecomputePolicy>().is_err());
+        let cheap = StagingConfig::depth(2);
+        assert_eq!(RecomputePolicy::Auto.resolve(&cheap), RecomputePolicy::Reload);
+        let costly = StagingConfig {
+            io_cost: Some(crate::memsim::CostModel::default()),
+            ..StagingConfig::depth(2)
+        };
+        assert_eq!(RecomputePolicy::Auto.resolve(&costly), RecomputePolicy::Recompute);
+        assert_eq!(RecomputePolicy::Reload.resolve(&costly), RecomputePolicy::Reload);
+        assert_eq!(RecomputePolicy::Recompute.resolve(&cheap), RecomputePolicy::Recompute);
+    }
+
+    #[test]
+    fn finite_difference_validates_linear_gradients() {
+        let mut rng = Pcg::seed(70);
+        let g = kmer::generate(&mut rng, 20, 2.5);
+        let a_hat = normalize_adjacency(&g);
+        let x0 = Dense::from_vec(20, 5, (0..20 * 5).map(|_| rng.normal() as f32).collect());
+        let mut layers = test_layers(&mut rng, &[5, 6, 4, 3], &[false, false, false], 1024);
+        let y: Vec<i32> = (0..20).map(|i| (i % 3) as i32).collect();
+        let (_, grads) = dense_gradients(&layers, &a_hat, &x0, &y).unwrap();
+        let eps = 1e-2f32;
+        for l in 0..layers.len() {
+            for k in 0..grads[l].dw.data.len() {
+                let got = grads[l].dw.data[k] as f64;
+                let fd = fd_w(&mut layers, &a_hat, &x0, &y, l, k, eps);
+                assert!(
+                    (fd - got).abs() <= 0.02 * got.abs().max(5e-3),
+                    "layer {l} dW[{k}]: analytic {got} vs fd {fd}"
+                );
+            }
+            for k in 0..grads[l].db.len() {
+                let got = grads[l].db[k] as f64;
+                let fd = fd_b(&mut layers, &a_hat, &x0, &y, l, k, eps);
+                assert!(
+                    (fd - got).abs() <= 0.02 * got.abs().max(5e-3),
+                    "layer {l} db[{k}]: analytic {got} vs fd {fd}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn finite_difference_validates_relu_gradients() {
+        let mut rng = Pcg::seed(71);
+        let g = kmer::generate(&mut rng, 22, 2.5);
+        let a_hat = normalize_adjacency(&g);
+        let x0 = Dense::from_vec(22, 5, (0..22 * 5).map(|_| rng.normal() as f32).collect());
+        let mut layers = test_layers(&mut rng, &[5, 6, 4], &[true, false], 1024);
+        let y: Vec<i32> = (0..22).map(|i| (i % 4) as i32).collect();
+        let (_, grads) = dense_gradients(&layers, &a_hat, &x0, &y).unwrap();
+        // ReLU kinks can sit inside the FD window for a few entries, so
+        // allow a small out-of-tolerance fraction instead of per-entry
+        // strictness; a systematically wrong backward fails wholesale.
+        let eps = 5e-3f32;
+        let (mut total, mut bad) = (0usize, 0usize);
+        for l in 0..layers.len() {
+            for k in 0..grads[l].dw.data.len() {
+                let got = grads[l].dw.data[k] as f64;
+                let fd = fd_w(&mut layers, &a_hat, &x0, &y, l, k, eps);
+                total += 1;
+                if (fd - got).abs() > 0.15 * got.abs().max(2e-3) {
+                    bad += 1;
+                }
+            }
+            for k in 0..grads[l].db.len() {
+                let got = grads[l].db[k] as f64;
+                let fd = fd_b(&mut layers, &a_hat, &x0, &y, l, k, eps);
+                total += 1;
+                if (fd - got).abs() > 0.15 * got.abs().max(2e-3) {
+                    bad += 1;
+                }
+            }
+        }
+        assert!(bad * 20 <= total, "{bad}/{total} gradient entries out of tolerance");
+    }
+
+    #[test]
+    fn streamed_step_matches_dense_oracle_bitwise() {
+        let mut rng = Pcg::seed(81);
+        let g = kmer::generate(&mut rng, 160, 3.0);
+        let a_hat = normalize_adjacency(&g);
+        let x0 = Dense::from_vec(160, 6, (0..160 * 6).map(|_| rng.normal() as f32).collect());
+        let layers = test_layers(&mut rng, &[6, 8, 8, 4], &[true, true, false], 1024);
+        let labels: Vec<i32> = (0..160).map(|i| (i % 4) as i32).collect();
+        for policy in [RecomputePolicy::Reload, RecomputePolicy::Recompute] {
+            let mut oracle = layers.clone();
+            let mut tr = StreamedTrainer::new(layers.clone(), labels.clone()).unwrap();
+            let dir = TempDir::new("train-stream");
+            let panels = Arc::new(PanelStore::new(dir.path(), 0).unwrap());
+            let cfg = TrainStreamConfig::new(StagingConfig::depth(2), panels).with_policy(policy);
+            let mut mem = GpuMem::new(1 << 30);
+            let pool = Pool::new(2);
+            for step in 0..2 {
+                let want = dense_step_oracle(&mut oracle, &a_hat, &x0, &labels, 0.5).unwrap();
+                let rep = tr.step(&a_hat, &x0, &mut mem, &pool, &cfg, 0.5).unwrap();
+                assert_eq!(
+                    rep.loss.to_bits(),
+                    want.to_bits(),
+                    "{policy:?} step {step}: {} vs {want}",
+                    rep.loss
+                );
+                assert_eq!(rep.policy, policy);
+                assert_eq!(mem.used, 0, "{policy:?} step {step}: ledger must balance");
+                assert!(rep.grad_spill_bytes > 0, "inner layers spill gradient panels");
+                if policy == RecomputePolicy::Reload {
+                    assert!(rep.agg_spill_bytes > 0, "reload spills aggregated inputs");
+                    assert!(rep.agg_read_bytes > 0, "reload reads them back");
+                    // Layer 0 runs as the epilogue, off the streamed plan.
+                    assert_eq!(rep.backward_segments, 2 * rep.forward.per_layer[0].segments);
+                } else {
+                    assert_eq!(rep.agg_spill_bytes, 0);
+                    assert_eq!(rep.agg_read_bytes, 0);
+                    assert_eq!(rep.backward_segments, 3 * rep.forward.per_layer[0].segments);
+                }
+            }
+            for (l, (lt, lo)) in tr.layers.iter().zip(oracle.iter()).enumerate() {
+                assert_eq!(bits(&lt.w.data), bits(&lo.w.data), "{policy:?} layer {l} weights");
+                assert_eq!(bits(&lt.b), bits(&lo.b), "{policy:?} layer {l} biases");
+            }
+        }
+    }
+
+    #[test]
+    fn single_layer_and_train_summary_work() {
+        let mut rng = Pcg::seed(82);
+        let g = kmer::generate(&mut rng, 60, 2.5);
+        let a_hat = normalize_adjacency(&g);
+        let x0 = Dense::from_vec(60, 5, (0..60 * 5).map(|_| rng.normal() as f32).collect());
+        let layers = test_layers(&mut rng, &[5, 3], &[false], 1024);
+        let labels: Vec<i32> = (0..60).map(|i| (i % 3) as i32).collect();
+        for policy in [RecomputePolicy::Reload, RecomputePolicy::Recompute] {
+            let mut oracle = layers.clone();
+            let mut tr = StreamedTrainer::new(layers.clone(), labels.clone()).unwrap();
+            let dir = TempDir::new("train-stream-1l");
+            let panels = Arc::new(PanelStore::new(dir.path(), 0).unwrap());
+            let cfg = TrainStreamConfig::new(StagingConfig::serial(), panels).with_policy(policy);
+            let mut mem = GpuMem::new(1 << 30);
+            let (first, best, last) =
+                tr.train(&a_hat, &x0, &mut mem, &Pool::serial(), &cfg, 4, 1.0).unwrap();
+            assert_eq!(mem.used, 0);
+            assert_eq!(tr.losses.len(), 4);
+            assert!(best <= first && best <= last);
+            assert!(last < first, "{policy:?}: loss must decrease: {first} -> {last}");
+            let mut want = Vec::new();
+            for _ in 0..4 {
+                want.push(dense_step_oracle(&mut oracle, &a_hat, &x0, &labels, 1.0).unwrap());
+            }
+            assert_eq!(bits(&tr.losses), bits(&want), "{policy:?} loss curve");
+        }
+    }
+
+    #[test]
+    fn trainer_rejects_invalid_inputs() {
+        let mut rng = Pcg::seed(83);
+        let layers = test_layers(&mut rng, &[5, 4, 3], &[true, false], 1024);
+        // Label out of range.
+        let err = StreamedTrainer::new(layers.clone(), vec![0, 3]).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        // Unchained widths.
+        let mut broken = layers.clone();
+        broken[1].w = Dense::zeros(9, 3);
+        let err = StreamedTrainer::new(broken, vec![0]).unwrap_err();
+        assert!(err.to_string().contains("layer 0"), "{err}");
+        assert!(StreamedTrainer::new(Vec::new(), Vec::new()).is_err());
+
+        // steps == 0 is the Trainer bug this module must not inherit.
+        let g = kmer::generate(&mut rng, 30, 2.5);
+        let a_hat = normalize_adjacency(&g);
+        let x0 = Dense::from_vec(30, 5, (0..30 * 5).map(|_| rng.normal() as f32).collect());
+        let labels: Vec<i32> = (0..30).map(|i| (i % 3) as i32).collect();
+        let mut tr = StreamedTrainer::new(layers.clone(), labels.clone()).unwrap();
+        let dir = TempDir::new("train-stream-inval");
+        let panels = Arc::new(PanelStore::new(dir.path(), 0).unwrap());
+        let cfg = TrainStreamConfig::new(StagingConfig::serial(), panels);
+        let mut mem = GpuMem::new(1 << 30);
+        let err =
+            tr.train(&a_hat, &x0, &mut mem, &Pool::serial(), &cfg, 0, 1.0).unwrap_err();
+        assert!(err.to_string().contains("at least one step"), "{err}");
+        // Feature/label row mismatches are typed errors, not panics.
+        let short_x = Dense::zeros(29, 5);
+        assert!(tr.step(&a_hat, &short_x, &mut mem, &Pool::serial(), &cfg, 1.0).is_err());
+        let mut short = StreamedTrainer::new(layers, labels[..29].to_vec()).unwrap();
+        assert!(short.step(&a_hat, &x0, &mut mem, &Pool::serial(), &cfg, 1.0).is_err());
+        assert_eq!(mem.used, 0);
+    }
+
+    #[test]
+    fn synthetic_labels_cover_classes_in_range() {
+        let mut rng = Pcg::seed(84);
+        let x = Dense::from_vec(64, 6, (0..64 * 6).map(|_| rng.normal() as f32).collect());
+        let y = synthetic_labels(&x, 4, &mut rng);
+        assert_eq!(y.len(), 64);
+        assert!(y.iter().all(|&c| (0..4).contains(&c)));
+        for c in 0..4 {
+            assert!(y.iter().any(|&v| v == c), "quantile split must hit class {c}");
+        }
+        assert!(synthetic_labels(&Dense::zeros(0, 3), 4, &mut rng).is_empty());
+    }
+}

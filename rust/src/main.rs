@@ -6,8 +6,17 @@
 //!   fig3|fig6|fig7|fig8|fig9|table3
 //!                      regenerate one paper artifact as markdown
 //!   report [--out F]   regenerate the full evaluation report
-//!   train [--steps N] [--lr X] [--nodes N]
-//!                      e2e GCN training through the PJRT artifacts
+//!   train [--steps N] [--lr X] [--nodes N] [--train-stream]
+//!         [--layers L] [--budget BYTES] [--recompute-policy P]
+//!         [--panel-dir DIR]
+//!                      e2e GCN training: the dense PJRT artifact path
+//!                      by default; --train-stream streams the forward
+//!                      AND backward pass out of core instead (RoBW
+//!                      segments, activation/gradient panels through
+//!                      the tiered store, recompute-vs-reload policy P
+//!                      in reload|recompute|auto) and verifies every
+//!                      step's loss bitwise against the dense CPU
+//!                      oracle — no compiled artifacts needed
 //!   spgemm [--nodes N] [--budget BYTES] [--prefetch-depth D]
 //!                      one out-of-core aggregation through the artifacts,
 //!                      verified against the CPU oracle (--segment-dir
@@ -38,8 +47,10 @@
 //!                      scenario/metric datapoint, stamped commit+ts)
 //!   bench report --db F
 //!                      per-scenario min/p50/p99/latest table across all
-//!                      stored runs (defective lines are skipped with a
-//!                      warning, never fatal)
+//!                      stored runs, plus cross-commit trend lines for
+//!                      the gated metrics (each run's value and delta
+//!                      vs the previous commit; defective lines are
+//!                      skipped with a warning, never fatal)
 //!   bench gate --db F --max-regress-pct X
 //!                      compare the newest run's gated metrics
 //!                      (ns/segment, ns/layer, serve p99) against the
@@ -284,19 +295,225 @@ fn main() {
             );
         }
         "train" => {
-            let steps: usize = parsed_flag(&args, "--steps", "a step count").unwrap_or(100);
+            // --steps 0 is clamped to 1 with a warning: both trainers
+            // treat a zero-step run as a typed error (no losses to
+            // report), and the CLI convention for 0-valued count flags
+            // is warn-and-clamp (same as --prefetch-depth 0).
+            let steps: usize = parsed_flag(&args, "--steps", "a step count")
+                .map(|s: usize| {
+                    if s == 0 {
+                        eprintln!("warning: --steps 0 trains nothing; using 1");
+                        1
+                    } else {
+                        s
+                    }
+                })
+                .unwrap_or(100);
             let lr: f32 = parsed_flag(&args, "--lr", "a learning rate").unwrap_or(2.0);
             let nodes: usize = parsed_flag(&args, "--nodes", "a node count").unwrap_or(1024);
-            let mut exec = aires::runtime::Executor::from_env().expect("executor");
-            let mut rng = Pcg::seed(42);
-            let g = aires::graphgen::kmer::generate(&mut rng, nodes, 3.2);
-            let mut tr = aires::gcn::Trainer::new(&exec, &g, 42).expect("trainer");
-            println!("training 2-layer GCN (n={}, f0={}, h={}, c={}) for {steps} steps", tr.n, tr.f0, tr.hidden, tr.classes);
-            for step in 0..steps {
-                let loss = tr.step(&mut exec, lr).expect("step");
-                if step % 10 == 0 || step + 1 == steps {
-                    println!("step {step:4}  loss {loss:.4}");
+            let stream =
+                args.iter().any(|a| a == "--train-stream") || cfg.train_stream == Some(true);
+            if !stream {
+                // Dense artifact path: runtime failures are exit-1
+                // errors naming the failing stage (previously `expect`
+                // panics with a backtrace — the last CLI path on the
+                // old convention).
+                let mut exec = aires::runtime::Executor::from_env().unwrap_or_else(|e| {
+                    eprintln!("error: loading PJRT artifacts: {e}");
+                    eprintln!("hint: `train --train-stream` needs no compiled artifacts");
+                    std::process::exit(1);
+                });
+                let mut rng = Pcg::seed(42);
+                let g = aires::graphgen::kmer::generate(&mut rng, nodes, 3.2);
+                let mut tr = aires::gcn::Trainer::new(&exec, &g, 42).unwrap_or_else(|e| {
+                    eprintln!("error: binding the train-step artifact: {e}");
+                    std::process::exit(1);
+                });
+                println!(
+                    "training 2-layer GCN (n={}, f0={}, h={}, c={}) for {steps} steps",
+                    tr.n, tr.f0, tr.hidden, tr.classes
+                );
+                for step in 0..steps {
+                    let loss = tr.step(&mut exec, lr).unwrap_or_else(|e| {
+                        eprintln!("error: training step {step}: {e}");
+                        std::process::exit(1);
+                    });
+                    if step % 10 == 0 || step + 1 == steps {
+                        println!("step {step:4}  loss {loss:.4}");
+                    }
                 }
+            } else {
+                // Streamed out-of-core path (artifact-free): the
+                // forward AND backward pass stream the concatenated
+                // RoBW plan, activations and gradients ride the panel
+                // tier, and every step's loss is checked bitwise
+                // against the dense CPU oracle before the next step.
+                use aires::gcn::train_stream::{dense_step_oracle, synthetic_labels};
+                use aires::gcn::{RecomputePolicy, StreamedTrainer, TrainStreamConfig};
+                use aires::memsim::GpuMem;
+                use aires::runtime::PanelStore;
+                use aires::sparse::spmm::Dense;
+                use aires::util::Stopwatch;
+
+                let budget: u64 =
+                    parsed_flag(&args, "--budget", "a byte budget").unwrap_or(4096);
+                let layers_n: usize =
+                    parsed_flag(&args, "--layers", "a positive layer count (the model depth)")
+                        .map(|l: usize| {
+                            if l == 0 {
+                                eprintln!(
+                                    "warning: --layers 0 is not a valid model depth; \
+                                     using 1 (single layer)"
+                                );
+                                1
+                            } else {
+                                l
+                            }
+                        })
+                        .unwrap_or((cfg.layers as usize).max(1));
+                let policy: RecomputePolicy = parsed_flag(
+                    &args,
+                    "--recompute-policy",
+                    "one of reload, recompute, auto",
+                )
+                .or_else(|| {
+                    // The config loader already rejected unknown policy
+                    // strings, so this re-parse cannot fail.
+                    cfg.recompute_policy
+                        .as_ref()
+                        .map(|s| s.parse().expect("validated at config load"))
+                })
+                .unwrap_or(RecomputePolicy::Auto);
+
+                let (f0, classes) = (16usize, 4usize);
+                let mut rng = Pcg::seed(42);
+                let a = aires::graphgen::kmer::generate(&mut rng, nodes, 3.2);
+                let a_hat = aires::sparse::norm::normalize_adjacency(&a);
+                let x = Dense::from_vec(
+                    nodes,
+                    f0,
+                    (0..nodes * f0).map(|_| rng.normal() as f32).collect(),
+                );
+                let layers: Vec<aires::gcn::OocGcnLayer> = (0..layers_n)
+                    .map(|l| {
+                        let out = if l + 1 == layers_n { classes } else { f0 };
+                        aires::gcn::OocGcnLayer {
+                            w: Dense::from_vec(
+                                f0,
+                                out,
+                                (0..f0 * out).map(|_| (rng.normal() * 0.3) as f32).collect(),
+                            ),
+                            b: vec![0.0; out],
+                            relu: l + 1 < layers_n,
+                            seg_budget: budget,
+                        }
+                    })
+                    .collect();
+                let labels = synthetic_labels(&x, classes, &mut rng);
+
+                let staging = staging_for(
+                    &a_hat,
+                    budget,
+                    &segment_dir,
+                    host_cache_bytes,
+                    prefetch_depth,
+                    &recycle_pool,
+                );
+                // Panel tier for spilled activations, aggregated inputs
+                // and the rotating gradient hand-off. Cacheless: every
+                // spilled panel is read back exactly once per step, so
+                // caching would pin in host RAM exactly what spilling
+                // exists to evict. An ephemeral scratch dir when no
+                // --panel-dir / config `panel_dir` is given (same
+                // convention as segcheck's segment scratch).
+                let (panel_path, ephemeral) =
+                    match flag_value(&args, "--panel-dir").or_else(|| cfg.panel_dir.clone()) {
+                        Some(d) => (std::path::PathBuf::from(d), false),
+                        None => (
+                            std::env::temp_dir()
+                                .join(format!("aires-train-{}", std::process::id())),
+                            true,
+                        ),
+                    };
+                let panels = std::sync::Arc::new(
+                    PanelStore::new(&panel_path, 0).unwrap_or_else(|e| {
+                        eprintln!("error: opening panel dir {}: {e}", panel_path.display());
+                        std::process::exit(1);
+                    }),
+                );
+                let tcfg = TrainStreamConfig::new(staging, panels).with_policy(policy);
+
+                let mut oracle_layers = layers.clone();
+                let mut tr =
+                    StreamedTrainer::new(layers, labels.clone()).unwrap_or_else(|e| {
+                        eprintln!("error: building the streamed trainer: {e}");
+                        std::process::exit(1);
+                    });
+                println!(
+                    "streamed training: {layers_n}-layer GCN (n={nodes}, f0={f0}, \
+                     c={classes}) for {steps} steps, budget {budget}, policy {policy}"
+                );
+                let mut mem = GpuMem::new(1 << 30);
+                let sw = Stopwatch::start();
+                let mut last_rep = None;
+                for step in 0..steps {
+                    let rep = tr
+                        .step(&a_hat, &x, &mut mem, &pool, &tcfg, lr)
+                        .unwrap_or_else(|e| {
+                            eprintln!("error: streamed training step {step}: {e}");
+                            std::process::exit(1);
+                        });
+                    let want = dense_step_oracle(&mut oracle_layers, &a_hat, &x, &labels, lr)
+                        .unwrap_or_else(|e| {
+                            eprintln!("error: dense oracle step {step}: {e}");
+                            std::process::exit(1);
+                        });
+                    if rep.loss.to_bits() != want.to_bits() {
+                        eprintln!(
+                            "error: streamed loss DIVERGED from the dense oracle at \
+                             step {step}: {} vs {want}",
+                            rep.loss
+                        );
+                        std::process::exit(1);
+                    }
+                    if step % 10 == 0 || step + 1 == steps {
+                        println!("step {step:4}  loss {:.4}", rep.loss);
+                    }
+                    last_rep = Some(rep);
+                }
+                let wall = sw.secs();
+                let rep = last_rep.expect("steps >= 1 after the clamp");
+                let fwd = rep.forward.merged();
+                println!(
+                    "per step: {} forward + {} backward segments (policy {}), \
+                     activation panels read {}, aggregation spill {} / read {}, \
+                     gradient spill {} / read {}",
+                    fwd.segments,
+                    rep.backward_segments,
+                    rep.policy,
+                    aires::util::human_bytes(rep.act_read_bytes),
+                    aires::util::human_bytes(rep.agg_spill_bytes),
+                    aires::util::human_bytes(rep.agg_read_bytes),
+                    aires::util::human_bytes(rep.grad_spill_bytes),
+                    aires::util::human_bytes(rep.grad_read_bytes),
+                );
+                println!(
+                    "ns_per_step {}  ({:.2}s wall for {steps} steps, peak {})",
+                    (wall * 1e9 / steps as f64) as u64,
+                    wall,
+                    aires::util::human_bytes(rep.peak_gpu_bytes)
+                );
+                if let Some(rp) = &recycle_pool {
+                    let st = rp.stats();
+                    println!(
+                        "recycle pool: {} hits / {} misses, {} returned ({} dropped by the cap)",
+                        st.hits, st.misses, st.returns, st.drops
+                    );
+                }
+                if ephemeral {
+                    let _ = std::fs::remove_dir_all(&panel_path);
+                }
+                println!("streamed loss matches dense oracle: OK");
             }
         }
         "spgemm" => {
@@ -875,6 +1092,9 @@ fn main() {
                     warn_skipped(&traj);
                     let stats = benchdb::scenario_stats(&traj);
                     print!("{}", report::bench_trajectory_md(&stats, traj.runs().len()));
+                    // Commit-to-commit view of the gated series: where
+                    // the trajectory moved, not just its aggregate.
+                    print!("{}", report::bench_trend_md(&benchdb::trend_lines(&traj)));
                 }
                 "gate" => {
                     let pct: f64 = parsed_flag(
@@ -929,7 +1149,7 @@ fn main() {
         _ => {
             println!(
                 "aires — out-of-core GCN co-design (AIRES reproduction)\n\n\
-                 usage: aires <catalog|features|fig3|fig6|fig7|fig8|fig9|table3|report|prep|train|spgemm|segcheck|gcnstream|serve|bench|parcheck|trace|sweep|config-dump> [--config F] [--threads N] [--prefetch-depth D] [--segment-dir DIR] [--host-cache-bytes N] [--recycle-cap-bytes N] [--layers L] [--panel-dir DIR] [--tenants N] [--db F] [args]\n\
+                 usage: aires <catalog|features|fig3|fig6|fig7|fig8|fig9|table3|report|prep|train|spgemm|segcheck|gcnstream|serve|bench|parcheck|trace|sweep|config-dump> [--config F] [--threads N] [--prefetch-depth D] [--segment-dir DIR] [--host-cache-bytes N] [--recycle-cap-bytes N] [--layers L] [--panel-dir DIR] [--tenants N] [--db F] [--train-stream] [--recompute-policy P] [args]\n\
                  see README.md for details"
             );
         }

@@ -261,6 +261,53 @@ pub fn spmm_transpose_par(a: &Csr, h: &Dense, pool: &Pool) -> Dense {
     out
 }
 
+/// `out += Aᵀ · H` into a caller-owned accumulator — the segment-wise form
+/// of [`spmm_transpose`] the streamed backward pass uses. `h` is the
+/// segment's `a.nrows × f` row-major operand (a row range of the upstream
+/// gradient panel) and `out` is the full `a.ncols × f` destination panel,
+/// **accumulated into** (the caller zeroes it once per layer) — the
+/// accumulate-vs-overwrite contrast with [`spmm_into`], because every
+/// RoBW segment scatters into the same output rows.
+///
+/// Segment-wise accumulation is byte-identical to one whole-matrix
+/// [`spmm_transpose`]: segments cover ascending row ranges and each
+/// segment scans its rows ascending, so every output element receives its
+/// `acc += a_ik * h_ij` additions in the same global row order either way.
+pub fn spmm_transpose_into(a: &Csr, h: &[f32], f: usize, out: &mut [f32]) {
+    assert_eq!(h.len(), a.nrows * f, "operand shape mismatch");
+    assert_eq!(out.len(), a.ncols * f, "destination shape mismatch");
+    for i in 0..a.nrows {
+        let hrow = &h[i * f..(i + 1) * f];
+        for (k, av) in a.row(i) {
+            let k = k as usize;
+            axpy_lanes(&mut out[k * f..(k + 1) * f], hrow, av);
+        }
+    }
+}
+
+/// Row-parallel [`spmm_transpose_into`]: same deterministic
+/// owner-scans-all discipline as [`spmm_transpose_par`] (each worker owns
+/// a contiguous destination row range and scans the whole segment), so the
+/// accumulated result is byte-identical to the serial form at every thread
+/// count.
+pub fn spmm_transpose_par_into(a: &Csr, h: &[f32], f: usize, pool: &Pool, out: &mut [f32]) {
+    assert_eq!(h.len(), a.nrows * f, "operand shape mismatch");
+    assert_eq!(out.len(), a.ncols * f, "destination shape mismatch");
+    pool.for_each_row_chunk_static(out, f, |range, chunk| {
+        for i in 0..a.nrows {
+            let hrow = &h[i * f..(i + 1) * f];
+            for (k, av) in a.row(i) {
+                let k = k as usize;
+                if k < range.start || k >= range.end {
+                    continue;
+                }
+                let local = k - range.start;
+                axpy_lanes(&mut chunk[local * f..(local + 1) * f], hrow, av);
+            }
+        }
+    });
+}
+
 /// Assemble the sparse output CSR C from per-segment dense results —
 /// Phase III's final packaging (complete rows per RoBW segment make this
 /// a pure concatenation, the very property the alignment buys). The
@@ -429,6 +476,33 @@ mod tests {
                     "threads={threads}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn transpose_into_accumulates_segment_ranges_exactly() {
+        // Scattering each RoBW segment's contribution into one shared
+        // accumulator panel must be byte-identical to the whole-matrix
+        // transpose product, serial and parallel alike — the property the
+        // streamed backward pass's dX accumulation rests on.
+        let mut rng = Pcg::seed(27);
+        let a = random_csr(&mut rng, 40, 18, 0.25);
+        let h = random_dense(&mut rng, 40, 9);
+        let want = spmm_transpose(&a, &h);
+        let f = h.ncols;
+        for threads in [1usize, 2, 4, 8] {
+            let pool = Pool::new(threads);
+            let mut panel = vec![0f32; a.ncols * f];
+            for (lo, hi) in [(0usize, 13usize), (13, 13), (13, 29), (29, 40)] {
+                let sub = a.slice_rows(lo, hi);
+                let hseg = &h.data[lo * f..hi * f];
+                if lo % 2 == 0 {
+                    spmm_transpose_into(&sub, hseg, f, &mut panel);
+                } else {
+                    spmm_transpose_par_into(&sub, hseg, f, &pool, &mut panel);
+                }
+            }
+            assert_eq!(panel, want.data, "threads={threads}");
         }
     }
 

@@ -160,7 +160,7 @@ fn recycled_disk_path_is_allocation_free_in_steady_state() {
         relu: layer.relu,
         seg_budget: fine_budget,
     };
-    let cfg2 = StagingConfig::disk(store2, 1).with_recycle(shared.clone());
+    let cfg2 = StagingConfig::disk(store2.clone(), 1).with_recycle(shared.clone());
     let count2 = |staging: &StagingConfig| {
         let mut mem = GpuMem::new(1 << 30);
         let before = allocation_count();
@@ -271,4 +271,91 @@ fn recycled_disk_path_is_allocation_free_in_steady_state() {
         "recycled warmed serve pass must not scale with segments: \
          {allocs_serve_rec} over {n}"
     );
+
+    // ---- 5. Streamed training step stays allocation-free per segment ---
+    // The backward sweep reverses the concatenated plan through the same
+    // recycling channel, so a warmed streamed train step (forward AND
+    // backward, gradient/activation panels through the tiered store) costs
+    // a per-layer constant: recycling must save allocations on every
+    // staged segment, and the warmed cost must not grow when the plan gets
+    // finer.
+    use aires::gcn::train_stream::synthetic_labels;
+    use aires::gcn::{RecomputePolicy, StreamedTrainer, TrainStreamConfig};
+    use aires::runtime::segstore::PanelStore;
+
+    let labels = synthetic_labels(&x, 4, &mut rng);
+    let widths = [16usize, 8, 8, 4];
+    let train_layers = |budget: u64| -> Vec<OocGcnLayer> {
+        (0..3)
+            .map(|l| OocGcnLayer {
+                w: Dense::from_vec(
+                    widths[l],
+                    widths[l + 1],
+                    (0..widths[l] * widths[l + 1])
+                        .map(|i| ((i % 7) as f32 - 3.0) * 0.1)
+                        .collect(),
+                ),
+                b: vec![0.05; widths[l + 1]],
+                relu: l < 2,
+                seg_budget: budget,
+            })
+            .collect()
+    };
+    // Warm two steps (pool capacities and panel-store files reach steady
+    // state), then count the third.
+    let count_step = |store: Arc<SegmentStore>,
+                      budget: u64,
+                      policy: RecomputePolicy,
+                      recycle: Option<Arc<BufferPool>>|
+     -> (u64, u64) {
+        let pdir = TempDir::new("alloc-free-train");
+        let panels = Arc::new(PanelStore::new(pdir.path(), 0).unwrap());
+        let mut staging = StagingConfig::disk(store, 1);
+        if let Some(rp) = recycle {
+            staging = staging.with_recycle(rp);
+        }
+        let cfg = TrainStreamConfig::new(staging, panels).with_policy(policy);
+        let mut tr = StreamedTrainer::new(train_layers(budget), labels.clone()).unwrap();
+        let mut mem = GpuMem::new(1 << 30);
+        for _ in 0..2 {
+            tr.step(&a_hat, &x, &mut mem, &serial, &cfg, 0.1).unwrap();
+        }
+        let before = allocation_count();
+        let rep = tr.step(&a_hat, &x, &mut mem, &serial, &cfg, 0.1).unwrap();
+        let allocs = allocation_count() - before;
+        assert!(rep.loss.is_finite(), "warmed step must still train: {}", rep.loss);
+        assert_eq!(mem.used, 0, "streamed step left the ledger unbalanced");
+        (allocs, (rep.forward.merged().segments + rep.backward_segments) as u64)
+    };
+    let tpool = Arc::new(BufferPool::new(64 << 20));
+    for policy in [RecomputePolicy::Reload, RecomputePolicy::Recompute] {
+        let (allocs_train_rec, segs_train) =
+            count_step(store.clone(), layer.seg_budget, policy, Some(tpool.clone()));
+        let (allocs_train_fresh, segs_train_fresh) =
+            count_step(store.clone(), layer.seg_budget, policy, None);
+        assert_eq!(segs_train, segs_train_fresh);
+        // The fresh step pays rowptr+colidx+vals per staged segment that
+        // the recycled one does not.
+        assert!(
+            allocs_train_fresh >= allocs_train_rec + 2 * segs_train,
+            "{policy:?}: recycling must save allocations on every staged segment \
+             (fresh {allocs_train_fresh}, recycled {allocs_train_rec}, {segs_train} segments)"
+        );
+        // Scale-invariance: a finer plan streams more segments through the
+        // same warmed step for (near-)identical allocation cost.
+        let (allocs_train_fine, segs_train_fine) =
+            count_step(store2.clone(), fine_budget, policy, Some(tpool.clone()));
+        assert!(segs_train_fine > segs_train, "finer plan must stream more segments");
+        assert!(
+            allocs_train_fine <= allocs_train_rec + 96,
+            "{policy:?}: warmed step cost must not scale with segments: \
+             {allocs_train_fine} over {segs_train_fine} segments vs \
+             {allocs_train_rec} over {segs_train}"
+        );
+        assert!(
+            allocs_train_rec < 512 + segs_train / 4,
+            "{policy:?}: warmed streamed step must stay a small constant: \
+             {allocs_train_rec} over {segs_train} segments"
+        );
+    }
 }

@@ -7,8 +7,8 @@
 
 use aires::benchdb::{
     append_records, gate, gated_metric, parse_trajectory, read_trajectory,
-    records_from_bench_json, scenario_stats, unit_for, BenchDbError, RunRecord, Trajectory,
-    SCHEMA_VERSION,
+    records_from_bench_json, scenario_stats, trend_lines, unit_for, BenchDbError, RunRecord,
+    Trajectory, SCHEMA_VERSION,
 };
 use aires::testing::{check, TempDir};
 use aires::util::percentile;
@@ -289,10 +289,53 @@ fn gate_skips_zero_baselines_and_ungated_metrics() {
     assert_eq!(out.checks.len(), 1);
     assert!(gated_metric("ns_per_segment"));
     assert!(gated_metric("ns_per_layer"));
+    assert!(gated_metric("ns_per_step"));
     assert!(gated_metric("per_tenant.tenant_0.p99_s"));
     assert!(!gated_metric("per_tenant.tenant_0.p50_s"));
     assert!(!gated_metric("allocs_per_segment"));
     assert!(!gated_metric("segments_per_s"));
+}
+
+// --- cross-commit trend lines -------------------------------------------
+
+#[test]
+fn trend_lines_order_runs_and_stamp_deltas() {
+    let records = vec![
+        // Out of file order on purpose: runs must sort by (ts, commit).
+        rec("run-c", 300, "train_stream", "ns_per_step", 150.0),
+        rec("run-a", 100, "train_stream", "ns_per_step", 100.0),
+        rec("run-b", 200, "train_stream", "ns_per_step", 120.0),
+        // Ungated series never trend.
+        rec("run-a", 100, "train_stream", "allocs_per_step", 7.0),
+        // A duplicated metric within one run: last record in file order
+        // wins, same resolution as scenario_stats' `latest`.
+        rec("run-b", 200, "train_stream", "ns_per_step", 110.0),
+    ];
+    let trends = trend_lines(&traj(records));
+    assert_eq!(trends.len(), 1, "only the gated series trends: {trends:?}");
+    let t = &trends[0];
+    assert_eq!((t.scenario.as_str(), t.metric.as_str(), t.unit.as_str()),
+               ("train_stream", "ns_per_step", "ns"));
+    let values: Vec<f64> = t.points.iter().map(|p| p.value).collect();
+    assert_eq!(values, vec![100.0, 110.0, 150.0], "oldest first, dup resolved");
+    assert_eq!(t.points[0].delta_pct, None, "first run has nothing previous");
+    assert!((t.points[1].delta_pct.unwrap() - 10.0).abs() < 1e-9);
+    assert!((t.points[2].delta_pct.unwrap() - (40.0 / 110.0 * 100.0)).abs() < 1e-9);
+    assert_eq!(t.points[2].run, (300, "run-c".to_string()));
+}
+
+#[test]
+fn trend_lines_skip_zero_previous_values() {
+    let records = vec![
+        rec("a", 1, "s", "p99_s", 0.0),
+        rec("b", 2, "s", "p99_s", 0.5),
+        rec("c", 3, "s", "p99_s", 1.0),
+    ];
+    let trends = trend_lines(&traj(records));
+    assert_eq!(trends[0].points[1].delta_pct, None, "zero previous: nothing to divide by");
+    assert_eq!(trends[0].points[2].delta_pct, Some(100.0));
+    // An empty trajectory trends nothing.
+    assert!(trend_lines(&Trajectory::default()).is_empty());
 }
 
 // --- ingest: BENCH_streaming.json → records -----------------------------

@@ -334,12 +334,16 @@ fn bench_ingest_report_gate_end_to_end() {
         assert!(out.contains(commit), "run identity echoed: {out}");
     }
 
-    // Report renders per-scenario stats incl. the serve percentiles.
+    // Report renders per-scenario stats incl. the serve percentiles,
+    // plus the cross-commit trend of the gated series.
     let (code, out, err) = run(&["bench", "report", "--db", &db_s]);
     assert_eq!(code, Some(0), "stderr: {err}");
     assert!(out.contains("2 stored run(s)"), "stdout: {out}");
     assert!(out.contains("| fresh_depth1 | ns_per_segment | ns |"), "stdout: {out}");
     assert!(out.contains("per_tenant.tenant_0.p99_s"), "serve p99 folded in: {out}");
+    assert!(out.contains("Cross-commit trend"), "trend table renders: {out}");
+    assert!(out.contains("100.0000 → 102.0000"), "per-run values oldest → latest: {out}");
+    assert!(out.contains("+2.00%"), "latest delta vs the previous commit: {out}");
 
     // +2% is within a 10% threshold.
     let (code, out, err) =
@@ -389,6 +393,74 @@ fn bench_db_config_key_is_the_flag_fallback() {
     ]);
     assert_eq!(code, Some(0), "stderr: {err}");
     assert!(out.contains("PASS"), "stdout: {out}");
+}
+
+// --- train subcommand: exit conventions + the streamed trainer ----------
+
+#[test]
+fn train_without_artifacts_is_an_error_not_a_panic() {
+    // The dense path needs compiled PJRT artifacts. Without them it must
+    // exit 1 with a message naming the failing stage (previously the
+    // last `expect()` panic left in the CLI); with them it trains and
+    // exits 0. Either way: no panics.
+    let (code, out, err) = run(&["train", "--steps", "1", "--nodes", "64"]);
+    match code {
+        Some(0) => assert!(out.contains("loss"), "stdout: {out}"),
+        Some(1) => assert!(err.contains("error:"), "stderr must name the stage: {err}"),
+        other => panic!("expected exit 0 or 1, got {other:?}; stderr: {err}"),
+    }
+    assert!(!err.contains("panicked"), "{err}");
+}
+
+#[test]
+fn train_stream_steps_zero_warns_and_still_runs() {
+    // --steps 0 has no losses to report (a typed error in the trainers);
+    // the CLI clamps to 1 with a warning, same convention as
+    // --prefetch-depth 0.
+    let (code, out, err) = run(&[
+        "train", "--train-stream", "--steps", "0", "--nodes", "80", "--layers", "2",
+        "--budget", "2048",
+    ]);
+    assert_eq!(code, Some(0), "steps 0 is clamped, not fatal; stderr: {err}");
+    assert!(err.contains("warning"), "clamp must be announced: {err}");
+    assert!(err.contains("--steps 0"), "{err}");
+    assert!(out.contains("streamed loss matches dense oracle: OK"), "stdout: {out}");
+    assert!(!err.contains("panicked"), "{err}");
+}
+
+#[test]
+fn train_stream_matches_dense_oracle_across_policies() {
+    // The streamed trainer verifies every step's loss bitwise against
+    // the dense CPU oracle in-process; the CLI smoke pins that end to
+    // end for each recompute policy, with activation/gradient panels
+    // landing in --panel-dir.
+    let dir = TempDir::new("cli-train-stream");
+    for policy in ["reload", "recompute", "auto"] {
+        let panel_dir = dir.path().join(policy);
+        let (code, out, err) = run(&[
+            "train", "--train-stream", "--nodes", "120", "--steps", "2", "--layers", "3",
+            "--budget", "2048", "--lr", "0.5", "--recompute-policy", policy,
+            "--panel-dir", panel_dir.to_str().unwrap(),
+        ]);
+        assert_eq!(code, Some(0), "policy {policy}; stderr: {err}");
+        assert!(out.contains("streamed loss matches dense oracle: OK"), "policy {policy}: {out}");
+        assert!(out.contains("ns_per_step"), "per-step timing reported: {out}");
+        assert!(out.contains("backward segments"), "backward sweep reported: {out}");
+        assert!(
+            panel_dir.join("panel-00000.bin").exists(),
+            "policy {policy}: --panel-dir must hold the spilled activation panels"
+        );
+        assert!(!err.contains("panicked"), "{err}");
+    }
+}
+
+#[test]
+fn train_stream_malformed_policy_is_a_usage_error() {
+    let (code, _, err) = run(&["train", "--train-stream", "--recompute-policy", "fast"]);
+    assert_eq!(code, Some(2), "usage errors exit 2; stderr: {err}");
+    assert!(err.contains("--recompute-policy"), "must name the flag: {err}");
+    assert!(err.contains("fast"), "must echo the offending value: {err}");
+    assert!(!err.contains("panicked"), "{err}");
 }
 
 #[test]

@@ -805,6 +805,134 @@ fn diff_multilayer_pipeline_matches_per_layer_oracle() {
     }
 }
 
+// --------------------------------------------------- streamed training
+
+/// The out-of-core training acceptance sweep: the streamed trainer
+/// (forward AND backward through one concatenated RoBW plan, gradient /
+/// activation panels through the tiered store) must produce **bitwise**
+/// the dense CPU oracle's loss at every step and bitwise its final
+/// parameters, at every depth × threads × backing × recycle ×
+/// recompute-policy point, with a balanced ledger after every step.
+#[test]
+fn diff_train_stream_matches_dense_oracle() {
+    use aires::gcn::train_stream::{dense_step_oracle, synthetic_labels};
+    use aires::gcn::{RecomputePolicy, StreamedTrainer, TrainStreamConfig};
+
+    let mut rng = Pcg::seed(21);
+    let a_hat = normalize_adjacency(&aires::graphgen::kmer::generate(&mut rng, 240, 3.0));
+    let n = a_hat.nrows;
+    let budget = 1536u64;
+    let (f0, classes) = (6usize, 4usize);
+    let x = gen::dense(&mut rng, n, f0);
+    let widths = [f0, 8, 8, classes];
+    let layers: Vec<OocGcnLayer> = (0..3)
+        .map(|l| {
+            let mut w = gen::dense(&mut rng, widths[l], widths[l + 1]);
+            for v in w.data.iter_mut() {
+                *v *= 0.3;
+            }
+            OocGcnLayer {
+                w,
+                b: (0..widths[l + 1]).map(|_| (rng.normal() * 0.1) as f32).collect(),
+                relu: l < 2,
+                seg_budget: budget,
+            }
+        })
+        .collect();
+    let labels = synthetic_labels(&x, classes, &mut rng);
+    let steps = 3usize;
+    let lr = 0.5f32;
+
+    // Dense CPU oracle: the per-step loss curve and the final parameters.
+    let mut oracle = layers.clone();
+    let mut want_losses = Vec::new();
+    for _ in 0..steps {
+        want_losses.push(dense_step_oracle(&mut oracle, &a_hat, &x, &labels, lr).unwrap());
+    }
+    assert!(want_losses.iter().all(|l| l.is_finite()), "oracle curve: {want_losses:?}");
+    assert_ne!(
+        want_losses[0].to_bits(),
+        want_losses[steps - 1].to_bits(),
+        "parameters must actually move: {want_losses:?}"
+    );
+
+    let segs = robw_partition(&a_hat, budget);
+    assert!(segs.len() >= 3, "need a real stream per layer");
+    let dir = TempDir::new("diff-train-segs");
+    SegmentStore::spill(&a_hat, &segs, dir.path(), 0).unwrap();
+    let shared_recycle = Arc::new(BufferPool::new(64 << 20));
+
+    let bits = |layers: &[OocGcnLayer]| -> Vec<u32> {
+        layers
+            .iter()
+            .flat_map(|l| l.w.data.iter().chain(l.b.iter()).map(|v| v.to_bits()))
+            .collect()
+    };
+    let want_bits = bits(&oracle);
+
+    for policy in [RecomputePolicy::Reload, RecomputePolicy::Recompute] {
+        for disk in [false, true] {
+            for &depth in &PREFETCH_DEPTHS {
+                for &t in &[1usize, 8] {
+                    for recycled in [false, true] {
+                        let point = format!(
+                            "policy={policy:?} disk={disk} depth={depth} t={t} \
+                             recycled={recycled}"
+                        );
+                        let mut staging = if disk {
+                            let store =
+                                SegmentStore::open_or_spill(&a_hat, &segs, dir.path(), 0)
+                                    .unwrap();
+                            StagingConfig::disk(Arc::new(store), depth)
+                        } else {
+                            StagingConfig::depth(depth)
+                        };
+                        if recycled {
+                            staging = staging.with_recycle(shared_recycle.clone());
+                        }
+                        // Fresh panel store per point: panels are step
+                        // state, not a shared fixture.
+                        let pdir = TempDir::new("diff-train-panels");
+                        let panels = Arc::new(PanelStore::new(pdir.path(), 0).unwrap());
+                        let cfg = TrainStreamConfig::new(staging, panels).with_policy(policy);
+                        let mut tr =
+                            StreamedTrainer::new(layers.clone(), labels.clone()).unwrap();
+                        let mut mem = GpuMem::new(1 << 30);
+                        for (s, want) in want_losses.iter().enumerate() {
+                            let rep = tr
+                                .step(&a_hat, &x, &mut mem, &Pool::new(t), &cfg, lr)
+                                .unwrap_or_else(|e| panic!("{point} step {s}: {e}"));
+                            assert_eq!(
+                                rep.loss.to_bits(),
+                                want.to_bits(),
+                                "{point} step {s}: loss {} != oracle {want}",
+                                rep.loss
+                            );
+                            assert_eq!(rep.policy, policy, "{point}: resolved policy");
+                            assert_eq!(mem.used, 0, "{point} step {s}: ledger unbalanced");
+                            match policy {
+                                RecomputePolicy::Reload => assert!(
+                                    rep.agg_spill_bytes > 0 && rep.agg_read_bytes > 0,
+                                    "{point}: reload must round-trip aggregation panels"
+                                ),
+                                _ => assert_eq!(
+                                    rep.agg_spill_bytes, 0,
+                                    "{point}: recompute must not spill aggregations"
+                                ),
+                            }
+                        }
+                        assert_eq!(
+                            bits(&tr.layers),
+                            want_bits,
+                            "{point}: final parameters diverged from the oracle"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
 // ------------------------------------------------------- fault injection
 
 /// I/O faults injected into one segment file mid-stream.

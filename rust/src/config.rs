@@ -84,6 +84,20 @@ pub struct Config {
     /// (the CLI defaults to `auto`). The CLI's `--recompute-policy`
     /// overrides this.
     pub recompute_policy: Option<String>,
+    /// Transient-fault retries per tiered-store read (`runtime::heal`):
+    /// `0` = fail fast (the pre-healing behaviour). Enabling retries also
+    /// enables quarantine-and-rebuild of persistently corrupt segments.
+    /// `None` = unset (fail fast). The CLI's `--retry-max` overrides this.
+    pub retry_max: Option<usize>,
+    /// Virtual-time backoff charge per retry, in multiples of the failed
+    /// file's size (doubling per attempt, charged to the heal ledger —
+    /// never a wall-clock sleep). `None` = unset (no backoff charge). The
+    /// CLI's `--retry-backoff-ios` overrides this.
+    pub retry_backoff_ios: Option<u64>,
+    /// Directory the streamed trainer persists per-step checkpoints to
+    /// and resumes from (`gcn::checkpoint`). `None` = no checkpointing.
+    /// The CLI's `--checkpoint-dir` overrides this.
+    pub checkpoint_dir: Option<String>,
 }
 
 impl Default for Config {
@@ -103,6 +117,9 @@ impl Default for Config {
             bench_db: None,
             train_stream: None,
             recompute_policy: None,
+            retry_max: None,
+            retry_backoff_ios: None,
+            checkpoint_dir: None,
         }
     }
 }
@@ -258,6 +275,32 @@ impl Config {
                         .map_err(|e| anyhow!("recompute_policy: {e}"))?;
                     cfg.recompute_policy = Some(s.to_string());
                 }
+                "retry_max" => {
+                    let n =
+                        val.as_f64().ok_or_else(|| anyhow!("retry_max must be a number"))?;
+                    if n < 0.0 || n.fract() != 0.0 {
+                        bail!("retry_max must be a non-negative integer (0 = fail fast)");
+                    }
+                    cfg.retry_max = Some(n as usize);
+                }
+                "retry_backoff_ios" => {
+                    let n = val
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("retry_backoff_ios must be a number"))?;
+                    if n < 0.0 || n.fract() != 0.0 {
+                        bail!("retry_backoff_ios must be a non-negative integer (0 = no charge)");
+                    }
+                    cfg.retry_backoff_ios = Some(n as u64);
+                }
+                "checkpoint_dir" => {
+                    let dir = val
+                        .as_str()
+                        .ok_or_else(|| anyhow!("checkpoint_dir must be a string"))?;
+                    if dir.is_empty() {
+                        bail!("checkpoint_dir must not be empty (omit the key to disable)");
+                    }
+                    cfg.checkpoint_dir = Some(dir.to_string());
+                }
                 "datasets" => {
                     let arr =
                         val.as_arr().ok_or_else(|| anyhow!("datasets must be an array"))?;
@@ -362,6 +405,15 @@ impl Config {
         }
         if let Some(p) = &self.recompute_policy {
             root.insert("recompute_policy".to_string(), Json::Str(p.clone()));
+        }
+        if let Some(n) = self.retry_max {
+            root.insert("retry_max".to_string(), Json::Num(n as f64));
+        }
+        if let Some(n) = self.retry_backoff_ios {
+            root.insert("retry_backoff_ios".to_string(), Json::Num(n as f64));
+        }
+        if let Some(dir) = &self.checkpoint_dir {
+            root.insert("checkpoint_dir".to_string(), Json::Str(dir.clone()));
         }
         root.insert(
             "datasets".to_string(),
@@ -570,6 +622,39 @@ mod tests {
         assert!(Config::from_json_str(r#"{"recompute_policy":3}"#).is_err());
         assert!(Config::from_json_str(r#"{"train_stream":1}"#).is_err());
         assert!(Config::from_json_str(r#"{"train_stream":"yes"}"#).is_err());
+    }
+
+    #[test]
+    fn healing_keys_roundtrip_and_validate() {
+        let cfg = Config::from_json_str(
+            r#"{"retry_max":3,"retry_backoff_ios":2,"checkpoint_dir":"/tmp/ckpt"}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.retry_max, Some(3));
+        assert_eq!(cfg.retry_backoff_ios, Some(2));
+        assert_eq!(cfg.checkpoint_dir.as_deref(), Some("/tmp/ckpt"));
+        let back = Config::from_json_str(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(back.retry_max, Some(3), "set keys survive the roundtrip");
+        assert_eq!(back.retry_backoff_ios, Some(2));
+        assert_eq!(back.checkpoint_dir, cfg.checkpoint_dir);
+        // Unset stays unset (fail fast, no backoff, no checkpointing).
+        let unset = Config::from_json_str("{}").unwrap();
+        assert_eq!(
+            (unset.retry_max, unset.retry_backoff_ios, unset.checkpoint_dir.clone()),
+            (None, None, None)
+        );
+        let unset_back = Config::from_json_str(&unset.to_json().to_string()).unwrap();
+        assert_eq!(unset_back.retry_max, None);
+        assert_eq!(unset_back.checkpoint_dir, None);
+        // 0 is valid for both counters (explicit fail-fast / zero charge).
+        let zero = Config::from_json_str(r#"{"retry_max":0,"retry_backoff_ios":0}"#).unwrap();
+        assert_eq!((zero.retry_max, zero.retry_backoff_ios), (Some(0), Some(0)));
+        // Bad values fail loudly.
+        assert!(Config::from_json_str(r#"{"retry_max":-1}"#).is_err());
+        assert!(Config::from_json_str(r#"{"retry_max":1.5}"#).is_err());
+        assert!(Config::from_json_str(r#"{"retry_backoff_ios":-2}"#).is_err());
+        assert!(Config::from_json_str(r#"{"checkpoint_dir":""}"#).is_err());
+        assert!(Config::from_json_str(r#"{"checkpoint_dir":4}"#).is_err());
     }
 
     #[test]

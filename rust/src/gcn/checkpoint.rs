@@ -1,0 +1,399 @@
+//! Versioned, checksummed training checkpoints for the streamed trainer.
+//!
+//! One checkpoint captures everything a killed run needs to resume to
+//! bitwise-identical final parameters: the parameter state of every layer,
+//! the completed-step index, the resolved recompute policy, the loss curve
+//! so far, and the driver's RNG snapshot ([`Pcg::state`]) — streamed steps
+//! themselves draw no randomness, but the CLI's label/feature generation
+//! does, and a resume must not replay or skip any of that stream.
+//!
+//! The on-disk record rides the segio container ([`KIND_CHECK`]): the same
+//! magic/version/FNV-1a header discipline every spilled segment and panel
+//! already uses, so a torn or corrupt checkpoint is a *typed* decode error,
+//! never garbage parameters. Writes are atomic — encode to
+//! `checkpoint.bin.tmp`, then `rename` onto `checkpoint.bin` — so a kill
+//! mid-save leaves the previous checkpoint intact ([`load`] never sees a
+//! half-written file).
+//!
+//! The body layout is fixed little-endian (byte-stable across runs, like
+//! every other on-disk artifact in the repo):
+//!
+//! ```text
+//! u32  checkpoint version (currently 1)
+//! u64  completed-step index
+//! u8   recompute policy (0 = reload, 1 = recompute, 2 = auto)
+//! u64  rng state, u64 rng increment
+//! u64  loss count, then count × u32 f32 bit patterns
+//! u64  layer count, then per layer:
+//!      u64 nrows, u64 ncols, u8 relu, u64 seg_budget,
+//!      nrows × ncols × u32 weight bit patterns,
+//!      u64 bias count, then count × u32 bias bit patterns
+//! ```
+
+use crate::gcn::oocgcn::OocGcnLayer;
+use crate::gcn::train_stream::RecomputePolicy;
+use crate::sparse::segio::{decode_blob, encode_blob};
+use crate::sparse::spmm::Dense;
+use crate::util::rng::Pcg;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Current (and only) checkpoint body version.
+pub const CHECKPOINT_VERSION: u32 = 1;
+
+/// File name a checkpoint directory holds its (single) checkpoint under.
+pub const CHECKPOINT_FILE: &str = "checkpoint.bin";
+
+/// A resumable snapshot of streamed-training state after some step.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// Steps completed when the snapshot was taken (resume runs steps
+    /// `step..total`).
+    pub step: u64,
+    /// The recompute policy the run was started with (resume must not
+    /// silently switch policies mid-run).
+    pub policy: RecomputePolicy,
+    /// The driver RNG's [`Pcg::state`] snapshot at save time.
+    pub rng: (u64, u64),
+    /// Loss of every completed step, in order — bit patterns preserved.
+    pub losses: Vec<f32>,
+    /// Parameter state of every layer after `step` updates.
+    pub layers: Vec<OocGcnLayer>,
+}
+
+impl Checkpoint {
+    /// Rebuild the driver RNG from the snapshot (continues the stream
+    /// bit-for-bit from the save point).
+    pub fn rng(&self) -> Pcg {
+        Pcg::from_state(self.rng)
+    }
+}
+
+fn policy_tag(p: RecomputePolicy) -> u8 {
+    match p {
+        RecomputePolicy::Reload => 0,
+        RecomputePolicy::Recompute => 1,
+        RecomputePolicy::Auto => 2,
+    }
+}
+
+fn policy_from_tag(t: u8) -> Result<RecomputePolicy> {
+    match t {
+        0 => Ok(RecomputePolicy::Reload),
+        1 => Ok(RecomputePolicy::Recompute),
+        2 => Ok(RecomputePolicy::Auto),
+        other => bail!("checkpoint carries unknown recompute-policy tag {other}"),
+    }
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounds-checked little-endian reader over the decoded blob payload —
+/// every take is a typed error on a short body, so a truncated-inside-the-
+/// container body (impossible via [`save`], possible via a crafted file)
+/// cannot panic.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.off < n {
+            bail!(
+                "checkpoint body truncated: need {n} bytes at offset {}, have {}",
+                self.off,
+                self.buf.len() - self.off
+            );
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4-byte slice")))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8-byte slice")))
+    }
+
+    /// A count field narrowed to usize, bounded by the bytes actually
+    /// present (every counted element occupies ≥ 4 body bytes, so any
+    /// count beyond `remaining` is corrupt — reject before reserving).
+    fn count(&mut self, what: &str) -> Result<usize> {
+        let v = self.u64()?;
+        let bound = (self.buf.len() - self.off) as u64 / 4;
+        if v > bound {
+            bail!("checkpoint {what} count {v} exceeds the {} remaining body bytes", 4 * bound);
+        }
+        Ok(v as usize)
+    }
+
+    fn finish(self) -> Result<()> {
+        if self.off != self.buf.len() {
+            bail!("checkpoint body has {} trailing bytes", self.buf.len() - self.off);
+        }
+        Ok(())
+    }
+}
+
+/// Encode a checkpoint into its on-disk record (container included).
+pub fn encode_checkpoint(ck: &Checkpoint) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u32(&mut body, CHECKPOINT_VERSION);
+    put_u64(&mut body, ck.step);
+    body.push(policy_tag(ck.policy));
+    put_u64(&mut body, ck.rng.0);
+    put_u64(&mut body, ck.rng.1);
+    put_u64(&mut body, ck.losses.len() as u64);
+    for &l in &ck.losses {
+        put_u32(&mut body, l.to_bits());
+    }
+    put_u64(&mut body, ck.layers.len() as u64);
+    for layer in &ck.layers {
+        put_u64(&mut body, layer.w.nrows as u64);
+        put_u64(&mut body, layer.w.ncols as u64);
+        body.push(layer.relu as u8);
+        put_u64(&mut body, layer.seg_budget);
+        for &w in &layer.w.data {
+            put_u32(&mut body, w.to_bits());
+        }
+        put_u64(&mut body, layer.b.len() as u64);
+        for &b in &layer.b {
+            put_u32(&mut body, b.to_bits());
+        }
+    }
+    encode_blob(&body)
+}
+
+/// Decode an on-disk checkpoint record. The exact inverse of
+/// [`encode_checkpoint`]: every f32 round-trips by bit pattern. Structural
+/// defects (container checksums, record kind, truncation) surface as the
+/// segio error; body defects (bad version, bad policy tag, short or
+/// oversized sections) as typed messages naming the field.
+pub fn decode_checkpoint(buf: &[u8]) -> Result<Checkpoint> {
+    let body = decode_blob(buf).map_err(|e| anyhow!("checkpoint container: {e}"))?;
+    let mut c = Cursor { buf: &body, off: 0 };
+    let version = c.u32()?;
+    if version != CHECKPOINT_VERSION {
+        bail!("unsupported checkpoint version {version} (expected {CHECKPOINT_VERSION})");
+    }
+    let step = c.u64()?;
+    let policy = policy_from_tag(c.u8()?)?;
+    let rng = (c.u64()?, c.u64()?);
+    let n_losses = c.count("loss")?;
+    let mut losses = Vec::with_capacity(n_losses);
+    for _ in 0..n_losses {
+        losses.push(f32::from_bits(c.u32()?));
+    }
+    let nl = c.count("layer")?;
+    let mut layers = Vec::with_capacity(nl);
+    for l in 0..nl {
+        let nrows = c.u64()? as usize;
+        let ncols = c.u64()? as usize;
+        let relu = match c.u8()? {
+            0 => false,
+            1 => true,
+            other => bail!("checkpoint layer {l} has non-boolean relu byte {other}"),
+        };
+        let seg_budget = c.u64()?;
+        let n = nrows.checked_mul(ncols).ok_or_else(|| {
+            anyhow!("checkpoint layer {l}: {nrows}x{ncols} overflows the element count")
+        })?;
+        if n > (body.len() - c.off) / 4 {
+            bail!("checkpoint layer {l}: {nrows}x{ncols} weights exceed the remaining body");
+        }
+        let mut w = Vec::with_capacity(n);
+        for _ in 0..n {
+            w.push(f32::from_bits(c.u32()?));
+        }
+        let nb = c.count("bias")?;
+        let mut b = Vec::with_capacity(nb);
+        for _ in 0..nb {
+            b.push(f32::from_bits(c.u32()?));
+        }
+        layers.push(OocGcnLayer { w: Dense::from_vec(nrows, ncols, w), b, relu, seg_budget });
+    }
+    c.finish()?;
+    Ok(Checkpoint { step, policy, rng, losses, layers })
+}
+
+/// Path of the checkpoint file inside `dir`.
+pub fn checkpoint_path(dir: &Path) -> PathBuf {
+    dir.join(CHECKPOINT_FILE)
+}
+
+/// Atomically persist `ck` under `dir` (created if missing): encode to
+/// `checkpoint.bin.tmp`, then rename onto [`CHECKPOINT_FILE`]. A kill at
+/// any point leaves either the previous checkpoint or the new one — never
+/// a torn file. Returns the bytes written.
+pub fn save(dir: &Path, ck: &Checkpoint) -> Result<u64> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("create checkpoint dir {}", dir.display()))?;
+    let path = checkpoint_path(dir);
+    let tmp = path.with_extension("bin.tmp");
+    let buf = encode_checkpoint(ck);
+    std::fs::write(&tmp, &buf).with_context(|| format!("write {}", tmp.display()))?;
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("publish checkpoint {}", path.display()))?;
+    Ok(buf.len() as u64)
+}
+
+/// Load the checkpoint under `dir`, if any. A missing file (or missing
+/// directory) is `Ok(None)` — the fresh-start case; anything present but
+/// undecodable is an error, never a silent fresh start.
+pub fn load(dir: &Path) -> Result<Option<Checkpoint>> {
+    let path = checkpoint_path(dir);
+    let buf = match std::fs::read(&path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(anyhow!("read checkpoint {}: {e}", path.display())),
+    };
+    decode_checkpoint(&buf).with_context(|| format!("decode checkpoint {}", path.display()))
+        .map(Some)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::TempDir;
+    use crate::util::rng::Pcg;
+
+    fn example() -> Checkpoint {
+        let mut rng = Pcg::seed(90);
+        let layers = vec![
+            OocGcnLayer {
+                w: Dense::from_vec(3, 4, (0..12).map(|_| rng.normal() as f32).collect()),
+                b: (0..4).map(|_| rng.normal() as f32).collect(),
+                relu: true,
+                seg_budget: 1024,
+            },
+            OocGcnLayer {
+                w: Dense::from_vec(4, 2, (0..8).map(|_| rng.normal() as f32).collect()),
+                b: vec![-0.0, f32::from_bits(0x0000_0001)],
+                relu: false,
+                seg_budget: 2048,
+            },
+        ];
+        Checkpoint {
+            step: 7,
+            policy: RecomputePolicy::Recompute,
+            rng: rng.state(),
+            losses: vec![1.5, 0.75, f32::from_bits(0x3f80_0001)],
+            layers,
+        }
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise() {
+        let ck = example();
+        let back = decode_checkpoint(&encode_checkpoint(&ck)).unwrap();
+        assert_eq!(back.step, ck.step);
+        assert_eq!(back.policy, ck.policy);
+        assert_eq!(back.rng, ck.rng);
+        assert_eq!(bits(&back.losses), bits(&ck.losses));
+        assert_eq!(back.layers.len(), ck.layers.len());
+        for (a, b) in back.layers.iter().zip(ck.layers.iter()) {
+            assert_eq!((a.w.nrows, a.w.ncols), (b.w.nrows, b.w.ncols));
+            assert_eq!(bits(&a.w.data), bits(&b.w.data));
+            assert_eq!(bits(&a.b), bits(&b.b));
+            assert_eq!(a.relu, b.relu);
+            assert_eq!(a.seg_budget, b.seg_budget);
+        }
+        // The RNG snapshot resumes the stream exactly.
+        let mut orig = ck.rng();
+        let mut restored = back.rng();
+        for _ in 0..50 {
+            assert_eq!(orig.next_u64(), restored.next_u64());
+        }
+    }
+
+    #[test]
+    fn save_load_and_missing_dir() {
+        let dir = TempDir::new("checkpoint-unit");
+        assert!(load(dir.path()).unwrap().is_none());
+        assert!(load(&dir.path().join("never-created")).unwrap().is_none());
+        let ck = example();
+        let bytes = save(dir.path(), &ck).unwrap();
+        assert_eq!(bytes, std::fs::metadata(checkpoint_path(dir.path())).unwrap().len());
+        let back = load(dir.path()).unwrap().expect("checkpoint present");
+        assert_eq!(back.step, ck.step);
+        assert_eq!(bits(&back.layers[0].w.data), bits(&ck.layers[0].w.data));
+        // Overwrite with a later step wins.
+        let mut later = ck.clone();
+        later.step = 8;
+        save(dir.path(), &later).unwrap();
+        assert_eq!(load(dir.path()).unwrap().unwrap().step, 8);
+    }
+
+    #[test]
+    fn save_is_atomic_against_a_stale_tmp_and_kills_mid_write() {
+        let dir = TempDir::new("checkpoint-atomic");
+        let ck = example();
+        save(dir.path(), &ck).unwrap();
+        // A kill mid-write strands a torn tmp file; the published
+        // checkpoint must stay intact and the next save must recover.
+        let tmp = checkpoint_path(dir.path()).with_extension("bin.tmp");
+        std::fs::write(&tmp, b"torn partial write").unwrap();
+        assert_eq!(load(dir.path()).unwrap().unwrap().step, ck.step);
+        let mut next = ck.clone();
+        next.step = 9;
+        save(dir.path(), &next).unwrap();
+        assert!(!tmp.exists(), "publish consumes the tmp file");
+        assert_eq!(load(dir.path()).unwrap().unwrap().step, 9);
+    }
+
+    #[test]
+    fn corruption_and_version_skew_are_typed_errors_not_fresh_starts() {
+        let dir = TempDir::new("checkpoint-corrupt");
+        let ck = example();
+        save(dir.path(), &ck).unwrap();
+        let path = checkpoint_path(dir.path());
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(dir.path()).unwrap_err();
+        assert!(err.to_string().contains("decode checkpoint"), "{err}");
+
+        // A future body version is refused by name, not misparsed.
+        let mut body_v2 = encode_checkpoint(&ck);
+        // Body starts after the 64-byte container header; bump the version
+        // word and re-seal both container checksums.
+        body_v2[64] = 2;
+        let payload_sum = crate::sparse::segio::fnv1a64(&body_v2[64..]);
+        body_v2[48..56].copy_from_slice(&payload_sum.to_le_bytes());
+        let header_sum = crate::sparse::segio::fnv1a64(&body_v2[0..56]);
+        body_v2[56..64].copy_from_slice(&header_sum.to_le_bytes());
+        let err = decode_checkpoint(&body_v2).unwrap_err();
+        assert!(err.to_string().contains("unsupported checkpoint version 2"), "{err}");
+
+        // An oversized count field cannot cause a huge reserve: it is
+        // bounded by the bytes actually present.
+        let mut big = encode_checkpoint(&ck);
+        // loss-count field sits at body offset 29 (4 + 8 + 1 + 16).
+        big[64 + 29..64 + 37].copy_from_slice(&u64::MAX.to_le_bytes());
+        let payload_sum = crate::sparse::segio::fnv1a64(&big[64..]);
+        big[48..56].copy_from_slice(&payload_sum.to_le_bytes());
+        let header_sum = crate::sparse::segio::fnv1a64(&big[0..56]);
+        big[56..64].copy_from_slice(&header_sum.to_le_bytes());
+        let err = decode_checkpoint(&big).unwrap_err();
+        assert!(err.to_string().contains("loss count"), "{err}");
+    }
+}

@@ -20,8 +20,13 @@
 //! * [`train_stream`] — out-of-core training end to end: the streamed
 //!   backward pass reversing the concatenated RoBW plan, gradient panels
 //!   through the tiered store, and the recompute-vs-reload policy for
-//!   aggregated inputs, with the dense CPU path as its bitwise oracle.
+//!   aggregated inputs, with the dense CPU path as its bitwise oracle;
+//! * [`checkpoint`] — versioned, checksummed training checkpoints
+//!   (parameters + step index + policy + RNG state) written with the
+//!   write-temp-then-rename discipline, so a streamed run killed between
+//!   steps resumes to bitwise-identical final parameters.
 
+pub mod checkpoint;
 pub mod model;
 pub mod oocgcn;
 pub mod pipeline;
@@ -29,6 +34,7 @@ pub mod serve;
 pub mod train;
 pub mod train_stream;
 
+pub use checkpoint::Checkpoint;
 pub use model::Gcn2Ref;
 pub use oocgcn::{LayerReport, OocGcnLayer, StagingBacking, StagingConfig};
 pub use pipeline::{OocGcnModel, PipelineConfig, PipelineReport};

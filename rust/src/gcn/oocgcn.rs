@@ -26,6 +26,8 @@
 
 use crate::gcn::pipeline::{forward_pipelined_cpu, forward_pipelined_staged, PipelineConfig};
 use crate::memsim::{CostModel, GpuMem};
+use crate::runtime::chaos::FaultPlan;
+use crate::runtime::heal::{HealPolicy, HealStats};
 use crate::runtime::pool::Pool;
 use crate::runtime::prefetch::Prefetch;
 use crate::runtime::recycle::BufferPool;
@@ -66,6 +68,11 @@ pub struct LayerReport {
     /// attached: memsim charges the measured byte counts instead of
     /// sleeping on planner estimates.
     pub staged_io_modeled_s: f64,
+    /// Recovery actions this layer's staging took (retries, quarantines,
+    /// rebuilds, virtual backoff). All-zero on a fault-free pass — and the
+    /// *only* field allowed to differ between a healed run and its
+    /// fault-free oracle.
+    pub heal: HealStats,
 }
 
 /// Where the Phase II producer gets segment bytes from.
@@ -113,6 +120,19 @@ pub struct StagingConfig {
     /// performs zero heap allocations per segment
     /// (`rust/tests/alloc_free.rs`). Output is byte-identical either way.
     pub recycle: Option<Arc<BufferPool>>,
+    /// Recovery policy for tiered-store reads (see
+    /// [`runtime::heal`](crate::runtime::heal)). The default is fail-fast
+    /// — every store fault stays a typed error, exactly the historical
+    /// behaviour. With retries/rebuild enabled, transient faults heal with
+    /// virtual backoff and persistent corruption is quarantined and
+    /// rebuilt, all counted in [`LayerReport::heal`]; the served bytes are
+    /// identical either way.
+    pub heal: HealPolicy,
+    /// Optional seeded fault injector consulted before every disk-backed
+    /// store read (see [`runtime::chaos`](crate::runtime::chaos)). `None`
+    /// (default) injects nothing. Plans carry consumed per-target
+    /// counters, so build a fresh plan per run when comparing runs.
+    pub chaos: Option<Arc<FaultPlan>>,
 }
 
 impl StagingConfig {
@@ -131,15 +151,26 @@ impl StagingConfig {
     pub fn disk(store: Arc<SegmentStore>, depth: usize) -> StagingConfig {
         StagingConfig {
             prefetch: Prefetch::new(depth),
-            io_cost: None,
             backing: StagingBacking::Disk(store),
-            recycle: None,
+            ..StagingConfig::default()
         }
     }
 
     /// The same configuration with buffer recycling through `pool`.
     pub fn with_recycle(mut self, pool: Arc<BufferPool>) -> StagingConfig {
         self.recycle = Some(pool);
+        self
+    }
+
+    /// The same configuration with recovery policy `heal`.
+    pub fn with_heal(mut self, heal: HealPolicy) -> StagingConfig {
+        self.heal = heal;
+        self
+    }
+
+    /// The same configuration with fault injection from `plan`.
+    pub fn with_chaos(mut self, plan: Arc<FaultPlan>) -> StagingConfig {
+        self.chaos = Some(plan);
         self
     }
 }

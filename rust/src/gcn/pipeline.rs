@@ -42,6 +42,7 @@ use crate::gcn::model::dense_affine;
 use crate::gcn::oocgcn::{LayerReport, OocGcnLayer, StagingBacking, StagingConfig};
 use crate::memsim::{GpuMem, Op, StagingMeter};
 use crate::partition::robw::{materialize_into, robw_partition_par, RobwSegment};
+use crate::runtime::heal::{read_panel_healing, read_segment_healing, HealStats, RebuildSource};
 use crate::runtime::pool::Pool;
 use crate::runtime::recycle::BufferPool;
 use crate::runtime::segstore::{PanelRead, PanelStore, SegmentRead};
@@ -123,6 +124,7 @@ impl PipelineReport {
             m.cache_hits += r.cache_hits;
             m.cache_misses += r.cache_misses;
             m.staged_io_modeled_s += r.staged_io_modeled_s;
+            m.heal.merge(&r.heal);
         }
         m
     }
@@ -347,6 +349,11 @@ struct LedgerState<'a> {
     /// Feature-panel bytes (Phase I residency) not yet freed by a finish.
     panels: u64,
     meters: Vec<StagingMeter>,
+    /// Per-layer recovery counters — accumulated under the lock because
+    /// the producer closure is `Fn`, like `meters`. Kept separate from the
+    /// meters so the oracle comparison (meters equal at every sweep point)
+    /// stays exact: only these may differ on a healed run.
+    heals: Vec<HealStats>,
 }
 
 /// The consumer's view of the current layer's input panel.
@@ -511,6 +518,7 @@ pub(crate) fn forward_pipelined<Ctx>(
         staged: 0,
         panels: 0,
         meters: vec![StagingMeter::default(); nl],
+        heals: vec![HealStats::default(); nl],
     });
 
     // Consumer-side state (all touched only on the calling thread).
@@ -560,10 +568,26 @@ pub(crate) fn forward_pipelined<Ctx>(
                     Ok(SegmentRead::Owned(sub))
                 }
                 StagingBacking::Disk(store) => {
-                    let (sub, origin) = store
-                        .read_reusing(i, reuse, recycle)
+                    // The healing wrapper is a pass-through under the
+                    // default policy; its stats land on the ledger even
+                    // when the read ultimately fails, so an aborted pass
+                    // still accounts the recovery it attempted.
+                    let mut heal = HealStats::default();
+                    let res = read_segment_healing(
+                        store,
+                        i,
+                        reuse,
+                        recycle,
+                        &staging.heal,
+                        staging.chaos.as_deref(),
+                        Some(RebuildSource { a: a_hat, seg }),
+                        &mut heal,
+                    );
+                    let mut led = lock(&ledger);
+                    led.heals[l].merge(&heal);
+                    let (sub, origin) = res
                         .map_err(|e| anyhow!("layer {l}: staging segment {i} from disk: {e}"))?;
-                    lock(&ledger).meters[l].record(origin.disk_bytes, origin.cache_hit);
+                    led.meters[l].record(origin.disk_bytes, origin.cache_hit);
                     Ok(sub)
                 }
             }
@@ -577,7 +601,17 @@ pub(crate) fn forward_pipelined<Ctx>(
                 // spilled one) and take this layer's aggregation panel.
                 if let XCur::Spilled = x_cur {
                     let ps = cfg.panel_spill.as_ref().expect("spilled only with a store");
-                    let (panel, origin) = ps.read_reusing(l - 1, recycle).map_err(|e| {
+                    let mut heal = HealStats::default();
+                    let res = read_panel_healing(
+                        ps,
+                        l - 1,
+                        recycle,
+                        &staging.heal,
+                        staging.chaos.as_deref(),
+                        &mut heal,
+                    );
+                    reports[l].heal.merge(&heal);
+                    let (panel, origin) = res.map_err(|e| {
                         anyhow!("layer {l}: reading back spilled feature panel: {e}")
                     })?;
                     panel_read_bytes += origin.disk_bytes;
@@ -680,6 +714,7 @@ pub(crate) fn forward_pipelined<Ctx>(
         if let Some(cm) = &staging.io_cost {
             r.staged_io_modeled_s = meter.modeled_read_secs(cm);
         }
+        r.heal.merge(&led.heals[l]);
     }
     Ok((
         final_out.expect("last layer finished on the success path"),

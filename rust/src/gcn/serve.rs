@@ -34,6 +34,7 @@ use crate::gcn::model::dense_affine;
 use crate::gcn::oocgcn::{OocGcnLayer, StagingBacking, StagingConfig};
 use crate::memsim::{GpuMem, OomError, Op, StagingMeter};
 use crate::partition::robw::{materialize_into, robw_partition_par};
+use crate::runtime::heal::{read_segment_healing, HealStats, RebuildSource};
 use crate::runtime::pool::Pool;
 use crate::runtime::segstore::SegmentRead;
 use crate::sparse::spmm::{spmm_par_into, Dense};
@@ -119,6 +120,9 @@ pub struct BatchReport {
     pub cache_hits: usize,
     /// Segment reads that went to disk.
     pub cache_misses: usize,
+    /// Recovery actions the pass's staging took (all-zero when fault-free;
+    /// the only field allowed to differ from the fault-free oracle).
+    pub heal: HealStats,
 }
 
 /// Ledger state shared between the staging producer and the fan-out
@@ -128,6 +132,8 @@ struct BatchLedger<'a> {
     mem: &'a mut GpuMem,
     staged: u64,
     meter: StagingMeter,
+    /// Recovery counters, separate from the oracle-compared meter.
+    heal: HealStats,
 }
 
 /// Serve a batch of tenant queries with **one** staged pass of `a_hat`.
@@ -273,7 +279,12 @@ pub fn serve_batch(
             }
         })
         .collect();
-    let ledger = Mutex::new(BatchLedger { mem, staged: 0, meter: StagingMeter::default() });
+    let ledger = Mutex::new(BatchLedger {
+        mem,
+        staged: 0,
+        meter: StagingMeter::default(),
+        heal: HealStats::default(),
+    });
     let plan_ref = &plan;
     // Each tenant's merge is serial *within* the tenant (the batch is the
     // parallel axis) and writes the same disjoint row ranges in the same
@@ -327,10 +338,25 @@ pub fn serve_batch(
                     Ok(SegmentRead::Owned(sub))
                 }
                 StagingBacking::Disk(store) => {
-                    let (sub, origin) = store.read_reusing(i, reuse, recycle).map_err(|e| {
+                    // Pass-through under the default policy; recovery
+                    // stats land on the ledger even when the read fails.
+                    let mut heal = HealStats::default();
+                    let res = read_segment_healing(
+                        store,
+                        i,
+                        reuse,
+                        recycle,
+                        &staging.heal,
+                        staging.chaos.as_deref(),
+                        Some(RebuildSource { a: a_hat, seg }),
+                        &mut heal,
+                    );
+                    let mut led = lock(&ledger);
+                    led.heal.merge(&heal);
+                    let (sub, origin) = res.map_err(|e| {
                         ServeError::Streaming(format!("staging segment {i} from disk: {e}"))
                     })?;
-                    lock(&ledger).meter.record(origin.disk_bytes, origin.cache_hit);
+                    led.meter.record(origin.disk_bytes, origin.cache_hit);
                     Ok(sub)
                 }
             }
@@ -356,6 +382,7 @@ pub fn serve_batch(
     report.disk_bytes = led.meter.disk_bytes;
     report.cache_hits = led.meter.cache_hits;
     report.cache_misses = led.meter.cache_misses;
+    report.heal = led.heal;
     match streamed {
         Ok(leftovers) => {
             if let Some(rp) = recycle {
@@ -448,6 +475,13 @@ pub struct ServeReport {
     pub segments_per_s: f64,
     /// Whether the ledger returned to its pre-run level after every batch.
     pub ledger_balanced: bool,
+    /// Requests rejected with a typed error, summed over every tenant —
+    /// the headline degraded-service signal (per-tenant breakdowns live in
+    /// [`Self::per_tenant`]). The CI serve smoke gates on this being 0.
+    pub rejected_total: usize,
+    /// Recovery actions across every staged pass of the run (all-zero
+    /// when fault-free).
+    pub heal: HealStats,
     /// Per-tenant latency summaries, in tenant order.
     pub per_tenant: Vec<TenantLatency>,
 }
@@ -464,6 +498,15 @@ impl ServeReport {
         root.insert("wall_s".to_string(), Json::Num(self.wall_s));
         root.insert("segments_per_s".to_string(), Json::Num(self.segments_per_s));
         root.insert("ledger_balanced".to_string(), Json::Bool(self.ledger_balanced));
+        root.insert("rejected_total".to_string(), Json::Num(self.rejected_total as f64));
+        let mut heal = BTreeMap::new();
+        heal.insert("injected".to_string(), Json::Num(self.heal.injected as f64));
+        heal.insert("retries".to_string(), Json::Num(self.heal.retries as f64));
+        heal.insert("slow_reads".to_string(), Json::Num(self.heal.slow_reads as f64));
+        heal.insert("quarantined".to_string(), Json::Num(self.heal.quarantined as f64));
+        heal.insert("rebuilt".to_string(), Json::Num(self.heal.rebuilt as f64));
+        heal.insert("backoff_bytes".to_string(), Json::Num(self.heal.backoff_bytes as f64));
+        root.insert("heal".to_string(), Json::Obj(heal));
         let mut tenants = BTreeMap::new();
         for t in &self.per_tenant {
             let mut entry = BTreeMap::new();
@@ -531,6 +574,7 @@ pub fn serve_open_loop(
         let (results, brep) = serve_batch(a_hat, &batch_queries, mem, pool, staging);
         report.batches += 1;
         report.segments_streamed += brep.segments;
+        report.heal.merge(&brep.heal);
         if mem.used != baseline_used {
             report.ledger_balanced = false;
         }
@@ -550,6 +594,7 @@ pub fn serve_open_loop(
     } else {
         0.0
     };
+    report.rejected_total = rejected.iter().sum();
     report.per_tenant = (0..nt)
         .map(|t| {
             let mut lat = std::mem::take(&mut samples[t]);
@@ -750,8 +795,52 @@ mod tests {
             assert!(t.p99_s.is_finite() && t.p99_s >= t.p50_s);
         }
         assert!(rep.segments_per_s > 0.0);
+        assert_eq!(
+            rep.rejected_total,
+            rep.per_tenant.iter().map(|t| t.rejected).sum::<usize>(),
+            "aggregate rejection count must match the per-tenant breakdown"
+        );
         let json = format!("{}", rep.to_json());
         assert!(json.contains("p99_s"), "{json}");
         assert!(json.contains("tenant_1"), "{json}");
+        assert!(json.contains("\"rejected_total\":0"), "{json}");
+        assert!(json.contains("\"quarantined\":0"), "{json}");
+    }
+
+    #[test]
+    fn rejected_tenants_are_visible_in_the_open_loop_report() {
+        let a_hat = test_graph(103, 150);
+        let mut rng = Pcg::seed(104);
+        let queries: Vec<TenantQuery> =
+            (0..2).map(|_| tenant(&mut rng, 150, 8, 4, 2048)).collect();
+        // Ledger fits one tenant panel (plus staging headroom), not two:
+        // whenever both tenants batch together, one is rejected.
+        let panel = (150 * 8 * 4) as u64;
+        let plan_max: u64 = robw_partition_par(&a_hat, 2048, &Pool::serial())
+            .iter()
+            .map(|s| s.bytes)
+            .max()
+            .unwrap();
+        let mut mem = GpuMem::new(panel + 3 * plan_max);
+        let cfg = OpenLoopConfig { requests_per_tenant: 3, rate_hz: 1000.0, max_batch: 8 };
+        let rep = serve_open_loop(
+            &a_hat,
+            &queries,
+            &mut mem,
+            &Pool::new(2),
+            &StagingConfig::depth(1),
+            &cfg,
+        );
+        assert!(rep.rejected_total > 0, "admission pressure must reject someone");
+        assert_eq!(
+            rep.rejected_total,
+            rep.per_tenant.iter().map(|t| t.rejected).sum::<usize>()
+        );
+        assert!(rep.ledger_balanced);
+        let json = format!("{}", rep.to_json());
+        assert!(
+            json.contains(&format!("\"rejected_total\":{}", rep.rejected_total)),
+            "degraded service must be visible in the JSON report: {json}"
+        );
     }
 }

@@ -55,6 +55,7 @@
 //! pipeline whose scratch buffers flow back through the recycle pool
 //! (steady-state constant-alloc, `rust/tests/alloc_free.rs`).
 
+use crate::gcn::checkpoint::Checkpoint;
 use crate::gcn::model::{
     add_at_b, column_sums_into, dense_affine, matmul_bt_into, softmax_xent, softmax_xent_grad,
 };
@@ -62,6 +63,10 @@ use crate::gcn::oocgcn::{OocGcnLayer, StagingBacking, StagingConfig};
 use crate::gcn::pipeline::{forward_pipelined, layer_widths, PipelineConfig, PipelineReport};
 use crate::memsim::{GpuMem, Op, StagingMeter};
 use crate::partition::robw::{materialize_into, robw_partition_par, RobwSegment};
+use crate::runtime::chaos::FaultPlan;
+use crate::runtime::heal::{
+    read_panel_healing, read_segment_healing, HealPolicy, HealStats, RebuildSource,
+};
 use crate::runtime::pool::Pool;
 use crate::runtime::recycle::BufferPool;
 use crate::runtime::segstore::{PanelRead, PanelStore, SegmentRead};
@@ -216,6 +221,10 @@ pub struct StepReport {
     pub backward_cache_misses: usize,
     /// Ledger high-water mark over the whole step (forward + backward).
     pub peak_gpu_bytes: u64,
+    /// Recovery counters over the whole step (forward + backward, segment
+    /// + panel reads) — the only field allowed to differ from a fault-free
+    /// run of the same step.
+    pub heal: HealStats,
 }
 
 /// Apply one SGD update in place: `W -= lr·dW`, `b -= lr·db`. Shared by
@@ -285,6 +294,10 @@ struct BackLedger<'a> {
     /// Backward working-set bytes charged at layer opens, freed at closes.
     work: u64,
     meter: StagingMeter,
+    /// Recovery counters from the staging producer — accumulated under the
+    /// ledger lock (the producer closure is `Fn`), kept separate from the
+    /// meter so oracle comparisons stay exact.
+    heal: HealStats,
 }
 
 /// The backward pass's view of layer `l`'s input activations X_l
@@ -334,6 +347,10 @@ struct BackwardPass<'a> {
     pool: &'a Pool,
     recompute: bool,
     lr: f32,
+    /// Recovery policy for the pass's own panel reads (the staging
+    /// producer carries its own copy through the ledger).
+    policy: &'a HealPolicy,
+    chaos: Option<&'a FaultPlan>,
     // ---- live per-layer state (Some between open and close).
     dz: Option<Dense>,
     dagg: Option<Vec<f32>>,
@@ -350,6 +367,8 @@ struct BackwardPass<'a> {
     act_read_bytes: u64,
     panel_hits: usize,
     panel_misses: usize,
+    /// Recovery counters from the pass's panel reads.
+    heal: HealStats,
 }
 
 impl<'a> BackwardPass<'a> {
@@ -430,10 +449,15 @@ impl<'a> BackwardPass<'a> {
         let mut dz = if l + 1 == nl {
             self.grad_out.take().expect("softmax gradient present at top-layer open")
         } else {
-            let (pr, origin) =
-                self.panels.read_reusing(grad_slot(nl), self.recycle).map_err(|e| {
-                    anyhow!("backward layer {l}: reading spilled gradient panel: {e}")
-                })?;
+            let (pr, origin) = read_panel_healing(
+                self.panels,
+                grad_slot(nl),
+                self.recycle,
+                self.policy,
+                self.chaos,
+                &mut self.heal,
+            )
+            .map_err(|e| anyhow!("backward layer {l}: reading spilled gradient panel: {e}"))?;
             self.grad_read_bytes += origin.disk_bytes;
             self.note_panel(origin.cache_hit);
             self.owned_panel(pr)
@@ -454,7 +478,15 @@ impl<'a> BackwardPass<'a> {
                     led.work += mask_bytes;
                 }
                 self.work += mask_bytes;
-                let (pr, origin) = self.panels.read_reusing(l, self.recycle).map_err(|e| {
+                let (pr, origin) = read_panel_healing(
+                    self.panels,
+                    l,
+                    self.recycle,
+                    self.policy,
+                    self.chaos,
+                    &mut self.heal,
+                )
+                .map_err(|e| {
                     anyhow!("backward layer {l}: reading spilled activation panel: {e}")
                 })?;
                 self.act_read_bytes += origin.disk_bytes;
@@ -482,10 +514,15 @@ impl<'a> BackwardPass<'a> {
             self.xl = Some(if l == 0 {
                 XInput::Borrowed(self.x0)
             } else {
-                let (pr, origin) =
-                    self.panels.read_reusing(l - 1, self.recycle).map_err(|e| {
-                        anyhow!("backward layer {l}: reading spilled input panel: {e}")
-                    })?;
+                let (pr, origin) = read_panel_healing(
+                    self.panels,
+                    l - 1,
+                    self.recycle,
+                    self.policy,
+                    self.chaos,
+                    &mut self.heal,
+                )
+                .map_err(|e| anyhow!("backward layer {l}: reading spilled input panel: {e}"))?;
                 self.act_read_bytes += origin.disk_bytes;
                 self.note_panel(origin.cache_hit);
                 match pr {
@@ -545,10 +582,15 @@ impl<'a> BackwardPass<'a> {
                 led.work += agg_bytes;
             }
             self.work += agg_bytes;
-            let (pr, origin) =
-                self.panels.read_reusing(agg_slot(nl, l), self.recycle).map_err(|e| {
-                    anyhow!("backward layer {l}: reloading aggregated input: {e}")
-                })?;
+            let (pr, origin) = read_panel_healing(
+                self.panels,
+                agg_slot(nl, l),
+                self.recycle,
+                self.policy,
+                self.chaos,
+                &mut self.heal,
+            )
+            .map_err(|e| anyhow!("backward layer {l}: reloading aggregated input: {e}"))?;
             self.agg_read_bytes += origin.disk_bytes;
             self.note_panel(origin.cache_hit);
             let mut dw = Dense::from_vec(f, h, self.zeroed(f * h));
@@ -750,8 +792,13 @@ impl StreamedTrainer {
             _ => (0, 0),
         };
 
-        let ledger =
-            Mutex::new(BackLedger { mem, staged: 0, work: 0, meter: StagingMeter::default() });
+        let ledger = Mutex::new(BackLedger {
+            mem,
+            staged: 0,
+            work: 0,
+            meter: StagingMeter::default(),
+            heal: HealStats::default(),
+        });
         let mut bp = BackwardPass {
             layers: &mut self.layers,
             plans: &plans,
@@ -765,6 +812,8 @@ impl StreamedTrainer {
             pool,
             recompute,
             lr,
+            policy: &staging.heal,
+            chaos: staging.chaos.as_deref(),
             dz: None,
             dagg: None,
             dx: None,
@@ -778,6 +827,7 @@ impl StreamedTrainer {
             act_read_bytes: 0,
             panel_hits: 0,
             panel_misses: 0,
+            heal: HealStats::default(),
         };
 
         let streamed = staging.prefetch.run_recycling(
@@ -810,10 +860,23 @@ impl StreamedTrainer {
                         Ok(SegmentRead::Owned(sub))
                     }
                     StagingBacking::Disk(store) => {
-                        let (sub, origin) = store.read_reusing(i, reuse, recycle).map_err(|e| {
+                        let mut heal = HealStats::default();
+                        let res = read_segment_healing(
+                            store,
+                            i,
+                            reuse,
+                            recycle,
+                            &staging.heal,
+                            staging.chaos.as_deref(),
+                            Some(RebuildSource { a: a_hat, seg }),
+                            &mut heal,
+                        );
+                        let mut led = lock(&ledger);
+                        led.heal.merge(&heal);
+                        let (sub, origin) = res.map_err(|e| {
                             anyhow!("backward layer {l}: staging segment {i} from disk: {e}")
                         })?;
-                        lock(&ledger).meter.record(origin.disk_bytes, origin.cache_hit);
+                        led.meter.record(origin.disk_bytes, origin.cache_hit);
                         Ok(sub)
                     }
                 }
@@ -856,7 +919,10 @@ impl StreamedTrainer {
         let (grad_spill_bytes, grad_read_bytes) = (bp.grad_spill_bytes, bp.grad_read_bytes);
         let (agg_read_bytes, act_read_bytes) = (bp.agg_read_bytes, bp.act_read_bytes);
         let (panel_hits, panel_misses) = (bp.panel_hits, bp.panel_misses);
+        let mut heal = forward.merged().heal;
+        heal.merge(&bp.heal);
         let led = ledger.into_inner().unwrap_or_else(PoisonError::into_inner);
+        heal.merge(&led.heal);
         if led.staged > 0 {
             led.mem.free(led.staged);
         }
@@ -894,6 +960,7 @@ impl StreamedTrainer {
             backward_cache_hits,
             backward_cache_misses,
             peak_gpu_bytes,
+            heal,
         })
     }
 
@@ -924,6 +991,40 @@ impl StreamedTrainer {
             .fold(f32::INFINITY, f32::min);
         let last = *self.losses.last().expect("at least one step ran");
         Ok((first, best, last))
+    }
+
+    /// Adopt a [`Checkpoint`]'s parameter and loss state, returning the
+    /// step index to resume from. The checkpoint must match the model
+    /// layer-for-layer in shape; labels and graph are the caller's and are
+    /// not checkpointed. After a restore, continuing the run produces
+    /// bitwise the same parameters as the uninterrupted run — streamed
+    /// steps draw no randomness, so the state swap is the whole resume.
+    pub fn restore(&mut self, ck: &Checkpoint) -> Result<u64> {
+        if ck.layers.len() != self.layers.len() {
+            bail!(
+                "checkpoint has {} layers but the model has {}",
+                ck.layers.len(),
+                self.layers.len()
+            );
+        }
+        for (l, (cur, new)) in self.layers.iter().zip(ck.layers.iter()).enumerate() {
+            if (cur.w.nrows, cur.w.ncols, cur.b.len())
+                != (new.w.nrows, new.w.ncols, new.b.len())
+            {
+                bail!(
+                    "checkpoint layer {l} is {}x{} (+{} biases) but the model expects {}x{} (+{})",
+                    new.w.nrows,
+                    new.w.ncols,
+                    new.b.len(),
+                    cur.w.nrows,
+                    cur.w.ncols,
+                    cur.b.len()
+                );
+            }
+        }
+        self.layers = ck.layers.clone();
+        self.losses = ck.losses.clone();
+        Ok(ck.step)
     }
 }
 
@@ -1279,6 +1380,34 @@ mod tests {
         let mut short = StreamedTrainer::new(layers, labels[..29].to_vec()).unwrap();
         assert!(short.step(&a_hat, &x0, &mut mem, &Pool::serial(), &cfg, 1.0).is_err());
         assert_eq!(mem.used, 0);
+    }
+
+    #[test]
+    fn restore_swaps_state_and_validates_shapes() {
+        let mut rng = Pcg::seed(85);
+        let layers = test_layers(&mut rng, &[5, 4, 3], &[true, false], 1024);
+        let mut tr = StreamedTrainer::new(layers.clone(), vec![0i32; 10]).unwrap();
+        let mut ck_layers = layers.clone();
+        ck_layers[0].w.data[0] = 9.5;
+        let ck = Checkpoint {
+            step: 3,
+            policy: RecomputePolicy::Auto,
+            rng: rng.state(),
+            losses: vec![2.0, 1.0, 0.5],
+            layers: ck_layers,
+        };
+        assert_eq!(tr.restore(&ck).unwrap(), 3);
+        assert_eq!(tr.layers[0].w.data[0].to_bits(), 9.5f32.to_bits());
+        assert_eq!(tr.losses, vec![2.0, 1.0, 0.5]);
+
+        let mut wrong = ck.clone();
+        wrong.layers.pop();
+        let err = tr.restore(&wrong).unwrap_err();
+        assert!(err.to_string().contains("has 1 layers"), "{err}");
+        let mut wrong = ck.clone();
+        wrong.layers[1].w = Dense::zeros(9, 9);
+        let err = tr.restore(&wrong).unwrap_err();
+        assert!(err.to_string().contains("layer 1"), "{err}");
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //!   report [--out F]   regenerate the full evaluation report
 //!   train [--steps N] [--lr X] [--nodes N] [--train-stream]
 //!         [--layers L] [--budget BYTES] [--recompute-policy P]
-//!         [--panel-dir DIR]
+//!         [--panel-dir DIR] [--checkpoint-dir DIR]
 //!                      e2e GCN training: the dense PJRT artifact path
 //!                      by default; --train-stream streams the forward
 //!                      AND backward pass out of core instead (RoBW
@@ -16,7 +16,11 @@
 //!                      the tiered store, recompute-vs-reload policy P
 //!                      in reload|recompute|auto) and verifies every
 //!                      step's loss bitwise against the dense CPU
-//!                      oracle — no compiled artifacts needed
+//!                      oracle — no compiled artifacts needed.
+//!                      --checkpoint-dir persists a versioned checksummed
+//!                      checkpoint after every step and resumes from it
+//!                      on the next run: a run killed between steps
+//!                      finishes with bitwise-identical final parameters
 //!   spgemm [--nodes N] [--budget BYTES] [--prefetch-depth D]
 //!                      one out-of-core aggregation through the artifacts,
 //!                      verified against the CPU oracle (--segment-dir
@@ -34,6 +38,17 @@
 //!                      layer boundaries; --panel-dir spills intermediate
 //!                      feature panels) and verify byte-identity against
 //!                      the per-layer sequential oracle (artifact-free)
+//!   faultcheck [--nodes N] [--budget BYTES]
+//!                      chaos-engineering check of the self-healing
+//!                      tiered store (no compiled artifacts needed):
+//!                      injects transient I/O faults, a slow read, and
+//!                      persistent on-disk corruption, heals them by
+//!                      bounded retry and quarantine-and-rebuild, and
+//!                      verifies the healed output byte-identical to
+//!                      the fault-free oracle; then kills a streamed
+//!                      training run between steps and verifies the
+//!                      checkpoint-resumed parameters match the
+//!                      uninterrupted run bitwise
 //!   serve [--scale S] [--feat F] [--budget BYTES] [--tenants N]
 //!         [--requests R] [--rate-hz HZ] [--max-batch B] [--out F]
 //!                      multi-tenant batched inference under open-loop
@@ -109,6 +124,7 @@ fn staging_for(
     host_cache_bytes: u64,
     prefetch_depth: usize,
     recycle_pool: &Option<std::sync::Arc<aires::runtime::BufferPool>>,
+    heal: aires::runtime::HealPolicy,
 ) -> aires::gcn::oocgcn::StagingConfig {
     use aires::gcn::oocgcn::StagingConfig;
     let mut staging = match segment_dir {
@@ -131,7 +147,7 @@ fn staging_for(
     if let Some(rp) = recycle_pool {
         staging = staging.with_recycle(rp.clone());
     }
-    staging
+    staging.with_heal(heal)
 }
 
 fn main() {
@@ -192,6 +208,30 @@ fn main() {
             .unwrap_or(aires::runtime::recycle::DEFAULT_RECYCLE_CAP);
     let recycle_pool = (recycle_cap_bytes > 0)
         .then(|| std::sync::Arc::new(aires::runtime::BufferPool::new(recycle_cap_bytes)));
+    // Self-healing tiered-store reads (`runtime::heal`): --retry-max
+    // bounds per-read retries of transient I/O faults (0 = fail fast, the
+    // historical behaviour) and --retry-backoff-ios sets the deterministic
+    // virtual-time backoff charged between attempts, in multiples of the
+    // faulted file's size. Any non-zero retry budget also arms
+    // quarantine-and-rebuild for persistent segment corruption. Config
+    // keys `retry_max` / `retry_backoff_ios` as fallback. Healed output
+    // is byte-identical to a fault-free run; only HealStats differ.
+    let retry_max: usize =
+        parsed_flag(&args, "--retry-max", "a retry count (0 = fail fast)")
+            .or(cfg.retry_max)
+            .unwrap_or(0);
+    let retry_backoff_ios: u64 = parsed_flag(
+        &args,
+        "--retry-backoff-ios",
+        "a backoff charge in file-sized I/Os (0 = no charge)",
+    )
+    .or(cfg.retry_backoff_ios)
+    .unwrap_or(0);
+    let heal = aires::runtime::HealPolicy {
+        retry_max,
+        backoff_ios: retry_backoff_ios,
+        rebuild: retry_max > 0,
+    };
     let mut cm = cfg.cost_model.clone();
     // --threads always wins; otherwise the config's `threads` key flows
     // into the hook too, unless the config pinned cost_model.cpu_threads
@@ -418,6 +458,7 @@ fn main() {
                     host_cache_bytes,
                     prefetch_depth,
                     &recycle_pool,
+                    heal,
                 );
                 // Panel tier for spilled activations, aggregated inputs
                 // and the rotating gradient hand-off. Cacheless: every
@@ -453,10 +494,60 @@ fn main() {
                     "streamed training: {layers_n}-layer GCN (n={nodes}, f0={f0}, \
                      c={classes}) for {steps} steps, budget {budget}, policy {policy}"
                 );
+                // --checkpoint-dir DIR (config key `checkpoint_dir` as
+                // fallback): persist a versioned, checksummed checkpoint
+                // after every step (write-temp-then-rename, so a kill
+                // mid-write never corrupts the published file) and resume
+                // from it on start-up. The dense oracle replays the
+                // completed steps so the bitwise loss check keeps holding
+                // after a resume.
+                let checkpoint_dir: Option<std::path::PathBuf> =
+                    flag_value(&args, "--checkpoint-dir")
+                        .or_else(|| cfg.checkpoint_dir.clone())
+                        .map(std::path::PathBuf::from);
+                let mut start_step = 0usize;
+                if let Some(dir) = &checkpoint_dir {
+                    match aires::gcn::checkpoint::load(dir) {
+                        Err(e) => {
+                            eprintln!(
+                                "error: loading checkpoint from {}: {e}",
+                                dir.display()
+                            );
+                            std::process::exit(1);
+                        }
+                        Ok(None) => {}
+                        Ok(Some(ck)) => {
+                            let done = tr.restore(&ck).unwrap_or_else(|e| {
+                                eprintln!(
+                                    "error: restoring checkpoint from {}: {e}",
+                                    dir.display()
+                                );
+                                std::process::exit(1);
+                            });
+                            for s in 0..done {
+                                dense_step_oracle(
+                                    &mut oracle_layers,
+                                    &a_hat,
+                                    &x,
+                                    &labels,
+                                    lr,
+                                )
+                                .unwrap_or_else(|e| {
+                                    eprintln!("error: replaying oracle step {s}: {e}");
+                                    std::process::exit(1);
+                                });
+                            }
+                            start_step = done.min(steps as u64) as usize;
+                            println!(
+                                "resumed from checkpoint: {done} step(s) already complete"
+                            );
+                        }
+                    }
+                }
                 let mut mem = GpuMem::new(1 << 30);
                 let sw = Stopwatch::start();
                 let mut last_rep = None;
-                for step in 0..steps {
+                for step in start_step..steps {
                     let rep = tr
                         .step(&a_hat, &x, &mut mem, &pool, &tcfg, lr)
                         .unwrap_or_else(|e| {
@@ -479,30 +570,64 @@ fn main() {
                     if step % 10 == 0 || step + 1 == steps {
                         println!("step {step:4}  loss {:.4}", rep.loss);
                     }
+                    if let Some(dir) = &checkpoint_dir {
+                        let ck = aires::gcn::Checkpoint {
+                            step: (step + 1) as u64,
+                            policy,
+                            rng: rng.state(),
+                            losses: tr.losses.clone(),
+                            layers: tr.layers.clone(),
+                        };
+                        aires::gcn::checkpoint::save(dir, &ck).unwrap_or_else(|e| {
+                            eprintln!(
+                                "error: publishing checkpoint to {}: {e}",
+                                dir.display()
+                            );
+                            std::process::exit(1);
+                        });
+                    }
                     last_rep = Some(rep);
                 }
                 let wall = sw.secs();
-                let rep = last_rep.expect("steps >= 1 after the clamp");
-                let fwd = rep.forward.merged();
-                println!(
-                    "per step: {} forward + {} backward segments (policy {}), \
-                     activation panels read {}, aggregation spill {} / read {}, \
-                     gradient spill {} / read {}",
-                    fwd.segments,
-                    rep.backward_segments,
-                    rep.policy,
-                    aires::util::human_bytes(rep.act_read_bytes),
-                    aires::util::human_bytes(rep.agg_spill_bytes),
-                    aires::util::human_bytes(rep.agg_read_bytes),
-                    aires::util::human_bytes(rep.grad_spill_bytes),
-                    aires::util::human_bytes(rep.grad_read_bytes),
-                );
-                println!(
-                    "ns_per_step {}  ({:.2}s wall for {steps} steps, peak {})",
-                    (wall * 1e9 / steps as f64) as u64,
-                    wall,
-                    aires::util::human_bytes(rep.peak_gpu_bytes)
-                );
+                if let Some(rep) = &last_rep {
+                    let fwd = rep.forward.merged();
+                    println!(
+                        "per step: {} forward + {} backward segments (policy {}), \
+                         activation panels read {}, aggregation spill {} / read {}, \
+                         gradient spill {} / read {}",
+                        fwd.segments,
+                        rep.backward_segments,
+                        rep.policy,
+                        aires::util::human_bytes(rep.act_read_bytes),
+                        aires::util::human_bytes(rep.agg_spill_bytes),
+                        aires::util::human_bytes(rep.agg_read_bytes),
+                        aires::util::human_bytes(rep.grad_spill_bytes),
+                        aires::util::human_bytes(rep.grad_read_bytes),
+                    );
+                    let ran = steps - start_step;
+                    println!(
+                        "ns_per_step {}  ({:.2}s wall for {ran} steps, peak {})",
+                        (wall * 1e9 / ran as f64) as u64,
+                        wall,
+                        aires::util::human_bytes(rep.peak_gpu_bytes)
+                    );
+                    if rep.heal.any() {
+                        println!(
+                            "heal: {} injected, {} retries, {} slow reads, \
+                             {} quarantined / {} rebuilt, backoff {}",
+                            rep.heal.injected,
+                            rep.heal.retries,
+                            rep.heal.slow_reads,
+                            rep.heal.quarantined,
+                            rep.heal.rebuilt,
+                            aires::util::human_bytes(rep.heal.backoff_bytes)
+                        );
+                    }
+                } else {
+                    println!(
+                        "checkpoint already covers all {steps} step(s); nothing left to train"
+                    );
+                }
                 if let Some(rp) = &recycle_pool {
                     let st = rp.stats();
                     println!(
@@ -513,6 +638,20 @@ fn main() {
                 if ephemeral {
                     let _ = std::fs::remove_dir_all(&panel_path);
                 }
+                // Deterministic parameter fingerprint (FNV-1a 64 over the
+                // exact f32 bit patterns): two runs that print the same
+                // hash hold bitwise-identical parameters — the line the
+                // resume e2e test compares across a kill/restart.
+                let mut h = aires::sparse::segio::Fnv64::new();
+                for l in &tr.layers {
+                    for v in &l.w.data {
+                        h.update(&v.to_bits().to_le_bytes());
+                    }
+                    for v in &l.b {
+                        h.update(&v.to_bits().to_le_bytes());
+                    }
+                }
+                println!("final params fnv64: 0x{:016x}", h.finish());
                 println!("streamed loss matches dense oracle: OK");
             }
         }
@@ -548,6 +687,7 @@ fn main() {
                 host_cache_bytes,
                 prefetch_depth,
                 &recycle_pool,
+                heal,
             );
             let (out, rep) = layer
                 .forward_staged(&mut exec, &a_hat, &x, &mut mem, &pool, &staging)
@@ -640,6 +780,7 @@ fn main() {
             if let Some(rp) = &recycle_pool {
                 staging = staging.with_recycle(rp.clone());
             }
+            let staging = staging.with_heal(heal);
             let mut mem = GpuMem::new(1 << 30);
             let (got, rep) = layer
                 .forward_cpu(&a_hat, &x, &mut mem, &pool, &staging)
@@ -671,6 +812,271 @@ fn main() {
             } else {
                 eprintln!("error: disk-backed output DIVERGED from the in-memory oracle");
                 std::process::exit(1);
+            }
+        }
+        "faultcheck" => {
+            // Chaos-engineering surface for the self-healing tiered store
+            // (no compiled artifacts needed). Three scenarios, all checked
+            // against the house determinism rule — a healed run serves
+            // bytes identical to the fault-free oracle, only HealStats
+            // differ:
+            //   1. transient I/O faults + a slow read, healed by bounded
+            //      retry with deterministic virtual-time backoff;
+            //   2. persistent on-disk corruption, healed by quarantining
+            //      the segment file and rebuilding it from the source
+            //      matrix + the RoBW plan;
+            //   3. a streamed training run killed between steps, resumed
+            //      from its checkpoint to bitwise-identical parameters.
+            use aires::gcn::oocgcn::StagingConfig;
+            use aires::gcn::train_stream::synthetic_labels;
+            use aires::gcn::{OocGcnLayer, StreamedTrainer, TrainStreamConfig};
+            use aires::memsim::GpuMem;
+            use aires::runtime::{
+                FaultKind, FaultPlan, FaultSpec, HealPolicy, PanelStore, SegmentStore, Tier,
+            };
+            use aires::sparse::spmm::Dense;
+
+            let nodes: usize = parsed_flag(&args, "--nodes", "a node count").unwrap_or(240);
+            let budget: u64 = parsed_flag(&args, "--budget", "a byte budget").unwrap_or(4096);
+            let mut rng = Pcg::seed(31);
+            let a = aires::graphgen::kmer::generate(&mut rng, nodes, 3.0);
+            let a_hat = aires::sparse::norm::normalize_adjacency(&a);
+            let x = Dense::from_vec(
+                nodes,
+                24,
+                (0..nodes * 24).map(|_| rng.normal() as f32).collect(),
+            );
+            let layer = OocGcnLayer {
+                w: Dense::from_vec(
+                    24,
+                    24,
+                    (0..24 * 24).map(|_| (rng.normal() * 0.2) as f32).collect(),
+                ),
+                b: vec![0.05; 24],
+                relu: true,
+                seg_budget: budget,
+            };
+            let scratch = std::env::temp_dir()
+                .join(format!("aires-faultcheck-{}", std::process::id()));
+            let fatal = |msg: String| -> ! {
+                eprintln!("error: {msg}");
+                std::process::exit(1);
+            };
+            // Cacheless store: every read hits the file, so injected and
+            // real on-disk faults cannot be masked by the host-RAM tier.
+            let segs = aires::partition::robw::robw_partition(&a_hat, budget);
+            let store = std::sync::Arc::new(
+                SegmentStore::open_or_spill(&a_hat, &segs, &scratch.join("segments"), 0)
+                    .unwrap_or_else(|e| fatal(format!("spilling segments: {e}"))),
+            );
+            println!(
+                "faultcheck: {nodes} nodes, {} segments (budget {budget}, \
+                 prefetch depth {prefetch_depth})",
+                store.len()
+            );
+
+            // Fault-free oracle pass.
+            let mut mem0 = GpuMem::new(1 << 30);
+            let (want, _) = layer
+                .forward_cpu(
+                    &a_hat,
+                    &x,
+                    &mut mem0,
+                    &pool,
+                    &StagingConfig::disk(store.clone(), prefetch_depth),
+                )
+                .unwrap_or_else(|e| fatal(format!("fault-free oracle forward: {e}")));
+            let mut balanced = mem0.used == 0;
+
+            // Scenario 1: transient faults + a slow read, healed by retry.
+            let healp = HealPolicy { retry_max: 3, backoff_ios: 2, rebuild: true };
+            let plan = std::sync::Arc::new(FaultPlan::new(vec![
+                FaultSpec {
+                    tier: Tier::Segment,
+                    index: 0,
+                    kind: FaultKind::TransientIo { times: 2 },
+                },
+                FaultSpec {
+                    tier: Tier::Segment,
+                    index: store.len() - 1,
+                    kind: FaultKind::SlowRead { times: 1, charge_bytes: 1 << 16 },
+                },
+            ]));
+            let staging1 = StagingConfig::disk(store.clone(), prefetch_depth)
+                .with_heal(healp)
+                .with_chaos(plan);
+            let mut mem1 = GpuMem::new(1 << 30);
+            let (got1, rep1) = layer
+                .forward_cpu(&a_hat, &x, &mut mem1, &pool, &staging1)
+                .unwrap_or_else(|e| fatal(format!("healing transient faults: {e}")));
+            balanced &= mem1.used == 0;
+            println!(
+                "scenario 1 (transient faults): {} injected, {} retries, {} slow reads, \
+                 backoff {}",
+                rep1.heal.injected,
+                rep1.heal.retries,
+                rep1.heal.slow_reads,
+                aires::util::human_bytes(rep1.heal.backoff_bytes)
+            );
+            let s1 = got1 == want && rep1.heal.retries > 0 && rep1.heal.slow_reads == 1;
+
+            // Scenario 2: persistent corruption, quarantine + rebuild.
+            // Flip the victim file's last payload byte on disk — the
+            // payload checksum rejects it on every subsequent read, so
+            // retries alone cannot heal it.
+            let victim = store.len() - 1;
+            let vpath = store.meta(victim).path.clone();
+            let mut bytes = std::fs::read(&vpath)
+                .unwrap_or_else(|e| fatal(format!("reading {}: {e}", vpath.display())));
+            *bytes.last_mut().expect("segment files are never empty") ^= 0xff;
+            std::fs::write(&vpath, &bytes)
+                .unwrap_or_else(|e| fatal(format!("corrupting {}: {e}", vpath.display())));
+            let staging2 =
+                StagingConfig::disk(store.clone(), prefetch_depth).with_heal(healp);
+            let mut mem2 = GpuMem::new(1 << 30);
+            let (got2, rep2) = layer
+                .forward_cpu(&a_hat, &x, &mut mem2, &pool, &staging2)
+                .unwrap_or_else(|e| fatal(format!("healing on-disk corruption: {e}")));
+            balanced &= mem2.used == 0;
+            let mut qname = vpath.as_os_str().to_owned();
+            qname.push(".quarantined");
+            let quarantined_file = std::path::PathBuf::from(qname).exists();
+            println!(
+                "scenario 2 (corruption): {} quarantined, {} rebuilt, \
+                 quarantine file present: {quarantined_file}",
+                rep2.heal.quarantined, rep2.heal.rebuilt
+            );
+            let s2 = got2 == want
+                && rep2.heal.quarantined == 1
+                && rep2.heal.rebuilt == 1
+                && quarantined_file;
+            if s1 && s2 {
+                println!("healed output matches oracle: OK");
+            } else {
+                let _ = std::fs::remove_dir_all(&scratch);
+                fatal("healed output DIVERGED from the fault-free oracle".into());
+            }
+
+            // Scenario 3: kill a streamed training run between steps and
+            // resume it from the checkpoint; final parameters must match
+            // the uninterrupted run bitwise.
+            let (f0, classes, steps, lr) = (12usize, 3usize, 4usize, 1.0f32);
+            let mut trng = Pcg::seed(53);
+            let tx = Dense::from_vec(
+                nodes,
+                f0,
+                (0..nodes * f0).map(|_| trng.normal() as f32).collect(),
+            );
+            let tlayers: Vec<OocGcnLayer> = (0..2)
+                .map(|l| {
+                    let out = if l == 1 { classes } else { f0 };
+                    OocGcnLayer {
+                        w: Dense::from_vec(
+                            f0,
+                            out,
+                            (0..f0 * out).map(|_| (trng.normal() * 0.3) as f32).collect(),
+                        ),
+                        b: vec![0.0; out],
+                        relu: l == 0,
+                        seg_budget: budget,
+                    }
+                })
+                .collect();
+            let labels = synthetic_labels(&tx, classes, &mut trng);
+            let params_fnv = |layers: &[OocGcnLayer]| -> u64 {
+                let mut h = aires::sparse::segio::Fnv64::new();
+                for l in layers {
+                    for v in &l.w.data {
+                        h.update(&v.to_bits().to_le_bytes());
+                    }
+                    for v in &l.b {
+                        h.update(&v.to_bits().to_le_bytes());
+                    }
+                }
+                h.finish()
+            };
+            let run = |layers: Vec<OocGcnLayer>,
+                       panel_dir: &std::path::Path,
+                       from: usize,
+                       to: usize,
+                       restore_from: Option<&std::path::Path>,
+                       save_to: Option<&std::path::Path>|
+             -> StreamedTrainer {
+                let panels = std::sync::Arc::new(
+                    PanelStore::new(panel_dir, 0)
+                        .unwrap_or_else(|e| fatal(format!("opening panel dir: {e}"))),
+                );
+                let tcfg = TrainStreamConfig::new(
+                    StagingConfig::depth(prefetch_depth),
+                    panels,
+                );
+                let mut tr = StreamedTrainer::new(layers, labels.clone())
+                    .unwrap_or_else(|e| fatal(format!("building trainer: {e}")));
+                if let Some(dir) = restore_from {
+                    let ck = aires::gcn::checkpoint::load(dir)
+                        .unwrap_or_else(|e| fatal(format!("loading checkpoint: {e}")))
+                        .unwrap_or_else(|| {
+                            fatal(format!("no checkpoint in {}", dir.display()))
+                        });
+                    let done = tr
+                        .restore(&ck)
+                        .unwrap_or_else(|e| fatal(format!("restoring checkpoint: {e}")));
+                    if done != from as u64 {
+                        fatal(format!("checkpoint at step {done}, expected {from}"));
+                    }
+                }
+                let mut mem = GpuMem::new(1 << 30);
+                for step in from..to {
+                    tr.step(&a_hat, &tx, &mut mem, &pool, &tcfg, lr).unwrap_or_else(
+                        |e| fatal(format!("streamed training step {step}: {e}")),
+                    );
+                    if let Some(dir) = save_to {
+                        let ck = aires::gcn::Checkpoint {
+                            step: (step + 1) as u64,
+                            policy: aires::gcn::RecomputePolicy::Auto,
+                            rng: trng.state(),
+                            losses: tr.losses.clone(),
+                            layers: tr.layers.clone(),
+                        };
+                        aires::gcn::checkpoint::save(dir, &ck).unwrap_or_else(|e| {
+                            fatal(format!("publishing checkpoint: {e}"))
+                        });
+                    }
+                }
+                if mem.used != 0 {
+                    fatal(format!("ledger not balanced after training: {} bytes", mem.used));
+                }
+                tr
+            };
+            let ckdir = scratch.join("ck");
+            let full = run(tlayers.clone(), &scratch.join("panels-full"), 0, steps, None, None);
+            // "Kill" after 2 steps: the first trainer is dropped with its
+            // checkpoint published; a fresh trainer resumes from disk.
+            let _killed =
+                run(tlayers.clone(), &scratch.join("panels-a"), 0, 2, None, Some(&ckdir));
+            let resumed = run(
+                tlayers.clone(),
+                &scratch.join("panels-b"),
+                2,
+                steps,
+                Some(&ckdir),
+                Some(&ckdir),
+            );
+            let (fa, fb) = (params_fnv(&full.layers), params_fnv(&resumed.layers));
+            println!(
+                "scenario 3 (kill/resume): uninterrupted fnv64 0x{fa:016x}, \
+                 resumed fnv64 0x{fb:016x}"
+            );
+            let _ = std::fs::remove_dir_all(&scratch);
+            if fa == fb {
+                println!("resumed parameters match uninterrupted run: OK");
+            } else {
+                fatal("resumed parameters DIVERGED from the uninterrupted run".into());
+            }
+            if balanced {
+                println!("ledger balanced after every scenario: OK");
+            } else {
+                fatal("ledger NOT balanced after a scenario".into());
             }
         }
         "gcnstream" => {
@@ -738,6 +1144,7 @@ fn main() {
                 host_cache_bytes,
                 prefetch_depth,
                 &recycle_pool,
+                heal,
             );
             // Panel spilling: --panel-dir / config `panel_dir` routes
             // every intermediate feature panel through the disk tier.
@@ -918,6 +1325,7 @@ fn main() {
                 host_cache_bytes,
                 prefetch_depth,
                 &recycle_pool,
+                heal,
             );
             let mut mem = GpuMem::new(256 << 20);
             println!(
@@ -941,6 +1349,22 @@ fn main() {
                     t.p99_s * 1e3,
                     t.completed,
                     t.rejected
+                );
+            }
+            // Rejected-work visibility: admission-control drops are real
+            // served-load loss, so they get a first-class, grep-able line
+            // (the CI serve smoke gates on this reading 0).
+            println!("tenants rejected: {}", rep.rejected_total);
+            if rep.heal.any() {
+                println!(
+                    "heal: {} injected, {} retries, {} slow reads, \
+                     {} quarantined / {} rebuilt, backoff {}",
+                    rep.heal.injected,
+                    rep.heal.retries,
+                    rep.heal.slow_reads,
+                    rep.heal.quarantined,
+                    rep.heal.rebuilt,
+                    aires::util::human_bytes(rep.heal.backoff_bytes)
                 );
             }
             if let Some(rp) = &recycle_pool {
@@ -1149,7 +1573,7 @@ fn main() {
         _ => {
             println!(
                 "aires — out-of-core GCN co-design (AIRES reproduction)\n\n\
-                 usage: aires <catalog|features|fig3|fig6|fig7|fig8|fig9|table3|report|prep|train|spgemm|segcheck|gcnstream|serve|bench|parcheck|trace|sweep|config-dump> [--config F] [--threads N] [--prefetch-depth D] [--segment-dir DIR] [--host-cache-bytes N] [--recycle-cap-bytes N] [--layers L] [--panel-dir DIR] [--tenants N] [--db F] [--train-stream] [--recompute-policy P] [args]\n\
+                 usage: aires <catalog|features|fig3|fig6|fig7|fig8|fig9|table3|report|prep|train|spgemm|segcheck|faultcheck|gcnstream|serve|bench|parcheck|trace|sweep|config-dump> [--config F] [--threads N] [--prefetch-depth D] [--segment-dir DIR] [--host-cache-bytes N] [--recycle-cap-bytes N] [--retry-max N] [--retry-backoff-ios N] [--checkpoint-dir DIR] [--layers L] [--panel-dir DIR] [--tenants N] [--db F] [--train-stream] [--recompute-policy P] [args]\n\
                  see README.md for details"
             );
         }

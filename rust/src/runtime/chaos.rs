@@ -1,0 +1,298 @@
+//! Seeded, schedule-deterministic fault injection for the tiered store.
+//!
+//! A [`FaultPlan`] sits *in front of* [`SegmentStore`](crate::runtime::segstore::SegmentStore)
+//! / [`PanelStore`](crate::runtime::segstore::PanelStore) reads (the
+//! [`runtime::heal`](crate::runtime::heal) wrapper consults it before
+//! touching the store, so even host-cache hits count as attempts) and
+//! injects faults without ever touching the filesystem mid-run: a
+//! transient I/O error on the first N reads of a chosen segment, a
+//! slow-read latency charge, a corrupt-on-read checksum failure, or a
+//! fail-once-then-heal blip. Every downstream recovery path — retry,
+//! quarantine, rebuild — is exercised against the injector first and the
+//! real filesystem second.
+//!
+//! **Determinism.** Fault state is keyed per `(tier, index)`, not by
+//! global arrival order: the prefetch producer reads each index in a
+//! deterministic per-index sequence regardless of depth or thread count,
+//! so the k-th read attempt of segment `i` is the same attempt in every
+//! schedule. A healed run is therefore byte-identical to the fault-free
+//! oracle at every depth × thread × recycle point, with only
+//! [`HealStats`](crate::runtime::heal::HealStats) differing
+//! (`rust/tests/differential.rs`).
+
+use crate::util::rng::Pcg;
+use std::collections::HashMap;
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Poison-tolerant lock: the fault counters are plain integers, so a
+/// panicking reader thread must not cascade into `PoisonError` panics.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Which store a fault targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Tier {
+    /// A RoBW adjacency segment read
+    /// ([`SegmentStore::read_reusing`](crate::runtime::segstore::SegmentStore::read_reusing)).
+    Segment,
+    /// A spilled feature/gradient panel read
+    /// ([`PanelStore::read_reusing`](crate::runtime::segstore::PanelStore::read_reusing)).
+    Panel,
+}
+
+/// What kind of fault a [`FaultSpec`] injects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The first `times` read attempts fail with a transient
+    /// [`SegioError::Io`](crate::sparse::segio::SegioError::Io); attempt
+    /// `times + 1` succeeds. Retryable.
+    TransientIo {
+        /// Read attempts that fail before the fault clears.
+        times: usize,
+    },
+    /// The first `times` reads succeed but charge `charge_bytes` of
+    /// virtual latency into the heal ledger — a degraded-media read that
+    /// completes late rather than failing.
+    SlowRead {
+        /// Reads that arrive slow before the fault clears.
+        times: usize,
+        /// Virtual bytes charged per slow read (priced by the same cost
+        /// model as real staging I/O).
+        charge_bytes: u64,
+    },
+    /// Every read fails with a checksum mismatch until the target is
+    /// quarantined and rebuilt ([`FaultPlan::resolve`] clears it) — the
+    /// persistent-corruption fault.
+    CorruptOnRead,
+    /// Exactly the first read fails transiently, then the fault heals
+    /// itself — shorthand for `TransientIo { times: 1 }`.
+    FailOnceThenHeal,
+}
+
+/// One injected fault: a kind aimed at one `(tier, index)` target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// The store the fault targets.
+    pub tier: Tier,
+    /// The segment or panel index within that store.
+    pub index: usize,
+    /// What happens when the target is read.
+    pub kind: FaultKind,
+}
+
+/// What the injector did to one read attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Injected {
+    /// The attempt fails with a transient I/O error.
+    Io,
+    /// The attempt fails with a (synthesized) payload-checksum mismatch —
+    /// persistent until the target is rebuilt.
+    Corrupt,
+    /// The attempt succeeds but charges virtual latency.
+    Slow {
+        /// Virtual bytes to charge for the slow read.
+        charge_bytes: u64,
+    },
+}
+
+/// Per-spec mutable state: read attempts seen, and whether a rebuild
+/// resolved the fault.
+#[derive(Debug, Default)]
+struct FaultState {
+    attempts: usize,
+    healed: bool,
+}
+
+/// Interior-counter state of a plan: per-spec attempt counts plus the
+/// total faults injected so far.
+#[derive(Debug, Default)]
+struct PlanState {
+    per_spec: HashMap<usize, FaultState>,
+    injected: usize,
+}
+
+/// A deterministic fault schedule. Build one with an explicit spec list
+/// ([`FaultPlan::new`]) or from a seed ([`FaultPlan::seeded`]), share it
+/// via `Arc` through
+/// [`StagingConfig::with_chaos`](crate::gcn::oocgcn::StagingConfig::with_chaos),
+/// and the heal wrapper consults it on every store read. Counters are
+/// interior-mutable (the prefetch producer holds `&FaultPlan`), so a plan
+/// is **consumed** by a run — build a fresh plan per run when comparing
+/// runs.
+#[derive(Debug)]
+pub struct FaultPlan {
+    specs: Vec<FaultSpec>,
+    state: Mutex<PlanState>,
+}
+
+impl FaultPlan {
+    /// A plan injecting exactly `specs`, in spec order per target.
+    pub fn new(specs: Vec<FaultSpec>) -> FaultPlan {
+        FaultPlan { specs, state: Mutex::new(PlanState::default()) }
+    }
+
+    /// A seeded plan of `faults` retryable faults aimed at distinct
+    /// segment indices in `[0, n_segments)`, cycling through transient,
+    /// slow-read, and fail-once kinds. Deterministic in `seed`; every
+    /// fault it plants is healable with `retry_max >= 2`.
+    pub fn seeded(seed: u64, n_segments: usize, faults: usize) -> FaultPlan {
+        let mut rng = Pcg::seed(seed);
+        let mut indices: Vec<usize> = (0..n_segments).collect();
+        rng.shuffle(&mut indices);
+        let specs = indices
+            .into_iter()
+            .take(faults)
+            .enumerate()
+            .map(|(k, index)| FaultSpec {
+                tier: Tier::Segment,
+                index,
+                kind: match k % 3 {
+                    0 => FaultKind::TransientIo { times: 2 },
+                    1 => FaultKind::SlowRead { times: 1, charge_bytes: 4096 },
+                    _ => FaultKind::FailOnceThenHeal,
+                },
+            })
+            .collect();
+        FaultPlan::new(specs)
+    }
+
+    /// The plan's fault specs.
+    pub fn specs(&self) -> &[FaultSpec] {
+        &self.specs
+    }
+
+    /// Total faults injected so far (transient failures, corruptions, and
+    /// slow reads all count).
+    pub fn injected(&self) -> usize {
+        lock(&self.state).injected
+    }
+
+    /// Consult the plan for one read attempt of `(tier, index)`. Called
+    /// *before* the real store read — cache hits count as attempts too.
+    /// Returns what to inject, or `None` for a clean read. Increments the
+    /// per-target attempt counter either way.
+    pub fn intercept(&self, tier: Tier, index: usize) -> Option<Injected> {
+        let mut st = lock(&self.state);
+        for (k, spec) in self.specs.iter().enumerate() {
+            if spec.tier != tier || spec.index != index {
+                continue;
+            }
+            let e = st.per_spec.entry(k).or_default();
+            if e.healed {
+                continue;
+            }
+            e.attempts += 1;
+            let hit = match spec.kind {
+                FaultKind::TransientIo { times } if e.attempts <= times => Some(Injected::Io),
+                FaultKind::FailOnceThenHeal if e.attempts <= 1 => Some(Injected::Io),
+                FaultKind::SlowRead { times, charge_bytes } if e.attempts <= times => {
+                    Some(Injected::Slow { charge_bytes })
+                }
+                FaultKind::CorruptOnRead => Some(Injected::Corrupt),
+                _ => None,
+            };
+            if let Some(inj) = hit {
+                st.injected += 1;
+                return Some(inj);
+            }
+        }
+        None
+    }
+
+    /// Mark every fault aimed at `(tier, index)` as resolved — called
+    /// after a quarantine-and-rebuild replaced the target file, so a
+    /// [`FaultKind::CorruptOnRead`] stops firing (the corrupt medium is
+    /// gone).
+    pub fn resolve(&self, tier: Tier, index: usize) {
+        let mut st = lock(&self.state);
+        for (k, spec) in self.specs.iter().enumerate() {
+            if spec.tier == tier && spec.index == index {
+                st.per_spec.entry(k).or_default().healed = true;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transient_fault_fires_exactly_n_times_then_clears() {
+        let plan = FaultPlan::new(vec![FaultSpec {
+            tier: Tier::Segment,
+            index: 3,
+            kind: FaultKind::TransientIo { times: 2 },
+        }]);
+        assert_eq!(plan.intercept(Tier::Segment, 3), Some(Injected::Io));
+        assert_eq!(plan.intercept(Tier::Segment, 3), Some(Injected::Io));
+        assert_eq!(plan.intercept(Tier::Segment, 3), None);
+        assert_eq!(plan.intercept(Tier::Segment, 3), None);
+        // Other targets and tiers are untouched.
+        assert_eq!(plan.intercept(Tier::Segment, 2), None);
+        assert_eq!(plan.intercept(Tier::Panel, 3), None);
+        assert_eq!(plan.injected(), 2);
+    }
+
+    #[test]
+    fn fail_once_is_transient_once() {
+        let plan = FaultPlan::new(vec![FaultSpec {
+            tier: Tier::Panel,
+            index: 0,
+            kind: FaultKind::FailOnceThenHeal,
+        }]);
+        assert_eq!(plan.intercept(Tier::Panel, 0), Some(Injected::Io));
+        assert_eq!(plan.intercept(Tier::Panel, 0), None);
+        assert_eq!(plan.injected(), 1);
+    }
+
+    #[test]
+    fn slow_read_charges_then_clears() {
+        let plan = FaultPlan::new(vec![FaultSpec {
+            tier: Tier::Segment,
+            index: 1,
+            kind: FaultKind::SlowRead { times: 1, charge_bytes: 512 },
+        }]);
+        assert_eq!(
+            plan.intercept(Tier::Segment, 1),
+            Some(Injected::Slow { charge_bytes: 512 })
+        );
+        assert_eq!(plan.intercept(Tier::Segment, 1), None);
+    }
+
+    #[test]
+    fn corruption_persists_until_resolved() {
+        let plan = FaultPlan::new(vec![FaultSpec {
+            tier: Tier::Segment,
+            index: 5,
+            kind: FaultKind::CorruptOnRead,
+        }]);
+        for _ in 0..4 {
+            assert_eq!(plan.intercept(Tier::Segment, 5), Some(Injected::Corrupt));
+        }
+        plan.resolve(Tier::Segment, 5);
+        assert_eq!(plan.intercept(Tier::Segment, 5), None, "rebuild clears the fault");
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_distinct() {
+        let a = FaultPlan::seeded(9, 16, 4);
+        let b = FaultPlan::seeded(9, 16, 4);
+        assert_eq!(a.specs(), b.specs(), "same seed, same plan");
+        assert_eq!(a.specs().len(), 4);
+        let mut idx: Vec<usize> = a.specs().iter().map(|s| s.index).collect();
+        idx.sort_unstable();
+        idx.dedup();
+        assert_eq!(idx.len(), 4, "targets are distinct segments");
+        assert!(idx.iter().all(|&i| i < 16));
+        let c = FaultPlan::seeded(10, 16, 4);
+        assert_ne!(a.specs(), c.specs(), "different seed, different plan");
+    }
+
+    #[test]
+    fn plan_capped_by_segment_count() {
+        let plan = FaultPlan::seeded(3, 2, 8);
+        assert_eq!(plan.specs().len(), 2, "cannot target more segments than exist");
+    }
+}

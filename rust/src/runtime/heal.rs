@@ -1,0 +1,513 @@
+//! Self-healing reads over the tiered store: bounded retry with
+//! deterministic virtual-time backoff for transient I/O faults, and
+//! quarantine-plus-rebuild for persistent corruption.
+//!
+//! The staging producers ([`gcn::pipeline`](crate::gcn::pipeline),
+//! [`gcn::serve`](crate::gcn::serve),
+//! [`gcn::train_stream`](crate::gcn::train_stream)) route every
+//! [`SegmentStore`]/[`PanelStore`] read through [`read_segment_healing`] /
+//! [`read_panel_healing`] instead of calling the store directly. With the
+//! default [`HealPolicy`] the wrapper is a pass-through — every fault
+//! stays a fail-fast typed error, exactly the pre-heal behaviour pinned by
+//! `diff_injected_io_faults_fail_cleanly_at_every_depth`. With healing
+//! enabled:
+//!
+//! * **Transient faults** ([`SegioError::Io`], including those injected by
+//!   a [`FaultPlan`]) are retried up to [`HealPolicy::retry_max`] times.
+//!   Backoff is *virtual*: attempt `k` charges
+//!   `backoff_ios × file_bytes × 2^(k-1)` bytes into
+//!   [`HealStats::backoff_bytes`] — priced by the same cost model as real
+//!   staging I/O via [`HealStats::modeled_backoff_secs`] — and never
+//!   sleeps, so healed runs stay schedule-deterministic.
+//! * **Persistent corruption** (bad magic, truncation, checksum or
+//!   validation failures) quarantines the segment file (renamed to
+//!   `<name>.quarantined`) and rebuilds it from the source matrix + RoBW
+//!   plan ([`SegmentStore::quarantine_and_rebuild`]), then re-reads. One
+//!   rebuild per read call; a rebuild that still cannot serve good bytes
+//!   surfaces the original typed error.
+//!
+//! The house determinism rule extends to recovery: a healed run is
+//! byte-identical to the fault-free oracle — same output, same measured
+//! I/O meters, same ledger balance — with only the [`HealStats`] counters
+//! differing (`rust/tests/differential.rs`).
+
+use crate::memsim::{CostModel, Op};
+use crate::partition::robw::RobwSegment;
+use crate::runtime::chaos::{FaultPlan, Injected, Tier};
+use crate::runtime::recycle::BufferPool;
+use crate::runtime::segstore::{PanelRead, PanelStore, ReadOrigin, SegmentRead, SegmentStore};
+use crate::sparse::segio::SegioError;
+use crate::sparse::Csr;
+
+/// Recovery policy for tiered-store reads. The default is all-off: every
+/// fault is fail-fast, byte-for-byte the pre-heal behaviour.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HealPolicy {
+    /// Transient-fault retries per read (0 = fail fast).
+    pub retry_max: usize,
+    /// Backoff charge factor: retry `k` of a segment with `file_bytes`
+    /// encoded bytes charges `retry_backoff_ios × file_bytes × 2^(k-1)`
+    /// virtual bytes — "how many I/Os' worth of waiting" each backoff
+    /// step costs, doubling per attempt.
+    pub backoff_ios: u64,
+    /// Quarantine-and-rebuild persistently corrupt segment files from the
+    /// source matrix + RoBW plan.
+    pub rebuild: bool,
+}
+
+impl HealPolicy {
+    /// Whether any recovery behaviour is enabled.
+    pub fn enabled(&self) -> bool {
+        self.retry_max > 0 || self.rebuild
+    }
+}
+
+/// Recovery counters of one pass. Additive — merge per-read stats into
+/// per-layer stats into per-run reports with [`HealStats::merge`]. This is
+/// the *only* report field allowed to differ between a healed run and its
+/// fault-free oracle.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HealStats {
+    /// Faults the chaos plan injected into this pass (all kinds).
+    pub injected: u64,
+    /// Transient-fault retries performed.
+    pub retries: u64,
+    /// Reads that completed slow (chaos [`Injected::Slow`]).
+    pub slow_reads: u64,
+    /// Segment files quarantined after persistent corruption.
+    pub quarantined: u64,
+    /// Segment files rebuilt from the source matrix + plan.
+    pub rebuilt: u64,
+    /// Virtual backoff + slow-read bytes charged (never slept; price with
+    /// [`Self::modeled_backoff_secs`]).
+    pub backoff_bytes: u64,
+}
+
+impl HealStats {
+    /// Fold another stats record into this one (all fields additive).
+    pub fn merge(&mut self, other: &HealStats) {
+        self.injected += other.injected;
+        self.retries += other.retries;
+        self.slow_reads += other.slow_reads;
+        self.quarantined += other.quarantined;
+        self.rebuilt += other.rebuilt;
+        self.backoff_bytes += other.backoff_bytes;
+    }
+
+    /// Whether any recovery action was taken.
+    pub fn any(&self) -> bool {
+        *self != HealStats::default()
+    }
+
+    /// Seconds the cost model charges for the virtual backoff bytes —
+    /// priced like NVMe reads, the same channel the
+    /// [`StagingMeter`](crate::memsim::StagingMeter) prices measured disk
+    /// I/O on (0 when nothing backed off).
+    pub fn modeled_backoff_secs(&self, cm: &CostModel) -> f64 {
+        if self.backoff_bytes == 0 {
+            0.0
+        } else {
+            cm.transfer_secs(Op::NvmeToHost, self.backoff_bytes)
+        }
+    }
+}
+
+/// Where a corrupt segment's bytes can be rebuilt from: the source matrix
+/// and the segment's RoBW plan entry.
+#[derive(Clone, Copy)]
+pub struct RebuildSource<'a> {
+    /// The full source matrix the store was spilled from.
+    pub a: &'a Csr,
+    /// Segment `i`'s plan entry.
+    pub seg: &'a RobwSegment,
+}
+
+/// Transient faults are retryable; everything else (corruption,
+/// truncation, format violations) is persistent.
+fn is_transient(e: &SegioError) -> bool {
+    matches!(e, SegioError::Io(_))
+}
+
+/// Read segment `i` through the recovery policy: chaos intercept first
+/// (so injected faults hit even warm cache reads), then the store;
+/// transient errors retry with doubling virtual backoff, persistent
+/// errors quarantine-and-rebuild once when the policy and a
+/// [`RebuildSource`] allow. Recovery actions accumulate into `stats`
+/// (also on the error path). With the default policy and no chaos this
+/// is exactly `store.read_reusing(i, reuse, pool)`.
+#[allow(clippy::too_many_arguments)]
+pub fn read_segment_healing(
+    store: &SegmentStore,
+    i: usize,
+    mut reuse: Option<Csr>,
+    pool: Option<&BufferPool>,
+    policy: &HealPolicy,
+    chaos: Option<&FaultPlan>,
+    source: Option<RebuildSource<'_>>,
+    stats: &mut HealStats,
+) -> Result<(SegmentRead, ReadOrigin), SegioError> {
+    let mut attempt = 0usize;
+    let mut rebuilt_this_call = false;
+    loop {
+        // A failed attempt consumes the reuse scratch exactly like a real
+        // failed read (read_reusing returns it to the pool internally on
+        // error), so retries proceed with reuse = None, pool still offered.
+        let attempt_result = match chaos.and_then(|c| c.intercept(Tier::Segment, i)) {
+            Some(Injected::Io) => {
+                stats.injected += 1;
+                if let (Some(m), Some(rp)) = (reuse.take(), pool) {
+                    rp.put_csr(m);
+                }
+                Err(SegioError::Io(format!("injected transient fault on segment {i}")))
+            }
+            Some(Injected::Corrupt) => {
+                stats.injected += 1;
+                if let (Some(m), Some(rp)) = (reuse.take(), pool) {
+                    rp.put_csr(m);
+                }
+                Err(SegioError::PayloadChecksum { stored: u64::MAX, computed: 0 })
+            }
+            Some(Injected::Slow { charge_bytes }) => {
+                stats.injected += 1;
+                stats.slow_reads += 1;
+                stats.backoff_bytes += charge_bytes;
+                store.read_reusing(i, reuse.take(), pool)
+            }
+            None => store.read_reusing(i, reuse.take(), pool),
+        };
+        match attempt_result {
+            Ok(ok) => return Ok(ok),
+            Err(e) if is_transient(&e) && attempt < policy.retry_max => {
+                attempt += 1;
+                stats.retries += 1;
+                stats.backoff_bytes += (policy
+                    .backoff_ios
+                    .saturating_mul(store.meta(i).file_bytes))
+                    << (attempt - 1).min(63);
+            }
+            Err(e)
+                if !is_transient(&e)
+                    && policy.rebuild
+                    && !rebuilt_this_call
+                    && source.is_some() =>
+            {
+                let src = source.expect("checked above");
+                store.quarantine_and_rebuild(i, src.a, src.seg)?;
+                if let Some(c) = chaos {
+                    // The corrupt medium is gone; a CorruptOnRead fault
+                    // aimed at this segment stops firing.
+                    c.resolve(Tier::Segment, i);
+                }
+                rebuilt_this_call = true;
+                stats.quarantined += 1;
+                stats.rebuilt += 1;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Read panel `idx` through the recovery policy: transient faults retry
+/// with doubling virtual backoff (charged on the panel's encoded size);
+/// persistent corruption has no rebuild source — a torn panel is data
+/// produced mid-run, not derivable from the inputs — so it stays a typed
+/// error. With the default policy and no chaos this is exactly
+/// `panels.read_reusing(idx, pool)`.
+pub fn read_panel_healing(
+    panels: &PanelStore,
+    idx: usize,
+    pool: Option<&BufferPool>,
+    policy: &HealPolicy,
+    chaos: Option<&FaultPlan>,
+    stats: &mut HealStats,
+) -> Result<(PanelRead, ReadOrigin), SegioError> {
+    let mut attempt = 0usize;
+    loop {
+        let attempt_result = match chaos.and_then(|c| c.intercept(Tier::Panel, idx)) {
+            Some(Injected::Io) => {
+                stats.injected += 1;
+                Err(SegioError::Io(format!("injected transient fault on panel {idx}")))
+            }
+            Some(Injected::Corrupt) => {
+                stats.injected += 1;
+                Err(SegioError::PayloadChecksum { stored: u64::MAX, computed: 0 })
+            }
+            Some(Injected::Slow { charge_bytes }) => {
+                stats.injected += 1;
+                stats.slow_reads += 1;
+                stats.backoff_bytes += charge_bytes;
+                panels.read_reusing(idx, pool)
+            }
+            None => panels.read_reusing(idx, pool),
+        };
+        match attempt_result {
+            Ok(ok) => return Ok(ok),
+            Err(e) if is_transient(&e) && attempt < policy.retry_max => {
+                attempt += 1;
+                stats.retries += 1;
+                let file_bytes = panels.meta(idx).map(|m| m.file_bytes).unwrap_or(0);
+                stats.backoff_bytes +=
+                    (policy.backoff_ios.saturating_mul(file_bytes)) << (attempt - 1).min(63);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::robw::robw_partition;
+    use crate::runtime::chaos::{FaultKind, FaultSpec};
+    use crate::sparse::Coo;
+    use crate::testing::TempDir;
+    use crate::util::rng::Pcg;
+    use std::sync::Arc;
+
+    fn random_csr(rng: &mut Pcg, nrows: usize, ncols: usize, density: f64) -> Csr {
+        let mut coo = Coo::new(nrows, ncols);
+        for r in 0..nrows {
+            for c in 0..ncols {
+                if rng.chance(density) {
+                    coo.push(r as u32, c as u32, rng.normal() as f32);
+                }
+            }
+        }
+        coo.to_csr()
+    }
+
+    fn store_fixture(seed: u64, name: &str) -> (Csr, Vec<RobwSegment>, TempDir, SegmentStore) {
+        let mut rng = Pcg::seed(seed);
+        let a = random_csr(&mut rng, 100, 30, 0.15);
+        let segs = robw_partition(&a, 600);
+        assert!(segs.len() > 2);
+        let dir = TempDir::new(name);
+        let store = SegmentStore::spill(&a, &segs, dir.path(), 0).unwrap();
+        (a, segs, dir, store)
+    }
+
+    #[test]
+    fn default_policy_is_passthrough() {
+        let (_a, _segs, _dir, store) = store_fixture(220, "heal-pass");
+        let mut stats = HealStats::default();
+        let policy = HealPolicy::default();
+        assert!(!policy.enabled());
+        let (want, _) = store.read(0).unwrap();
+        let (got, origin) =
+            read_segment_healing(&store, 0, None, None, &policy, None, None, &mut stats)
+                .unwrap();
+        assert_eq!(got.csr(), want.csr());
+        assert!(origin.disk_bytes > 0);
+        assert!(!stats.any(), "no recovery happened: {stats:?}");
+    }
+
+    #[test]
+    fn transient_fault_without_retry_fails_fast() {
+        let (_a, _segs, _dir, store) = store_fixture(221, "heal-failfast");
+        let plan = FaultPlan::new(vec![FaultSpec {
+            tier: Tier::Segment,
+            index: 1,
+            kind: FaultKind::TransientIo { times: 1 },
+        }]);
+        let mut stats = HealStats::default();
+        let err = read_segment_healing(
+            &store,
+            1,
+            None,
+            None,
+            &HealPolicy::default(),
+            Some(&plan),
+            None,
+            &mut stats,
+        )
+        .unwrap_err();
+        assert!(matches!(err, SegioError::Io(_)), "{err}");
+        assert_eq!(stats.injected, 1);
+        assert_eq!(stats.retries, 0);
+    }
+
+    #[test]
+    fn retry_heals_transient_faults_and_charges_backoff() {
+        let (_a, _segs, _dir, store) = store_fixture(222, "heal-retry");
+        let plan = FaultPlan::new(vec![FaultSpec {
+            tier: Tier::Segment,
+            index: 2,
+            kind: FaultKind::TransientIo { times: 2 },
+        }]);
+        let policy = HealPolicy { retry_max: 3, backoff_ios: 2, rebuild: false };
+        let mut stats = HealStats::default();
+        let (want, _) = store.read(2).unwrap();
+        let (got, _) =
+            read_segment_healing(&store, 2, None, None, &policy, Some(&plan), None, &mut stats)
+                .unwrap();
+        assert_eq!(got.csr(), want.csr(), "healed read serves the same bytes");
+        assert_eq!(stats.retries, 2);
+        assert_eq!(stats.injected, 2);
+        let fb = store.meta(2).file_bytes;
+        // Retry 1 charges 2·fb·2^0, retry 2 charges 2·fb·2^1.
+        assert_eq!(stats.backoff_bytes, 2 * fb + 4 * fb);
+        let cm = CostModel::default();
+        assert!(stats.modeled_backoff_secs(&cm) > 0.0);
+        assert_eq!(HealStats::default().modeled_backoff_secs(&cm), 0.0);
+    }
+
+    #[test]
+    fn retries_exhausted_surfaces_the_transient_error() {
+        let (_a, _segs, _dir, store) = store_fixture(223, "heal-exhaust");
+        let plan = FaultPlan::new(vec![FaultSpec {
+            tier: Tier::Segment,
+            index: 0,
+            kind: FaultKind::TransientIo { times: 5 },
+        }]);
+        let policy = HealPolicy { retry_max: 2, backoff_ios: 1, rebuild: false };
+        let mut stats = HealStats::default();
+        let err =
+            read_segment_healing(&store, 0, None, None, &policy, Some(&plan), None, &mut stats)
+                .unwrap_err();
+        assert!(matches!(err, SegioError::Io(_)), "{err}");
+        assert_eq!(stats.retries, 2, "retry budget fully spent");
+        assert_eq!(stats.injected, 3, "initial attempt + 2 retries all faulted");
+    }
+
+    #[test]
+    fn corruption_quarantines_and_rebuilds_real_files() {
+        let (a, segs, _dir, store) = store_fixture(224, "heal-rebuild");
+        let victim = 1usize;
+        // Really corrupt the file on disk (mid-payload bit flip).
+        let path = store.meta(victim).path.clone();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let policy = HealPolicy { retry_max: 0, backoff_ios: 0, rebuild: true };
+        let src = RebuildSource { a: &a, seg: &segs[victim] };
+        let mut stats = HealStats::default();
+        let (got, origin) =
+            read_segment_healing(&store, victim, None, None, &policy, None, Some(src), &mut stats)
+                .unwrap();
+        let want = crate::partition::robw::materialize(&a, &segs[victim]);
+        assert_eq!(got.csr(), &want, "rebuilt segment serves the true bytes");
+        assert!(origin.disk_bytes > 0);
+        assert_eq!(stats.quarantined, 1);
+        assert_eq!(stats.rebuilt, 1);
+        let q = path.with_extension("bin.quarantined");
+        assert!(q.exists(), "corrupt file preserved at {}", q.display());
+        // The rebuilt file now reads clean without any policy.
+        let (clean, _) = store.read(victim).unwrap();
+        assert_eq!(clean.csr(), &want);
+    }
+
+    #[test]
+    fn injected_corruption_rebuilds_once_and_resolves_the_fault() {
+        let (a, segs, _dir, store) = store_fixture(225, "heal-chaos-corrupt");
+        let victim = 0usize;
+        let plan = Arc::new(FaultPlan::new(vec![FaultSpec {
+            tier: Tier::Segment,
+            index: victim,
+            kind: FaultKind::CorruptOnRead,
+        }]));
+        let policy = HealPolicy { retry_max: 1, backoff_ios: 1, rebuild: true };
+        let src = RebuildSource { a: &a, seg: &segs[victim] };
+        let mut stats = HealStats::default();
+        let (got, _) = read_segment_healing(
+            &store,
+            victim,
+            None,
+            None,
+            &policy,
+            Some(&plan),
+            Some(src),
+            &mut stats,
+        )
+        .unwrap();
+        let want = crate::partition::robw::materialize(&a, &segs[victim]);
+        assert_eq!(got.csr(), &want);
+        assert_eq!(stats.quarantined, 1);
+        assert_eq!(stats.rebuilt, 1);
+        // Without rebuild permission the same fault is terminal.
+        let plan2 = FaultPlan::new(vec![FaultSpec {
+            tier: Tier::Segment,
+            index: victim,
+            kind: FaultKind::CorruptOnRead,
+        }]);
+        let no_rebuild = HealPolicy { retry_max: 2, backoff_ios: 1, rebuild: false };
+        let mut stats2 = HealStats::default();
+        let err = read_segment_healing(
+            &store,
+            victim,
+            None,
+            None,
+            &no_rebuild,
+            Some(&plan2),
+            None,
+            &mut stats2,
+        )
+        .unwrap_err();
+        assert!(matches!(err, SegioError::PayloadChecksum { .. }), "{err}");
+        assert_eq!(stats2.retries, 0, "persistent faults are not retried");
+    }
+
+    #[test]
+    fn panel_heal_retries_transients_but_not_corruption() {
+        let dir = TempDir::new("heal-panel");
+        let panels = PanelStore::new(dir.path(), 0).unwrap();
+        let p = crate::sparse::spmm::Dense::from_vec(4, 3, (0..12).map(|i| i as f32).collect());
+        panels.put(0, &p).unwrap();
+        let plan = FaultPlan::new(vec![FaultSpec {
+            tier: Tier::Panel,
+            index: 0,
+            kind: FaultKind::FailOnceThenHeal,
+        }]);
+        let policy = HealPolicy { retry_max: 1, backoff_ios: 3, rebuild: true };
+        let mut stats = HealStats::default();
+        let (got, _) =
+            read_panel_healing(&panels, 0, None, &policy, Some(&plan), &mut stats).unwrap();
+        assert_eq!(got.dense(), &p);
+        assert_eq!(stats.retries, 1);
+        assert_eq!(stats.backoff_bytes, 3 * panels.meta(0).unwrap().file_bytes);
+        // Corrupt the panel for real: no rebuild source exists for panels,
+        // so even a rebuild-enabled policy surfaces the typed error.
+        let path = panels.meta(0).unwrap().path;
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let mut stats2 = HealStats::default();
+        let err =
+            read_panel_healing(&panels, 0, None, &policy, None, &mut stats2).unwrap_err();
+        assert!(matches!(err, SegioError::PayloadChecksum { .. }), "{err}");
+    }
+
+    #[test]
+    fn stats_merge_is_additive() {
+        let mut a = HealStats {
+            injected: 1,
+            retries: 2,
+            slow_reads: 3,
+            quarantined: 4,
+            rebuilt: 5,
+            backoff_bytes: 6,
+        };
+        let b = HealStats {
+            injected: 10,
+            retries: 20,
+            slow_reads: 30,
+            quarantined: 40,
+            rebuilt: 50,
+            backoff_bytes: 60,
+        };
+        a.merge(&b);
+        assert_eq!(
+            a,
+            HealStats {
+                injected: 11,
+                retries: 22,
+                slow_reads: 33,
+                quarantined: 44,
+                rebuilt: 55,
+                backoff_bytes: 66,
+            }
+        );
+        assert!(a.any());
+    }
+}

@@ -9,7 +9,9 @@
 //! contract with `python/compile/kernels/bsr_spmm.py`.
 
 pub mod artifacts;
+pub mod chaos;
 pub mod executor;
+pub mod heal;
 pub mod pool;
 pub mod prefetch;
 pub mod recycle;
@@ -17,7 +19,9 @@ pub mod segstore;
 pub mod tile_exec;
 
 pub use artifacts::{Manifest, TensorSpec};
+pub use chaos::{FaultKind, FaultPlan, FaultSpec, Tier};
 pub use executor::Executor;
+pub use heal::{HealPolicy, HealStats};
 pub use pool::Pool;
 pub use prefetch::Prefetch;
 pub use recycle::{BufferPool, RecycleStats};

@@ -583,6 +583,63 @@ impl SegmentStore {
         cache.stats.resident_bytes = cache.used;
         Ok((result, ReadOrigin { disk_bytes: bytes, cache_hit: false }))
     }
+
+    /// Quarantine segment `i`'s on-disk file and rebuild it from the
+    /// source matrix + plan entry — the recovery path
+    /// [`runtime::heal`](crate::runtime::heal) takes when a read surfaces
+    /// persistent corruption (bad magic, truncation, checksum mismatch).
+    ///
+    /// The corrupt file is renamed to `<name>.quarantined` (preserved for
+    /// postmortem, never served again; a file already missing is fine —
+    /// deletion is one of the faults this recovers from). Any resident
+    /// host-tier copy is dropped, then the segment is re-materialized from
+    /// `(a, seg)` and rewritten via temp-file-then-rename so a crash
+    /// mid-rebuild never leaves a second torn file. The rewrite must
+    /// reproduce exactly the manifest's encoded size — a plan entry that
+    /// disagrees with the manifest is refused before anything is touched.
+    pub fn quarantine_and_rebuild(
+        &self,
+        i: usize,
+        a: &Csr,
+        seg: &RobwSegment,
+    ) -> Result<(), SegioError> {
+        let meta = &self.segs[i];
+        if (meta.row_lo, meta.row_hi, meta.nnz) != (seg.row_lo, seg.row_hi, seg.nnz) {
+            return Err(SegioError::Io(format!(
+                "rebuild segment {i}: plan entry has rows [{}, {}) nnz {}, \
+                 manifest says rows [{}, {}) nnz {}",
+                seg.row_lo, seg.row_hi, seg.nnz, meta.row_lo, meta.row_hi, meta.nnz
+            )));
+        }
+        let mut qname = meta.path.file_name().unwrap_or_default().to_os_string();
+        qname.push(".quarantined");
+        let qpath = meta.path.with_file_name(qname);
+        match std::fs::rename(&meta.path, &qpath) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => {
+                return Err(SegioError::Io(format!(
+                    "quarantine {}: {e}",
+                    meta.path.display()
+                )))
+            }
+        }
+        lock(&self.cache).remove(i);
+        let sub = materialize(a, seg);
+        let tmp = meta.path.with_extension("bin.tmp");
+        let file_bytes = segio::write_segment(&tmp, &sub)?;
+        if file_bytes != meta.file_bytes {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(SegioError::Io(format!(
+                "rebuild segment {i}: rewrote {file_bytes} bytes, manifest expects {}",
+                meta.file_bytes
+            )));
+        }
+        std::fs::rename(&tmp, &meta.path).map_err(|e| {
+            SegioError::Io(format!("rebuild rename {}: {e}", meta.path.display()))
+        })?;
+        Ok(())
+    }
 }
 
 // ------------------------------------------------------------ panel tier
@@ -725,6 +782,13 @@ impl PanelStore {
     /// concurrent reader can never see old bytes under a new manifest).
     /// Returns the encoded file size — the measured panel-spill I/O the
     /// pipeline report charges.
+    ///
+    /// The rewrite is atomic: bytes land in `<name>.bin.tmp` and are
+    /// renamed over the slot only once fully written, so a process killed
+    /// mid-`put` leaves the previously published panel intact (plus a torn
+    /// temp file the next `put` overwrites) — never a torn panel that a
+    /// later read surfaces as a checksum or `InvalidPanel` error with no
+    /// recourse.
     pub fn put(&self, idx: usize, p: &Dense) -> Result<u64, SegioError> {
         let path = Self::panel_path(&self.dir, idx);
         {
@@ -732,7 +796,11 @@ impl PanelStore {
             st.cache.remove(idx);
             st.metas.remove(&idx);
         }
-        let file_bytes = segio::write_panel(&path, p)?;
+        let tmp = path.with_extension("bin.tmp");
+        let file_bytes = segio::write_panel(&tmp, p)?;
+        std::fs::rename(&tmp, &path).map_err(|e| {
+            SegioError::Io(format!("publish panel {}: {e}", path.display()))
+        })?;
         let mut st = lock(&self.state);
         st.metas.insert(
             idx,
@@ -1105,6 +1173,60 @@ mod tests {
         assert!(st.hits > 0, "byte + panel scratch must cycle through the pool: {st:?}");
         assert_eq!(store.stats().hits, 0);
         assert_eq!(store.stats().resident_bytes, 0);
+    }
+
+    #[test]
+    fn quarantine_and_rebuild_replaces_a_corrupt_segment() {
+        let mut rng = Pcg::seed(209);
+        let a = random_csr(&mut rng, 90, 25, 0.15);
+        let segs = robw_partition(&a, 600);
+        assert!(segs.len() > 2);
+        let dir = TempDir::new("segstore-quarantine");
+        let store = SegmentStore::spill(&a, &segs, dir.path(), UNBOUNDED_CACHE).unwrap();
+        let victim = 1usize;
+        // Warm the host tier, then corrupt the file *behind* it: the
+        // rebuild must also drop the resident copy, not just fix the disk.
+        let _ = store.read(victim).unwrap();
+        let path = store.meta(victim).path.clone();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        // A mismatched plan entry is refused before anything is touched.
+        assert!(store.quarantine_and_rebuild(victim, &a, &segs[0]).is_err());
+        assert!(path.exists(), "refusal must not quarantine the file");
+        store.quarantine_and_rebuild(victim, &a, &segs[victim]).unwrap();
+        let q = path.with_extension("bin.quarantined");
+        assert!(q.exists(), "corrupt bytes preserved at {}", q.display());
+        assert_eq!(std::fs::read(&q).unwrap(), bytes, "quarantine keeps the evidence");
+        let (r, o) = store.read(victim).unwrap();
+        assert!(!o.cache_hit, "rebuild must drop the stale resident copy");
+        assert_eq!(r.csr(), &materialize(&a, &segs[victim]));
+        assert_eq!(
+            std::fs::metadata(&path).unwrap().len(),
+            store.meta(victim).file_bytes,
+            "rebuilt file matches the manifest size exactly"
+        );
+    }
+
+    #[test]
+    fn panel_put_is_atomic_against_kill_mid_rewrite() {
+        let dir = TempDir::new("panelstore-atomic");
+        let store = PanelStore::new(dir.path(), 0).unwrap();
+        let old = Dense::from_vec(3, 3, (0..9).map(|i| i as f32).collect());
+        store.put(0, &old).unwrap();
+        // Simulate a process killed mid-rewrite: the half-written bytes
+        // live only in the temp file; the published panel is untouched.
+        let path = store.meta(0).unwrap().path;
+        let tmp = path.with_extension("bin.tmp");
+        std::fs::write(&tmp, b"torn half-written panel").unwrap();
+        let (r, _) = store.read(0).unwrap();
+        assert_eq!(r.dense(), &old, "published panel survives a torn rewrite");
+        // A completed rewrite replaces the slot and consumes the temp file.
+        let new = Dense::from_vec(3, 3, (9..18).map(|i| i as f32).collect());
+        store.put(0, &new).unwrap();
+        assert!(!tmp.exists(), "rename consumed the temp file");
+        assert_eq!(store.read(0).unwrap().0.dense(), &new);
     }
 
     #[test]

@@ -10,7 +10,8 @@
 //! offset  size  field
 //! 0       8     magic            b"AIRESSEG"
 //! 8       4     format version   u32 (currently 1)
-//! 12      4     record kind      u32 (0 = CSR segment, 1 = dense panel)
+//! 12      4     record kind      u32 (0 = CSR segment, 1 = dense panel,
+//!                                     2 = checkpoint blob)
 //! 16      8     nrows            u64
 //! 24      8     ncols            u64
 //! 32      8     nnz              u64 (must be 0 for dense panels)
@@ -21,6 +22,8 @@
 //!               CSR segment: rowptr (nrows+1 × u64) ++ colidx (nnz × u32)
 //!                            ++ vals (nnz × f32 bit patterns)
 //!               dense panel: nrows × ncols row-major f32 bit patterns
+//!               checkpoint blob: opaque caller-defined bytes (all three
+//!                                count fields zero)
 //! ```
 //!
 //! The record-kind field occupies what version 1 originally reserved as a
@@ -51,6 +54,9 @@ pub const FORMAT_VERSION: u32 = 1;
 pub const KIND_CSR: u32 = 0;
 /// Record kind of a dense feature panel (row-major f32 payload).
 pub const KIND_PANEL: u32 = 1;
+/// Record kind of an opaque checkpoint blob (caller-defined payload under
+/// the shared header/checksum discipline; all three count fields are 0).
+pub const KIND_CHECK: u32 = 2;
 /// Fixed header size in bytes; the payload starts here.
 pub const HEADER_BYTES: usize = 64;
 
@@ -102,6 +108,9 @@ pub enum SegioError {
     /// Panel header fields are inconsistent (payload length not
     /// `nrows × ncols × 4`, dimension overflow, non-zero nnz slot).
     InvalidPanel(String),
+    /// Checkpoint-blob header fields are inconsistent (non-zero count
+    /// fields, payload length beyond the address space).
+    InvalidBlob(String),
     /// Underlying filesystem error (with path context).
     Io(String),
 }
@@ -120,6 +129,7 @@ impl std::fmt::Display for SegioError {
                 let name = |k: u32| match k {
                     KIND_CSR => "CSR segment",
                     KIND_PANEL => "dense panel",
+                    KIND_CHECK => "checkpoint blob",
                     _ => "unknown",
                 };
                 write!(
@@ -142,6 +152,9 @@ impl std::fmt::Display for SegioError {
             SegioError::InvalidCsr(msg) => write!(f, "decoded segment is not a valid CSR: {msg}"),
             SegioError::InvalidPanel(msg) => {
                 write!(f, "decoded record is not a valid dense panel: {msg}")
+            }
+            SegioError::InvalidBlob(msg) => {
+                write!(f, "decoded record is not a valid checkpoint blob: {msg}")
             }
             SegioError::Io(msg) => write!(f, "segment I/O: {msg}"),
         }
@@ -591,6 +604,61 @@ pub fn read_panel_into(
     Ok(len as u64)
 }
 
+// ----------------------------------------------- checkpoint-blob records
+
+/// Exact encoded size of a checkpoint blob with `payload` body bytes —
+/// header + opaque payload (the blob analog of [`encoded_len`]).
+pub fn encoded_blob_len(payload: usize) -> u64 {
+    HEADER_BYTES as u64 + payload as u64
+}
+
+/// Encode an opaque byte payload as a [`KIND_CHECK`] record: the shared
+/// magic/version/checksum header over a caller-defined body. All three
+/// count fields are zero — a blob has no matrix shape; its only length is
+/// the payload-length field itself. Deterministic: the same bytes always
+/// produce the same record.
+pub fn encode_blob(payload: &[u8]) -> Vec<u8> {
+    seal_header(KIND_CHECK, 0, 0, 0, payload.to_vec())
+}
+
+/// Decode a [`KIND_CHECK`] record back to its payload bytes, verifying
+/// magic, version, record kind, both checksums, the zero count fields, and
+/// the payload length. The exact inverse of [`encode_blob`]. Feeding a
+/// segment or panel file here is a [`SegioError::WrongKind`], never a
+/// misread.
+pub fn decode_blob(buf: &[u8]) -> Result<Vec<u8>, SegioError> {
+    check_header(buf, KIND_CHECK)?;
+    let nrows64 = get_u64(buf, 16);
+    let ncols64 = get_u64(buf, 24);
+    let nnz64 = get_u64(buf, 32);
+    if (nrows64, ncols64, nnz64) != (0, 0, 0) {
+        return Err(SegioError::InvalidBlob(format!(
+            "blob records must have zero count fields, got nrows={nrows64} ncols={ncols64} \
+             nnz={nnz64}"
+        )));
+    }
+    let payload_len = get_u64(buf, 40);
+    let need = (HEADER_BYTES as u64).checked_add(payload_len).unwrap_or(u64::MAX);
+    if (buf.len() as u64) < need {
+        return Err(SegioError::Truncated { need, got: buf.len() as u64 });
+    }
+    let payload_usize = usize::try_from(payload_len).map_err(|_| {
+        SegioError::InvalidBlob(format!(
+            "payload length {payload_len} exceeds this platform's address space"
+        ))
+    })?;
+    let payload = &buf[HEADER_BYTES..HEADER_BYTES + payload_usize];
+    let stored_payload_sum = get_u64(buf, 48);
+    let computed_payload_sum = fnv1a64(payload);
+    if stored_payload_sum != computed_payload_sum {
+        return Err(SegioError::PayloadChecksum {
+            stored: stored_payload_sum,
+            computed: computed_payload_sum,
+        });
+    }
+    Ok(payload.to_vec())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -852,6 +920,40 @@ mod tests {
     }
 
     #[test]
+    fn blob_roundtrip_and_defect_rejection() {
+        for payload in [&b""[..], &b"x"[..], &[0u8, 255, 1, 2, 3, 128][..]] {
+            let buf = encode_blob(payload);
+            assert_eq!(buf.len() as u64, encoded_blob_len(payload.len()));
+            assert_eq!(decode_blob(&buf).unwrap(), payload.to_vec());
+        }
+
+        let good = encode_blob(b"checkpoint body bytes");
+
+        let mut bad_magic = good.clone();
+        bad_magic[0] ^= 0xff;
+        assert_eq!(decode_blob(&bad_magic), Err(SegioError::BadMagic));
+
+        let mut bad_payload = good.clone();
+        *bad_payload.last_mut().unwrap() ^= 0x01;
+        assert!(matches!(decode_blob(&bad_payload), Err(SegioError::PayloadChecksum { .. })));
+
+        let mut bad_header = good.clone();
+        bad_header[40] ^= 0x01; // payload-length field
+        assert!(matches!(decode_blob(&bad_header), Err(SegioError::HeaderChecksum { .. })));
+
+        assert!(matches!(decode_blob(&good[..good.len() - 1]), Err(SegioError::Truncated { .. })));
+        assert!(matches!(decode_blob(&good[..10]), Err(SegioError::Truncated { .. })));
+
+        // Non-zero count fields with a re-sealed checksum are invalid —
+        // a blob has no matrix shape to claim.
+        let mut bad_counts = good.clone();
+        bad_counts[16..24].copy_from_slice(&3u64.to_le_bytes());
+        let sum = fnv1a64(&bad_counts[0..56]);
+        bad_counts[56..64].copy_from_slice(&sum.to_le_bytes());
+        assert!(matches!(decode_blob(&bad_counts), Err(SegioError::InvalidBlob(_))));
+    }
+
+    #[test]
     fn kind_confusion_is_a_typed_error_both_ways() {
         // A panel fed to the CSR decoder — and a CSR segment fed to the
         // panel decoder — must fail on the record kind, not misread bytes.
@@ -864,6 +966,15 @@ mod tests {
         assert_eq!(
             decode_panel(&seg),
             Err(SegioError::WrongKind { found: KIND_CSR, expected: KIND_PANEL })
+        );
+        let blob = encode_blob(b"opaque");
+        assert_eq!(
+            decode_segment(&blob),
+            Err(SegioError::WrongKind { found: KIND_CHECK, expected: KIND_CSR })
+        );
+        assert_eq!(
+            decode_blob(&seg),
+            Err(SegioError::WrongKind { found: KIND_CSR, expected: KIND_CHECK })
         );
     }
 

@@ -463,6 +463,86 @@ fn train_stream_malformed_policy_is_a_usage_error() {
     assert!(!err.contains("panicked"), "{err}");
 }
 
+// --- self-healing reads + checkpoint-resume (PR 9) ----------------------
+
+#[test]
+fn malformed_heal_flags_are_usage_errors() {
+    let (code, _, err) = run(&["catalog", "--retry-max", "abc"]);
+    assert_eq!(code, Some(2), "usage errors exit 2; stderr: {err}");
+    assert!(err.contains("--retry-max"), "must name the flag: {err}");
+    assert!(err.contains("abc"), "must echo the offending value: {err}");
+    assert!(!err.contains("panicked"), "{err}");
+    let (code, _, err) = run(&["catalog", "--retry-backoff-ios"]);
+    assert_eq!(code, Some(2), "stderr: {err}");
+    assert!(err.contains("requires a value"), "{err}");
+}
+
+#[test]
+fn faultcheck_heals_and_resumes_deterministically() {
+    // The chaos harness end to end: injected transient faults and
+    // on-disk corruption must heal to the fault-free oracle's bytes,
+    // and a killed-then-resumed streamed run must reproduce the
+    // uninterrupted parameters bit for bit.
+    let (code, out, err) = run(&["faultcheck"]);
+    assert_eq!(code, Some(0), "stderr: {err}");
+    assert!(out.contains("healed output matches oracle: OK"), "stdout: {out}");
+    assert!(out.contains("resumed parameters match uninterrupted run: OK"), "stdout: {out}");
+    assert!(out.contains("ledger balanced after every scenario: OK"), "stdout: {out}");
+    assert!(!err.contains("panicked"), "{err}");
+}
+
+/// The `final params fnv64: 0x...` fingerprint line the streamed
+/// trainer prints after the optimizer finishes.
+fn params_fingerprint(out: &str) -> String {
+    out.lines()
+        .find(|l| l.starts_with("final params fnv64:"))
+        .unwrap_or_else(|| panic!("no fingerprint line in: {out}"))
+        .to_string()
+}
+
+#[test]
+fn train_stream_checkpoint_resume_matches_uninterrupted_run() {
+    // A run killed between steps and resumed via --checkpoint-dir must
+    // finish with the same parameter bytes as one uninterrupted run.
+    let dir = TempDir::new("cli-train-resume");
+    let ckdir = dir.path().join("ck");
+    let base = [
+        "train", "--train-stream", "--nodes", "100", "--steps", "4", "--layers", "2",
+        "--budget", "2048", "--lr", "0.5",
+    ];
+    let (code, out, err) = run(&base);
+    assert_eq!(code, Some(0), "uninterrupted run; stderr: {err}");
+    let want = params_fingerprint(&out);
+
+    // "Killed" run: two of the four steps, checkpointed.
+    let mut partial = base.to_vec();
+    partial[5] = "2"; // --steps 2
+
+    partial.extend_from_slice(&["--checkpoint-dir", ckdir.to_str().unwrap()]);
+    let (code, _, err) = run(&partial);
+    assert_eq!(code, Some(0), "partial run; stderr: {err}");
+    assert!(ckdir.join("checkpoint.bin").exists(), "checkpoint must be persisted");
+
+    // Resume: picks up at step 2 and lands on the same bytes.
+    let mut resumed = base.to_vec();
+    resumed.extend_from_slice(&["--checkpoint-dir", ckdir.to_str().unwrap()]);
+    let (code, out, err) = run(&resumed);
+    assert_eq!(code, Some(0), "resumed run; stderr: {err}");
+    assert!(
+        out.contains("resumed from checkpoint: 2 step(s) already complete"),
+        "resume must be announced: {out}"
+    );
+    assert_eq!(params_fingerprint(&out), want, "resumed parameters must match: {out}");
+    assert!(out.contains("streamed loss matches dense oracle: OK"), "stdout: {out}");
+
+    // A third run has nothing left to do but still verifies and reports.
+    let (code, out, err) = run(&resumed);
+    assert_eq!(code, Some(0), "no-op resume; stderr: {err}");
+    assert!(out.contains("checkpoint already covers all 4 step(s)"), "stdout: {out}");
+    assert_eq!(params_fingerprint(&out), want, "restored parameters must match: {out}");
+    assert!(!err.contains("panicked"), "{err}");
+}
+
 #[test]
 fn segcheck_with_recycling_disabled_still_verifies() {
     // --recycle-cap-bytes 0 selects the fresh-allocation path; output

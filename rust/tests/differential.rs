@@ -1034,6 +1034,289 @@ fn diff_injected_io_faults_fail_cleanly_at_every_depth() {
     assert_eq!(mem.used, 0);
 }
 
+// ------------------------------------------------------- self-healing reads
+
+#[test]
+fn diff_healed_transient_faults_match_fault_free_oracle() {
+    // The healed-vs-oracle acceptance sweep: with a seeded chaos plan
+    // injecting transient I/O faults and a slow read into the disk-backed
+    // stream (the chaos tier wraps store reads, so the disk backing is
+    // the faulted surface), a retry-enabled pass must produce output
+    // **byte-identical** to the fault-free oracle at every depth ×
+    // threads × fresh/recycled point — same measured I/O meters, same
+    // plan, balanced ledger — with *exactly* the predicted HealStats as
+    // the only difference (the house determinism rule for recovery).
+    use aires::runtime::{FaultKind, FaultPlan, FaultSpec, HealPolicy, HealStats, Tier};
+
+    let mut rng = Pcg::seed(25);
+    let a_hat = normalize_adjacency(&aires::graphgen::kmer::generate(&mut rng, 400, 3.0));
+    let x = gen::dense(&mut rng, a_hat.ncols, 8);
+    let layer = OocGcnLayer {
+        w: gen::dense(&mut rng, 8, 8),
+        b: vec![0.1; 8],
+        relu: true,
+        seg_budget: 2048,
+    };
+    let segs = robw_partition(&a_hat, layer.seg_budget);
+    assert!(segs.len() >= 4, "need distinct victims in a real stream");
+    let (v1, v2, v3) = (0usize, segs.len() / 2, segs.len() - 1);
+
+    let dir = TempDir::new("diff-heal-transient");
+    let store0 = SegmentStore::spill(&a_hat, &segs, dir.path(), 0).unwrap();
+    let (fb1, fb3) = (store0.meta(v1).file_bytes, store0.meta(v3).file_bytes);
+
+    // Fault-free oracle (cache 0: every read measured at the disk tier).
+    let mut mem = GpuMem::new(1 << 30);
+    let oracle_staging = StagingConfig::disk(Arc::new(store0), 1);
+    let (want, base) = layer
+        .forward_cpu(&a_hat, &x, &mut mem, &Pool::serial(), &oracle_staging)
+        .unwrap();
+    assert!(!base.heal.any(), "the oracle heals nothing: {:?}", base.heal);
+    let base_io = (base.disk_bytes, base.cache_hits, base.cache_misses);
+
+    let policy = HealPolicy { retry_max: 3, backoff_ios: 2, rebuild: false };
+    let charge = 4096u64;
+    // Exact ledger prediction: TransientIo{2} on v1 = 2 injected + 2
+    // retries charging 2·fb1·(2^0 + 2^1); FailOnceThenHeal on v3 = 1
+    // injected + 1 retry charging 2·fb3; SlowRead on v2 = 1 injected +
+    // 1 slow read charging its flat `charge_bytes`.
+    let expect = HealStats {
+        injected: 4,
+        retries: 3,
+        slow_reads: 1,
+        quarantined: 0,
+        rebuilt: 0,
+        backoff_bytes: 6 * fb1 + 2 * fb3 + charge,
+    };
+
+    let recycle = Arc::new(BufferPool::new(64 << 20));
+    for &depth in &PREFETCH_DEPTHS {
+        for &t in &[1usize, 8] {
+            for recycled in [false, true] {
+                let point = format!("depth={depth} threads={t} recycled={recycled}");
+                // Fresh plan per run: chaos plans carry consumed fault
+                // counters. Fresh store per run: comparable cache stats.
+                let plan = Arc::new(FaultPlan::new(vec![
+                    FaultSpec {
+                        tier: Tier::Segment,
+                        index: v1,
+                        kind: FaultKind::TransientIo { times: 2 },
+                    },
+                    FaultSpec {
+                        tier: Tier::Segment,
+                        index: v2,
+                        kind: FaultKind::SlowRead { times: 1, charge_bytes: charge },
+                    },
+                    FaultSpec {
+                        tier: Tier::Segment,
+                        index: v3,
+                        kind: FaultKind::FailOnceThenHeal,
+                    },
+                ]));
+                let store =
+                    SegmentStore::open_or_spill(&a_hat, &segs, dir.path(), 0).unwrap();
+                let mut staging = StagingConfig::disk(Arc::new(store), depth)
+                    .with_heal(policy)
+                    .with_chaos(plan);
+                if recycled {
+                    staging = staging.with_recycle(recycle.clone());
+                }
+                let mut mem = GpuMem::new(1 << 30);
+                let (got, rep) = layer
+                    .forward_cpu(&a_hat, &x, &mut mem, &Pool::new(t), &staging)
+                    .unwrap_or_else(|e| panic!("{point}: healed pass failed: {e}"));
+                assert_eq!(got, want, "{point}: healed output diverged from oracle");
+                assert_eq!(rep.heal, expect, "{point}: HealStats ledger");
+                assert_eq!(
+                    (rep.disk_bytes, rep.cache_hits, rep.cache_misses),
+                    base_io,
+                    "{point}: healed measured I/O must equal the oracle's"
+                );
+                assert_eq!(rep.segments, base.segments, "{point}: plan diverged");
+                assert_eq!(rep.h2d_bytes, base.h2d_bytes, "{point}: traffic diverged");
+                assert_eq!(mem.used, 0, "{point}: ledger unbalanced");
+            }
+        }
+    }
+}
+
+#[test]
+fn diff_corruption_heals_by_quarantine_and_rebuild() {
+    // Persistent single-segment corruption: a rebuild-enabled pass must
+    // quarantine the poisoned file (preserving the evidence), rebuild it
+    // from the source matrix + RoBW plan, and serve output byte-identical
+    // to the fault-free oracle at every depth × threads × fresh/recycled
+    // point. The file is re-corrupted before every run — a successful
+    // rebuild repairs the medium, and the sweep must prove each
+    // configuration heals from the *corrupt* state, not from a
+    // predecessor's repair.
+    use aires::runtime::{HealPolicy, HealStats};
+
+    let mut rng = Pcg::seed(26);
+    let a_hat = normalize_adjacency(&aires::graphgen::kmer::generate(&mut rng, 400, 3.0));
+    let x = gen::dense(&mut rng, a_hat.ncols, 8);
+    let layer = OocGcnLayer {
+        w: gen::dense(&mut rng, 8, 8),
+        b: vec![0.1; 8],
+        relu: true,
+        seg_budget: 2048,
+    };
+    let segs = robw_partition(&a_hat, layer.seg_budget);
+    assert!(segs.len() >= 4, "need a real stream to corrupt mid-way");
+    let victim = segs.len() / 2;
+
+    let dir = TempDir::new("diff-heal-rebuild");
+    let store0 = SegmentStore::spill(&a_hat, &segs, dir.path(), 0).unwrap();
+    let vpath = store0.meta(victim).path.clone();
+    let qpath = vpath.with_extension("bin.quarantined");
+    let mut mem = GpuMem::new(1 << 30);
+    let oracle_staging = StagingConfig::disk(Arc::new(store0), 1);
+    let (want, base) = layer
+        .forward_cpu(&a_hat, &x, &mut mem, &Pool::serial(), &oracle_staging)
+        .unwrap();
+    let base_io = (base.disk_bytes, base.cache_hits, base.cache_misses);
+
+    let policy = HealPolicy { retry_max: 1, backoff_ios: 1, rebuild: true };
+    let expect = HealStats { quarantined: 1, rebuilt: 1, ..HealStats::default() };
+    let recycle = Arc::new(BufferPool::new(64 << 20));
+    for &depth in &PREFETCH_DEPTHS {
+        for &t in &[1usize, 8] {
+            for recycled in [false, true] {
+                let point = format!("depth={depth} threads={t} recycled={recycled}");
+                // Re-poison the (by now rebuilt) file and clear the prior
+                // run's quarantine evidence so the exists-check below is
+                // this run's, not a leftover.
+                let mut bytes = std::fs::read(&vpath).unwrap();
+                let last = bytes.len() - 1;
+                bytes[last] ^= 0xff;
+                std::fs::write(&vpath, &bytes).unwrap();
+                let _ = std::fs::remove_file(&qpath);
+
+                let store =
+                    SegmentStore::open_or_spill(&a_hat, &segs, dir.path(), 0).unwrap();
+                let mut staging =
+                    StagingConfig::disk(Arc::new(store), depth).with_heal(policy);
+                if recycled {
+                    staging = staging.with_recycle(recycle.clone());
+                }
+                let mut mem = GpuMem::new(1 << 30);
+                let (got, rep) = layer
+                    .forward_cpu(&a_hat, &x, &mut mem, &Pool::new(t), &staging)
+                    .unwrap_or_else(|e| panic!("{point}: rebuild pass failed: {e}"));
+                assert_eq!(got, want, "{point}: rebuilt output diverged from oracle");
+                assert_eq!(rep.heal, expect, "{point}: HealStats ledger");
+                assert_eq!(
+                    (rep.disk_bytes, rep.cache_hits, rep.cache_misses),
+                    base_io,
+                    "{point}: healed measured I/O must equal the oracle's"
+                );
+                assert_eq!(mem.used, 0, "{point}: ledger unbalanced");
+                assert!(
+                    qpath.exists(),
+                    "{point}: corrupt bytes must be preserved at {}",
+                    qpath.display()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn diff_checkpoint_resume_is_bitwise_identical() {
+    // Kill/resume acceptance: a streamed training run checkpointed after
+    // every step, killed after step k, and resumed by a *fresh* trainer
+    // from the published checkpoint must finish with parameters and loss
+    // history bitwise identical to the uninterrupted run — at every kill
+    // point, on both recompute policies.
+    use aires::gcn::checkpoint::{load, save};
+    use aires::gcn::train_stream::synthetic_labels;
+    use aires::gcn::{Checkpoint, RecomputePolicy, StreamedTrainer, TrainStreamConfig};
+
+    let mut rng = Pcg::seed(27);
+    let a_hat = normalize_adjacency(&aires::graphgen::kmer::generate(&mut rng, 240, 3.0));
+    let n = a_hat.nrows;
+    let budget = 1536u64;
+    let (f0, classes) = (6usize, 4usize);
+    let x = gen::dense(&mut rng, n, f0);
+    let widths = [f0, 8, classes];
+    let layers: Vec<OocGcnLayer> = (0..2)
+        .map(|l| {
+            let mut w = gen::dense(&mut rng, widths[l], widths[l + 1]);
+            for v in w.data.iter_mut() {
+                *v *= 0.3;
+            }
+            OocGcnLayer {
+                w,
+                b: (0..widths[l + 1]).map(|_| (rng.normal() * 0.1) as f32).collect(),
+                relu: l == 0,
+                seg_budget: budget,
+            }
+        })
+        .collect();
+    let labels = synthetic_labels(&x, classes, &mut rng);
+    let (steps, lr) = (4usize, 0.5f32);
+
+    let bits = |layers: &[OocGcnLayer]| -> Vec<u32> {
+        layers
+            .iter()
+            .flat_map(|l| l.w.data.iter().chain(l.b.iter()).map(|v| v.to_bits()))
+            .collect()
+    };
+    let run = |tr: &mut StreamedTrainer, from: usize, to: usize, ckdir: Option<&std::path::Path>| {
+        let pdir = TempDir::new("diff-resume-panels");
+        let panels = Arc::new(PanelStore::new(pdir.path(), 0).unwrap());
+        let cfg = TrainStreamConfig::new(StagingConfig::depth(2), panels);
+        let mut mem = GpuMem::new(1 << 30);
+        for s in from..to {
+            tr.step(&a_hat, &x, &mut mem, &Pool::new(2), &cfg, lr)
+                .unwrap_or_else(|e| panic!("step {s}: {e}"));
+            if let Some(dir) = ckdir {
+                let ck = Checkpoint {
+                    step: (s + 1) as u64,
+                    policy: RecomputePolicy::Auto,
+                    rng: (0, 0),
+                    losses: tr.losses.clone(),
+                    layers: tr.layers.clone(),
+                };
+                save(dir, &ck).unwrap_or_else(|e| panic!("publish step {s}: {e}"));
+            }
+        }
+        assert_eq!(mem.used, 0, "ledger unbalanced after steps {from}..{to}");
+    };
+
+    // Uninterrupted reference run.
+    let mut full = StreamedTrainer::new(layers.clone(), labels.clone()).unwrap();
+    run(&mut full, 0, steps, None);
+    let want_bits = bits(&full.layers);
+    let want_losses: Vec<u32> = full.losses.iter().map(|l| l.to_bits()).collect();
+
+    for kill_after in 1..steps {
+        let ckdir = TempDir::new("diff-resume-ck");
+        // Phase 1: train to the kill point, checkpointing every step,
+        // then "die" (drop the trainer).
+        let mut victim = StreamedTrainer::new(layers.clone(), labels.clone()).unwrap();
+        run(&mut victim, 0, kill_after, Some(ckdir.path()));
+        drop(victim);
+        // Phase 2: a fresh process resumes from the published checkpoint.
+        let ck = load(ckdir.path()).unwrap().expect("checkpoint was published");
+        assert_eq!(ck.step, kill_after as u64, "checkpoint records the kill point");
+        let mut resumed = StreamedTrainer::new(layers.clone(), labels.clone()).unwrap();
+        let done = resumed.restore(&ck).unwrap();
+        assert_eq!(done, kill_after as u64);
+        run(&mut resumed, kill_after, steps, Some(ckdir.path()));
+        assert_eq!(
+            bits(&resumed.layers),
+            want_bits,
+            "kill_after={kill_after}: resumed parameters diverged"
+        );
+        let got_losses: Vec<u32> = resumed.losses.iter().map(|l| l.to_bits()).collect();
+        assert_eq!(
+            got_losses, want_losses,
+            "kill_after={kill_after}: resumed loss history diverged"
+        );
+    }
+}
+
 // ------------------------------------------------------------- edge shapes
 
 #[test]

@@ -282,6 +282,66 @@ fn panel_roundtrip_is_bit_identical_across_shapes() {
 }
 
 #[test]
+fn panel_corrupted_bytes_are_rejected_with_typed_errors() {
+    // The chaos harness's CorruptOnRead fault flips panel bytes too; the
+    // quarantine path relies on every flip surfacing as a typed error.
+    check("segio rejects panel corruption", 312, |rng| {
+        let p = panel_operand(rng);
+        let buf = encode_panel(&p);
+        let pos = rng.below(buf.len() as u64) as usize;
+        let mut bad = buf.clone();
+        bad[pos] ^= 0x01;
+        match decode_panel(&bad) {
+            Ok(got) => Err(format!(
+                "flip at byte {pos} of {} decoded successfully ({}x{})",
+                buf.len(),
+                got.nrows,
+                got.ncols
+            )),
+            Err(
+                SegioError::BadMagic
+                | SegioError::WrongVersion { .. }
+                | SegioError::WrongKind { .. }
+                | SegioError::HeaderChecksum { .. }
+                | SegioError::PayloadChecksum { .. },
+            ) => Ok(()),
+            Err(other) => Err(format!("flip at byte {pos}: unexpected error kind {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn every_panel_truncation_is_rejected() {
+    check("segio rejects panel truncation", 313, |rng| {
+        let p = panel_operand(rng);
+        let buf = encode_panel(&p);
+        for cut in [
+            0,
+            1,
+            HEADER_BYTES - 1,
+            HEADER_BYTES,
+            HEADER_BYTES + (buf.len() - HEADER_BYTES) / 2,
+            buf.len() - 1,
+        ] {
+            if cut >= buf.len() {
+                continue;
+            }
+            match decode_panel(&buf[..cut]) {
+                Ok(_) => return Err(format!("prefix of {cut}/{} bytes decoded", buf.len())),
+                Err(SegioError::Truncated { need, got }) => {
+                    if got != cut as u64 || need <= got {
+                        return Err(format!("bad Truncated fields: need {need}, got {got}"));
+                    }
+                }
+                Err(other) => return Err(format!("cut {cut}: expected Truncated, got {other:?}")),
+            }
+        }
+        let _ = rng.below(2); // keep the stream advancing per case
+        Ok(())
+    });
+}
+
+#[test]
 fn panel_and_segment_records_never_cross_decode() {
     let mut rng = Pcg::seed(311);
     let seg = encode_segment(&operand(&mut rng));

@@ -13,9 +13,10 @@
 //! asserted byte-identical to the in-memory serial oracle (and recycled
 //! against fresh), so a perf run can never silently diverge; it then
 //! emits `BENCH_streaming.json` (ns/segment + allocations/segment for
-//! the recycled vs fresh disk paths, the serve open-loop latency
+//! the recycled vs fresh disk paths, ns/segment + bytes/segment for the
+//! raw vs packed segment stores, the serve open-loop latency
 //! percentiles, the streamed-training `ns_per_step`, and — outside fast
-//! mode — the `rmat_large` 2^20-node scenario) to `AIRES_BENCH_JSON` or
+//! mode — the `rmat_large` 2^21-node scenario) to `AIRES_BENCH_JSON` or
 //! ./BENCH_streaming.json. Feed the
 //! emission into the perf-trajectory store with `aires bench ingest`
 //! and gate regressions with `aires bench gate` (see `src/benchdb/`).
@@ -370,6 +371,69 @@ fn streaming_benches(fast: bool) {
         st.hits, st.misses, st.drops
     );
 
+    // --- Storage engine v2: raw vs packed segment stores. The packed
+    // fixture spills the SAME plan as delta+bitpacked colidx records
+    // (keyed separately — switching encodings must never reuse the other
+    // fixture's bytes), every read is a real file read + decode at cache
+    // 0, and the self-check pins both stores to identical matrices
+    // before any number is reported. Emits the `bytes_per_segment` +
+    // `ns_per_segment` series the bench gate trends at both encodings.
+    let packed_fixture = format!("kmer-{nodes}-packed");
+    let packed_dir = match std::env::var("AIRES_SEG_FIXTURE_DIR") {
+        Ok(d) => std::path::PathBuf::from(d).join(&packed_fixture),
+        Err(_) => _scratch
+            .as_ref()
+            .expect("scratch temp dir exists when no fixture dir is configured")
+            .path()
+            .join(&packed_fixture),
+    };
+    let packed_store = Arc::new(
+        aires::runtime::SegmentStore::open_or_spill_encoded(
+            &ga,
+            &segs,
+            &packed_dir,
+            0,
+            aires::sparse::segio::SegEncoding::Packed,
+        )
+        .expect("spill packed segment fixture"),
+    );
+    let packed_bytes: u64 =
+        (0..packed_store.len()).map(|i| packed_store.meta(i).file_bytes).sum();
+    println!(
+        "packed colidx store on kmer-{nodes}: {} on disk vs {} raw ({:.2}x smaller)",
+        aires::util::human_bytes(packed_bytes),
+        aires::util::human_bytes(spilled),
+        spilled as f64 / packed_bytes as f64
+    );
+    assert!(packed_bytes < spilled, "packed store must be smaller than raw");
+    for i in 0..store.len() {
+        let (raw_seg, _) = store.read(i).expect("raw segment read");
+        let (packed_seg, _) = packed_store.read(i).expect("packed segment read");
+        assert_eq!(raw_seg.csr(), packed_seg.csr(), "packed segment {i} diverged from raw");
+    }
+    println!("BENCH segread self-check: packed store byte-identical to raw OK");
+    for (key, seg_store, total_bytes) in
+        [("segread_raw", &store, spilled), ("segread_packed", &packed_store, packed_bytes)]
+    {
+        let r = bench(&format!("{key}: read+decode every segment"), 1, iters, || {
+            for i in 0..seg_store.len() {
+                std::hint::black_box(seg_store.read(i).expect("segment read"));
+            }
+        });
+        let ns_per_segment = r.mean_s / seg_store.len() as f64 * 1e9;
+        let bytes_per_segment = total_bytes as f64 / seg_store.len() as f64;
+        println!(
+            "BENCH {key}: {ns_per_segment:.0} ns/segment, {bytes_per_segment:.0} bytes/segment"
+        );
+        results.insert(
+            key.to_string(),
+            result_json(
+                &r,
+                &[("ns_per_segment", ns_per_segment), ("bytes_per_segment", bytes_per_segment)],
+            ),
+        );
+    }
+
     // --- Cross-layer pipeline: a 3-layer forward, pipelined (one
     // scheduler, the producer rolls onto the next layer's plan) vs
     // drain-at-boundary (isolated single-layer passes). The same charged
@@ -592,7 +656,7 @@ fn streaming_benches(fast: bool) {
         );
     }
 
-    // --- rmat_large: a 2^20-node RMAT graph under a tight segment
+    // --- rmat_large: a 2^21-node RMAT graph under a tight segment
     // budget — the out-of-core regime (hundreds of segments) that the
     // small kmer workload cannot exercise. Skipped in fast mode
     // (AIRES_BENCH_FAST): the graph alone takes seconds to generate.
@@ -602,7 +666,7 @@ fn streaming_benches(fast: bool) {
         let mut rngl = Pcg::seed(81);
         let gl = aires::sparse::norm::normalize_adjacency(&aires::graphgen::rmat::generate(
             &mut rngl,
-            20,
+            21,
             4,
             Default::default(),
         ));
@@ -624,7 +688,7 @@ fn streaming_benches(fast: bool) {
         };
         assert_eq!(run_large(2), run_large(1), "rmat_large depth 2 diverged from serial");
         println!(
-            "rmat_large on rmat-20 ({} nodes, {} nnz, {large_segments} segments):",
+            "rmat_large on rmat-21 ({} nodes, {} nnz, {large_segments} segments):",
             gl.nrows,
             gl.nnz()
         );

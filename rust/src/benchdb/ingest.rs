@@ -6,8 +6,10 @@ use crate::util::json::{self, Json};
 /// Unit label for a flattened metric path, keyed on its last
 /// '.'-separated component: `segments_per_s` → `seg/s`,
 /// `ns_per_segment`/`ns_per_layer` → `ns`, `allocs_per_segment` →
-/// `allocs`, any `*_s` leaf (latency seconds: `mean_s`, `min_s`,
-/// `p50_s`, `p99_s`, ...) → `s`, everything else → `count`.
+/// `allocs`, `bytes_per_segment` (the encoded-store footprint the
+/// segread scenarios emit at both encodings) → `bytes`, any `*_s` leaf
+/// (latency seconds: `mean_s`, `min_s`, `p50_s`, `p99_s`, ...) → `s`,
+/// everything else → `count`.
 pub fn unit_for(metric: &str) -> &'static str {
     let leaf = metric.rsplit('.').next().unwrap_or(metric);
     if leaf == "segments_per_s" {
@@ -16,6 +18,8 @@ pub fn unit_for(metric: &str) -> &'static str {
         "ns"
     } else if leaf == "allocs_per_segment" || leaf == "allocs_per_step" {
         "allocs"
+    } else if leaf == "bytes_per_segment" {
+        "bytes"
     } else if leaf.ends_with("_s") {
         "s"
     } else {

@@ -27,7 +27,8 @@
 //!   [`percentile`](crate::util::percentile), the same function `serve`
 //!   reports with), and a regression gate: the newest run's
 //!   lower-is-better metrics ([`gated_metric`]: `ns_per_segment`,
-//!   `ns_per_layer`, `ns_per_step`, any `p99_s` leaf) are compared
+//!   `ns_per_layer`, `ns_per_step`, `bytes_per_segment`, any `p99_s`
+//!   leaf) are compared
 //!   against the *median of all prior runs*; any regression beyond the
 //!   configured percentage fails the gate. No baseline (empty store,
 //!   first run) passes vacuously — the run seeds the baseline instead.

@@ -63,13 +63,19 @@ pub fn scenario_stats(traj: &Trajectory) -> Vec<MetricStats> {
 }
 
 /// Whether a metric participates in the regression gate. Gated metrics
-/// are the lower-is-better latency series: per-segment, per-layer and
-/// per-training-step kernel time, and any open-loop `p99_s` latency
-/// leaf (tenant or aggregate). Throughput, allocation counts, and
+/// are the lower-is-better series: per-segment, per-layer and
+/// per-training-step kernel time, any open-loop `p99_s` latency leaf
+/// (tenant or aggregate), and the encoded on-disk footprint
+/// (`bytes_per_segment` — a compression regression is a perf regression
+/// for an I/O-bound pipeline). Throughput, allocation counts, and
 /// self-check flags are reported but not gated.
 pub fn gated_metric(metric: &str) -> bool {
     let leaf = metric.rsplit('.').next().unwrap_or(metric);
-    leaf == "ns_per_segment" || leaf == "ns_per_layer" || leaf == "ns_per_step" || leaf == "p99_s"
+    leaf == "ns_per_segment"
+        || leaf == "ns_per_layer"
+        || leaf == "ns_per_step"
+        || leaf == "p99_s"
+        || leaf == "bytes_per_segment"
 }
 
 /// One run's sample within a [`TrendLine`].

@@ -98,6 +98,19 @@ pub struct Config {
     /// and resumes from (`gcn::checkpoint`). `None` = no checkpointing.
     /// The CLI's `--checkpoint-dir` overrides this.
     pub checkpoint_dir: Option<String>,
+    /// Zero-copy mapped staging reads (`runtime::segstore` through the
+    /// vendored mmap shim): `true` maps spilled segment and panel files
+    /// into the address space instead of copying them through read
+    /// buffers. Served bytes are identical either way; only copy traffic
+    /// changes. `None` = unset (copying reads). The CLI's `--mmap` flag
+    /// also enables it.
+    pub mmap_segments: Option<bool>,
+    /// On-disk encoding for spilled RoBW segments (`sparse::segio`):
+    /// `"raw"`, `"packed"` (delta + bit-packed column indices), or
+    /// `"auto"` (per segment, smaller file wins). Staged output is
+    /// byte-identical at every encoding. `None` = unset (the CLI
+    /// defaults to `raw`). The CLI's `--seg-encoding` overrides this.
+    pub seg_encoding: Option<String>,
 }
 
 impl Default for Config {
@@ -120,6 +133,8 @@ impl Default for Config {
             retry_max: None,
             retry_backoff_ios: None,
             checkpoint_dir: None,
+            mmap_segments: None,
+            seg_encoding: None,
         }
     }
 }
@@ -301,6 +316,22 @@ impl Config {
                     }
                     cfg.checkpoint_dir = Some(dir.to_string());
                 }
+                "mmap_segments" => {
+                    cfg.mmap_segments = Some(
+                        val.as_bool()
+                            .ok_or_else(|| anyhow!("mmap_segments must be a boolean"))?,
+                    );
+                }
+                "seg_encoding" => {
+                    let s = val
+                        .as_str()
+                        .ok_or_else(|| anyhow!("seg_encoding must be a string"))?;
+                    // Validate eagerly so typos fail at config-load time,
+                    // not mid-spill.
+                    s.parse::<crate::sparse::segio::SegEncoding>()
+                        .map_err(|e| anyhow!("seg_encoding: {e}"))?;
+                    cfg.seg_encoding = Some(s.to_string());
+                }
                 "datasets" => {
                     let arr =
                         val.as_arr().ok_or_else(|| anyhow!("datasets must be an array"))?;
@@ -414,6 +445,12 @@ impl Config {
         }
         if let Some(dir) = &self.checkpoint_dir {
             root.insert("checkpoint_dir".to_string(), Json::Str(dir.clone()));
+        }
+        if let Some(b) = self.mmap_segments {
+            root.insert("mmap_segments".to_string(), Json::Bool(b));
+        }
+        if let Some(e) = &self.seg_encoding {
+            root.insert("seg_encoding".to_string(), Json::Str(e.clone()));
         }
         root.insert(
             "datasets".to_string(),
@@ -655,6 +692,37 @@ mod tests {
         assert!(Config::from_json_str(r#"{"retry_backoff_ios":-2}"#).is_err());
         assert!(Config::from_json_str(r#"{"checkpoint_dir":""}"#).is_err());
         assert!(Config::from_json_str(r#"{"checkpoint_dir":4}"#).is_err());
+    }
+
+    #[test]
+    fn storage_v2_keys_roundtrip_and_validate() {
+        let cfg =
+            Config::from_json_str(r#"{"mmap_segments":true,"seg_encoding":"packed"}"#).unwrap();
+        assert_eq!(cfg.mmap_segments, Some(true));
+        assert_eq!(cfg.seg_encoding.as_deref(), Some("packed"));
+        let back = Config::from_json_str(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(back.mmap_segments, Some(true), "set keys survive the roundtrip");
+        assert_eq!(back.seg_encoding, cfg.seg_encoding);
+        // false is distinct from unset and also roundtrips.
+        let off = Config::from_json_str(r#"{"mmap_segments":false}"#).unwrap();
+        assert_eq!(off.mmap_segments, Some(false));
+        let off_back = Config::from_json_str(&off.to_json().to_string()).unwrap();
+        assert_eq!(off_back.mmap_segments, Some(false));
+        // Unset stays unset (copying reads, raw encoding).
+        let unset = Config::from_json_str("{}").unwrap();
+        assert_eq!((unset.mmap_segments, unset.seg_encoding.clone()), (None, None));
+        let unset_back = Config::from_json_str(&unset.to_json().to_string()).unwrap();
+        assert_eq!(unset_back.mmap_segments, None);
+        assert_eq!(unset_back.seg_encoding, None);
+        // All three encodings are accepted; anything else fails at load time.
+        for e in ["raw", "packed", "auto"] {
+            let text = format!("{{\"seg_encoding\":{e:?}}}");
+            assert!(Config::from_json_str(&text).is_ok(), "encoding {e}");
+        }
+        assert!(Config::from_json_str(r#"{"seg_encoding":"zip"}"#).is_err());
+        assert!(Config::from_json_str(r#"{"seg_encoding":2}"#).is_err());
+        assert!(Config::from_json_str(r#"{"mmap_segments":1}"#).is_err());
+        assert!(Config::from_json_str(r#"{"mmap_segments":"on"}"#).is_err());
     }
 
     #[test]

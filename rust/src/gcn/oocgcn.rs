@@ -133,6 +133,16 @@ pub struct StagingConfig {
     /// (default) injects nothing. Plans carry consumed per-target
     /// counters, so build a fresh plan per run when comparing runs.
     pub chaos: Option<Arc<FaultPlan>>,
+    /// Zero-copy staging: serve raw-encoded segment reads (and spilled
+    /// feature panels) as page-cache-backed mappings
+    /// ([`SegmentStore::read_mapped`](crate::runtime::segstore::SegmentStore::read_mapped))
+    /// instead of copying payloads into heap scratch, and spill
+    /// intermediate panels as per-plan-boundary chunk records. Packed
+    /// segments and non-native layouts transparently fall back to the
+    /// copying decoder. Served bytes are identical either way
+    /// (`rust/tests/differential.rs`); only the copy count changes
+    /// (`rust/tests/alloc_free.rs`).
+    pub mmap: bool,
 }
 
 impl StagingConfig {
@@ -171,6 +181,12 @@ impl StagingConfig {
     /// The same configuration with fault injection from `plan`.
     pub fn with_chaos(mut self, plan: Arc<FaultPlan>) -> StagingConfig {
         self.chaos = Some(plan);
+        self
+    }
+
+    /// The same configuration with zero-copy mapped reads toggled.
+    pub fn with_mmap(mut self, mmap: bool) -> StagingConfig {
+        self.mmap = mmap;
         self
     }
 }

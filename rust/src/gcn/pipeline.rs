@@ -45,10 +45,10 @@ use crate::partition::robw::{materialize_into, robw_partition_par, RobwSegment};
 use crate::runtime::heal::{read_panel_healing, read_segment_healing, HealStats, RebuildSource};
 use crate::runtime::pool::Pool;
 use crate::runtime::recycle::BufferPool;
-use crate::runtime::segstore::{PanelRead, PanelStore, SegmentRead};
+use crate::runtime::segstore::{MappedPanelChunks, PanelRead, PanelSrc, PanelStore, SegmentRead};
 use crate::runtime::tile_exec::{BsrSpmmExec, CombineExec};
 use crate::runtime::Executor;
-use crate::sparse::spmm::{spmm_par_into, Dense};
+use crate::sparse::spmm::{spmm_view_par_into, Dense, RowSrc};
 use crate::sparse::Csr;
 use anyhow::{anyhow, bail, Result};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
@@ -176,7 +176,7 @@ impl OocGcnModel {
     }
 
     /// Artifact-free pipelined multi-layer forward: per-segment
-    /// aggregation on [`spmm_par_into`] straight into the pass-wide panel,
+    /// aggregation on [`spmm_view_par_into`] straight into the pass-wide panel,
     /// host-side combines, one cross-layer prefetch pipeline. This is the
     /// execution surface the differential suite drives; its output is
     /// byte-identical to [`Self::forward_cpu_sequential`] at every
@@ -254,12 +254,14 @@ pub(crate) fn forward_pipelined_cpu(
         pool,
         cfg,
         &mut |_, _, seg, sub, x_l, agg| {
-            spmm_par_into(
-                sub,
-                x_l,
-                pool,
-                &mut agg.data[seg.row_lo * x_l.ncols..seg.row_hi * x_l.ncols],
-            );
+            // Match the panel source once so the nnz loop runs on a
+            // monomorphized kernel (no per-row dispatch on the hot path).
+            let f = x_l.ncols();
+            let out = &mut agg.data[seg.row_lo * f..seg.row_hi * f];
+            match x_l {
+                PanelSrc::Dense(d) => spmm_view_par_into(sub.view(), d, pool, out),
+                PanelSrc::Mapped(m) => spmm_view_par_into(sub.view(), m, pool, out),
+            }
             Ok(())
         },
         &mut |_, l, agg| Ok(dense_affine(agg, &layers[l].w, &layers[l].b, layers[l].relu)),
@@ -299,6 +301,24 @@ pub(crate) fn forward_pipelined_staged(
         &mut |exec, l, seg, sub, x_l, agg| {
             let (sp, _) = &kernels[l];
             let denom = sp.shape.nb * sp.shape.bm * sp.shape.bk;
+            // The tile packer consumes materialized CSR + Dense operands,
+            // so mapped reads copy here; the CPU path stays zero-copy.
+            let owned_sub;
+            let sub: &Csr = match sub {
+                SegmentRead::Mapped(m) => {
+                    owned_sub = m.to_csr();
+                    &owned_sub
+                }
+                other => other.csr(),
+            };
+            let owned_x;
+            let x_l: &Dense = match x_l {
+                PanelSrc::Dense(d) => d,
+                PanelSrc::Mapped(m) => {
+                    owned_x = m.to_dense();
+                    &owned_x
+                }
+            };
             calls[l] += sub.nnz().div_ceil(denom);
             let part = sp.spmm_with_pool(exec, sub, x_l, pool)?;
             agg.data[seg.row_lo * x_l.ncols..seg.row_hi * x_l.ncols]
@@ -365,17 +385,23 @@ enum XCur<'a> {
     /// A previous layer's output served shared from the panel-store host
     /// tier.
     Shared(Arc<Dense>),
+    /// A previous layer's output served as page-cache-backed chunk
+    /// mappings (`staging.mmap` with panel spilling): rows are read
+    /// straight out of the mapped files, never copied into a host slab.
+    Mapped(MappedPanelChunks),
     /// A previous layer's output spilled to the panel store, not yet read
-    /// back (becomes `Owned`/`Shared` at the next layer's first segment).
+    /// back (becomes `Owned`/`Shared`/`Mapped` at the next layer's first
+    /// segment).
     Spilled,
 }
 
 impl XCur<'_> {
-    fn panel(&self) -> &Dense {
+    fn src(&self) -> PanelSrc<'_> {
         match self {
-            XCur::Borrowed(p) => p,
-            XCur::Owned(p) => p,
-            XCur::Shared(p) => p,
+            XCur::Borrowed(p) => PanelSrc::Dense(p),
+            XCur::Owned(p) => PanelSrc::Dense(p),
+            XCur::Shared(p) => PanelSrc::Dense(p),
+            XCur::Mapped(m) => PanelSrc::Mapped(m),
             XCur::Spilled => unreachable!("panel read back before the layer's first consume"),
         }
     }
@@ -427,7 +453,14 @@ pub(crate) fn forward_pipelined<Ctx>(
     mem: &mut GpuMem,
     pool: &Pool,
     cfg: &PipelineConfig,
-    consume: &mut dyn FnMut(&mut Ctx, usize, &RobwSegment, &Csr, &Dense, &mut Dense) -> Result<()>,
+    consume: &mut dyn FnMut(
+        &mut Ctx,
+        usize,
+        &RobwSegment,
+        &SegmentRead,
+        PanelSrc<'_>,
+        &mut Dense,
+    ) -> Result<()>,
     finish: &mut dyn FnMut(&mut Ctx, usize, &Dense) -> Result<Dense>,
 ) -> Result<(Dense, PipelineReport)> {
     let staging = &cfg.staging;
@@ -578,6 +611,7 @@ pub(crate) fn forward_pipelined<Ctx>(
                         i,
                         reuse,
                         recycle,
+                        staging.mmap,
                         &staging.heal,
                         staging.chaos.as_deref(),
                         Some(RebuildSource { a: a_hat, seg }),
@@ -606,6 +640,7 @@ pub(crate) fn forward_pipelined<Ctx>(
                         ps,
                         l - 1,
                         recycle,
+                        staging.mmap,
                         &staging.heal,
                         staging.chaos.as_deref(),
                         &mut heal,
@@ -623,6 +658,7 @@ pub(crate) fn forward_pipelined<Ctx>(
                     x_cur = match panel {
                         PanelRead::Owned(p) => XCur::Owned(p),
                         PanelRead::Shared(p) => XCur::Shared(p),
+                        PanelRead::Mapped(m) => XCur::Mapped(m),
                     };
                 }
                 agg = Some(match recycle {
@@ -639,7 +675,7 @@ pub(crate) fn forward_pipelined<Ctx>(
                 l,
                 seg,
                 &sub,
-                x_cur.panel(),
+                x_cur.src(),
                 agg.as_mut().expect("aggregation panel taken at layer open"),
             )?;
             reports[l].h2d_bytes += seg.bytes;
@@ -668,7 +704,17 @@ pub(crate) fn forward_pipelined<Ctx>(
                 if l + 1 == nl {
                     final_out = Some(out);
                 } else if let Some(ps) = &cfg.panel_spill {
-                    let bytes = ps.put(l, &out).map_err(|e| {
+                    // Under mmap, segment the panel at the next layer's
+                    // plan boundaries so each staged segment's
+                    // aggregation window maps the fewest chunk records.
+                    let spilled = if staging.mmap {
+                        let row_starts: Vec<usize> =
+                            plans[l + 1].iter().map(|s| s.row_lo).collect();
+                        ps.put_chunked(l, &out, &row_starts)
+                    } else {
+                        ps.put(l, &out)
+                    };
+                    let bytes = spilled.map_err(|e| {
                         anyhow!("layer {l}: spilling feature panel to disk: {e}")
                     })?;
                     panel_spill_bytes += bytes;
@@ -831,6 +877,46 @@ mod tests {
         let expect: u64 = (0..2).map(|i| pstore.meta(i).unwrap().file_bytes).sum();
         assert_eq!(rep.panel_spill_bytes, expect);
         assert_eq!(rep.panel_read_bytes, expect);
+    }
+
+    #[test]
+    fn mmap_staging_with_chunked_panel_spill_is_byte_identical() {
+        let mut rng = Pcg::seed(26);
+        let a = crate::graphgen::kmer::generate(&mut rng, 240, 3.0);
+        let a_hat = normalize_adjacency(&a);
+        let x = Dense::from_vec(240, 8, (0..240 * 8).map(|_| rng.normal() as f32).collect());
+        let model = test_model(&mut rng, 8, 3, 1536);
+        let want = reference_forward(&model, &a_hat, &x);
+
+        let segs = crate::partition::robw::robw_partition(&a_hat, 1536);
+        let sdir = TempDir::new("pipeline-mmap-seg");
+        let pdir = TempDir::new("pipeline-mmap-panel");
+        for enc in [
+            crate::sparse::segio::SegEncoding::Raw,
+            crate::sparse::segio::SegEncoding::Packed,
+        ] {
+            let store = Arc::new(
+                SegmentStore::open_or_spill_encoded(&a_hat, &segs, sdir.path(), 0, enc)
+                    .unwrap(),
+            );
+            let pstore = Arc::new(PanelStore::new(pdir.path(), 0).unwrap());
+            let cfg = PipelineConfig::staged(
+                StagingConfig::disk(store.clone(), 2).with_mmap(true),
+            )
+            .with_panel_spill(pstore.clone());
+            let mut mem = GpuMem::new(1 << 30);
+            let (got, rep) =
+                model.forward_cpu(&a_hat, &x, &mut mem, &Pool::new(2), &cfg).unwrap();
+            assert_eq!(got, want, "mmap pass ({enc}) must be byte-identical");
+            assert_eq!(mem.used, 0);
+            // Intermediate panels spilled as per-boundary chunk records
+            // and read back through the mapped path.
+            assert_eq!(pstore.len(), 2);
+            assert_eq!(rep.panel_cache_misses, 2, "mapped panel reads bypass the cache");
+            let expect: u64 = (0..2).map(|i| pstore.meta(i).unwrap().file_bytes).sum();
+            assert_eq!(rep.panel_spill_bytes, expect);
+            assert_eq!(rep.panel_read_bytes, expect);
+        }
     }
 
     #[test]

@@ -37,7 +37,7 @@ use crate::partition::robw::{materialize_into, robw_partition_par};
 use crate::runtime::heal::{read_segment_healing, HealStats, RebuildSource};
 use crate::runtime::pool::Pool;
 use crate::runtime::segstore::SegmentRead;
-use crate::sparse::spmm::{spmm_par_into, Dense};
+use crate::sparse::spmm::{spmm_view_par_into, Dense};
 use crate::sparse::Csr;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -288,8 +288,10 @@ pub fn serve_batch(
     let plan_ref = &plan;
     // Each tenant's merge is serial *within* the tenant (the batch is the
     // parallel axis) and writes the same disjoint row ranges in the same
-    // order as its solo pass — `spmm_par_into` computes rows
-    // independently, so the bytes match the solo pool-parallel run too.
+    // order as its solo pass — the view kernel computes rows
+    // independently, so the bytes match the solo pool-parallel run too
+    // (and a mapped read under `staging.mmap` multiplies straight off the
+    // page cache, shared by every tenant of the batch).
     let serial = Pool::serial();
     let mut consumers: Vec<_> = aggs
         .iter_mut()
@@ -300,8 +302,8 @@ pub fn serve_batch(
             let serial = &serial;
             move |i: usize, sub: &SegmentRead| -> Result<(), ServeError> {
                 let seg = &plan_ref[i];
-                spmm_par_into(
-                    sub.csr(),
+                spmm_view_par_into(
+                    sub.view(),
                     &q.x,
                     serial,
                     &mut agg.data[seg.row_lo * f..seg.row_hi * f],
@@ -346,6 +348,7 @@ pub fn serve_batch(
                         i,
                         reuse,
                         recycle,
+                        staging.mmap,
                         &staging.heal,
                         staging.chaos.as_deref(),
                         Some(RebuildSource { a: a_hat, seg }),
@@ -743,6 +746,41 @@ mod tests {
             .sum();
         assert_eq!(rep.disk_bytes, file_bytes, "I/O charged once per segment, not per tenant");
         assert_eq!(mem.used, 0);
+    }
+
+    #[test]
+    fn mmap_batch_matches_solo_runs_byte_for_byte() {
+        let a_hat = test_graph(105, 180);
+        let mut rng = Pcg::seed(106);
+        let queries: Vec<TenantQuery> =
+            (0..3).map(|_| tenant(&mut rng, 180, 8, 4, 2048)).collect();
+        let plan = robw_partition_par(&a_hat, 2048, &Pool::serial());
+        let dir = TempDir::new("serve-mmap");
+        for enc in [
+            crate::sparse::segio::SegEncoding::Raw,
+            crate::sparse::segio::SegEncoding::Packed,
+        ] {
+            let store = Arc::new(
+                SegmentStore::open_or_spill_encoded(&a_hat, &plan, dir.path(), 0, enc)
+                    .unwrap(),
+            );
+            let staging = StagingConfig::disk(store, 2).with_mmap(true);
+            let mut mem = GpuMem::new(1 << 30);
+            let (results, rep) =
+                serve_batch(&a_hat, &queries, &mut mem, &Pool::new(4), &staging);
+            assert_eq!(rep.tenants_admitted, 3);
+            assert_eq!(rep.cache_misses, plan.len(), "mapped reads bypass the host cache");
+            assert_eq!(mem.used, 0);
+            for (t, (r, q)) in results.iter().zip(&queries).enumerate() {
+                let got = r.as_ref().unwrap_or_else(|e| panic!("tenant {t} ({enc}): {e}"));
+                let mut solo_mem = GpuMem::new(1 << 30);
+                let (want, _) = q
+                    .layer
+                    .forward_cpu(&a_hat, &q.x, &mut solo_mem, &Pool::new(4), &staging)
+                    .unwrap();
+                assert_eq!(got, &want, "tenant {t} ({enc}) diverged from its solo pass");
+            }
+        }
     }
 
     #[test]

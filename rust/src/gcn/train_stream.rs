@@ -14,7 +14,7 @@
 //!   `H_l > 0` when the layer applies ReLU;
 //! * `dW_l = agg_lᵀ · dZ_l`, `db_l = colsum(dZ_l)`;
 //! * `dX_l = Âᵀ · (dZ_l · W_lᵀ)` (the scatter-free
-//!   [`spmm_transpose_par_into`] form), spilled through the panel store as
+//!   [`spmm_transpose_view_par_into`] form), spilled through the panel store as
 //!   the next layer's `dZ` — gradients never accumulate in host RAM across
 //!   layers, just as activations never do in the forward.
 //!
@@ -69,8 +69,10 @@ use crate::runtime::heal::{
 };
 use crate::runtime::pool::Pool;
 use crate::runtime::recycle::BufferPool;
-use crate::runtime::segstore::{PanelRead, PanelStore, SegmentRead};
-use crate::sparse::spmm::{spmm, spmm_par_into, spmm_transpose, spmm_transpose_par_into, Dense};
+use crate::runtime::segstore::{PanelRead, PanelSrc, PanelStore, SegmentRead};
+use crate::sparse::spmm::{
+    spmm, spmm_transpose, spmm_transpose_view_par_into, spmm_view_par_into, Dense, RowSrc,
+};
 use crate::sparse::Csr;
 use crate::util::rng::Pcg;
 use anyhow::{anyhow, bail, Result};
@@ -399,6 +401,7 @@ impl<'a> BackwardPass<'a> {
     fn owned_panel(&self, pr: PanelRead) -> Dense {
         match pr {
             PanelRead::Owned(p) => p,
+            PanelRead::Mapped(m) => m.to_dense(),
             PanelRead::Shared(p) => {
                 let mut v = match self.recycle {
                     Some(rp) => rp.take_panel_scratch(p.data.len()),
@@ -449,10 +452,15 @@ impl<'a> BackwardPass<'a> {
         let mut dz = if l + 1 == nl {
             self.grad_out.take().expect("softmax gradient present at top-layer open")
         } else {
+            // Backward panel reads stay on the copying path even under
+            // `staging.mmap`: every consumer either mutates the panel in
+            // place (dZ masking) or needs one contiguous slab (`add_at_b`),
+            // so a mapping would be materialized immediately anyway.
             let (pr, origin) = read_panel_healing(
                 self.panels,
                 grad_slot(nl),
                 self.recycle,
+                false,
                 self.policy,
                 self.chaos,
                 &mut self.heal,
@@ -482,6 +490,7 @@ impl<'a> BackwardPass<'a> {
                     self.panels,
                     l,
                     self.recycle,
+                    false,
                     self.policy,
                     self.chaos,
                     &mut self.heal,
@@ -518,6 +527,7 @@ impl<'a> BackwardPass<'a> {
                     self.panels,
                     l - 1,
                     self.recycle,
+                    false,
                     self.policy,
                     self.chaos,
                     &mut self.heal,
@@ -528,6 +538,7 @@ impl<'a> BackwardPass<'a> {
                 match pr {
                     PanelRead::Owned(p) => XInput::Owned(p),
                     PanelRead::Shared(p) => XInput::Shared(p),
+                    PanelRead::Mapped(m) => XInput::Owned(m.to_dense()),
                 }
             });
         }
@@ -540,16 +551,19 @@ impl<'a> BackwardPass<'a> {
     /// input panel, per-row-independent kernel) and fold them into `dW`;
     /// for inner layers, scatter the segment's `dAgg` rows into the `dX`
     /// accumulator through the deterministic owner-scans-all transpose.
-    fn segment(&mut self, l: usize, i: usize, sub: &Csr) -> Result<()> {
+    fn segment(&mut self, l: usize, i: usize, sub: &SegmentRead) -> Result<()> {
         let seg = &self.plans[l][i];
         let (lo, hi) = (seg.row_lo, seg.row_hi);
         let rows = hi - lo;
         let f = self.widths[l];
         let h = self.layers[l].w.ncols;
+        // View-based kernels: a mapped segment read (`staging.mmap`) never
+        // materializes — both products run straight off the page cache.
+        let view = sub.view();
         if self.recompute {
             let scratch = self.scratch.as_mut().expect("recompute scratch live at segment");
             let xl = self.xl.as_ref().expect("recompute input panel live at segment");
-            spmm_par_into(sub, xl.panel(), self.pool, &mut scratch[..rows * f]);
+            spmm_view_par_into(view, xl.panel(), self.pool, &mut scratch[..rows * f]);
             let dz = self.dz.as_ref().expect("dZ live at segment");
             let dw = self.dw.as_mut().expect("dW accumulator live at segment");
             add_at_b(dw, &scratch[..rows * f], &dz.data[lo * h..hi * h], rows, self.pool);
@@ -557,7 +571,7 @@ impl<'a> BackwardPass<'a> {
         if l > 0 {
             let dagg = self.dagg.as_ref().expect("dAgg live at segment");
             let dx = self.dx.as_mut().expect("dX accumulator live at segment");
-            spmm_transpose_par_into(sub, &dagg[lo * f..hi * f], f, self.pool, &mut dx.data);
+            spmm_transpose_view_par_into(view, &dagg[lo * f..hi * f], f, self.pool, &mut dx.data);
         }
         Ok(())
     }
@@ -586,6 +600,7 @@ impl<'a> BackwardPass<'a> {
                 self.panels,
                 agg_slot(nl, l),
                 self.recycle,
+                false,
                 self.policy,
                 self.chaos,
                 &mut self.heal,
@@ -740,12 +755,12 @@ impl StreamedTrainer {
             pool,
             &pcfg,
             &mut |_, _, seg, sub, x_l, agg| {
-                spmm_par_into(
-                    sub,
-                    x_l,
-                    pool,
-                    &mut agg.data[seg.row_lo * x_l.ncols..seg.row_hi * x_l.ncols],
-                );
+                let f = x_l.ncols();
+                let out = &mut agg.data[seg.row_lo * f..seg.row_hi * f];
+                match x_l {
+                    PanelSrc::Dense(d) => spmm_view_par_into(sub.view(), d, pool, out),
+                    PanelSrc::Mapped(m) => spmm_view_par_into(sub.view(), m, pool, out),
+                }
                 Ok(())
             },
             &mut |spill: &mut u64, l, agg| {
@@ -866,6 +881,7 @@ impl StreamedTrainer {
                             i,
                             reuse,
                             recycle,
+                            staging.mmap,
                             &staging.heal,
                             staging.chaos.as_deref(),
                             Some(RebuildSource { a: a_hat, seg }),
@@ -1310,6 +1326,55 @@ mod tests {
                     assert_eq!(rep.agg_read_bytes, 0);
                     assert_eq!(rep.backward_segments, 3 * rep.forward.per_layer[0].segments);
                 }
+            }
+            for (l, (lt, lo)) in tr.layers.iter().zip(oracle.iter()).enumerate() {
+                assert_eq!(bits(&lt.w.data), bits(&lo.w.data), "{policy:?} layer {l} weights");
+                assert_eq!(bits(&lt.b), bits(&lo.b), "{policy:?} layer {l} biases");
+            }
+        }
+    }
+
+    #[test]
+    fn mmap_disk_staged_step_matches_dense_oracle_bitwise() {
+        let mut rng = Pcg::seed(86);
+        let g = kmer::generate(&mut rng, 140, 3.0);
+        let a_hat = normalize_adjacency(&g);
+        let x0 = Dense::from_vec(140, 6, (0..140 * 6).map(|_| rng.normal() as f32).collect());
+        let layers = test_layers(&mut rng, &[6, 8, 4], &[true, false], 1024);
+        let labels: Vec<i32> = (0..140).map(|i| (i % 4) as i32).collect();
+        let segs = crate::partition::robw::robw_partition(&a_hat, 1024);
+        for policy in [RecomputePolicy::Reload, RecomputePolicy::Recompute] {
+            let mut oracle = layers.clone();
+            let mut tr = StreamedTrainer::new(layers.clone(), labels.clone()).unwrap();
+            let sdir = TempDir::new("train-mmap-seg");
+            let pdir = TempDir::new("train-mmap-panel");
+            let store = Arc::new(
+                crate::runtime::segstore::SegmentStore::open_or_spill_encoded(
+                    &a_hat,
+                    &segs,
+                    sdir.path(),
+                    0,
+                    crate::sparse::segio::SegEncoding::Auto,
+                )
+                .unwrap(),
+            );
+            let panels = Arc::new(PanelStore::new(pdir.path(), 0).unwrap());
+            let cfg = TrainStreamConfig::new(
+                StagingConfig::disk(store, 2).with_mmap(true),
+                panels,
+            )
+            .with_policy(policy);
+            let mut mem = GpuMem::new(1 << 30);
+            let pool = Pool::new(2);
+            for step in 0..2 {
+                let want = dense_step_oracle(&mut oracle, &a_hat, &x0, &labels, 0.5).unwrap();
+                let rep = tr.step(&a_hat, &x0, &mut mem, &pool, &cfg, 0.5).unwrap();
+                assert_eq!(
+                    rep.loss.to_bits(),
+                    want.to_bits(),
+                    "{policy:?} mmap step {step}"
+                );
+                assert_eq!(mem.used, 0, "{policy:?} mmap step {step}: ledger must balance");
             }
             for (l, (lt, lo)) in tr.layers.iter().zip(oracle.iter()).enumerate() {
                 assert_eq!(bits(&lt.w.data), bits(&lo.w.data), "{policy:?} layer {l} weights");

@@ -26,11 +26,16 @@
 //!                      verified against the CPU oracle (--segment-dir
 //!                      stages from spilled files instead of memory)
 //!   segcheck [--nodes N] [--budget BYTES] [--segment-dir DIR]
-//!            [--host-cache-bytes N]
+//!            [--host-cache-bytes N] [--seg-encoding E] [--mmap]
 //!                      spill RoBW segments to disk, stream the forward
 //!                      pass from the files through the host-cache tier,
 //!                      and verify byte-identity against the in-memory
-//!                      oracle (no compiled artifacts needed)
+//!                      oracle (no compiled artifacts needed). Every
+//!                      disk-staging subcommand honours --seg-encoding
+//!                      {raw|packed|auto} (on-disk colidx encoding of the
+//!                      spilled segments) and --mmap (zero-copy mapped
+//!                      reads instead of copying through read buffers);
+//!                      served bytes are identical across every combination
 //!   gcnstream [--layers L] [--nodes N] [--budget BYTES]
 //!             [--segment-dir DIR] [--panel-dir DIR]
 //!                      run an L-layer forward through the cross-layer
@@ -114,9 +119,11 @@ fn parsed_flag<T: std::str::FromStr>(args: &[String], key: &str, what: &str) -> 
 
 /// Phase II staging configuration shared by the streaming subcommands
 /// (`spgemm`, `gcnstream`): in-memory slicing by default, disk-backed via
-/// `open_or_spill` when a segment directory is selected, recycled when
-/// the buffer pool is enabled. A spill failure is a fatal runtime error
-/// (exit 1), not a usage error.
+/// `open_or_spill_encoded` when a segment directory is selected (colidx
+/// encoding per `--seg-encoding`), recycled when the buffer pool is
+/// enabled, zero-copy mapped when `--mmap` is set. A spill failure is a
+/// fatal runtime error (exit 1), not a usage error.
+#[allow(clippy::too_many_arguments)]
 fn staging_for(
     a_hat: &aires::sparse::Csr,
     budget: u64,
@@ -125,17 +132,20 @@ fn staging_for(
     prefetch_depth: usize,
     recycle_pool: &Option<std::sync::Arc<aires::runtime::BufferPool>>,
     heal: aires::runtime::HealPolicy,
+    mmap: bool,
+    seg_encoding: aires::sparse::segio::SegEncoding,
 ) -> aires::gcn::oocgcn::StagingConfig {
     use aires::gcn::oocgcn::StagingConfig;
     let mut staging = match segment_dir {
         None => StagingConfig::depth(prefetch_depth),
         Some(dir) => {
             let segs = aires::partition::robw::robw_partition(a_hat, budget);
-            let store = aires::runtime::SegmentStore::open_or_spill(
+            let store = aires::runtime::SegmentStore::open_or_spill_encoded(
                 a_hat,
                 &segs,
                 std::path::Path::new(dir),
                 host_cache_bytes,
+                seg_encoding,
             )
             .unwrap_or_else(|e| {
                 eprintln!("error: spilling segments to {dir}: {e}");
@@ -147,7 +157,7 @@ fn staging_for(
     if let Some(rp) = recycle_pool {
         staging = staging.with_recycle(rp.clone());
     }
-    staging.with_heal(heal)
+    staging.with_heal(heal).with_mmap(mmap)
 }
 
 fn main() {
@@ -197,6 +207,25 @@ fn main() {
         parsed_flag(&args, "--host-cache-bytes", "a byte count (0 = no host cache)")
             .or(cfg.host_cache_bytes)
             .unwrap_or(aires::runtime::segstore::UNBOUNDED_CACHE);
+    // Storage engine v2 surface: --mmap maps spilled segment and panel
+    // files into the address space instead of copying them through read
+    // buffers (config key `mmap_segments` as fallback), and
+    // --seg-encoding selects the on-disk colidx encoding for spilled
+    // RoBW segments: raw (the seed layout), packed (delta + bit-packed),
+    // or auto (per segment, smaller file wins; config key `seg_encoding`
+    // as fallback, default raw). Served bytes are identical across every
+    // combination; only file sizes and copy traffic change.
+    let mmap: bool = args.iter().any(|a| a == "--mmap") || cfg.mmap_segments == Some(true);
+    let seg_encoding: aires::sparse::segio::SegEncoding =
+        parsed_flag(&args, "--seg-encoding", "one of raw, packed, auto")
+            .or_else(|| {
+                // The config loader already rejected unknown encoding
+                // strings, so this re-parse cannot fail.
+                cfg.seg_encoding
+                    .as_ref()
+                    .map(|s| s.parse().expect("validated at config load"))
+            })
+            .unwrap_or_default();
     // --recycle-cap-bytes bounds the staging buffer-recycle pool
     // (`runtime::recycle`): staged-segment scratch circulates through the
     // pipeline instead of being reallocated per segment. 0 disables
@@ -459,6 +488,8 @@ fn main() {
                     prefetch_depth,
                     &recycle_pool,
                     heal,
+                    mmap,
+                    seg_encoding,
                 );
                 // Panel tier for spilled activations, aggregated inputs
                 // and the rotating gradient hand-off. Cacheless: every
@@ -688,6 +719,8 @@ fn main() {
                 prefetch_depth,
                 &recycle_pool,
                 heal,
+                mmap,
+                seg_encoding,
             );
             let (out, rep) = layer
                 .forward_staged(&mut exec, &a_hat, &x, &mut mem, &pool, &staging)
@@ -758,11 +791,12 @@ fn main() {
                 ),
             };
             let segs = aires::partition::robw::robw_partition(&a_hat, budget);
-            let store = aires::runtime::SegmentStore::open_or_spill(
+            let store = aires::runtime::SegmentStore::open_or_spill_encoded(
                 &a_hat,
                 &segs,
                 &dir,
                 host_cache_bytes,
+                seg_encoding,
             )
             .unwrap_or_else(|e| {
                 eprintln!("error: spilling segments to {}: {e}", dir.display());
@@ -770,7 +804,7 @@ fn main() {
             });
             let spilled: u64 = (0..store.len()).map(|i| store.meta(i).file_bytes).sum();
             println!(
-                "spilled {} segments ({}) to {}",
+                "spilled {} segments ({}, {seg_encoding} encoding) to {}",
                 store.len(),
                 aires::util::human_bytes(spilled),
                 dir.display()
@@ -780,7 +814,7 @@ fn main() {
             if let Some(rp) = &recycle_pool {
                 staging = staging.with_recycle(rp.clone());
             }
-            let staging = staging.with_heal(heal);
+            let staging = staging.with_heal(heal).with_mmap(mmap);
             let mut mem = GpuMem::new(1 << 30);
             let (got, rep) = layer
                 .forward_cpu(&a_hat, &x, &mut mem, &pool, &staging)
@@ -1145,6 +1179,8 @@ fn main() {
                 prefetch_depth,
                 &recycle_pool,
                 heal,
+                mmap,
+                seg_encoding,
             );
             // Panel spilling: --panel-dir / config `panel_dir` routes
             // every intermediate feature panel through the disk tier.
@@ -1326,6 +1362,8 @@ fn main() {
                 prefetch_depth,
                 &recycle_pool,
                 heal,
+                mmap,
+                seg_encoding,
             );
             let mut mem = GpuMem::new(256 << 20);
             println!(
@@ -1573,7 +1611,7 @@ fn main() {
         _ => {
             println!(
                 "aires — out-of-core GCN co-design (AIRES reproduction)\n\n\
-                 usage: aires <catalog|features|fig3|fig6|fig7|fig8|fig9|table3|report|prep|train|spgemm|segcheck|faultcheck|gcnstream|serve|bench|parcheck|trace|sweep|config-dump> [--config F] [--threads N] [--prefetch-depth D] [--segment-dir DIR] [--host-cache-bytes N] [--recycle-cap-bytes N] [--retry-max N] [--retry-backoff-ios N] [--checkpoint-dir DIR] [--layers L] [--panel-dir DIR] [--tenants N] [--db F] [--train-stream] [--recompute-policy P] [args]\n\
+                 usage: aires <catalog|features|fig3|fig6|fig7|fig8|fig9|table3|report|prep|train|spgemm|segcheck|faultcheck|gcnstream|serve|bench|parcheck|trace|sweep|config-dump> [--config F] [--threads N] [--prefetch-depth D] [--segment-dir DIR] [--host-cache-bytes N] [--seg-encoding E] [--mmap] [--recycle-cap-bytes N] [--retry-max N] [--retry-backoff-ios N] [--checkpoint-dir DIR] [--layers L] [--panel-dir DIR] [--tenants N] [--db F] [--train-stream] [--recompute-policy P] [args]\n\
                  see README.md for details"
             );
         }

@@ -129,23 +129,36 @@ fn is_transient(e: &SegioError) -> bool {
 }
 
 /// Read segment `i` through the recovery policy: chaos intercept first
-/// (so injected faults hit even warm cache reads), then the store;
-/// transient errors retry with doubling virtual backoff, persistent
-/// errors quarantine-and-rebuild once when the policy and a
-/// [`RebuildSource`] allow. Recovery actions accumulate into `stats`
-/// (also on the error path). With the default policy and no chaos this
-/// is exactly `store.read_reusing(i, reuse, pool)`.
+/// (so injected faults hit even warm cache reads — and mmap'd reads:
+/// interception happens before the store is consulted, so the zero-copy
+/// path is chaos-visible like any other), then the store; transient
+/// errors retry with doubling virtual backoff, persistent errors
+/// quarantine-and-rebuild once when the policy and a [`RebuildSource`]
+/// allow. `mmap` routes the store read through
+/// [`SegmentStore::read_mapped`] (zero-copy, packed segments fall back to
+/// a copy decode) instead of [`SegmentStore::read_reusing`]. Recovery
+/// actions accumulate into `stats` (also on the error path). With the
+/// default policy, no chaos, and `mmap` off this is exactly
+/// `store.read_reusing(i, reuse, pool)`.
 #[allow(clippy::too_many_arguments)]
 pub fn read_segment_healing(
     store: &SegmentStore,
     i: usize,
     mut reuse: Option<Csr>,
     pool: Option<&BufferPool>,
+    mmap: bool,
     policy: &HealPolicy,
     chaos: Option<&FaultPlan>,
     source: Option<RebuildSource<'_>>,
     stats: &mut HealStats,
 ) -> Result<(SegmentRead, ReadOrigin), SegioError> {
+    let read = |reuse: Option<Csr>| {
+        if mmap {
+            store.read_mapped(i, reuse, pool)
+        } else {
+            store.read_reusing(i, reuse, pool)
+        }
+    };
     let mut attempt = 0usize;
     let mut rebuilt_this_call = false;
     loop {
@@ -171,9 +184,9 @@ pub fn read_segment_healing(
                 stats.injected += 1;
                 stats.slow_reads += 1;
                 stats.backoff_bytes += charge_bytes;
-                store.read_reusing(i, reuse.take(), pool)
+                read(reuse.take())
             }
-            None => store.read_reusing(i, reuse.take(), pool),
+            None => read(reuse.take()),
         };
         match attempt_result {
             Ok(ok) => return Ok(ok),
@@ -211,16 +224,27 @@ pub fn read_segment_healing(
 /// with doubling virtual backoff (charged on the panel's encoded size);
 /// persistent corruption has no rebuild source — a torn panel is data
 /// produced mid-run, not derivable from the inputs — so it stays a typed
-/// error. With the default policy and no chaos this is exactly
-/// `panels.read_reusing(idx, pool)`.
+/// error. `mmap` routes the store read through
+/// [`PanelStore::read_mapped`] (chunk records served from the page
+/// cache); chaos interception still happens first, so injected faults hit
+/// mapped reads too. With the default policy, no chaos, and `mmap` off
+/// this is exactly `panels.read_reusing(idx, pool)`.
 pub fn read_panel_healing(
     panels: &PanelStore,
     idx: usize,
     pool: Option<&BufferPool>,
+    mmap: bool,
     policy: &HealPolicy,
     chaos: Option<&FaultPlan>,
     stats: &mut HealStats,
 ) -> Result<(PanelRead, ReadOrigin), SegioError> {
+    let read = || {
+        if mmap {
+            panels.read_mapped(idx, pool)
+        } else {
+            panels.read_reusing(idx, pool)
+        }
+    };
     let mut attempt = 0usize;
     loop {
         let attempt_result = match chaos.and_then(|c| c.intercept(Tier::Panel, idx)) {
@@ -236,9 +260,9 @@ pub fn read_panel_healing(
                 stats.injected += 1;
                 stats.slow_reads += 1;
                 stats.backoff_bytes += charge_bytes;
-                panels.read_reusing(idx, pool)
+                read()
             }
-            None => panels.read_reusing(idx, pool),
+            None => read(),
         };
         match attempt_result {
             Ok(ok) => return Ok(ok),
@@ -294,7 +318,7 @@ mod tests {
         assert!(!policy.enabled());
         let (want, _) = store.read(0).unwrap();
         let (got, origin) =
-            read_segment_healing(&store, 0, None, None, &policy, None, None, &mut stats)
+            read_segment_healing(&store, 0, None, None, false, &policy, None, None, &mut stats)
                 .unwrap();
         assert_eq!(got.csr(), want.csr());
         assert!(origin.disk_bytes > 0);
@@ -315,6 +339,7 @@ mod tests {
             1,
             None,
             None,
+            false,
             &HealPolicy::default(),
             Some(&plan),
             None,
@@ -337,9 +362,18 @@ mod tests {
         let policy = HealPolicy { retry_max: 3, backoff_ios: 2, rebuild: false };
         let mut stats = HealStats::default();
         let (want, _) = store.read(2).unwrap();
-        let (got, _) =
-            read_segment_healing(&store, 2, None, None, &policy, Some(&plan), None, &mut stats)
-                .unwrap();
+        let (got, _) = read_segment_healing(
+            &store,
+            2,
+            None,
+            None,
+            false,
+            &policy,
+            Some(&plan),
+            None,
+            &mut stats,
+        )
+        .unwrap();
         assert_eq!(got.csr(), want.csr(), "healed read serves the same bytes");
         assert_eq!(stats.retries, 2);
         assert_eq!(stats.injected, 2);
@@ -361,9 +395,18 @@ mod tests {
         }]);
         let policy = HealPolicy { retry_max: 2, backoff_ios: 1, rebuild: false };
         let mut stats = HealStats::default();
-        let err =
-            read_segment_healing(&store, 0, None, None, &policy, Some(&plan), None, &mut stats)
-                .unwrap_err();
+        let err = read_segment_healing(
+            &store,
+            0,
+            None,
+            None,
+            false,
+            &policy,
+            Some(&plan),
+            None,
+            &mut stats,
+        )
+        .unwrap_err();
         assert!(matches!(err, SegioError::Io(_)), "{err}");
         assert_eq!(stats.retries, 2, "retry budget fully spent");
         assert_eq!(stats.injected, 3, "initial attempt + 2 retries all faulted");
@@ -382,9 +425,18 @@ mod tests {
         let policy = HealPolicy { retry_max: 0, backoff_ios: 0, rebuild: true };
         let src = RebuildSource { a: &a, seg: &segs[victim] };
         let mut stats = HealStats::default();
-        let (got, origin) =
-            read_segment_healing(&store, victim, None, None, &policy, None, Some(src), &mut stats)
-                .unwrap();
+        let (got, origin) = read_segment_healing(
+            &store,
+            victim,
+            None,
+            None,
+            false,
+            &policy,
+            None,
+            Some(src),
+            &mut stats,
+        )
+        .unwrap();
         let want = crate::partition::robw::materialize(&a, &segs[victim]);
         assert_eq!(got.csr(), &want, "rebuilt segment serves the true bytes");
         assert!(origin.disk_bytes > 0);
@@ -414,6 +466,7 @@ mod tests {
             victim,
             None,
             None,
+            false,
             &policy,
             Some(&plan),
             Some(src),
@@ -437,6 +490,7 @@ mod tests {
             victim,
             None,
             None,
+            false,
             &no_rebuild,
             Some(&plan2),
             None,
@@ -461,7 +515,8 @@ mod tests {
         let policy = HealPolicy { retry_max: 1, backoff_ios: 3, rebuild: true };
         let mut stats = HealStats::default();
         let (got, _) =
-            read_panel_healing(&panels, 0, None, &policy, Some(&plan), &mut stats).unwrap();
+            read_panel_healing(&panels, 0, None, false, &policy, Some(&plan), &mut stats)
+                .unwrap();
         assert_eq!(got.dense(), &p);
         assert_eq!(stats.retries, 1);
         assert_eq!(stats.backoff_bytes, 3 * panels.meta(0).unwrap().file_bytes);
@@ -474,8 +529,83 @@ mod tests {
         std::fs::write(&path, &bytes).unwrap();
         let mut stats2 = HealStats::default();
         let err =
-            read_panel_healing(&panels, 0, None, &policy, None, &mut stats2).unwrap_err();
+            read_panel_healing(&panels, 0, None, false, &policy, None, &mut stats2).unwrap_err();
         assert!(matches!(err, SegioError::PayloadChecksum { .. }), "{err}");
+    }
+
+    #[test]
+    fn mmap_reads_heal_chaos_and_real_corruption_in_both_encodings() {
+        use crate::runtime::segstore::SegmentRead;
+        use crate::sparse::segio::SegEncoding;
+        for enc in [SegEncoding::Raw, SegEncoding::Packed] {
+            let mut rng = Pcg::seed(226);
+            let a = random_csr(&mut rng, 100, 30, 0.15);
+            let segs = robw_partition(&a, 600);
+            let dir = TempDir::new("heal-mmap");
+            let store =
+                SegmentStore::spill_encoded(&a, &segs, dir.path(), 0, enc).unwrap();
+            let victim = 1usize;
+            let want = crate::partition::robw::materialize(&a, &segs[victim]);
+            let policy = HealPolicy { retry_max: 1, backoff_ios: 1, rebuild: true };
+            // Chaos interception is upstream of the store, so it fires on
+            // the mapped path exactly as it does on the copying one.
+            let plan = FaultPlan::new(vec![FaultSpec {
+                tier: Tier::Segment,
+                index: victim,
+                kind: FaultKind::CorruptOnRead,
+            }]);
+            let src = RebuildSource { a: &a, seg: &segs[victim] };
+            let mut stats = HealStats::default();
+            let (got, _) = read_segment_healing(
+                &store,
+                victim,
+                None,
+                None,
+                true,
+                &policy,
+                Some(&plan),
+                Some(src),
+                &mut stats,
+            )
+            .unwrap();
+            assert_eq!(got.into_csr(), want, "chaos-healed mapped read under {enc}");
+            assert_eq!((stats.quarantined, stats.rebuilt), (1, 1));
+            // Real on-disk corruption surfaces through the mapped
+            // validator and heals back in the original encoding.
+            let path = store.meta(victim).path.clone();
+            let mut bytes = std::fs::read(&path).unwrap();
+            let mid = bytes.len() / 2;
+            bytes[mid] ^= 0x40;
+            std::fs::write(&path, &bytes).unwrap();
+            let mut stats2 = HealStats::default();
+            let (got2, _) = read_segment_healing(
+                &store,
+                victim,
+                None,
+                None,
+                true,
+                &policy,
+                None,
+                Some(src),
+                &mut stats2,
+            )
+            .unwrap();
+            assert_eq!(got2.into_csr(), want, "disk-healed mapped read under {enc}");
+            assert_eq!((stats2.quarantined, stats2.rebuilt), (1, 1));
+            let healed = std::fs::read(&path).unwrap();
+            assert_eq!(
+                u32::from_le_bytes(healed[12..16].try_into().unwrap()),
+                store.meta(victim).kind,
+                "rebuild must preserve the original encoding"
+            );
+            // Raw segments come back mapped; packed ones fall back to a
+            // copy decode.
+            let (served, _) = store.read_mapped(victim, None, None).unwrap();
+            match enc {
+                SegEncoding::Raw => assert!(matches!(served, SegmentRead::Mapped(_))),
+                _ => assert!(matches!(served, SegmentRead::Owned(_))),
+            }
+        }
     }
 
     #[test]

@@ -25,7 +25,10 @@ pub use heal::{HealPolicy, HealStats};
 pub use pool::Pool;
 pub use prefetch::Prefetch;
 pub use recycle::{BufferPool, RecycleStats};
-pub use segstore::{CacheStats, PanelRead, PanelStore, SegmentRead, SegmentStore};
+pub use segstore::{
+    CacheStats, MappedPanelChunks, MappedSegment, PanelRead, PanelSrc, PanelStore, SegmentRead,
+    SegmentStore,
+};
 pub use tile_exec::BsrSpmmExec;
 
 /// Default artifact directory relative to the repo root.

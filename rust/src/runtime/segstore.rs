@@ -26,9 +26,10 @@
 
 use crate::partition::robw::{calc_mem, materialize, RobwSegment};
 use crate::runtime::recycle::BufferPool;
-use crate::sparse::segio::{self, Fnv64, SegioError};
-use crate::sparse::spmm::Dense;
-use crate::sparse::Csr;
+use crate::sparse::segio::{self, Fnv64, SegEncoding, SegioError};
+use crate::sparse::spmm::{Dense, RowSrc};
+use crate::sparse::{Csr, SegView};
+use mmap::Mmap;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
@@ -59,6 +60,10 @@ pub struct SegmentMeta {
     pub plan_bytes: u64,
     /// Encoded file size on disk (header + sections).
     pub file_bytes: u64,
+    /// On-disk record kind ([`segio::KIND_CSR`] or
+    /// [`segio::KIND_CSR_PACKED`]) — the per-segment encoding the spill
+    /// chose, preserved across quarantine rebuilds.
+    pub kind: u32,
     /// Segment file path.
     pub path: PathBuf,
 }
@@ -89,42 +94,87 @@ pub struct ReadOrigin {
     pub cache_hit: bool,
 }
 
-/// A served segment: either an owned matrix (cache-bypassing read — its
-/// buffers can be handed back to the staging pipeline's recycle pool) or
-/// a shared reference to a cache-resident matrix (no copy was made; the
-/// bytes belong to the host tier).
-#[derive(Debug, Clone)]
+/// A served segment: an owned matrix (cache-bypassing read — its buffers
+/// can be handed back to the staging pipeline's recycle pool), a shared
+/// reference to a cache-resident matrix (no copy was made; the bytes
+/// belong to the host tier), or a zero-copy mapping whose O(nnz) sections
+/// are served straight from the page cache ([`SegmentStore::read_mapped`]).
+///
+/// Compute paths should consume reads through [`SegmentRead::view`],
+/// which every variant supports without a copy. [`SegmentRead::csr`] (and
+/// `Deref<Target = Csr>`) exist for the copy-decode variants only and
+/// panic on `Mapped` — a mapped read has no materialized `Csr` to lend.
+#[derive(Debug)]
 pub enum SegmentRead {
     /// Owned decoded segment; [`SegmentRead::reclaim`] yields its buffers.
     Owned(Csr),
     /// Cache-resident segment, shared without a defensive clone.
     Shared(Arc<Csr>),
+    /// mmap-backed segment; colidx/vals stay in the page cache.
+    Mapped(MappedSegment),
 }
 
 impl SegmentRead {
     /// The decoded matrix, however it is held.
+    ///
+    /// # Panics
+    ///
+    /// On [`SegmentRead::Mapped`] — use [`SegmentRead::view`], which all
+    /// variants serve without materializing.
     pub fn csr(&self) -> &Csr {
         match self {
             SegmentRead::Owned(m) => m,
             SegmentRead::Shared(m) => m,
+            SegmentRead::Mapped(_) => {
+                panic!("mapped segment read holds no materialized Csr; use SegmentRead::view()")
+            }
+        }
+    }
+
+    /// Borrowed kernel-ready view of the decoded matrix — the accessor
+    /// every variant (owned, cache-shared, mmap-backed) serves without a
+    /// copy.
+    pub fn view(&self) -> SegView<'_> {
+        match self {
+            SegmentRead::Owned(m) => m.view(),
+            SegmentRead::Shared(m) => m.view(),
+            SegmentRead::Mapped(m) => m.view(),
         }
     }
 
     /// Recover the owned buffers for recycling — `None` when the matrix
-    /// is cache-resident (its buffers keep serving future hits).
+    /// is cache-resident (its buffers keep serving future hits). A mapped
+    /// read yields the scratch buffers it displaced at read time (plus its
+    /// materialized rowptr), so the recycle loop keeps circulating at
+    /// steady state.
     pub fn reclaim(self) -> Option<Csr> {
         match self {
             SegmentRead::Owned(m) => Some(m),
             SegmentRead::Shared(_) => None,
+            SegmentRead::Mapped(m) => Some(m.reclaim()),
         }
     }
 
     /// Clone out an owned matrix (test/tool convenience; copies on the
-    /// shared variant).
+    /// shared and mapped variants).
     pub fn into_csr(self) -> Csr {
         match self {
             SegmentRead::Owned(m) => m,
             SegmentRead::Shared(m) => (*m).clone(),
+            SegmentRead::Mapped(m) => m.to_csr(),
+        }
+    }
+}
+
+impl Clone for SegmentRead {
+    /// Cloning a mapped read materializes it (`Owned`): a `Clone` must not
+    /// duplicate an mmap region, and callers that clone want a matrix, not
+    /// a file handle.
+    fn clone(&self) -> SegmentRead {
+        match self {
+            SegmentRead::Owned(m) => SegmentRead::Owned(m.clone()),
+            SegmentRead::Shared(m) => SegmentRead::Shared(Arc::clone(m)),
+            SegmentRead::Mapped(m) => SegmentRead::Owned(m.to_csr()),
         }
     }
 }
@@ -134,6 +184,87 @@ impl std::ops::Deref for SegmentRead {
 
     fn deref(&self) -> &Csr {
         self.csr()
+    }
+}
+
+/// A zero-copy mapped segment: the record's file stays mmap'd for the
+/// lifetime of the value, its O(nnz) colidx/vals sections are borrowed
+/// straight from the page cache, and only the O(nrows) rowptr is decoded
+/// once into (recycled) scratch. Produced by
+/// [`SegmentStore::read_mapped`]; the bytes were fully validated
+/// (checksums + CSR invariants) by [`segio::decode_segment_ref`] before
+/// this value existed.
+///
+/// The section *offsets* are stored rather than borrowed slices — a
+/// self-referential borrow of the held mapping is not expressible — and
+/// [`MappedSegment::view`] re-derives the slices per call (two bounds
+/// checks; alignment was proven at map time).
+#[derive(Debug)]
+pub struct MappedSegment {
+    map: Mmap,
+    nrows: usize,
+    ncols: usize,
+    nnz: usize,
+    /// Materialized rowptr (decoded once at map time).
+    rowptr: Vec<usize>,
+    /// Byte offset of the colidx section within the mapping.
+    colidx_off: usize,
+    /// Byte offset of the vals section within the mapping.
+    vals_off: usize,
+    /// Index/value buffers of the recycled scratch `Csr` this read
+    /// displaced, held so [`MappedSegment::reclaim`] keeps their capacity
+    /// circulating through the staging pool.
+    spare_colidx: Vec<u32>,
+    spare_vals: Vec<f32>,
+}
+
+impl MappedSegment {
+    /// Borrowed kernel-ready view: rowptr from the materialized copy,
+    /// colidx/vals straight from the mapping.
+    pub fn view(&self) -> SegView<'_> {
+        let buf = self.map.as_slice();
+        let colidx = segio::borrow_le_slice::<u32>(
+            &buf[self.colidx_off..self.colidx_off + self.nnz * 4],
+            self.nnz,
+        )
+        .expect("alignment and byte order were proven when the segment was mapped");
+        let vals = segio::borrow_le_slice::<f32>(
+            &buf[self.vals_off..self.vals_off + self.nnz * 4],
+            self.nnz,
+        )
+        .expect("alignment and byte order were proven when the segment was mapped");
+        SegView {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            rowptr: &self.rowptr,
+            colidx,
+            vals,
+        }
+    }
+
+    /// Materialize an owned `Csr` (copies all three sections).
+    pub fn to_csr(&self) -> Csr {
+        let v = self.view();
+        Csr {
+            nrows: v.nrows,
+            ncols: v.ncols,
+            rowptr: v.rowptr.to_vec(),
+            colidx: v.colidx.to_vec(),
+            vals: v.vals.to_vec(),
+        }
+    }
+
+    /// Unmap and hand back a scratch `Csr` built from the displaced spare
+    /// buffers + the materialized rowptr — content is arbitrary, capacity
+    /// is what the recycle loop cares about.
+    pub fn reclaim(self) -> Csr {
+        Csr {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            rowptr: self.rowptr,
+            colidx: self.spare_colidx,
+            vals: self.spare_vals,
+        }
     }
 }
 
@@ -261,6 +392,66 @@ fn fingerprint(a: &Csr, segs: &[RobwSegment]) -> u64 {
     h.finish()
 }
 
+/// Marker-file tag of a store-wide [`SegEncoding`] choice. Fixtures are
+/// keyed by encoding mode: a directory spilled `raw` is never silently
+/// reused for a `packed` (or `auto`) run even when the matrix + plan
+/// match, because the recorded per-segment kinds/sizes would describe the
+/// wrong files.
+fn mode_tag(enc: SegEncoding) -> u32 {
+    match enc {
+        SegEncoding::Raw => 0,
+        SegEncoding::Packed => 1,
+        SegEncoding::Auto => 2,
+    }
+}
+
+/// Serialize the v2 `fingerprint` marker: matrix+plan fingerprint,
+/// encoding-mode tag, and the per-segment `(kind, encoded file size)`
+/// table the spill committed to, sealed with an FNV-1a 64 of everything
+/// before it. The v1 marker was a bare 8-byte fingerprint; it fails
+/// [`parse_marker`] and therefore triggers a clean respill.
+fn encode_marker(fp: u64, enc: SegEncoding, per_seg: &[(u32, u64)]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(16 + per_seg.len() * 12 + 8);
+    buf.extend_from_slice(&fp.to_le_bytes());
+    buf.extend_from_slice(&mode_tag(enc).to_le_bytes());
+    buf.extend_from_slice(&(per_seg.len() as u32).to_le_bytes());
+    for &(kind, bytes) in per_seg {
+        buf.extend_from_slice(&kind.to_le_bytes());
+        buf.extend_from_slice(&bytes.to_le_bytes());
+    }
+    let sum = segio::fnv1a64(&buf);
+    buf.extend_from_slice(&sum.to_le_bytes());
+    buf
+}
+
+/// Parse a v2 marker back into `(fingerprint, mode tag, per-segment
+/// (kind, file size))`. `None` for anything else — wrong length, bad
+/// seal, v1 markers — which [`SegmentStore::open_or_spill_encoded`]
+/// treats as "not reusable".
+fn parse_marker(buf: &[u8]) -> Option<(u64, u32, Vec<(u32, u64)>)> {
+    if buf.len() < 24 {
+        return None;
+    }
+    let (body, seal) = buf.split_at(buf.len() - 8);
+    if segio::fnv1a64(body) != u64::from_le_bytes(seal.try_into().ok()?) {
+        return None;
+    }
+    let fp = u64::from_le_bytes(body.get(0..8)?.try_into().ok()?);
+    let tag = u32::from_le_bytes(body.get(8..12)?.try_into().ok()?);
+    let count = u32::from_le_bytes(body.get(12..16)?.try_into().ok()?) as usize;
+    if body.len() != 16 + count * 12 {
+        return None;
+    }
+    let mut per_seg = Vec::with_capacity(count);
+    for i in 0..count {
+        let off = 16 + i * 12;
+        let kind = u32::from_le_bytes(body.get(off..off + 4)?.try_into().ok()?);
+        let bytes = u64::from_le_bytes(body.get(off + 4..off + 12)?.try_into().ok()?);
+        per_seg.push((kind, bytes));
+    }
+    Some((fp, tag, per_seg))
+}
+
 impl SegmentStore {
     fn seg_path(dir: &Path, i: usize) -> PathBuf {
         dir.join(format!("seg-{i:05}.bin"))
@@ -270,15 +461,28 @@ impl SegmentStore {
         dir.join("fingerprint")
     }
 
-    /// Spill every planned segment of `a` to `dir` (created if missing),
-    /// returning a store that serves them back through a host cache of at
-    /// most `host_cache_bytes` decoded bytes (`0` = no cache,
-    /// [`UNBOUNDED_CACHE`] = keep everything).
+    /// Spill every planned segment of `a` to `dir` (created if missing)
+    /// in the raw encoding, returning a store that serves them back
+    /// through a host cache of at most `host_cache_bytes` decoded bytes
+    /// (`0` = no cache, [`UNBOUNDED_CACHE`] = keep everything).
     pub fn spill(
         a: &Csr,
         segs: &[RobwSegment],
         dir: &Path,
         host_cache_bytes: u64,
+    ) -> Result<SegmentStore, SegioError> {
+        Self::spill_encoded(a, segs, dir, host_cache_bytes, SegEncoding::Raw)
+    }
+
+    /// [`Self::spill`] with an explicit segment encoding: `Raw` writes
+    /// plain CSR records, `Packed` delta-bitpacks every colidx section,
+    /// and `Auto` picks per segment whichever encodes smaller.
+    pub fn spill_encoded(
+        a: &Csr,
+        segs: &[RobwSegment],
+        dir: &Path,
+        host_cache_bytes: u64,
+        enc: SegEncoding,
     ) -> Result<SegmentStore, SegioError> {
         std::fs::create_dir_all(dir)
             .map_err(|e| SegioError::Io(format!("create {}: {e}", dir.display())))?;
@@ -286,21 +490,53 @@ impl SegmentStore {
         // leaves the marker + partial files, which the next open_or_spill
         // detects (size check fails) and cleanly respills. The other order
         // would leave a marker-less non-empty directory that
-        // clear_store_files permanently refuses to touch.
+        // clear_store_files permanently refuses to touch. The v2 marker
+        // records each segment's (kind, encoded size), so the encoding
+        // decisions are made up front — from section lengths alone, no
+        // bytes written — and the write pass below must land on exactly
+        // the committed sizes (both encoders are deterministic).
+        let planned: Vec<(u32, u64)> = segs
+            .iter()
+            .map(|seg| {
+                let raw = segio::encoded_len(seg.row_hi - seg.row_lo, seg.nnz);
+                match enc {
+                    SegEncoding::Raw => (segio::KIND_CSR, raw),
+                    SegEncoding::Packed => {
+                        let sub = materialize(a, seg);
+                        (segio::KIND_CSR_PACKED, segio::encoded_packed_len(&sub))
+                    }
+                    SegEncoding::Auto => {
+                        let sub = materialize(a, seg);
+                        let packed = segio::encoded_packed_len(&sub);
+                        if packed < raw {
+                            (segio::KIND_CSR_PACKED, packed)
+                        } else {
+                            (segio::KIND_CSR, raw)
+                        }
+                    }
+                }
+            })
+            .collect();
         let fp = Self::fingerprint_path(dir);
-        std::fs::write(&fp, fingerprint(a, segs).to_le_bytes())
+        std::fs::write(&fp, encode_marker(fingerprint(a, segs), enc, &planned))
             .map_err(|e| SegioError::Io(format!("write {}: {e}", fp.display())))?;
         let mut metas = Vec::with_capacity(segs.len());
         for (i, seg) in segs.iter().enumerate() {
             let sub = materialize(a, seg);
             let path = Self::seg_path(dir, i);
-            let file_bytes = segio::write_segment(&path, &sub)?;
+            let (file_bytes, kind) = segio::write_segment_encoded(&path, &sub, enc)?;
+            debug_assert_eq!(
+                (kind, file_bytes),
+                planned[i],
+                "encoding choice must be deterministic"
+            );
             metas.push(SegmentMeta {
                 row_lo: seg.row_lo,
                 row_hi: seg.row_hi,
                 nnz: seg.nnz,
                 plan_bytes: seg.bytes,
                 file_bytes,
+                kind,
                 path,
             });
         }
@@ -324,37 +560,60 @@ impl SegmentStore {
         dir: &Path,
         host_cache_bytes: u64,
     ) -> Result<SegmentStore, SegioError> {
-        let want_fp = fingerprint(a, segs).to_le_bytes();
-        let reusable = std::fs::read(Self::fingerprint_path(dir))
-            .map(|got| got == want_fp)
-            .unwrap_or(false)
-            && segs.iter().enumerate().all(|(i, seg)| {
-                let want = segio::encoded_len(seg.row_hi - seg.row_lo, seg.nnz);
-                std::fs::metadata(Self::seg_path(dir, i))
-                    .map(|m| m.len() == want)
-                    .unwrap_or(false)
-            })
-            && {
-                // No stale extra segment files from a longer previous plan.
-                std::fs::metadata(Self::seg_path(dir, segs.len())).is_err()
-            };
+        Self::open_or_spill_encoded(a, segs, dir, host_cache_bytes, SegEncoding::Raw)
+    }
+
+    /// [`Self::open_or_spill`] with an explicit segment encoding. Reuse
+    /// requires the marker's recorded encoding *mode* to match `enc` as
+    /// well — fixtures are keyed by encoding, so switching `--seg-encoding`
+    /// between runs respills rather than serving records the manifest
+    /// would mis-describe.
+    pub fn open_or_spill_encoded(
+        a: &Csr,
+        segs: &[RobwSegment],
+        dir: &Path,
+        host_cache_bytes: u64,
+        enc: SegEncoding,
+    ) -> Result<SegmentStore, SegioError> {
+        let want_fp = fingerprint(a, segs);
+        let marker = std::fs::read(Self::fingerprint_path(dir))
+            .ok()
+            .and_then(|buf| parse_marker(&buf));
+        let reusable = marker.as_ref().is_some_and(|(fp, tag, per_seg)| {
+            *fp == want_fp
+                && *tag == mode_tag(enc)
+                && per_seg.len() == segs.len()
+                && per_seg.iter().enumerate().all(|(i, &(_, bytes))| {
+                    std::fs::metadata(Self::seg_path(dir, i))
+                        .map(|m| m.len() == bytes)
+                        .unwrap_or(false)
+                })
+                && {
+                    // No stale extra segment files from a longer previous
+                    // plan.
+                    std::fs::metadata(Self::seg_path(dir, segs.len())).is_err()
+                }
+        });
         if reusable {
+            let (_, _, per_seg) = marker.expect("reusable implies a parsed marker");
             let metas = segs
                 .iter()
+                .zip(per_seg)
                 .enumerate()
-                .map(|(i, seg)| SegmentMeta {
+                .map(|(i, (seg, (kind, file_bytes)))| SegmentMeta {
                     row_lo: seg.row_lo,
                     row_hi: seg.row_hi,
                     nnz: seg.nnz,
                     plan_bytes: seg.bytes,
-                    file_bytes: segio::encoded_len(seg.row_hi - seg.row_lo, seg.nnz),
+                    file_bytes,
+                    kind,
                     path: Self::seg_path(dir, i),
                 })
                 .collect();
             return Ok(Self::with_metas(dir.to_path_buf(), metas, host_cache_bytes));
         }
         Self::clear_store_files(dir)?;
-        Self::spill(a, segs, dir, host_cache_bytes)
+        Self::spill_encoded(a, segs, dir, host_cache_bytes, enc)
     }
 
     /// Remove a previous spill's files (`fingerprint` + `seg-*.bin`) from
@@ -584,6 +843,99 @@ impl SegmentStore {
         Ok((result, ReadOrigin { disk_bytes: bytes, cache_hit: false }))
     }
 
+    /// Zero-copy read of segment `i`: mmap the record, validate it in
+    /// place ([`segio::decode_segment_ref`] — checksums + the full CSR
+    /// invariant walk, same discipline as the copying decoder), and serve
+    /// its colidx/vals sections straight from the page cache
+    /// ([`SegmentRead::Mapped`]). Only the O(nrows) rowptr is
+    /// materialized, into the recycled scratch when one is supplied.
+    ///
+    /// The host-RAM tier is bypassed — for mapped reads the page cache
+    /// *is* the host tier — so the origin always reports a miss with the
+    /// encoded file size as its disk bytes (the kernel may well have
+    /// served the pages from memory; the store cannot observe that, and
+    /// charging the encoded size keeps the staging ledgers deterministic).
+    ///
+    /// Packed segments (and targets where in-place section borrowing is
+    /// unavailable) fall back to [`Self::read_reusing`] — byte-identical
+    /// served matrices, just copy-decoded.
+    pub fn read_mapped(
+        &self,
+        i: usize,
+        reuse: Option<Csr>,
+        pool: Option<&BufferPool>,
+    ) -> Result<(SegmentRead, ReadOrigin), SegioError> {
+        let meta = &self.segs[i];
+        if meta.kind != segio::KIND_CSR {
+            // Packed colidx cannot be borrowed in place.
+            return self.read_reusing(i, reuse, pool);
+        }
+        let map = Mmap::map(&meta.path)
+            .map_err(|e| SegioError::Io(format!("map {}: {e}", meta.path.display())))?;
+        let sref = match segio::decode_segment_ref(map.as_slice()) {
+            Ok(r) => r,
+            Err(e) => {
+                // The recycled scratch survives a failed read (same
+                // discipline as read_reusing), so a healed retry does not
+                // re-warm the pool.
+                if let (Some(m), Some(pool)) = (reuse, pool) {
+                    pool.put_csr(m);
+                }
+                return Err(e);
+            }
+        };
+        if sref.nrows != meta.row_hi - meta.row_lo || sref.nnz() != meta.nnz {
+            let err = SegioError::InvalidCsr(format!(
+                "segment {i} decoded to {} rows / {} nnz, manifest says {} rows / {} nnz",
+                sref.nrows,
+                sref.nnz(),
+                meta.row_hi - meta.row_lo,
+                meta.nnz
+            ));
+            if let (Some(m), Some(pool)) = (reuse, pool) {
+                pool.put_csr(m);
+            }
+            return Err(err);
+        }
+        if sref.colidx_u32().is_none() || sref.vals_f32().is_none() {
+            // Big-endian target (mmap'd records are always aligned):
+            // zero-copy is off the table, copy-decode instead.
+            return self.read_reusing(i, reuse, pool);
+        }
+        let (mut rowptr, spare_colidx, spare_vals) = match (reuse, pool) {
+            (Some(m), _) => (m.rowptr, m.colidx, m.vals),
+            (None, Some(pool)) => {
+                let m = pool.take_csr(self.max_seg_rows, self.max_seg_nnz);
+                (m.rowptr, m.colidx, m.vals)
+            }
+            (None, None) => (Vec::new(), Vec::new(), Vec::new()),
+        };
+        sref.fill_rowptr(&mut rowptr);
+        let (nrows, ncols, nnz) = (sref.nrows, sref.ncols, sref.nnz());
+        let colidx_off = segio::HEADER_BYTES + (nrows + 1) * 8;
+        let vals_off = colidx_off + nnz * 4;
+        let mapped = MappedSegment {
+            map,
+            nrows,
+            ncols,
+            nnz,
+            rowptr,
+            colidx_off,
+            vals_off,
+            spare_colidx,
+            spare_vals,
+        };
+        {
+            let mut cache = lock(&self.cache);
+            cache.stats.misses += 1;
+            cache.stats.disk_bytes += meta.file_bytes;
+        }
+        Ok((
+            SegmentRead::Mapped(mapped),
+            ReadOrigin { disk_bytes: meta.file_bytes, cache_hit: false },
+        ))
+    }
+
     /// Quarantine segment `i`'s on-disk file and rebuild it from the
     /// source matrix + plan entry — the recovery path
     /// [`runtime::heal`](crate::runtime::heal) takes when a read surfaces
@@ -627,7 +979,18 @@ impl SegmentStore {
         lock(&self.cache).remove(i);
         let sub = materialize(a, seg);
         let tmp = meta.path.with_extension("bin.tmp");
-        let file_bytes = segio::write_segment(&tmp, &sub)?;
+        // Rebuild in the segment's *original* encoding: the manifest's
+        // recorded kind, not a store-wide default — a packed store must
+        // heal back to packed bytes (and the exact-size check below holds
+        // because both encoders are deterministic).
+        let enc = SegEncoding::for_kind(meta.kind).ok_or_else(|| {
+            SegioError::Io(format!(
+                "rebuild segment {i}: manifest kind {} is not a CSR encoding",
+                meta.kind
+            ))
+        })?;
+        let (file_bytes, kind) = segio::write_segment_encoded(&tmp, &sub, enc)?;
+        debug_assert_eq!(kind, meta.kind, "for_kind round-trips the manifest kind");
         if file_bytes != meta.file_bytes {
             let _ = std::fs::remove_file(&tmp);
             return Err(SegioError::Io(format!(
@@ -652,38 +1015,97 @@ pub struct PanelMeta {
     pub nrows: usize,
     /// Panel column count (the layer's feature width).
     pub ncols: usize,
-    /// Encoded file size on disk (header + payload).
+    /// Encoded size on disk (header + payload; summed over chunks when
+    /// the panel was spilled chunked).
     pub file_bytes: u64,
-    /// Panel file path.
+    /// Panel file path (the single-record path; unused when `chunks` is
+    /// non-empty).
+    pub path: PathBuf,
+    /// Row-panel chunk records ([`PanelStore::put_chunked`]). Empty for a
+    /// whole-panel spill ([`PanelStore::put`]).
+    pub chunks: Vec<PanelChunk>,
+}
+
+/// One row-range chunk of a chunked panel spill: rows `[row_lo, row_hi)`
+/// of the panel, stored as an independent [`segio::KIND_PANEL`] record.
+/// Chunk boundaries follow the *next* layer's RoBW plan, so a staged
+/// segment's aggregation touches the fewest chunk records possible.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PanelChunk {
+    /// First panel row in this chunk (inclusive).
+    pub row_lo: usize,
+    /// One past the last panel row (exclusive).
+    pub row_hi: usize,
+    /// Encoded chunk record size on disk.
+    pub file_bytes: u64,
+    /// Chunk file path.
     pub path: PathBuf,
 }
 
 /// A served feature panel: owned (its data vector can retire to the
-/// staging [`BufferPool`]) or shared with the host tier — the panel-side
-/// analog of [`SegmentRead`].
-#[derive(Debug, Clone)]
+/// staging [`BufferPool`]), shared with the host tier, or mmap-backed
+/// chunk records served from the page cache — the panel-side analog of
+/// [`SegmentRead`].
+///
+/// Compute paths should consume panels through [`PanelRead::src`] (a
+/// [`RowSrc`] every variant serves without a copy); [`PanelRead::dense`]
+/// and `Deref<Target = Dense>` panic on `Mapped`.
+#[derive(Debug)]
 pub enum PanelRead {
     /// Owned decoded panel.
     Owned(Dense),
     /// Cache-resident panel, shared without a defensive clone.
     Shared(Arc<Dense>),
+    /// mmap-backed chunk records; rows stay in the page cache.
+    Mapped(MappedPanelChunks),
 }
 
 impl PanelRead {
     /// The decoded panel, however it is held.
+    ///
+    /// # Panics
+    ///
+    /// On [`PanelRead::Mapped`] — use [`PanelRead::src`], which all
+    /// variants serve without materializing.
     pub fn dense(&self) -> &Dense {
         match self {
             PanelRead::Owned(p) => p,
             PanelRead::Shared(p) => p,
+            PanelRead::Mapped(_) => {
+                panic!("mapped panel read holds no materialized Dense; use PanelRead::src()")
+            }
+        }
+    }
+
+    /// Borrowed row source over the panel — the accessor every variant
+    /// (owned, cache-shared, mmap-backed) serves without a copy.
+    pub fn src(&self) -> PanelSrc<'_> {
+        match self {
+            PanelRead::Owned(p) => PanelSrc::Dense(p),
+            PanelRead::Shared(p) => PanelSrc::Dense(p),
+            PanelRead::Mapped(m) => PanelSrc::Mapped(m),
         }
     }
 
     /// Clone out an owned panel (test/tool convenience; copies on the
-    /// shared variant).
+    /// shared and mapped variants).
     pub fn into_dense(self) -> Dense {
         match self {
             PanelRead::Owned(p) => p,
             PanelRead::Shared(p) => (*p).clone(),
+            PanelRead::Mapped(m) => m.to_dense(),
+        }
+    }
+}
+
+impl Clone for PanelRead {
+    /// Cloning a mapped read materializes it (`Owned`) — a `Clone` must
+    /// not duplicate mmap regions.
+    fn clone(&self) -> PanelRead {
+        match self {
+            PanelRead::Owned(p) => PanelRead::Owned(p.clone()),
+            PanelRead::Shared(p) => PanelRead::Shared(Arc::clone(p)),
+            PanelRead::Mapped(m) => PanelRead::Owned(m.to_dense()),
         }
     }
 }
@@ -693,6 +1115,93 @@ impl std::ops::Deref for PanelRead {
 
     fn deref(&self) -> &Dense {
         self.dense()
+    }
+}
+
+/// A zero-copy mapped panel: one mmap'd [`segio::KIND_PANEL`] record per
+/// row chunk (a whole-panel spill maps as a single chunk spanning every
+/// row), validated at map time, rows borrowed from the page cache on
+/// demand. Implements [`RowSrc`], so the SpMM kernels aggregate straight
+/// out of the mapping.
+#[derive(Debug)]
+pub struct MappedPanelChunks {
+    nrows: usize,
+    ncols: usize,
+    /// Chunks sorted by `row_lo`, contiguous over `0..nrows`.
+    chunks: Vec<MappedPanelChunk>,
+}
+
+#[derive(Debug)]
+struct MappedPanelChunk {
+    map: Mmap,
+    row_lo: usize,
+    row_hi: usize,
+}
+
+impl MappedPanelChunks {
+    /// Materialize an owned copy (test/tool convenience).
+    pub fn to_dense(&self) -> Dense {
+        let mut d = Dense::zeros(self.nrows, self.ncols);
+        for r in 0..self.nrows {
+            d.data[r * self.ncols..(r + 1) * self.ncols].copy_from_slice(self.row(r));
+        }
+        d
+    }
+}
+
+impl RowSrc for MappedPanelChunks {
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    fn row(&self, r: usize) -> &[f32] {
+        let k = self.chunks.partition_point(|c| c.row_hi <= r);
+        let c = &self.chunks[k];
+        debug_assert!(r >= c.row_lo && r < c.row_hi, "chunks cover 0..nrows contiguously");
+        let start = segio::HEADER_BYTES + (r - c.row_lo) * self.ncols * 4;
+        let bytes = &c.map.as_slice()[start..start + self.ncols * 4];
+        segio::borrow_le_slice::<f32>(bytes, self.ncols)
+            .expect("alignment and byte order were proven when the panel was mapped")
+    }
+}
+
+/// What a staged-pass consume callback receives as its feature panel: a
+/// materialized dense panel or mapped chunk records. Implements
+/// [`RowSrc`] by delegation, so one generic SpMM kernel consumes either —
+/// and a call site that wants monomorphized inner loops can match once
+/// and pass the borrowed `&Dense` / `&MappedPanelChunks` through instead.
+#[derive(Debug, Clone, Copy)]
+pub enum PanelSrc<'a> {
+    /// A materialized panel (owned or cache-resident).
+    Dense(&'a Dense),
+    /// Mapped chunk records served from the page cache.
+    Mapped(&'a MappedPanelChunks),
+}
+
+impl RowSrc for PanelSrc<'_> {
+    fn nrows(&self) -> usize {
+        match self {
+            PanelSrc::Dense(p) => p.nrows,
+            PanelSrc::Mapped(m) => m.nrows,
+        }
+    }
+
+    fn ncols(&self) -> usize {
+        match self {
+            PanelSrc::Dense(p) => p.ncols,
+            PanelSrc::Mapped(m) => m.ncols,
+        }
+    }
+
+    fn row(&self, r: usize) -> &[f32] {
+        match self {
+            PanelSrc::Dense(p) => p.row(r),
+            PanelSrc::Mapped(m) => m.row(r),
+        }
     }
 }
 
@@ -733,6 +1242,10 @@ fn panel_cost(p: &Dense) -> u64 {
 impl PanelStore {
     fn panel_path(dir: &Path, idx: usize) -> PathBuf {
         dir.join(format!("panel-{idx:05}.bin"))
+    }
+
+    fn chunk_path(dir: &Path, idx: usize, chunk: usize) -> PathBuf {
+        dir.join(format!("panel-{idx:05}.c{chunk:03}.bin"))
     }
 
     /// Open (creating if missing) a panel directory, serving reads through
@@ -804,9 +1317,76 @@ impl PanelStore {
         let mut st = lock(&self.state);
         st.metas.insert(
             idx,
-            PanelMeta { nrows: p.nrows, ncols: p.ncols, file_bytes, path },
+            PanelMeta { nrows: p.nrows, ncols: p.ncols, file_bytes, path, chunks: Vec::new() },
         );
         Ok(file_bytes)
+    }
+
+    /// Spill panel `idx` as row-panel *chunk* records: one
+    /// [`segio::KIND_PANEL`] record per `row_starts` interval
+    /// (`row_starts[k] .. row_starts[k+1]`, the last running to
+    /// `p.nrows`). The callers pass the *next* layer's RoBW plan
+    /// boundaries, so a staged segment's aggregation window maps the
+    /// fewest chunk records possible ([`Self::read_mapped`]) instead of
+    /// one monolithic panel file.
+    ///
+    /// `row_starts` must begin at 0 and be strictly increasing within
+    /// `0..nrows`. Each chunk write is atomic (temp file + rename), same
+    /// crash discipline as [`Self::put`]; stale files from a previous
+    /// spill of the slot with a different chunking are orphaned, not
+    /// served — reads go through the in-memory manifest only. Returns the
+    /// total encoded bytes across chunks.
+    pub fn put_chunked(
+        &self,
+        idx: usize,
+        p: &Dense,
+        row_starts: &[usize],
+    ) -> Result<u64, SegioError> {
+        let valid = row_starts.first() == Some(&0)
+            && row_starts.windows(2).all(|w| w[0] < w[1])
+            && *row_starts.last().unwrap_or(&0) < p.nrows.max(1);
+        if !valid {
+            return Err(SegioError::InvalidPanel(format!(
+                "panel {idx}: chunk row starts {row_starts:?} must begin at 0 and be \
+                 strictly increasing below nrows={}",
+                p.nrows
+            )));
+        }
+        {
+            let mut st = lock(&self.state);
+            st.cache.remove(idx);
+            st.metas.remove(&idx);
+        }
+        let mut chunks = Vec::with_capacity(row_starts.len());
+        let mut total = 0u64;
+        for (k, &lo) in row_starts.iter().enumerate() {
+            let hi = row_starts.get(k + 1).copied().unwrap_or(p.nrows);
+            let sub = Dense::from_vec(
+                hi - lo,
+                p.ncols,
+                p.data[lo * p.ncols..hi * p.ncols].to_vec(),
+            );
+            let path = Self::chunk_path(&self.dir, idx, k);
+            let tmp = path.with_extension("bin.tmp");
+            let file_bytes = segio::write_panel(&tmp, &sub)?;
+            std::fs::rename(&tmp, &path).map_err(|e| {
+                SegioError::Io(format!("publish panel chunk {}: {e}", path.display()))
+            })?;
+            total += file_bytes;
+            chunks.push(PanelChunk { row_lo: lo, row_hi: hi, file_bytes, path });
+        }
+        let mut st = lock(&self.state);
+        st.metas.insert(
+            idx,
+            PanelMeta {
+                nrows: p.nrows,
+                ncols: p.ncols,
+                file_bytes: total,
+                path: Self::panel_path(&self.dir, idx),
+                chunks,
+            },
+        );
+        Ok(total)
     }
 
     /// Read panel `idx`: from the host tier when resident, else from disk
@@ -842,6 +1422,40 @@ impl PanelStore {
         // pooled scratch the caller's pipeline keeps circulating.
         let decoded = (meta.nrows * meta.ncols * 4) as u64;
         let likely_cached = self.cache_capacity > 0 && decoded <= self.cache_capacity;
+        let (mut p, bytes) = if meta.chunks.is_empty() {
+            Self::read_single(&meta, idx, likely_cached, pool)?
+        } else {
+            Self::read_chunks(&meta, idx, likely_cached, pool)?
+        };
+        let mut st = lock(&self.state);
+        st.cache.stats.misses += 1;
+        st.cache.stats.disk_bytes += bytes;
+        let cost = panel_cost(&p);
+        let cacheable = st.cache.capacity > 0 && cost <= st.cache.capacity;
+        let result = if st.cache.entries.contains_key(&idx) || !cacheable {
+            PanelRead::Owned(p)
+        } else {
+            // Donated to the cache: shrink so a resident panel pins only
+            // its logical bytes (same discipline as the segment tier).
+            p.data.shrink_to_fit();
+            let shared = Arc::new(p);
+            let inserted = st.cache.insert(idx, Arc::clone(&shared), cost);
+            debug_assert!(inserted, "cacheability was checked above");
+            PanelRead::Shared(shared)
+        };
+        let used = st.cache.used;
+        st.cache.stats.resident_bytes = used;
+        Ok((result, ReadOrigin { disk_bytes: bytes, cache_hit: false }))
+    }
+
+    /// Cache-miss path for a whole-panel record: decode `meta.path` into
+    /// scratch (pooled when the panel will not be donated to the cache).
+    fn read_single(
+        meta: &PanelMeta,
+        idx: usize,
+        likely_cached: bool,
+        pool: Option<&BufferPool>,
+    ) -> Result<(Dense, u64), SegioError> {
         let mut p = match (likely_cached, pool) {
             // Empty scratch, not a zero-filled panel: the decode pushes
             // every element itself, so a take_panel memset would be pure
@@ -880,26 +1494,147 @@ impl PanelStore {
             }
             return Err(err);
         }
-        let mut st = lock(&self.state);
-        st.cache.stats.misses += 1;
-        st.cache.stats.disk_bytes += bytes;
-        let cost = panel_cost(&p);
-        let cacheable = st.cache.capacity > 0 && cost <= st.cache.capacity;
-        let result = if st.cache.entries.contains_key(&idx) || !cacheable {
-            PanelRead::Owned(p)
-        } else {
-            // Donated to the cache: shrink so a resident panel pins only
-            // its logical bytes (same discipline as the segment tier).
-            p.data.shrink_to_fit();
-            let shared = Arc::new(p);
-            let inserted = st.cache.insert(idx, Arc::clone(&shared), cost);
-            debug_assert!(inserted, "cacheability was checked above");
-            PanelRead::Shared(shared)
-        };
-        let used = st.cache.used;
-        st.cache.stats.resident_bytes = used;
-        Ok((result, ReadOrigin { disk_bytes: bytes, cache_hit: false }))
+        Ok((p, bytes))
     }
+
+    /// Cache-miss path for a chunked panel: validate each chunk record
+    /// and copy its rows straight into their slot of the assembled panel
+    /// ([`segio::PanelRef::fill_into`] — no intermediate `Dense` per
+    /// chunk).
+    fn read_chunks(
+        meta: &PanelMeta,
+        idx: usize,
+        likely_cached: bool,
+        pool: Option<&BufferPool>,
+    ) -> Result<(Dense, u64), SegioError> {
+        let mut data = match (likely_cached, pool) {
+            (false, Some(pool)) => pool.take_panel_scratch(meta.nrows * meta.ncols),
+            _ => Vec::new(),
+        };
+        data.clear();
+        data.resize(meta.nrows * meta.ncols, 0.0);
+        let max_chunk = meta.chunks.iter().map(|c| c.file_bytes).max().unwrap_or(0);
+        let mut scratch = match pool {
+            Some(pool) => pool.take_bytes(max_chunk as usize),
+            None => Vec::new(),
+        };
+        let mut bytes = 0u64;
+        let mut failure: Option<SegioError> = None;
+        for c in &meta.chunks {
+            match read_file_into(&c.path, &mut scratch) {
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+                Ok(n) => match segio::decode_panel_ref(&scratch) {
+                    Err(e) => {
+                        failure = Some(e);
+                        break;
+                    }
+                    Ok(r) => {
+                        if r.nrows != c.row_hi - c.row_lo || r.ncols != meta.ncols {
+                            failure = Some(SegioError::InvalidPanel(format!(
+                                "panel {idx} chunk rows [{}, {}) decoded to {}×{}, \
+                                 manifest says {}×{}",
+                                c.row_lo,
+                                c.row_hi,
+                                r.nrows,
+                                r.ncols,
+                                c.row_hi - c.row_lo,
+                                meta.ncols
+                            )));
+                            break;
+                        }
+                        r.fill_into(
+                            &mut data[c.row_lo * meta.ncols..c.row_hi * meta.ncols],
+                        );
+                        bytes += n;
+                    }
+                },
+            }
+        }
+        if let Some(pool) = pool {
+            pool.put_bytes(scratch);
+        }
+        if let Some(e) = failure {
+            if let Some(pool) = pool {
+                pool.put_panel(data);
+            }
+            return Err(e);
+        }
+        Ok((Dense { nrows: meta.nrows, ncols: meta.ncols, data }, bytes))
+    }
+
+    /// Zero-copy read of panel `idx`: mmap every chunk record (a
+    /// whole-panel spill maps as one chunk), validate each in place, and
+    /// serve rows straight from the page cache
+    /// ([`PanelRead::Mapped`]). Bypasses the host-RAM tier like
+    /// [`SegmentStore::read_mapped`], charging the summed encoded chunk
+    /// sizes as disk bytes. Targets where in-place borrowing is
+    /// unavailable fall back to [`Self::read_reusing`].
+    pub fn read_mapped(
+        &self,
+        idx: usize,
+        pool: Option<&BufferPool>,
+    ) -> Result<(PanelRead, ReadOrigin), SegioError> {
+        let meta = lock(&self.state)
+            .metas
+            .get(&idx)
+            .cloned()
+            .ok_or_else(|| SegioError::Io(format!("panel {idx} was never spilled")))?;
+        let spans: Vec<(usize, usize, &Path)> = if meta.chunks.is_empty() {
+            vec![(0, meta.nrows, meta.path.as_path())]
+        } else {
+            meta.chunks.iter().map(|c| (c.row_lo, c.row_hi, c.path.as_path())).collect()
+        };
+        let mut chunks = Vec::with_capacity(spans.len());
+        let mut bytes = 0u64;
+        for (lo, hi, path) in spans {
+            let map = Mmap::map(path)
+                .map_err(|e| SegioError::Io(format!("map {}: {e}", path.display())))?;
+            let r = segio::decode_panel_ref(map.as_slice())?;
+            if r.nrows != hi - lo || r.ncols != meta.ncols {
+                return Err(SegioError::InvalidPanel(format!(
+                    "panel {idx} rows [{lo}, {hi}) decoded to {}×{}, manifest says {}×{}",
+                    r.nrows,
+                    r.ncols,
+                    hi - lo,
+                    meta.ncols
+                )));
+            }
+            if r.data_f32().is_none() {
+                // Big-endian target: zero-copy is off the table.
+                return self.read_reusing(idx, pool);
+            }
+            bytes += map.len() as u64;
+            chunks.push(MappedPanelChunk { map, row_lo: lo, row_hi: hi });
+        }
+        {
+            let mut st = lock(&self.state);
+            st.cache.stats.misses += 1;
+            st.cache.stats.disk_bytes += bytes;
+        }
+        Ok((
+            PanelRead::Mapped(MappedPanelChunks {
+                nrows: meta.nrows,
+                ncols: meta.ncols,
+                chunks,
+            }),
+            ReadOrigin { disk_bytes: bytes, cache_hit: false },
+        ))
+    }
+}
+
+/// Read a whole file into caller-recycled scratch (cleared and refilled),
+/// returning its byte length — the chunk assembler's raw ingest.
+fn read_file_into(path: &Path, buf: &mut Vec<u8>) -> Result<u64, SegioError> {
+    use std::io::Read;
+    buf.clear();
+    let mut f = std::fs::File::open(path)
+        .map_err(|e| SegioError::Io(format!("open {}: {e}", path.display())))?;
+    f.read_to_end(buf)
+        .map_err(|e| SegioError::Io(format!("read {}: {e}", path.display())))?;
+    Ok(buf.len() as u64)
 }
 
 #[cfg(test)]
@@ -1255,5 +1990,247 @@ mod tests {
         store.check_plan(&segs).unwrap();
         let other = robw_partition(&a, 300);
         assert!(store.check_plan(&other).is_err());
+    }
+
+    #[test]
+    fn encoded_spills_roundtrip_and_key_fixtures_by_encoding() {
+        let mut rng = Pcg::seed(211);
+        let a = random_csr(&mut rng, 150, 40, 0.12);
+        let segs = robw_partition(&a, 700);
+        for enc in [SegEncoding::Raw, SegEncoding::Packed, SegEncoding::Auto] {
+            let dir = TempDir::new("segstore-enc");
+            let store =
+                SegmentStore::spill_encoded(&a, &segs, dir.path(), 0, enc).unwrap();
+            for i in 0..store.len() {
+                let m = store.meta(i);
+                assert_eq!(
+                    std::fs::metadata(&m.path).unwrap().len(),
+                    m.file_bytes,
+                    "manifest size must be the on-disk size under {enc}"
+                );
+                match enc {
+                    SegEncoding::Raw => assert_eq!(m.kind, segio::KIND_CSR),
+                    SegEncoding::Packed => assert_eq!(m.kind, segio::KIND_CSR_PACKED),
+                    SegEncoding::Auto => assert!(
+                        m.kind == segio::KIND_CSR || m.kind == segio::KIND_CSR_PACKED
+                    ),
+                }
+            }
+            let parts: Vec<Csr> =
+                (0..store.len()).map(|i| store.read(i).unwrap().0.into_csr()).collect();
+            assert_eq!(Csr::vstack(&parts).unwrap(), a, "encoding {enc} must serve a");
+            // Reuse requires the same encoding mode...
+            let mtime =
+                std::fs::metadata(&store.meta(0).path).unwrap().modified().unwrap();
+            let again =
+                SegmentStore::open_or_spill_encoded(&a, &segs, dir.path(), 0, enc).unwrap();
+            assert_eq!(
+                std::fs::metadata(&again.meta(0).path).unwrap().modified().unwrap(),
+                mtime,
+                "same-mode fixture must be reused under {enc}"
+            );
+            // ...and a different mode respills rather than mis-reading.
+            let other = match enc {
+                SegEncoding::Raw => SegEncoding::Packed,
+                _ => SegEncoding::Raw,
+            };
+            let cross =
+                SegmentStore::open_or_spill_encoded(&a, &segs, dir.path(), 0, other).unwrap();
+            let parts: Vec<Csr> =
+                (0..cross.len()).map(|i| cross.read(i).unwrap().0.into_csr()).collect();
+            assert_eq!(Csr::vstack(&parts).unwrap(), a, "cross-mode open must respill");
+        }
+        // Packed spills of real planned segments must actually shrink disk.
+        let dir_raw = TempDir::new("segstore-enc-raw");
+        let dir_packed = TempDir::new("segstore-enc-packed");
+        let raw =
+            SegmentStore::spill_encoded(&a, &segs, dir_raw.path(), 0, SegEncoding::Raw).unwrap();
+        let packed =
+            SegmentStore::spill_encoded(&a, &segs, dir_packed.path(), 0, SegEncoding::Packed)
+                .unwrap();
+        let total = |s: &SegmentStore| (0..s.len()).map(|i| s.meta(i).file_bytes).sum::<u64>();
+        assert!(
+            total(&packed) < total(&raw),
+            "packed {} must beat raw {}",
+            total(&packed),
+            total(&raw)
+        );
+    }
+
+    #[test]
+    fn v1_marker_triggers_a_clean_respill() {
+        let mut rng = Pcg::seed(212);
+        let a = random_csr(&mut rng, 80, 20, 0.2);
+        let segs = robw_partition(&a, 600);
+        let dir = TempDir::new("segstore-v1marker");
+        let store = SegmentStore::spill(&a, &segs, dir.path(), 0).unwrap();
+        // Overwrite the v2 marker with a v1-style bare fingerprint: the
+        // next open must fail the parse and respill, not trust the files.
+        std::fs::write(dir.path().join("fingerprint"), fingerprint(&a, &segs).to_le_bytes())
+            .unwrap();
+        let mtime = std::fs::metadata(&store.meta(0).path).unwrap().modified().unwrap();
+        // File mtime granularity can be coarse; force a distinguishable
+        // rewrite by corrupting a segment so identity also proves respill.
+        let victim = store.meta(0).path.clone();
+        let mut bytes = std::fs::read(&victim).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xff;
+        std::fs::write(&victim, &bytes).unwrap();
+        let reopened = SegmentStore::open_or_spill(&a, &segs, dir.path(), 0).unwrap();
+        let parts: Vec<Csr> =
+            (0..reopened.len()).map(|i| reopened.read(i).unwrap().0.into_csr()).collect();
+        assert_eq!(Csr::vstack(&parts).unwrap(), a, "v1 marker must not be trusted");
+        let _ = mtime;
+    }
+
+    #[test]
+    fn mapped_reads_serve_identical_bytes_and_recycle_scratch() {
+        let mut rng = Pcg::seed(213);
+        let a = random_csr(&mut rng, 150, 40, 0.12);
+        let segs = robw_partition(&a, 700);
+        assert!(segs.len() > 2);
+        for enc in [SegEncoding::Raw, SegEncoding::Packed, SegEncoding::Auto] {
+            let dir = TempDir::new("segstore-mmap");
+            let store =
+                SegmentStore::spill_encoded(&a, &segs, dir.path(), 0, enc).unwrap();
+            let pool = BufferPool::new(1 << 20);
+            let mut recycled: Option<Csr> = None;
+            let mut parts = Vec::new();
+            for i in 0..store.len() {
+                let (r, o) = store.read_mapped(i, recycled.take(), Some(&pool)).unwrap();
+                assert!(!o.cache_hit);
+                assert_eq!(o.disk_bytes, store.meta(i).file_bytes);
+                // The view is the kernel-facing contract; materialize it
+                // for the vstack identity check.
+                let v = r.view();
+                assert_eq!(v.nnz(), store.meta(i).nnz);
+                if store.meta(i).kind == segio::KIND_CSR {
+                    assert!(
+                        matches!(r, SegmentRead::Mapped(_)),
+                        "raw segments must be served zero-copy"
+                    );
+                }
+                parts.push(r.clone().into_csr());
+                recycled = r.reclaim();
+            }
+            assert_eq!(Csr::vstack(&parts).unwrap(), a, "mapped read identity under {enc}");
+        }
+    }
+
+    #[test]
+    fn mapped_read_surfaces_corruption_as_typed_errors() {
+        let mut rng = Pcg::seed(214);
+        let a = random_csr(&mut rng, 90, 25, 0.15);
+        let segs = robw_partition(&a, 600);
+        let dir = TempDir::new("segstore-mmap-fault");
+        let store = SegmentStore::spill(&a, &segs, dir.path(), 0).unwrap();
+        let path = store.meta(1).path.clone();
+        let good = std::fs::read(&path).unwrap();
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0xff;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(matches!(
+            store.read_mapped(1, None, None),
+            Err(SegioError::PayloadChecksum { .. })
+        ));
+        std::fs::write(&path, &good[..good.len() / 2]).unwrap();
+        assert!(matches!(
+            store.read_mapped(1, None, None),
+            Err(SegioError::Truncated { .. })
+        ));
+        std::fs::remove_file(&path).unwrap();
+        assert!(matches!(store.read_mapped(1, None, None), Err(SegioError::Io(_))));
+    }
+
+    #[test]
+    fn quarantine_rebuild_preserves_the_packed_encoding() {
+        let mut rng = Pcg::seed(215);
+        let a = random_csr(&mut rng, 90, 25, 0.15);
+        let segs = robw_partition(&a, 600);
+        let dir = TempDir::new("segstore-heal-packed");
+        let store =
+            SegmentStore::spill_encoded(&a, &segs, dir.path(), 0, SegEncoding::Packed).unwrap();
+        let victim = 1usize;
+        assert_eq!(store.meta(victim).kind, segio::KIND_CSR_PACKED);
+        let path = store.meta(victim).path.clone();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        store.quarantine_and_rebuild(victim, &a, &segs[victim]).unwrap();
+        let healed = std::fs::read(&path).unwrap();
+        assert_eq!(healed.len() as u64, store.meta(victim).file_bytes);
+        assert_eq!(
+            segio::decode_segment(&healed).unwrap(),
+            materialize(&a, &segs[victim]),
+            "healed packed segment must decode to the planned rows"
+        );
+        // The healed record is still packed, not silently re-encoded raw.
+        assert_eq!(
+            u32::from_le_bytes(healed[12..16].try_into().unwrap()),
+            segio::KIND_CSR_PACKED
+        );
+    }
+
+    #[test]
+    fn chunked_panels_assemble_and_serve_mapped_rows() {
+        let mut rng = Pcg::seed(216);
+        let dir = TempDir::new("panelstore-chunks");
+        let store = PanelStore::new(dir.path(), 0).unwrap();
+        let p = Dense::from_vec(10, 3, (0..30).map(|_| rng.normal() as f32).collect());
+        // Invalid chunkings are typed errors, not torn spills.
+        assert!(matches!(
+            store.put_chunked(0, &p, &[1, 4]),
+            Err(SegioError::InvalidPanel(_))
+        ));
+        assert!(matches!(
+            store.put_chunked(0, &p, &[0, 4, 4]),
+            Err(SegioError::InvalidPanel(_))
+        ));
+        let total = store.put_chunked(0, &p, &[0, 4, 9]).unwrap();
+        let meta = store.meta(0).unwrap();
+        assert_eq!(meta.chunks.len(), 3);
+        assert_eq!(meta.file_bytes, total);
+        assert_eq!(
+            total,
+            segio::encoded_panel_len(4, 3)
+                + segio::encoded_panel_len(5, 3)
+                + segio::encoded_panel_len(1, 3)
+        );
+        // Assembled copy-decode read equals the original panel.
+        let (r, o) = store.read(0).unwrap();
+        assert_eq!(r.dense(), &p);
+        assert!(!o.cache_hit);
+        assert_eq!(o.disk_bytes, total);
+        // Mapped read serves identical rows without materializing.
+        let (m, om) = store.read_mapped(0, None).unwrap();
+        assert_eq!(om.disk_bytes, total);
+        match m.src() {
+            PanelSrc::Mapped(chunks) => {
+                for r in 0..p.nrows {
+                    assert_eq!(chunks.row(r), p.row(r), "mapped row {r}");
+                }
+            }
+            PanelSrc::Dense(_) => panic!("chunked mapped read must borrow the mapping"),
+        }
+        assert_eq!(m.into_dense(), p);
+        // A rewrite with a different chunking replaces the manifest; the
+        // orphaned third chunk file is never served.
+        let q = Dense::from_vec(10, 3, (0..30).map(|i| i as f32).collect());
+        store.put_chunked(0, &q, &[0, 5]).unwrap();
+        assert_eq!(store.read(0).unwrap().0.into_dense(), q);
+        // Whole-panel spills also serve through the mapped path.
+        store.put(1, &p).unwrap();
+        let (m1, _) = store.read_mapped(1, None).unwrap();
+        match m1.src() {
+            PanelSrc::Mapped(chunks) => {
+                assert_eq!(RowSrc::nrows(chunks), p.nrows);
+                for r in 0..p.nrows {
+                    assert_eq!(chunks.row(r), p.row(r));
+                }
+            }
+            PanelSrc::Dense(_) => panic!("whole-panel mapped read must borrow the mapping"),
+        }
     }
 }

@@ -42,10 +42,50 @@ pub struct Csr {
     pub vals: Vec<f32>,
 }
 
+/// Borrowed view of a CSR segment's three sections — the operand type the
+/// SpMM kernels actually consume. An owned [`Csr`] yields one via
+/// [`Csr::view`]; the zero-copy mapped segment path yields one whose
+/// colidx/vals borrow the page cache directly, so the kernels are written
+/// once against `SegView` and serve both without copies or dispatch.
+#[derive(Debug, Clone, Copy)]
+pub struct SegView<'a> {
+    /// Row count.
+    pub nrows: usize,
+    /// Column count.
+    pub ncols: usize,
+    /// len nrows + 1, monotonically non-decreasing, last entry == nnz.
+    pub rowptr: &'a [usize],
+    /// len nnz; column index per non-zero, sorted within each row.
+    pub colidx: &'a [u32],
+    /// len nnz; value per non-zero.
+    pub vals: &'a [f32],
+}
+
+impl SegView<'_> {
+    /// Stored non-zero count.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.colidx.len()
+    }
+}
+
 impl Csr {
     /// Empty matrix with the given shape.
     pub fn empty(nrows: usize, ncols: usize) -> Self {
         Csr { nrows, ncols, rowptr: vec![0; nrows + 1], colidx: Vec::new(), vals: Vec::new() }
+    }
+
+    /// Borrow this matrix's sections as a [`SegView`] (the kernels' common
+    /// operand type).
+    #[inline]
+    pub fn view(&self) -> SegView<'_> {
+        SegView {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            rowptr: &self.rowptr,
+            colidx: &self.colidx,
+            vals: &self.vals,
+        }
     }
 
     /// Build from parts, validating the CSR invariants.

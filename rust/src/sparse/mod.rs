@@ -22,7 +22,7 @@ pub mod spmm;
 pub use block::{Bsr, BsrRowBlock};
 pub use coo::Coo;
 pub use csc::Csc;
-pub use csr::Csr;
+pub use csr::{Csr, SegView};
 
 /// Bytes per non-zero value (f32 payload).
 pub const VAL_BYTES: u64 = 4;

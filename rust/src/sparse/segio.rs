@@ -11,7 +11,8 @@
 //! 0       8     magic            b"AIRESSEG"
 //! 8       4     format version   u32 (currently 1)
 //! 12      4     record kind      u32 (0 = CSR segment, 1 = dense panel,
-//!                                     2 = checkpoint blob)
+//!                                     2 = checkpoint blob,
+//!                                     3 = packed CSR segment)
 //! 16      8     nrows            u64
 //! 24      8     ncols            u64
 //! 32      8     nnz              u64 (must be 0 for dense panels)
@@ -24,6 +25,11 @@
 //!               dense panel: nrows × ncols row-major f32 bit patterns
 //!               checkpoint blob: opaque caller-defined bytes (all three
 //!                                count fields zero)
+//!               packed CSR segment: rowptr (nrows+1 × u64)
+//!                            ++ [bit width w: u8][7 zero pad bytes]
+//!                            ++ ceil(nnz·w / 64) × u64 packed colidx words
+//!                               (per-row zigzag deltas, LSB-first)
+//!                            ++ vals (nnz × f32 bit patterns)
 //! ```
 //!
 //! The record-kind field occupies what version 1 originally reserved as a
@@ -57,8 +63,16 @@ pub const KIND_PANEL: u32 = 1;
 /// Record kind of an opaque checkpoint blob (caller-defined payload under
 /// the shared header/checksum discipline; all three count fields are 0).
 pub const KIND_CHECK: u32 = 2;
+/// Record kind of a packed CSR segment: same rowptr/vals sections as
+/// [`KIND_CSR`], but the colidx section is per-row zigzag deltas bitpacked
+/// at one per-segment width. Decodes to the identical matrix.
+pub const KIND_CSR_PACKED: u32 = 3;
 /// Fixed header size in bytes; the payload starts here.
 pub const HEADER_BYTES: usize = 64;
+/// Upper bound on the packed colidx bit width: a zigzagged difference of
+/// two `u32` columns spans at most 33 bits, so any larger stored width is
+/// a crafted header, not an encoder output.
+pub const PACKED_WIDTH_MAX: u32 = 33;
 
 /// Typed decode/read failure. Every variant names the defect precisely so
 /// fault-injection tests can assert on *which* check fired.
@@ -130,6 +144,7 @@ impl std::fmt::Display for SegioError {
                     KIND_CSR => "CSR segment",
                     KIND_PANEL => "dense panel",
                     KIND_CHECK => "checkpoint blob",
+                    KIND_CSR_PACKED => "packed CSR segment",
                     _ => "unknown",
                 };
                 write!(
@@ -204,6 +219,73 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
     h.finish()
 }
 
+/// Process-wide count of segment/panel payload *materializations* (copy
+/// decodes of the O(nnz) sections into owned vectors). The zero-copy mmap
+/// path never increments it, which is exactly what the warm-path gate in
+/// `rust/tests/alloc_free.rs` asserts: a steady-state mapped read serves
+/// colidx/vals straight from the page cache.
+static PAYLOAD_COPIES: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// Current value of the payload-copy counter (monotone; compare deltas).
+pub fn payload_copy_count() -> u64 {
+    PAYLOAD_COPIES.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+/// Segment encoding policy, selected per store by `--seg-encoding`.
+///
+/// `Raw` writes [`KIND_CSR`] records (the seed format), `Packed` writes
+/// [`KIND_CSR_PACKED`], and `Auto` picks per segment: packed iff its
+/// predicted file is strictly smaller than the raw file. Every choice
+/// decodes to the identical matrix, so the differential suite sweeps this
+/// axis against the raw serial oracle with `==`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SegEncoding {
+    /// Plain `u32` colidx section ([`KIND_CSR`]) — the seed default.
+    #[default]
+    Raw,
+    /// Delta + bitpacked colidx section ([`KIND_CSR_PACKED`]).
+    Packed,
+    /// Per-segment choice by predicted size (smaller file wins; raw on ties).
+    Auto,
+}
+
+impl SegEncoding {
+    /// The encoding that reproduces an existing record's kind byte-for-byte
+    /// — how the self-healing rebuild keeps a quarantined segment's
+    /// encoding stable (raw stays raw, packed stays packed). `None` for
+    /// non-CSR kinds.
+    pub fn for_kind(kind: u32) -> Option<SegEncoding> {
+        match kind {
+            KIND_CSR => Some(SegEncoding::Raw),
+            KIND_CSR_PACKED => Some(SegEncoding::Packed),
+            _ => None,
+        }
+    }
+}
+
+impl std::str::FromStr for SegEncoding {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<SegEncoding, String> {
+        match s {
+            "raw" => Ok(SegEncoding::Raw),
+            "packed" => Ok(SegEncoding::Packed),
+            "auto" => Ok(SegEncoding::Auto),
+            other => Err(format!("unknown segment encoding '{other}' (expected raw, packed, or auto)")),
+        }
+    }
+}
+
+impl std::fmt::Display for SegEncoding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SegEncoding::Raw => "raw",
+            SegEncoding::Packed => "packed",
+            SegEncoding::Auto => "auto",
+        })
+    }
+}
+
 /// Exact encoded size of a segment with `nrows` rows and `nnz` stored
 /// entries — header + rowptr/colidx/val sections. Lets callers (the
 /// bench fixture reuse check, the store's spill accounting) predict file
@@ -256,6 +338,123 @@ pub fn encode_segment(m: &Csr) -> Vec<u8> {
     seal_header(KIND_CSR, m.nrows, m.ncols, nnz, payload)
 }
 
+/// Zigzag a signed delta into an unsigned code (small magnitudes → small
+/// codes, either sign). For `u32` columns the code spans at most 33 bits.
+#[inline]
+fn zigzag(d: i64) -> u64 {
+    ((d << 1) ^ (d >> 63)) as u64
+}
+
+/// One pass over `m`'s colidx computing the packed bit width: the maximum
+/// zigzag-code bit length over all per-row deltas (0 when every delta is
+/// zero, i.e. empty or all-zero-column segments). Never exceeds
+/// [`PACKED_WIDTH_MAX`].
+fn packed_width(m: &Csr) -> u32 {
+    let mut max_code: u64 = 0;
+    for r in 0..m.nrows {
+        let mut prev: i64 = 0;
+        for &c in &m.colidx[m.rowptr[r]..m.rowptr[r + 1]] {
+            let code = zigzag(c as i64 - prev);
+            max_code = max_code.max(code);
+            prev = c as i64;
+        }
+    }
+    64 - max_code.leading_zeros()
+}
+
+/// Exact encoded size of `m` as a [`KIND_CSR_PACKED`] record — the packed
+/// analog of [`encoded_len`], costing one delta pass and no encode. The
+/// `Auto` policy compares this against the raw size to pick per segment.
+pub fn encoded_packed_len(m: &Csr) -> u64 {
+    let nnz = m.nnz() as u64;
+    // nnz counts materialized u32s, so nnz·33 bits cannot overflow u64.
+    let words = (nnz * packed_width(m) as u64).div_ceil(64);
+    HEADER_BYTES as u64 + (m.nrows as u64 + 1) * 8 + 8 + words * 8 + nnz * 4
+}
+
+/// Encode a CSR segment as a [`KIND_CSR_PACKED`] record: rowptr and vals
+/// sections identical to [`encode_segment`], colidx replaced by per-row
+/// zigzag deltas bitpacked LSB-first at one per-segment width. Like every
+/// encoder here it is deterministic (golden-vector pinned), and
+/// `decode(encode_packed(m)) == m` exactly — the colidx values round-trip
+/// losslessly, so the packed store stays byte-identical at the matrix
+/// level to the raw store.
+pub fn encode_segment_packed(m: &Csr) -> Vec<u8> {
+    let nnz = m.nnz();
+    let w = packed_width(m);
+    let words = ((nnz as u64 * w as u64).div_ceil(64)) as usize;
+    let mut payload = Vec::with_capacity((m.nrows + 1) * 8 + 8 + words * 8 + nnz * 4);
+    for &p in &m.rowptr {
+        put_u64(&mut payload, p as u64);
+    }
+    // Width byte + 7 zero pad bytes keep the word stream (and therefore
+    // the trailing vals section) 8-byte aligned relative to the payload.
+    payload.push(w as u8);
+    payload.extend_from_slice(&[0u8; 7]);
+    let mut acc: u64 = 0;
+    let mut acc_bits: u32 = 0;
+    for r in 0..m.nrows {
+        let mut prev: i64 = 0;
+        for &c in &m.colidx[m.rowptr[r]..m.rowptr[r + 1]] {
+            let code = zigzag(c as i64 - prev);
+            prev = c as i64;
+            if w == 0 {
+                continue; // every code is 0: the stream carries no bits
+            }
+            acc |= code << acc_bits;
+            if acc_bits + w >= 64 {
+                put_u64(&mut payload, acc);
+                // acc_bits ≥ 64 − w ≥ 31 here (w ≤ 33), so the shift is
+                // in range; codes that end exactly on the boundary leave 0.
+                acc = code >> (64 - acc_bits);
+                acc_bits = acc_bits + w - 64;
+            } else {
+                acc_bits += w;
+            }
+        }
+    }
+    if acc_bits > 0 {
+        put_u64(&mut payload, acc);
+    }
+    for &v in &m.vals {
+        put_u32(&mut payload, v.to_bits());
+    }
+    debug_assert_eq!(payload.len() as u64, encoded_packed_len(m) - HEADER_BYTES as u64);
+
+    seal_header(KIND_CSR_PACKED, m.nrows, m.ncols, nnz, payload)
+}
+
+/// Encode `m` under an explicit [`SegEncoding`] policy. Returns the bytes
+/// and the record kind actually chosen (`Auto` resolves per segment).
+pub fn encode_segment_with(m: &Csr, enc: SegEncoding) -> (Vec<u8>, u32) {
+    match enc {
+        SegEncoding::Raw => (encode_segment(m), KIND_CSR),
+        SegEncoding::Packed => (encode_segment_packed(m), KIND_CSR_PACKED),
+        SegEncoding::Auto => {
+            if encoded_packed_len(m) < encoded_len(m.nrows, m.nnz()) {
+                (encode_segment_packed(m), KIND_CSR_PACKED)
+            } else {
+                (encode_segment(m), KIND_CSR)
+            }
+        }
+    }
+}
+
+/// [`write_segment`] under an explicit encoding policy. Returns the bytes
+/// written and the record kind chosen (recorded in the store manifest so
+/// rebuilds can reproduce the file byte-for-byte).
+pub fn write_segment_encoded(
+    path: &Path,
+    m: &Csr,
+    enc: SegEncoding,
+) -> Result<(u64, u32), SegioError> {
+    let (buf, kind) = encode_segment_with(m, enc);
+    let mut f = std::fs::File::create(path)
+        .map_err(|e| SegioError::Io(format!("create {}: {e}", path.display())))?;
+    f.write_all(&buf).map_err(|e| SegioError::Io(format!("write {}: {e}", path.display())))?;
+    Ok((buf.len() as u64, kind))
+}
+
 /// Prepend and seal the common 64-byte header over a finished payload.
 /// Shared by both record kinds; `nnz` is 0 for panels.
 fn seal_header(kind: u32, nrows: usize, ncols: usize, nnz: usize, payload: Vec<u8>) -> Vec<u8> {
@@ -279,6 +478,14 @@ fn seal_header(kind: u32, nrows: usize, ncols: usize, nnz: usize, payload: Vec<u
 /// magic, version, record kind, header checksum. Returns nothing — the
 /// caller re-reads the count fields it needs.
 fn check_header(buf: &[u8], expect_kind: u32) -> Result<(), SegioError> {
+    check_header_family(buf, &[expect_kind], expect_kind).map(|_| ())
+}
+
+/// Family variant of [`check_header`]: any kind in `accept` passes and is
+/// returned; any other kind reports [`SegioError::WrongKind`] against
+/// `expected` — the family's canonical kind, so pre-packed error contracts
+/// (a panel fed to the CSR decoder names [`KIND_CSR`]) are unchanged.
+fn check_header_family(buf: &[u8], accept: &[u32], expected: u32) -> Result<u32, SegioError> {
     if buf.len() < HEADER_BYTES {
         return Err(SegioError::Truncated { need: HEADER_BYTES as u64, got: buf.len() as u64 });
     }
@@ -290,8 +497,8 @@ fn check_header(buf: &[u8], expect_kind: u32) -> Result<(), SegioError> {
         return Err(SegioError::WrongVersion { found: version, expected: FORMAT_VERSION });
     }
     let kind = get_u32(buf, 12);
-    if kind != expect_kind {
-        return Err(SegioError::WrongKind { found: kind, expected: expect_kind });
+    if !accept.contains(&kind) {
+        return Err(SegioError::WrongKind { found: kind, expected });
     }
     let stored_header_sum = get_u64(buf, 56);
     let computed_header_sum = fnv1a64(&buf[0..56]);
@@ -301,7 +508,7 @@ fn check_header(buf: &[u8], expect_kind: u32) -> Result<(), SegioError> {
             computed: computed_header_sum,
         });
     }
-    Ok(())
+    Ok(kind)
 }
 
 /// Decode a segment buffer back into a [`Csr`], verifying magic, version,
@@ -337,14 +544,16 @@ pub fn decode_segment_into(buf: &[u8], out: &mut Csr) -> Result<(), SegioError> 
 }
 
 /// Decode body: clears and refills `out`; may leave it partially written
-/// on error (the public wrapper resets it).
+/// on error (the public wrapper resets it). Accepts both CSR record kinds
+/// — raw and packed decode to the identical matrix, so callers never need
+/// to know which encoding a store chose.
 fn decode_into_raw(buf: &[u8], out: &mut Csr) -> Result<(), SegioError> {
     out.nrows = 0;
     out.ncols = 0;
     out.rowptr.clear();
     out.colidx.clear();
     out.vals.clear();
-    check_header(buf, KIND_CSR)?;
+    let kind = check_header_family(buf, &[KIND_CSR, KIND_CSR_PACKED], KIND_CSR)?;
     let nrows64 = get_u64(buf, 16);
     let ncols64 = get_u64(buf, 24);
     let nnz64 = get_u64(buf, 32);
@@ -352,20 +561,37 @@ fn decode_into_raw(buf: &[u8], out: &mut Csr) -> Result<(), SegioError> {
     // Checked arithmetic: a crafted header with correctly re-sealed
     // checksums and astronomical counts must surface a typed error, not a
     // wrapped-multiply false match followed by a capacity-overflow abort.
-    let want_payload = nrows64
-        .checked_add(1)
-        .and_then(|r| r.checked_mul(8))
-        .and_then(|r| nnz64.checked_mul(8).and_then(|z| r.checked_add(z)))
-        .ok_or_else(|| {
-            SegioError::InvalidCsr(format!(
-                "nrows={nrows64} / nnz={nnz64} overflow the addressable payload size"
-            ))
-        })?;
-    if payload_len != want_payload {
-        return Err(SegioError::InvalidCsr(format!(
-            "payload length {payload_len} inconsistent with nrows={nrows64} nnz={nnz64} \
-             (expected {want_payload})"
-        )));
+    let overflow = || {
+        SegioError::InvalidCsr(format!(
+            "nrows={nrows64} / nnz={nnz64} overflow the addressable payload size"
+        ))
+    };
+    let rowptr_bytes =
+        nrows64.checked_add(1).and_then(|r| r.checked_mul(8)).ok_or_else(overflow)?;
+    if kind == KIND_CSR {
+        let want_payload =
+            nnz64.checked_mul(8).and_then(|z| rowptr_bytes.checked_add(z)).ok_or_else(overflow)?;
+        if payload_len != want_payload {
+            return Err(SegioError::InvalidCsr(format!(
+                "payload length {payload_len} inconsistent with nrows={nrows64} nnz={nnz64} \
+                 (expected {want_payload})"
+            )));
+        }
+    } else {
+        // Packed: the exact payload length depends on the bit width stored
+        // *inside* the payload, so only the width-independent floor
+        // (rowptr + width word + vals) is checkable here — the exact check
+        // runs in `unpack_colidx` once the width byte is in hand.
+        let min_payload = nnz64
+            .checked_mul(4)
+            .and_then(|v| rowptr_bytes.checked_add(8)?.checked_add(v))
+            .ok_or_else(overflow)?;
+        if payload_len < min_payload {
+            return Err(SegioError::InvalidCsr(format!(
+                "payload length {payload_len} below the packed minimum {min_payload} \
+                 for nrows={nrows64} nnz={nnz64}"
+            )));
+        }
     }
     let need = (HEADER_BYTES as u64).checked_add(payload_len).unwrap_or(u64::MAX);
     if (buf.len() as u64) < need {
@@ -394,6 +620,7 @@ fn decode_into_raw(buf: &[u8], out: &mut Csr) -> Result<(), SegioError> {
         });
     }
 
+    PAYLOAD_COPIES.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     let mut off = 0usize;
     out.rowptr.reserve(nrows + 1);
     for _ in 0..=nrows {
@@ -401,9 +628,13 @@ fn decode_into_raw(buf: &[u8], out: &mut Csr) -> Result<(), SegioError> {
         off += 8;
     }
     out.colidx.reserve(nnz);
-    for _ in 0..nnz {
-        out.colidx.push(get_u32(payload, off));
-        off += 4;
+    if kind == KIND_CSR {
+        for _ in 0..nnz {
+            out.colidx.push(get_u32(payload, off));
+            off += 4;
+        }
+    } else {
+        off = unpack_colidx(payload, off, nrows, nnz, out)?;
     }
     out.vals.reserve(nnz);
     for _ in 0..nnz {
@@ -414,6 +645,85 @@ fn decode_into_raw(buf: &[u8], out: &mut Csr) -> Result<(), SegioError> {
     out.nrows = nrows;
     out.ncols = ncols;
     out.validate().map_err(SegioError::InvalidCsr)
+}
+
+/// Decode a [`KIND_CSR_PACKED`] colidx section (width byte + pad +
+/// bitstream) into `out.colidx`, starting at payload offset `off` (just
+/// past the rowptr section, which must already be in `out.rowptr` — the
+/// row boundaries drive the per-row delta resets). Returns the byte offset
+/// of the vals section. Every defect a crafted record could carry here —
+/// out-of-range width, dirty pad bytes, a payload length inconsistent
+/// with the width, or deltas that walk outside the `u32` column range —
+/// is a typed [`SegioError::InvalidCsr`].
+fn unpack_colidx(
+    payload: &[u8],
+    off: usize,
+    nrows: usize,
+    nnz: usize,
+    out: &mut Csr,
+) -> Result<usize, SegioError> {
+    let w = payload[off] as u32;
+    if w > PACKED_WIDTH_MAX {
+        return Err(SegioError::InvalidCsr(format!(
+            "packed colidx bit width {w} exceeds the {PACKED_WIDTH_MAX}-bit delta bound"
+        )));
+    }
+    if payload[off + 1..off + 8].iter().any(|&b| b != 0) {
+        return Err(SegioError::InvalidCsr(
+            "non-zero pad bytes after the packed colidx width".into(),
+        ));
+    }
+    let words_off = off + 8;
+    // u64 math: the word count is derived, not read, so it must not be
+    // allowed to wrap a 32-bit usize before the length comparison.
+    let words64 = (nnz as u64 * w as u64).div_ceil(64);
+    let want = words_off as u64 + words64 * 8 + nnz as u64 * 4;
+    if payload.len() as u64 != want {
+        return Err(SegioError::InvalidCsr(format!(
+            "payload length {} inconsistent with packed bit width {w} (expected {want})",
+            payload.len()
+        )));
+    }
+    let mask: u64 = if w == 0 { 0 } else { (1u64 << w) - 1 };
+    let mut bitpos: u64 = 0;
+    for r in 0..nrows {
+        let lo = out.rowptr[r];
+        let hi = out.rowptr[r + 1];
+        // Bounds before bits: the bitstream cursor below is only in range
+        // because every row interval stays inside [0, nnz] and monotone.
+        if hi < lo || hi > nnz {
+            return Err(SegioError::InvalidCsr(format!(
+                "rowptr row {r} interval [{lo}, {hi}) is not monotone within nnz={nnz}"
+            )));
+        }
+        let mut prev: i64 = 0;
+        for _ in lo..hi {
+            let code = if w == 0 {
+                0
+            } else {
+                let wi = (bitpos / 64) as usize;
+                let bo = (bitpos % 64) as u32;
+                let mut v = get_u64(payload, words_off + wi * 8) >> bo;
+                if bo + w > 64 {
+                    v |= get_u64(payload, words_off + (wi + 1) * 8) << (64 - bo);
+                }
+                bitpos += w as u64;
+                v & mask
+            };
+            // Un-zigzag; |delta| < 2^33 and 0 ≤ prev ≤ u32::MAX, so the
+            // i64 sum cannot overflow — only leave the u32 column range.
+            let delta = ((code >> 1) as i64) ^ -((code & 1) as i64);
+            let cur = prev + delta;
+            if !(0..=u32::MAX as i64).contains(&cur) {
+                return Err(SegioError::InvalidCsr(format!(
+                    "packed colidx delta leaves the u32 range at row {r} (decoded {cur})"
+                )));
+            }
+            out.colidx.push(cur as u32);
+            prev = cur;
+        }
+    }
+    Ok(words_off + words64 as usize * 8)
 }
 
 /// Write one encoded segment to `path`. Returns the bytes written.
@@ -463,6 +773,266 @@ pub fn read_segment_into(
         .map_err(|e| SegioError::Io(format!("read {}: {e}", path.display())))?;
     decode_segment_into(scratch, out)?;
     Ok(len as u64)
+}
+
+// ------------------------------------------------- borrowed (mmap) views
+
+/// A fully validated borrowed view of a raw ([`KIND_CSR`]) segment record:
+/// the zero-copy counterpart of [`decode_segment`]. Constructed only by
+/// [`decode_segment_ref`], which runs the *same* checks as the copying
+/// decoder (header, payload checksum, CSR invariants) — holding a
+/// `SegmentRef` is proof the bytes are a valid segment, it just leaves the
+/// O(nnz) sections where they are (typically a page-cache-backed mapping).
+#[derive(Debug, Clone, Copy)]
+pub struct SegmentRef<'a> {
+    /// Row count.
+    pub nrows: usize,
+    /// Column count.
+    pub ncols: usize,
+    nnz: usize,
+    payload: &'a [u8],
+}
+
+impl<'a> SegmentRef<'a> {
+    /// Stored non-zero count.
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// `rowptr[i]` (decoded from the payload on each call; the mapped-read
+    /// path materializes the whole rowptr once into recycled scratch via
+    /// [`SegmentRef::fill_rowptr`] instead of calling this per row).
+    pub fn rowptr(&self, i: usize) -> usize {
+        debug_assert!(i <= self.nrows);
+        get_u64(self.payload, i * 8) as usize
+    }
+
+    /// Materialize the rowptr section into caller-recycled scratch
+    /// (cleared and refilled; zero allocations once capacity has grown).
+    /// Rowptr is O(nrows) — a small fraction of a segment — and decoding
+    /// it once keeps the per-row kernel free of byte-twiddling; only the
+    /// O(nnz) colidx/vals sections stay borrowed.
+    pub fn fill_rowptr(&self, out: &mut Vec<usize>) {
+        out.clear();
+        out.reserve(self.nrows + 1);
+        for i in 0..=self.nrows {
+            out.push(get_u64(self.payload, i * 8) as usize);
+        }
+    }
+
+    /// The colidx section as a borrowed `&[u32]`, when the platform allows
+    /// viewing it in place: little-endian byte order and a 4-aligned
+    /// section start. An mmap'd record always qualifies on little-endian
+    /// targets — the mapping is page-aligned and the section offset
+    /// `64 + (nrows+1)·8` is a multiple of 8. `None` means the caller must
+    /// fall back to a copy decode.
+    pub fn colidx_u32(&self) -> Option<&'a [u32]> {
+        let bytes = &self.payload[(self.nrows + 1) * 8..(self.nrows + 1) * 8 + self.nnz * 4];
+        borrow_le_slice::<u32>(bytes, self.nnz)
+    }
+
+    /// The vals section as a borrowed `&[f32]` (same conditions as
+    /// [`SegmentRef::colidx_u32`]).
+    pub fn vals_f32(&self) -> Option<&'a [f32]> {
+        let start = (self.nrows + 1) * 8 + self.nnz * 4;
+        let bytes = &self.payload[start..start + self.nnz * 4];
+        borrow_le_slice::<f32>(bytes, self.nnz)
+    }
+}
+
+/// Reinterpret a little-endian byte section as `&[T]` when alignment and
+/// target byte order allow it. `T` is only ever a 4-byte primitive here
+/// (`u32` / `f32`); the length is in elements. Crate-visible so the
+/// segment store can re-derive section slices from a held mapping + the
+/// offsets it recorded at map time (a `SegmentRef` cannot be stored next
+/// to the mapping it borrows).
+pub(crate) fn borrow_le_slice<T>(bytes: &[u8], len: usize) -> Option<&[T]> {
+    debug_assert_eq!(bytes.len(), len * std::mem::size_of::<T>());
+    if cfg!(target_endian = "little") && bytes.as_ptr() as usize % std::mem::align_of::<T>() == 0 {
+        // SAFETY: the pointer is aligned for T (checked), the section
+        // covers exactly `len` T-sized elements (debug-asserted, and
+        // guaranteed by the callers' validated section arithmetic), the
+        // borrow inherits the source lifetime, and u32/f32 have no invalid
+        // bit patterns.
+        Some(unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const T, len) })
+    } else {
+        None
+    }
+}
+
+/// Validate a raw segment record and return a borrowed [`SegmentRef`] —
+/// the zero-copy decode used by the mmap read path. Verification is
+/// byte-for-byte the same discipline as [`decode_segment`]: magic,
+/// version, kind, both checksums, section lengths, and the full CSR
+/// invariant walk (`rowptr[0] == 0`, monotone, `rowptr[-1] == nnz`,
+/// strictly sorted in-bounds columns) — without materializing a section.
+/// Packed records return [`SegioError::WrongKind`]: zero-copy serves the
+/// raw layout only, and the store falls back to a copy decode for packed.
+pub fn decode_segment_ref(buf: &[u8]) -> Result<SegmentRef<'_>, SegioError> {
+    check_header(buf, KIND_CSR)?;
+    let nrows64 = get_u64(buf, 16);
+    let ncols64 = get_u64(buf, 24);
+    let nnz64 = get_u64(buf, 32);
+    let payload_len = get_u64(buf, 40);
+    let want_payload = nrows64
+        .checked_add(1)
+        .and_then(|r| r.checked_mul(8))
+        .and_then(|r| nnz64.checked_mul(8).and_then(|z| r.checked_add(z)))
+        .ok_or_else(|| {
+            SegioError::InvalidCsr(format!(
+                "nrows={nrows64} / nnz={nnz64} overflow the addressable payload size"
+            ))
+        })?;
+    if payload_len != want_payload {
+        return Err(SegioError::InvalidCsr(format!(
+            "payload length {payload_len} inconsistent with nrows={nrows64} nnz={nnz64} \
+             (expected {want_payload})"
+        )));
+    }
+    let need = (HEADER_BYTES as u64).checked_add(payload_len).unwrap_or(u64::MAX);
+    if (buf.len() as u64) < need {
+        return Err(SegioError::Truncated { need, got: buf.len() as u64 });
+    }
+    let narrow = |v: u64, what: &str| {
+        usize::try_from(v).map_err(|_| {
+            SegioError::InvalidCsr(format!("{what} {v} exceeds this platform's address space"))
+        })
+    };
+    let nrows = narrow(nrows64, "nrows")?;
+    let ncols = narrow(ncols64, "ncols")?;
+    let nnz = narrow(nnz64, "nnz")?;
+    let payload_usize = narrow(payload_len, "payload length")?;
+    let payload = &buf[HEADER_BYTES..HEADER_BYTES + payload_usize];
+    let stored_payload_sum = get_u64(buf, 48);
+    let computed_payload_sum = fnv1a64(payload);
+    if stored_payload_sum != computed_payload_sum {
+        return Err(SegioError::PayloadChecksum {
+            stored: stored_payload_sum,
+            computed: computed_payload_sum,
+        });
+    }
+
+    // The CSR invariant walk `Csr::validate` performs, off borrowed bytes:
+    // the checksum proves the bytes are what was written, this proves what
+    // was written is a matrix. O(nnz) like the checksum pass, no copies.
+    if get_u64(payload, 0) != 0 {
+        return Err(SegioError::InvalidCsr("rowptr[0] != 0".into()));
+    }
+    if get_u64(payload, nrows * 8) != nnz as u64 {
+        return Err(SegioError::InvalidCsr("rowptr[-1] != nnz".into()));
+    }
+    let colbase = (nrows + 1) * 8;
+    for r in 0..nrows {
+        let lo = get_u64(payload, r * 8);
+        let hi = get_u64(payload, (r + 1) * 8);
+        if hi < lo || hi > nnz as u64 {
+            return Err(SegioError::InvalidCsr("rowptr not monotone".into()));
+        }
+        let mut prev: i64 = -1;
+        for e in lo..hi {
+            let c = get_u32(payload, colbase + e as usize * 4) as i64;
+            if c <= prev {
+                return Err(SegioError::InvalidCsr(format!(
+                    "row {r} columns not strictly sorted"
+                )));
+            }
+            prev = c;
+        }
+        if prev >= ncols as i64 {
+            return Err(SegioError::InvalidCsr(format!(
+                "row {r} column {prev} out of bounds"
+            )));
+        }
+    }
+    Ok(SegmentRef { nrows, ncols, nnz, payload })
+}
+
+/// A validated borrowed view of a [`KIND_PANEL`] record — the panel analog
+/// of [`SegmentRef`], used by the mapped panel-chunk path and by chunk
+/// assembly (which copies rows straight from the record into their slot in
+/// a full panel, with no intermediate `Dense`).
+#[derive(Debug, Clone, Copy)]
+pub struct PanelRef<'a> {
+    /// Row count.
+    pub nrows: usize,
+    /// Column count (features).
+    pub ncols: usize,
+    payload: &'a [u8],
+}
+
+impl<'a> PanelRef<'a> {
+    /// The whole row-major payload as a borrowed `&[f32]`, when alignment
+    /// and byte order allow (always, for an mmap'd record on a
+    /// little-endian target: the payload starts 64 bytes into a
+    /// page-aligned mapping). `None` means use [`PanelRef::fill_into`].
+    pub fn data_f32(&self) -> Option<&'a [f32]> {
+        borrow_le_slice::<f32>(self.payload, self.nrows * self.ncols)
+    }
+
+    /// Copy-decode the payload into `out`, which must be exactly
+    /// `nrows × ncols` long — the alignment-free fallback, and the chunk
+    /// assembler's row-slot writer.
+    pub fn fill_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.nrows * self.ncols, "destination/panel shape mismatch");
+        if let Some(src) = self.data_f32() {
+            out.copy_from_slice(src);
+        } else {
+            for (i, slot) in out.iter_mut().enumerate() {
+                *slot = f32::from_bits(get_u32(self.payload, i * 4));
+            }
+        }
+    }
+}
+
+/// Validate a panel record and return a borrowed [`PanelRef`] — the same
+/// checks as [`decode_panel`], no materialization (f32 payloads have no
+/// structural invariants beyond their length, so the checksum pass is the
+/// whole walk).
+pub fn decode_panel_ref(buf: &[u8]) -> Result<PanelRef<'_>, SegioError> {
+    check_header(buf, KIND_PANEL)?;
+    let nrows64 = get_u64(buf, 16);
+    let ncols64 = get_u64(buf, 24);
+    let nnz64 = get_u64(buf, 32);
+    let payload_len = get_u64(buf, 40);
+    if nnz64 != 0 {
+        return Err(SegioError::InvalidPanel(format!(
+            "panel records must have a zero nnz field, got {nnz64}"
+        )));
+    }
+    let want_payload =
+        nrows64.checked_mul(ncols64).and_then(|n| n.checked_mul(4)).ok_or_else(|| {
+            SegioError::InvalidPanel(format!(
+                "nrows={nrows64} × ncols={ncols64} overflows the addressable payload size"
+            ))
+        })?;
+    if payload_len != want_payload {
+        return Err(SegioError::InvalidPanel(format!(
+            "payload length {payload_len} inconsistent with nrows={nrows64} ncols={ncols64} \
+             (expected {want_payload})"
+        )));
+    }
+    let need = (HEADER_BYTES as u64).checked_add(payload_len).unwrap_or(u64::MAX);
+    if (buf.len() as u64) < need {
+        return Err(SegioError::Truncated { need, got: buf.len() as u64 });
+    }
+    let narrow = |v: u64, what: &str| {
+        usize::try_from(v).map_err(|_| {
+            SegioError::InvalidPanel(format!("{what} {v} exceeds this platform's address space"))
+        })
+    };
+    let nrows = narrow(nrows64, "nrows")?;
+    let ncols = narrow(ncols64, "ncols")?;
+    let payload_usize = narrow(payload_len, "payload length")?;
+    let payload = &buf[HEADER_BYTES..HEADER_BYTES + payload_usize];
+    let stored_payload_sum = get_u64(buf, 48);
+    let computed_payload_sum = fnv1a64(payload);
+    if stored_payload_sum != computed_payload_sum {
+        return Err(SegioError::PayloadChecksum {
+            stored: stored_payload_sum,
+            computed: computed_payload_sum,
+        });
+    }
+    Ok(PanelRef { nrows, ncols, payload })
 }
 
 // --------------------------------------------------- dense-panel records
@@ -561,6 +1131,7 @@ fn decode_panel_raw(buf: &[u8], out: &mut Dense) -> Result<(), SegioError> {
             computed: computed_payload_sum,
         });
     }
+    PAYLOAD_COPIES.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     // want_payload == payload_len fits usize, so the element count (a
     // quarter of it) does too — reuse the checked product, never re-multiply.
     let n = payload_usize / 4;
@@ -1001,5 +1572,269 @@ mod tests {
             Err(SegioError::Truncated { .. })
         ));
         assert_eq!((back.nrows, back.data.len()), (0, 0), "decode error resets the scratch panel");
+    }
+
+    #[test]
+    fn golden_packed_encoding_is_byte_stable() {
+        // Golden vector computed independently (Python struct/FNV-1a port
+        // of the packed spec) — pins KIND_CSR_PACKED the same way the raw
+        // golden vector pins KIND_CSR. For the example matrix the zigzag
+        // codes are [0, 4, 2], so w = 3 and the single word is
+        // 0 | 4<<3 | 2<<6 = 160.
+        let want: [u8; 116] = [
+            65, 73, 82, 69, 83, 83, 69, 71, 1, 0, 0, 0, 3, 0, 0, 0, 2, 0, 0, 0, 0, 0, 0, 0, 3, 0,
+            0, 0, 0, 0, 0, 0, 3, 0, 0, 0, 0, 0, 0, 0, 52, 0, 0, 0, 0, 0, 0, 0, 22, 14, 37, 194,
+            223, 101, 4, 181, 8, 209, 91, 116, 160, 217, 46, 0, 0, 0, 0, 0, 0, 0, 0, 0, 2, 0, 0,
+            0, 0, 0, 0, 0, 3, 0, 0, 0, 0, 0, 0, 0, 3, 0, 0, 0, 0, 0, 0, 0, 160, 0, 0, 0, 0, 0, 0,
+            0, 0, 0, 128, 63, 0, 0, 0, 64, 0, 0, 64, 64,
+        ];
+        let m = example_csr();
+        let got = encode_segment_packed(&m);
+        assert_eq!(got, want.to_vec());
+        assert_eq!(got.len() as u64, encoded_packed_len(&m));
+        assert_eq!(decode_segment(&got).unwrap(), m);
+    }
+
+    #[test]
+    fn packed_roundtrips_across_shapes() {
+        // Every shape class the packer branches on: empty matrices, empty
+        // rows, single-row segments, single-column (w = 0) segments, and
+        // extreme columns exercising the full 33-bit delta width.
+        let cases: Vec<Csr> = vec![
+            Csr::empty(0, 0),
+            Csr::empty(3, 4),
+            example_csr(),
+            // Single row spanning the full u32 column range: the 0 → MAX
+            // delta zigzags to 2^33 − 2, exercising the maximum width.
+            Csr {
+                nrows: 1,
+                ncols: u32::MAX as usize + 1,
+                rowptr: vec![0, 2],
+                colidx: vec![0, u32::MAX],
+                vals: vec![1.0, 2.0],
+            },
+            // Empty rows between occupied ones; per-row delta resets.
+            Csr {
+                nrows: 4,
+                ncols: 100,
+                rowptr: vec![0, 2, 2, 2, 5],
+                colidx: vec![7, 99, 0, 50, 51],
+                vals: vec![1.0, 2.0, 3.0, 4.0, 5.0],
+            },
+            // Single column everywhere: every code is 0, so w = 0 and the
+            // packed colidx section is just the width word.
+            Csr {
+                nrows: 3,
+                ncols: 1,
+                rowptr: vec![0, 1, 2, 3],
+                colidx: vec![0, 0, 0],
+                vals: vec![1.0, 2.0, 3.0],
+            },
+        ];
+        for m in cases {
+            m.validate().expect("test case must be a valid CSR");
+            let buf = encode_segment_packed(&m);
+            assert_eq!(buf.len() as u64, encoded_packed_len(&m), "size predictor is exact");
+            assert_eq!(decode_segment(&buf).unwrap(), m, "packed decode == original");
+            // And the raw path agrees, entry for entry.
+            assert_eq!(decode_segment(&encode_segment(&m)).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn auto_encoding_picks_the_smaller_file() {
+        // Dense-ish local columns pack well below 32 bits per entry...
+        let mut coo = Coo::new(64, 64);
+        for r in 0..64 {
+            for c in 0..8 {
+                coo.push(r, c, (r + c) as f32 + 0.5);
+            }
+        }
+        let local = coo.to_csr();
+        assert!(encoded_packed_len(&local) < encoded_len(local.nrows, local.nnz()));
+        let (buf, kind) = encode_segment_with(&local, SegEncoding::Auto);
+        assert_eq!(kind, KIND_CSR_PACKED);
+        assert_eq!(buf, encode_segment_packed(&local));
+
+        // ...while an empty matrix gains nothing (packed adds the width
+        // word), so Auto stays raw.
+        let empty = Csr::empty(4, 4);
+        assert!(encoded_packed_len(&empty) > encoded_len(4, 0));
+        let (buf, kind) = encode_segment_with(&empty, SegEncoding::Auto);
+        assert_eq!(kind, KIND_CSR);
+        assert_eq!(buf, encode_segment(&empty));
+    }
+
+    #[test]
+    fn seg_encoding_parses_and_displays() {
+        for (s, e) in
+            [("raw", SegEncoding::Raw), ("packed", SegEncoding::Packed), ("auto", SegEncoding::Auto)]
+        {
+            assert_eq!(s.parse::<SegEncoding>().unwrap(), e);
+            assert_eq!(e.to_string(), s);
+        }
+        let err = "zstd".parse::<SegEncoding>().unwrap_err();
+        assert!(err.contains("zstd") && err.contains("raw, packed, or auto"), "{err}");
+        assert_eq!(SegEncoding::for_kind(KIND_CSR), Some(SegEncoding::Raw));
+        assert_eq!(SegEncoding::for_kind(KIND_CSR_PACKED), Some(SegEncoding::Packed));
+        assert_eq!(SegEncoding::for_kind(KIND_PANEL), None);
+    }
+
+    #[test]
+    fn packed_rejects_crafted_defects_with_typed_errors() {
+        let m = example_csr();
+        let good = encode_segment_packed(&m);
+        let reseal = |buf: &mut Vec<u8>| {
+            let psum = fnv1a64(&buf[HEADER_BYTES..]);
+            buf[48..56].copy_from_slice(&psum.to_le_bytes());
+            let sum = fnv1a64(&buf[0..56]);
+            buf[56..64].copy_from_slice(&sum.to_le_bytes());
+        };
+        let width_off = HEADER_BYTES + 3 * 8; // width byte follows rowptr
+
+        // Ordinary corruption fails the checksums, same as raw records.
+        let mut flipped = good.clone();
+        *flipped.last_mut().unwrap() ^= 0x01;
+        assert!(matches!(decode_segment(&flipped), Err(SegioError::PayloadChecksum { .. })));
+        assert!(matches!(decode_segment(&good[..good.len() - 1]), Err(SegioError::Truncated { .. })));
+
+        // Out-of-range width, fully re-sealed: typed rejection.
+        let mut wide = good.clone();
+        wide[width_off] = (PACKED_WIDTH_MAX + 1) as u8;
+        reseal(&mut wide);
+        match decode_segment(&wide) {
+            Err(SegioError::InvalidCsr(msg)) => assert!(msg.contains("bit width"), "{msg}"),
+            other => panic!("expected InvalidCsr for oversized width, got {other:?}"),
+        }
+
+        // Dirty pad bytes, re-sealed.
+        let mut dirty = good.clone();
+        dirty[width_off + 3] = 0x5a;
+        reseal(&mut dirty);
+        match decode_segment(&dirty) {
+            Err(SegioError::InvalidCsr(msg)) => assert!(msg.contains("pad"), "{msg}"),
+            other => panic!("expected InvalidCsr for dirty pad, got {other:?}"),
+        }
+
+        // A width inconsistent with the payload length, re-sealed: the
+        // exact-length check fires before any bit is read.
+        let mut short_w = good.clone();
+        short_w[width_off] = 1; // claims 1-bit codes → fewer words than present
+        reseal(&mut short_w);
+        match decode_segment(&short_w) {
+            Err(SegioError::InvalidCsr(msg)) => {
+                assert!(msg.contains("inconsistent with packed bit width"), "{msg}")
+            }
+            other => panic!("expected InvalidCsr for width/length mismatch, got {other:?}"),
+        }
+
+        // Codes whose deltas walk below zero: flip the first code (zigzag
+        // 0 → 1, i.e. delta −1 from column 0), re-sealed.
+        let mut neg = good.clone();
+        neg[width_off + 8] = 1 | (4 << 3) | (2 << 6);
+        reseal(&mut neg);
+        match decode_segment(&neg) {
+            Err(SegioError::InvalidCsr(msg)) => assert!(msg.contains("u32 range"), "{msg}"),
+            other => panic!("expected InvalidCsr for out-of-range delta, got {other:?}"),
+        }
+
+        // Truncating the header-advertised payload is Truncated, and a
+        // packed record fed to the panel/blob decoders is WrongKind.
+        assert_eq!(
+            decode_panel(&good),
+            Err(SegioError::WrongKind { found: KIND_CSR_PACKED, expected: KIND_PANEL })
+        );
+        assert_eq!(
+            decode_blob(&good),
+            Err(SegioError::WrongKind { found: KIND_CSR_PACKED, expected: KIND_CHECK })
+        );
+    }
+
+    #[test]
+    fn segment_ref_matches_the_copying_decoder() {
+        let m = example_csr();
+        let buf = encode_segment(&m);
+        let r = decode_segment_ref(&buf).unwrap();
+        assert_eq!((r.nrows, r.ncols, r.nnz()), (m.nrows, m.ncols, m.nnz()));
+        let mut rowptr = Vec::new();
+        r.fill_rowptr(&mut rowptr);
+        assert_eq!(rowptr, m.rowptr);
+        for i in 0..=m.nrows {
+            assert_eq!(r.rowptr(i), m.rowptr[i]);
+        }
+        // Vec<u8> payloads start at offset 64 of an 8-aligned-at-best
+        // allocation, so the borrow may legitimately fail on alignment;
+        // when it succeeds it must be exact.
+        if let Some(cols) = r.colidx_u32() {
+            assert_eq!(cols, &m.colidx[..]);
+        }
+        if let Some(vals) = r.vals_f32() {
+            assert_eq!(vals, &m.vals[..]);
+        }
+
+        // Same defect surface as the copying decoder.
+        assert!(matches!(decode_segment_ref(&buf[..20]), Err(SegioError::Truncated { .. })));
+        let mut bad = buf.clone();
+        *bad.last_mut().unwrap() ^= 1;
+        assert!(matches!(decode_segment_ref(&bad), Err(SegioError::PayloadChecksum { .. })));
+        let invalid =
+            Csr { nrows: 2, ncols: 2, rowptr: vec![0, 2, 1], colidx: vec![0], vals: vec![1.0] };
+        let enc = {
+            // Hand-build a record with nnz = 1 and a non-monotone rowptr so
+            // the length checks pass and only the invariant walk can catch it.
+            let mut payload = Vec::new();
+            for p in [0u64, 2, 1] {
+                put_u64(&mut payload, p);
+            }
+            put_u32(&mut payload, 0);
+            put_u32(&mut payload, 1.0f32.to_bits());
+            seal_header(KIND_CSR, invalid.nrows, invalid.ncols, 1, payload)
+        };
+        assert!(matches!(decode_segment_ref(&enc), Err(SegioError::InvalidCsr(_))));
+
+        // Packed records are copy-decode only: the zero-copy reader names
+        // the kind rather than guessing at the bitstream.
+        let packed = encode_segment_packed(&m);
+        match decode_segment_ref(&packed) {
+            Err(SegioError::WrongKind { found, expected }) => {
+                assert_eq!((found, expected), (KIND_CSR_PACKED, KIND_CSR));
+            }
+            other => panic!("expected WrongKind for a packed record, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn panel_ref_matches_the_copying_decoder() {
+        let p = example_panel();
+        let buf = encode_panel(&p);
+        let r = decode_panel_ref(&buf).unwrap();
+        assert_eq!((r.nrows, r.ncols), (p.nrows, p.ncols));
+        let mut out = vec![0.0f32; p.data.len()];
+        r.fill_into(&mut out);
+        assert_eq!(out, p.data);
+        if let Some(data) = r.data_f32() {
+            assert_eq!(data, &p.data[..]);
+        }
+        assert!(matches!(decode_panel_ref(&buf[..30]), Err(SegioError::Truncated { .. })));
+        let seg = encode_segment(&example_csr());
+        assert_eq!(
+            decode_panel_ref(&seg).err(),
+            Some(SegioError::WrongKind { found: KIND_CSR, expected: KIND_PANEL })
+        );
+    }
+
+    #[test]
+    fn payload_copy_counter_counts_copy_decodes() {
+        let m = example_csr();
+        let raw = encode_segment(&m);
+        let before = payload_copy_count();
+        for _ in 0..5 {
+            let _ = decode_segment(&raw).unwrap();
+        }
+        assert!(payload_copy_count() >= before + 5, "copy decodes are counted");
+        // The borrowed decoder's zero-copy claim is asserted in isolation
+        // by the warm-mmap gate in rust/tests/alloc_free.rs — the counter
+        // is process-global, so an exact no-movement check here would race
+        // with sibling tests decoding concurrently.
     }
 }

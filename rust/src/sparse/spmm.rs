@@ -20,10 +20,18 @@
 //! write into a caller-owned destination (the per-layer aggregation panel
 //! of the `gcn::pipeline` streaming engine), eliminating the per-segment
 //! partial allocation the streaming hot loop used to pay.
+//!
+//! Since storage engine v2 the kernels are written against borrowed
+//! operands: [`SegView`] for the sparse side (an owned [`Csr`] or a
+//! zero-copy mapped segment) and the [`RowSrc`] trait for the dense side
+//! (a resident [`Dense`] or a mapped panel-chunk set). The generics
+//! monomorphize — no dynamic dispatch in the nnz loop — and every `Csr` /
+//! `Dense` entry point below is a thin delegation, so the arithmetic
+//! order (and therefore bit-identity with the serial oracle) is unchanged.
 
 use crate::runtime::pool::Pool;
 
-use super::Csr;
+use super::{Csr, SegView};
 
 /// Feature-dimension block width of the SpMM microkernel. Eight f32 lanes
 /// fill two SSE / one AVX register; the accumulator array is a fixed-size
@@ -105,6 +113,38 @@ impl Dense {
     }
 }
 
+/// The SpMM kernels' dense operand: anything that serves feature row `r`
+/// as one contiguous `&[f32]`. [`Dense`] serves from its resident buffer;
+/// the mapped panel-chunk reader (`runtime::segstore`) serves rows
+/// straight out of page-cache-backed mappings. The kernels are generic
+/// (monomorphized) over this trait, so neither side pays dispatch in the
+/// nnz loop.
+pub trait RowSrc {
+    /// Row count.
+    fn nrows(&self) -> usize;
+    /// Feature width (elements per row).
+    fn ncols(&self) -> usize;
+    /// Row `r` as a contiguous slice of length [`RowSrc::ncols`].
+    fn row(&self, r: usize) -> &[f32];
+}
+
+impl RowSrc for Dense {
+    #[inline]
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    #[inline]
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    #[inline]
+    fn row(&self, r: usize) -> &[f32] {
+        Dense::row(self, r)
+    }
+}
+
 /// Lane-blocked microkernel for one output row: `orow = A[i, :] · H`,
 /// overwriting `orow` entirely (rows with no stored entries become zero).
 ///
@@ -117,8 +157,8 @@ impl Dense {
 /// (`acc += a_ik * h_kj` in stored-`k` order), so results are
 /// bit-identical to the pre-blocking loops.
 #[inline]
-fn spmm_row_into(a: &Csr, h: &Dense, i: usize, orow: &mut [f32]) {
-    let f = h.ncols;
+fn spmm_row_into<S: RowSrc + ?Sized>(a: SegView<'_>, h: &S, i: usize, orow: &mut [f32]) {
+    let f = h.ncols();
     let lo = a.rowptr[i];
     let hi = a.rowptr[i + 1];
     let cols = &a.colidx[lo..hi];
@@ -127,8 +167,7 @@ fn spmm_row_into(a: &Csr, h: &Dense, i: usize, orow: &mut [f32]) {
     while j + SPMM_LANES <= f {
         let mut acc = [0f32; SPMM_LANES];
         for (&k, &av) in cols.iter().zip(vals.iter()) {
-            let base = k as usize * f + j;
-            let hblk = &h.data[base..base + SPMM_LANES];
+            let hblk = &h.row(k as usize)[j..j + SPMM_LANES];
             for l in 0..SPMM_LANES {
                 acc[l] += av * hblk[l];
             }
@@ -141,8 +180,7 @@ fn spmm_row_into(a: &Csr, h: &Dense, i: usize, orow: &mut [f32]) {
         let t = f - j;
         let mut acc = [0f32; SPMM_LANES];
         for (&k, &av) in cols.iter().zip(vals.iter()) {
-            let base = k as usize * f + j;
-            let hblk = &h.data[base..base + t];
+            let hblk = &h.row(k as usize)[j..j + t];
             for (al, &hv) in acc[..t].iter_mut().zip(hblk.iter()) {
                 *al += av * hv;
             }
@@ -183,8 +221,15 @@ pub fn spmm(a: &Csr, h: &Dense) -> Dense {
 /// each segment's partial directly into its row range of the pass-wide
 /// aggregation panel instead of allocating a fresh partial per segment.
 pub fn spmm_into(a: &Csr, h: &Dense, out: &mut [f32]) {
-    assert_eq!(a.ncols, h.nrows, "inner dimension mismatch");
-    let f = h.ncols;
+    spmm_view_into(a.view(), h, out);
+}
+
+/// [`spmm_into`] over borrowed operands: A as a [`SegView`], H as any
+/// [`RowSrc`] — the form the zero-copy mapped path calls, with the mapped
+/// segment's sections and panel-chunk rows served in place.
+pub fn spmm_view_into<S: RowSrc + ?Sized>(a: SegView<'_>, h: &S, out: &mut [f32]) {
+    assert_eq!(a.ncols, h.nrows(), "inner dimension mismatch");
+    let f = h.ncols();
     assert_eq!(out.len(), a.nrows * f, "destination shape mismatch");
     for i in 0..a.nrows {
         spmm_row_into(a, h, i, &mut out[i * f..(i + 1) * f]);
@@ -203,8 +248,20 @@ pub fn spmm_par(a: &Csr, h: &Dense, pool: &Pool) -> Dense {
 
 /// [`spmm_par`] into a caller-owned destination (see [`spmm_into`]).
 pub fn spmm_par_into(a: &Csr, h: &Dense, pool: &Pool, out: &mut [f32]) {
-    assert_eq!(a.ncols, h.nrows, "inner dimension mismatch");
-    let f = h.ncols;
+    spmm_view_par_into(a.view(), h, pool, out);
+}
+
+/// [`spmm_par_into`] over borrowed operands (see [`spmm_view_into`]): same
+/// fixed row-range partitioning, so byte-identical to the serial form at
+/// every thread count regardless of where the operands live.
+pub fn spmm_view_par_into<S: RowSrc + Sync + ?Sized>(
+    a: SegView<'_>,
+    h: &S,
+    pool: &Pool,
+    out: &mut [f32],
+) {
+    assert_eq!(a.ncols, h.nrows(), "inner dimension mismatch");
+    let f = h.ncols();
     assert_eq!(out.len(), a.nrows * f, "destination shape mismatch");
     pool.for_each_row_chunk(out, f, |range, chunk| {
         for (local, i) in range.clone().enumerate() {
@@ -274,11 +331,18 @@ pub fn spmm_transpose_par(a: &Csr, h: &Dense, pool: &Pool) -> Dense {
 /// segment scans its rows ascending, so every output element receives its
 /// `acc += a_ik * h_ij` additions in the same global row order either way.
 pub fn spmm_transpose_into(a: &Csr, h: &[f32], f: usize, out: &mut [f32]) {
+    spmm_transpose_view_into(a.view(), h, f, out);
+}
+
+/// [`spmm_transpose_into`] over a borrowed segment view — the form the
+/// streamed backward pass calls when the segment arrives mapped.
+pub fn spmm_transpose_view_into(a: SegView<'_>, h: &[f32], f: usize, out: &mut [f32]) {
     assert_eq!(h.len(), a.nrows * f, "operand shape mismatch");
     assert_eq!(out.len(), a.ncols * f, "destination shape mismatch");
     for i in 0..a.nrows {
         let hrow = &h[i * f..(i + 1) * f];
-        for (k, av) in a.row(i) {
+        let (lo, hi) = (a.rowptr[i], a.rowptr[i + 1]);
+        for (&k, &av) in a.colidx[lo..hi].iter().zip(a.vals[lo..hi].iter()) {
             let k = k as usize;
             axpy_lanes(&mut out[k * f..(k + 1) * f], hrow, av);
         }
@@ -291,12 +355,25 @@ pub fn spmm_transpose_into(a: &Csr, h: &[f32], f: usize, out: &mut [f32]) {
 /// accumulated result is byte-identical to the serial form at every thread
 /// count.
 pub fn spmm_transpose_par_into(a: &Csr, h: &[f32], f: usize, pool: &Pool, out: &mut [f32]) {
+    spmm_transpose_view_par_into(a.view(), h, f, pool, out);
+}
+
+/// [`spmm_transpose_par_into`] over a borrowed segment view (same
+/// owner-scans-all determinism discipline).
+pub fn spmm_transpose_view_par_into(
+    a: SegView<'_>,
+    h: &[f32],
+    f: usize,
+    pool: &Pool,
+    out: &mut [f32],
+) {
     assert_eq!(h.len(), a.nrows * f, "operand shape mismatch");
     assert_eq!(out.len(), a.ncols * f, "destination shape mismatch");
     pool.for_each_row_chunk_static(out, f, |range, chunk| {
         for i in 0..a.nrows {
             let hrow = &h[i * f..(i + 1) * f];
-            for (k, av) in a.row(i) {
+            let (lo, hi) = (a.rowptr[i], a.rowptr[i + 1]);
+            for (&k, &av) in a.colidx[lo..hi].iter().zip(a.vals[lo..hi].iter()) {
                 let k = k as usize;
                 if k < range.start || k >= range.end {
                     continue;

@@ -358,4 +358,35 @@ fn recycled_disk_path_is_allocation_free_in_steady_state() {
              {allocs_train_rec} over {segs_train} segments"
         );
     }
+
+    // ---- 6. Warm mmap path is payload-copy-free ------------------------
+    // Storage engine v2's zero-copy obligation: a steady-state mapped pass
+    // over a raw store serves every colidx/vals section borrowed from the
+    // mapping — `payload_copy_count()` must not move at all. The copy path
+    // over the same store materializes every segment, proving the counter
+    // is live and the mapped pass genuinely skipped the decode copies.
+    use aires::sparse::segio::payload_copy_count;
+
+    let mmap_cfg = StagingConfig::disk(store.clone(), 1).with_mmap(true);
+    let mut mem = GpuMem::new(1 << 30);
+    let (out_mm_warm, _) =
+        layer.forward_cpu(&a_hat, &x, &mut mem, &serial, &mmap_cfg).unwrap();
+    let before_copies = payload_copy_count();
+    let (out_mm, _) = layer.forward_cpu(&a_hat, &x, &mut mem, &serial, &mmap_cfg).unwrap();
+    let mapped_copies = payload_copy_count() - before_copies;
+    assert_eq!(
+        mapped_copies, 0,
+        "warm mapped pass materialized {mapped_copies} payloads over {n} segments"
+    );
+    assert_eq!(out_mm, out_mm_warm);
+    assert_eq!(out_mm, out_recycled, "mapped pass diverged from the copy-path oracle");
+    let before_copies = payload_copy_count();
+    let (out_cp, _) = layer.forward_cpu(&a_hat, &x, &mut mem, &serial, &fresh_cfg).unwrap();
+    let copy_copies = payload_copy_count() - before_copies;
+    assert_eq!(out_cp, out_mm);
+    assert!(
+        copy_copies >= n as u64,
+        "copy path must materialize every segment ({copy_copies} copies over {n})"
+    );
+    assert_eq!(mem.used, 0, "mapped passes left the ledger unbalanced");
 }

@@ -291,6 +291,7 @@ fn gate_skips_zero_baselines_and_ungated_metrics() {
     assert!(gated_metric("ns_per_layer"));
     assert!(gated_metric("ns_per_step"));
     assert!(gated_metric("per_tenant.tenant_0.p99_s"));
+    assert!(gated_metric("bytes_per_segment"), "encoded footprint is gated");
     assert!(!gated_metric("per_tenant.tenant_0.p50_s"));
     assert!(!gated_metric("allocs_per_segment"));
     assert!(!gated_metric("segments_per_s"));
@@ -342,7 +343,7 @@ fn trend_lines_skip_zero_previous_values() {
 
 #[test]
 fn ingest_flattens_bench_emission_including_serve_percentiles() {
-    let text = r#"{"bench":"micro_hotpath/streaming","graph":"kmer-12000","results":{"fresh_depth1":{"mean_s":0.01,"ns_per_segment":100.5},"serve_open_loop":{"ledger_balanced":true,"per_tenant":{"tenant_0":{"p50_s":0.001,"p99_s":0.002}},"segments_per_s":500}}}"#;
+    let text = r#"{"bench":"micro_hotpath/streaming","graph":"kmer-12000","results":{"fresh_depth1":{"mean_s":0.01,"ns_per_segment":100.5},"segread_packed":{"bytes_per_segment":4096.0,"ns_per_segment":80.0},"serve_open_loop":{"ledger_balanced":true,"per_tenant":{"tenant_0":{"p50_s":0.001,"p99_s":0.002}},"segments_per_s":500}}}"#;
     let recs = records_from_bench_json(text, "abc", 7).unwrap();
     let find = |scenario: &str, metric: &str| {
         recs.iter()
@@ -352,13 +353,16 @@ fn ingest_flattens_bench_emission_including_serve_percentiles() {
     assert_eq!(find("fresh_depth1", "ns_per_segment").value, 100.5);
     assert_eq!(find("fresh_depth1", "ns_per_segment").unit, "ns");
     assert_eq!(find("fresh_depth1", "mean_s").unit, "s");
+    // The encoded-store footprint series ingests with its own unit.
+    assert_eq!(find("segread_packed", "bytes_per_segment").value, 4096.0);
+    assert_eq!(find("segread_packed", "bytes_per_segment").unit, "bytes");
     // Serve open-loop percentiles land in the same record stream.
     assert_eq!(find("serve_open_loop", "per_tenant.tenant_0.p99_s").value, 0.002);
     assert_eq!(find("serve_open_loop", "per_tenant.tenant_0.p99_s").unit, "s");
     assert_eq!(find("serve_open_loop", "segments_per_s").unit, "seg/s");
     // Booleans trend as 0/1; the non-results top-level keys do not ingest.
     assert_eq!(find("serve_open_loop", "ledger_balanced").value, 1.0);
-    assert_eq!(recs.len(), 6);
+    assert_eq!(recs.len(), 8);
     for r in &recs {
         assert_eq!((r.commit.as_str(), r.ts), ("abc", 7));
     }

@@ -543,6 +543,65 @@ fn train_stream_checkpoint_resume_matches_uninterrupted_run() {
     assert!(!err.contains("panicked"), "{err}");
 }
 
+// --- storage engine v2: --seg-encoding / --mmap (PR 10) -----------------
+
+#[test]
+fn malformed_seg_encoding_is_a_usage_error() {
+    let (code, _, err) = run(&["catalog", "--seg-encoding", "zip"]);
+    assert_eq!(code, Some(2), "usage errors exit 2; stderr: {err}");
+    assert!(err.contains("--seg-encoding"), "must name the flag: {err}");
+    assert!(err.contains("zip"), "must echo the offending value: {err}");
+    assert!(err.contains("raw"), "must list the accepted encodings: {err}");
+    assert!(!err.contains("panicked"), "{err}");
+    let (code, _, err) = run(&["catalog", "--seg-encoding"]);
+    assert_eq!(code, Some(2), "stderr: {err}");
+    assert!(err.contains("requires a value"), "{err}");
+}
+
+#[test]
+fn segcheck_packed_encoding_and_mmap_verify_byte_identity() {
+    // The compressed store plus zero-copy reads still verify against the
+    // in-memory oracle, the chosen encoding lands on disk as
+    // KIND_CSR_PACKED records, and switching the encoding respills the
+    // fixture instead of reusing bytes in the wrong layout.
+    let dir = TempDir::new("cli-segcheck-packed");
+    let base = |enc: &str| {
+        vec![
+            "segcheck".to_string(),
+            "--nodes".to_string(),
+            "200".to_string(),
+            "--budget".to_string(),
+            "2048".to_string(),
+            "--segment-dir".to_string(),
+            dir.path().to_str().unwrap().to_string(),
+            "--seg-encoding".to_string(),
+            enc.to_string(),
+        ]
+    };
+    let mut packed_args = base("packed");
+    packed_args.push("--mmap".to_string());
+    let packed_refs: Vec<&str> = packed_args.iter().map(|s| s.as_str()).collect();
+    let (code, out, err) = run(&packed_refs);
+    assert_eq!(code, Some(0), "stderr: {err}");
+    assert!(out.contains("byte-identical"), "stdout: {out}");
+    assert!(out.contains("packed encoding"), "the chosen encoding is reported: {out}");
+    let seg0 = dir.path().join("seg-00000.bin");
+    let hdr = std::fs::read(&seg0).unwrap();
+    let kind = u32::from_le_bytes(hdr[12..16].try_into().unwrap());
+    assert_eq!(kind, 3, "--seg-encoding packed must write KIND_CSR_PACKED records");
+
+    // Same directory, raw encoding: the packed fixture must not be
+    // reused — the marker is keyed by encoding.
+    let raw_args = base("raw");
+    let raw_refs: Vec<&str> = raw_args.iter().map(|s| s.as_str()).collect();
+    let (code, out, err) = run(&raw_refs);
+    assert_eq!(code, Some(0), "stderr: {err}");
+    assert!(out.contains("byte-identical"), "stdout: {out}");
+    let hdr = std::fs::read(&seg0).unwrap();
+    let kind = u32::from_le_bytes(hdr[12..16].try_into().unwrap());
+    assert_eq!(kind, 0, "switching to raw must respill KIND_CSR records");
+}
+
 #[test]
 fn segcheck_with_recycling_disabled_still_verifies() {
     // --recycle-cap-bytes 0 selects the fresh-allocation path; output

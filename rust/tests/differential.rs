@@ -1145,12 +1145,14 @@ fn diff_corruption_heals_by_quarantine_and_rebuild() {
     // Persistent single-segment corruption: a rebuild-enabled pass must
     // quarantine the poisoned file (preserving the evidence), rebuild it
     // from the source matrix + RoBW plan, and serve output byte-identical
-    // to the fault-free oracle at every depth × threads × fresh/recycled
-    // point. The file is re-corrupted before every run — a successful
-    // rebuild repairs the medium, and the sweep must prove each
-    // configuration heals from the *corrupt* state, not from a
-    // predecessor's repair.
+    // to the fault-free oracle at every encoding × mmap × depth ×
+    // threads × fresh/recycled point. The file is re-corrupted before
+    // every run — a successful rebuild repairs the medium, and the sweep
+    // must prove each configuration heals from the *corrupt* state, not
+    // from a predecessor's repair. The rebuild must also re-encode in the
+    // segment's *original* encoding (raw stays raw, packed stays packed).
     use aires::runtime::{HealPolicy, HealStats};
+    use aires::sparse::segio::{SegEncoding, KIND_CSR, KIND_CSR_PACKED};
 
     let mut rng = Pcg::seed(26);
     let a_hat = normalize_adjacency(&aires::graphgen::kmer::generate(&mut rng, 400, 3.0));
@@ -1165,57 +1167,77 @@ fn diff_corruption_heals_by_quarantine_and_rebuild() {
     assert!(segs.len() >= 4, "need a real stream to corrupt mid-way");
     let victim = segs.len() / 2;
 
-    let dir = TempDir::new("diff-heal-rebuild");
-    let store0 = SegmentStore::spill(&a_hat, &segs, dir.path(), 0).unwrap();
-    let vpath = store0.meta(victim).path.clone();
-    let qpath = vpath.with_extension("bin.quarantined");
-    let mut mem = GpuMem::new(1 << 30);
-    let oracle_staging = StagingConfig::disk(Arc::new(store0), 1);
-    let (want, base) = layer
-        .forward_cpu(&a_hat, &x, &mut mem, &Pool::serial(), &oracle_staging)
-        .unwrap();
-    let base_io = (base.disk_bytes, base.cache_hits, base.cache_misses);
-
     let policy = HealPolicy { retry_max: 1, backoff_ios: 1, rebuild: true };
     let expect = HealStats { quarantined: 1, rebuilt: 1, ..HealStats::default() };
     let recycle = Arc::new(BufferPool::new(64 << 20));
-    for &depth in &PREFETCH_DEPTHS {
-        for &t in &[1usize, 8] {
-            for recycled in [false, true] {
-                let point = format!("depth={depth} threads={t} recycled={recycled}");
-                // Re-poison the (by now rebuilt) file and clear the prior
-                // run's quarantine evidence so the exists-check below is
-                // this run's, not a leftover.
-                let mut bytes = std::fs::read(&vpath).unwrap();
-                let last = bytes.len() - 1;
-                bytes[last] ^= 0xff;
-                std::fs::write(&vpath, &bytes).unwrap();
-                let _ = std::fs::remove_file(&qpath);
+    for (enc, want_kind) in
+        [(SegEncoding::Raw, KIND_CSR), (SegEncoding::Packed, KIND_CSR_PACKED)]
+    {
+        let dir = TempDir::new("diff-heal-rebuild");
+        let store0 = SegmentStore::spill_encoded(&a_hat, &segs, dir.path(), 0, enc).unwrap();
+        assert_eq!(store0.meta(victim).kind, want_kind, "spill chose the forced encoding");
+        let vpath = store0.meta(victim).path.clone();
+        let qpath = vpath.with_extension("bin.quarantined");
+        let mut mem = GpuMem::new(1 << 30);
+        let oracle_staging = StagingConfig::disk(Arc::new(store0), 1);
+        let (want, base) = layer
+            .forward_cpu(&a_hat, &x, &mut mem, &Pool::serial(), &oracle_staging)
+            .unwrap();
+        let base_io = (base.disk_bytes, base.cache_hits, base.cache_misses);
 
-                let store =
-                    SegmentStore::open_or_spill(&a_hat, &segs, dir.path(), 0).unwrap();
-                let mut staging =
-                    StagingConfig::disk(Arc::new(store), depth).with_heal(policy);
-                if recycled {
-                    staging = staging.with_recycle(recycle.clone());
+        for mmap in [false, true] {
+            for &depth in &PREFETCH_DEPTHS {
+                for &t in &[1usize, 8] {
+                    for recycled in [false, true] {
+                        let point = format!(
+                            "enc={enc} mmap={mmap} depth={depth} threads={t} \
+                             recycled={recycled}"
+                        );
+                        // Re-poison the (by now rebuilt) file and clear the
+                        // prior run's quarantine evidence so the
+                        // exists-check below is this run's, not a leftover.
+                        let mut bytes = std::fs::read(&vpath).unwrap();
+                        let last = bytes.len() - 1;
+                        bytes[last] ^= 0xff;
+                        std::fs::write(&vpath, &bytes).unwrap();
+                        let _ = std::fs::remove_file(&qpath);
+
+                        let store =
+                            SegmentStore::open_or_spill_encoded(&a_hat, &segs, dir.path(), 0, enc)
+                                .unwrap();
+                        let mut staging = StagingConfig::disk(Arc::new(store), depth)
+                            .with_heal(policy)
+                            .with_mmap(mmap);
+                        if recycled {
+                            staging = staging.with_recycle(recycle.clone());
+                        }
+                        let mut mem = GpuMem::new(1 << 30);
+                        let (got, rep) = layer
+                            .forward_cpu(&a_hat, &x, &mut mem, &Pool::new(t), &staging)
+                            .unwrap_or_else(|e| panic!("{point}: rebuild pass failed: {e}"));
+                        assert_eq!(got, want, "{point}: rebuilt output diverged from oracle");
+                        assert_eq!(rep.heal, expect, "{point}: HealStats ledger");
+                        assert_eq!(
+                            (rep.disk_bytes, rep.cache_hits, rep.cache_misses),
+                            base_io,
+                            "{point}: healed measured I/O must equal the oracle's"
+                        );
+                        assert_eq!(mem.used, 0, "{point}: ledger unbalanced");
+                        assert!(
+                            qpath.exists(),
+                            "{point}: corrupt bytes must be preserved at {}",
+                            qpath.display()
+                        );
+                        // The rebuilt record keeps the original encoding:
+                        // the on-disk kind word must survive the heal.
+                        let hdr = std::fs::read(&vpath).unwrap();
+                        let kind = u32::from_le_bytes(hdr[12..16].try_into().unwrap());
+                        assert_eq!(
+                            kind, want_kind,
+                            "{point}: rebuild changed the on-disk encoding"
+                        );
+                    }
                 }
-                let mut mem = GpuMem::new(1 << 30);
-                let (got, rep) = layer
-                    .forward_cpu(&a_hat, &x, &mut mem, &Pool::new(t), &staging)
-                    .unwrap_or_else(|e| panic!("{point}: rebuild pass failed: {e}"));
-                assert_eq!(got, want, "{point}: rebuilt output diverged from oracle");
-                assert_eq!(rep.heal, expect, "{point}: HealStats ledger");
-                assert_eq!(
-                    (rep.disk_bytes, rep.cache_hits, rep.cache_misses),
-                    base_io,
-                    "{point}: healed measured I/O must equal the oracle's"
-                );
-                assert_eq!(mem.used, 0, "{point}: ledger unbalanced");
-                assert!(
-                    qpath.exists(),
-                    "{point}: corrupt bytes must be preserved at {}",
-                    qpath.display()
-                );
             }
         }
     }
@@ -1470,4 +1492,106 @@ fn diff_multitenant_matches_solo() {
         }
         Ok(())
     });
+}
+
+// ------------------------------------------------------- storage engine v2
+
+/// The storage-engine-v2 acceptance sweep: with the segment files spilled
+/// at every colidx encoding (raw, forced packed, per-segment auto) and
+/// read both by copy-decode and by zero-copy mapping, the streamed
+/// forward pass must stay **byte-identical** to the raw serial in-memory
+/// oracle at every encoding × mmap × depth × threads × fresh/recycled
+/// point, with a balanced ledger — and the StagingMeter must charge the
+/// *encoded* file bytes (what actually moved off the medium), so packed
+/// passes report measurably less disk traffic than raw ones.
+#[test]
+fn diff_storage_engine_v2_matches_raw_serial_oracle() {
+    use aires::sparse::segio::SegEncoding;
+
+    let mut rng = Pcg::seed(29);
+    let a_hat = normalize_adjacency(&aires::graphgen::kmer::generate(&mut rng, 400, 3.0));
+    let x = gen::dense(&mut rng, a_hat.ncols, 8);
+    let layer = OocGcnLayer {
+        w: gen::dense(&mut rng, 8, 8),
+        b: vec![0.1; 8],
+        relu: true,
+        seg_budget: 2048,
+    };
+    let segs = robw_partition(&a_hat, layer.seg_budget);
+    assert!(segs.len() >= 4, "need a real stream");
+
+    // Raw serial in-memory pass: THE oracle every configuration pins to.
+    let mut mem = GpuMem::new(1 << 30);
+    let (want, base) = layer
+        .forward_cpu(&a_hat, &x, &mut mem, &Pool::serial(), &StagingConfig::serial())
+        .unwrap();
+
+    // In-memory backing: --mmap is a no-op (there are no files to map)
+    // and must not disturb a bit.
+    for &depth in &PREFETCH_DEPTHS {
+        let mut mem = GpuMem::new(1 << 30);
+        let (got, _) = layer
+            .forward_cpu(
+                &a_hat,
+                &x,
+                &mut mem,
+                &Pool::new(2),
+                &StagingConfig::depth(depth).with_mmap(true),
+            )
+            .unwrap();
+        assert_eq!(got, want, "memory backing with mmap requested: depth={depth}");
+        assert_eq!(mem.used, 0);
+    }
+
+    let recycle = Arc::new(BufferPool::new(64 << 20));
+    let mut totals = std::collections::BTreeMap::new();
+    for enc in [SegEncoding::Raw, SegEncoding::Packed, SegEncoding::Auto] {
+        let dir = TempDir::new("diff-storage");
+        let store0 = SegmentStore::spill_encoded(&a_hat, &segs, dir.path(), 0, enc).unwrap();
+        let encoded_total: u64 = (0..store0.len()).map(|i| store0.meta(i).file_bytes).sum();
+        totals.insert(format!("{enc}"), encoded_total);
+        drop(store0);
+
+        for mmap in [false, true] {
+            for &depth in &PREFETCH_DEPTHS {
+                for &t in &[1usize, 8] {
+                    for recycled in [false, true] {
+                        let point =
+                            format!("enc={enc} mmap={mmap} depth={depth} t={t} rec={recycled}");
+                        // Cache 0: every staged read is measured at the
+                        // disk tier, so the meter totals are exact.
+                        let store =
+                            SegmentStore::open_or_spill_encoded(&a_hat, &segs, dir.path(), 0, enc)
+                                .unwrap();
+                        let mut staging =
+                            StagingConfig::disk(Arc::new(store), depth).with_mmap(mmap);
+                        if recycled {
+                            staging = staging.with_recycle(recycle.clone());
+                        }
+                        let mut mem = GpuMem::new(1 << 30);
+                        let (got, rep) = layer
+                            .forward_cpu(&a_hat, &x, &mut mem, &Pool::new(t), &staging)
+                            .unwrap_or_else(|e| panic!("{point}: {e}"));
+                        assert_eq!(got, want, "{point}: output diverged from raw serial oracle");
+                        assert_eq!(rep.segments, base.segments, "{point}: plan diverged");
+                        assert_eq!(rep.h2d_bytes, base.h2d_bytes, "{point}: traffic diverged");
+                        assert_eq!(mem.used, 0, "{point}: ledger unbalanced");
+                        assert_eq!(
+                            rep.disk_bytes, encoded_total,
+                            "{point}: meter must charge the encoded file bytes"
+                        );
+                        assert_eq!(rep.cache_hits, 0, "{point}: cacheless store");
+                        assert_eq!(rep.cache_misses, segs.len(), "{point}: one read per segment");
+                    }
+                }
+            }
+        }
+    }
+
+    // The encodings must actually differ on the medium: forced packing
+    // shrinks this graph's colidx sections, and auto never does worse
+    // than either forced choice (it takes the per-segment minimum).
+    let (raw, packed, auto) = (totals["raw"], totals["packed"], totals["auto"]);
+    assert!(packed < raw, "packed ({packed}) must beat raw ({raw}) on this graph");
+    assert!(auto <= packed.min(raw), "auto ({auto}) must take the per-segment minimum");
 }

@@ -11,9 +11,11 @@
 
 use aires::partition::robw::{materialize, robw_partition};
 use aires::sparse::segio::{
-    decode_panel, decode_panel_into, decode_segment, decode_segment_into, encode_panel,
-    encode_segment, fnv1a64, read_segment, read_segment_into, write_segment, SegioError,
-    FORMAT_VERSION, HEADER_BYTES, KIND_CSR, KIND_PANEL,
+    decode_panel, decode_panel_into, decode_segment, decode_segment_into, decode_segment_ref,
+    encode_panel, encode_segment, encode_segment_packed, encode_segment_with, encoded_len,
+    encoded_packed_len, fnv1a64, read_segment, read_segment_into, write_segment,
+    write_segment_encoded, SegEncoding, SegioError, FORMAT_VERSION, HEADER_BYTES, KIND_CSR,
+    KIND_CSR_PACKED, KIND_PANEL,
 };
 use aires::sparse::spmm::Dense;
 use aires::sparse::Csr;
@@ -374,4 +376,203 @@ fn file_roundtrip_through_a_real_directory() {
         read_segment(&dir.path().join("nope.bin")),
         Err(SegioError::Io(_))
     ));
+}
+
+// ---------------------------------------------------------------------------
+// Storage engine v2: KIND_CSR_PACKED records. Same contract as the raw
+// suite above — identity roundtrips, byte stability, typed rejection of
+// every defect — plus the packed-specific obligations: the size
+// predictor is exact, Auto strictly picks the smaller file, and the
+// family decoder accepts packed while the panel and zero-copy decoders
+// reject it by kind.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn packed_golden_vector_pins_the_wire_format() {
+    // Independently computed (Python struct/FNV-1a port of the spec) for
+    // a 2x5 segment: zigzag codes [2, 6, 4] at width 3 pack into the
+    // single word 2 | 6<<3 | 4<<6 = 306. Pins the file-level layout the
+    // same way the unit golden vector pins the in-memory encoder.
+    let want: [u8; 116] = [
+        65, 73, 82, 69, 83, 83, 69, 71, 1, 0, 0, 0, 3, 0, 0, 0, 2, 0, 0, 0, 0, 0, 0, 0, 5, 0,
+        0, 0, 0, 0, 0, 0, 3, 0, 0, 0, 0, 0, 0, 0, 52, 0, 0, 0, 0, 0, 0, 0, 109, 190, 60, 6,
+        228, 250, 15, 14, 148, 153, 227, 107, 240, 117, 150, 247, 0, 0, 0, 0, 0, 0, 0, 0, 2, 0,
+        0, 0, 0, 0, 0, 0, 3, 0, 0, 0, 0, 0, 0, 0, 3, 0, 0, 0, 0, 0, 0, 0, 50, 1, 0, 0, 0, 0, 0,
+        0, 0, 0, 192, 63, 0, 0, 0, 192, 0, 0, 128, 62,
+    ];
+    let m = Csr {
+        nrows: 2,
+        ncols: 5,
+        rowptr: vec![0, 2, 3],
+        colidx: vec![1, 4, 2],
+        vals: vec![1.5, -2.0, 0.25],
+    };
+    m.validate().expect("golden matrix must be a valid CSR");
+    assert_eq!(encode_segment_packed(&m), want.to_vec());
+    assert_eq!(encoded_packed_len(&m), want.len() as u64);
+
+    // The encoded file writer produces the same bytes and reports the
+    // kind it chose; the generic file reader accepts them back.
+    let dir = TempDir::new("segio-packed-golden");
+    let path = dir.path().join("golden.bin");
+    let (written, kind) = write_segment_encoded(&path, &m, SegEncoding::Packed).unwrap();
+    assert_eq!((written, kind), (want.len() as u64, KIND_CSR_PACKED));
+    assert_eq!(std::fs::read(&path).unwrap(), want.to_vec());
+    let (back, read) = read_segment(&path).unwrap();
+    assert_eq!(back, m);
+    assert_eq!(read, written);
+}
+
+#[test]
+fn packed_roundtrip_is_identity_across_families() {
+    let mut scratch = Csr::empty(0, 0);
+    check("segio packed decode(encode(m)) == m", 314, |rng| {
+        let m = operand(rng);
+        let buf = encode_segment_packed(&m);
+        if buf.len() as u64 != encoded_packed_len(&m) {
+            return Err(format!(
+                "size predictor off: {} bytes encoded, {} predicted",
+                buf.len(),
+                encoded_packed_len(&m)
+            ));
+        }
+        let back = decode_segment(&buf).map_err(|e| format!("decode failed: {e}"))?;
+        if back != m {
+            return Err(format!("roundtrip diverged on {}x{} (nnz {})", m.nrows, m.ncols, m.nnz()));
+        }
+        if encode_segment_packed(&back) != buf {
+            return Err("re-encoding is not byte-identical".into());
+        }
+        // The recycled-scratch decoder handles the packed kind too.
+        decode_segment_into(&buf, &mut scratch)
+            .map_err(|e| format!("recycled decode failed: {e}"))?;
+        if scratch != m {
+            return Err("recycled packed decode diverged".into());
+        }
+        // Auto strictly picks the smaller encoding (raw on ties), and the
+        // bytes it emits are exactly the bytes of the encoder it picked.
+        let (abuf, akind) = encode_segment_with(&m, SegEncoding::Auto);
+        let (plen, rlen) = (encoded_packed_len(&m), encoded_len(m.nrows, m.nnz()));
+        let want_kind = if plen < rlen { KIND_CSR_PACKED } else { KIND_CSR };
+        if akind != want_kind {
+            return Err(format!("auto chose kind {akind} (packed {plen} vs raw {rlen} bytes)"));
+        }
+        if abuf.len() as u64 != plen.min(rlen) {
+            return Err(format!("auto emitted {} bytes, min is {}", abuf.len(), plen.min(rlen)));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn packed_roundtrip_covers_robw_planned_segments() {
+    // The packed store encodes the same RoBW slices the raw store does;
+    // every planned slice must survive the compressed layout too.
+    check("segio packed roundtrip over RoBW slices", 315, |rng| {
+        let m = operand(rng);
+        let budget = rng.range(64, 2048) as u64;
+        for seg in robw_partition(&m, budget) {
+            let sub = materialize(&m, &seg);
+            let buf = encode_segment_packed(&sub);
+            if buf.len() as u64 != encoded_packed_len(&sub) {
+                return Err(format!(
+                    "segment [{}, {}): size predictor off ({} vs {})",
+                    seg.row_lo,
+                    seg.row_hi,
+                    buf.len(),
+                    encoded_packed_len(&sub)
+                ));
+            }
+            let back = decode_segment(&buf)
+                .map_err(|e| format!("segment [{}, {}): {e}", seg.row_lo, seg.row_hi))?;
+            if back != sub {
+                return Err(format!("segment [{}, {}) diverged", seg.row_lo, seg.row_hi));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn packed_corrupted_bytes_are_rejected_with_typed_errors() {
+    check("segio rejects packed corruption", 316, |rng| {
+        let m = operand(rng);
+        let buf = encode_segment_packed(&m);
+        let pos = rng.below(buf.len() as u64) as usize;
+        let mut bad = buf.clone();
+        bad[pos] ^= 0x01;
+        match decode_segment(&bad) {
+            Ok(got) => Err(format!(
+                "flip at byte {pos} of {} decoded successfully (got {}x{}, nnz {})",
+                buf.len(),
+                got.nrows,
+                got.ncols,
+                got.nnz()
+            )),
+            // WrongKind joins the accept set: flipping the kind word's low
+            // byte turns KIND_CSR_PACKED into KIND_CHECK, which the family
+            // check rejects before the header checksum runs.
+            Err(
+                SegioError::BadMagic
+                | SegioError::WrongVersion { .. }
+                | SegioError::WrongKind { .. }
+                | SegioError::HeaderChecksum { .. }
+                | SegioError::PayloadChecksum { .. },
+            ) => Ok(()),
+            Err(other) => Err(format!("flip at byte {pos}: unexpected error kind {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn every_packed_truncation_is_rejected() {
+    check("segio rejects packed truncation", 317, |rng| {
+        let m = operand(rng);
+        let buf = encode_segment_packed(&m);
+        for cut in [
+            0,
+            1,
+            HEADER_BYTES - 1,
+            HEADER_BYTES,
+            HEADER_BYTES + (buf.len() - HEADER_BYTES) / 2,
+            buf.len() - 1,
+        ] {
+            if cut >= buf.len() {
+                continue;
+            }
+            match decode_segment(&buf[..cut]) {
+                Ok(_) => return Err(format!("prefix of {cut}/{} bytes decoded", buf.len())),
+                Err(SegioError::Truncated { need, got }) => {
+                    if got != cut as u64 || need <= got {
+                        return Err(format!("bad Truncated fields: need {need}, got {got}"));
+                    }
+                }
+                Err(other) => return Err(format!("cut {cut}: expected Truncated, got {other:?}")),
+            }
+        }
+        let _ = rng.below(2); // keep the stream advancing per case
+        Ok(())
+    });
+}
+
+#[test]
+fn packed_records_decode_as_segments_but_never_as_panels_or_refs() {
+    let mut rng = Pcg::seed(318);
+    let m = operand(&mut rng);
+    let packed = encode_segment_packed(&m);
+    // The copy decoders accept the whole CSR *family* — a packed record
+    // is a segment, just with a compressed colidx section.
+    assert_eq!(decode_segment(&packed).unwrap(), m);
+    // The panel decoder rejects it by kind, naming what it found.
+    assert_eq!(
+        decode_panel(&packed).unwrap_err(),
+        SegioError::WrongKind { found: KIND_CSR_PACKED, expected: KIND_PANEL }
+    );
+    // The zero-copy decoder serves the raw layout only: borrowed colidx
+    // words don't exist in a packed record, so the mmap path must fall
+    // back to a copy decode rather than misread the bit stream.
+    assert_eq!(
+        decode_segment_ref(&packed).unwrap_err(),
+        SegioError::WrongKind { found: KIND_CSR_PACKED, expected: KIND_CSR }
+    );
 }

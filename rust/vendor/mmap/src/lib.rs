@@ -1,0 +1,160 @@
+//! Minimal read-only memory-mapping shim, vendored in-tree (no crates.io).
+//!
+//! The only export is [`Mmap`]: map a whole file `PROT_READ`/`MAP_PRIVATE`
+//! and hand out its bytes as a `&[u8]`. On unix this is a thin FFI
+//! binding to `mmap(2)`/`munmap(2)` declared here directly (no `libc`
+//! crate); elsewhere — and for zero-length files, which `mmap(2)`
+//! rejects — it degrades to reading the file into an owned buffer, so
+//! callers never need a platform branch.
+//!
+//! The mapping is private and read-only, so sharing across threads is
+//! sound; concurrent *writes to the underlying file* by other processes
+//! are outside the contract (the segment store never rewrites a live
+//! file in place — rebuilds go through a rename).
+
+#[cfg(unix)]
+mod sys {
+    use std::ffi::{c_int, c_long, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            length: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: c_long,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, length: usize) -> c_int;
+    }
+}
+
+/// A read-only mapping (or owned copy, on the fallback paths) of one
+/// file's contents.
+#[derive(Debug)]
+pub struct Mmap {
+    backing: Backing,
+}
+
+#[derive(Debug)]
+enum Backing {
+    /// A live `mmap(2)` region, unmapped on drop.
+    #[cfg(unix)]
+    Mapped { ptr: *mut u8, len: usize },
+    /// Owned bytes: zero-length files and non-unix platforms.
+    Owned(Vec<u8>),
+}
+
+// SAFETY: the region is PROT_READ/MAP_PRIVATE — immutable for the life
+// of the value — and the raw pointer is never handed out mutably.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `path` read-only. Zero-length files (and non-unix builds)
+    /// fall back to an owned read; the caller sees no difference.
+    pub fn map(path: &std::path::Path) -> std::io::Result<Mmap> {
+        let file = std::fs::File::open(path)?;
+        let len = file.metadata()?.len();
+        let len = usize::try_from(len)
+            .map_err(|_| std::io::Error::new(std::io::ErrorKind::OutOfMemory, "file too large"))?;
+        if len == 0 {
+            return Ok(Mmap { backing: Backing::Owned(Vec::new()) });
+        }
+        Self::map_file(&file, len)
+    }
+
+    #[cfg(unix)]
+    fn map_file(file: &std::fs::File, len: usize) -> std::io::Result<Mmap> {
+        use std::os::unix::io::AsRawFd;
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        // MAP_FAILED is (void*)-1; a null return would be equally unusable.
+        if ptr as isize == -1 || ptr.is_null() {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(Mmap { backing: Backing::Mapped { ptr: ptr as *mut u8, len } })
+    }
+
+    #[cfg(not(unix))]
+    fn map_file(file: &std::fs::File, len: usize) -> std::io::Result<Mmap> {
+        use std::io::Read;
+        let mut buf = Vec::with_capacity(len);
+        let mut f = file;
+        f.read_to_end(&mut buf)?;
+        Ok(Mmap { backing: Backing::Owned(buf) })
+    }
+
+    /// The mapped (or owned) file contents.
+    pub fn as_slice(&self) -> &[u8] {
+        match &self.backing {
+            #[cfg(unix)]
+            // SAFETY: ptr/len come from a successful mmap of exactly
+            // `len` bytes, live until Drop, and are never mutated.
+            Backing::Mapped { ptr, len } => unsafe {
+                std::slice::from_raw_parts(*ptr, *len)
+            },
+            Backing::Owned(v) => v,
+        }
+    }
+
+    /// Length of the mapping in bytes.
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    /// Whether the mapping is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Backing::Mapped { ptr, len } = self.backing {
+            // SAFETY: maps 1:1 with the successful mmap in map_file; a
+            // failed munmap leaks the region, which is the only safe
+            // response in a destructor.
+            unsafe {
+                let _ = sys::munmap(ptr as *mut std::ffi::c_void, len);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::Mmap;
+
+    #[test]
+    fn maps_file_contents_exactly() {
+        let dir = std::env::temp_dir().join(format!("mmap-shim-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("case.bin");
+        let payload: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        std::fs::write(&path, &payload).unwrap();
+        let m = Mmap::map(&path).unwrap();
+        assert_eq!(m.as_slice(), &payload[..]);
+        assert_eq!(m.len(), payload.len());
+
+        let empty = dir.join("empty.bin");
+        std::fs::write(&empty, b"").unwrap();
+        let m = Mmap::map(&empty).unwrap();
+        assert!(m.is_empty());
+
+        assert!(Mmap::map(&dir.join("missing.bin")).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
